@@ -1,0 +1,44 @@
+//! Shared harness for the paper-reproduction benchmarks (criterion is
+//! unavailable offline; `cargo bench` runs these as harness=false
+//! binaries).
+//!
+//! Environment knobs:
+//!   NNSCOPE_BENCH_N      samples per measurement (default varies per bench)
+//!   NNSCOPE_BENCH_QUICK  =1 → minimal samples / reduced sweeps (CI mode)
+
+#![allow(dead_code)]
+
+use nnscope::util::stats::Summary;
+use nnscope::util::time;
+
+pub fn quick() -> bool {
+    std::env::var("NNSCOPE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn samples(default: usize) -> usize {
+    if let Ok(v) = std::env::var("NNSCOPE_BENCH_N") {
+        return v.parse().expect("NNSCOPE_BENCH_N");
+    }
+    if quick() {
+        2
+    } else {
+        default
+    }
+}
+
+/// Measure a closure `n` times (after `warmup`) and summarize seconds.
+pub fn bench(warmup: usize, n: usize, f: impl FnMut(usize)) -> Summary {
+    Summary::of(&time::sample(warmup, n, f))
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n──────────────────────────────────────────────────");
+    println!("{title}");
+    println!("──────────────────────────────────────────────────");
+}
+
+/// Print a paper-vs-measured comparison line.
+pub fn shape_note(s: &str) {
+    println!("  ↳ {s}");
+}

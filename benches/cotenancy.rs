@@ -1,0 +1,76 @@
+//! Co-tenancy ablation (ours; §B.2 of the paper describes batch-grouped
+//! parallel co-tenancy as future work — we implement it and measure what
+//! it buys): throughput of the NDIF service under a burst of single-row
+//! requests, sequential vs batch-grouped parallel execution.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::artifacts_dir;
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+
+fn run_burst(model: &str, mode: CoTenancy, users: usize, manifest: &Manifest) -> (f64, u64) {
+    let cfg = NdifConfig { cotenancy: mode, ..NdifConfig::local(&[model]) };
+    let server = NdifServer::start(cfg).expect("server");
+    let addr = server.addr();
+    let seq = manifest.seq;
+    let layers = manifest.n_layers;
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..users)
+        .map(|u| {
+            let model = model.to_string();
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                let tokens = Tensor::new(&[1, seq], vec![(u % 50) as f32; seq]);
+                let mut tr = Trace::new(&model, &tokens);
+                let h = tr.output(&format!("layer.{}", u % layers));
+                tr.save(h);
+                tr.run_remote(&client).expect("request");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, done, failed, merged) = server.metrics(model).unwrap();
+    assert_eq!(done as usize, users);
+    assert_eq!(failed, 0);
+    (wall, merged)
+}
+
+fn main() {
+    let model = if common::quick() { "tiny-sim" } else { "llama8b-sim" };
+    let user_counts: Vec<usize> = if common::quick() { vec![4] } else { vec![8, 16, 32] };
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    let max_merge = manifest.batches.iter().copied().max().unwrap_or(4);
+
+    common::section(&format!(
+        "Co-tenancy ablation — sequential vs batch-grouped parallel ({model}, max_merge={max_merge})"
+    ));
+    let mut table = Table::new("burst completion (s)").header(vec![
+        "users", "sequential", "parallel (merged)", "speedup", "merged batches",
+    ]);
+    for &users in &user_counts {
+        let (seq_wall, _) = run_burst(model, CoTenancy::Sequential, users, &manifest);
+        let (par_wall, merged) =
+            run_burst(model, CoTenancy::Parallel { max_merge }, users, &manifest);
+        table.row(vec![
+            format!("{users}"),
+            format!("{seq_wall:.3}"),
+            format!("{par_wall:.3}"),
+            format!("{:.2}x", seq_wall / par_wall),
+            format!("{merged}"),
+        ]);
+    }
+    table.print();
+    common::shape_note("batch-grouped merging amortizes forward passes across users (the §B.2 design)");
+}

@@ -1,0 +1,74 @@
+//! Figures 2 & 7: the §2 research-survey analyses, regenerated.
+//!
+//! Fig. 2: the capability gap between models studied by interpretability
+//! papers and available frontier models (headline: 60.6% of post-Feb-2023
+//! papers study <40% MMLU models; a small ≥70% group exists).
+//!
+//! Fig. 7: research-vs-released median model size ratio per year bucket
+//! (headline: 2.7× in 2019–20 → 10.3× in 2024).
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::survey::{self, data::DEFAULT_SEED};
+use nnscope::util::table::Table;
+
+fn main() {
+    let (papers, released) = survey::survey_dataset(DEFAULT_SEED);
+
+    common::section("Fig 2 — capability gap in interpretability research");
+    let s = survey::fig2_stats(&papers);
+    let mut t = Table::new("Fig 2 statistics").header(vec!["metric", "measured", "paper"]);
+    t.row(vec!["papers surveyed".into(), format!("{}", s.total_papers), "184".to_string()]);
+    t.row(vec![
+        "% of post-Feb-2023 papers on <40% MMLU models".into(),
+        format!("{:.1}%", 100.0 * s.frac_sub40_post_2023),
+        "60.6%".to_string(),
+    ]);
+    t.row(vec![
+        "papers on ≥70% MMLU models".into(),
+        format!("{}", s.count_ge70),
+        "a small group (Fig 2a)".to_string(),
+    ]);
+    t.row(vec![
+        "mean MMLU gap vs frontier (post-2023)".into(),
+        format!("{:.1} pts", s.mean_gap_post_2023),
+        "large (Fig 2)".to_string(),
+    ]);
+    t.print();
+
+    // the Fig. 2 scatter series (decimated) for plotting parity
+    let mut series = Table::new("Fig 2 scatter (every 8th paper)").header(vec![
+        "date", "params (B)", "MMLU",
+    ]);
+    for p in papers.iter().step_by(8) {
+        series.row(vec![
+            format!("{:.2}", p.date),
+            format!("{:.2}", p.params_b),
+            format!("{:.1}", p.mmlu),
+        ]);
+    }
+    series.print();
+
+    common::section("Fig 7 — research vs released model sizes");
+    let mut t = Table::new("Fig 7 buckets").header(vec![
+        "bucket",
+        "research median (B)",
+        "research IQR",
+        "released median (B)",
+        "released IQR",
+        "ratio",
+    ]);
+    for b in survey::fig7_buckets(&papers, &released) {
+        t.row(vec![
+            b.label.to_string(),
+            format!("{:.2}", b.research_median_b),
+            format!("[{:.2}, {:.2}]", b.research_q25, b.research_q75),
+            format!("{:.1}", b.released_median_b),
+            format!("[{:.1}, {:.1}]", b.released_q25, b.released_q75),
+            format!("{:.1}x", b.ratio),
+        ]);
+    }
+    t.print();
+    common::shape_note("paper endpoints: 2.7x (2019-2020) → 10.3x (2024), monotone growth between");
+}

@@ -1,0 +1,162 @@
+//! Figures 6a & 6b + Table 2: HPC vs NDIF across the OPT-sim family.
+//!
+//! 6a (setup): HPC must load weights from disk, upload them, and compile —
+//! cost grows with parameter count. NDIF preloads models; client "setup"
+//! is a metadata handshake — flat in model size.
+//!
+//! 6b (runtime): NDIF = HPC execution + a roughly constant communication
+//! overhead (graph up, saved values down over the simulated WAN), so
+//! remote execution wins beyond a crossover size (paper: ≥3B params).
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::baselines::hooks::BaukitLike;
+use nnscope::baselines::Framework;
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::workload::IoiBatch;
+use nnscope::models::{artifacts_dir, ModelWeights};
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Range1;
+use nnscope::util::stats::linfit;
+use nnscope::util::table::Table;
+
+const OPT_FAMILY: [&str; 8] = [
+    "opt-125m-sim",
+    "opt-350m-sim",
+    "opt-1.3b-sim",
+    "opt-2.7b-sim",
+    "opt-6.7b-sim",
+    "opt-13b-sim",
+    "opt-30b-sim",
+    "opt-66b-sim",
+];
+
+fn patch_trace(model: &str, batch: &IoiBatch, layer: usize, seq: usize) -> Trace {
+    let tokens = batch.interleaved_tokens();
+    let mut tr = Trace::new(model, &tokens);
+    let point = format!("layer.{layer}");
+    let h = tr.output(&point);
+    let mut patched = h;
+    for i in (0..batch.len() * 2).step_by(2) {
+        let src = tr.slice(h, &[Range1::one(i), Range1::one(seq - 1)]);
+        patched = tr.assign(patched, &[Range1::one(i + 1), Range1::one(seq - 1)], src);
+    }
+    tr.set_output(&point, patched);
+    let logits = tr.output("lm_head");
+    // server-side metric: only scalars return
+    for (i, e) in batch.examples.iter().enumerate() {
+        let row = tr.slice(logits, &[Range1::one(2 * i + 1)]);
+        let ld = tr.logit_diff(row, e.target, e.foil);
+        tr.save(ld);
+    }
+    tr
+}
+
+fn main() {
+    let models: Vec<&str> = if common::quick() {
+        OPT_FAMILY[..2].to_vec()
+    } else {
+        OPT_FAMILY.to_vec()
+    };
+    let n = common::samples(5);
+
+    for m in &models {
+        let manifest = Manifest::load(&artifacts_dir(), m).unwrap();
+        ModelWeights::ensure_on_disk(&manifest).unwrap();
+    }
+
+    common::section(&format!("Fig 6a/6b + Table 2 — HPC vs NDIF, OPT family (n={n})"));
+    println!("preloading NDIF server with the whole family (untimed, once) …");
+    let cfg = NdifConfig {
+        cotenancy: CoTenancy::Sequential,
+        ..NdifConfig::local(&models)
+    };
+    let server = NdifServer::start(cfg).expect("server");
+
+    let mut table = Table::new("Table 2 — Setup Time and Runtime (s)").header(vec![
+        "Model", "Params", "HPC Setup", "HPC Runtime", "NDIF Setup", "NDIF Runtime",
+    ]);
+
+    let mut params = Vec::new();
+    let mut hpc_setup_means = Vec::new();
+    let mut hpc_run_means = Vec::new();
+    let mut ndif_run_means = Vec::new();
+
+    for model in &models {
+        let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+        let pairs = 16; // 32 rows, the paper's IOI batch
+        let batch = IoiBatch::generate(pairs, manifest.vocab, manifest.seq, 2);
+        let layer = manifest.n_layers / 2;
+
+        // HPC setup: cold load + compile, per sample
+        let hpc_setup = common::bench(0, n, |_| {
+            let f = BaukitLike::setup(&artifacts_dir(), model).expect("setup");
+            std::hint::black_box(&f);
+        });
+
+        // HPC runtime: patching on a ready instance
+        let fw = BaukitLike::setup(&artifacts_dir(), model).unwrap();
+        let hpc_run = common::bench(1, n, |_| {
+            std::hint::black_box(fw.activation_patch(&batch, layer).unwrap());
+        });
+
+        // NDIF setup: WAN handshake against the preloaded service
+        let link = NetSim::paper_wan(Mode::Sleep);
+        let client = NdifClient::new(server.addr()).with_link(link);
+        let ndif_setup = common::bench(0, n, |_| {
+            std::hint::black_box(client.models().unwrap());
+        });
+
+        // NDIF runtime: remote patch trace over the WAN
+        let ndif_run = common::bench(1, n, |_| {
+            let tr = patch_trace(model, &batch, layer, manifest.seq);
+            std::hint::black_box(tr.run_remote(&client).unwrap());
+        });
+
+        params.push(manifest.param_count as f64);
+        hpc_setup_means.push(hpc_setup.mean);
+        hpc_run_means.push(hpc_run.mean);
+        ndif_run_means.push(ndif_run.mean);
+        table.row(vec![
+            model.to_string(),
+            format!("{}", manifest.param_count),
+            hpc_setup.pm(),
+            hpc_run.pm(),
+            ndif_setup.pm(),
+            ndif_run.pm(),
+        ]);
+    }
+    table.print();
+
+    // shape checks
+    let (_, slope, r2) = linfit(&params, &hpc_setup_means);
+    common::shape_note(&format!(
+        "Fig 6a: HPC setup grows with params (slope {slope:.3e} s/param, r²={r2:.3}); NDIF setup flat"
+    ));
+    let overheads: Vec<f64> = hpc_run_means
+        .iter()
+        .zip(&ndif_run_means)
+        .map(|(h, r)| r - h)
+        .collect();
+    let s = nnscope::util::Summary::of(&overheads);
+    common::shape_note(&format!(
+        "Fig 6b: NDIF − HPC runtime overhead ≈ constant: {} s across sizes (paper: roughly constant)",
+        s.pm()
+    ));
+    let crossover = params
+        .iter()
+        .zip(hpc_setup_means.iter().zip(&overheads))
+        .find(|(_, (setup, overhead))| **setup > **overhead)
+        .map(|(p, _)| *p);
+    match crossover {
+        Some(p) => common::shape_note(&format!(
+            "remote execution pays off (setup saved > comm overhead) from ~{:.1}M params (paper: ≥3B real params)",
+            p / 1e6
+        )),
+        None => common::shape_note("no crossover in range — increase sizes"),
+    }
+}

@@ -1,0 +1,115 @@
+//! Figure 6c: Petals vs NDIF over the measured 60 MB/s WAN.
+//!
+//! Standard remote inference (both systems return the final hidden state)
+//! should be comparable; interventions should strongly favor NDIF, whose
+//! server-side intervention graphs avoid shipping hidden states — Petals
+//! must round-trip the activation to the client and back.
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::baselines::patch_rows;
+use nnscope::baselines::petals::PetalsSwarm;
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::workload::IoiBatch;
+use nnscope::models::artifacts_dir;
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Range1;
+use nnscope::util::table::Table;
+
+fn main() {
+    let model = if common::quick() { "tiny-sim" } else { "llama8b-sim" };
+    let n = common::samples(8);
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    let seq = manifest.seq;
+    let layer = manifest.n_layers / 2;
+    let pairs = 16usize.min(manifest.batches.iter().copied().max().unwrap_or(2) / 2);
+    let batch = IoiBatch::generate(pairs, manifest.vocab, seq, 3);
+    let tokens = batch.interleaved_tokens();
+
+    common::section(&format!("Fig 6c — Petals vs NDIF on {model} (n={n}, 60 MB/s WAN)"));
+
+    // Petals private swarm
+    let swarm = PetalsSwarm::start(
+        &artifacts_dir(),
+        model,
+        NetSim::paper_wan(Mode::Sleep),
+    )
+    .expect("swarm");
+
+    // NDIF server + WAN client
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[model]) };
+    let server = NdifServer::start(cfg).expect("server");
+    let client = NdifClient::new(server.addr()).with_link(NetSim::paper_wan(Mode::Sleep));
+
+    // --- standard inference: both return the final hidden state ---------
+    let petals_inf = common::bench(1, n, |_| {
+        std::hint::black_box(swarm.infer_hidden(&tokens).unwrap());
+    });
+    let last_layer = format!("layer.{}", manifest.n_layers - 1);
+    let ndif_inf = common::bench(1, n, |_| {
+        let mut tr = Trace::new(model, &tokens);
+        let h = tr.output(&last_layer);
+        tr.save(h);
+        std::hint::black_box(tr.run_remote(&client).unwrap());
+    });
+
+    // --- intervention: activation patching + logit-diff metric ----------
+    let petals_int = common::bench(1, n, |_| {
+        let logits = swarm
+            .patched_infer(&tokens, layer, |t| patch_rows(t, seq))
+            .unwrap();
+        // metric computed client-side (Petals has no server-side compute)
+        std::hint::black_box(nnscope::baselines::base_row_logit_diffs(&logits, &batch));
+    });
+    let ndif_int = common::bench(1, n, |_| {
+        let mut tr = Trace::new(model, &tokens);
+        let point = format!("layer.{layer}");
+        let h = tr.output(&point);
+        let mut patched = h;
+        for i in (0..batch.len() * 2).step_by(2) {
+            let src = tr.slice(h, &[Range1::one(i), Range1::one(seq - 1)]);
+            patched = tr.assign(patched, &[Range1::one(i + 1), Range1::one(seq - 1)], src);
+        }
+        tr.set_output(&point, patched);
+        let logits = tr.output("lm_head");
+        for (i, e) in batch.examples.iter().enumerate() {
+            let row = tr.slice(logits, &[Range1::one(2 * i + 1)]);
+            let ld = tr.logit_diff(row, e.target, e.foil);
+            tr.save(ld); // only scalars cross the WAN
+        }
+        std::hint::black_box(tr.run_remote(&client).unwrap());
+    });
+
+    let mut table = Table::new("Fig 6c — runtime (s)").header(vec![
+        "Task", "Petals", "NDIF", "Petals / NDIF",
+    ]);
+    table.row(vec![
+        "standard inference".to_string(),
+        petals_inf.pm(),
+        ndif_inf.pm(),
+        format!("{:.2}x", petals_inf.mean / ndif_inf.mean),
+    ]);
+    table.row(vec![
+        "activation patching".to_string(),
+        petals_int.pm(),
+        ndif_int.pm(),
+        format!("{:.2}x", petals_int.mean / ndif_int.mean),
+    ]);
+    table.print();
+
+    common::shape_note("paper: comparable on standard inference; NDIF significantly faster on interventions");
+    common::shape_note(&format!(
+        "hidden-state bytes per intervention: Petals ships 4×{} = {} KB over the WAN; NDIF ships only the graph + {} scalars",
+        manifest.hidden_bytes(tokens_rows(&batch)),
+        4 * manifest.hidden_bytes(tokens_rows(&batch)) / 1024,
+        batch.len()
+    ));
+}
+
+fn tokens_rows(batch: &IoiBatch) -> usize {
+    batch.len() * 2
+}

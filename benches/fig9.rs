@@ -1,0 +1,101 @@
+//! Figure 9: NDIF response time vs concurrent user count.
+//!
+//! N ∈ {1..100} users each submit a request saving a uniformly-random
+//! layer's output of the served model (≤24-token prompts). The paper finds
+//! median response time grows approximately linearly in N (a FIFO queue
+//! behind one shared instance) with variance growing too.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::{artifacts_dir, workload};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::stats::linfit;
+use nnscope::util::table::Table;
+use nnscope::util::{Prng, Summary};
+
+fn main() {
+    let model = if common::quick() { "tiny-sim" } else { "llama8b-sim" };
+    let user_counts: Vec<usize> = if common::quick() {
+        vec![1, 4, 8]
+    } else {
+        vec![1, 2, 5, 10, 20, 35, 50, 75, 100]
+    };
+
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    common::section(&format!("Fig 9 — response time vs concurrent users ({model})"));
+    // the paper's implementation queues each user and runs one forward per
+    // request on a single shared instance
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[model]) };
+    let server = NdifServer::start(cfg).expect("server");
+    let addr = server.addr();
+
+    // warm the service (first-execution lazy init must not pollute N=1)
+    {
+        let client = NdifClient::new(addr);
+        let tokens = Tensor::new(&[1, manifest.seq], vec![1.0; manifest.seq]);
+        let mut tr = Trace::new(model, &tokens);
+        let h = tr.output("layer.0");
+        tr.save(h);
+        tr.run_remote(&client).expect("warmup");
+    }
+
+    let mut table = Table::new("response time by user count (s)").header(vec![
+        "users", "median", "q25", "q75", "min", "max",
+    ]);
+    let mut xs = Vec::new();
+    let mut medians = Vec::new();
+
+    for &n_users in &user_counts {
+        let handles: Vec<_> = (0..n_users)
+            .map(|u| {
+                let model = model.to_string();
+                let (vocab, seq, layers) = (manifest.vocab, manifest.seq, manifest.n_layers);
+                std::thread::spawn(move || -> f64 {
+                    let client = NdifClient::new(addr);
+                    let mut rng = Prng::new((n_users * 1000 + u) as u64);
+                    let req = workload::load_test_request(&mut rng, vocab, seq, layers);
+                    let tokens = Tensor::new(&[1, seq], req.tokens.clone());
+                    let mut tr = Trace::new(&model, &tokens);
+                    let h = tr.output(&format!("layer.{}", req.layer));
+                    tr.save(h);
+                    let t = Instant::now();
+                    tr.run_remote(&client).expect("request");
+                    t.elapsed().as_secs_f64()
+                })
+            })
+            .collect();
+        let times: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let s = Summary::of(&times);
+        table.row(vec![
+            format!("{n_users}"),
+            format!("{:.3}", s.median),
+            format!("{:.3}", s.q25),
+            format!("{:.3}", s.q75),
+            format!("{:.3}", s.min),
+            format!("{:.3}", s.max),
+        ]);
+        xs.push(n_users as f64);
+        medians.push(s.median);
+    }
+    table.print();
+
+    let (intercept, slope, r2) = linfit(&xs, &medians);
+    common::shape_note(&format!(
+        "median response ≈ {intercept:.3} + {slope:.4}·N seconds (r² = {r2:.3}; paper: approximately linear)"
+    ));
+    let spread_first = medians.first().copied().unwrap_or(0.0);
+    let spread_last = medians.last().copied().unwrap_or(0.0);
+    common::shape_note(&format!(
+        "median grew {:.1}x from N={} to N={} (queueing under a shared instance)",
+        spread_last / spread_first.max(1e-9),
+        user_counts.first().unwrap(),
+        user_counts.last().unwrap()
+    ));
+}

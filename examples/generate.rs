@@ -1,0 +1,65 @@
+//! Steered generation: greedy decoding with a persistent intervention —
+//! the Fig. 3 neuron activation applied at every decode step, changing
+//! what the model writes.
+//!
+//! Run: `cargo run --release --example generate -- [--model tiny-sim] [--steps 8]`
+
+use nnscope::models::{artifacts_dir, Hooks, ModelRunner};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::cli::Args;
+
+struct Steer {
+    layer: String,
+    neurons: Vec<usize>,
+    strength: f32,
+}
+
+impl Hooks for Steer {
+    fn wants(&self, p: &str) -> bool {
+        p == self.layer
+    }
+    fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+        let seq = t.dims()[1];
+        for &n in &self.neurons {
+            t.slice_fill(
+                &[Range1::all(), Range1::one(seq - 1), Range1::one(n)],
+                self.strength,
+            );
+        }
+        true
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+    let steps = args.usize_or("steps", 8);
+
+    let lm = ModelRunner::load(&artifacts_dir(), &model)?;
+    let m = lm.manifest.clone();
+    let prompt = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 3 + 1) % m.vocab) as f32).collect(),
+    );
+
+    let plain = lm.generate_plain(&prompt, steps)?;
+    println!("plain   : {:?}", plain.tokens);
+
+    let mut steer = Steer {
+        layer: format!("layer.{}", m.n_layers / 2),
+        neurons: vec![3, 5, 9],
+        strength: args.f64_or("strength", 8.0) as f32,
+    };
+    let steered = lm.generate(&prompt, steps, &mut steer)?;
+    println!("steered : {:?}", steered.tokens);
+    println!(
+        "{} of {steps} generated tokens changed under the persistent intervention",
+        plain
+            .tokens
+            .iter()
+            .zip(&steered.tokens)
+            .filter(|(a, b)| a != b)
+            .count()
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Interactive load-test driver (the Fig. 9 scenario, standalone).
+//!
+//! Simulates N concurrent users, each submitting a request that saves the
+//! output of a uniformly-random layer of the served model, and reports the
+//! response-time distribution. `benches/fig9.rs` runs the full sweep; this
+//! example drives one configuration for exploration.
+//!
+//! Run: `cargo run --release --example load_test -- \
+//!           [--model llama8b-sim] [--users 16] [--requests 2]`
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::{artifacts_dir, workload};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::cli::Args;
+use nnscope::util::{Prng, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "llama8b-sim");
+    let users = args.usize_or("users", 16);
+    let requests = args.usize_or("requests", 2);
+    let parallel = args.flag("parallel-cotenancy");
+
+    let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    let m = manifest.clone();
+
+    println!("starting NDIF server with {model} ({} co-tenancy) …",
+        if parallel { "parallel" } else { "sequential" });
+    let mut cfg = NdifConfig::local(&[&model]);
+    cfg.cotenancy = if parallel {
+        CoTenancy::Parallel { max_merge: 8 }
+    } else {
+        CoTenancy::Sequential
+    };
+    let server = NdifServer::start(cfg)?;
+    let addr = server.addr();
+
+    println!("simulating {users} concurrent users × {requests} requests …");
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..users)
+        .map(|u| {
+            let model = model.clone();
+            let (vocab, seq, n_layers) = (m.vocab, m.seq, m.n_layers);
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let client = NdifClient::new(addr);
+                let mut rng = Prng::new(u as u64 + 1);
+                let mut times = Vec::new();
+                for _ in 0..requests {
+                    let req = workload::load_test_request(&mut rng, vocab, seq, n_layers);
+                    let tokens = Tensor::new(&[1, seq], req.tokens.clone());
+                    let mut tr = Trace::new(&model, &tokens);
+                    let h = tr.output(&format!("layer.{}", req.layer));
+                    tr.save(h);
+                    let t = Instant::now();
+                    tr.run_remote(&client)?;
+                    times.push(t.elapsed().as_secs_f64());
+                }
+                Ok(times)
+            })
+        })
+        .collect();
+
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("user thread")?);
+    }
+    let s = Summary::of(&all);
+    println!("\nwall {:.2}s | response time: mean±std {}s | median {:.3}s | q25 {:.3} q75 {:.3} | min {:.3} max {:.3}",
+        wall.elapsed().as_secs_f64(), s.pm(), s.median, s.q25, s.q75, s.min, s.max);
+    let (enq, done, failed, merged) = server.metrics(&model).unwrap();
+    println!("server: enqueued={enq} completed={done} failed={failed} merged_batches={merged}");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Logit lens: decode every layer's hidden state through the unembedding
+//! and watch the prediction form across depth — a classic interpretability
+//! recipe expressed as a single intervention graph (one forward pass, all
+//! layers read server-side; only the per-layer argmax ids return).
+//!
+//! Run: `cargo run --release --example logit_lens -- [--model tiny-sim] [--remote]`
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+    let remote = args.flag("remote");
+
+    let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    let m = manifest.clone();
+    let wout = nnscope::models::weights::gen_param(
+        &m.name,
+        "lm_head",
+        "wout",
+        &[m.d_model, m.vocab],
+    );
+
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 7 + 3) % m.vocab) as f32).collect(),
+    );
+
+    // one trace reading every layer; lens = argmax(h_l @ W_U) at last token
+    let mut tr = Trace::new(&m.name, &tokens);
+    let w = tr.constant(&wout);
+    let mut saves = Vec::new();
+    for l in 0..m.n_layers {
+        let h = tr.output(&format!("layer.{l}"));
+        let last = tr.slice(h, &[Range1::one(0), Range1::one(m.seq - 1)]);
+        let lens = tr.matmul(last, w);
+        let top = tr.argmax(lens);
+        saves.push((l, tr.save(top)));
+    }
+    let logits = tr.output("lm_head");
+    let last = tr.slice(logits, &[Range1::one(0), Range1::one(m.seq - 1)]);
+    let final_top = tr.argmax(last);
+    let final_save = tr.save(final_top);
+
+    let res = if remote {
+        println!("starting a local NDIF server for remote execution …");
+        let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[&model]) };
+        let server = NdifServer::start(cfg)?;
+        let client = NdifClient::new(server.addr());
+        tr.run_remote(&client)?
+    } else {
+        let lm = ModelRunner::load(&artifacts_dir(), &model)?;
+        tr.run_local(&lm)?
+    };
+
+    let mut table = Table::new(&format!("logit lens — {model}")).header(vec!["layer", "top token (lens)"]);
+    for (l, s) in &saves {
+        table.row(vec![format!("layer.{l}"), format!("{}", res.get(*s).data()[0] as usize)]);
+    }
+    table.row(vec!["final (lm_head)".to_string(), format!("{}", res.get(final_save).data()[0] as usize)]);
+    table.print();
+    Ok(())
+}

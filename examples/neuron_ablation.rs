@@ -1,0 +1,68 @@
+//! Neuron-group ablation sweep: zero successive spans of hidden units at
+//! one layer and measure the impact on the model's IOI logit difference —
+//! a causal-localization experiment run as a Session of traces.
+//!
+//! Run: `cargo run --release --example neuron_ablation -- [--model tiny-sim] [--layer 1]`
+
+use nnscope::client::{Session, Trace};
+use nnscope::models::workload::IoiBatch;
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::tensor::Range1;
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+
+    let lm = ModelRunner::load(&artifacts_dir(), &model)?;
+    let m = lm.manifest.clone();
+    let layer = args.usize_or("layer", m.n_layers / 2);
+    let groups = args.usize_or("groups", 8);
+    let span = m.d_model / groups;
+
+    let batch = IoiBatch::generate(4, m.vocab, m.seq, 7);
+    let e = batch.examples[0].clone();
+    let tokens = nnscope::tensor::Tensor::new(&[1, m.seq], e.base.clone());
+
+    // baseline + one trace per ablated group, bundled in a session
+    let mut session = Session::new();
+    let mut saves = Vec::new();
+    for g in 0..=groups {
+        let mut tr = Trace::new(&m.name, &tokens);
+        if g > 0 {
+            let h = tr.output(&format!("layer.{layer}"));
+            let from = (g - 1) * span;
+            let ablated = tr.fill(
+                h,
+                &[Range1::all(), Range1::all(), Range1::new(from, from + span)],
+                0.0,
+            );
+            tr.set_output(&format!("layer.{layer}"), ablated);
+        }
+        let logits = tr.output("lm_head");
+        let ld = tr.logit_diff(logits, e.target, e.foil);
+        let s = tr.save(ld);
+        saves.push(s);
+        session.add(tr);
+    }
+
+    let results = session.run_local(&lm)?;
+    let baseline = results[0].get(saves[0]).data()[0];
+
+    let mut table = Table::new(&format!(
+        "neuron ablation — {model} layer.{layer}, spans of {span} units"
+    ))
+    .header(vec!["ablated units", "logit diff", "Δ vs baseline"]);
+    table.row(vec!["(none)".to_string(), format!("{baseline:+.4}"), String::new()]);
+    for g in 1..=groups {
+        let v = results[g].get(saves[g]).data()[0];
+        table.row(vec![
+            format!("[{}, {})", (g - 1) * span, g * span),
+            format!("{v:+.4}"),
+            format!("{:+.4}", v - baseline),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

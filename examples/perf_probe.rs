@@ -1,0 +1,42 @@
+//! Perf probe: raw forward-pass wallclock for the largest configs — the
+//! measurement driving the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example perf_probe [-- --model X --batch N --iters K]`
+
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::tensor::Tensor;
+use nnscope::util::cli::Args;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let iters = args.usize_or("iters", 3);
+    let models: Vec<String> = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => vec!["opt-66b-sim".into(), "llama8b-sim".into()],
+    };
+    for model in &models {
+        let lm = ModelRunner::load(&artifacts_dir(), model)?;
+        let m = lm.manifest.clone();
+        let batches: Vec<usize> = match args.get("batch") {
+            Some(b) => vec![b.parse()?],
+            None => m.batches.clone(),
+        };
+        for b in batches {
+            let tokens = Tensor::zeros(&[b, m.seq]);
+            lm.forward_plain(&tokens)?; // warmup + compile
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                lm.forward_plain(&tokens)?;
+            }
+            let per = t0.elapsed().as_secs_f64() / iters as f64;
+            let gflop = 2.0 * m.param_count as f64 * (b * m.seq) as f64 / 1e9;
+            println!(
+                "{model} b={b}: {per:.3}s/forward  (~{:.1} GFLOP, {:.1} GFLOPS effective)",
+                gflop,
+                gflop / per
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Remote linear-probe training — the paper's Code Example 8 analog.
+//!
+//! Train a probe to predict layer-1 hidden states from layer-0 hidden
+//! states: activations are fetched from a (remote) NDIF server via
+//! intervention graphs (a Session batches the epoch's traces into one
+//! request); the probe's parameters and optimizer live client-side in the
+//! host tensor engine.
+//!
+//! Run: `cargo run --release --example probe_training -- \
+//!           [--model tiny-sim] [--epochs 30] [--remote]`
+
+use nnscope::client::{remote::NdifClient, Session, Trace};
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::optim::{mse, Adam, LinearProbe};
+use nnscope::tensor::Tensor;
+use nnscope::util::cli::Args;
+use nnscope::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+    let epochs = args.usize_or("epochs", 30);
+    let remote = args.flag("remote");
+
+    let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    let m = manifest.clone();
+    let d = m.d_model;
+
+    // execution backends
+    let local_runner = if remote { None } else { Some(ModelRunner::load(&artifacts_dir(), &model)?) };
+    let server;
+    let client = if remote {
+        println!("starting NDIF server with {model} …");
+        let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[&model]) };
+        server = NdifServer::start(cfg)?;
+        Some(NdifClient::new(server.addr()))
+    } else {
+        None
+    };
+
+    let mut rng = Prng::new(8);
+    let mut probe = LinearProbe::new(d, d, &mut rng);
+    let mut opt = Adam::new(0.01);
+
+    println!("training a {d}×{d} probe: layer.0 output → layer.1 output ({} mode)",
+        if remote { "remote" } else { "local" });
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for epoch in 0..epochs {
+        // one batch of random prompts, activations fetched via a session
+        let mut session = Session::new();
+        let mut saves = Vec::new();
+        for _ in 0..4 {
+            let tokens = Tensor::new(
+                &[1, m.seq],
+                (0..m.seq).map(|_| rng.range(1, m.vocab) as f32).collect(),
+            );
+            let mut tr = Trace::new(&model, &tokens);
+            let h0 = tr.output("layer.0");
+            let h1 = tr.output("layer.1");
+            let s0 = tr.save(h0);
+            let s1 = tr.save(h1);
+            saves.push((s0, s1));
+            session.add(tr);
+        }
+        let results = match (&local_runner, &client) {
+            (Some(r), _) => session.run_local(r)?,
+            (_, Some(c)) => session.run_remote(c)?,
+            _ => unreachable!(),
+        };
+
+        // stack the fetched activations into training rows
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (res, (s0, s1)) in results.iter().zip(&saves) {
+            xs.extend_from_slice(res.get(*s0).data());
+            ys.extend_from_slice(res.get(*s1).data());
+        }
+        let rows = xs.len() / d;
+        let x = Tensor::new(&[rows, d], xs);
+        let y = Tensor::new(&[rows, d], ys);
+
+        let loss = probe.train_step(&x, &y, &mut opt);
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+        if epoch % 5 == 0 || epoch + 1 == epochs {
+            println!("  epoch {epoch:>3}: mse {loss:.5}");
+        }
+    }
+
+    let first = first_loss.unwrap();
+    println!("\nloss {first:.5} → {last_loss:.5} ({:.1}% reduction)",
+        100.0 * (1.0 - last_loss / first));
+    // evaluate on a held-out prompt
+    let tokens = Tensor::new(&[1, m.seq], (0..m.seq).map(|i| ((i * 11) % m.vocab) as f32).collect());
+    let eval_runner = ModelRunner::load(&artifacts_dir(), &model)?;
+    let mut tr = Trace::new(&model, &tokens);
+    let h0 = tr.output("layer.0");
+    let h1 = tr.output("layer.1");
+    let s0 = tr.save(h0);
+    let s1 = tr.save(h1);
+    let res = tr.run_local(&eval_runner)?;
+    let x = Tensor::new(&[m.seq, d], res.get(s0).data().to_vec());
+    let y = Tensor::new(&[m.seq, d], res.get(s1).data().to_vec());
+    let (holdout, _) = mse(&probe.forward(&x), &y);
+    println!("held-out mse: {holdout:.5}");
+    assert!(last_loss < first, "probe failed to learn");
+    Ok(())
+}

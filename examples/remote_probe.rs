@@ -1,0 +1,63 @@
+//! Gradient access remotely: attribution-patching-style per-layer scores
+//! (activation · gradient) computed **server-side** via the GradProtocol,
+//! with only the scalar attributions returning to the client — the
+//! experiment class that Petals-style client-side intervention cannot do
+//! without shipping every hidden state and gradient across the WAN.
+//!
+//! Run: `cargo run --release --example remote_probe -- [--model tiny-sim]`
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::artifacts_dir;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+
+    let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    if !manifest.grad {
+        anyhow::bail!("model {model} exported without grad modules (use tiny-sim or llama8b-sim)");
+    }
+    let m = manifest.clone();
+
+    println!("starting NDIF server with {model} …");
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[&model]) };
+    let server = NdifServer::start(cfg)?;
+    let client = NdifClient::new(server.addr());
+
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 3 + 2) % m.vocab) as f32).collect(),
+    );
+    let target = 5.0f32;
+
+    // one remote trace: per-layer attribution = Σ (h ⊙ ∂L/∂h)
+    let mut tr = Trace::new(&m.name, &tokens);
+    tr.targets(&[target]);
+    let mut saves = Vec::new();
+    for l in 0..m.n_layers {
+        let point = format!("layer.{l}");
+        let h = tr.output(&point);
+        let g = tr.grad(&point);
+        let prod = tr.mul(h, g);
+        let attr = tr.sum(prod);
+        saves.push((l, tr.save(attr)));
+    }
+    let res = tr.run_remote(&client)?;
+
+    let mut table = Table::new(&format!(
+        "server-side attribution (h·∂L/∂h), {model}, target token {target}"
+    ))
+    .header(vec!["layer", "attribution"]);
+    for (l, s) in &saves {
+        table.row(vec![format!("layer.{l}"), format!("{:+.5}", res.get(*s).item())]);
+    }
+    table.print();
+    println!("only {} scalar(s) crossed the wire for gradients of {} parameters’ activations",
+        saves.len(), m.param_count);
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! End-to-end serving driver (the repository's E2E validation run).
+//!
+//! Starts a real NDIF server preloaded with a model, then drives it with
+//! concurrent clients submitting batched IOI activation-patching
+//! experiments over HTTP (through a simulated WAN). Reports
+//! latency/throughput and the patching effect (logit-difference shift),
+//! and verifies remote results equal local execution.
+//!
+//! Run: `cargo run --release --example serve_ioi -- \
+//!           [--model llama8b-sim] [--clients 4] [--requests 3] [--batch 16]`
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::workload::IoiBatch;
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::cli::Args;
+use nnscope::util::Summary;
+
+fn patching_trace(
+    model: &str,
+    batch: &IoiBatch,
+    layer: usize,
+    seq: usize,
+) -> (Trace, nnscope::client::SavedRef) {
+    // interleaved rows [src, base, src, base, ...]; patch src→base at the
+    // last token of `layer`, return per-example logit diffs (server-side
+    // metric: only scalars come back over the WAN).
+    let tokens = batch.interleaved_tokens();
+    let mut tr = Trace::new(model, &tokens);
+    let point = format!("layer.{layer}");
+    let h = tr.output(&point);
+    let mut patched = h;
+    for i in (0..batch.len() * 2).step_by(2) {
+        let src = tr.slice(h, &[Range1::one(i), Range1::one(seq - 1)]);
+        patched = tr.assign(patched, &[Range1::one(i + 1), Range1::one(seq - 1)], src);
+    }
+    tr.set_output(&point, patched);
+    let logits = tr.output("lm_head");
+    // per-example metric on base rows, packed into one saved vector
+    let zeros = Tensor::zeros(&[batch.len()]);
+    let mut acc = tr.constant(&zeros);
+    for (i, e) in batch.examples.iter().enumerate() {
+        let row = tr.slice(logits, &[Range1::one(2 * i + 1)]);
+        let ld = tr.logit_diff(row, e.target, e.foil);
+        acc = tr.assign(acc, &[Range1::one(i)], ld);
+    }
+    let saved = tr.save(acc);
+    (tr, saved)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "llama8b-sim");
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 3);
+    let examples = args.usize_or("batch", 16); // pairs => 2× rows
+
+    println!("== nnscope end-to-end serving driver ==");
+    println!("starting NDIF server with {model} preloaded …");
+    let t0 = Instant::now();
+    let mut cfg = NdifConfig::local(&[&model]);
+    cfg.cotenancy = CoTenancy::Sequential;
+    let server = NdifServer::start(cfg)?;
+    println!("  server up at {} in {:.2}s", server.addr(), t0.elapsed().as_secs_f64());
+
+    let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    let seq = manifest.seq;
+    let vocab = manifest.vocab;
+    let layer = manifest.n_layers / 2;
+
+    // sanity: remote == local on one request
+    {
+        let lm = ModelRunner::load(&artifacts_dir(), &model)?;
+        let batch = IoiBatch::generate(examples, vocab, seq, 0xE2E);
+        let (tr, s) = patching_trace(&model, &batch, layer, seq);
+        let local = tr.run_local(&lm)?;
+        let client = NdifClient::new(server.addr());
+        let (tr, s2) = patching_trace(&model, &batch, layer, seq);
+        let remote = tr.run_remote(&client)?;
+        let diff = local.get(s).max_abs_diff(remote.get(s2));
+        println!("remote == local check: max |Δlogit-diff| = {diff:.2e}");
+        assert!(diff < 1e-4, "remote/local divergence!");
+        let mean_ld: f32 =
+            local.get(s).data().iter().sum::<f32>() / local.get(s).numel() as f32;
+        println!("patched logit-diff (target − foil), mean over batch: {mean_ld:+.4}");
+    }
+
+    // concurrent clients over a simulated WAN
+    println!("\ndriving {clients} clients × {requests} requests (batch {examples} pairs) …");
+    let addr = server.addr();
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let model = model.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                let link = NetSim::paper_wan(Mode::Sleep);
+                let client = NdifClient::new(addr).with_link(link);
+                let mut lat = Vec::new();
+                for r in 0..requests {
+                    let batch =
+                        IoiBatch::generate(examples, vocab, seq, (c * 1000 + r) as u64);
+                    let (tr, s) = patching_trace(&model, &batch, layer, seq);
+                    let t = Instant::now();
+                    let res = tr.run_remote(&client)?;
+                    let dt = t.elapsed().as_secs_f64();
+                    assert_eq!(res.get(s).numel(), examples);
+                    lat.push(dt);
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().expect("client thread")?);
+    }
+    let wall = wall.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+    let total_reqs = clients * requests;
+    let total_examples = total_reqs * examples;
+
+    println!("\n== results ==");
+    println!("requests completed : {total_reqs}");
+    println!("wall time          : {wall:.2}s");
+    println!(
+        "throughput         : {:.2} req/s  ({:.1} patched examples/s)",
+        total_reqs as f64 / wall,
+        total_examples as f64 / wall
+    );
+    println!("latency mean ± std : {}s", s.pm());
+    println!(
+        "latency median     : {:.3}s  (p25 {:.3}, p75 {:.3}, max {:.3})",
+        s.median, s.q25, s.q75, s.max
+    );
+    let (enq, done, failed, _) = server.metrics(&model).unwrap();
+    println!("server metrics     : enqueued={enq} completed={done} failed={failed}");
+    assert_eq!(done as usize, total_reqs + 1); // +1 sanity request
+    println!("\nE2E OK");
+    Ok(())
+}

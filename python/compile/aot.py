@@ -1,0 +1,215 @@
+"""AOT exporter: lower every model module to HLO text + write manifests.
+
+Interchange format is **HLO text**, not serialized `HloModuleProto`: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Output layout (consumed by `runtime::artifacts` on the Rust side):
+
+    artifacts/<config>/manifest.json
+    artifacts/<config>/<module>_b<batch>.hlo.txt
+    artifacts/tiny-sim/check.json      # cross-language reference vectors
+
+`make artifacts` runs this once; it is a no-op when inputs are unchanged
+(Makefile stamp). Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, weights
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser).
+
+    `return_tuple=False` for single-output modules: the executable's output
+    is then a plain array buffer that the Rust runner chains directly into
+    the next module via `execute_b` (no host round-trip between layers).
+    Multi-output modules (lm_head_grad) keep the tuple root.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def lower_to_file(fn, arg_shapes, path: str, return_tuple: bool = False):
+    lowered = jax.jit(fn, keep_unused=True).lower(*[spec(s) for s in arg_shapes])
+    text = to_hlo_text(lowered, return_tuple)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ---------------------------------------------------------------------------
+# Module table: everything exported per config.
+# Shapes use -1 as the batch placeholder, resolved per exported batch size.
+# ---------------------------------------------------------------------------
+
+
+def module_table(cfg):
+    """name -> (fn, inputs[(name, shape)], params[(name, shape)], extra_inputs)"""
+    d, s = cfg.d_model, cfg.seq
+    mods = {
+        "embed": (model.embed_fn(cfg), [("tokens", (-1, s))], model.embed_params(cfg), []),
+        "layer": (model.layer_fn(cfg), [("x", (-1, s, d))], model.layer_params(cfg), []),
+        "lm_head": (model.lm_head_fn(cfg), [("x", (-1, s, d))], model.lm_head_params(cfg), []),
+    }
+    if cfg.grad:
+        mods["lm_head_grad"] = (
+            model.lm_head_grad_fn(cfg),
+            [("x", (-1, s, d))],
+            model.lm_head_params(cfg),
+            [("targets", (-1,))],
+        )
+        mods["layer_vjp"] = (
+            model.layer_vjp_fn(cfg),
+            [("x", (-1, s, d))],
+            model.layer_params(cfg),
+            [("g_out", (-1, s, d))],
+        )
+    for tp in cfg.tp:
+        mods[f"attn_tp{tp}"] = (
+            model.attn_tp_fn(cfg, tp),
+            [("x", (-1, s, d))],
+            model.attn_tp_params(cfg, tp),
+            [],
+        )
+        mods[f"mlp_tp{tp}"] = (
+            model.mlp_tp_fn(cfg, tp),
+            [("h", (-1, s, d))],
+            model.mlp_tp_params(cfg, tp),
+            [],
+        )
+    return mods
+
+
+def resolve(shape, batch):
+    return tuple(batch if x == -1 else x for x in shape)
+
+
+def export_config(cfg, out_dir: str, quiet: bool = False) -> dict:
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    mods = module_table(cfg)
+    manifest_modules = {}
+    for mod_name, (fn, inputs, params, extra_inputs) in mods.items():
+        # lm_head_grad returns (loss, grad): needs a tuple root
+        n_outputs = 2 if mod_name == "lm_head_grad" else 1
+        files = {}
+        for b in cfg.batches:
+            arg_shapes = (
+                [resolve(shape, b) for _, shape in inputs]
+                + [shape for _, shape in params]
+                + [resolve(shape, b) for _, shape in extra_inputs]
+            )
+            fname = f"{mod_name}_b{b}.hlo.txt"
+            nbytes = lower_to_file(
+                fn, arg_shapes, os.path.join(cfg_dir, fname), return_tuple=n_outputs > 1
+            )
+            files[str(b)] = fname
+            if not quiet:
+                print(f"  {cfg.name}/{fname}: {nbytes} bytes", file=sys.stderr)
+        args = (
+            [{"kind": "input", "name": n, "shape": list(s)} for n, s in inputs]
+            + [{"kind": "param", "name": n, "shape": list(s)} for n, s in params]
+            + [{"kind": "input", "name": n, "shape": list(s)} for n, s in extra_inputs]
+        )
+        manifest_modules[mod_name] = {"files": files, "args": args, "outputs": n_outputs}
+
+    manifest = {
+        "name": cfg.name,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "batches": list(cfg.batches),
+        "grad": cfg.grad,
+        "tp": list(cfg.tp),
+        "simulates": cfg.simulates,
+        "param_count": cfg.param_count(),
+        "weight_std": weights.WEIGHT_STD,
+        "modules": manifest_modules,
+    }
+    with open(os.path.join(cfg_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def export_check_vectors(cfg, out_dir: str):
+    """Cross-language reference vectors for the smallest config.
+
+    The Rust integration suite regenerates the same weights, runs the same
+    module sequence through PJRT, and asserts these numbers — proving the
+    weight contract, the artifact bridge, and the runner end to end.
+    """
+    w = weights.gen_model(cfg)
+    b = cfg.batches[0]
+    tokens = np.arange(b * cfg.seq, dtype=np.float32).reshape(b, cfg.seq) % cfg.vocab
+    x = model.embed_fn(cfg)(jnp.asarray(tokens), *[jnp.asarray(a) for a in w["embed"]])
+    hidden_after = {}
+    lf = model.layer_fn(cfg)
+    for i in range(cfg.n_layers):
+        x = lf(x, *[jnp.asarray(a) for a in w[f"layer.{i}"]])
+        hidden_after[f"layer.{i}"] = np.asarray(x)
+    logits = np.asarray(model.lm_head_fn(cfg)(x, *[jnp.asarray(a) for a in w["lm_head"]]))
+
+    # a patched run: overwrite layer.0 output row 0, last token with 1.0s
+    xp = model.embed_fn(cfg)(jnp.asarray(tokens), *[jnp.asarray(a) for a in w["embed"]])
+    xp = lf(xp, *[jnp.asarray(a) for a in w["layer.0"]])
+    xp = xp.at[0, cfg.seq - 1, :].set(1.0)
+    for i in range(1, cfg.n_layers):
+        xp = lf(xp, *[jnp.asarray(a) for a in w[f"layer.{i}"]])
+    patched = np.asarray(model.lm_head_fn(cfg)(xp, *[jnp.asarray(a) for a in w["lm_head"]]))
+
+    check = {
+        "tokens": tokens.flatten().tolist(),
+        "batch": b,
+        "logits_sample": logits[0, -1, :8].astype(float).tolist(),
+        "logits_norm": float(np.linalg.norm(logits)),
+        "hidden_l0_sample": hidden_after["layer.0"][0, -1, :8].astype(float).tolist(),
+        "patched_logits_sample": patched[0, -1, :8].astype(float).tolist(),
+        "tol": 2e-4,
+    }
+    with open(os.path.join(out_dir, cfg.name, "check.json"), "w") as f:
+        json.dump(check, f, indent=2)
+    print(f"  {cfg.name}/check.json written", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="export a single config by name")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    cfgs = [configs.by_name(args.only)] if args.only else configs.ALL
+    os.makedirs(args.out, exist_ok=True)
+    for cfg in cfgs:
+        print(f"exporting {cfg.name} ({cfg.param_count():,} params)", file=sys.stderr)
+        export_config(cfg, args.out, quiet=args.quiet)
+        if cfg.name == "tiny-sim":
+            export_check_vectors(cfg, args.out)
+    print("aot export complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Model configuration zoo — the single source of truth for the simulated
+model family.
+
+The paper evaluates on real open-weight checkpoints (OPT 125M-66B, GPT2-XL,
+Gemma-7B, Llama-3.1 8B/70B); this testbed has no GPUs or HuggingFace access,
+so we substitute a *scaled family*: OPT-style architectures whose parameter
+counts grow geometrically, preserving every relative effect the paper
+measures (setup time ~ bytes loaded, runtime ~ FLOPs, communication overhead
+~ constant). See DESIGN.md §3.
+
+The Rust side never imports this file: `aot.py` bakes everything it needs
+into `artifacts/<name>/manifest.json`.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq: int
+    # batch sizes to export module executables for
+    batches: tuple = (1, 32)
+    # export gradient modules (lm_head_grad, layer_vjp)?
+    grad: bool = False
+    # tensor-parallel shard counts to export (attn_tp{S}, mlp_tp{S})
+    tp: tuple = ()
+    # the real model this config simulates (documentation only)
+    simulates: str = ""
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.seq
+        per_layer = (
+            4 * d * d  # wq wk wv wo
+            + d        # bo
+            + 2 * d * f + f + d  # w1 b1 w2 b2
+            + 4 * d    # ln1/ln2 gains+biases
+        )
+        return v * d + s * d + self.n_layers * per_layer + 2 * d + d * v
+
+
+# The OPT-suite analog (Fig. 6a/6b, Table 2): geometric growth in params.
+OPT_FAMILY = [
+    ModelConfig("opt-125m-sim", 64, 2, 2, 256, 512, 32, simulates="facebook/opt-125m"),
+    ModelConfig("opt-350m-sim", 96, 3, 3, 384, 512, 32, simulates="facebook/opt-350m"),
+    ModelConfig("opt-1.3b-sim", 128, 4, 4, 512, 512, 32, simulates="facebook/opt-1.3b"),
+    ModelConfig("opt-2.7b-sim", 160, 5, 5, 640, 512, 32, simulates="facebook/opt-2.7b"),
+    ModelConfig("opt-6.7b-sim", 224, 6, 7, 896, 512, 32, simulates="facebook/opt-6.7b"),
+    ModelConfig("opt-13b-sim", 288, 7, 9, 1152, 512, 32, simulates="facebook/opt-13b"),
+    ModelConfig("opt-30b-sim", 384, 8, 12, 1536, 512, 32, simulates="facebook/opt-30b"),
+    ModelConfig("opt-66b-sim", 512, 9, 16, 2048, 512, 32, simulates="facebook/opt-66b"),
+]
+
+# Table 1 / Table 3-4 model analogs.
+NAMED = [
+    ModelConfig("gpt2xl-sim", 160, 6, 5, 640, 512, 32, simulates="gpt2-xl"),
+    ModelConfig("gemma7b-sim", 256, 7, 8, 1024, 512, 32, simulates="google/gemma-7b"),
+    ModelConfig(
+        "llama8b-sim", 256, 8, 8, 1024, 512, 32,
+        # intermediate batches let the co-tenancy scheduler merge bursts
+        # without padding straight to 32 (see benches/cotenancy.rs)
+        batches=(1, 4, 8, 32),
+        grad=True, tp=(2, 4), simulates="meta-llama/Meta-Llama-3.1-8B",
+    ),
+    ModelConfig("llama70b-sim", 512, 10, 16, 2048, 512, 32, simulates="meta-llama/Meta-Llama-3.1-70B"),
+]
+
+# Small config for fast unit/integration tests across the whole stack.
+TEST = [
+    ModelConfig("tiny-sim", 32, 2, 2, 128, 64, 16, batches=(1, 4), grad=True, tp=(2,)),
+]
+
+ALL = TEST + OPT_FAMILY + NAMED
+
+
+def by_name(name: str) -> ModelConfig:
+    for c in ALL:
+        if c.name == name:
+            return c
+    raise KeyError(name)

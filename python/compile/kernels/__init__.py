@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The model's compute hot-spots — causal multi-head attention and layer
+normalization — are implemented as Pallas kernels with the HBM↔VMEM
+schedule expressed via `BlockSpec`s and an online-softmax inner loop.
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation for the TPU projection).
+"""
+
+from .attention import flash_attention
+from .layernorm import layernorm
+
+__all__ = ["flash_attention", "layernorm"]

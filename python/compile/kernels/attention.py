@@ -1,0 +1,124 @@
+"""Tiled causal flash attention as a Pallas kernel.
+
+The paper's hosted models spend their FLOPs in attention + MLP matmuls; on
+GPU those run as fused CUDA kernels inside PyTorch. The TPU-shaped
+adaptation (DESIGN.md §2) tiles the computation for VMEM and the MXU:
+
+* grid over query tiles of ``BLOCK_Q`` rows; each program instance owns a
+  `[batch, heads, BLOCK_Q, d_head]` query tile;
+* the kernel walks KV tiles of ``BLOCK_K`` columns with the online-softmax
+  recurrence (running max `m`, normalizer `l`, accumulator `acc`), so the
+  S×S score matrix is never materialized;
+* causal masking is applied per tile, and fully-masked tiles are skipped
+  by bounding the KV loop at the query tile's diagonal.
+
+Grid-axis placement (a §Perf decision, EXPERIMENTS.md §Perf/L1): on a real
+TPU the batch and head axes are *parallel* grid dimensions; under
+``interpret=True`` every grid step executes sequentially on the CPU, which
+made a `(batch, heads, q_tiles)` grid serialize thousands of tiny steps
+(11.6 s/forward at batch 32 on the largest config). The batch/head axes
+are therefore folded *into* the kernel as vectorized einsums — exactly the
+work a TPU would run in parallel program instances — keeping the KV-tile
+recurrence as the explicit loop structure. Same math (verified against
+``ref.py``), ~40× less interpret overhead.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On TPU these would be multiples of the (8, 128)
+# VREG / (128, 128) MXU tiles; on CPU-interpret they bound the VMEM-like
+# working set and the loop trip counts.
+BLOCK_Q = 16
+BLOCK_K = 16
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One query tile (all batches/heads) vs. causally-visible KV tiles.
+
+    Shapes as delivered by the BlockSpecs:
+      q_ref: [B, H, BLOCK_Q, d_head] — this program's query tile
+      k_ref: [B, H, S, d_head]       — full keys
+      v_ref: [B, H, S, d_head]       — full values
+      o_ref: [B, H, BLOCK_Q, d_head] — output tile
+    """
+    qi = pl.program_id(0)  # query-tile index within the sequence
+    b, h, block_q, d_head = q_ref.shape
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Online-softmax state (per batch/head/query-row).
+    m = jnp.full((b, h, block_q), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((b, h, block_q), dtype=jnp.float32)
+    acc = jnp.zeros((b, h, block_q, d_head), dtype=jnp.float32)
+
+    # Causality: query row (qi*block_q + r) attends keys <= its own index;
+    # KV tiles strictly beyond the diagonal contribute nothing. Ceil-divide
+    # so a partially-visible tile is still processed (masked below).
+    num_kv_tiles = ((qi + 1) * block_q + block_k - 1) // block_k
+
+    def body(kv, carry):
+        m, l, acc = carry
+        k_tile = pl.load(
+            k_ref, (slice(None), slice(None), pl.dslice(kv * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        v_tile = pl.load(
+            v_ref, (slice(None), slice(None), pl.dslice(kv * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_tile)  # [b, h, block_q, block_k]
+
+        # causal mask within the tile
+        q_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+        k_idx = kv * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = q_idx[:, None] >= k_idx[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v_tile)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kv_tiles, body, (m, l, acc))
+    o_ref[...] = (acc / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """Causal multi-head attention, `softmax(q kᵀ / sqrt(d)) v`.
+
+    Args:
+      q, k, v: [batch, heads, seq, d_head]
+    Returns:
+      [batch, heads, seq, d_head]
+    """
+    b, h, s, d = q.shape
+    assert k.shape == (b, h, s, d) and v.shape == (b, h, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_attn_kernel, block_k=block_k, scale=scale)
+
+    grid = (s // block_q,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, h, block_q, d), lambda iq: (0, 0, iq, 0)),
+            pl.BlockSpec((b, h, s, d), lambda iq: (0, 0, 0, 0)),
+            pl.BlockSpec((b, h, s, d), lambda iq: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h, block_q, d), lambda iq: (0, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

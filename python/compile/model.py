@@ -1,0 +1,238 @@
+"""Layer-2: the hosted foundation model, as per-module JAX functions.
+
+NNsight interleaves intervention subgraphs with model execution by hooking
+PyTorch module boundaries (§B.1 of the paper). In the AOT three-layer
+architecture there is no Python on the request path, so module boundaries
+become *artifact boundaries*: each function below is lowered to its own HLO
+executable, and the Rust `ModelRunner` executes them in sequence, running
+intervention subgraphs between calls — the exact interleaving semantics of
+the paper, realized at the XLA level.
+
+Architecture: OPT-style pre-LN decoder-only transformer.
+
+    h0       = wte[tokens] + wpe[positions]            (embed)
+    h_{i+1}  = h_i + attn(ln1(h_i)) ; + mlp(ln2(·))    (layer × n_layers)
+    logits   = ln_f(h_N) @ w_out                        (lm_head)
+
+All decoder layers share one executable (identical shapes) and differ only
+in their weight arguments, so artifact count is O(1) in depth.
+
+Weight argument orders are frozen here and recorded in the manifest; the
+Rust side is driven entirely by the manifest.
+
+Gradient modules (for GradProtocol / attribution patching / probe
+training) and tensor-parallel shard modules (for the NDIF multi-shard
+deployment simulation, Fig. 4) are exported for configs that request them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, layernorm
+from .kernels.ref import attention_ref, layernorm_ref
+
+# ---------------------------------------------------------------------------
+# Weight schema: (name, shape) per module. Shapes depend only on config.
+# ---------------------------------------------------------------------------
+
+
+def embed_params(cfg):
+    return [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.seq, cfg.d_model)),
+    ]
+
+
+def layer_params(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)),
+        ("wo", (d, d)), ("bo", (d,)),
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w1", (d, f)), ("b1", (f,)),
+        ("w2", (f, d)), ("b2", (d,)),
+    ]
+
+
+def lm_head_params(cfg):
+    d, v = cfg.d_model, cfg.vocab
+    return [("lnf_g", (d,)), ("lnf_b", (d,)), ("wout", (d, v))]
+
+
+def attn_tp_params(cfg, shards):
+    """Column-parallel attention shard: a contiguous block of heads.
+
+    wq/wk/wv keep full input dim, produce d/S columns; wo maps those back
+    up (row-parallel), so shard outputs sum to the full projection. The
+    output bias must be added exactly once — the weight generator gives
+    shard 0 the real bias and the other shards zeros.
+    """
+    d = cfg.d_model
+    ds = d // shards
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("wq_s", (d, ds)), ("wk_s", (d, ds)), ("wv_s", (d, ds)),
+        ("wo_s", (ds, d)), ("bo_s", (d,)),
+    ]
+
+
+def mlp_tp_params(cfg, shards):
+    d, f = cfg.d_model, cfg.d_ff
+    fs = f // shards
+    return [
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w1_s", (d, fs)), ("b1_s", (fs,)),
+        ("w2_s", (fs, d)), ("b2_s", (d,)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Forward modules
+# ---------------------------------------------------------------------------
+
+
+def embed_fn(cfg):
+    def fn(tokens, wte, wpe):
+        # tokens arrive as f32 (simplest literal dtype for the rust side)
+        ids = tokens.astype(jnp.int32)
+        pos = jnp.arange(cfg.seq, dtype=jnp.int32)
+        return jnp.take(wte, ids, axis=0) + wpe[pos][None, :, :]
+
+    return fn
+
+
+def _attention_block(cfg, x_norm, wq, wk, wv, wo, bo, heads=None, use_kernel=True):
+    """Multi-head causal attention over normalized input, output proj.
+
+    `use_kernel=False` swaps in the pure-jnp reference attention: the
+    Pallas interpret kernel has no reverse-mode autodiff rule, so gradient
+    modules (`layer_vjp`, `lm_head_grad`) differentiate the mathematically
+    identical reference path. Forward modules always use the L1 kernel.
+    """
+    b, s, _ = x_norm.shape
+    h = heads if heads is not None else cfg.n_heads
+    dh = cfg.d_head
+    q = (x_norm @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x_norm @ wk).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = (x_norm @ wv).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    attn = flash_attention if use_kernel else attention_ref
+    o = attn(q, k, v)  # L1 Pallas kernel on the forward path
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return o @ wo + bo
+
+
+def _mlp_block(x_norm, w1, b1, w2, b2):
+    return jax.nn.gelu(x_norm @ w1 + b1, approximate=True) @ w2 + b2
+
+
+def layer_fn(cfg, use_kernel=True):
+    ln = layernorm if use_kernel else layernorm_ref
+
+    def fn(x, ln1_g, ln1_b, wq, wk, wv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+        a = _attention_block(cfg, ln(x, ln1_g, ln1_b), wq, wk, wv, wo, bo, use_kernel=use_kernel)
+        h = x + a
+        m = _mlp_block(ln(h, ln2_g, ln2_b), w1, b1, w2, b2)
+        return h + m
+
+    return fn
+
+
+def lm_head_fn(cfg):
+    def fn(x, lnf_g, lnf_b, wout):
+        return layernorm(x, lnf_g, lnf_b) @ wout
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Gradient modules (GradProtocol substrate)
+# ---------------------------------------------------------------------------
+
+
+def lm_head_grad_fn(cfg):
+    """Loss + gradient w.r.t. the final hidden state.
+
+    Loss = mean over batch of cross-entropy of the last-token prediction
+    against `targets` (f32-encoded ids). This is the backward *root*; the
+    chain continues through `layer_vjp` modules back to any layer the
+    user's graph touched with `.grad`.
+    """
+
+    def loss(x, lnf_g, lnf_b, wout, targets):
+        logits = layernorm_ref(x, lnf_g, lnf_b) @ wout  # [B,S,V]
+        last = logits[:, -1, :]
+        logp = jax.nn.log_softmax(last, axis=-1)
+        ids = targets.astype(jnp.int32)
+        nll = -jnp.take_along_axis(logp, ids[:, None], axis=1)[:, 0]
+        return nll.mean()
+
+    def fn(x, lnf_g, lnf_b, wout, targets):
+        val, gx = jax.value_and_grad(loss)(x, lnf_g, lnf_b, wout, targets)
+        return val, gx
+
+    return fn
+
+
+def layer_vjp_fn(cfg):
+    """Backward through one decoder layer: (x, weights…, g_out) → g_x."""
+    fwd = layer_fn(cfg, use_kernel=False)  # reference path is differentiable
+
+    def fn(x, ln1_g, ln1_b, wq, wk, wv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2, g_out):
+        _, vjp = jax.vjp(
+            lambda xx: fwd(xx, ln1_g, ln1_b, wq, wk, wv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2),
+            x,
+        )
+        return vjp(g_out)[0]
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel shard modules (NDIF multi-shard deployment, Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def attn_tp_fn(cfg, shards):
+    """Partial attention delta for one shard's heads.
+
+    full layer step 1:  h = x + Σ_s attn_tp(x, weights_s)
+    (the Rust coordinator performs the all-reduce / residual add).
+    """
+    h = cfg.n_heads // shards
+    assert h >= 1, (cfg.name, shards)
+
+    def fn(x, ln1_g, ln1_b, wq_s, wk_s, wv_s, wo_s, bo_s):
+        xn = layernorm(x, ln1_g, ln1_b)
+        return _attention_block(cfg, xn, wq_s, wk_s, wv_s, wo_s, bo_s, heads=h)
+
+    return fn
+
+
+def mlp_tp_fn(cfg, shards):
+    """Partial MLP delta for one shard's hidden columns.
+
+    full layer step 2:  out = h + Σ_s mlp_tp(h, weights_s)
+    """
+    del shards
+
+    def fn(h, ln2_g, ln2_b, w1_s, b1_s, w2_s, b2_s):
+        hn = layernorm(h, ln2_g, ln2_b)
+        return _mlp_block(hn, w1_s, b1_s, w2_s, b2_s)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Whole-model composition (used by the pytest oracle + check vectors only;
+# never exported — the Rust runner composes modules itself)
+# ---------------------------------------------------------------------------
+
+
+def full_forward(cfg, weights, tokens):
+    """Compose the modules exactly as the Rust ModelRunner does."""
+    x = embed_fn(cfg)(tokens, *weights["embed"])
+    lf = layer_fn(cfg)
+    for i in range(cfg.n_layers):
+        x = lf(x, *weights[f"layer.{i}"])
+    return lm_head_fn(cfg)(x, *weights["lm_head"])

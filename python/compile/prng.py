@@ -1,0 +1,69 @@
+"""Bit-exact Python mirror of the Rust weight PRNG (`util::prng`).
+
+Synthetic model weights are generated deterministically from parameter
+names on the Rust side (no weight files ship with the repo). The pytest
+suite regenerates the same weights here to (a) run the pure-JAX oracle
+model on identical parameters and (b) emit `check.json` reference logits
+that the Rust integration tests verify, proving the whole
+python-AOT → rust-PJRT bridge end to end.
+
+Bit-exactness requirements:
+* xoshiro256++ over u64 with wrapping arithmetic (masked here);
+* SplitMix64 seeding from an FNV-1a hash of the parameter name;
+* uniform doubles via `(x >> 11) * 2^-53` (exact in IEEE f64);
+* symmetric-uniform weight init `(2u - 1) * a` computed in f64 and then
+  rounded once to f32 — both languages round identically.
+"""
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+def fnv1a(name: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+class Prng:
+    """xoshiro256++ seeded via SplitMix64 (mirrors rust/src/util/prng.rs)."""
+
+    def __init__(self, seed: int):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    @classmethod
+    def from_name(cls, name: str) -> "Prng":
+        return cls(fnv1a(name))
+
+    def next_u64(self) -> int:
+        s = self.s
+        x = (s[0] + s[3]) & MASK
+        result = (((x << 23) | (x >> 41)) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & MASK
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def fill_uniform_sym(self, n: int, a: float) -> np.ndarray:
+        """n samples of `(2u - 1) * a`, rounded once to f32."""
+        out = np.empty(n, dtype=np.float32)
+        for i in range(n):
+            out[i] = np.float32((2.0 * self.uniform() - 1.0) * a)
+        return out

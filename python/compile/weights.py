@@ -1,0 +1,79 @@
+"""Synthetic weight generation — Python mirror of `models::weights` (Rust).
+
+No weight files ship with the repo: every parameter tensor is generated
+deterministically from its fully-qualified name
+(``"<config>/<module>/<param>"``) with the shared xoshiro256++ stream
+(see `prng.py`). The Rust runtime generates weights the same way, so both
+languages agree bit-for-bit — verified by the `check.json` reference
+vectors exported for the tiny config.
+
+Init rules (the shared contract):
+* layernorm gains (``*_g``): ones;
+* biases (``*_b``, ``bo``, ``b1``, ``b2``): zeros;
+* everything else: symmetric uniform with std 0.02 (a = 0.02·√3);
+* tensor-parallel shard slices are *views of the full weights* (columns of
+  wq/wk/wv/w1, rows of wo/w2), so sharded numerics equal unsharded; the
+  once-only biases (bo, b2) go to shard 0, zeros elsewhere.
+"""
+
+import numpy as np
+
+from . import model
+from .prng import Prng
+
+WEIGHT_STD = 0.02
+_A = WEIGHT_STD * np.sqrt(3.0)
+
+
+def is_gain(param: str) -> bool:
+    return param.endswith("_g")
+
+
+def is_bias(param: str) -> bool:
+    return param.endswith("_b") or param in ("bo", "b1", "b2")
+
+
+def gen_param(cfg_name: str, module: str, param: str, shape) -> np.ndarray:
+    """Generate one parameter tensor by the shared contract."""
+    n = int(np.prod(shape))
+    if is_gain(param):
+        return np.ones(shape, dtype=np.float32)
+    if is_bias(param):
+        return np.zeros(shape, dtype=np.float32)
+    rng = Prng.from_name(f"{cfg_name}/{module}/{param}")
+    return rng.fill_uniform_sym(n, float(_A)).reshape(shape)
+
+
+def gen_module(cfg, module: str, params) -> list:
+    return [gen_param(cfg.name, module, name, shape) for name, shape in params]
+
+
+def gen_model(cfg) -> dict:
+    """All weights for a config, keyed by module path."""
+    w = {"embed": gen_module(cfg, "embed", model.embed_params(cfg))}
+    for i in range(cfg.n_layers):
+        # all layers share one executable but have distinct weights
+        w[f"layer.{i}"] = gen_module(cfg, f"layer.{i}", model.layer_params(cfg))
+    w["lm_head"] = gen_module(cfg, "lm_head", model.lm_head_params(cfg))
+    return w
+
+
+def shard_layer_weights(cfg, layer_weights, shards: int):
+    """Slice one layer's full weights into per-shard (attn, mlp) arg lists.
+
+    Returns `[(attn_args, mlp_args), ...]` of length `shards`, matching
+    `model.attn_tp_params` / `model.mlp_tp_params` argument order.
+    """
+    (ln1_g, ln1_b, wq, wk, wv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2) = layer_weights
+    d, f = cfg.d_model, cfg.d_ff
+    ds, fs = d // shards, f // shards
+    out = []
+    for s in range(shards):
+        cs, ce = s * ds, (s + 1) * ds
+        bo_s = bo if s == 0 else np.zeros_like(bo)
+        attn = [ln1_g, ln1_b, wq[:, cs:ce], wk[:, cs:ce], wv[:, cs:ce], wo[cs:ce, :], bo_s]
+        hs, he = s * fs, (s + 1) * fs
+        b2_s = b2 if s == 0 else np.zeros_like(b2)
+        mlp = [ln2_g, ln2_b, w1[:, hs:he], b1[hs:he], w2[hs:he, :], b2_s]
+        out.append((attn, mlp))
+    return out

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+This is the core correctness signal for the compiled artifacts: every HLO
+module the Rust runtime executes embeds these kernels, so kernel==oracle
+plus oracle-level model tests imply artifact-level correctness.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, layernorm
+from compile.kernels.ref import attention_ref, layernorm_ref
+
+TOL = 2e-5
+
+
+def randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 16, 8), (2, 3, 32, 16), (1, 8, 32, 32), (4, 2, 64, 16)])
+def test_attention_matches_ref(b, h, s, d):
+    rng = np.random.default_rng(b * 1000 + h * 100 + s + d)
+    q, k, v = (randn(rng, b, h, s, d) for _ in range(3))
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=TOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.sampled_from([16, 32, 48, 64]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31),
+)
+def test_attention_hypothesis_sweep(b, h, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (randn(rng, b, h, s, d) for _ in range(3))
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=TOL, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 8), (16, 8), (8, 16), (32, 16), (16, 16)])
+def test_attention_block_size_invariance(bq, bk):
+    """The result must not depend on the tiling — a flash-attention invariant."""
+    rng = np.random.default_rng(7)
+    q, k, v = (randn(rng, 2, 2, 32, 16) for _ in range(3))
+    base = flash_attention(q, k, v, block_q=32, block_k=32)
+    tiled = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(base), atol=TOL, rtol=1e-4)
+
+
+def test_attention_is_causal():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(3)
+    q, k, v = (randn(rng, 1, 2, 32, 16) for _ in range(3))
+    out1 = np.asarray(flash_attention(q, k, v))
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = np.asarray(flash_attention(q, k2, v2))
+    np.testing.assert_allclose(out1[:, :, :20], out2[:, :, :20], atol=TOL)
+    assert np.abs(out1[:, :, 20:] - out2[:, :, 20:]).max() > 0.1
+
+
+def test_attention_first_token_is_v0():
+    """Token 0 attends only to itself: output row 0 == v[..,0,:]."""
+    rng = np.random.default_rng(11)
+    q, k, v = (randn(rng, 2, 2, 16, 8) for _ in range(3))
+    out = np.asarray(flash_attention(q, k, v))
+    np.testing.assert_allclose(out[:, :, 0, :], np.asarray(v)[:, :, 0, :], atol=TOL)
+
+
+def test_attention_uniform_values():
+    """If V is constant, attention output equals that constant."""
+    rng = np.random.default_rng(5)
+    q, k = (randn(rng, 1, 1, 16, 8) for _ in range(2))
+    v = jnp.full((1, 1, 16, 8), 2.5, dtype=jnp.float32)
+    out = np.asarray(flash_attention(q, k, v))
+    np.testing.assert_allclose(out, 2.5, atol=TOL)
+
+
+def test_attention_large_logits_stable():
+    """Online softmax must survive large score magnitudes."""
+    rng = np.random.default_rng(9)
+    q = randn(rng, 1, 1, 16, 8) * 30.0
+    k = randn(rng, 1, 1, 16, 8) * 30.0
+    v = randn(rng, 1, 1, 16, 8)
+    out = np.asarray(flash_attention(q, k, v))
+    assert np.isfinite(out).all()
+    ref = np.asarray(attention_ref(q, k, v))
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (2, 16, 32), (1, 32, 64), (3, 7, 48)])
+def test_layernorm_matches_ref(shape):
+    rng = np.random.default_rng(sum(shape))
+    x = randn(rng, *shape)
+    g = randn(rng, shape[-1])
+    b = randn(rng, shape[-1])
+    out = layernorm(x, g, b)
+    ref = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=TOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    d=st.sampled_from([8, 32, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_layernorm_hypothesis_sweep(rows, d, seed):
+    """Row counts deliberately not multiples of the block to hit padding."""
+    rng = np.random.default_rng(seed)
+    x = randn(rng, rows, d)
+    g = randn(rng, d)
+    b = randn(rng, d)
+    out = layernorm(x, g, b)
+    ref = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=TOL, rtol=1e-4)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(2)
+    x = randn(rng, 8, 64) * 5.0 + 3.0
+    ones = jnp.ones(64, jnp.float32)
+    zeros = jnp.zeros(64, jnp.float32)
+    y = np.asarray(layernorm(x, ones, zeros))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_block_rows_invariance():
+    rng = np.random.default_rng(4)
+    x = randn(rng, 48, 32)
+    g = randn(rng, 32)
+    b = randn(rng, 32)
+    a1 = np.asarray(layernorm(x, g, b, block_rows=4))
+    a2 = np.asarray(layernorm(x, g, b, block_rows=16))
+    a3 = np.asarray(layernorm(x, g, b, block_rows=48))
+    np.testing.assert_allclose(a1, a2, atol=TOL)
+    np.testing.assert_allclose(a2, a3, atol=TOL)

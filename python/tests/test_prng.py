@@ -1,0 +1,40 @@
+"""Cross-language PRNG contract tests (mirror of rust/src/util/prng.rs)."""
+
+import numpy as np
+
+from compile.prng import Prng, fnv1a
+
+
+def test_known_answers_match_rust():
+    """Shared known-answer test — the same values are asserted in
+    `util::prng::tests::cross_language_known_answers` on the Rust side."""
+    p = Prng.from_name("xcheck")
+    assert p.next_u64() == 0x1C801F4C48A0B4EC
+    assert p.next_u64() == 0xA6B3EE2BB4A9612C
+    assert p.next_u64() == 0x3FF86E8D2FEA04D6
+    assert p.next_u64() == 0x09274F6ED2DBF80F
+
+
+def test_uniform_sym_known_answers():
+    p = Prng.from_name("xcheck")
+    got = p.fill_uniform_sym(4, 0.5)
+    expect = np.array([-0.38867, 0.15118302, -0.25011548, -0.46424392], dtype=np.float32)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_fnv1a_distinct():
+    assert fnv1a("a") != fnv1a("b")
+    assert fnv1a("tiny-sim/layer.0/wq") != fnv1a("tiny-sim/layer.1/wq")
+
+
+def test_uniform_in_range():
+    p = Prng(42)
+    for _ in range(1000):
+        u = p.uniform()
+        assert 0.0 <= u < 1.0
+
+
+def test_streams_independent():
+    a = Prng.from_name("x")
+    b = Prng.from_name("y")
+    assert [a.next_u64() for _ in range(8)] != [b.next_u64() for _ in range(8)]

@@ -1,0 +1,249 @@
+//! Hook-based intervention mechanisms: baukit-like closure hooks and
+//! pyvene-like declarative intervention schemes.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::models::workload::IoiBatch;
+use crate::models::{Hooks, ModelRunner};
+use crate::tensor::Tensor;
+
+use super::{base_row_logit_diffs, patch_rows, Framework};
+
+// ---------------------------------------------------------------------------
+// baukit-like: register a closure at one access point
+// ---------------------------------------------------------------------------
+
+/// The minimal mechanism: one closure per access point, like
+/// `baukit.TraceDict` / `register_forward_hook`. No intermediate
+/// representation; the closure runs inline at the module boundary.
+pub struct BaukitLike {
+    runner: ModelRunner,
+}
+
+/// Adapter: closure at a single point → [`Hooks`].
+struct ClosureHook<'f> {
+    point: String,
+    f: RefCell<Box<dyn FnMut(&mut Tensor) + 'f>>,
+}
+
+impl Hooks for ClosureHook<'_> {
+    fn wants(&self, point: &str) -> bool {
+        point == self.point
+    }
+    fn on_output(&mut self, _point: &str, t: &mut Tensor) -> bool {
+        (self.f.borrow_mut())(t);
+        true
+    }
+}
+
+impl BaukitLike {
+    /// Run a forward pass with a closure hook at `point` (the baukit
+    /// pattern from the paper's Fig. 3a).
+    pub fn run_with_hook(
+        &self,
+        tokens: &Tensor,
+        point: &str,
+        f: impl FnMut(&mut Tensor),
+    ) -> Result<Tensor> {
+        let mut hook = ClosureHook { point: point.to_string(), f: RefCell::new(Box::new(f)) };
+        self.runner.forward(tokens, &mut hook)
+    }
+
+    pub fn runner(&self) -> &ModelRunner {
+        &self.runner
+    }
+}
+
+impl Framework for BaukitLike {
+    fn name(&self) -> &'static str {
+        "baukit"
+    }
+
+    fn setup(artifacts: &Path, model: &str) -> Result<BaukitLike> {
+        let runner = ModelRunner::load_cold(artifacts, model)?;
+        runner.precompile_forward()?;
+        Ok(BaukitLike { runner })
+    }
+
+    fn activation_patch(&self, batch: &IoiBatch, layer: usize) -> Result<Tensor> {
+        let tokens = batch.interleaved_tokens();
+        let (padded, _) = self.runner.pad_tokens(&tokens)?;
+        let seq = self.runner.manifest.seq;
+        let logits =
+            self.run_with_hook(&padded, &format!("layer.{layer}"), |t| patch_rows(t, seq))?;
+        Ok(base_row_logit_diffs(&logits, batch))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pyvene-like: declarative intervention schemes compiled to hooks
+// ---------------------------------------------------------------------------
+
+/// What an intervention config does at its access point.
+#[derive(Clone, Debug)]
+pub enum InterventionType {
+    /// Collect the activation (returned after the run).
+    Collect,
+    /// Copy source rows onto base rows at the last token (interchange
+    /// intervention, pyvene's core operation).
+    Interchange,
+    /// Zero a span of neurons at the last token.
+    ZeroNeurons { from: usize, to: usize },
+}
+
+/// One entry of an intervention scheme (pyvene's `IntervenableConfig`).
+#[derive(Clone, Debug)]
+pub struct InterventionConfig {
+    pub point: String,
+    pub kind: InterventionType,
+}
+
+/// pyvene-like: the user describes interventions declaratively; the
+/// framework compiles the scheme into hooks and manages collected state.
+pub struct PyveneLike {
+    runner: ModelRunner,
+}
+
+/// The compiled scheme acting as hooks, collecting as it goes.
+struct SchemeHooks {
+    configs: Vec<InterventionConfig>,
+    seq: usize,
+    collected: Vec<(String, Tensor)>,
+}
+
+impl Hooks for SchemeHooks {
+    fn wants(&self, point: &str) -> bool {
+        self.configs.iter().any(|c| c.point == point)
+    }
+    fn on_output(&mut self, point: &str, t: &mut Tensor) -> bool {
+        let mut modified = false;
+        // clone configs indexes to avoid double borrow
+        let matches: Vec<usize> = self
+            .configs
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.point == point)
+            .map(|(i, _)| i)
+            .collect();
+        for i in matches {
+            match self.configs[i].kind.clone() {
+                InterventionType::Collect => {
+                    self.collected.push((point.to_string(), t.clone()));
+                }
+                InterventionType::Interchange => {
+                    patch_rows(t, self.seq);
+                    modified = true;
+                }
+                InterventionType::ZeroNeurons { from, to } => {
+                    t.slice_fill(
+                        &[
+                            crate::tensor::Range1::all(),
+                            crate::tensor::Range1::one(self.seq - 1),
+                            crate::tensor::Range1::new(from, to),
+                        ],
+                        0.0,
+                    );
+                    modified = true;
+                }
+            }
+        }
+        modified
+    }
+}
+
+impl PyveneLike {
+    /// Execute a scheme; returns (logits, collected activations).
+    pub fn run_scheme(
+        &self,
+        tokens: &Tensor,
+        configs: &[InterventionConfig],
+    ) -> Result<(Tensor, Vec<(String, Tensor)>)> {
+        let mut hooks = SchemeHooks {
+            configs: configs.to_vec(),
+            seq: self.runner.manifest.seq,
+            collected: Vec::new(),
+        };
+        let logits = self.runner.forward(tokens, &mut hooks)?;
+        Ok((logits, hooks.collected))
+    }
+
+    pub fn runner(&self) -> &ModelRunner {
+        &self.runner
+    }
+}
+
+impl Framework for PyveneLike {
+    fn name(&self) -> &'static str {
+        "pyvene"
+    }
+
+    fn setup(artifacts: &Path, model: &str) -> Result<PyveneLike> {
+        let runner = ModelRunner::load_cold(artifacts, model)?;
+        runner.precompile_forward()?;
+        Ok(PyveneLike { runner })
+    }
+
+    fn activation_patch(&self, batch: &IoiBatch, layer: usize) -> Result<Tensor> {
+        let tokens = batch.interleaved_tokens();
+        let (padded, _) = self.runner.pad_tokens(&tokens)?;
+        let scheme = [InterventionConfig {
+            point: format!("layer.{layer}"),
+            kind: InterventionType::Interchange,
+        }];
+        let (logits, _) = self.run_scheme(&padded, &scheme)?;
+        Ok(base_row_logit_diffs(&logits, batch))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NNsight path as a Framework (for Table 1 parity measurements)
+// ---------------------------------------------------------------------------
+
+/// The intervention-graph mechanism measured under the same harness.
+pub struct NnsightLocal {
+    runner: ModelRunner,
+}
+
+impl NnsightLocal {
+    pub fn runner(&self) -> &ModelRunner {
+        &self.runner
+    }
+}
+
+impl Framework for NnsightLocal {
+    fn name(&self) -> &'static str {
+        "nnsight"
+    }
+
+    fn setup(artifacts: &Path, model: &str) -> Result<NnsightLocal> {
+        let runner = ModelRunner::load_cold(artifacts, model)?;
+        runner.precompile_forward()?;
+        Ok(NnsightLocal { runner })
+    }
+
+    fn activation_patch(&self, batch: &IoiBatch, layer: usize) -> Result<Tensor> {
+        use crate::client::Trace;
+        use crate::tensor::Range1;
+        let tokens = batch.interleaved_tokens();
+        let (padded, _) = self.runner.pad_tokens(&tokens)?;
+        let seq = self.runner.manifest.seq;
+
+        let mut tr = Trace::new(&self.runner.manifest.name, &padded);
+        let h = tr.output(&format!("layer.{layer}"));
+        // build the interleaved patch as graph ops
+        let mut patched = h;
+        for i in (0..batch.len() * 2).step_by(2) {
+            let src = tr.slice(h, &[Range1::one(i), Range1::one(seq - 1)]);
+            patched = tr.assign(patched, &[Range1::one(i + 1), Range1::one(seq - 1)], src);
+        }
+        tr.set_output(&format!("layer.{layer}"), patched);
+        let logits = tr.output("lm_head");
+        let s = tr.save(logits);
+        let res = tr.run_local(&self.runner)?;
+        let logits = res.try_get(s).ok_or_else(|| anyhow!("missing logits"))?;
+        Ok(base_row_logit_diffs(logits, batch))
+    }
+}

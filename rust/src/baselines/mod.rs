@@ -1,0 +1,98 @@
+//! Baseline intervention mechanisms, for the paper's comparisons.
+//!
+//! Table 1 compares NNsight against baukit, pyvene, and TransformerLens —
+//! three ways of organizing the *same* intervention work, whose measured
+//! differences come from how much machinery sits between the researcher
+//! and the forward pass. Rather than mock numbers, this module implements
+//! each mechanism's distinguishing architecture over the shared runtime
+//! (DESIGN.md §3):
+//!
+//! * [`hooks::BaukitLike`] — closure hooks registered at one access point
+//!   (the minimal mechanism);
+//! * [`hooks::PyveneLike`] — declarative intervention-scheme configs
+//!   compiled into hooks (an abstraction layer over the same hooks);
+//! * [`tlens::TlensLike`] — performs a real whole-model weight-format
+//!   conversion pass at load time (layernorm folding, writing-weight
+//!   recentering, [in,out]→[out,in] transposes), which is exactly why
+//!   TransformerLens setup is ~3× in the paper's Table 1;
+//! * [`petals`] — the Petals-style distributed swarm (Fig. 6c): layer
+//!   servers hold the blocks, the client holds embed/unembed, and every
+//!   client-side intervention ships hidden states across the WAN.
+//!
+//! All mechanisms are cross-validated to produce identical patching
+//! numerics (`rust/tests/baselines_integration.rs`); the benchmarks then
+//! measure only their architectural costs.
+
+pub mod hooks;
+pub mod petals;
+pub mod tlens;
+
+use anyhow::Result;
+
+use crate::models::workload::IoiBatch;
+use crate::tensor::{Range1, Tensor};
+
+/// A Table-1 "framework": something that can be set up for a model and
+/// then run the standard activation-patching workload.
+pub trait Framework: Sized {
+    fn name(&self) -> &'static str;
+
+    /// Cold setup: weights from disk, device upload, executable
+    /// compilation, plus any framework-specific preprocessing.
+    fn setup(artifacts: &std::path::Path, model: &str) -> Result<Self>;
+
+    /// The standard intervention workload: one batch of IOI examples,
+    /// source-row hidden state patched into the base row at `layer`,
+    /// returning per-example logit differences.
+    fn activation_patch(&self, batch: &IoiBatch, layer: usize) -> Result<Tensor>;
+}
+
+/// Shared patching recipe over interleaved rows
+/// `[src_0, base_0, src_1, base_1, ...]`: copy each source row's
+/// last-token hidden state at `layer` into its base row. Every framework
+/// funnels into this so numerics are identical by construction and only
+/// the mechanism differs.
+pub fn patch_rows(t: &mut Tensor, seq: usize) {
+    let rows = t.dims()[0];
+    let mut i = 0;
+    while i + 1 < rows {
+        let src = t.slice(&[Range1::one(i), Range1::one(seq - 1)]);
+        t.slice_assign(&[Range1::one(i + 1), Range1::one(seq - 1)], &src);
+        i += 2;
+    }
+}
+
+/// Per-example target-vs-foil logit diffs for the base rows of an
+/// interleaved batch.
+pub fn base_row_logit_diffs(logits: &Tensor, batch: &IoiBatch) -> Tensor {
+    let seq = batch.seq;
+    let vocab = *logits.dims().last().unwrap();
+    let data: Vec<f32> = batch
+        .examples
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let row = 2 * i + 1;
+            let base = row * seq * vocab + (seq - 1) * vocab;
+            logits.data()[base + e.target] - logits.data()[base + e.foil]
+        })
+        .collect();
+    Tensor::new(&[batch.len()], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patch_rows_copies_even_into_odd() {
+        let mut t = Tensor::iota(&[4, 3]);
+        let before = t.clone();
+        patch_rows(&mut t, 3);
+        // row 1 last element becomes row 0's, row 3 becomes row 2's
+        assert_eq!(t.at(&[1, 2]), before.at(&[0, 2]));
+        assert_eq!(t.at(&[3, 2]), before.at(&[2, 2]));
+        // non-last tokens untouched
+        assert_eq!(t.at(&[1, 0]), before.at(&[1, 0]));
+    }
+}

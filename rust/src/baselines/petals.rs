@@ -1,0 +1,133 @@
+//! Petals-like distributed inference (Borzunov et al. 2023), for the
+//! Fig. 6c comparison.
+//!
+//! Architecture (paper §3.3 + Fig. 5 right): transformer *blocks* live on
+//! swarm servers; the client holds the embedding and unembedding locally.
+//! Standard inference ships token embeddings up and final hidden states
+//! back. Crucially, Petals does **not** support server-side interventions:
+//! a client-side intervention at layer ℓ forces the swarm to return the
+//! layer-ℓ hidden state to the client, wait for the modified state, and
+//! resume — two extra WAN transfers of a full hidden tensor per
+//! intervention, which is exactly the cost NDIF's server-side intervention
+//! graphs avoid.
+//!
+//! The swarm's compute runs in-process on the shared runtime (the paper's
+//! private-instance comparison also used one machine); all client↔swarm
+//! payloads are charged to a [`NetSim`] link at their true byte sizes.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::models::ModelRunner;
+use crate::netsim::NetSim;
+use crate::runtime::DeviceTensor;
+use crate::tensor::Tensor;
+
+/// A private Petals-style swarm hosting one model's blocks.
+pub struct PetalsSwarm {
+    runner: Arc<ModelRunner>,
+    /// client ↔ swarm WAN (the paper measured ≈60 MB/s).
+    pub link: NetSim,
+}
+
+impl PetalsSwarm {
+    /// Start a private swarm: blocks preloaded server-side (as in a real
+    /// swarm, joining is cheap for clients).
+    pub fn start(artifacts: &Path, model: &str, link: NetSim) -> Result<PetalsSwarm> {
+        let runner = Arc::new(ModelRunner::load(artifacts, model)?);
+        Ok(PetalsSwarm { runner, link })
+    }
+
+    pub fn runner(&self) -> &Arc<ModelRunner> {
+        &self.runner
+    }
+
+    fn hidden_bytes(&self, batch: usize) -> usize {
+        self.runner.manifest.hidden_bytes(batch)
+    }
+
+    /// Client-side embedding (client holds wte/wpe).
+    fn client_embed(&self, tokens: &Tensor) -> Result<Tensor> {
+        let b = tokens.dims()[0];
+        let exe = self.runner.executable("embed", b)?;
+        let w = self.runner.weight_buffers("embed")?;
+        let td = self.runner.engine().upload(tokens)?;
+        let mut args: Vec<&DeviceTensor> = vec![&td];
+        args.extend(w.iter());
+        exe.run(&args, &self.runner.manifest.output_dims("embed", b))?
+            .download()
+    }
+
+    /// Server-side: run blocks `[from, to)` over a hidden state.
+    fn server_blocks(&self, x: &Tensor, from: usize, to: usize) -> Result<Tensor> {
+        let b = x.dims()[0];
+        let exe = self.runner.executable("layer", b)?;
+        let out_dims = self.runner.manifest.output_dims("layer", b);
+        let mut dev = self.runner.engine().upload(x)?;
+        for i in from..to {
+            let w = self.runner.weight_buffers(&format!("layer.{i}"))?;
+            let mut args: Vec<&DeviceTensor> = vec![&dev];
+            args.extend(w.iter());
+            dev = exe.run(&args, &out_dims)?;
+        }
+        dev.download()
+    }
+
+    /// Client-side unembedding.
+    fn client_lm_head(&self, x: &Tensor) -> Result<Tensor> {
+        let b = x.dims()[0];
+        let exe = self.runner.executable("lm_head", b)?;
+        let w = self.runner.weight_buffers("lm_head")?;
+        let xd = self.runner.engine().upload(x)?;
+        let mut args: Vec<&DeviceTensor> = vec![&xd];
+        args.extend(w.iter());
+        exe.run(&args, &self.runner.manifest.output_dims("lm_head", b))?
+            .download()
+    }
+
+    /// Standard remote inference: embeddings up, final hidden states
+    /// down, unembed locally. Returns the final hidden state (what the
+    /// paper's Fig. 6c "standard inference" comparison returns from both
+    /// systems for fairness).
+    pub fn infer_hidden(&self, tokens: &Tensor) -> Result<Tensor> {
+        let n = self.runner.manifest.n_layers;
+        let b = tokens.dims()[0];
+        let x = self.client_embed(tokens)?;
+        self.link.send(self.hidden_bytes(b)); // embeddings up
+        let h = self.server_blocks(&x, 0, n)?;
+        self.link.send(self.hidden_bytes(b)); // final hidden down
+        Ok(h)
+    }
+
+    /// Standard inference through to logits (unembedded client-side).
+    pub fn infer(&self, tokens: &Tensor) -> Result<Tensor> {
+        let h = self.infer_hidden(tokens)?;
+        self.client_lm_head(&h)
+    }
+
+    /// Client-side intervention at `layer`: the swarm pauses there, ships
+    /// the hidden state to the client, applies the client's modification,
+    /// and resumes — the extra two WAN hidden-state transfers that make
+    /// Petals interventions expensive (Fig. 6c).
+    pub fn patched_infer(
+        &self,
+        tokens: &Tensor,
+        layer: usize,
+        mut f: impl FnMut(&mut Tensor),
+    ) -> Result<Tensor> {
+        let n = self.runner.manifest.n_layers;
+        let b = tokens.dims()[0];
+        assert!(layer < n);
+        let x = self.client_embed(tokens)?;
+        self.link.send(self.hidden_bytes(b)); // embeddings up
+        let mut h = self.server_blocks(&x, 0, layer + 1)?;
+        self.link.send(self.hidden_bytes(b)); // hidden at ℓ down to client
+        f(&mut h); // client-side modification
+        self.link.send(self.hidden_bytes(b)); // modified hidden back up
+        let h = self.server_blocks(&h, layer + 1, n)?;
+        self.link.send(self.hidden_bytes(b)); // final hidden down
+        self.client_lm_head(&h) // metric computed client-side
+    }
+}

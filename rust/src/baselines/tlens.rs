@@ -1,0 +1,176 @@
+//! TransformerLens-like mechanism: weight-format standardization at load.
+//!
+//! The paper's Table 1 finds TransformerLens setup ≈3× slower than the
+//! other libraries and attributes it to "preprocessing steps to convert
+//! weights into a standardized format across different models" (§4 fn 3).
+//! We implement that preprocessing for real rather than sleeping:
+//!
+//! 1. **LayerNorm folding** (`fold_ln`): the LN gain is folded into the
+//!    following weight matrix (`W ← diag(g)·W`), and the gain reset to 1 —
+//!    TransformerLens's `fold_ln=True`;
+//! 2. **Writing-weight centering** (`center_writing_weights`): outputs of
+//!    matrices that write to the residual stream are mean-centered per
+//!    input row;
+//! 3. **Convention transposes**: HuggingFace's `[in, out]` weights are
+//!    rearranged to TL's `[out, in]` head-indexed layout and back (the
+//!    einsum-rearrange cost without keeping the layout, since our
+//!    executables expect the original convention).
+//!
+//! Folding LN gains would change numerics against an executable that also
+//! applies the gain, so after the measured conversion the *original*
+//! weights are what get uploaded — preserving cross-framework numeric
+//! equality while paying the true preprocessing cost, which is the
+//! quantity Table 1 measures.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::models::workload::IoiBatch;
+use crate::models::{ModelRunner, ModelWeights};
+use crate::tensor::Tensor;
+
+use super::{base_row_logit_diffs, patch_rows, Framework};
+
+/// One layer's standardized-format weights (the artifact of conversion).
+pub struct StandardizedLayer {
+    /// LN-folded attention weights, `[out, in]` convention.
+    pub wq_folded: Tensor,
+    pub wk_folded: Tensor,
+    pub wv_folded: Tensor,
+    /// Centered + transposed writing weights.
+    pub wo_centered: Tensor,
+    pub w2_centered: Tensor,
+    /// Folded MLP read-in.
+    pub w1_folded: Tensor,
+}
+
+/// Fold an LN gain vector into the rows of a following matrix:
+/// `W'[i, j] = g[i] · W[i, j]`.
+pub fn fold_gain(gain: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(gain.numel(), w.dims()[0]);
+    let (rows, cols) = (w.dims()[0], w.dims()[1]);
+    let mut out = w.clone();
+    for i in 0..rows {
+        let g = gain.data()[i];
+        for j in 0..cols {
+            let off = i * cols + j;
+            out.data_mut()[off] *= g;
+        }
+    }
+    out
+}
+
+/// Mean-center each input row's contribution to the residual stream:
+/// `W'[i, :] = W[i, :] - mean_j W[i, j]` (TL's center_writing_weights).
+pub fn center_writing(w: &Tensor) -> Tensor {
+    let (rows, cols) = (w.dims()[0], w.dims()[1]);
+    let mut out = w.clone();
+    for i in 0..rows {
+        let row = &w.data()[i * cols..(i + 1) * cols];
+        let mean: f32 = row.iter().sum::<f32>() / cols as f32;
+        for j in 0..cols {
+            out.data_mut()[i * cols + j] -= mean;
+        }
+    }
+    out
+}
+
+/// Perform the full standardization pass over a model's weights. The
+/// result is returned (and its cost is what Table 1's setup column sees),
+/// but the runner keeps the original convention the executables expect.
+pub fn standardize(weights: &ModelWeights, n_layers: usize) -> Vec<StandardizedLayer> {
+    (0..n_layers)
+        .map(|i| {
+            let w = &weights.modules[&format!("layer.{i}")];
+            let (ln1_g, wq, wk, wv, wo) = (&w[0], &w[2], &w[3], &w[4], &w[5]);
+            let (ln2_g, w1, w2) = (&w[7], &w[9], &w[11]);
+            StandardizedLayer {
+                // fold_ln + convention transpose (and back for parity)
+                wq_folded: fold_gain(ln1_g, wq).transpose2().transpose2(),
+                wk_folded: fold_gain(ln1_g, wk).transpose2().transpose2(),
+                wv_folded: fold_gain(ln1_g, wv).transpose2().transpose2(),
+                wo_centered: center_writing(wo).transpose2(),
+                w1_folded: fold_gain(ln2_g, w1),
+                w2_centered: center_writing(w2).transpose2(),
+            }
+        })
+        .collect()
+}
+
+/// TransformerLens-like framework state.
+pub struct TlensLike {
+    runner: ModelRunner,
+    /// The standardized weights (kept so the conversion isn't dead code —
+    /// TL exposes these as `blocks.*.attn.W_Q` etc.).
+    pub standardized: Vec<StandardizedLayer>,
+}
+
+impl TlensLike {
+    pub fn runner(&self) -> &ModelRunner {
+        &self.runner
+    }
+}
+
+impl Framework for TlensLike {
+    fn name(&self) -> &'static str {
+        "tlens"
+    }
+
+    fn setup(artifacts: &Path, model: &str) -> Result<TlensLike> {
+        let runner = ModelRunner::load_cold(artifacts, model)?;
+        // the distinguishing cost: whole-model weight standardization
+        let standardized = standardize(&runner.weights, runner.manifest.n_layers);
+        runner.precompile_forward()?;
+        Ok(TlensLike { runner, standardized })
+    }
+
+    fn activation_patch(&self, batch: &IoiBatch, layer: usize) -> Result<Tensor> {
+        // TL's run_with_hooks is the same closure-hook mechanism
+        let tokens = batch.interleaved_tokens();
+        let (padded, _) = self.runner.pad_tokens(&tokens)?;
+        let seq = self.runner.manifest.seq;
+        struct H {
+            point: String,
+            seq: usize,
+        }
+        impl crate::models::Hooks for H {
+            fn wants(&self, p: &str) -> bool {
+                p == self.point
+            }
+            fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+                patch_rows(t, self.seq);
+                true
+            }
+        }
+        let logits = self.runner.forward(
+            &padded,
+            &mut H { point: format!("layer.{layer}"), seq },
+        )?;
+        Ok(base_row_logit_diffs(&logits, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_gain_scales_rows() {
+        let g = Tensor::new(&[2], vec![2.0, 3.0]);
+        let w = Tensor::iota(&[2, 2]);
+        let f = fold_gain(&g, &w);
+        assert_eq!(f.data(), &[0.0, 2.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn center_writing_zeroes_row_means() {
+        let w = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 10.0, 10.0, 10.0]);
+        let c = center_writing(&w);
+        for i in 0..2 {
+            let row = &c.data()[i * 3..(i + 1) * 3];
+            let mean: f32 = row.iter().sum::<f32>() / 3.0;
+            assert!(mean.abs() < 1e-6);
+        }
+    }
+}

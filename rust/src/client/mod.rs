@@ -1,0 +1,277 @@
+//! The client tracing API — nnscope's analog of NNsight (§3.2).
+//!
+//! A [`Trace`] is a deferred-execution builder: operations on module
+//! activations record intervention-graph nodes instead of computing, and
+//! nothing touches the model until the trace is executed — locally against
+//! a [`ModelRunner`], or remotely by serializing the graph to the NDIF
+//! server ([`remote`]). `save()` marks values to be returned (the
+//! LockProtocol), mirroring the `.save()` of the paper's API.
+//!
+//! [`scan`] provides the FakeTensor-style shape pre-flight (§B.1
+//! "Scanning and Validation"): node shapes are inferred from the model
+//! manifest without executing anything, catching shape bugs before the
+//! forward pass runs.
+//!
+//! ```no_run
+//! # use nnscope::client::Trace;
+//! # use nnscope::models::{ModelRunner, artifacts_dir};
+//! # use nnscope::tensor::{Range1, Tensor};
+//! let runner = ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap();
+//! let tokens = Tensor::zeros(&[1, 16]);
+//! let mut tr = Trace::new("tiny-sim", &tokens);
+//! let h = tr.output("layer.0");
+//! let patched = tr.fill(h, &[Range1::one(0), Range1::one(15)], 1.0);
+//! tr.set_output("layer.0", patched);
+//! let logits = tr.output("lm_head");
+//! let saved = tr.save(logits);
+//! let res = tr.run_local(&runner).unwrap();
+//! let _logits = res.get(saved);
+//! ```
+
+pub mod remote;
+pub mod scan;
+pub mod session;
+
+pub use session::Session;
+
+use anyhow::Result;
+
+use crate::graph::{GraphResult, InterventionGraph, NodeId, Op, Port};
+use crate::interp;
+use crate::models::ModelRunner;
+use crate::tensor::{Range1, Tensor};
+
+/// Handle to a deferred value inside a trace (a proxy, in NNsight terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeRef(pub(crate) NodeId);
+
+/// Handle to a `.save()`d value, redeemable against a [`TraceResult`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SavedRef(pub(crate) NodeId);
+
+/// A tracing context: builds an intervention graph via deferred ops.
+pub struct Trace {
+    graph: InterventionGraph,
+}
+
+impl Trace {
+    /// Start a trace for `model` over `[batch, seq]` token rows.
+    pub fn new(model: &str, tokens: &Tensor) -> Trace {
+        assert_eq!(tokens.rank(), 2, "tokens must be [batch, seq]");
+        let mut graph = InterventionGraph::new(model);
+        graph.batch = tokens.dims()[0];
+        graph.tokens = tokens.data().to_vec();
+        Trace { graph }
+    }
+
+    /// Request a sharded (tensor-parallel) forward pass.
+    pub fn shards(&mut self, s: usize) -> &mut Self {
+        self.graph.shards = s.max(1);
+        self
+    }
+
+    /// Provide per-example target token ids (enables `grad`).
+    pub fn targets(&mut self, ids: &[f32]) -> &mut Self {
+        self.graph.targets = Some(ids.to_vec());
+        self
+    }
+
+    /// Restrict this trace to a row slice of a shared batch (parallel
+    /// co-tenancy; normally set by the scheduler, not end users).
+    pub fn batch_group(&mut self, offset: usize, rows: usize) -> &mut Self {
+        self.graph.batch_group = Some((offset, rows));
+        self
+    }
+
+    // ---- attachment points -------------------------------------------------
+
+    /// Proxy for a module's output activation.
+    pub fn output(&mut self, module: &str) -> NodeRef {
+        NodeRef(self.graph.push(Op::Getter { module: module.into(), port: Port::Output }))
+    }
+
+    /// Proxy for a module's input activation (the previous module's
+    /// output, as in NNsight's `.input`).
+    pub fn input(&mut self, module: &str) -> NodeRef {
+        NodeRef(self.graph.push(Op::Getter { module: module.into(), port: Port::Input }))
+    }
+
+    /// Proxy for ∂loss/∂(module output); requires [`Trace::targets`].
+    pub fn grad(&mut self, module: &str) -> NodeRef {
+        NodeRef(self.graph.push(Op::Grad { module: module.into() }))
+    }
+
+    /// Replace a module's output with a computed value.
+    pub fn set_output(&mut self, module: &str, v: NodeRef) {
+        self.graph
+            .push(Op::Setter { module: module.into(), port: Port::Output, arg: v.0 });
+    }
+
+    /// Replace a module's input (= previous module's output).
+    pub fn set_input(&mut self, module: &str, v: NodeRef) {
+        self.graph
+            .push(Op::Setter { module: module.into(), port: Port::Input, arg: v.0 });
+    }
+
+    // ---- ops ----------------------------------------------------------------
+
+    pub fn constant(&mut self, t: &Tensor) -> NodeRef {
+        NodeRef(self.graph.push(Op::Const {
+            dims: t.dims().to_vec(),
+            data: t.data().to_vec(),
+        }))
+    }
+
+    pub fn slice(&mut self, x: NodeRef, ranges: &[Range1]) -> NodeRef {
+        NodeRef(self.graph.push(Op::Slice { arg: x.0, ranges: ranges.to_vec() }))
+    }
+
+    pub fn assign(&mut self, dst: NodeRef, ranges: &[Range1], src: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Assign { dst: dst.0, ranges: ranges.to_vec(), src: src.0 }))
+    }
+
+    pub fn fill(&mut self, dst: NodeRef, ranges: &[Range1], value: f32) -> NodeRef {
+        NodeRef(self.graph.push(Op::Fill { dst: dst.0, ranges: ranges.to_vec(), value }))
+    }
+
+    pub fn add(&mut self, a: NodeRef, b: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Add { a: a.0, b: b.0 }))
+    }
+
+    pub fn sub(&mut self, a: NodeRef, b: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Sub { a: a.0, b: b.0 }))
+    }
+
+    pub fn mul(&mut self, a: NodeRef, b: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Mul { a: a.0, b: b.0 }))
+    }
+
+    pub fn matmul(&mut self, a: NodeRef, b: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Matmul { a: a.0, b: b.0 }))
+    }
+
+    pub fn scale(&mut self, x: NodeRef, factor: f32) -> NodeRef {
+        NodeRef(self.graph.push(Op::Scale { arg: x.0, factor }))
+    }
+
+    pub fn gelu(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Gelu { arg: x.0 }))
+    }
+
+    pub fn softmax(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Softmax { arg: x.0 }))
+    }
+
+    pub fn argmax(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Argmax { arg: x.0 }))
+    }
+
+    pub fn mean(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Mean { arg: x.0 }))
+    }
+
+    pub fn sum(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Sum { arg: x.0 }))
+    }
+
+    /// The standard patching metric (server-side; only the scalar per row
+    /// crosses the wire on remote execution — the Fig. 6c advantage).
+    pub fn logit_diff(&mut self, logits: NodeRef, target: usize, foil: usize) -> NodeRef {
+        NodeRef(self.graph.push(Op::LogitDiff { logits: logits.0, target, foil }))
+    }
+
+    /// LockProtocol: make this value available after execution.
+    pub fn save(&mut self, x: NodeRef) -> SavedRef {
+        SavedRef(self.graph.push(Op::Save { arg: x.0 }))
+    }
+
+    // ---- execution ----------------------------------------------------------
+
+    /// Pre-flight shape check (FakeTensor analog); returns per-node shapes.
+    pub fn scan(&self, manifest: &crate::runtime::Manifest) -> Result<Vec<Vec<usize>>> {
+        scan::scan(&self.graph, manifest)
+    }
+
+    /// Execute locally against a loaded model.
+    pub fn run_local(self, runner: &ModelRunner) -> Result<TraceResult> {
+        let result = interp::execute(&self.graph, runner)?;
+        Ok(TraceResult { result })
+    }
+
+    /// Execute remotely against an NDIF server.
+    pub fn run_remote(self, client: &remote::NdifClient) -> Result<TraceResult> {
+        let result = client.execute(&self.graph)?;
+        Ok(TraceResult { result })
+    }
+
+    /// The underlying graph (for the scheduler / tests / serialization).
+    pub fn into_graph(self) -> InterventionGraph {
+        self.graph
+    }
+
+    pub fn graph(&self) -> &InterventionGraph {
+        &self.graph
+    }
+}
+
+/// Saved values from an executed trace.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    result: GraphResult,
+}
+
+impl TraceResult {
+    pub fn from_graph_result(result: GraphResult) -> TraceResult {
+        TraceResult { result }
+    }
+
+    /// Get a saved value; panics if the handle is not from this trace.
+    pub fn get(&self, s: SavedRef) -> &Tensor {
+        self.result
+            .get(s.0)
+            .expect("saved value missing from result")
+    }
+
+    pub fn try_get(&self, s: SavedRef) -> Option<&Tensor> {
+        self.result.get(s.0)
+    }
+
+    pub fn inner(&self) -> &GraphResult {
+        &self.result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_patching_graph() {
+        let tokens = Tensor::zeros(&[2, 16]);
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        let src = tr.slice(h, &[Range1::one(0)]);
+        let patched = tr.assign(h, &[Range1::one(1)], src);
+        tr.set_output("layer.0", patched);
+        let logits = tr.output("lm_head");
+        let ld = tr.logit_diff(logits, 3, 5);
+        let _s = tr.save(ld);
+        let g = tr.into_graph();
+        assert_eq!(g.batch, 2);
+        assert_eq!(g.nodes.len(), 7);
+        assert_eq!(g.setter_points(), vec!["layer.0"]);
+        assert_eq!(g.saves().len(), 1);
+    }
+
+    #[test]
+    fn trace_serializes_and_deserializes() {
+        let tokens = Tensor::zeros(&[1, 16]);
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.1");
+        tr.save(h);
+        let g = tr.into_graph();
+        let j = crate::graph::serde::to_json(&g);
+        let back = crate::graph::serde::from_json(&j).unwrap();
+        assert_eq!(back.nodes, g.nodes);
+    }
+}

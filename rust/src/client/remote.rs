@@ -1,0 +1,172 @@
+//! Remote execution transport: the client side of the NDIF protocol.
+//!
+//! Adding `remote=True` in NNsight sends the experiment to NDIF; here,
+//! [`NdifClient::execute`] serializes the intervention graph, POSTs it,
+//! long-polls the result, and deserializes the saved values. All payload
+//! bytes are charged against a [`NetSim`] link so benchmarks measure the
+//! paper's WAN conditions on loopback hardware.
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{serde as gserde, GraphResult, InterventionGraph};
+use crate::json::parse;
+use crate::netsim::NetSim;
+use crate::server::http;
+
+/// Client handle to an NDIF server.
+#[derive(Clone)]
+pub struct NdifClient {
+    addr: SocketAddr,
+    /// Simulated WAN between this client and the service.
+    pub link: NetSim,
+    /// Auth token presented for gated models.
+    pub token: Option<String>,
+    /// Long-poll bound per result fetch.
+    pub poll_timeout: Duration,
+}
+
+impl NdifClient {
+    pub fn new(addr: SocketAddr) -> NdifClient {
+        NdifClient {
+            addr,
+            link: NetSim::ideal(),
+            token: None,
+            poll_timeout: Duration::from_secs(300),
+        }
+    }
+
+    pub fn with_link(mut self, link: NetSim) -> NdifClient {
+        self.link = link;
+        self
+    }
+
+    pub fn with_token(mut self, token: &str) -> NdifClient {
+        self.token = Some(token.to_string());
+        self
+    }
+
+    fn headers(&self) -> Vec<(&str, &str)> {
+        let mut h = vec![("Content-Type", "application/json")];
+        if let Some(t) = &self.token {
+            h.push(("x-ndif-auth", t.as_str()));
+        }
+        h
+    }
+
+    /// Health check.
+    pub fn health(&self) -> Result<bool> {
+        let (status, _) = http::get(self.addr, "/health")?;
+        Ok(status == 200)
+    }
+
+    /// Fetch hosted model metadata — the NDIF "setup" step measured by
+    /// Fig. 6a (no weights move; this is why NDIF setup time is flat).
+    pub fn models(&self) -> Result<Vec<String>> {
+        self.link.send(64); // request
+        let (status, body) = http::get(self.addr, "/v1/models")?;
+        self.link.send(body.len());
+        if status != 200 {
+            return Err(anyhow!("models endpoint returned {status}"));
+        }
+        let j = parse(std::str::from_utf8(&body)?)?;
+        Ok(j.get("models")
+            .as_array()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|m| m.get("name").as_str().map(String::from))
+            .collect())
+    }
+
+    /// Execute one intervention graph remotely.
+    pub fn execute(&self, graph: &InterventionGraph) -> Result<GraphResult> {
+        let payload = gserde::to_json(graph).to_string();
+        // upstream: the graph + tokens
+        self.link.send(payload.len());
+        let (status, body) = http::http_request(
+            self.addr,
+            "POST",
+            "/v1/trace",
+            payload.as_bytes(),
+            &self.headers(),
+        )?;
+        if status != 202 {
+            return Err(anyhow!(
+                "trace submit failed ({status}): {}",
+                String::from_utf8_lossy(&body)
+            ));
+        }
+        let j = parse(std::str::from_utf8(&body)?)?;
+        let id = j
+            .get("id")
+            .as_str()
+            .ok_or_else(|| anyhow!("submit response missing id"))?
+            .to_string();
+        self.fetch_result(&id)
+    }
+
+    /// Long-poll a result id until completion.
+    pub fn fetch_result(&self, id: &str) -> Result<GraphResult> {
+        let deadline = std::time::Instant::now() + self.poll_timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Err(anyhow!("result {id} timed out"));
+            }
+            let path = format!(
+                "/v1/result/{id}?timeout_ms={}",
+                remaining.as_millis().min(30_000)
+            );
+            let (status, body) = http::get(self.addr, &path)?;
+            match status {
+                200 => {
+                    // downstream: only the saved values (the Fig. 6c
+                    // server-side-intervention advantage)
+                    self.link.send(body.len());
+                    let j = parse(std::str::from_utf8(&body)?)?;
+                    return gserde::result_from_json(&j);
+                }
+                202 => continue,
+                500 => {
+                    return Err(anyhow!(
+                        "remote execution failed: {}",
+                        String::from_utf8_lossy(&body)
+                    ))
+                }
+                other => return Err(anyhow!("result fetch returned {other}")),
+            }
+        }
+    }
+
+    /// Execute a session: multiple traces in order, one request, one
+    /// bundled response (§B.1 "Remote Execution and Session").
+    pub fn execute_session(&self, graphs: &[InterventionGraph]) -> Result<Vec<GraphResult>> {
+        let traces: Vec<crate::json::Json> = graphs.iter().map(gserde::to_json).collect();
+        let payload =
+            crate::json::Json::obj(vec![("traces", crate::json::Json::Array(traces))]).to_string();
+        self.link.send(payload.len());
+        let (status, body) = http::http_request(
+            self.addr,
+            "POST",
+            "/v1/session",
+            payload.as_bytes(),
+            &self.headers(),
+        )?;
+        self.link.send(body.len());
+        if status != 200 {
+            return Err(anyhow!(
+                "session failed ({status}): {}",
+                String::from_utf8_lossy(&body)
+            ));
+        }
+        let j = parse(std::str::from_utf8(&body)?)?;
+        j.get("results")
+            .as_array()
+            .ok_or_else(|| anyhow!("session response missing results"))?
+            .iter()
+            .map(gserde::result_from_json)
+            .collect()
+    }
+}

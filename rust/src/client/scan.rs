@@ -1,0 +1,213 @@
+//! Shape pre-flight ("scanning", §B.1): infer every node's shape from the
+//! model manifest without executing anything — the FakeTensor analog.
+//! Catches slice-out-of-bounds, broadcast mismatches, and contraction
+//! errors before a forward pass (local or remote) is spent.
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{InterventionGraph, Op, Port};
+use crate::runtime::Manifest;
+use crate::tensor::{Range1, Shape};
+
+fn slice_dims(dims: &[usize], ranges: &[Range1]) -> Result<Vec<usize>> {
+    if ranges.len() > dims.len() {
+        return Err(anyhow!("slice rank {} > tensor rank {}", ranges.len(), dims.len()));
+    }
+    let mut out = dims.to_vec();
+    for (i, r) in ranges.iter().enumerate() {
+        let stop = if r.stop == usize::MAX { dims[i] } else { r.stop };
+        if r.start > stop || stop > dims[i] {
+            return Err(anyhow!(
+                "slice [{}, {stop}) out of bounds for dim {i} (size {})",
+                r.start,
+                dims[i]
+            ));
+        }
+        out[i] = stop - r.start;
+    }
+    Ok(out)
+}
+
+/// Infer all node shapes; errors mirror what execution would hit.
+pub fn scan(g: &InterventionGraph, manifest: &Manifest) -> Result<Vec<Vec<usize>>> {
+    let fseq = manifest.forward_sequence();
+    crate::graph::validate::validate(g, &fseq)?;
+    let rows = g.batch_group.map(|(_, r)| r).unwrap_or(g.batch.max(1));
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.nodes.len());
+
+    let point_dims = |module: &str, port: Port| -> Result<Vec<usize>> {
+        // input of module k = output of module k-1
+        let point = match port {
+            Port::Output => module.to_string(),
+            Port::Input => {
+                let idx = fseq
+                    .iter()
+                    .position(|m| m == module)
+                    .ok_or_else(|| anyhow!("unknown module {module}"))?;
+                if idx == 0 {
+                    return Err(anyhow!("module {module} has no observable input"));
+                }
+                fseq[idx - 1].clone()
+            }
+        };
+        Ok(manifest.output_dims(Manifest::module_kind(&point), rows))
+    };
+
+    for n in &g.nodes {
+        let dims: Vec<usize> = match &n.op {
+            Op::Getter { module, port } => point_dims(module, *port)?,
+            Op::Setter { module, port, arg } => {
+                let expect = point_dims(module, *port)?;
+                let got = &shapes[*arg];
+                if got != &expect {
+                    return Err(anyhow!(
+                        "setter at {module}: value shape {got:?} != activation shape {expect:?}"
+                    ));
+                }
+                expect
+            }
+            Op::Grad { module } => point_dims(module, Port::Output)?,
+            Op::Const { dims, .. } => dims.clone(),
+            Op::Slice { arg, ranges } => slice_dims(&shapes[*arg], ranges)?,
+            Op::Assign { dst, ranges, src } => {
+                let want = slice_dims(&shapes[*dst], ranges)?;
+                if shapes[*src] != want {
+                    return Err(anyhow!(
+                        "assign: src shape {:?} != slice shape {want:?}",
+                        shapes[*src]
+                    ));
+                }
+                shapes[*dst].clone()
+            }
+            Op::Fill { dst, ranges, .. } => {
+                slice_dims(&shapes[*dst], ranges)?;
+                shapes[*dst].clone()
+            }
+            Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } => {
+                Shape::broadcast(&shapes[*a], &shapes[*b]).ok_or_else(|| {
+                    anyhow!("broadcast {:?} vs {:?}", shapes[*a], shapes[*b])
+                })?
+            }
+            Op::Matmul { a, b } => {
+                let (sa, sb) = (&shapes[*a], &shapes[*b]);
+                if sb.len() != 2 {
+                    return Err(anyhow!("matmul rhs must be 2-D, got {sb:?}"));
+                }
+                let k = *sa.last().ok_or_else(|| anyhow!("matmul lhs is scalar"))?;
+                if k != sb[0] {
+                    return Err(anyhow!("matmul contraction {k} vs {}", sb[0]));
+                }
+                let mut out = sa.clone();
+                *out.last_mut().unwrap() = sb[1];
+                out
+            }
+            Op::Scale { arg, .. } | Op::Gelu { arg } | Op::Softmax { arg } | Op::Save { arg } => {
+                shapes[*arg].clone()
+            }
+            Op::Argmax { arg } => {
+                let s = &shapes[*arg];
+                if s.is_empty() {
+                    return Err(anyhow!("argmax of scalar"));
+                }
+                s[..s.len() - 1].to_vec()
+            }
+            Op::Mean { arg } | Op::Sum { arg } => {
+                let _ = &shapes[*arg];
+                vec![]
+            }
+            Op::LogitDiff { logits, target, foil } => {
+                let s = &shapes[*logits];
+                if s.len() < 2 {
+                    return Err(anyhow!("logit_diff needs [.., seq, vocab], got {s:?}"));
+                }
+                let vocab = *s.last().unwrap();
+                if *target >= vocab || *foil >= vocab {
+                    return Err(anyhow!("logit_diff ids out of vocab {vocab}"));
+                }
+                let batch: usize = s[..s.len() - 2].iter().product::<usize>().max(1);
+                vec![batch]
+            }
+        };
+        shapes.push(dims);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Trace;
+    use crate::models::artifacts_dir;
+    use crate::tensor::Tensor;
+
+    fn manifest() -> Manifest {
+        Manifest::load(&artifacts_dir(), "tiny-sim").unwrap()
+    }
+
+    #[test]
+    fn scan_infers_activation_shapes() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        let logits = tr.output("lm_head");
+        let ld = tr.logit_diff(logits, 3, 5);
+        tr.save(h);
+        tr.save(ld);
+        let shapes = tr.scan(&m).unwrap();
+        assert_eq!(shapes[h.0], vec![1, 16, 32]);
+        assert_eq!(shapes[logits.0], vec![1, 16, 64]);
+        assert_eq!(shapes[ld.0], vec![1]);
+    }
+
+    #[test]
+    fn scan_rejects_out_of_bounds_slice() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        let bad = tr.slice(h, &[Range1::new(0, 99)]);
+        tr.save(bad);
+        assert!(tr.scan(&m).is_err());
+    }
+
+    #[test]
+    fn scan_rejects_setter_shape_mismatch() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let c = tr.constant(&Tensor::zeros(&[1, 2, 3]));
+        tr.set_output("layer.0", c);
+        let err = tr.scan(&m).unwrap_err().to_string();
+        assert!(err.contains("setter"), "{err}");
+    }
+
+    #[test]
+    fn scan_rejects_bad_logit_diff_ids() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let logits = tr.output("lm_head");
+        let ld = tr.logit_diff(logits, 9999, 0);
+        tr.save(ld);
+        assert!(tr.scan(&m).is_err());
+    }
+
+    #[test]
+    fn scan_respects_batch_group_rows() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[4, 16]));
+        tr.batch_group(2, 2);
+        let h = tr.output("layer.0");
+        tr.save(h);
+        let shapes = tr.scan(&m).unwrap();
+        assert_eq!(shapes[h.0], vec![2, 16, 32]);
+    }
+
+    #[test]
+    fn scan_rejects_matmul_mismatch() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0"); // [1,16,32]
+        let w = tr.constant(&Tensor::zeros(&[7, 5]));
+        let bad = tr.matmul(h, w);
+        tr.save(bad);
+        assert!(tr.scan(&m).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Sessions: multiple tracing contexts executed in order (§B.1 "Remote
+//! Execution and Session").
+//!
+//! A [`Session`] bundles several traces so that remote execution costs one
+//! request instead of N round trips — the paper's mechanism for iterative
+//! experiments (multi-pass probing, LoRA-style loops). Values cannot yet
+//! flow *between* traces on the server (that requires remote parameter
+//! state, paper Code Example 5); each trace's saved values return to the
+//! client, which can feed them into the next trace as constants before
+//! submission — the builder supports this via deferred construction.
+
+use anyhow::Result;
+
+use crate::graph::InterventionGraph;
+use crate::models::ModelRunner;
+
+use super::remote::NdifClient;
+use super::{Trace, TraceResult};
+
+/// An ordered bundle of traces executed together.
+#[derive(Default)]
+pub struct Session {
+    graphs: Vec<InterventionGraph>,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// Add a completed trace to the session; returns its index.
+    pub fn add(&mut self, trace: Trace) -> usize {
+        self.graphs.push(trace.into_graph());
+        self.graphs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+
+    /// Execute all traces locally, in order.
+    pub fn run_local(self, runner: &ModelRunner) -> Result<Vec<TraceResult>> {
+        self.graphs
+            .iter()
+            .map(|g| Ok(TraceResult::from_graph_result(crate::interp::execute(g, runner)?)))
+            .collect()
+    }
+
+    /// Execute all traces remotely as one bundled request.
+    pub fn run_remote(self, client: &NdifClient) -> Result<Vec<TraceResult>> {
+        Ok(client
+            .execute_session(&self.graphs)?
+            .into_iter()
+            .map(TraceResult::from_graph_result)
+            .collect())
+    }
+
+    /// Total wire bytes if submitted remotely (for overhead accounting).
+    pub fn wire_bytes(&self) -> usize {
+        self.graphs.iter().map(|g| g.wire_bytes()).sum()
+    }
+}

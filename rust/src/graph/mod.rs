@@ -1,0 +1,172 @@
+//! The intervention graph — the paper's core architectural contribution.
+//!
+//! An [`InterventionGraph`] is a portable, JSON-serializable description of
+//! an experiment on a model's internals: extra computation (apply nodes)
+//! attached to the model's forward pass via getter edges (read a module
+//! activation) and setter edges (write one back). Graphs are built by the
+//! [`crate::client`] tracing API, validated ([`validate`]), serialized
+//! ([`serde`]), optionally transmitted to an NDIF server, and interleaved
+//! with model execution by the [`crate::interp`] executor.
+
+pub mod node;
+pub mod serde;
+pub mod validate;
+
+pub use node::{Node, NodeId, Op, Port};
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// A complete intervention graph: topologically-ordered apply nodes plus
+/// the request context (model, input tokens, optional grad targets, and
+/// the batch group used for parallel co-tenancy).
+#[derive(Clone, Debug, Default)]
+pub struct InterventionGraph {
+    /// Target model name.
+    pub model: String,
+    /// Input token rows, flattened `[batch * seq]` (shaped by the model's
+    /// seq); may be empty when merged into a co-tenant batch.
+    pub tokens: Vec<f32>,
+    /// Number of token rows.
+    pub batch: usize,
+    /// Nodes in topological order: `node.op.deps()` always reference
+    /// earlier nodes (enforced by the builder; checked by the validator).
+    pub nodes: Vec<Node>,
+    /// Per-example grad targets (token ids), required by `Op::Grad`.
+    pub targets: Option<Vec<f32>>,
+    /// `(row_offset, rows)` of this user's slice within a merged co-tenant
+    /// batch; `None` for a standalone request (offset 0, all rows).
+    pub batch_group: Option<(usize, usize)>,
+    /// How many shards to run the forward pass across (1 = unsharded).
+    pub shards: usize,
+}
+
+impl InterventionGraph {
+    pub fn new(model: &str) -> InterventionGraph {
+        InterventionGraph { model: model.to_string(), shards: 1, ..Default::default() }
+    }
+
+    /// Append a node; returns its id. Panics if any dep is a forward
+    /// reference (builder bug) — the wire-format validator reports the
+    /// same condition as an error for untrusted graphs.
+    pub fn push(&mut self, op: Op) -> NodeId {
+        let id = self.nodes.len();
+        for d in op.deps() {
+            assert!(d < id, "forward reference {d} from node {id}");
+        }
+        self.nodes.push(Node { id, op });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Ids of all Save nodes (the values returned to the user).
+    pub fn saves(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Save { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Module points read by getters.
+    pub fn getter_points(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Getter { module, .. } => Some(module.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Module points written by setters.
+    pub fn setter_points(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Setter { module, .. } => Some(module.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Module points whose gradients are requested.
+    pub fn grad_points(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Grad { module } => Some(module.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Listener counts: for each node, how many later nodes consume it.
+    /// The executor frees a value when its remaining listeners reach zero
+    /// (§B.1 "when a Node's remaining listeners reaches zero … its memory
+    /// [is] freed immediately"); Save nodes lock their dep.
+    pub fn listener_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for d in n.op.deps() {
+                counts[d] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Approximate serialized payload size in bytes (netsim accounting).
+    pub fn wire_bytes(&self) -> usize {
+        serde::to_json(self).to_string().len()
+    }
+}
+
+/// The result of executing an intervention graph: saved values keyed by
+/// node id.
+#[derive(Clone, Debug, Default)]
+pub struct GraphResult {
+    pub values: BTreeMap<NodeId, Tensor>,
+}
+
+impl GraphResult {
+    pub fn get(&self, id: NodeId) -> Option<&Tensor> {
+        self.values.get(&id)
+    }
+
+    /// Approximate serialized size (netsim accounting for the download).
+    pub fn wire_bytes(&self) -> usize {
+        16 + self
+            .values
+            .values()
+            .map(|t| 32 + t.numel() * 16 / 3) // b64-packed f32 ≈ 5.33 B/val
+            .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_listeners() {
+        let mut g = InterventionGraph::new("tiny-sim");
+        let a = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let b = g.push(Op::Scale { arg: a, factor: 2.0 });
+        let c = g.push(Op::Add { a, b });
+        let _s = g.push(Op::Save { arg: c });
+        assert_eq!(g.listener_counts(), vec![2, 1, 1, 0]);
+        assert_eq!(g.saves(), vec![3]);
+        assert_eq!(g.getter_points(), vec!["layer.0"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_reference_panics() {
+        let mut g = InterventionGraph::new("m");
+        g.push(Op::Scale { arg: 5, factor: 1.0 });
+    }
+}

@@ -1,0 +1,153 @@
+//! Intervention-graph nodes.
+//!
+//! In the paper's formalism (§3.1) an intervention component C′ is a
+//! computation graph of *apply nodes* (operations) and *variable nodes*
+//! (their results), attached to the model's computation graph C by
+//! *getter* edges (C → C′) and *setter* edges (C′ → C). In this IR each
+//! [`Node`] is an apply node whose single output is its implicit variable
+//! node (the many-to-one form; Appendix E of the paper shows the
+//! equivalence with Theano's many-to-many form). Getter/Setter ops carry
+//! the attachment points.
+
+use crate::tensor::Range1;
+
+/// Node identifier. Construction keeps graphs topologically ordered:
+/// arguments always reference lower ids.
+pub type NodeId = usize;
+
+/// Which side of a module a Getter/Setter attaches to. `Input` of module
+/// `layer.i` is the same variable node as `Output` of the previous module
+/// in the sequence (our modules are layer-granular), but the distinction
+/// is kept for API fidelity with NNsight's `.input`/`.output`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Port {
+    Input,
+    Output,
+}
+
+/// A slice specification used by Slice/Assign/Fill ops.
+pub type Ranges = Vec<Range1>;
+
+/// Operations. Every op produces exactly one value (tensor or scalar
+/// tensor). `arg`/`a`/`b` are dependencies (edges from their variable
+/// nodes into this apply node).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Read a module activation (getter edge from C into C′).
+    Getter { module: String, port: Port },
+    /// Write a value back into a module activation, replacing rows/slices
+    /// (setter edge from C′ into C). Produces the written value.
+    Setter { module: String, port: Port, arg: NodeId },
+    /// Gradient of the request loss w.r.t. a module's output
+    /// (GradProtocol; requires the request to carry targets).
+    Grad { module: String },
+    /// A literal tensor shipped with the graph.
+    Const { dims: Vec<usize>, data: Vec<f32> },
+    /// Multi-dimensional slice.
+    Slice { arg: NodeId, ranges: Ranges },
+    /// Functional slice-assign: `dst` with `src` written at `ranges`.
+    Assign { dst: NodeId, ranges: Ranges, src: NodeId },
+    /// Functional fill: `dst` with `ranges` set to `value` (ablation).
+    Fill { dst: NodeId, ranges: Ranges, value: f32 },
+    Add { a: NodeId, b: NodeId },
+    Sub { a: NodeId, b: NodeId },
+    Mul { a: NodeId, b: NodeId },
+    Scale { arg: NodeId, factor: f32 },
+    Matmul { a: NodeId, b: NodeId },
+    Gelu { arg: NodeId },
+    Softmax { arg: NodeId },
+    Argmax { arg: NodeId },
+    Mean { arg: NodeId },
+    Sum { arg: NodeId },
+    /// The standard patching metric on last-token logits.
+    LogitDiff { logits: NodeId, target: usize, foil: usize },
+    /// LockProtocol: pin the value for return to the user (`.save()`).
+    Save { arg: NodeId },
+}
+
+impl Op {
+    /// Dependency node ids of this op (edges into this apply node).
+    pub fn deps(&self) -> Vec<NodeId> {
+        match self {
+            Op::Getter { .. } | Op::Grad { .. } | Op::Const { .. } => vec![],
+            Op::Setter { arg, .. }
+            | Op::Slice { arg, .. }
+            | Op::Scale { arg, .. }
+            | Op::Gelu { arg }
+            | Op::Softmax { arg }
+            | Op::Argmax { arg }
+            | Op::Mean { arg }
+            | Op::Sum { arg }
+            | Op::Save { arg } => vec![*arg],
+            Op::Fill { dst, .. } => vec![*dst],
+            Op::Assign { dst, src, .. } => vec![*dst, *src],
+            Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Matmul { a, b } => {
+                vec![*a, *b]
+            }
+            Op::LogitDiff { logits, .. } => vec![*logits],
+        }
+    }
+
+    /// The wire-format tag.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Op::Getter { .. } => "getter",
+            Op::Setter { .. } => "setter",
+            Op::Grad { .. } => "grad",
+            Op::Const { .. } => "const",
+            Op::Slice { .. } => "slice",
+            Op::Assign { .. } => "assign",
+            Op::Fill { .. } => "fill",
+            Op::Add { .. } => "add",
+            Op::Sub { .. } => "sub",
+            Op::Mul { .. } => "mul",
+            Op::Scale { .. } => "scale",
+            Op::Matmul { .. } => "matmul",
+            Op::Gelu { .. } => "gelu",
+            Op::Softmax { .. } => "softmax",
+            Op::Argmax { .. } => "argmax",
+            Op::Mean { .. } => "mean",
+            Op::Sum { .. } => "sum",
+            Op::LogitDiff { .. } => "logit_diff",
+            Op::Save { .. } => "save",
+        }
+    }
+}
+
+/// One apply node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deps_extraction() {
+        assert!(Op::Getter { module: "layer.0".into(), port: Port::Output }
+            .deps()
+            .is_empty());
+        assert_eq!(Op::Add { a: 1, b: 2 }.deps(), vec![1, 2]);
+        assert_eq!(
+            Op::Assign { dst: 3, ranges: vec![], src: 5 }.deps(),
+            vec![3, 5]
+        );
+        assert_eq!(Op::Save { arg: 7 }.deps(), vec![7]);
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        let ops = [
+            Op::Getter { module: "m".into(), port: Port::Output },
+            Op::Setter { module: "m".into(), port: Port::Output, arg: 0 },
+            Op::Add { a: 0, b: 0 },
+            Op::Save { arg: 0 },
+            Op::LogitDiff { logits: 0, target: 0, foil: 1 },
+        ];
+        let tags: std::collections::BTreeSet<_> = ops.iter().map(|o| o.tag()).collect();
+        assert_eq!(tags.len(), ops.len());
+    }
+}

@@ -1,0 +1,453 @@
+//! Wire format: intervention graphs ⇄ the custom JSON format (§B.2).
+//!
+//! The format is deliberately explicit and boring — it is version-
+//! controlled experiment description, not an optimization target:
+//!
+//! ```json
+//! { "model": "llama8b-sim", "batch": 2, "tokens": [..],
+//!   "shards": 1, "batch_group": [0, 2], "targets": [..],
+//!   "nodes": [
+//!     {"id":0, "op":"getter", "module":"layer.5", "port":"output"},
+//!     {"id":1, "op":"slice",  "arg":0, "ranges":[[0,1],[31,32]]},
+//!     {"id":2, "op":"setter", "module":"layer.5", "port":"output", "arg":1},
+//!     {"id":3, "op":"save",   "arg":1} ] }
+//! ```
+//!
+//! Ranges serialize as `[start, stop]` pairs with `stop = -1` meaning
+//! "to the end" (`Range1::all()`).
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+use crate::tensor::Range1;
+
+use super::{InterventionGraph, Node, NodeId, Op, Port};
+
+// ---------------------------------------------------------------------------
+// Serialize
+// ---------------------------------------------------------------------------
+
+fn ranges_to_json(rs: &[Range1]) -> Json {
+    Json::Array(
+        rs.iter()
+            .map(|r| {
+                let stop: i64 = if r.stop == usize::MAX { -1 } else { r.stop as i64 };
+                Json::arr(vec![Json::from(r.start as i64), Json::from(stop)])
+            })
+            .collect(),
+    )
+}
+
+fn port_str(p: Port) -> &'static str {
+    match p {
+        Port::Input => "input",
+        Port::Output => "output",
+    }
+}
+
+fn node_to_json(n: &Node) -> Json {
+    let mut o = Json::obj(vec![
+        ("id", Json::from(n.id as i64)),
+        ("op", Json::from(n.op.tag())),
+    ]);
+    match &n.op {
+        Op::Getter { module, port } => {
+            o.set("module", Json::from(module.as_str()));
+            o.set("port", Json::from(port_str(*port)));
+        }
+        Op::Setter { module, port, arg } => {
+            o.set("module", Json::from(module.as_str()));
+            o.set("port", Json::from(port_str(*port)));
+            o.set("arg", Json::from(*arg as i64));
+        }
+        Op::Grad { module } => o.set("module", Json::from(module.as_str())),
+        Op::Const { dims, data } => {
+            o.set("dims", Json::from(dims.clone()));
+            o.set("data", Json::from(data.clone()));
+        }
+        Op::Slice { arg, ranges } => {
+            o.set("arg", Json::from(*arg as i64));
+            o.set("ranges", ranges_to_json(ranges));
+        }
+        Op::Assign { dst, ranges, src } => {
+            o.set("dst", Json::from(*dst as i64));
+            o.set("src", Json::from(*src as i64));
+            o.set("ranges", ranges_to_json(ranges));
+        }
+        Op::Fill { dst, ranges, value } => {
+            o.set("dst", Json::from(*dst as i64));
+            o.set("value", Json::from(*value));
+            o.set("ranges", ranges_to_json(ranges));
+        }
+        Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Matmul { a, b } => {
+            o.set("a", Json::from(*a as i64));
+            o.set("b", Json::from(*b as i64));
+        }
+        Op::Scale { arg, factor } => {
+            o.set("arg", Json::from(*arg as i64));
+            o.set("factor", Json::from(*factor));
+        }
+        Op::Gelu { arg } | Op::Softmax { arg } | Op::Argmax { arg } | Op::Mean { arg }
+        | Op::Sum { arg } | Op::Save { arg } => o.set("arg", Json::from(*arg as i64)),
+        Op::LogitDiff { logits, target, foil } => {
+            o.set("logits", Json::from(*logits as i64));
+            o.set("target", Json::from(*target as i64));
+            o.set("foil", Json::from(*foil as i64));
+        }
+    }
+    o
+}
+
+/// Serialize a graph to its JSON wire form.
+pub fn to_json(g: &InterventionGraph) -> Json {
+    let mut o = Json::obj(vec![
+        ("model", Json::from(g.model.as_str())),
+        ("batch", Json::from(g.batch as i64)),
+        ("tokens", Json::from(g.tokens.clone())),
+        ("shards", Json::from(g.shards.max(1) as i64)),
+        (
+            "nodes",
+            Json::Array(g.nodes.iter().map(node_to_json).collect()),
+        ),
+    ]);
+    if let Some(t) = &g.targets {
+        o.set("targets", Json::from(t.clone()));
+    }
+    if let Some((off, rows)) = g.batch_group {
+        o.set(
+            "batch_group",
+            Json::arr(vec![Json::from(off as i64), Json::from(rows as i64)]),
+        );
+    }
+    o
+}
+
+// ---------------------------------------------------------------------------
+// Deserialize
+// ---------------------------------------------------------------------------
+
+fn json_to_ranges(j: &Json) -> Result<Vec<Range1>> {
+    j.as_array()
+        .ok_or_else(|| anyhow!("ranges must be an array"))?
+        .iter()
+        .map(|r| {
+            let pair = r.as_array().ok_or_else(|| anyhow!("range must be [start, stop]"))?;
+            if pair.len() != 2 {
+                return Err(anyhow!("range must have 2 entries"));
+            }
+            let start = pair[0].as_i64().ok_or_else(|| anyhow!("bad range start"))?;
+            let stop = pair[1].as_i64().ok_or_else(|| anyhow!("bad range stop"))?;
+            if start < 0 {
+                return Err(anyhow!("negative range start"));
+            }
+            Ok(Range1 {
+                start: start as usize,
+                stop: if stop == -1 { usize::MAX } else { stop as usize },
+            })
+        })
+        .collect()
+}
+
+fn parse_port(j: &Json) -> Result<Port> {
+    match j.as_str() {
+        Some("input") => Ok(Port::Input),
+        Some("output") => Ok(Port::Output),
+        other => Err(anyhow!("bad port {other:?}")),
+    }
+}
+
+fn req_id(j: &Json, key: &str) -> Result<NodeId> {
+    j.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("node missing id field '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .as_str()
+        .ok_or_else(|| anyhow!("node missing string field '{key}'"))?
+        .to_string())
+}
+
+fn json_to_op(j: &Json) -> Result<Op> {
+    let tag = req_str(j, "op")?;
+    Ok(match tag.as_str() {
+        "getter" => Op::Getter { module: req_str(j, "module")?, port: parse_port(j.get("port"))? },
+        "setter" => Op::Setter {
+            module: req_str(j, "module")?,
+            port: parse_port(j.get("port"))?,
+            arg: req_id(j, "arg")?,
+        },
+        "grad" => Op::Grad { module: req_str(j, "module")? },
+        "const" => {
+            let dims = j
+                .get("dims")
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("const missing dims"))?;
+            let data: Vec<f32> = j
+                .get("data")
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("const missing data"))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect();
+            let numel: usize = dims.iter().product();
+            if numel != data.len() {
+                return Err(anyhow!("const dims/data mismatch"));
+            }
+            Op::Const { dims, data }
+        }
+        "slice" => Op::Slice { arg: req_id(j, "arg")?, ranges: json_to_ranges(j.get("ranges"))? },
+        "assign" => Op::Assign {
+            dst: req_id(j, "dst")?,
+            ranges: json_to_ranges(j.get("ranges"))?,
+            src: req_id(j, "src")?,
+        },
+        "fill" => Op::Fill {
+            dst: req_id(j, "dst")?,
+            ranges: json_to_ranges(j.get("ranges"))?,
+            value: j.get("value").as_f64().ok_or_else(|| anyhow!("fill missing value"))? as f32,
+        },
+        "add" => Op::Add { a: req_id(j, "a")?, b: req_id(j, "b")? },
+        "sub" => Op::Sub { a: req_id(j, "a")?, b: req_id(j, "b")? },
+        "mul" => Op::Mul { a: req_id(j, "a")?, b: req_id(j, "b")? },
+        "matmul" => Op::Matmul { a: req_id(j, "a")?, b: req_id(j, "b")? },
+        "scale" => Op::Scale {
+            arg: req_id(j, "arg")?,
+            factor: j.get("factor").as_f64().ok_or_else(|| anyhow!("scale missing factor"))? as f32,
+        },
+        "gelu" => Op::Gelu { arg: req_id(j, "arg")? },
+        "softmax" => Op::Softmax { arg: req_id(j, "arg")? },
+        "argmax" => Op::Argmax { arg: req_id(j, "arg")? },
+        "mean" => Op::Mean { arg: req_id(j, "arg")? },
+        "sum" => Op::Sum { arg: req_id(j, "arg")? },
+        "logit_diff" => Op::LogitDiff {
+            logits: req_id(j, "logits")?,
+            target: req_id(j, "target")?,
+            foil: req_id(j, "foil")?,
+        },
+        "save" => Op::Save { arg: req_id(j, "arg")? },
+        other => return Err(anyhow!("unknown op tag '{other}'")),
+    })
+}
+
+/// Deserialize a graph from its JSON wire form. Node ids must be dense,
+/// ascending, and topologically ordered (checked; the validator re-checks
+/// semantic invariants).
+pub fn from_json(j: &Json) -> Result<InterventionGraph> {
+    let mut g = InterventionGraph::new(
+        j.get("model")
+            .as_str()
+            .ok_or_else(|| anyhow!("request missing model"))?,
+    );
+    g.batch = j.get("batch").as_usize().unwrap_or(0);
+    g.tokens = j
+        .get("tokens")
+        .as_f64_vec()
+        .unwrap_or_default()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    g.shards = j.get("shards").as_usize().unwrap_or(1).max(1);
+    g.targets = j
+        .get("targets")
+        .as_f64_vec()
+        .map(|v| v.into_iter().map(|x| x as f32).collect());
+    if let Some(bg) = j.get("batch_group").as_usize_vec() {
+        if bg.len() != 2 {
+            return Err(anyhow!("batch_group must be [offset, rows]"));
+        }
+        g.batch_group = Some((bg[0], bg[1]));
+    }
+    let nodes = j
+        .get("nodes")
+        .as_array()
+        .ok_or_else(|| anyhow!("request missing nodes"))?;
+    for (i, nj) in nodes.iter().enumerate() {
+        let id = req_id(nj, "id")?;
+        if id != i {
+            return Err(anyhow!("node ids must be dense and ascending (got {id} at {i})"));
+        }
+        let op = json_to_op(nj)?;
+        for d in op.deps() {
+            if d >= i {
+                return Err(anyhow!("node {i} references later/self node {d}"));
+            }
+        }
+        g.nodes.push(Node { id, op });
+    }
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Results
+// ---------------------------------------------------------------------------
+
+/// Serialize saved values: `{"values": {"<id>": {"dims": [..], "data": [..]}}}`.
+pub fn result_to_json(r: &super::GraphResult) -> Json {
+    let mut values = std::collections::BTreeMap::new();
+    for (id, t) in &r.values {
+        // base64-packed f32 payload: ~2.4x smaller than JSON floats and
+        // parse-free on the client (§Perf L3, EXPERIMENTS.md)
+        values.insert(
+            id.to_string(),
+            Json::obj(vec![
+                ("dims", Json::from(t.dims().to_vec())),
+                ("b64", Json::from(crate::util::b64::encode_f32(t.data()))),
+            ]),
+        );
+    }
+    Json::obj(vec![("values", Json::Object(values))])
+}
+
+/// Deserialize saved values.
+pub fn result_from_json(j: &Json) -> Result<super::GraphResult> {
+    let mut r = super::GraphResult::default();
+    let values = j
+        .get("values")
+        .as_object()
+        .ok_or_else(|| anyhow!("result missing values"))?;
+    for (id, v) in values {
+        let id: NodeId = id.parse().map_err(|_| anyhow!("bad node id {id}"))?;
+        let dims = v
+            .get("dims")
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("value missing dims"))?;
+        let data: Vec<f32> = if let Some(b64) = v.get("b64").as_str() {
+            crate::util::b64::decode_f32(b64).ok_or_else(|| anyhow!("bad b64 payload"))?
+        } else {
+            // legacy/explicit form: a JSON float array
+            v.get("data")
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("value missing data"))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect()
+        };
+        r.values.insert(id, crate::tensor::Tensor::new(&dims, data));
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use crate::util::Prng;
+
+    #[test]
+    fn result_round_trip() {
+        let mut r = crate::graph::GraphResult::default();
+        r.values.insert(3, crate::tensor::Tensor::iota(&[2, 2]));
+        r.values.insert(7, crate::tensor::Tensor::scalar(-1.5));
+        let back = result_from_json(&parse(&result_to_json(&r).to_string()).unwrap()).unwrap();
+        assert_eq!(back.values, r.values);
+    }
+
+    fn demo_graph() -> InterventionGraph {
+        let mut g = InterventionGraph::new("tiny-sim");
+        g.batch = 2;
+        g.tokens = vec![1.0; 32];
+        let get = g.push(Op::Getter { module: "layer.1".into(), port: Port::Output });
+        let sl = g.push(Op::Slice {
+            arg: get,
+            ranges: vec![Range1::one(0), Range1::all()],
+        });
+        let c = g.push(Op::Const { dims: vec![1], data: vec![2.0] });
+        let m = g.push(Op::Mul { a: sl, b: c });
+        let asn = g.push(Op::Assign { dst: get, ranges: vec![Range1::one(1)], src: m });
+        let _set = g.push(Op::Setter { module: "layer.1".into(), port: Port::Output, arg: asn });
+        let _save = g.push(Op::Save { arg: m });
+        g.batch_group = Some((0, 2));
+        g
+    }
+
+    #[test]
+    fn round_trip_preserves_graph() {
+        let g = demo_graph();
+        let j = to_json(&g);
+        let text = j.to_string();
+        let back = from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, g.model);
+        assert_eq!(back.batch, g.batch);
+        assert_eq!(back.tokens, g.tokens);
+        assert_eq!(back.batch_group, g.batch_group);
+        assert_eq!(back.nodes, g.nodes);
+    }
+
+    #[test]
+    fn all_range_round_trips() {
+        let rs = vec![Range1::all(), Range1::new(2, 5)];
+        let back = json_to_ranges(&ranges_to_json(&rs)).unwrap();
+        assert_eq!(back, rs);
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let bad = r#"{"model":"m","batch":1,"tokens":[],"nodes":[
+            {"id":0,"op":"scale","arg":1,"factor":2.0},
+            {"id":1,"op":"const","dims":[1],"data":[1.0]}]}"#;
+        assert!(from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_sparse_ids() {
+        let bad = r#"{"model":"m","batch":1,"tokens":[],"nodes":[
+            {"id":3,"op":"const","dims":[1],"data":[1.0]}]}"#;
+        assert!(from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let bad = r#"{"model":"m","batch":1,"tokens":[],"nodes":[
+            {"id":0,"op":"exfiltrate"}]}"#;
+        assert!(from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_const_shape_mismatch() {
+        let bad = r#"{"model":"m","batch":1,"tokens":[],"nodes":[
+            {"id":0,"op":"const","dims":[3],"data":[1.0]}]}"#;
+        assert!(from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_positive() {
+        assert!(demo_graph().wire_bytes() > 100);
+    }
+
+    #[test]
+    fn property_random_graphs_round_trip() {
+        use crate::util::Prng;
+        let mut rng = Prng::new(0xA11CE);
+        for case in 0..100 {
+            let g = random_graph(&mut rng);
+            let text = to_json(&g).to_string();
+            let back = from_json(&parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(back.nodes, g.nodes, "case {case}");
+        }
+    }
+
+    fn random_graph(rng: &mut Prng) -> InterventionGraph {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        for _ in 0..rng.range(1, 12) {
+            let n = g.nodes.len();
+            let pick = |rng: &mut Prng| rng.range(0, n);
+            let op = match rng.range(0, 8) {
+                0 => Op::Const { dims: vec![2], data: vec![1.0, -2.5] },
+                1 => Op::Scale { arg: pick(rng), factor: 0.5 },
+                2 => Op::Add { a: pick(rng), b: pick(rng) },
+                3 => Op::Slice { arg: pick(rng), ranges: vec![Range1::new(0, 1)] },
+                4 => Op::Fill { dst: pick(rng), ranges: vec![Range1::all()], value: 0.0 },
+                5 => Op::Softmax { arg: pick(rng) },
+                6 => Op::Save { arg: pick(rng) },
+                _ => Op::Mean { arg: pick(rng) },
+            };
+            g.push(op);
+        }
+        g
+    }
+}

@@ -1,0 +1,607 @@
+//! The intervention-graph interpreter: interleaves graph execution with
+//! the model's forward pass.
+//!
+//! Scheduling follows §B.1 of the paper: the graph is partitioned into
+//! sub-graphs keyed by the *latest* module activation they (transitively)
+//! depend on; each sub-graph executes when that module's hook fires.
+//! Setters are pinned to the hook of the module they write (the validator
+//! has already guaranteed their dependencies are available by then).
+//! Nodes with no model dependencies run in a pre-phase; nodes depending on
+//! gradients run in a post-phase after the backward pass.
+//!
+//! Memory behaviour matches the paper: every node's value is freed as soon
+//! as its remaining listener count reaches zero, except values locked by a
+//! Save node (LockProtocol). [`Executor::peak_live`] exposes the high-water
+//! mark so tests can pin this behaviour down.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{validate::validate, GraphResult, InterventionGraph, NodeId, Op, Port};
+use crate::models::{Hooks, ModelRunner};
+use crate::tensor::{logit_diff, Tensor};
+
+/// Execution phase of a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Before the forward pass (no model dependencies).
+    Pre,
+    /// At the hook of forward-sequence position `k`.
+    Fwd(usize),
+    /// After the backward pass (depends on a Grad node).
+    Post,
+}
+
+/// Interprets one intervention graph against one model run.
+///
+/// The executor implements [`Hooks`], so the `ModelRunner` drives it at
+/// module boundaries; everything else (pre/post phases, grads, saves) is
+/// orchestrated by [`execute`] / [`Executor::run`].
+pub struct Executor<'g> {
+    graph: &'g InterventionGraph,
+    /// forward point name -> node ids to run at that hook (in id order).
+    schedule: HashMap<String, Vec<NodeId>>,
+    pre: Vec<NodeId>,
+    post: Vec<NodeId>,
+    values: Vec<Option<Tensor>>,
+    listeners: Vec<usize>,
+    locked: Vec<bool>,
+    saved: BTreeMap<NodeId, Tensor>,
+    /// batch-group slice of this user within the running batch.
+    row_offset: usize,
+    rows: usize,
+    /// memory accounting: current & peak live (unlocked) tensors.
+    live: usize,
+    peak_live: usize,
+    /// runtime error captured inside a hook (hooks can't return Result).
+    error: Option<anyhow::Error>,
+}
+
+impl<'g> Executor<'g> {
+    /// Build an executor; validates the graph against the model's forward
+    /// sequence and computes the per-hook schedule.
+    pub fn new(graph: &'g InterventionGraph, forward_sequence: &[String]) -> Result<Executor<'g>> {
+        validate(graph, forward_sequence)?;
+        let order: HashMap<&str, usize> = forward_sequence
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.as_str(), i))
+            .collect();
+
+        // normalize Input ports: input of module k = output of module k-1
+        let point_of = |module: &str, port: Port| -> Result<usize> {
+            let k = *order
+                .get(module)
+                .ok_or_else(|| anyhow!("unknown module {module}"))?;
+            match port {
+                Port::Output => Ok(k),
+                Port::Input => {
+                    if k == 0 {
+                        Err(anyhow!("module {module} has no observable input (it is first)"))
+                    } else {
+                        Ok(k - 1)
+                    }
+                }
+            }
+        };
+
+        let n = graph.nodes.len();
+        let mut phase = vec![Phase::Pre; n];
+        for node in &graph.nodes {
+            let mut p = match &node.op {
+                Op::Getter { module, port } => Phase::Fwd(point_of(module, *port)?),
+                Op::Grad { .. } => Phase::Post,
+                _ => Phase::Pre,
+            };
+            for d in node.op.deps() {
+                p = match (p, phase[d]) {
+                    (Phase::Post, _) | (_, Phase::Post) => Phase::Post,
+                    (Phase::Fwd(a), Phase::Fwd(b)) => Phase::Fwd(a.max(b)),
+                    (Phase::Fwd(a), Phase::Pre) | (Phase::Pre, Phase::Fwd(a)) => Phase::Fwd(a),
+                    (Phase::Pre, Phase::Pre) => Phase::Pre,
+                };
+            }
+            // setters run at the hook of the module they write
+            if let Op::Setter { module, port, .. } = &node.op {
+                let k = point_of(module, *port)?;
+                p = Phase::Fwd(k);
+            }
+            phase[node.id] = p;
+        }
+
+        let mut schedule: HashMap<String, Vec<NodeId>> = HashMap::new();
+        let mut pre = Vec::new();
+        let mut post = Vec::new();
+        for node in &graph.nodes {
+            match phase[node.id] {
+                Phase::Pre => pre.push(node.id),
+                Phase::Fwd(k) => schedule
+                    .entry(forward_sequence[k].clone())
+                    .or_default()
+                    .push(node.id),
+                Phase::Post => post.push(node.id),
+            }
+        }
+
+        // Save locks its dependency's value.
+        let mut locked = vec![false; n];
+        for node in &graph.nodes {
+            if let Op::Save { arg } = node.op {
+                locked[arg] = true;
+            }
+        }
+
+        let (row_offset, rows) = graph.batch_group.unwrap_or((0, graph.batch.max(1)));
+        Ok(Executor {
+            graph,
+            schedule,
+            pre,
+            post,
+            values: vec![None; n],
+            listeners: graph.listener_counts(),
+            locked,
+            saved: BTreeMap::new(),
+            row_offset,
+            rows,
+            live: 0,
+            peak_live: 0,
+            error: None,
+        })
+    }
+
+    /// High-water mark of simultaneously-live unlocked values.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    fn take_dep(&mut self, id: NodeId) -> Result<Tensor> {
+        let v = self.values[id]
+            .as_ref()
+            .ok_or_else(|| anyhow!("node {id} value not available (freed or not computed)"))?
+            .clone();
+        self.listeners[id] = self.listeners[id].saturating_sub(1);
+        if self.listeners[id] == 0 && !self.locked[id] {
+            self.values[id] = None;
+            self.live = self.live.saturating_sub(1);
+        }
+        Ok(v)
+    }
+
+    fn put(&mut self, id: NodeId, v: Tensor) {
+        // a node with no listeners that isn't locked is dead on arrival
+        if self.listeners[id] == 0 && !self.locked[id] {
+            return;
+        }
+        self.values[id] = Some(v);
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+    }
+
+    /// Execute one node. `current` is the module activation in flight at
+    /// this hook (None in pre/post phases).
+    fn exec_node(&mut self, id: NodeId, current: Option<&mut Tensor>) -> Result<()> {
+        let op = self.graph.nodes[id].op.clone();
+        let out = match op {
+            Op::Getter { .. } => {
+                let t = current.ok_or_else(|| anyhow!("getter outside hook"))?;
+                // a merged co-tenant run hands each user only their rows
+                self.slice_rows(t)
+            }
+            Op::Setter { arg, .. } => {
+                let v = self.take_dep(arg)?;
+                let t = current.ok_or_else(|| anyhow!("setter outside hook"))?;
+                self.write_rows(t, &v)?;
+                v
+            }
+            Op::Grad { .. } => {
+                // value injected by the post-phase driver before exec
+                return Ok(());
+            }
+            Op::Const { dims, data } => Tensor::new(&dims, data),
+            Op::Slice { arg, ranges } => self.take_dep(arg)?.slice(&ranges),
+            Op::Assign { dst, ranges, src } => {
+                let mut d = self.take_dep(dst)?;
+                let s = self.take_dep(src)?;
+                d.slice_assign(&ranges, &s);
+                d
+            }
+            Op::Fill { dst, ranges, value } => {
+                let mut d = self.take_dep(dst)?;
+                d.slice_fill(&ranges, value);
+                d
+            }
+            Op::Add { a, b } => self.take_dep(a)?.add(&self.take_dep(b)?),
+            Op::Sub { a, b } => self.take_dep(a)?.sub(&self.take_dep(b)?),
+            Op::Mul { a, b } => self.take_dep(a)?.mul(&self.take_dep(b)?),
+            Op::Matmul { a, b } => self.take_dep(a)?.matmul(&self.take_dep(b)?),
+            Op::Scale { arg, factor } => self.take_dep(arg)?.scale(factor),
+            Op::Gelu { arg } => self.take_dep(arg)?.gelu(),
+            Op::Softmax { arg } => self.take_dep(arg)?.softmax_last(),
+            Op::Argmax { arg } => self.take_dep(arg)?.argmax_last(),
+            Op::Mean { arg } => Tensor::scalar(self.take_dep(arg)?.mean_all()),
+            Op::Sum { arg } => Tensor::scalar(self.take_dep(arg)?.sum_all()),
+            Op::LogitDiff { logits, target, foil } => {
+                logit_diff(&self.take_dep(logits)?, target, foil)
+            }
+            Op::Save { arg } => {
+                let v = self.values[arg]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("save of unavailable node {arg}"))?
+                    .clone();
+                self.listeners[arg] = self.listeners[arg].saturating_sub(1);
+                self.saved.insert(id, v.clone());
+                v
+            }
+        };
+        self.put(id, out);
+        Ok(())
+    }
+
+    /// Rows of the in-flight activation belonging to this user.
+    fn slice_rows(&self, t: &Tensor) -> Tensor {
+        if self.row_offset == 0 && self.rows == t.dims()[0] {
+            return t.clone();
+        }
+        let mut ranges = vec![crate::tensor::Range1::all(); 1];
+        ranges[0] = crate::tensor::Range1::new(self.row_offset, self.row_offset + self.rows);
+        t.slice(&ranges)
+    }
+
+    /// Write a user-rows tensor back into the in-flight activation.
+    fn write_rows(&self, t: &mut Tensor, v: &Tensor) -> Result<()> {
+        if v.dims()[0] != self.rows {
+            return Err(anyhow!(
+                "setter value has {} rows, batch group has {}",
+                v.dims()[0],
+                self.rows
+            ));
+        }
+        let ranges = vec![crate::tensor::Range1::new(
+            self.row_offset,
+            self.row_offset + self.rows,
+        )];
+        t.slice_assign(&ranges, v);
+        Ok(())
+    }
+
+    fn run_list(&mut self, ids: &[NodeId], mut current: Option<&mut Tensor>) -> Result<bool> {
+        let mut modified = false;
+        for &id in ids {
+            let is_setter = matches!(self.graph.nodes[id].op, Op::Setter { .. });
+            self.exec_node(id, current.as_deref_mut())?;
+            modified |= is_setter;
+        }
+        Ok(modified)
+    }
+
+    /// Run the pre-phase (Const chains etc.).
+    pub fn run_pre(&mut self) -> Result<()> {
+        let ids = self.pre.clone();
+        self.run_list(&ids, None)?;
+        Ok(())
+    }
+
+    /// Inject gradient values and run the post-phase.
+    pub fn run_post(&mut self, grads: &HashMap<String, Tensor>) -> Result<()> {
+        let ids = self.post.clone();
+        for &id in &ids {
+            if let Op::Grad { module } = &self.graph.nodes[id].op {
+                let g = grads
+                    .get(module)
+                    .ok_or_else(|| anyhow!("no gradient computed for {module}"))?;
+                self.put(id, self.slice_rows(g));
+            }
+        }
+        // run non-grad post nodes (grad values already in place)
+        let rest: Vec<NodeId> = ids
+            .iter()
+            .copied()
+            .filter(|&id| !matches!(self.graph.nodes[id].op, Op::Grad { .. }))
+            .collect();
+        self.run_list(&rest, None)?;
+        Ok(())
+    }
+
+    /// Take the saved values (consumes the executor's result map).
+    pub fn into_result(self) -> Result<GraphResult> {
+        if let Some(e) = self.error {
+            return Err(e);
+        }
+        Ok(GraphResult { values: self.saved })
+    }
+
+    pub fn had_error(&self) -> Option<&anyhow::Error> {
+        self.error.as_ref()
+    }
+}
+
+impl Hooks for Executor<'_> {
+    fn wants(&self, point: &str) -> bool {
+        self.error.is_none() && self.schedule.contains_key(point)
+    }
+
+    fn on_output(&mut self, point: &str, t: &mut Tensor) -> bool {
+        let Some(ids) = self.schedule.get(point).cloned() else {
+            return false;
+        };
+        match self.run_list(&ids, Some(t)) {
+            Ok(modified) => modified,
+            Err(e) => {
+                self.error = Some(e);
+                false
+            }
+        }
+    }
+}
+
+/// Execute a standalone graph against a loaded model: pre-phase → hooked
+/// forward (sharded if requested) → backward/post-phase → saved values.
+pub fn execute(graph: &InterventionGraph, runner: &ModelRunner) -> Result<GraphResult> {
+    let fseq = runner.manifest.forward_sequence();
+    let mut ex = Executor::new(graph, &fseq)?;
+    ex.run_pre()?;
+
+    let seq = runner.manifest.seq;
+    if graph.tokens.len() != graph.batch * seq {
+        return Err(anyhow!(
+            "tokens length {} != batch {} * seq {seq}",
+            graph.tokens.len(),
+            graph.batch
+        ));
+    }
+    let tokens = Tensor::new(&[graph.batch, seq], graph.tokens.clone());
+    let (padded, _) = runner.pad_tokens(&tokens)?;
+
+    if graph.shards > 1 {
+        runner.forward_sharded(&padded, graph.shards, &mut ex)?;
+    } else {
+        runner.forward(&padded, &mut ex)?;
+    }
+    if let Some(e) = ex.error.take() {
+        return Err(e);
+    }
+
+    let grad_points = graph.grad_points();
+    if !grad_points.is_empty() {
+        let targets = graph
+            .targets
+            .as_ref()
+            .ok_or_else(|| anyhow!("grad without targets"))?;
+        let mut t = Tensor::new(&[targets.len()], targets.clone());
+        if t.dims()[0] != padded.dims()[0] {
+            // pad targets to the padded batch
+            let mut data = t.into_data();
+            data.resize(padded.dims()[0], 0.0);
+            t = Tensor::new(&[data.len()], data);
+        }
+        let (_, grads) = runner.backward(&padded, &t, &grad_points)?;
+        ex.run_post(&grads)?;
+    }
+
+    ex.into_result()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Range1;
+
+    fn fseq() -> Vec<String> {
+        vec!["embed".into(), "layer.0".into(), "layer.1".into(), "lm_head".into()]
+    }
+
+    /// Drive an executor by hand, simulating a model run — no PJRT needed.
+    fn drive(ex: &mut Executor, acts: &mut BTreeMap<String, Tensor>) {
+        for point in fseq() {
+            if let Some(t) = acts.get_mut(&point) {
+                if ex.wants(&point) {
+                    ex.on_output(&point, t);
+                }
+            }
+        }
+    }
+
+    fn acts(batch: usize) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("embed".to_string(), Tensor::iota(&[batch, 4]));
+        m.insert("layer.0".to_string(), Tensor::iota(&[batch, 4]).scale(2.0));
+        m.insert("layer.1".to_string(), Tensor::iota(&[batch, 4]).scale(3.0));
+        m.insert("lm_head".to_string(), Tensor::iota(&[batch, 4]).scale(4.0));
+        m
+    }
+
+    #[test]
+    fn getter_save_round_trip() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 2;
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let save = g.push(Op::Save { arg: get });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(2);
+        drive(&mut ex, &mut a);
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap(), &Tensor::iota(&[2, 4]).scale(2.0));
+    }
+
+    #[test]
+    fn setter_modifies_downstream_activation() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![1, 4], data: vec![9.0; 4] });
+        g.push(Op::Setter { module: "layer.0".into(), port: Port::Output, arg: c });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        assert_eq!(a["layer.0"].data(), &[9.0; 4]);
+        assert!(ex.had_error().is_none());
+    }
+
+    #[test]
+    fn input_port_maps_to_previous_module() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        // layer.1 input == layer.0 output
+        let get = g.push(Op::Getter { module: "layer.1".into(), port: Port::Input });
+        let save = g.push(Op::Save { arg: get });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap(), &Tensor::iota(&[1, 4]).scale(2.0));
+    }
+
+    #[test]
+    fn input_port_on_first_module_rejected() {
+        let mut g = InterventionGraph::new("m");
+        g.push(Op::Getter { module: "embed".into(), port: Port::Input });
+        assert!(Executor::new(&g, &fseq()).is_err());
+    }
+
+    #[test]
+    fn cross_module_patching() {
+        // save layer.0 output, write it over layer.1 output
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h0 = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        g.push(Op::Setter { module: "layer.1".into(), port: Port::Output, arg: h0 });
+        let h1 = g.push(Op::Getter { module: "layer.1".into(), port: Port::Output });
+        let save = g.push(Op::Save { arg: h1 });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        // the getter at layer.1 sees the patched value
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap(), &Tensor::iota(&[1, 4]).scale(2.0));
+    }
+
+    #[test]
+    fn batch_group_isolation() {
+        // user owns row 1 of a 3-row batch; getter sees only row 1 and
+        // setter writes only row 1.
+        let mut g = InterventionGraph::new("m");
+        g.batch = 3;
+        g.batch_group = Some((1, 1));
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let save = g.push(Op::Save { arg: get });
+        let z = g.push(Op::Const { dims: vec![1, 4], data: vec![-1.0; 4] });
+        g.push(Op::Setter { module: "layer.0".into(), port: Port::Output, arg: z });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(3);
+        let before = a["layer.0"].clone();
+        drive(&mut ex, &mut a);
+        let after = &a["layer.0"];
+        // rows 0 and 2 untouched
+        assert_eq!(
+            after.slice(&[Range1::one(0)]).data(),
+            before.slice(&[Range1::one(0)]).data()
+        );
+        assert_eq!(
+            after.slice(&[Range1::one(2)]).data(),
+            before.slice(&[Range1::one(2)]).data()
+        );
+        assert_eq!(after.slice(&[Range1::one(1)]).data(), &[-1.0; 4]);
+        // getter saw only its row
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap().dims(), &[1, 4]);
+    }
+
+    #[test]
+    fn values_freed_when_listeners_exhausted() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let s1 = g.push(Op::Scale { arg: get, factor: 2.0 });
+        let s2 = g.push(Op::Scale { arg: s1, factor: 2.0 });
+        let s3 = g.push(Op::Scale { arg: s2, factor: 2.0 });
+        g.push(Op::Save { arg: s3 });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        // chain frees as it goes: at most 2 unlocked values live at once
+        assert!(ex.peak_live() <= 2, "peak_live = {}", ex.peak_live());
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.values.len(), 1);
+    }
+
+    #[test]
+    fn save_locks_value_despite_consumption() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let save = g.push(Op::Save { arg: get });
+        let sc = g.push(Op::Scale { arg: get, factor: 5.0 });
+        let save2 = g.push(Op::Save { arg: sc });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap().data(), Tensor::iota(&[1, 4]).scale(2.0).data());
+        assert_eq!(res.get(save2).unwrap().data(), Tensor::iota(&[1, 4]).scale(10.0).data());
+    }
+
+    #[test]
+    fn arithmetic_pipeline_at_hook() {
+        // mean(softmax(h * 2)) saved — mixed op chain on one hook
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let get = g.push(Op::Getter { module: "lm_head".into(), port: Port::Output });
+        let sc = g.push(Op::Scale { arg: get, factor: 2.0 });
+        let sm = g.push(Op::Softmax { arg: sc });
+        let mn = g.push(Op::Mean { arg: sm });
+        let save = g.push(Op::Save { arg: mn });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let res = ex.into_result().unwrap();
+        let v = res.get(save).unwrap().item();
+        assert!((v - 0.25).abs() < 1e-6); // softmax rows sum to 1, 4 entries
+    }
+
+    #[test]
+    fn grad_post_phase() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        g.targets = Some(vec![1.0]);
+        let gr = g.push(Op::Grad { module: "layer.0".into() });
+        let n = g.push(Op::Scale { arg: gr, factor: -1.0 });
+        let save = g.push(Op::Save { arg: n });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let mut grads = HashMap::new();
+        grads.insert("layer.0".to_string(), Tensor::full(&[1, 4], 3.0));
+        ex.run_post(&grads).unwrap();
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(save).unwrap().data(), &[-3.0; 4]);
+    }
+
+    #[test]
+    fn error_inside_hook_is_captured() {
+        // matmul with incompatible shapes triggers a panic-free error path?
+        // tensor ops panic on shape mismatch, so use a save of freed value
+        // instead: craft graph that saves a node never computed (grad
+        // without post-phase).
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        g.targets = Some(vec![1.0]);
+        let gr = g.push(Op::Grad { module: "layer.0".into() });
+        let save = g.push(Op::Save { arg: gr });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        // skip run_post: into_result has no saved value for the grad
+        let res = ex.into_result().unwrap();
+        assert!(res.get(save).is_none());
+    }
+}

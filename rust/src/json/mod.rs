@@ -1,0 +1,81 @@
+//! JSON: the intervention-graph interchange format.
+//!
+//! The paper serializes intervention graphs "into a custom JSON format"
+//! (§B.2); `serde_json` is unavailable in this offline build, so the crate
+//! carries its own value model, recursive-descent parser, and serializer.
+//! The implementation is complete for the JSON grammar (RFC 8259) with the
+//! usual Rust conveniences: typed accessors, builder helpers, and both
+//! compact and pretty output.
+
+mod value;
+mod parse;
+mod ser;
+
+pub use parse::{parse, ParseError};
+pub use value::Json;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_nested() {
+        let src = r#"{"a":[1,2.5,-3e2],"b":{"c":true,"d":null,"e":"hi\n\"there\""},"f":[]}"#;
+        let v = parse(src).unwrap();
+        let re = parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn round_trip_pretty() {
+        let v = Json::obj(vec![
+            ("nodes", Json::arr(vec![Json::from(1i64), Json::from("x")])),
+            ("ok", Json::from(true)),
+        ]);
+        let re = parse(&v.pretty()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn property_random_values_round_trip() {
+        use crate::util::Prng;
+        let mut p = Prng::new(0xBEEF);
+        for case in 0..200 {
+            let v = random_json(&mut p, 3);
+            let s = v.to_string();
+            let re = parse(&s).unwrap_or_else(|e| panic!("case {case}: {e:?} for {s}"));
+            assert_eq!(v, re, "case {case}");
+        }
+    }
+
+    fn random_json(p: &mut crate::util::Prng, depth: usize) -> Json {
+        match if depth == 0 { p.range(0, 4) } else { p.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(p.below(2) == 0),
+            2 => {
+                // use exactly representable values so equality is exact
+                Json::from((p.below(2_000_000) as i64) - 1_000_000)
+            }
+            3 => {
+                let mut s = String::new();
+                for _ in 0..p.range(0, 12) {
+                    s.push(match p.range(0, 6) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'é',
+                        4 => '𝄞',
+                        _ => char::from(b'a' + p.below(26) as u8),
+                    });
+                }
+                Json::from(s)
+            }
+            4 => Json::Array((0..p.range(0, 4)).map(|_| random_json(p, depth - 1)).collect()),
+            _ => Json::Object(
+                (0..p.range(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(p, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! JSON serialization: compact (wire format) and pretty (manifests,
+//! debugging dumps). Integers that fit in `i64` are printed without a
+//! decimal point so node ids and shapes round-trip textually.
+
+use super::Json;
+
+/// Compact serialization.
+pub fn to_string(v: &Json) -> String {
+    let mut s = String::new();
+    write_value(v, &mut s);
+    s
+}
+
+/// Pretty serialization with 2-space indents.
+pub fn to_pretty(v: &Json) -> String {
+    let mut s = String::new();
+    write_pretty(v, 0, &mut s);
+    s
+}
+
+impl Json {
+    /// Pretty-printed form.
+    pub fn pretty(&self) -> String {
+        to_pretty(self)
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; clamp like most serializers' lossy modes.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // shortest f64 repr via Rust's float formatting
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_num(*n, out),
+        Json::Str(s) => write_escaped(s, out),
+        Json::Array(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Object(o) => {
+            out.push('{');
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_escaped(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_pretty(v: &Json, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    let pad2 = "  ".repeat(indent + 1);
+    match v {
+        Json::Array(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad2);
+                write_pretty(item, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Json::Object(o) if !o.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad2);
+                write_escaped(k, out);
+                out.push_str(": ");
+                write_pretty(val, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&pad);
+            out.push('}');
+        }
+        other => write_value(other, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn integers_have_no_decimal_point() {
+        assert_eq!(to_string(&Json::Num(42.0)), "42");
+        assert_eq!(to_string(&Json::Num(-3.0)), "-3");
+        assert_eq!(to_string(&Json::Num(2.5)), "2.5");
+    }
+
+    #[test]
+    fn escapes_control_chars() {
+        let s = to_string(&Json::Str("a\"b\\c\nd\u{0001}".into()));
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(parse(&s).unwrap(), Json::Str("a\"b\\c\nd\u{0001}".into()));
+    }
+
+    #[test]
+    fn nonfinite_serializes_as_null() {
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Json::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let v = Json::obj(vec![
+            ("a", Json::arr(vec![Json::from(1i64)])),
+            ("b", Json::obj(vec![("c", Json::Null)])),
+            ("empty", Json::arr(vec![])),
+        ]);
+        assert_eq!(parse(&to_pretty(&v)).unwrap(), v);
+        assert!(to_pretty(&v).contains('\n'));
+    }
+}

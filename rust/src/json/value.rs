@@ -1,0 +1,207 @@
+//! The JSON value model with typed accessors and builder helpers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Numbers are stored as `f64` with an exact-integer fast
+/// path preserved at serialization time (i64-representable values print
+/// without a decimal point, so node ids survive round-trips textually).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Json>),
+    Object(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn obj<K: Into<String>>(pairs: Vec<(K, Json)>) -> Json {
+        Json::Object(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Array(items)
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Json::Null` if missing or not an object.
+    pub fn get(&self, key: &str) -> &Json {
+        static NULL: Json = Json::Null;
+        match self {
+            Json::Object(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Array index; `Json::Null` out of range.
+    pub fn at(&self, i: usize) -> &Json {
+        static NULL: Json = Json::Null;
+        match self {
+            Json::Array(a) => a.get(i).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Extract a `Vec<f64>` from a numeric array.
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_array()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Extract a `Vec<usize>` from a numeric array.
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        self.as_array()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    /// Extract a `Vec<i64>` from a numeric array.
+    pub fn as_i64_vec(&self) -> Option<Vec<i64>> {
+        self.as_array()?.iter().map(|v| v.as_i64()).collect()
+    }
+
+    /// Insert into an object (panics if not an object) — builder-style.
+    pub fn set(&mut self, key: &str, v: Json) {
+        match self {
+            Json::Object(o) => {
+                o.insert(key.to_string(), v);
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<i64> for Json {
+    fn from(n: i64) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+impl From<f32> for Json {
+    fn from(n: f32) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<Vec<f32>> for Json {
+    fn from(v: Vec<f32>) -> Json {
+        Json::Array(v.into_iter().map(Json::from).collect())
+    }
+}
+impl From<Vec<usize>> for Json {
+    fn from(v: Vec<usize>) -> Json {
+        Json::Array(v.into_iter().map(Json::from).collect())
+    }
+}
+impl From<Vec<i64>> for Json {
+    fn from(v: Vec<i64>) -> Json {
+        Json::Array(v.into_iter().map(Json::from).collect())
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&super::ser::to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = Json::obj(vec![
+            ("n", Json::from(3i64)),
+            ("s", Json::from("x")),
+            ("a", Json::arr(vec![Json::from(1i64), Json::from(2i64)])),
+        ]);
+        assert_eq!(v.get("n").as_i64(), Some(3));
+        assert_eq!(v.get("s").as_str(), Some("x"));
+        assert_eq!(v.get("a").as_usize_vec(), Some(vec![1, 2]));
+        assert!(v.get("missing").is_null());
+        assert_eq!(v.get("a").at(1).as_i64(), Some(2));
+        assert!(v.get("a").at(9).is_null());
+    }
+
+    #[test]
+    fn as_i64_rejects_fractions() {
+        assert_eq!(Json::Num(2.5).as_i64(), None);
+        assert_eq!(Json::Num(-7.0).as_i64(), Some(-7));
+    }
+}

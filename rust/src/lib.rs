@@ -1,0 +1,53 @@
+//! # nnscope
+//!
+//! A Rust + JAX + Pallas reproduction of **"NNsight and NDIF: Democratizing
+//! Access to Open-Weight Foundation Model Internals"** (ICLR 2025).
+//!
+//! The crate implements, from scratch:
+//!
+//! * the **intervention graph** architecture (§3.1 of the paper): a
+//!   portable, JSON-serializable representation of an experiment on a
+//!   neural network's internals ([`graph`], [`interp`]);
+//! * an **NNsight-like tracing client** (§3.2): a deferred-execution builder
+//!   DSL with proxies over module inputs/outputs, `.save()` locking, grad
+//!   access, and sessions ([`client`]);
+//! * the **NDIF inference service** (§3.3, §B.2): a multi-tenant server that
+//!   preloads models, queues intervention requests from many users,
+//!   interleaves their graphs with shared model execution (sequential and
+//!   batch-grouped parallel co-tenancy), and returns only saved values
+//!   ([`server`], [`scheduler`]);
+//! * the model substrate: OPT-style decoder-only transformers AOT-compiled
+//!   from JAX (+Pallas flash-attention / fused layernorm kernels) to HLO
+//!   text, executed via the PJRT CPU client ([`runtime`], [`models`],
+//!   [`shard`]);
+//! * the paper's **baselines**: hook-based intervention mechanisms
+//!   (baukit/pyvene/TransformerLens-like) and a Petals-like distributed
+//!   swarm with client-side interventions ([`baselines`]);
+//! * the supporting substrates that are unavailable offline and that the
+//!   paper's service depends on: JSON ([`json`]), an HTTP/1.1 server and
+//!   client ([`server::http`]), a thread pool ([`threadpool`]), a simulated
+//!   WAN link ([`netsim`]), PRNG/stats/tables ([`util`]), and a host tensor
+//!   engine for intervention ops ([`tensor`]);
+//! * the §2 research survey analyses (Figures 2 and 7) ([`survey`]).
+//!
+//! Python (JAX/Pallas) runs only at `make artifacts` time; the request path
+//! is pure Rust over AOT-compiled artifacts.
+
+pub mod util;
+pub mod json;
+pub mod tensor;
+pub mod threadpool;
+pub mod netsim;
+pub mod graph;
+pub mod interp;
+pub mod client;
+pub mod runtime;
+pub mod models;
+pub mod server;
+pub mod scheduler;
+pub mod shard;
+pub mod baselines;
+pub mod survey;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

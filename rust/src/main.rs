@@ -1,0 +1,174 @@
+//! nnscope CLI — serve, inspect, and exercise the NDIF reproduction.
+//!
+//! Subcommands:
+//!   serve    start an NDIF server       (--models a,b --addr host:port
+//!                                        --parallel-cotenancy --workers N)
+//!   models   list hosted model configs from the artifacts directory
+//!   survey   print the Fig. 2 / Fig. 7 survey analyses
+//!   trace    submit a demo intervention to a running server (--addr)
+//!   selftest quick sanity pass over the tiny model
+//!
+//! Artifacts are looked up in `$NNSCOPE_ARTIFACTS` or `<crate>/artifacts`
+//! (build them with `make artifacts`).
+
+use anyhow::Result;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::survey;
+use nnscope::tensor::Tensor;
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+const USAGE: &str = "usage: nnscope <serve|models|survey|trace|selftest> [options]
+  serve     --models tiny-sim[,..] [--addr 127.0.0.1:7757] [--workers 8]
+            [--config deploy.json]
+            [--parallel-cotenancy] [--max-merge 8]
+  models
+  survey
+  trace     --addr 127.0.0.1:7757 [--model tiny-sim]
+  selftest";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(2);
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    match cmd.as_str() {
+        "serve" => serve(&args),
+        "models" => models(),
+        "survey" => survey_cmd(),
+        "trace" => trace(&args),
+        "selftest" => selftest(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("config") {
+        let cfg = nnscope::server::config::from_file(std::path::Path::new(path))?;
+        println!("preloading {:?} (from {path}) …", cfg.models);
+        let server = NdifServer::start(cfg)?;
+        println!("NDIF serving on {} — POST /v1/trace, GET /v1/models", server.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let models: Vec<String> = args
+        .str_or("models", "tiny-sim")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let cfg = NdifConfig {
+        addr: args.str_or("addr", "127.0.0.1:7757"),
+        workers: args.usize_or("workers", 8),
+        models: models.clone(),
+        artifacts: artifacts_dir(),
+        cotenancy: if args.flag("parallel-cotenancy") {
+            CoTenancy::Parallel { max_merge: args.usize_or("max-merge", 8) }
+        } else {
+            CoTenancy::Sequential
+        },
+        auth: Default::default(),
+    };
+    println!("preloading {models:?} …");
+    let server = NdifServer::start(cfg)?;
+    println!("NDIF serving on {} — POST /v1/trace, GET /v1/models", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn models() -> Result<()> {
+    let dir = artifacts_dir();
+    let mut table = Table::new(&format!("models in {}", dir.display())).header(vec![
+        "name", "params", "layers", "d_model", "seq", "batches", "grad", "tp", "simulates",
+    ]);
+    for name in Manifest::list(&dir) {
+        let m = Manifest::load(&dir, &name)?;
+        table.row(vec![
+            m.name.clone(),
+            format!("{}", m.param_count),
+            format!("{}", m.n_layers),
+            format!("{}", m.d_model),
+            format!("{}", m.seq),
+            format!("{:?}", m.batches),
+            format!("{}", m.grad),
+            format!("{:?}", m.tp),
+            m.simulates.clone(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn survey_cmd() -> Result<()> {
+    let (papers, released) = survey::survey_dataset(survey::data::DEFAULT_SEED);
+    let s = survey::fig2_stats(&papers);
+    println!("== Figure 2 (capability gap) ==");
+    println!("papers surveyed               : {}", s.total_papers);
+    println!("papers since Feb 2023         : {}", s.post_feb_2023);
+    println!("  studying <40% MMLU models   : {:.1}%  (paper: 60.6%)", 100.0 * s.frac_sub40_post_2023);
+    println!("papers on ≥70% MMLU models    : {}", s.count_ge70);
+    println!("mean MMLU gap vs frontier     : {:.1} points", s.mean_gap_post_2023);
+    println!();
+    let mut table = Table::new("Figure 7 (research vs released model sizes)").header(vec![
+        "bucket", "research median (B)", "released median (B)", "ratio",
+    ]);
+    for b in survey::fig7_buckets(&papers, &released) {
+        table.row(vec![
+            b.label.to_string(),
+            format!("{:.2}", b.research_median_b),
+            format!("{:.2}", b.released_median_b),
+            format!("{:.1}x", b.ratio),
+        ]);
+    }
+    table.print();
+    println!("(paper endpoints: 2.7x in 2019-2020 → 10.3x in 2024)");
+    Ok(())
+}
+
+fn trace(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args.str_or("addr", "127.0.0.1:7757").parse()?;
+    let model = args.str_or("model", "tiny-sim");
+    let client = NdifClient::new(addr);
+    println!("hosted models: {:?}", client.models()?);
+    let m = Manifest::load(&artifacts_dir(), &model)?;
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| (i % m.vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new(&model, &tokens);
+    let h = tr.output(&format!("layer.{}", m.n_layers - 1));
+    let s = tr.save(h);
+    let res = tr.run_remote(&client)?;
+    println!(
+        "saved layer.{} output: shape {:?}, norm {:.4}",
+        m.n_layers - 1,
+        res.get(s).dims(),
+        res.get(s).norm()
+    );
+    Ok(())
+}
+
+fn selftest() -> Result<()> {
+    println!("engine: {}", nnscope::runtime::Engine::global().platform());
+    let lm = ModelRunner::load(&artifacts_dir(), "tiny-sim")?;
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+    let logits = lm.forward_plain(&tokens)?;
+    println!("tiny-sim forward OK, logits norm {:.4}", logits.norm());
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    let z = tr.scale(h, 0.0);
+    tr.set_output("layer.0", z);
+    let l = tr.output("lm_head");
+    let s = tr.save(l);
+    let res = tr.run_local(&lm)?;
+    println!("ablated trace OK, logits norm {:.4}", res.get(s).norm());
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Autoregressive generation over the fixed-window artifacts.
+//!
+//! The exported modules are shape-specialized to `[batch, seq]`; decoding
+//! slides the window: each step runs a full forward, takes the argmax of
+//! the last position, shifts the context left by one and appends the new
+//! token. This is O(steps × forward) — fine for the serving benchmarks and
+//! demos (a KV-cache would need seq-incremental artifacts, listed as
+//! future work in DESIGN.md).
+//!
+//! Generation composes with interventions: pass any [`Hooks`] and it is
+//! applied at every decode step — steering generation, the paper's
+//! Fig. 3 use case extended over time.
+
+use anyhow::Result;
+
+use crate::tensor::{Range1, Tensor};
+
+use super::runner::{Hooks, ModelRunner, NoHooks};
+
+/// Result of a generation run.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    /// Newly generated token ids, in order.
+    pub tokens: Vec<usize>,
+    /// Logit of each chosen token at its step (greedy score).
+    pub scores: Vec<f32>,
+}
+
+impl ModelRunner {
+    /// Greedy-decode `steps` tokens from a `[1, seq]` prompt, applying
+    /// `hooks` at every step's forward pass.
+    pub fn generate(
+        &self,
+        prompt: &Tensor,
+        steps: usize,
+        hooks: &mut dyn Hooks,
+    ) -> Result<Generation> {
+        assert_eq!(prompt.rank(), 2);
+        assert_eq!(prompt.dims()[0], 1, "generation is single-sequence");
+        let seq = self.manifest.seq;
+        assert_eq!(prompt.dims()[1], seq);
+        let vocab = self.manifest.vocab;
+
+        let mut ctx = prompt.clone();
+        let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
+        for _ in 0..steps {
+            let logits = self.forward(&ctx, hooks)?;
+            let last = logits.slice(&[Range1::one(0), Range1::one(seq - 1)]);
+            let last = last.reshape(&[vocab]);
+            let mut best = 0usize;
+            for (i, &v) in last.data().iter().enumerate() {
+                if v > last.data()[best] {
+                    best = i;
+                }
+            }
+            out.tokens.push(best);
+            out.scores.push(last.data()[best]);
+            // slide the window left, append the new token
+            let mut next = vec![0.0f32; seq];
+            next[..seq - 1].copy_from_slice(&ctx.data()[1..seq]);
+            next[seq - 1] = best as f32;
+            ctx = Tensor::new(&[1, seq], next);
+        }
+        Ok(out)
+    }
+
+    /// Greedy decode without interventions.
+    pub fn generate_plain(&self, prompt: &Tensor, steps: usize) -> Result<Generation> {
+        self.generate(prompt, steps, &mut NoHooks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::artifacts_dir;
+
+    fn runner() -> ModelRunner {
+        ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap()
+    }
+
+    #[test]
+    fn generates_requested_steps_within_vocab() {
+        let r = runner();
+        let prompt = Tensor::new(&[1, 16], (0..16).map(|i| (i % 9) as f32).collect());
+        let g = r.generate_plain(&prompt, 5).unwrap();
+        assert_eq!(g.tokens.len(), 5);
+        assert!(g.tokens.iter().all(|&t| t < r.manifest.vocab));
+        assert!(g.scores.iter().all(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let r = runner();
+        let prompt = Tensor::new(&[1, 16], (0..16).map(|i| (i % 5) as f32).collect());
+        let a = r.generate_plain(&prompt, 4).unwrap();
+        let b = r.generate_plain(&prompt, 4).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn steering_hook_changes_generation() {
+        struct Steer;
+        impl Hooks for Steer {
+            fn wants(&self, p: &str) -> bool {
+                p == "layer.0"
+            }
+            fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+                let dims = t.dims().to_vec();
+                t.slice_fill(
+                    &[Range1::all(), Range1::one(dims[1] - 1), Range1::new(0, 8)],
+                    4.0,
+                );
+                true
+            }
+        }
+        let r = runner();
+        let prompt = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+        let plain = r.generate_plain(&prompt, 4).unwrap();
+        let steered = r.generate(&prompt, 4, &mut Steer).unwrap();
+        assert_ne!(plain.tokens, steered.tokens, "steering had no effect");
+    }
+}

@@ -1,0 +1,24 @@
+//! Model substrate: synthetic weights, the module-sequence runner, and
+//! workload generation (IOI-style prompts, load-test requests).
+//!
+//! Models are defined entirely by their artifact manifests
+//! (`artifacts/<name>/manifest.json`); the Rust side has no hardcoded
+//! architecture knowledge beyond the module-kind naming scheme.
+
+pub mod generate;
+pub mod runner;
+pub mod weights;
+pub mod workload;
+
+pub use runner::{Hooks, ModelRunner, NoHooks};
+pub use weights::ModelWeights;
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory: `$NNSCOPE_ARTIFACTS` or `<crate>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("NNSCOPE_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,436 @@
+//! The model runner: executes the AOT module sequence with hook points.
+//!
+//! This is the Rust realization of the paper's interleaving mechanism
+//! (§B.1): NNsight registers PyTorch hooks at module boundaries and runs
+//! intervention sub-graphs when those hooks fire; here, module boundaries
+//! are artifact boundaries, and a [`Hooks`] implementation is invoked
+//! between module executions. Hidden states stay device-resident between
+//! modules; they cross to the host only at boundaries a hook actually
+//! wants (§Perf).
+//!
+//! The runner also provides:
+//! * [`ModelRunner::forward_sharded`] — the simulated tensor-parallel
+//!   deployment (Fig. 4): S shard workers execute per-shard partial layer
+//!   artifacts in parallel, and the runner performs the all-reduce;
+//! * [`ModelRunner::backward`] — the GradProtocol substrate: loss +
+//!   hidden-state gradients via the exported `lm_head_grad` and
+//!   `layer_vjp` artifacts, chained in reverse.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{DeviceTensor, Engine, Executable, Manifest};
+use crate::tensor::Tensor;
+use crate::threadpool;
+
+use super::weights::ModelWeights;
+
+/// Hook interface invoked at module boundaries during a forward pass.
+///
+/// `wants(point)` gates the host transfer: if no hook wants a point, the
+/// hidden state never leaves the device. `on_output` may mutate the tensor
+/// (a *setter* in intervention-graph terms) and must return `true` iff it
+/// did, so the runner knows to re-upload.
+pub trait Hooks {
+    fn wants(&self, point: &str) -> bool;
+    fn on_output(&mut self, point: &str, t: &mut Tensor) -> bool;
+}
+
+/// No interventions: the plain inference path.
+pub struct NoHooks;
+
+impl Hooks for NoHooks {
+    fn wants(&self, _point: &str) -> bool {
+        false
+    }
+    fn on_output(&mut self, _point: &str, _t: &mut Tensor) -> bool {
+        false
+    }
+}
+
+/// A loaded model: compiled executables + device-resident weights.
+pub struct ModelRunner {
+    pub manifest: Manifest,
+    engine: Arc<Engine>,
+    /// (module kind, batch) -> compiled executable.
+    exes: Mutex<HashMap<(String, usize), Arc<Executable>>>,
+    /// module key -> device weight buffers (upload-once cache).
+    wbufs: Mutex<HashMap<String, Arc<Vec<DeviceTensor>>>>,
+    /// host weights (kept for sharding / persistence).
+    pub weights: Arc<ModelWeights>,
+}
+
+impl ModelRunner {
+    /// Load with generated weights (the NDIF preload path). Compiles the
+    /// forward modules for every exported batch size eagerly.
+    pub fn load(artifacts_dir: &std::path::Path, name: &str) -> Result<ModelRunner> {
+        let manifest = Manifest::load(artifacts_dir, name)?;
+        let weights = ModelWeights::generate(&manifest);
+        let r = ModelRunner::new(manifest, weights)?;
+        r.precompile_forward()?;
+        Ok(r)
+    }
+
+    /// Load with weights read from `weights.bin` and **no** precompilation
+    /// — the cold HPC path whose setup time the benchmarks measure.
+    pub fn load_cold(artifacts_dir: &std::path::Path, name: &str) -> Result<ModelRunner> {
+        let manifest = Manifest::load(artifacts_dir, name)?;
+        let path = manifest.dir.join("weights.bin");
+        let weights = if path.exists() {
+            ModelWeights::load(&path, name)?
+        } else {
+            ModelWeights::generate(&manifest)
+        };
+        ModelRunner::new(manifest, weights)
+    }
+
+    pub fn new(manifest: Manifest, weights: ModelWeights) -> Result<ModelRunner> {
+        Ok(ModelRunner {
+            manifest,
+            engine: Engine::global(),
+            exes: Mutex::new(HashMap::new()),
+            wbufs: Mutex::new(HashMap::new()),
+            weights: Arc::new(weights),
+        })
+    }
+
+    /// Compile forward modules (embed/layer/lm_head) at all exported batch
+    /// sizes and upload all weights — everything a request will need.
+    pub fn precompile_forward(&self) -> Result<()> {
+        for b in self.manifest.batches.clone() {
+            for kind in ["embed", "layer", "lm_head"] {
+                self.executable(kind, b)?;
+            }
+        }
+        for key in self.weights.modules.keys() {
+            self.weight_buffers(key)?;
+        }
+        Ok(())
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Batch sizes the model was exported at (ascending).
+    pub fn available_batches(&self) -> &[usize] {
+        &self.manifest.batches
+    }
+
+    /// Smallest exported batch size that fits `n` rows.
+    pub fn batch_for(&self, n: usize) -> Result<usize> {
+        self.manifest
+            .batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no exported batch size fits {n} rows (available {:?})",
+                    self.manifest.batches
+                )
+            })
+    }
+
+    /// Get (compiling on first use) the executable for a module kind.
+    pub fn executable(&self, kind: &str, batch: usize) -> Result<Arc<Executable>> {
+        let key = (kind.to_string(), batch);
+        if let Some(e) = self.exes.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        // compile outside the lock (compiles can be slow)
+        let path = self.manifest.module_path(kind, batch)?;
+        let exe = Arc::new(self.engine.compile_file(&path)?);
+        let mut g = self.exes.lock().unwrap();
+        Ok(Arc::clone(g.entry(key).or_insert(exe)))
+    }
+
+    /// Device buffers for a module's weights (upload-once).
+    pub fn weight_buffers(&self, module_key: &str) -> Result<Arc<Vec<DeviceTensor>>> {
+        if let Some(b) = self.wbufs.lock().unwrap().get(module_key) {
+            return Ok(Arc::clone(b));
+        }
+        let tensors = self
+            .weights
+            .modules
+            .get(module_key)
+            .ok_or_else(|| anyhow!("no weights for module {module_key}"))?;
+        let bufs: Vec<DeviceTensor> =
+            tensors.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
+        let arc = Arc::new(bufs);
+        let mut g = self.wbufs.lock().unwrap();
+        Ok(Arc::clone(g.entry(module_key.to_string()).or_insert(arc)))
+    }
+
+    /// Pad a `[n, seq]` token tensor up to an exported batch size.
+    pub fn pad_tokens(&self, tokens: &Tensor) -> Result<(Tensor, usize)> {
+        assert_eq!(tokens.rank(), 2, "tokens must be [batch, seq]");
+        let n = tokens.dims()[0];
+        assert_eq!(tokens.dims()[1], self.manifest.seq, "seq mismatch");
+        let b = self.batch_for(n)?;
+        if b == n {
+            return Ok((tokens.clone(), n));
+        }
+        let pad = Tensor::zeros(&[b - n, self.manifest.seq]);
+        Ok((Tensor::concat(&[tokens, &pad], 0), n))
+    }
+
+    // -----------------------------------------------------------------------
+    // Forward
+    // -----------------------------------------------------------------------
+
+    /// Run the forward module sequence with hooks; returns `[b, seq, vocab]`
+    /// logits. `tokens` must be `[b, seq]` with `b` an exported batch size
+    /// (use [`ModelRunner::pad_tokens`] otherwise).
+    pub fn forward(&self, tokens: &Tensor, hooks: &mut dyn Hooks) -> Result<Tensor> {
+        let b = tokens.dims()[0];
+        let mut dev = self.engine.upload(tokens)?;
+        for point in self.manifest.forward_sequence() {
+            let kind = Manifest::module_kind(&point);
+            let exe = self.executable(kind, b)?;
+            let wbufs = self.weight_buffers(&point)?;
+            let mut args: Vec<&DeviceTensor> = Vec::with_capacity(1 + wbufs.len());
+            args.push(&dev);
+            args.extend(wbufs.iter());
+            dev = exe.run(&args, &self.manifest.output_dims(kind, b))?;
+            if hooks.wants(&point) {
+                let mut t = dev.download()?;
+                if hooks.on_output(&point, &mut t) {
+                    dev = self.engine.upload(&t)?;
+                }
+            }
+        }
+        dev.download()
+    }
+
+    /// Plain forward with no interventions.
+    pub fn forward_plain(&self, tokens: &Tensor) -> Result<Tensor> {
+        self.forward(tokens, &mut NoHooks)
+    }
+
+    // -----------------------------------------------------------------------
+    // Sharded forward (tensor-parallel simulation, Fig. 4)
+    // -----------------------------------------------------------------------
+
+    /// Forward with each layer executed as S tensor-parallel shards.
+    ///
+    /// Per layer: shard workers compute partial attention deltas in
+    /// parallel → all-reduce (sum) + residual → partial MLP deltas →
+    /// all-reduce + residual. Numerics must match [`ModelRunner::forward`]
+    /// (verified in integration tests). Hidden states move through the
+    /// host at shard boundaries, mirroring the DTensor gather/re-shard
+    /// described in §B.2.
+    pub fn forward_sharded(
+        &self,
+        tokens: &Tensor,
+        shards: usize,
+        hooks: &mut dyn Hooks,
+    ) -> Result<Tensor> {
+        if !self.manifest.tp.contains(&shards) {
+            return Err(anyhow!(
+                "model {} not exported for tp={shards} (available {:?})",
+                self.manifest.name,
+                self.manifest.tp
+            ));
+        }
+        let b = tokens.dims()[0];
+        let attn_kind = format!("attn_tp{shards}");
+        let mlp_kind = format!("mlp_tp{shards}");
+        let attn_exe = self.executable(&attn_kind, b)?;
+        let mlp_exe = self.executable(&mlp_kind, b)?;
+
+        // embed on the head shard
+        let embed_exe = self.executable("embed", b)?;
+        let wbufs = self.weight_buffers("embed")?;
+        let tok_dev = self.engine.upload(tokens)?;
+        let mut args: Vec<&DeviceTensor> = vec![&tok_dev];
+        args.extend(wbufs.iter());
+        let dev = embed_exe.run(&args, &self.manifest.output_dims("embed", b))?;
+        let mut x = dev.download()?;
+        if hooks.wants("embed") {
+            hooks.on_output("embed", &mut x);
+        }
+
+        let out_dims = self.manifest.output_dims("layer", b);
+        for i in 0..self.manifest.n_layers {
+            let key = format!("layer.{i}");
+            let shard_w = self.weights.shard_layer(&key, shards);
+
+            // phase 1: attention partials in parallel, then all-reduce
+            let x_arc = Arc::new(x.clone());
+            let jobs: Vec<_> = shard_w
+                .iter()
+                .map(|(attn_w, _)| {
+                    let exe = Arc::clone(&attn_exe);
+                    let eng = Arc::clone(&self.engine);
+                    let xs = Arc::clone(&x_arc);
+                    let w = attn_w.clone();
+                    let od = out_dims.clone();
+                    move || -> Result<Tensor> {
+                        let xd = eng.upload(&xs)?;
+                        let wd: Vec<DeviceTensor> =
+                            w.iter().map(|t| eng.upload(t)).collect::<Result<_>>()?;
+                        let mut args: Vec<&DeviceTensor> = vec![&xd];
+                        args.extend(wd.iter());
+                        exe.run(&args, &od)?.download()
+                    }
+                })
+                .collect();
+            let partials = threadpool::parallel_map(jobs, shards);
+            let mut h = x;
+            for p in partials {
+                h.add_assign(&p?);
+            }
+
+            // phase 2: MLP partials, all-reduce
+            let h_arc = Arc::new(h.clone());
+            let jobs: Vec<_> = shard_w
+                .iter()
+                .map(|(_, mlp_w)| {
+                    let exe = Arc::clone(&mlp_exe);
+                    let eng = Arc::clone(&self.engine);
+                    let hs = Arc::clone(&h_arc);
+                    let w = mlp_w.clone();
+                    let od = out_dims.clone();
+                    move || -> Result<Tensor> {
+                        let hd = eng.upload(&hs)?;
+                        let wd: Vec<DeviceTensor> =
+                            w.iter().map(|t| eng.upload(t)).collect::<Result<_>>()?;
+                        let mut args: Vec<&DeviceTensor> = vec![&hd];
+                        args.extend(wd.iter());
+                        exe.run(&args, &od)?.download()
+                    }
+                })
+                .collect();
+            let partials = threadpool::parallel_map(jobs, shards);
+            let mut out = h;
+            for p in partials {
+                out.add_assign(&p?);
+            }
+            x = out;
+            if hooks.wants(&key) {
+                hooks.on_output(&key, &mut x);
+            }
+        }
+
+        // lm_head on the head shard
+        let head_exe = self.executable("lm_head", b)?;
+        let wbufs = self.weight_buffers("lm_head")?;
+        let xd = self.engine.upload(&x)?;
+        let mut args: Vec<&DeviceTensor> = vec![&xd];
+        args.extend(wbufs.iter());
+        let mut logits = head_exe
+            .run(&args, &self.manifest.output_dims("lm_head", b))?
+            .download()?;
+        if hooks.wants("lm_head") {
+            hooks.on_output("lm_head", &mut logits);
+        }
+        Ok(logits)
+    }
+
+    // -----------------------------------------------------------------------
+    // Backward (GradProtocol substrate)
+    // -----------------------------------------------------------------------
+
+    /// Loss + gradients of the loss w.r.t. the outputs of the requested
+    /// layer points. Requires the model to have been exported with grad
+    /// modules. Returns `(loss, {point -> grad [b,seq,d]})`.
+    ///
+    /// Implementation: forward capturing each layer's input; `lm_head_grad`
+    /// yields ∂loss/∂h_N; `layer_vjp` chains it backwards one layer at a
+    /// time. ∂loss/∂(output of layer i) is the cotangent *entering* layer
+    /// i+1's vjp, i.e. the running cotangent after processing layers
+    /// N-1..i+1.
+    pub fn backward(
+        &self,
+        tokens: &Tensor,
+        targets: &Tensor,
+        points: &[String],
+    ) -> Result<(f32, HashMap<String, Tensor>)> {
+        if !self.manifest.grad {
+            return Err(anyhow!("model {} exported without grad modules", self.manifest.name));
+        }
+        let b = tokens.dims()[0];
+        let n = self.manifest.n_layers;
+
+        // forward, capturing each layer's input (= previous module output)
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(n);
+        struct Capture<'a> {
+            inputs: &'a mut Vec<Tensor>,
+            n: usize,
+        }
+        impl Hooks for Capture<'_> {
+            fn wants(&self, point: &str) -> bool {
+                // need outputs of embed .. layer.{n-2} = inputs of layers
+                point == "embed"
+                    || point
+                        .strip_prefix("layer.")
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .map(|i| i + 1 < self.n)
+                        .unwrap_or(false)
+            }
+            fn on_output(&mut self, _point: &str, t: &mut Tensor) -> bool {
+                self.inputs.push(t.clone());
+                false
+            }
+        }
+        let mut cap = Capture { inputs: &mut inputs, n };
+        let _ = self.forward(tokens, &mut cap)?;
+        debug_assert_eq!(inputs.len(), n);
+
+        // final hidden = forward of last layer over its input
+        let final_hidden = {
+            let exe = self.executable("layer", b)?;
+            let wb = self.weight_buffers(&format!("layer.{}", n - 1))?;
+            let xd = self.engine.upload(&inputs[n - 1])?;
+            let mut args: Vec<&DeviceTensor> = vec![&xd];
+            args.extend(wb.iter());
+            exe.run(&args, &self.manifest.output_dims("layer", b))?.download()?
+        };
+
+        // loss + dloss/dh_N
+        let grad_exe = self.executable("lm_head_grad", b)?;
+        let head_w = self.weight_buffers("lm_head")?;
+        let xd = self.engine.upload(&final_hidden)?;
+        let td = self.engine.upload(targets)?;
+        let mut args: Vec<&DeviceTensor> = vec![&xd];
+        args.extend(head_w.iter());
+        args.push(&td);
+        let outs = grad_exe.run_tupled(
+            &args,
+            &[vec![], vec![b, self.manifest.seq, self.manifest.d_model]],
+        )?;
+        let loss = outs[0].item();
+        let mut g = outs[1].clone();
+
+        // chain vjp backwards; record grads at requested points
+        let mut grads = HashMap::new();
+        let record = |grads: &mut HashMap<String, Tensor>, point: String, g: &Tensor| {
+            if points.contains(&point) {
+                grads.insert(point, g.clone());
+            }
+        };
+        record(&mut grads, format!("layer.{}", n - 1), &g);
+        let vjp_exe = self.executable("layer_vjp", b)?;
+        for i in (0..n).rev() {
+            let wb = self.weight_buffers(&format!("layer.{i}"))?;
+            let xd = self.engine.upload(&inputs[i])?;
+            let gd = self.engine.upload(&g)?;
+            let mut args: Vec<&DeviceTensor> = vec![&xd];
+            args.extend(wb.iter());
+            args.push(&gd);
+            g = vjp_exe
+                .run(&args, &self.manifest.output_dims("layer", b))?
+                .download()?;
+            if i > 0 {
+                record(&mut grads, format!("layer.{}", i - 1), &g);
+            } else {
+                record(&mut grads, "embed".to_string(), &g);
+            }
+        }
+        Ok((loss, grads))
+    }
+}

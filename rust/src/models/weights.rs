@@ -1,0 +1,328 @@
+//! Synthetic model weights — Rust side of the shared generation contract
+//! (mirrored bit-for-bit by `python/compile/weights.py`; see the init
+//! rules there).
+//!
+//! Weights can be persisted to / loaded from `weights.bin` so the HPC
+//! baseline's *setup time* measures a real disk-load + device-upload path,
+//! as in the paper's Fig. 6a / Table 2 (where HPC setup is dominated by
+//! weight loading and grows with parameter count).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::{Range1, Tensor};
+use crate::util::Prng;
+
+/// Standard deviation of the synthetic weight distribution (shared
+/// contract with python; manifest records it too).
+pub const WEIGHT_STD: f64 = 0.02;
+
+fn uniform_halfwidth() -> f64 {
+    WEIGHT_STD * 3.0_f64.sqrt()
+}
+
+/// Is this parameter a layernorm gain (init to ones)?
+pub fn is_gain(param: &str) -> bool {
+    param.ends_with("_g")
+}
+
+/// Is this parameter a bias (init to zeros)?
+pub fn is_bias(param: &str) -> bool {
+    param.ends_with("_b") || matches!(param, "bo" | "b1" | "b2")
+}
+
+/// Generate one parameter tensor by the shared contract.
+pub fn gen_param(cfg_name: &str, module: &str, param: &str, dims: &[usize]) -> Tensor {
+    if is_gain(param) {
+        return Tensor::full(dims, 1.0);
+    }
+    if is_bias(param) {
+        return Tensor::zeros(dims);
+    }
+    let mut t = Tensor::zeros(dims);
+    let mut rng = Prng::from_name(&format!("{cfg_name}/{module}/{param}"));
+    rng.fill_uniform_sym(t.data_mut(), uniform_halfwidth());
+    t
+}
+
+/// All weights for a model, keyed by module path (`embed`, `layer.<i>`,
+/// `lm_head`).
+#[derive(Clone)]
+pub struct ModelWeights {
+    pub model: String,
+    pub modules: BTreeMap<String, Vec<Tensor>>,
+}
+
+impl ModelWeights {
+    /// Generate from the manifest (the NDIF "preloaded" path — no disk).
+    pub fn generate(m: &Manifest) -> ModelWeights {
+        let mut modules = BTreeMap::new();
+        let embed = m.module("embed").expect("embed module");
+        modules.insert(
+            "embed".to_string(),
+            embed
+                .params()
+                .map(|p| gen_param(&m.name, "embed", &p.name, &p.resolve(0)))
+                .collect(),
+        );
+        let layer = m.module("layer").expect("layer module");
+        for i in 0..m.n_layers {
+            let key = format!("layer.{i}");
+            modules.insert(
+                key.clone(),
+                layer
+                    .params()
+                    .map(|p| gen_param(&m.name, &key, &p.name, &p.resolve(0)))
+                    .collect(),
+            );
+        }
+        let head = m.module("lm_head").expect("lm_head module");
+        modules.insert(
+            "lm_head".to_string(),
+            head.params()
+                .map(|p| gen_param(&m.name, "lm_head", &p.name, &p.resolve(0)))
+                .collect(),
+        );
+        ModelWeights { model: m.name.clone(), modules }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.modules.values().flatten().map(Tensor::numel).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    // -- persistence (the HPC weight-loading path) ---------------------------
+
+    const MAGIC: u32 = 0x4E_4E_53_57; // "NNSW"
+
+    /// Write `weights.bin`: a flat, self-describing little-endian format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(self.total_bytes() + 4096);
+        buf.extend_from_slice(&Self::MAGIC.to_le_bytes());
+        let n: u32 = self.modules.values().map(|v| v.len() as u32).sum();
+        buf.extend_from_slice(&n.to_le_bytes());
+        for (key, tensors) in &self.modules {
+            for (i, t) in tensors.iter().enumerate() {
+                let name = format!("{key}#{i}");
+                buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+                buf.extend_from_slice(name.as_bytes());
+                buf.extend_from_slice(&(t.rank() as u32).to_le_bytes());
+                for &d in t.dims() {
+                    buf.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                // bulk-copy the f32 payload
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.numel() * 4)
+                };
+                buf.extend_from_slice(bytes);
+            }
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Load `weights.bin` (the measured HPC setup path).
+    pub fn load(path: &Path, model: &str) -> Result<ModelWeights> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let mut off = 0usize;
+        let take_u32 = |buf: &[u8], off: &mut usize| -> Result<u32> {
+            if *off + 4 > buf.len() {
+                return Err(anyhow!("truncated weights file"));
+            }
+            let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        if take_u32(&buf, &mut off)? != Self::MAGIC {
+            return Err(anyhow!("bad magic in {path:?}"));
+        }
+        let n = take_u32(&buf, &mut off)? as usize;
+        let mut modules: BTreeMap<String, Vec<Tensor>> = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = take_u32(&buf, &mut off)? as usize;
+            let name = std::str::from_utf8(&buf[off..off + name_len])?.to_string();
+            off += name_len;
+            let rank = take_u32(&buf, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(take_u32(&buf, &mut off)? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            if off + numel * 4 > buf.len() {
+                return Err(anyhow!("truncated tensor payload for {name}"));
+            }
+            let mut data = vec![0.0f32; numel];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    buf[off..].as_ptr(),
+                    data.as_mut_ptr() as *mut u8,
+                    numel * 4,
+                );
+            }
+            off += numel * 4;
+            let key = name
+                .split_once('#')
+                .ok_or_else(|| anyhow!("bad tensor name {name}"))?
+                .0
+                .to_string();
+            modules.entry(key).or_default().push(Tensor::new(&dims, data));
+        }
+        Ok(ModelWeights { model: model.to_string(), modules })
+    }
+
+    /// Ensure `weights.bin` exists for a manifest; returns its path.
+    pub fn ensure_on_disk(m: &Manifest) -> Result<std::path::PathBuf> {
+        let path = m.dir.join("weights.bin");
+        if !path.exists() {
+            ModelWeights::generate(m).save(&path)?;
+        }
+        Ok(path)
+    }
+
+    // -- tensor-parallel slicing (mirror of python shard_layer_weights) ------
+
+    /// Slice one layer's weights into per-shard (attn_args, mlp_args).
+    ///
+    /// Layout contract (layer param order):
+    /// `[ln1_g, ln1_b, wq, wk, wv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2]`
+    pub fn shard_layer(&self, layer_key: &str, shards: usize) -> Vec<(Vec<Tensor>, Vec<Tensor>)> {
+        let w = &self.modules[layer_key];
+        assert_eq!(w.len(), 13, "unexpected layer param count");
+        let (ln1_g, ln1_b, wq, wk, wv, wo, bo) =
+            (&w[0], &w[1], &w[2], &w[3], &w[4], &w[5], &w[6]);
+        let (ln2_g, ln2_b, w1, b1, w2, b2) = (&w[7], &w[8], &w[9], &w[10], &w[11], &w[12]);
+        let d = wq.dims()[0];
+        let f = w1.dims()[1];
+        let (ds, fs) = (d / shards, f / shards);
+        (0..shards)
+            .map(|s| {
+                let (cs, ce) = (s * ds, (s + 1) * ds);
+                let col = [Range1::all(), Range1::new(cs, ce)];
+                let bo_s = if s == 0 { bo.clone() } else { Tensor::zeros(bo.dims()) };
+                let attn = vec![
+                    ln1_g.clone(),
+                    ln1_b.clone(),
+                    wq.slice(&col),
+                    wk.slice(&col),
+                    wv.slice(&col),
+                    wo.slice(&[Range1::new(cs, ce)]),
+                    bo_s,
+                ];
+                let (hs, he) = (s * fs, (s + 1) * fs);
+                let b2_s = if s == 0 { b2.clone() } else { Tensor::zeros(b2.dims()) };
+                let mlp = vec![
+                    ln2_g.clone(),
+                    ln2_b.clone(),
+                    w1.slice(&[Range1::all(), Range1::new(hs, he)]),
+                    b1.slice(&[Range1::new(hs, he)]),
+                    w2.slice(&[Range1::new(hs, he)]),
+                    b2_s,
+                ];
+                (attn, mlp)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::artifacts_dir;
+
+    fn tiny() -> Manifest {
+        Manifest::load(&artifacts_dir(), "tiny-sim").unwrap()
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_schema_shaped() {
+        let m = tiny();
+        let a = ModelWeights::generate(&m);
+        let b = ModelWeights::generate(&m);
+        assert_eq!(a.modules.len(), 2 + m.n_layers);
+        for (k, ts) in &a.modules {
+            for (i, t) in ts.iter().enumerate() {
+                assert_eq!(t.data(), b.modules[k][i].data(), "{k}#{i}");
+            }
+        }
+        // layer weights differ across layers
+        assert_ne!(a.modules["layer.0"][2].data(), a.modules["layer.1"][2].data());
+    }
+
+    #[test]
+    fn gains_ones_biases_zeros() {
+        let m = tiny();
+        let w = ModelWeights::generate(&m);
+        let layer = m.module("layer").unwrap();
+        for (spec, t) in layer.params().zip(&w.modules["layer.0"]) {
+            if is_gain(&spec.name) {
+                assert!(t.data().iter().all(|&v| v == 1.0), "{}", spec.name);
+            }
+            if is_bias(&spec.name) {
+                assert!(t.data().iter().all(|&v| v == 0.0), "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let m = tiny();
+        let w = ModelWeights::generate(&m);
+        let tmp = std::env::temp_dir().join("nnscope_test_weights.bin");
+        w.save(&tmp).unwrap();
+        let r = ModelWeights::load(&tmp, "tiny-sim").unwrap();
+        assert_eq!(w.total_params(), r.total_params());
+        for (k, ts) in &w.modules {
+            for (i, t) in ts.iter().enumerate() {
+                assert_eq!(t.dims(), r.modules[k][i].dims());
+                assert_eq!(t.data(), r.modules[k][i].data());
+            }
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn param_count_matches_manifest() {
+        let m = tiny();
+        let w = ModelWeights::generate(&m);
+        assert_eq!(w.total_params(), m.param_count);
+    }
+
+    #[test]
+    fn shard_slicing_shapes() {
+        let m = tiny();
+        let w = ModelWeights::generate(&m);
+        let shards = w.shard_layer("layer.0", 2);
+        assert_eq!(shards.len(), 2);
+        let (attn, mlp) = &shards[0];
+        assert_eq!(attn[2].dims(), &[m.d_model, m.d_model / 2]); // wq_s
+        assert_eq!(attn[5].dims(), &[m.d_model / 2, m.d_model]); // wo_s
+        assert_eq!(mlp[2].dims(), &[m.d_model, m.d_ff / 2]); // w1_s
+        // shard columns reassemble the original
+        let full = &w.modules["layer.0"][2];
+        let s0 = &shards[0].0[2];
+        let s1 = &shards[1].0[2];
+        let cat = Tensor::concat(&[s0, s1], 1);
+        assert_eq!(&cat, full);
+    }
+
+    #[test]
+    fn weight_values_match_python_contract() {
+        // first values of tiny-sim/layer.0/wq with a=0.02*sqrt(3); the
+        // python side generates the identical stream (see weights.py).
+        let t = gen_param("tiny-sim", "layer.0", "wq", &[2, 2]);
+        let mut rng = Prng::from_name("tiny-sim/layer.0/wq");
+        let mut expect = [0.0f32; 4];
+        rng.fill_uniform_sym(&mut expect, WEIGHT_STD * 3.0_f64.sqrt());
+        assert_eq!(t.data(), expect);
+    }
+}

@@ -1,0 +1,193 @@
+//! Workload generation: the synthetic IOI-style dataset and load-test
+//! request sampling.
+//!
+//! The paper's evaluation workload is "a single batch of 32 examples from
+//! the Indirect Object Identification (IOI) dataset" (Wang et al., 2022)
+//! with activation patching at a chosen layer, measured by logit
+//! difference. Real IOI prompts need a real tokenizer; our substitute
+//! (DESIGN.md §3) keeps the structure that matters: fixed-template token
+//! sequences over the model vocabulary in which two "name" tokens appear,
+//! the correct continuation is the indirect object (the name NOT repeated
+//! before the final position), and patching a hidden state from a
+//! counterfactual prompt flips the prediction.
+
+use crate::tensor::Tensor;
+use crate::util::Prng;
+
+/// One IOI-style example: a base prompt, a counterfactual (source) prompt
+/// with the names swapped, and the answer/foil token ids.
+#[derive(Clone, Debug)]
+pub struct IoiExample {
+    pub base: Vec<f32>,
+    pub source: Vec<f32>,
+    /// indirect object (correct answer) token id
+    pub target: usize,
+    /// subject (incorrect) token id
+    pub foil: usize,
+}
+
+/// A batch of IOI examples plus tensors shaped for the model.
+pub struct IoiBatch {
+    pub examples: Vec<IoiExample>,
+    pub seq: usize,
+}
+
+/// Template token ids (small reserved region of the vocab acts as the
+/// "grammar"; names are drawn from the rest).
+const T_AND: usize = 1;
+const T_WENT: usize = 2;
+const T_TO: usize = 3;
+const T_THE: usize = 4;
+const T_STORE: usize = 5;
+const T_GAVE: usize = 6;
+const T_A: usize = 7;
+const T_DRINK: usize = 8;
+const RESERVED: usize = 16;
+
+impl IoiBatch {
+    /// Generate `n` examples for a model with the given vocab/seq.
+    pub fn generate(n: usize, vocab: usize, seq: usize, seed: u64) -> IoiBatch {
+        assert!(vocab > RESERVED + 2, "vocab too small for IOI templates");
+        let mut rng = Prng::new(seed);
+        let examples = (0..n)
+            .map(|_| {
+                // two distinct names
+                let name_a = RESERVED + rng.range(0, vocab - RESERVED);
+                let mut name_b = RESERVED + rng.range(0, vocab - RESERVED);
+                while name_b == name_a {
+                    name_b = RESERVED + rng.range(0, vocab - RESERVED);
+                }
+                // "A and B went to the store, B gave a drink to" → A
+                let mk = |s1: usize, s2: usize, subj: usize| -> Vec<f32> {
+                    let mut t = vec![
+                        s1, T_AND, s2, T_WENT, T_TO, T_THE, T_STORE, subj, T_GAVE, T_A, T_DRINK,
+                        T_TO,
+                    ];
+                    t.resize(seq, 0); // pad with token 0
+                    // right-align so "to" is the last position (next-token
+                    // prediction target = indirect object)
+                    t.rotate_right(seq - 12);
+                    t.into_iter().map(|x| x as f32).collect()
+                };
+                IoiExample {
+                    base: mk(name_a, name_b, name_b),
+                    source: mk(name_b, name_a, name_a),
+                    target: name_a,
+                    foil: name_b,
+                }
+            })
+            .collect();
+        IoiBatch { examples, seq }
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// `[n, seq]` token tensor of the base prompts.
+    pub fn base_tokens(&self) -> Tensor {
+        self.tokens(|e| &e.base)
+    }
+
+    /// `[n, seq]` token tensor of the counterfactual prompts.
+    pub fn source_tokens(&self) -> Tensor {
+        self.tokens(|e| &e.source)
+    }
+
+    fn tokens(&self, f: impl Fn(&IoiExample) -> &Vec<f32>) -> Tensor {
+        let n = self.examples.len();
+        let mut data = Vec::with_capacity(n * self.seq);
+        for e in &self.examples {
+            data.extend_from_slice(f(e));
+        }
+        Tensor::new(&[n, self.seq], data)
+    }
+
+    /// Interleaved batch [source_0, base_0, source_1, base_1, ...] as used
+    /// by the classic single-pass patching recipe (source row feeds the
+    /// patch for the base row).
+    pub fn interleaved_tokens(&self) -> Tensor {
+        let n = self.examples.len();
+        let mut data = Vec::with_capacity(2 * n * self.seq);
+        for e in &self.examples {
+            data.extend_from_slice(&e.source);
+            data.extend_from_slice(&e.base);
+        }
+        Tensor::new(&[2 * n, self.seq], data)
+    }
+}
+
+/// Load-test request (Fig. 9): a short prompt and a random layer whose
+/// output the user saves.
+#[derive(Clone, Debug)]
+pub struct LoadTestRequest {
+    pub tokens: Vec<f32>,
+    pub layer: usize,
+}
+
+/// Sample a Fig. 9-style request: "a prompt containing up to 24 tokens
+/// that accesses and saves the output of a layer selected uniformly at
+/// random".
+pub fn load_test_request(rng: &mut Prng, vocab: usize, seq: usize, n_layers: usize) -> LoadTestRequest {
+    let len = rng.range(1, 24.min(seq) + 1);
+    let mut tokens = vec![0.0f32; seq];
+    for t in tokens.iter_mut().take(len) {
+        *t = rng.range(1, vocab) as f32;
+    }
+    LoadTestRequest { tokens, layer: rng.range(0, n_layers) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ioi_shapes_and_determinism() {
+        let a = IoiBatch::generate(8, 512, 32, 42);
+        let b = IoiBatch::generate(8, 512, 32, 42);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.base_tokens().dims(), &[8, 32]);
+        assert_eq!(a.base_tokens().data(), b.base_tokens().data());
+        assert_eq!(a.interleaved_tokens().dims(), &[16, 32]);
+    }
+
+    #[test]
+    fn ioi_names_swap_between_base_and_source() {
+        let batch = IoiBatch::generate(4, 512, 32, 7);
+        for e in &batch.examples {
+            assert_ne!(e.target, e.foil);
+            assert!(e.target >= RESERVED && e.foil >= RESERVED);
+            // base ends with "... subj gave a drink to" where subj == foil
+            let last = |v: &Vec<f32>| v[v.len() - 5] as usize;
+            assert_eq!(last(&e.base), e.foil);
+            assert_eq!(last(&e.source), e.target);
+            // final token is T_TO in both
+            assert_eq!(*e.base.last().unwrap() as usize, T_TO);
+            assert_eq!(*e.source.last().unwrap() as usize, T_TO);
+        }
+    }
+
+    #[test]
+    fn ioi_tokens_within_vocab() {
+        let batch = IoiBatch::generate(16, 64, 16, 1);
+        for e in &batch.examples {
+            assert!(e.base.iter().all(|&t| (t as usize) < 64));
+            assert!(e.source.iter().all(|&t| (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn load_test_request_bounds() {
+        let mut rng = Prng::new(3);
+        for _ in 0..100 {
+            let r = load_test_request(&mut rng, 512, 32, 8);
+            assert_eq!(r.tokens.len(), 32);
+            assert!(r.layer < 8);
+            assert!(r.tokens.iter().all(|&t| (t as usize) < 512));
+        }
+    }
+}

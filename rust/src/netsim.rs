@@ -1,0 +1,147 @@
+//! Simulated wide-area network link.
+//!
+//! The paper's Petals-vs-NDIF comparison (§4, Fig. 6c) ran over "a network
+//! with a bandwidth of about 60 MB/s"; the NDIF remote-overhead result
+//! (Fig. 6b) measures a roughly constant client↔server communication cost.
+//! This testbed has only loopback, so client↔server transports route their
+//! payloads through a [`NetSim`] that charges latency + serialization time
+//! against the *actual* byte counts being moved. The simulation either
+//! sleeps for the computed duration (`Mode::Sleep`, used by benchmarks so
+//! wallclock reflects the link) or merely accounts it (`Mode::Account`,
+//! used by fast tests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How the simulated link manifests its cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Sleep for the computed transfer time (benchmarks).
+    Sleep,
+    /// Only record the cost; no sleeping (unit tests).
+    Account,
+}
+
+/// A point-to-point link with fixed one-way latency and symmetric bandwidth.
+#[derive(Clone)]
+pub struct NetSim {
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+    /// Bandwidth in bytes per second.
+    pub bandwidth_bps: f64,
+    pub mode: Mode,
+    /// Total bytes charged (shared across clones).
+    bytes_total: Arc<AtomicU64>,
+    /// Total simulated seconds charged, in nanoseconds (shared).
+    nanos_total: Arc<AtomicU64>,
+}
+
+impl NetSim {
+    pub fn new(latency_s: f64, bandwidth_bps: f64, mode: Mode) -> NetSim {
+        assert!(bandwidth_bps > 0.0);
+        NetSim {
+            latency_s,
+            bandwidth_bps,
+            mode,
+            bytes_total: Arc::new(AtomicU64::new(0)),
+            nanos_total: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The paper's measured link: ~60 MB/s, 10 ms one-way latency.
+    pub fn paper_wan(mode: Mode) -> NetSim {
+        NetSim::new(0.010, 60.0e6, mode)
+    }
+
+    /// An ideal link: zero cost (local execution paths).
+    pub fn ideal() -> NetSim {
+        NetSim::new(0.0, f64::INFINITY, Mode::Account)
+    }
+
+    /// Seconds a one-way transfer of `bytes` takes on this link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        if self.bandwidth_bps.is_infinite() {
+            return self.latency_s;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Charge a one-way transfer; sleeps in `Mode::Sleep`.
+    pub fn send(&self, bytes: usize) -> f64 {
+        let t = self.transfer_time(bytes);
+        self.bytes_total.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.nanos_total
+            .fetch_add((t * 1e9) as u64, Ordering::Relaxed);
+        if self.mode == Mode::Sleep && t > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(t));
+        }
+        t
+    }
+
+    /// Charge a round trip of `up` then `down` bytes.
+    pub fn round_trip(&self, up: usize, down: usize) -> f64 {
+        self.send(up) + self.send(down)
+    }
+
+    /// Total bytes charged so far (across clones).
+    pub fn bytes_transferred(&self) -> u64 {
+        self.bytes_total.load(Ordering::Relaxed)
+    }
+
+    /// Total simulated seconds charged so far (across clones).
+    pub fn seconds_charged(&self) -> f64 {
+        self.nanos_total.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.bytes_total.store(0, Ordering::Relaxed);
+        self.nanos_total.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = NetSim::new(0.010, 1_000_000.0, Mode::Account);
+        // 1 MB over 1 MB/s + 10 ms latency = 1.01 s
+        assert!((l.transfer_time(1_000_000) - 1.010).abs() < 1e-9);
+        assert!((l.transfer_time(0) - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accounting_accumulates_across_clones() {
+        let l = NetSim::new(0.0, 100.0, Mode::Account);
+        let l2 = l.clone();
+        l.send(50);
+        l2.send(150);
+        assert_eq!(l.bytes_transferred(), 200);
+        assert!((l.seconds_charged() - 2.0).abs() < 1e-6);
+        l.reset();
+        assert_eq!(l2.bytes_transferred(), 0);
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let l = NetSim::ideal();
+        assert_eq!(l.send(1_000_000_000), 0.0);
+    }
+
+    #[test]
+    fn round_trip_charges_both_ways() {
+        let l = NetSim::new(0.001, 1000.0, Mode::Account);
+        let t = l.round_trip(1000, 2000);
+        assert!((t - (0.001 + 1.0 + 0.001 + 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sleep_mode_actually_sleeps() {
+        let l = NetSim::new(0.005, f64::MAX, Mode::Sleep);
+        let t0 = std::time::Instant::now();
+        l.send(10);
+        assert!(t0.elapsed().as_secs_f64() >= 0.004);
+    }
+}

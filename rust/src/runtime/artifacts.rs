@@ -1,0 +1,307 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The Rust side is driven entirely by `manifest.json` —
+//! model dimensions, module argument schemas (inputs vs. parameters, with
+//! `-1` as the batch placeholder), exported batch sizes, and file names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{parse, Json};
+
+/// Whether a module argument is a runtime input or a model parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    Input,
+    Param,
+}
+
+/// One argument of a module executable, in positional order.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub kind: ArgKind,
+    pub name: String,
+    /// Shape with `-1` as the batch placeholder.
+    pub shape: Vec<i64>,
+}
+
+impl ArgSpec {
+    /// Concrete shape at a given batch size.
+    pub fn resolve(&self, batch: usize) -> Vec<usize> {
+        self.shape
+            .iter()
+            .map(|&d| if d == -1 { batch } else { d as usize })
+            .collect()
+    }
+}
+
+/// One exported module (embed / layer / lm_head / grad / tp shards).
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    /// batch size -> artifact file name
+    pub files: BTreeMap<usize, String>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+impl ModuleSpec {
+    pub fn file_for(&self, batch: usize) -> Result<&str> {
+        self.files
+            .get(&batch)
+            .map(String::as_str)
+            .ok_or_else(|| {
+                anyhow!(
+                    "module {} not exported at batch {batch} (available: {:?})",
+                    self.name,
+                    self.files.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// The parameter arguments, in order.
+    pub fn params(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.kind == ArgKind::Param)
+    }
+
+    pub fn inputs(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.kind == ArgKind::Input)
+    }
+}
+
+/// A model's manifest: dimensions + module specs.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batches: Vec<usize>,
+    pub grad: bool,
+    pub tp: Vec<usize>,
+    pub simulates: String,
+    pub param_count: usize,
+    pub modules: BTreeMap<String, ModuleSpec>,
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/<name>/manifest.json`.
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Manifest> {
+        let dir = artifacts_dir.join(name);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {path:?}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("parse manifest {path:?}: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Manifest> {
+        let req_usize = |key: &str| -> Result<usize> {
+            j.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest missing integer field '{key}'"))
+        };
+        let mut modules = BTreeMap::new();
+        let mods = j
+            .get("modules")
+            .as_object()
+            .ok_or_else(|| anyhow!("manifest missing modules"))?;
+        for (mod_name, m) in mods {
+            let mut files = BTreeMap::new();
+            for (b, f) in m
+                .get("files")
+                .as_object()
+                .ok_or_else(|| anyhow!("module {mod_name} missing files"))?
+            {
+                let batch: usize = b.parse().context("batch key")?;
+                files.insert(
+                    batch,
+                    f.as_str()
+                        .ok_or_else(|| anyhow!("bad file entry"))?
+                        .to_string(),
+                );
+            }
+            let args = m
+                .get("args")
+                .as_array()
+                .ok_or_else(|| anyhow!("module {mod_name} missing args"))?
+                .iter()
+                .map(|a| {
+                    let kind = match a.get("kind").as_str() {
+                        Some("input") => ArgKind::Input,
+                        Some("param") => ArgKind::Param,
+                        other => return Err(anyhow!("bad arg kind {other:?}")),
+                    };
+                    Ok(ArgSpec {
+                        kind,
+                        name: a
+                            .get("name")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("arg missing name"))?
+                            .to_string(),
+                        shape: a
+                            .get("shape")
+                            .as_i64_vec()
+                            .ok_or_else(|| anyhow!("arg missing shape"))?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            modules.insert(
+                mod_name.clone(),
+                ModuleSpec {
+                    name: mod_name.clone(),
+                    files,
+                    args,
+                    outputs: m.get("outputs").as_usize().unwrap_or(1),
+                },
+            );
+        }
+        Ok(Manifest {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest missing name"))?
+                .to_string(),
+            d_model: req_usize("d_model")?,
+            n_layers: req_usize("n_layers")?,
+            n_heads: req_usize("n_heads")?,
+            d_ff: req_usize("d_ff")?,
+            vocab: req_usize("vocab")?,
+            seq: req_usize("seq")?,
+            batches: j
+                .get("batches")
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("manifest missing batches"))?,
+            grad: j.get("grad").as_bool().unwrap_or(false),
+            tp: j.get("tp").as_usize_vec().unwrap_or_default(),
+            simulates: j.get("simulates").as_str().unwrap_or("").to_string(),
+            param_count: req_usize("param_count")?,
+            modules,
+            dir,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no module '{name}'", self.name))
+    }
+
+    /// Path to a module's HLO artifact at a batch size.
+    pub fn module_path(&self, module: &str, batch: usize) -> Result<PathBuf> {
+        Ok(self.dir.join(self.module(module)?.file_for(batch)?))
+    }
+
+    /// The ordered module sequence of a forward pass.
+    pub fn forward_sequence(&self) -> Vec<String> {
+        let mut seq = vec!["embed".to_string()];
+        for i in 0..self.n_layers {
+            seq.push(format!("layer.{i}"));
+        }
+        seq.push("lm_head".to_string());
+        seq
+    }
+
+    /// Map a hook point like `layer.3` to the executable module kind
+    /// (`layer`) plus its weight key (`layer.3`). `embed`/`lm_head` map to
+    /// themselves.
+    pub fn module_kind(point: &str) -> &str {
+        if point.starts_with("layer.") {
+            "layer"
+        } else {
+            point
+        }
+    }
+
+    /// Output dims of a forward module at a batch size.
+    pub fn output_dims(&self, module_kind: &str, batch: usize) -> Vec<usize> {
+        match module_kind {
+            "embed" | "layer" | "layer_vjp" => vec![batch, self.seq, self.d_model],
+            "lm_head" => vec![batch, self.seq, self.vocab],
+            m if m.starts_with("attn_tp") || m.starts_with("mlp_tp") => {
+                vec![batch, self.seq, self.d_model]
+            }
+            other => panic!("unknown module kind {other}"),
+        }
+    }
+
+    /// All model names present under an artifacts directory.
+    pub fn list(artifacts_dir: &Path) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(artifacts_dir) {
+            for e in rd.flatten() {
+                if e.path().join("manifest.json").exists() {
+                    if let Some(n) = e.file_name().to_str() {
+                        names.push(n.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Total f32 weight bytes (for transfer/load accounting).
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+
+    /// Bytes of one hidden-state tensor at a batch size (netsim accounting).
+    pub fn hidden_bytes(&self, batch: usize) -> usize {
+        batch * self.seq * self.d_model * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let m = Manifest::load(&artifacts_dir(), "tiny-sim").unwrap();
+        assert_eq!(m.d_model, 32);
+        assert_eq!(m.n_layers, 2);
+        assert!(m.grad);
+        assert_eq!(m.tp, vec![2]);
+        assert!(m.modules.contains_key("layer"));
+        assert!(m.modules.contains_key("lm_head_grad"));
+        let layer = m.module("layer").unwrap();
+        assert_eq!(layer.params().count(), 13);
+        assert_eq!(layer.inputs().count(), 1);
+        assert_eq!(layer.outputs, 1);
+        assert!(m.module_path("layer", 1).unwrap().exists());
+        assert!(m.module_path("layer", 7).is_err());
+    }
+
+    #[test]
+    fn arg_resolution() {
+        let a = ArgSpec { kind: ArgKind::Input, name: "x".into(), shape: vec![-1, 16, 32] };
+        assert_eq!(a.resolve(4), vec![4, 16, 32]);
+    }
+
+    #[test]
+    fn forward_sequence_ordering() {
+        let m = Manifest::load(&artifacts_dir(), "tiny-sim").unwrap();
+        assert_eq!(m.forward_sequence(), vec!["embed", "layer.0", "layer.1", "lm_head"]);
+        assert_eq!(Manifest::module_kind("layer.5"), "layer");
+        assert_eq!(Manifest::module_kind("embed"), "embed");
+    }
+
+    #[test]
+    fn lists_models() {
+        let names = Manifest::list(&artifacts_dir());
+        assert!(names.contains(&"tiny-sim".to_string()));
+        assert!(names.contains(&"llama8b-sim".to_string()));
+        assert!(names.len() >= 13);
+    }
+}

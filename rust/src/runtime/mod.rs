@@ -1,0 +1,15 @@
+//! Runtime: PJRT execution of AOT-compiled artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API) to load the HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them on the CPU client,
+//! and execute them from the Rust request path. Python never runs here.
+//!
+//! * [`pjrt`] — client/executable/buffer plumbing and tensor conversion;
+//! * [`artifacts`] — `manifest.json` parsing: module specs, arg schemas,
+//!   shape resolution.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArgKind, ArgSpec, Manifest, ModuleSpec};
+pub use pjrt::{DeviceTensor, Engine, Executable};

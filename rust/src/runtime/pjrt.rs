@@ -1,0 +1,172 @@
+//! PJRT plumbing: one process-wide CPU client, executable compilation from
+//! HLO text, and host-tensor ⇄ device-buffer conversion.
+//!
+//! Single-output modules are exported with a non-tuple root, so their
+//! output buffer chains directly into the next module via `execute_b` —
+//! hidden states stay "on device" between layers and only cross to the
+//! host at module boundaries that an intervention actually touches (§Perf).
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// The process-wide PJRT CPU client.
+///
+/// PJRT clients are heavyweight (thread pools, allocator state); NDIF's
+/// model services all share this one, mirroring the paper's single shared
+/// deployment per host.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+
+// The xla crate's raw pointers are not marked Send/Sync but the PJRT CPU
+// client is internally synchronized; the crate simply lacks the markers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Get (or create) the shared engine.
+    pub fn global() -> Arc<Engine> {
+        ENGINE
+            .get_or_init(|| {
+                let client = xla::PjRtClient::cpu().expect("create PJRT CPU client");
+                Arc::new(Engine { client })
+            })
+            .clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn compile_file(self: &Arc<Self>, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        self.compile_proto(&proto)
+            .with_context(|| format!("compile {path:?}"))
+    }
+
+    /// Compile HLO text already in memory.
+    pub fn compile_text(self: &Arc<Self>, text: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
+            .map_err(|e| anyhow!("parse hlo text: {e:?}"))?;
+        self.compile_proto(&proto)
+    }
+
+    fn compile_proto(self: &Arc<Self>, proto: &xla::HloModuleProto) -> Result<Executable> {
+        let comp = xla::XlaComputation::from_proto(proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("xla compile: {e:?}"))?;
+        Ok(Executable { exe: Mutex::new(exe), engine: Arc::clone(self) })
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(t.data(), t.dims(), None)
+            .map_err(|e| anyhow!("upload: {e:?}"))?;
+        Ok(DeviceTensor { buf, dims: t.dims().to_vec() })
+    }
+}
+
+/// A device buffer plus its logical dims (PJRT shapes are row-major f32
+/// arrays throughout this codebase).
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    dims: Vec<usize>,
+}
+
+unsafe impl Send for DeviceTensor {}
+// PJRT CPU buffers are immutable after creation; concurrent reads are safe.
+unsafe impl Sync for DeviceTensor {}
+
+impl DeviceTensor {
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Download to a host tensor.
+    pub fn download(&self) -> Result<Tensor> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        Ok(Tensor::new(&self.dims, data))
+    }
+}
+
+/// A compiled module executable.
+///
+/// The inner `PjRtLoadedExecutable` is behind a mutex: PJRT CPU execution
+/// is itself thread-safe, but the xla crate wrapper offers `&self` methods
+/// over raw pointers without the marker traits, so we serialize calls per
+/// executable (distinct modules still run concurrently, which is what the
+/// shard workers need).
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    engine: Arc<Engine>,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with device-resident args; returns the raw output buffers.
+    fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.exe.lock().unwrap();
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Execute a single-output module: device args → device output.
+    pub fn run(&self, args: &[&DeviceTensor], out_dims: &[usize]) -> Result<DeviceTensor> {
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buf).collect();
+        let mut outs = self.run_buffers(&bufs)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("expected 1 output buffer, got {}", outs.len()));
+        }
+        Ok(DeviceTensor { buf: outs.swap_remove(0), dims: out_dims.to_vec() })
+    }
+
+    /// Execute a module with a tuple root (e.g. lm_head_grad): device args
+    /// → host tensors (tuple leaves), with the dims provided per leaf.
+    pub fn run_tupled(&self, args: &[&DeviceTensor], out_dims: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| &a.buf).collect();
+        let outs = self.run_buffers(&bufs)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("expected 1 tuple buffer, got {}", outs.len()));
+        }
+        let mut lit = outs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("tuple download: {e:?}"))?;
+        let leaves = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        if leaves.len() != out_dims.len() {
+            return Err(anyhow!("expected {} leaves, got {}", out_dims.len(), leaves.len()));
+        }
+        leaves
+            .into_iter()
+            .zip(out_dims)
+            .map(|(l, dims)| {
+                let data = l.to_vec::<f32>().map_err(|e| anyhow!("leaf to_vec: {e:?}"))?;
+                Ok(Tensor::new(dims, data))
+            })
+            .collect()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}

@@ -1,0 +1,269 @@
+//! Batch-grouped parallel co-tenancy (§B.2).
+//!
+//! "During tracing, intervention nodes record batch groups that specify
+//! tensor slices. During execution, the system extracts appropriate
+//! slices …, enabling multiple users to share execution within a single
+//! forward pass." — the paper describes this as future work; we implement
+//! it: [`execute_merged`] runs k compatible intervention graphs in ONE
+//! forward pass, each graph seeing and touching only its own rows.
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{GraphResult, InterventionGraph};
+use crate::interp::Executor;
+use crate::models::{Hooks, ModelRunner};
+use crate::tensor::Tensor;
+
+/// Co-tenancy policy for a model service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoTenancy {
+    /// One request per forward pass (arrival order).
+    Sequential,
+    /// Merge up to `max_merge` compatible requests per forward pass.
+    Parallel { max_merge: usize },
+}
+
+/// Plan merge chunks: split a burst of jobs (by their row counts) into
+/// groups whose total rows land on an exported batch size with minimal
+/// padding — merging 16 single-row requests into one 32-row forward wastes
+/// half the compute when 8-row executables exist. Greedy: each chunk
+/// targets the largest exported batch ≤ remaining rows (min the largest
+/// exported batch overall).
+pub fn plan_merge_chunks(rows: &[usize], exported: &[usize]) -> Vec<usize> {
+    let max_b = exported.iter().copied().max().unwrap_or(1);
+    let mut chunks = Vec::new();
+    let mut i = 0;
+    while i < rows.len() {
+        let remaining: usize = rows[i..].iter().sum();
+        // largest exported batch not exceeding the remaining rows (fall
+        // back to max_b so oversized tails still split sensibly)
+        let target = exported
+            .iter()
+            .copied()
+            .filter(|&b| b <= remaining)
+            .max()
+            .unwrap_or(max_b);
+        let mut take = 0usize;
+        let mut acc = 0usize;
+        while i + take < rows.len() && acc + rows[i + take] <= target {
+            acc += rows[i + take];
+            take += 1;
+        }
+        let take = take.max(1); // a single over-sized job forms its own chunk
+        chunks.push(take);
+        i += take;
+    }
+    chunks
+}
+
+/// Can these graphs share one forward pass on this runner?
+///
+/// Requirements: same model, no gradient work (the backward pass is
+/// per-request), unsharded, and the combined rows fit an exported batch.
+pub fn mergeable(graphs: &[&InterventionGraph], runner: &ModelRunner) -> bool {
+    if graphs.len() < 2 {
+        return true;
+    }
+    let total_rows: usize = graphs.iter().map(|g| g.batch).sum();
+    graphs.iter().all(|g| {
+        g.model == runner.manifest.name
+            && g.grad_points().is_empty()
+            && g.shards <= 1
+            && g.batch > 0
+    }) && runner.batch_for(total_rows).is_ok()
+}
+
+/// Dispatches hooks to every co-tenant executor; any setter marks the
+/// activation modified.
+struct MultiHooks<'a, 'g> {
+    executors: &'a mut [Executor<'g>],
+}
+
+impl Hooks for MultiHooks<'_, '_> {
+    fn wants(&self, point: &str) -> bool {
+        self.executors.iter().any(|e| e.wants(point))
+    }
+
+    fn on_output(&mut self, point: &str, t: &mut Tensor) -> bool {
+        let mut modified = false;
+        for e in self.executors.iter_mut() {
+            if e.wants(point) {
+                modified |= e.on_output(point, t);
+            }
+        }
+        modified
+    }
+}
+
+/// Execute k graphs in one forward pass. Returns per-graph results in
+/// input order. All-or-nothing on infrastructure errors; per-graph errors
+/// are returned individually.
+pub fn execute_merged(
+    graphs: &[InterventionGraph],
+    runner: &ModelRunner,
+) -> Result<Vec<Result<GraphResult>>> {
+    let refs: Vec<&InterventionGraph> = graphs.iter().collect();
+    if !mergeable(&refs, runner) {
+        return Err(anyhow!("graphs are not mergeable into one forward pass"));
+    }
+    let seq = runner.manifest.seq;
+
+    // combined tokens + per-graph row offsets
+    let total_rows: usize = graphs.iter().map(|g| g.batch).sum();
+    let mut tokens = Vec::with_capacity(total_rows * seq);
+    let mut offsets = Vec::with_capacity(graphs.len());
+    let mut off = 0usize;
+    for g in graphs {
+        if g.tokens.len() != g.batch * seq {
+            return Err(anyhow!("graph token length mismatch"));
+        }
+        offsets.push(off);
+        tokens.extend_from_slice(&g.tokens);
+        off += g.batch;
+    }
+    let tokens = Tensor::new(&[total_rows, seq], tokens);
+    let (padded, _) = runner.pad_tokens(&tokens)?;
+
+    // per-graph executors pinned to their row slices
+    let fseq = runner.manifest.forward_sequence();
+    let mut patched: Vec<InterventionGraph> = graphs.to_vec();
+    for (g, &off) in patched.iter_mut().zip(&offsets) {
+        g.batch_group = Some((off, g.batch));
+    }
+    let mut executors: Vec<Executor> = Vec::with_capacity(patched.len());
+    for g in &patched {
+        let mut ex = Executor::new(g, &fseq)?;
+        ex.run_pre()?;
+        executors.push(ex);
+    }
+
+    {
+        let mut hooks = MultiHooks { executors: &mut executors };
+        runner.forward(&padded, &mut hooks)?;
+    }
+
+    Ok(executors.into_iter().map(|e| e.into_result()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Trace;
+    use crate::models::artifacts_dir;
+
+    fn runner() -> ModelRunner {
+        ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap()
+    }
+
+    fn save_layer_graph(row_vals: f32, layer: &str) -> InterventionGraph {
+        let tokens = Tensor::full(&[1, 16], row_vals);
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output(layer);
+        tr.save(h);
+        tr.into_graph()
+    }
+
+    #[test]
+    fn merged_results_equal_standalone() {
+        let r = runner();
+        let g1 = save_layer_graph(1.0, "layer.0");
+        let g2 = save_layer_graph(2.0, "layer.1");
+
+        let solo1 = crate::interp::execute(&g1, &r).unwrap();
+        let solo2 = crate::interp::execute(&g2, &r).unwrap();
+
+        let merged = execute_merged(&[g1.clone(), g2.clone()], &r).unwrap();
+        let m1 = merged[0].as_ref().unwrap();
+        let m2 = merged[1].as_ref().unwrap();
+
+        for (id, t) in &solo1.values {
+            assert!(m1.values[id].allclose(t, 1e-5), "g1 node {id}");
+        }
+        for (id, t) in &solo2.values {
+            assert!(m2.values[id].allclose(t, 1e-5), "g2 node {id}");
+        }
+    }
+
+    #[test]
+    fn cotenant_setter_isolation() {
+        // user 1 ablates their row at layer.0; user 2 just saves logits.
+        // user 2's logits must equal a standalone run (no cross-tenant
+        // interference) — the paper's safe co-tenancy property.
+        let r = runner();
+        let mut tr1 = Trace::new("tiny-sim", &Tensor::full(&[1, 16], 3.0));
+        let h = tr1.output("layer.0");
+        let z = tr1.scale(h, 0.0);
+        tr1.set_output("layer.0", z);
+        let s1 = tr1.save(z);
+        let g1 = tr1.into_graph();
+
+        let mut tr2 = Trace::new("tiny-sim", &Tensor::full(&[1, 16], 5.0));
+        let logits = tr2.output("lm_head");
+        let s2 = tr2.save(logits);
+        let g2 = tr2.into_graph();
+
+        let solo2 = crate::interp::execute(&g2, &r).unwrap();
+        let merged = execute_merged(&[g1, g2], &r).unwrap();
+        let m1 = merged[0].as_ref().unwrap();
+        let m2 = merged[1].as_ref().unwrap();
+
+        assert!(m1.values[&s1.0].data().iter().all(|&v| v == 0.0));
+        assert!(
+            m2.values[&s2.0].allclose(&solo2.values[&s2.0], 1e-4),
+            "user 2 affected by user 1's intervention: diff {}",
+            m2.values[&s2.0].max_abs_diff(&solo2.values[&s2.0])
+        );
+    }
+
+    #[test]
+    fn mergeable_rejects_grads_and_overflow() {
+        let r = runner();
+        let g1 = save_layer_graph(1.0, "layer.0");
+        let mut g2 = save_layer_graph(1.0, "layer.0");
+        g2.targets = Some(vec![1.0]);
+        g2.nodes.clear();
+        let gid = g2.push(crate::graph::Op::Grad { module: "layer.0".into() });
+        g2.push(crate::graph::Op::Save { arg: gid });
+        assert!(!mergeable(&[&g1, &g2], &r));
+
+        // 5 single-row graphs exceed tiny-sim's max exported batch of 4
+        let many: Vec<InterventionGraph> =
+            (0..5).map(|_| save_layer_graph(1.0, "layer.0")).collect();
+        let refs: Vec<&InterventionGraph> = many.iter().collect();
+        assert!(!mergeable(&refs, &r));
+        let refs4: Vec<&InterventionGraph> = many[..4].iter().collect();
+        assert!(mergeable(&refs4, &r));
+    }
+}
+
+#[cfg(test)]
+mod chunk_tests {
+    use super::plan_merge_chunks;
+
+    #[test]
+    fn sixteen_singles_split_into_two_eights() {
+        assert_eq!(plan_merge_chunks(&[1; 16], &[1, 4, 8, 32]), vec![8, 8]);
+    }
+
+    #[test]
+    fn thirty_two_singles_fill_one_batch() {
+        assert_eq!(plan_merge_chunks(&[1; 32], &[1, 4, 8, 32]), vec![32]);
+    }
+
+    #[test]
+    fn odd_tail_gets_smaller_chunk() {
+        assert_eq!(plan_merge_chunks(&[1; 13], &[1, 4, 8, 32]), vec![8, 4, 1]);
+    }
+
+    #[test]
+    fn multi_row_jobs_pack_without_overflow() {
+        // jobs of 3+3+3 rows with batches {1,4,8}: 3+3=6 ≤ 8, next 3 would
+        // exceed → chunk [2 jobs], then [1 job]
+        assert_eq!(plan_merge_chunks(&[3, 3, 3], &[1, 4, 8]), vec![2, 1]);
+    }
+
+    #[test]
+    fn oversized_job_is_its_own_chunk() {
+        assert_eq!(plan_merge_chunks(&[64, 1], &[1, 4, 8, 32]), vec![1, 1]);
+    }
+}

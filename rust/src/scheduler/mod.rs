@@ -1,0 +1,18 @@
+//! Request scheduling: per-model FIFO queues and co-tenant execution.
+//!
+//! NDIF's compute efficiency comes from *co-tenancy* (§3.3, §B.2): many
+//! users share one preloaded model instance. Two modes are implemented:
+//!
+//! * **sequential** — one queue per model service; requests run one
+//!   forward pass each, in arrival order (the mode the paper's Fig. 9
+//!   load test used);
+//! * **parallel (batch-grouped)** — the §B.2 "future implementation":
+//!   compatible queued requests are merged into a single forward pass,
+//!   each intervention graph operating on its own batch-group row slice
+//!   with isolation guaranteed by the executor (and verified by tests).
+
+pub mod cotenancy;
+pub mod queue;
+
+pub use cotenancy::{execute_merged, CoTenancy};
+pub use queue::{ModelService, ServiceMetrics};

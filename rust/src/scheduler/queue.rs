@@ -1,0 +1,263 @@
+//! Per-model request queues ("Model Service deployments", §B.2).
+//!
+//! Each preloaded model gets one service: a FIFO queue consumed by a
+//! dedicated worker thread that executes intervention graphs against the
+//! shared [`ModelRunner`]. In [`CoTenancy::Parallel`] mode the worker
+//! drains up to `max_merge` compatible requests and runs them as one
+//! batch-grouped forward pass; anything unmergeable falls back to
+//! sequential execution. Results land in the object store.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::graph::{serde as gserde, InterventionGraph};
+use crate::interp;
+use crate::models::ModelRunner;
+use crate::server::store::ObjectStore;
+
+use super::cotenancy::{execute_merged, mergeable, plan_merge_chunks, CoTenancy};
+
+/// Counters exposed at `/v1/metrics`.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    pub enqueued: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub merged_batches: AtomicU64,
+    pub queue_depth: AtomicUsize,
+    /// total execution nanoseconds (per-request, summed)
+    pub exec_nanos: AtomicU64,
+}
+
+struct Job {
+    id: String,
+    graph: InterventionGraph,
+}
+
+/// One model's request service: queue + worker thread + shared runner.
+pub struct ModelService {
+    pub runner: Arc<ModelRunner>,
+    pub metrics: Arc<ServiceMetrics>,
+    store: Arc<ObjectStore>,
+    tx: Option<Sender<Job>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ModelService {
+    /// Spawn the service worker.
+    pub fn start(runner: Arc<ModelRunner>, store: Arc<ObjectStore>, mode: CoTenancy) -> ModelService {
+        let (tx, rx) = channel::<Job>();
+        let metrics = Arc::new(ServiceMetrics::default());
+        let m2 = Arc::clone(&metrics);
+        let r2 = Arc::clone(&runner);
+        let store2 = Arc::clone(&store);
+        let worker = std::thread::Builder::new()
+            .name(format!("ndif-service-{}", runner.manifest.name))
+            .spawn(move || Self::worker_loop(rx, r2, store2, mode, m2))
+            .expect("spawn service worker");
+        ModelService { runner, metrics, store, tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Enqueue a request (non-blocking). The result will appear in the
+    /// object store under `id`.
+    pub fn submit(&self, id: String, graph: InterventionGraph) -> Result<()> {
+        self.store.put_pending(&id);
+        self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("service stopped")
+            .send(Job { id, graph })
+            .map_err(|_| anyhow::anyhow!("service worker exited"))
+    }
+
+    fn worker_loop(
+        rx: Receiver<Job>,
+        runner: Arc<ModelRunner>,
+        store: Arc<ObjectStore>,
+        mode: CoTenancy,
+        metrics: Arc<ServiceMetrics>,
+    ) {
+        while let Ok(first) = rx.recv() {
+            // drain compatible follow-ups in Parallel mode
+            let mut batch = vec![first];
+            if let CoTenancy::Parallel { max_merge } = mode {
+                while batch.len() < max_merge {
+                    match rx.try_recv() {
+                        Ok(job) => batch.push(job),
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+            }
+            // split the drained burst into exported-batch-aligned chunks so
+            // merging never pads past the next exported batch size
+            if matches!(mode, CoTenancy::Parallel { .. }) && batch.len() > 1 {
+                let rows: Vec<usize> = batch.iter().map(|j| j.graph.batch.max(1)).collect();
+                let chunks = plan_merge_chunks(&rows, &runner.manifest.batches);
+                let mut rest = batch;
+                for take in chunks {
+                    let tail = rest.split_off(take.min(rest.len()));
+                    Self::run_batch(&runner, &store, &metrics, rest, mode);
+                    rest = tail;
+                    if rest.is_empty() {
+                        break;
+                    }
+                }
+            } else {
+                Self::run_batch(&runner, &store, &metrics, batch, mode);
+            }
+        }
+    }
+
+    fn run_batch(
+        runner: &ModelRunner,
+        store: &ObjectStore,
+        metrics: &ServiceMetrics,
+        batch: Vec<Job>,
+        mode: CoTenancy,
+    ) {
+        let t0 = std::time::Instant::now();
+        let graphs: Vec<&InterventionGraph> = batch.iter().map(|j| &j.graph).collect();
+        let can_merge = matches!(mode, CoTenancy::Parallel { .. })
+            && batch.len() > 1
+            && mergeable(&graphs, runner);
+
+        if can_merge {
+            let owned: Vec<InterventionGraph> = batch.iter().map(|j| j.graph.clone()).collect();
+            match execute_merged(&owned, runner) {
+                Ok(results) => {
+                    metrics.merged_batches.fetch_add(1, Ordering::Relaxed);
+                    for (job, res) in batch.iter().zip(results) {
+                        Self::finish(store, metrics, &job.id, res);
+                    }
+                }
+                Err(e) => {
+                    // infrastructure failure: fail the whole merge
+                    let msg = e.to_string();
+                    for job in &batch {
+                        Self::finish(
+                            store,
+                            metrics,
+                            &job.id,
+                            Err::<crate::graph::GraphResult, &str>(&msg),
+                        );
+                    }
+                }
+            }
+        } else {
+            for job in &batch {
+                let res = interp::execute(&job.graph, runner);
+                Self::finish(store, metrics, &job.id, res);
+            }
+        }
+        metrics
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        metrics
+            .queue_depth
+            .fetch_sub(batch.len(), Ordering::Relaxed);
+    }
+
+    fn finish(
+        store: &ObjectStore,
+        metrics: &ServiceMetrics,
+        id: &str,
+        res: Result<crate::graph::GraphResult, impl std::fmt::Display>,
+    ) {
+        // bump counters BEFORE publishing: clients wake on the store write
+        // and may read metrics immediately.
+        match res {
+            Ok(r) => {
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                store.put_ready(id, gserde::result_to_json(&r).to_string());
+            }
+            Err(e) => {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                store.put_failed(id, &e.to_string());
+            }
+        }
+    }
+}
+
+impl Drop for ModelService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Trace;
+    use crate::models::artifacts_dir;
+    use crate::tensor::Tensor;
+
+    fn service(mode: CoTenancy) -> (ModelService, Arc<ObjectStore>) {
+        let runner = Arc::new(ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap());
+        let store = Arc::new(ObjectStore::new());
+        (ModelService::start(runner, Arc::clone(&store), mode), store)
+    }
+
+    fn simple_graph(v: f32) -> InterventionGraph {
+        let mut tr = Trace::new("tiny-sim", &Tensor::full(&[1, 16], v));
+        let h = tr.output("layer.0");
+        tr.save(h);
+        tr.into_graph()
+    }
+
+    #[test]
+    fn sequential_service_completes_requests() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        for i in 0..4 {
+            svc.submit(format!("r{i}"), simple_graph(i as f32)).unwrap();
+        }
+        for i in 0..4 {
+            let json = store
+                .wait_ready(&format!("r{i}"), std::time::Duration::from_secs(30))
+                .unwrap();
+            assert!(json.contains("values"));
+        }
+        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 4);
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn parallel_service_merges_when_possible() {
+        let (svc, store) = service(CoTenancy::Parallel { max_merge: 4 });
+        // submit a burst; the worker should merge at least once
+        for i in 0..8 {
+            svc.submit(format!("r{i}"), simple_graph(i as f32)).unwrap();
+        }
+        for i in 0..8 {
+            store
+                .wait_ready(&format!("r{i}"), std::time::Duration::from_secs(30))
+                .unwrap();
+        }
+        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn failed_request_reports_error() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        let mut g = simple_graph(0.0);
+        g.nodes.clear();
+        // invalid: getter of unknown module
+        let bad = g.push(crate::graph::Op::Getter {
+            module: "layer.99".into(),
+            port: crate::graph::Port::Output,
+        });
+        g.push(crate::graph::Op::Save { arg: bad });
+        svc.submit("bad".into(), g).unwrap();
+        let err = store
+            .wait_outcome("bad", std::time::Duration::from_secs(30))
+            .unwrap();
+        assert!(err.is_err());
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+}

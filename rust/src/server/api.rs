@@ -1,0 +1,295 @@
+//! NDIF HTTP API: routing, auth, request validation, metrics.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::graph::serde as gserde;
+use crate::json::{parse, Json};
+use crate::models::ModelRunner;
+use crate::scheduler::{CoTenancy, ModelService};
+
+use super::http::{Handler, HttpServer, Request, Response};
+use super::store::{Entry, ObjectStore};
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct NdifConfig {
+    /// Bind address; use port 0 for ephemeral.
+    pub addr: String,
+    /// HTTP worker threads.
+    pub workers: usize,
+    /// Models to preload.
+    pub models: Vec<String>,
+    /// Artifacts directory.
+    pub artifacts: PathBuf,
+    /// Co-tenancy policy for every model service.
+    pub cotenancy: CoTenancy,
+    /// Per-model allowed auth tokens; models absent from the map are open.
+    /// (Stands in for the paper's HuggingFace-gated model authorization.)
+    pub auth: HashMap<String, Vec<String>>,
+}
+
+impl NdifConfig {
+    pub fn local(models: &[&str]) -> NdifConfig {
+        NdifConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            models: models.iter().map(|s| s.to_string()).collect(),
+            artifacts: crate::models::artifacts_dir(),
+            cotenancy: CoTenancy::Sequential,
+            auth: HashMap::new(),
+        }
+    }
+}
+
+struct ServerState {
+    services: HashMap<String, ModelService>,
+    store: Arc<ObjectStore>,
+    next_id: AtomicU64,
+    auth: HashMap<String, Vec<String>>,
+}
+
+impl ServerState {
+    fn authorize(&self, model: &str, token: Option<&str>) -> bool {
+        match self.auth.get(model) {
+            None => true,
+            Some(allowed) => token.map(|t| allowed.iter().any(|a| a == t)).unwrap_or(false),
+        }
+    }
+}
+
+/// A running NDIF server.
+pub struct NdifServer {
+    http: HttpServer,
+    state: Arc<ServerState>,
+}
+
+impl NdifServer {
+    /// Preload the configured models and start serving.
+    pub fn start(cfg: NdifConfig) -> Result<NdifServer> {
+        let store = Arc::new(ObjectStore::new());
+        let mut services = HashMap::new();
+        for name in &cfg.models {
+            let runner = Arc::new(
+                ModelRunner::load(&cfg.artifacts, name)
+                    .with_context(|| format!("preload model {name}"))?,
+            );
+            services.insert(
+                name.clone(),
+                ModelService::start(runner, Arc::clone(&store), cfg.cotenancy),
+            );
+        }
+        let state = Arc::new(ServerState {
+            services,
+            store,
+            next_id: AtomicU64::new(1),
+            auth: cfg.auth.clone(),
+        });
+        let s2 = Arc::clone(&state);
+        let handler: Handler = Arc::new(move |req| route(&s2, req));
+        let http = HttpServer::bind(&cfg.addr, cfg.workers, handler)?;
+        Ok(NdifServer { http, state })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr()
+    }
+
+    /// Metrics snapshot for a model (enqueued, completed, failed, merged).
+    pub fn metrics(&self, model: &str) -> Option<(u64, u64, u64, u64)> {
+        self.state.services.get(model).map(|s| {
+            (
+                s.metrics.enqueued.load(Ordering::Relaxed),
+                s.metrics.completed.load(Ordering::Relaxed),
+                s.metrics.failed.load(Ordering::Relaxed),
+                s.metrics.merged_batches.load(Ordering::Relaxed),
+            )
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.http.shutdown();
+    }
+}
+
+fn route(state: &Arc<ServerState>, req: Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::text(200, "ok"),
+        ("GET", "/v1/models") => models_endpoint(state),
+        ("POST", "/v1/trace") => trace_endpoint(state, &req),
+        ("POST", "/v1/session") => session_endpoint(state, &req),
+        ("GET", "/v1/metrics") => metrics_endpoint(state),
+        ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
+        _ => Response::not_found(),
+    }
+}
+
+fn models_endpoint(state: &Arc<ServerState>) -> Response {
+    let models: Vec<Json> = state
+        .services
+        .values()
+        .map(|s| {
+            let m = &s.runner.manifest;
+            Json::obj(vec![
+                ("name", Json::from(m.name.as_str())),
+                ("params", Json::from(m.param_count)),
+                ("n_layers", Json::from(m.n_layers)),
+                ("seq", Json::from(m.seq)),
+                ("batches", Json::from(m.batches.clone())),
+                ("simulates", Json::from(m.simulates.as_str())),
+                ("grad", Json::from(m.grad)),
+                ("tp", Json::from(m.tp.clone())),
+            ])
+        })
+        .collect();
+    Response::json(200, Json::obj(vec![("models", Json::Array(models))]).to_string())
+}
+
+fn submit_graph(state: &Arc<ServerState>, req: &Request, body: &Json) -> Result<String, Response> {
+    let graph = gserde::from_json(body).map_err(|e| Response::bad_request(&e.to_string()))?;
+    let Some(service) = state.services.get(&graph.model) else {
+        return Err(Response::json(
+            404,
+            format!("{{\"error\":\"model '{}' not hosted\"}}", graph.model),
+        ));
+    };
+    if !state.authorize(&graph.model, req.header("x-ndif-auth")) {
+        return Err(Response::json(
+            401,
+            "{\"error\":\"not authorized for this model\"}".into(),
+        ));
+    }
+    // early validation against the manifest so bad graphs fail at submit
+    let fseq = service.runner.manifest.forward_sequence();
+    if let Err(e) = crate::graph::validate::validate(&graph, &fseq) {
+        return Err(Response::bad_request(&e.to_string()));
+    }
+    let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
+    state.store.put_pending(&id);
+    service
+        .submit(id.clone(), graph)
+        .map_err(|e| Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string()))))?;
+    Ok(id)
+}
+
+fn trace_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
+    let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
+        parse(s).map_err(|e| e.to_string())
+    }) {
+        Ok(j) => j,
+        Err(e) => return Response::bad_request(&e),
+    };
+    match submit_graph(state, req, &body) {
+        Ok(id) => Response::json(202, Json::obj(vec![("id", Json::from(id))]).to_string()),
+        Err(resp) => resp,
+    }
+}
+
+/// A Session: multiple traces executed in order within one request
+/// (§B.1 "Remote Execution and Session"). Sent as
+/// `{"traces": [graph, graph, ...]}`; FIFO queueing per model preserves
+/// order, and the response bundles all results, eliminating per-trace
+/// round trips.
+fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
+    let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
+        parse(s).map_err(|e| e.to_string())
+    }) {
+        Ok(j) => j,
+        Err(e) => return Response::bad_request(&e),
+    };
+    let Some(traces) = body.get("traces").as_array() else {
+        return Response::bad_request("session missing traces");
+    };
+    let mut ids = Vec::with_capacity(traces.len());
+    for t in traces {
+        match submit_graph(state, req, t) {
+            Ok(id) => ids.push(id),
+            Err(resp) => return resp,
+        }
+    }
+    // gather all results (bounded wait per trace)
+    let mut results = Vec::with_capacity(ids.len());
+    for id in &ids {
+        match state.store.wait_outcome(id, Duration::from_secs(300)) {
+            Some(Ok(json)) => {
+                state.store.remove(id);
+                match parse(&json) {
+                    Ok(j) => results.push(j),
+                    Err(e) => return Response::json(500, format!("{{\"error\":\"{e}\"}}")),
+                }
+            }
+            Some(Err(e)) => {
+                state.store.remove(id);
+                return Response::json(500, format!("{{\"error\":{}}}", Json::from(e)));
+            }
+            None => return Response::json(500, "{\"error\":\"session timeout\"}".into()),
+        }
+    }
+    Response::json(
+        200,
+        Json::obj(vec![("results", Json::Array(results))]).to_string(),
+    )
+}
+
+fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
+    // /v1/result/<id>[?timeout_ms=N]
+    let rest = &path["/v1/result/".len()..];
+    let (id, timeout_ms) = match rest.split_once('?') {
+        Some((id, q)) => {
+            let t = q
+                .strip_prefix("timeout_ms=")
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(30_000);
+            (id, t)
+        }
+        None => (rest, 30_000u64),
+    };
+    match state.store.wait_outcome(id, Duration::from_millis(timeout_ms)) {
+        Some(Ok(json)) => {
+            state.store.remove(id);
+            Response::json(200, json)
+        }
+        Some(Err(e)) => {
+            state.store.remove(id);
+            Response::json(500, format!("{{\"error\":{}}}", Json::from(e)))
+        }
+        None => match state.store.peek(id) {
+            Some(Entry::Pending) => {
+                Response::json(202, "{\"status\":\"pending\"}".into())
+            }
+            _ => Response::not_found(),
+        },
+    }
+}
+
+fn metrics_endpoint(state: &Arc<ServerState>) -> Response {
+    let mut per_model = std::collections::BTreeMap::new();
+    for (name, s) in &state.services {
+        per_model.insert(
+            name.clone(),
+            Json::obj(vec![
+                ("enqueued", Json::from(s.metrics.enqueued.load(Ordering::Relaxed) as i64)),
+                ("completed", Json::from(s.metrics.completed.load(Ordering::Relaxed) as i64)),
+                ("failed", Json::from(s.metrics.failed.load(Ordering::Relaxed) as i64)),
+                (
+                    "merged_batches",
+                    Json::from(s.metrics.merged_batches.load(Ordering::Relaxed) as i64),
+                ),
+                (
+                    "queue_depth",
+                    Json::from(s.metrics.queue_depth.load(Ordering::Relaxed) as i64),
+                ),
+                (
+                    "exec_seconds",
+                    Json::from(s.metrics.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+                ),
+            ]),
+        );
+    }
+    Response::json(200, Json::Object(per_model).to_string())
+}

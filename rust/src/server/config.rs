@@ -1,0 +1,136 @@
+//! Server configuration files.
+//!
+//! A deployable service needs declarative configuration; `nnscope serve
+//! --config deploy.json` loads one of these:
+//!
+//! ```json
+//! {
+//!   "addr": "0.0.0.0:7757",
+//!   "workers": 16,
+//!   "models": ["llama8b-sim", "opt-13b-sim"],
+//!   "artifacts": "/srv/nnscope/artifacts",
+//!   "cotenancy": { "mode": "parallel", "max_merge": 8 },
+//!   "auth": { "llama8b-sim": ["token-a", "token-b"] }
+//! }
+//! ```
+//!
+//! Every field is optional; omissions fall back to [`NdifConfig::local`]
+//! defaults (ephemeral port, sequential co-tenancy, open access).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{parse, Json};
+use crate::scheduler::CoTenancy;
+
+use super::api::NdifConfig;
+
+/// Parse a config from JSON text.
+pub fn from_json_text(text: &str) -> Result<NdifConfig> {
+    let j = parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+    from_json(&j)
+}
+
+/// Load a config from a file.
+pub fn from_file(path: &Path) -> Result<NdifConfig> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read config {path:?}"))?;
+    from_json_text(&text)
+}
+
+fn from_json(j: &Json) -> Result<NdifConfig> {
+    let mut cfg = NdifConfig::local(&[]);
+    if let Some(addr) = j.get("addr").as_str() {
+        cfg.addr = addr.to_string();
+    }
+    if let Some(w) = j.get("workers").as_usize() {
+        cfg.workers = w.max(1);
+    }
+    if let Some(models) = j.get("models").as_array() {
+        cfg.models = models
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow!("models entries must be strings"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(dir) = j.get("artifacts").as_str() {
+        cfg.artifacts = dir.into();
+    }
+    let cot = j.get("cotenancy");
+    if !cot.is_null() {
+        cfg.cotenancy = match cot.get("mode").as_str() {
+            Some("sequential") | None => CoTenancy::Sequential,
+            Some("parallel") => CoTenancy::Parallel {
+                max_merge: cot.get("max_merge").as_usize().unwrap_or(8),
+            },
+            Some(other) => return Err(anyhow!("unknown cotenancy mode '{other}'")),
+        };
+    }
+    if let Some(auth) = j.get("auth").as_object() {
+        let mut map = HashMap::new();
+        for (model, tokens) in auth {
+            let toks = tokens
+                .as_array()
+                .ok_or_else(|| anyhow!("auth.{model} must be a token array"))?
+                .iter()
+                .map(|t| {
+                    t.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("auth tokens must be strings"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            map.insert(model.clone(), toks);
+        }
+        cfg.auth = map;
+    }
+    if cfg.models.is_empty() {
+        return Err(anyhow!("config must list at least one model"));
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = from_json_text(
+            r#"{
+              "addr": "0.0.0.0:7757",
+              "workers": 16,
+              "models": ["llama8b-sim", "opt-13b-sim"],
+              "artifacts": "/srv/a",
+              "cotenancy": { "mode": "parallel", "max_merge": 4 },
+              "auth": { "llama8b-sim": ["t1", "t2"] }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:7757");
+        assert_eq!(cfg.workers, 16);
+        assert_eq!(cfg.models, vec!["llama8b-sim", "opt-13b-sim"]);
+        assert_eq!(cfg.artifacts, std::path::PathBuf::from("/srv/a"));
+        assert_eq!(cfg.cotenancy, CoTenancy::Parallel { max_merge: 4 });
+        assert_eq!(cfg.auth["llama8b-sim"], vec!["t1", "t2"]);
+    }
+
+    #[test]
+    fn minimal_config_gets_defaults() {
+        let cfg = from_json_text(r#"{"models": ["tiny-sim"]}"#).unwrap();
+        assert_eq!(cfg.cotenancy, CoTenancy::Sequential);
+        assert!(cfg.auth.is_empty());
+        assert!(cfg.workers >= 1);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(from_json_text("{}").is_err()); // no models
+        assert!(from_json_text(r#"{"models": ["m"], "cotenancy": {"mode": "magic"}}"#).is_err());
+        assert!(from_json_text(r#"{"models": [3]}"#).is_err());
+        assert!(from_json_text("not json").is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Minimal HTTP/1.1 server and client over `std::net`.
+//!
+//! The NDIF frontend is an HTTP service ("the system serializes the
+//! intervention graph into a custom JSON format and sends it to NDIF's
+//! HTTP server front-end", §B.2). No async stack is available offline, so
+//! this is a small, correct, thread-pool-backed HTTP/1.1 implementation:
+//! request line + headers + Content-Length bodies, one connection per
+//! request (`Connection: close`). That is all the NDIF protocol needs, and
+//! it keeps the request path free of hidden allocation or buffering
+//! surprises when we profile it (§Perf).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::threadpool::ThreadPool;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body not utf-8")
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+
+    pub fn not_found() -> Response {
+        Response::text(404, "not found")
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        Response::json(400, format!("{{\"error\":{}}}", crate::json::Json::from(msg)))
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            404 => "Not Found",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Read one request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_string();
+            let v = v.trim().to_string();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().context("bad content-length")?;
+            }
+            headers.push((k, v));
+        }
+    }
+    const MAX_BODY: usize = 256 * 1024 * 1024;
+    if content_length > MAX_BODY {
+        return Err(anyhow!("body too large: {content_length}"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+/// Write a response (and close the connection).
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.status_text(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Handler signature: pure request → response.
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync + 'static>;
+
+/// A running HTTP server (accept loop + worker pool). Dropping shuts down.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (use port 0 for ephemeral) and serve on `workers`
+    /// pool threads.
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("nnscope-http-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            let handler = Arc::clone(&handler);
+                            pool.execute(move || {
+                                let resp = match read_request(&mut stream) {
+                                    Ok(req) => handler(req),
+                                    Err(e) => Response::bad_request(&e.to_string()),
+                                };
+                                let _ = write_response(&mut stream, &resp);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Perform one HTTP request; returns (status, body).
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?
+        .parse()
+        .context("bad status code")?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.trim().parse().context("bad content-length")?);
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, Vec<u8>)> {
+    http_request(addr, "GET", path, &[], &[])
+}
+
+pub fn post(addr: SocketAddr, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    http_request(addr, "POST", path, body, &[("Content-Type", "application/json")])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::bind(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: Request| {
+                if req.path == "/health" {
+                    Response::text(200, "ok")
+                } else if req.method == "POST" {
+                    Response { status: 200, content_type: "application/json", body: req.body }
+                } else {
+                    Response::not_found()
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_and_post_round_trip() {
+        let srv = echo_server();
+        let (status, body) = get(srv.addr(), "/health").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"ok");
+
+        let payload = br#"{"x": [1,2,3]}"#;
+        let (status, body) = post(srv.addr(), "/echo", payload).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload);
+
+        let (status, _) = get(srv.addr(), "/missing").unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn large_body_round_trip() {
+        let srv = echo_server();
+        let payload = vec![b'x'; 2_000_000];
+        let (status, body) = post(srv.addr(), "/echo", &payload).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.len(), payload.len());
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = echo_server();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let payload = format!("{{\"i\":{i}}}");
+                    let (status, body) = post(addr, "/echo", payload.as_bytes()).unwrap();
+                    assert_eq!(status, 200);
+                    assert_eq!(body, payload.as_bytes());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_stops_serving() {
+        let mut srv = echo_server();
+        let addr = srv.addr();
+        srv.shutdown();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(get(addr, "/health").is_err() || get(addr, "/health").unwrap().0 != 200);
+    }
+}

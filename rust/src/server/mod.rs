@@ -1,0 +1,22 @@
+//! The NDIF server: a multi-tenant intervention-graph inference service
+//! (§3.3, §B.2, Fig. 4).
+//!
+//! Lifecycle of a request (mirroring the paper):
+//! 1. client POSTs a serialized intervention graph to `/v1/trace`;
+//! 2. the frontend authenticates, parses, validates against the target
+//!    model's manifest, registers a pending entry in the object store,
+//!    and enqueues the graph on the model's service;
+//! 3. the service worker interleaves the graph with (possibly shared)
+//!    model execution and deposits saved values in the object store;
+//! 4. the client long-polls `/v1/result/<id>` (the websocket-notify +
+//!    pull of Fig. 4 collapsed into one bounded blocking GET).
+//!
+//! Models are preloaded at server start — the architectural property that
+//! produces the paper's flat NDIF setup times (Fig. 6a).
+
+pub mod api;
+pub mod config;
+pub mod http;
+pub mod store;
+
+pub use api::{NdifConfig, NdifServer};

@@ -1,0 +1,164 @@
+//! The object store (§B.2, Fig. 4): completed intervention results parked
+//! for client pickup.
+//!
+//! In the paper, shard 0 pushes results to the frontend's object store and
+//! a websocket notifies the client, which then pulls. Offline we replace
+//! the websocket with condvar-backed long-polling: `GET /v1/result/<id>`
+//! blocks (bounded) until the entry is ready — same lifecycle, one fewer
+//! protocol.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Entry lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Entry {
+    Pending,
+    Ready(String),
+    Failed(String),
+}
+
+/// Thread-safe result store with wakeups.
+pub struct ObjectStore {
+    entries: Mutex<HashMap<String, Entry>>,
+    cv: Condvar,
+}
+
+impl Default for ObjectStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObjectStore {
+    pub fn new() -> ObjectStore {
+        ObjectStore { entries: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Register a pending request id.
+    pub fn put_pending(&self, id: &str) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Entry::Pending);
+    }
+
+    pub fn put_ready(&self, id: &str, json: String) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Entry::Ready(json));
+        self.cv.notify_all();
+    }
+
+    pub fn put_failed(&self, id: &str, err: &str) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), Entry::Failed(err.to_string()));
+        self.cv.notify_all();
+    }
+
+    /// Current state without blocking (None = unknown id).
+    pub fn peek(&self, id: &str) -> Option<Entry> {
+        self.entries.lock().unwrap().get(id).cloned()
+    }
+
+    /// Block until the entry leaves Pending or the timeout passes.
+    /// Returns None on unknown id or timeout-while-pending.
+    pub fn wait_outcome(&self, id: &str, timeout: Duration) -> Option<Result<String, String>> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.entries.lock().unwrap();
+        loop {
+            match guard.get(id) {
+                None => return None,
+                Some(Entry::Ready(s)) => return Some(Ok(s.clone())),
+                Some(Entry::Failed(e)) => return Some(Err(e.clone())),
+                Some(Entry::Pending) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+                    guard = g;
+                }
+            }
+        }
+    }
+
+    /// Like [`ObjectStore::wait_outcome`] but only for success payloads.
+    pub fn wait_ready(&self, id: &str, timeout: Duration) -> Option<String> {
+        match self.wait_outcome(id, timeout) {
+            Some(Ok(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Remove a delivered entry (client fetched it).
+    pub fn remove(&self, id: &str) -> Option<Entry> {
+        self.entries.lock().unwrap().remove(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifecycle() {
+        let s = ObjectStore::new();
+        assert!(s.peek("x").is_none());
+        s.put_pending("x");
+        assert_eq!(s.peek("x"), Some(Entry::Pending));
+        s.put_ready("x", "{}".into());
+        assert_eq!(s.peek("x"), Some(Entry::Ready("{}".into())));
+        assert_eq!(s.wait_ready("x", Duration::from_millis(1)), Some("{}".into()));
+        s.remove("x");
+        assert!(s.peek("x").is_none());
+    }
+
+    #[test]
+    fn wait_blocks_until_ready() {
+        let s = Arc::new(ObjectStore::new());
+        s.put_pending("r");
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            s2.put_ready("r", "done".into());
+        });
+        let t0 = Instant::now();
+        let got = s.wait_ready("r", Duration::from_secs(5));
+        assert_eq!(got, Some("done".into()));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out_on_pending() {
+        let s = ObjectStore::new();
+        s.put_pending("r");
+        let got = s.wait_outcome("r", Duration::from_millis(20));
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn failure_propagates() {
+        let s = ObjectStore::new();
+        s.put_pending("r");
+        s.put_failed("r", "boom");
+        assert_eq!(
+            s.wait_outcome("r", Duration::from_millis(1)),
+            Some(Err("boom".into()))
+        );
+    }
+}

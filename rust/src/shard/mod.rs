@@ -1,0 +1,6 @@
+// shard module folded into models::runner::forward_sharded — kept as re-export site
+//! Tensor-parallel shard execution lives in [`crate::models::runner`]
+//! (`forward_sharded`): S shard workers execute per-shard partial-layer
+//! artifacts and the coordinator all-reduces. This module re-exports the
+//! entry points for discoverability.
+pub use crate::models::runner::ModelRunner;

@@ -1,0 +1,131 @@
+//! The Fig. 2 / Fig. 7 computations.
+
+use crate::util::stats::quantile;
+
+use super::data::{PaperRecord, ReleasedModel, BUCKETS, FEB_2023};
+
+/// Fig. 2 headline statistics.
+#[derive(Debug, Clone)]
+pub struct Fig2Stats {
+    pub total_papers: usize,
+    /// papers published after Feb 2023
+    pub post_feb_2023: usize,
+    /// of those, the fraction studying <40% MMLU models (paper: 60.6%)
+    pub frac_sub40_post_2023: f64,
+    /// papers studying ≥70% MMLU models (the small group, Fig. 2a)
+    pub count_ge70: usize,
+    /// mean capability gap: frontier(=85) − studied MMLU, post-2023
+    pub mean_gap_post_2023: f64,
+}
+
+/// Compute the Fig. 2 statistics over the survey dataset.
+pub fn fig2_stats(papers: &[PaperRecord]) -> Fig2Stats {
+    let post: Vec<&PaperRecord> = papers.iter().filter(|p| p.date >= FEB_2023).collect();
+    let sub40 = post.iter().filter(|p| p.mmlu < 40.0).count();
+    let ge70 = papers.iter().filter(|p| p.mmlu >= 70.0).count();
+    let frontier = 85.0; // leading closed-weight MMLU in the survey window
+    let mean_gap = if post.is_empty() {
+        0.0
+    } else {
+        post.iter().map(|p| frontier - p.mmlu).sum::<f64>() / post.len() as f64
+    };
+    Fig2Stats {
+        total_papers: papers.len(),
+        post_feb_2023: post.len(),
+        frac_sub40_post_2023: if post.is_empty() { 0.0 } else { sub40 as f64 / post.len() as f64 },
+        count_ge70: ge70,
+        mean_gap_post_2023: mean_gap,
+    }
+}
+
+/// One Fig. 7 year bucket: research-vs-released size distributions.
+#[derive(Debug, Clone)]
+pub struct Fig7Bucket {
+    pub label: &'static str,
+    pub research_median_b: f64,
+    pub research_q25: f64,
+    pub research_q75: f64,
+    pub released_median_b: f64,
+    pub released_q25: f64,
+    pub released_q75: f64,
+    /// released median / research median — the paper's dashed-gold ratio
+    pub ratio: f64,
+}
+
+/// Compute Fig. 7's per-bucket box statistics and median ratios.
+pub fn fig7_buckets(papers: &[PaperRecord], released: &[ReleasedModel]) -> Vec<Fig7Bucket> {
+    BUCKETS
+        .iter()
+        .map(|&(label, start, end, _)| {
+            let r: Vec<f64> = papers
+                .iter()
+                .filter(|p| p.date >= start && p.date < end)
+                .map(|p| p.params_b)
+                .collect();
+            let m: Vec<f64> = released
+                .iter()
+                .filter(|p| p.date >= start && p.date < end)
+                .map(|p| p.params_b)
+                .collect();
+            let rq = |q| if r.is_empty() { 0.0 } else { quantile(&r, q) };
+            let mq = |q| if m.is_empty() { 0.0 } else { quantile(&m, q) };
+            Fig7Bucket {
+                label,
+                research_median_b: rq(0.5),
+                research_q25: rq(0.25),
+                research_q75: rq(0.75),
+                released_median_b: mq(0.5),
+                released_q25: mq(0.25),
+                released_q75: mq(0.75),
+                ratio: if rq(0.5) > 0.0 { mq(0.5) / rq(0.5) } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::survey::data::{survey_dataset, DEFAULT_SEED};
+
+    #[test]
+    fn fig2_reproduces_headline_stats() {
+        let (papers, _) = survey_dataset(DEFAULT_SEED);
+        let s = fig2_stats(&papers);
+        assert_eq!(s.total_papers, 184);
+        // paper: 60.6% of post-Feb-2023 papers study <40% MMLU models
+        assert!(
+            (s.frac_sub40_post_2023 - 0.606).abs() < 0.03,
+            "frac = {}",
+            s.frac_sub40_post_2023
+        );
+        // a small but nonzero ≥70% group
+        assert!(s.count_ge70 >= 2 && s.count_ge70 <= 20, "{}", s.count_ge70);
+        assert!(s.mean_gap_post_2023 > 30.0);
+    }
+
+    #[test]
+    fn fig7_ratio_grows_from_about_2_7_to_about_10_3() {
+        let (papers, released) = survey_dataset(DEFAULT_SEED);
+        let buckets = fig7_buckets(&papers, &released);
+        assert_eq!(buckets.len(), 5);
+        let first = buckets.first().unwrap().ratio;
+        let last = buckets.last().unwrap().ratio;
+        assert!((first - 2.7).abs() / 2.7 < 0.5, "first ratio {first}");
+        assert!((last - 10.3).abs() / 10.3 < 0.5, "last ratio {last}");
+        // monotone growth (allowing small wobble)
+        for w in buckets.windows(2) {
+            assert!(w[1].ratio > w[0].ratio * 0.8, "{:?}", w.iter().map(|b| b.ratio).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn fig7_boxes_are_ordered() {
+        let (papers, released) = survey_dataset(DEFAULT_SEED);
+        for b in fig7_buckets(&papers, &released) {
+            assert!(b.research_q25 <= b.research_median_b);
+            assert!(b.research_median_b <= b.research_q75);
+            assert!(b.released_q25 <= b.released_median_b);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic survey dataset constructed to the paper's published
+//! statistics (see module docs in [`super`]).
+//!
+//! Construction constraints (all from the paper):
+//! * 184 papers, 2019 – late 2024, counts ramping with the field's growth;
+//! * 60.6% of papers dated after Feb 2023 study models with <40% MMLU
+//!   (enforced with a running quota so the fraction is exact up to
+//!   rounding, independent of sampling noise);
+//! * earlier eras are ~95% sub-40 (capable open models did not exist);
+//! * a small ≥70%-MMLU group exists (Fig. 2a);
+//! * Fig. 7's released-median / research-median ratio grows 2.7× → 10.3×
+//!   across year buckets — enforced by generating the released series
+//!   around `ratio × (empirical research median)` per bucket.
+
+use crate::util::stats::quantile;
+use crate::util::Prng;
+
+/// One surveyed paper: publication date and the largest open-weight model
+/// it studies.
+#[derive(Clone, Debug)]
+pub struct PaperRecord {
+    /// decimal year, e.g. 2023.5
+    pub date: f64,
+    /// parameter count of the largest model studied, in billions
+    pub params_b: f64,
+    /// MMLU score (0–100) of that model (interpolated where the paper's
+    /// sources lacked one, as in Appendix A)
+    pub mmlu: f64,
+}
+
+/// A publicly released open-weight model (Epoch AI reference series).
+#[derive(Clone, Debug)]
+pub struct ReleasedModel {
+    pub date: f64,
+    pub params_b: f64,
+    pub mmlu: f64,
+}
+
+/// Fig. 7 year buckets with target released/research median ratios.
+/// The paper reports the endpoints (2.7× in 2019–20, 10.3× in 2024) with
+/// monotone growth between.
+pub const BUCKETS: [(&str, f64, f64, f64); 5] = [
+    // (label, start, end, target ratio)
+    ("2019-2020", 2019.0, 2021.0, 2.7),
+    ("2021", 2021.0, 2022.0, 4.1),
+    ("2022", 2022.0, 2023.0, 6.0),
+    ("2023", 2023.0, 2024.0, 8.2),
+    ("2024", 2024.0, 2024.8, 10.3),
+];
+
+/// Papers per bucket (sums to 184).
+pub const PAPER_COUNTS: [usize; 5] = [14, 22, 36, 64, 48];
+
+/// Feb 2023 as a decimal year — the paper's "since February 2023" cut.
+pub const FEB_2023: f64 = 2023.0 + 1.0 / 12.0;
+
+/// MMLU as a rough logistic in log-params, calibrated so ~1B → ~30,
+/// 7B → ~50, 70B → ~70, 405B → ~85 (the era's leaderboard shape).
+/// Random baseline is 25; crosses 40 at ≈1.7B.
+pub fn mmlu_of_params(params_b: f64, noise: f64) -> f64 {
+    let x = params_b.max(0.01).ln();
+    let v = 25.0 + 62.0 / (1.0 + (-(x - 2.2) / 1.45).exp());
+    (v + noise).clamp(24.0, 90.0)
+}
+
+fn lognormal_around(rng: &mut Prng, median: f64, sigma: f64) -> f64 {
+    median * (sigma * rng.normal()).exp()
+}
+
+/// The default dataset seed used everywhere.
+pub const DEFAULT_SEED: u64 = 184;
+
+/// Generate the 184-paper dataset plus the released-model reference
+/// series. Deterministic per seed.
+pub fn survey_dataset(seed: u64) -> (Vec<PaperRecord>, Vec<ReleasedModel>) {
+    let mut rng = Prng::new(seed);
+    let mut papers: Vec<PaperRecord> = Vec::with_capacity(184);
+
+    // quota accumulators: (small so far, total so far) per era
+    let mut post = (0usize, 0usize);
+    let mut pre = (0usize, 0usize);
+
+    for (bi, &(_, start, end, _)) in BUCKETS.iter().enumerate() {
+        let n = PAPER_COUNTS[bi];
+        for k in 0..n {
+            let date = start + (end - start) * ((k as f64 + 0.5) / n as f64);
+            let (quota, era) = if date >= FEB_2023 {
+                (0.606, &mut post)
+            } else {
+                (0.95, &mut pre)
+            };
+            era.1 += 1;
+            // running-quota decision keeps the era fraction exact
+            let want_small = (era.0 as f64) < quota * era.1 as f64 - 1e-9;
+            if want_small {
+                era.0 += 1;
+            }
+            let params_b = if want_small {
+                // sub-40-MMLU regime: < ~1.7B (GPT-2/Pythia class)
+                lognormal_around(&mut rng, 0.4, 0.8).clamp(0.05, 1.55)
+            } else if rng.uniform() < 0.22 {
+                // the small ≥70%-MMLU group (Fig. 2a): Qwen-72B/Yi-34B class
+                lognormal_around(&mut rng, 62.0, 0.25).clamp(34.0, 110.0)
+            } else {
+                // mid-capability open models (7B–34B class)
+                lognormal_around(&mut rng, 9.0, 0.55).clamp(2.4, 40.0)
+            };
+            let mmlu = if want_small {
+                mmlu_of_params(params_b, 1.5 * rng.normal()).min(39.5)
+            } else {
+                mmlu_of_params(params_b, 1.5 * rng.normal()).max(40.5)
+            };
+            papers.push(PaperRecord { date, params_b, mmlu });
+        }
+    }
+
+    // Released-model series: generated around ratio × empirical research
+    // median per bucket, so Fig. 7's ratios land on target by design.
+    let mut released = Vec::new();
+    for &(_, start, end, ratio) in BUCKETS.iter() {
+        let research: Vec<f64> = papers
+            .iter()
+            .filter(|p| p.date >= start && p.date < end)
+            .map(|p| p.params_b)
+            .collect();
+        let research_median = quantile(&research, 0.5);
+        let target = ratio * research_median;
+        // symmetric multiplicative spread preserves the median
+        for k in 0..12 {
+            let date = start + (end - start) * ((k as f64 + 0.5) / 12.0);
+            let spread: f64 = 0.9 * rng.normal();
+            // pair up symmetric factors: even k up, odd k mirrors previous
+            let params_b = if k % 2 == 0 {
+                target * spread.abs().exp()
+            } else {
+                target * (-spread.abs()).exp()
+            };
+            released.push(ReleasedModel {
+                date,
+                params_b,
+                mmlu: mmlu_of_params(params_b, rng.normal()),
+            });
+        }
+    }
+    (papers, released)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_size_is_184() {
+        let (papers, released) = survey_dataset(DEFAULT_SEED);
+        assert_eq!(papers.len(), 184);
+        assert_eq!(released.len(), 60);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = survey_dataset(DEFAULT_SEED);
+        let (b, _) = survey_dataset(DEFAULT_SEED);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.params_b, y.params_b);
+        }
+    }
+
+    #[test]
+    fn mmlu_curve_is_monotone_and_calibrated() {
+        assert!(mmlu_of_params(0.1, 0.0) < 35.0);
+        assert!(mmlu_of_params(70.0, 0.0) > 60.0);
+        assert!(mmlu_of_params(405.0, 0.0) > 75.0);
+        let mut prev = 0.0;
+        for p in [0.1, 1.0, 7.0, 70.0, 405.0] {
+            let v = mmlu_of_params(p, 0.0);
+            assert!(v > prev);
+            prev = v;
+        }
+        // the 40-MMLU crossover sits near 1.7B, below the small-model cap
+        assert!(mmlu_of_params(1.55, 0.0) < 40.0);
+        assert!(mmlu_of_params(2.4, 0.0) > 40.0);
+    }
+
+    #[test]
+    fn small_quota_is_exact_per_era() {
+        let (papers, _) = survey_dataset(DEFAULT_SEED);
+        let post: Vec<_> = papers.iter().filter(|p| p.date >= FEB_2023).collect();
+        let small = post.iter().filter(|p| p.mmlu < 40.0).count();
+        let frac = small as f64 / post.len() as f64;
+        assert!((frac - 0.606).abs() < 0.01, "{frac}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Host tensor engine.
+//!
+//! The intervention-graph interpreter manipulates activations *between*
+//! AOT-compiled module executions: slicing, assignment, arithmetic,
+//! softmax/argmax, logit-diff metrics, and the all-reduce used by the
+//! simulated tensor-parallel shards. Those ops run on host buffers, so the
+//! crate carries a small dense row-major `f32` tensor engine (token-id
+//! tensors use `i64` stored losslessly in `f32` for vocab sizes ≪ 2^24,
+//! which holds for every simulated config).
+//!
+//! The engine favors clarity and testability over peak throughput — the hot
+//! compute path is inside the compiled XLA executables, not here — but the
+//! ops used on the request path (slice/assign, elementwise) are
+//! allocation-conscious (§Perf).
+
+mod shape;
+pub mod ops;
+pub mod optim;
+
+pub use ops::{logit_diff, Range1};
+pub use shape::Shape;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from raw data; panics if the element count mismatches.
+    pub fn new(dims: &[usize], data: Vec<f32>) -> Tensor {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "shape {dims:?} vs {} elems", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Tensor {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::new(&[], vec![v])
+    }
+
+    /// Sequential values 0..n reshaped — handy in tests.
+    pub fn iota(dims: &[usize]) -> Tensor {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: (0..n).map(|i| i as f32).collect() }
+    }
+
+    pub fn from_randn(dims: &[usize], prng: &mut crate::util::Prng, std: f32) -> Tensor {
+        let mut t = Tensor::zeros(dims);
+        prng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction; panics unless numel == 1.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "item() on non-scalar tensor");
+        self.data[0]
+    }
+
+    /// Reshape without copying; panics if element counts differ.
+    pub fn reshape(mut self, dims: &[usize]) -> Tensor {
+        let s = Shape::new(dims);
+        assert_eq!(s.numel(), self.numel(), "reshape {:?} -> {:?}", self.dims(), dims);
+        self.shape = s;
+        self
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.shape.offset(idx)]
+    }
+
+    pub fn set_at(&mut self, idx: &[usize], v: f32) {
+        let o = self.shape.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Max absolute difference vs another tensor (shape-checked).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims(), other.dims());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate equality within tolerance.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.dims() == other.dims() && self.max_abs_diff(other) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::iota(&[2, 3]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::iota(&[2, 3]).reshape(&[3, 2]);
+        assert_eq!(t.at(&[2, 1]), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_mismatch_panics() {
+        let _ = Tensor::iota(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    fn allclose_checks_shape_and_values() {
+        let a = Tensor::iota(&[2, 2]);
+        let mut b = a.clone();
+        assert!(a.allclose(&b, 0.0));
+        b.set_at(&[0, 1], 99.0);
+        assert!(!a.allclose(&b, 1.0));
+        let c = Tensor::iota(&[4]);
+        assert!(!a.allclose(&c, 100.0));
+    }
+}

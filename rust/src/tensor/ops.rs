@@ -1,0 +1,579 @@
+//! Tensor operations used by the intervention-graph interpreter and the
+//! shard all-reduce. Each op is exercised by unit tests against naive
+//! oracles and by the interpreter's property tests.
+
+use super::{Shape, Tensor};
+
+// ---------------------------------------------------------------------------
+// Elementwise with broadcasting
+// ---------------------------------------------------------------------------
+
+fn broadcast_binop(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    if a.dims() == b.dims() {
+        // fast path: no index arithmetic
+        let data = a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
+        return Tensor::new(a.dims(), data);
+    }
+    let out_dims = Shape::broadcast(a.dims(), b.dims())
+        .unwrap_or_else(|| panic!("broadcast {:?} vs {:?}", a.dims(), b.dims()));
+    let out_shape = Shape::new(&out_dims);
+    let mut data = Vec::with_capacity(out_shape.numel());
+    let ra = out_dims.len() - a.rank();
+    let rb = out_dims.len() - b.rank();
+    for flat in 0..out_shape.numel() {
+        let idx = out_shape.unravel(flat);
+        let ia: Vec<usize> = idx[ra..]
+            .iter()
+            .zip(a.dims())
+            .map(|(&i, &d)| if d == 1 { 0 } else { i })
+            .collect();
+        let ib: Vec<usize> = idx[rb..]
+            .iter()
+            .zip(b.dims())
+            .map(|(&i, &d)| if d == 1 { 0 } else { i })
+            .collect();
+        data.push(f(a.at(&ia), b.at(&ib)));
+    }
+    Tensor::new(&out_dims, data)
+}
+
+impl Tensor {
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        broadcast_binop(self, other, |a, b| a + b)
+    }
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        broadcast_binop(self, other, |a, b| a - b)
+    }
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        broadcast_binop(self, other, |a, b| a * b)
+    }
+    pub fn div(&self, other: &Tensor) -> Tensor {
+        broadcast_binop(self, other, |a, b| a / b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        let data = self.data().iter().map(|&x| x * s).collect();
+        Tensor::new(self.dims(), data)
+    }
+
+    pub fn add_scalar(&self, s: f32) -> Tensor {
+        let data = self.data().iter().map(|&x| x + s).collect();
+        Tensor::new(self.dims(), data)
+    }
+
+    pub fn neg(&self) -> Tensor {
+        self.scale(-1.0)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        let data = self.data().iter().map(|&x| x.max(0.0)).collect();
+        Tensor::new(self.dims(), data)
+    }
+
+    /// tanh-approximation GELU, matching the model's MLP activation.
+    pub fn gelu(&self) -> Tensor {
+        let data = self
+            .data()
+            .iter()
+            .map(|&x| {
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            })
+            .collect();
+        Tensor::new(self.dims(), data)
+    }
+
+    /// In-place add (same shape) — used by the shard all-reduce hot path.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dims(), other.dims());
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += *b;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slicing
+// ---------------------------------------------------------------------------
+
+/// A per-dimension slice `[start, stop)`; `stop == usize::MAX` means "end".
+/// A negative-step or strided slice is not needed by the graph ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Range1 {
+    pub start: usize,
+    pub stop: usize,
+}
+
+impl Range1 {
+    pub fn new(start: usize, stop: usize) -> Range1 {
+        Range1 { start, stop }
+    }
+    pub fn all() -> Range1 {
+        Range1 { start: 0, stop: usize::MAX }
+    }
+    pub fn one(i: usize) -> Range1 {
+        Range1 { start: i, stop: i + 1 }
+    }
+    fn clamp(&self, dim: usize) -> (usize, usize) {
+        let stop = if self.stop == usize::MAX { dim } else { self.stop };
+        assert!(self.start <= stop && stop <= dim, "slice {self:?} out of bounds for dim {dim}");
+        (self.start, stop)
+    }
+}
+
+impl Tensor {
+    /// Multi-dimensional slice. `ranges.len()` may be less than the rank;
+    /// trailing dimensions are taken whole. The result keeps the sliced
+    /// dimensions (no squeezing) — callers reshape if needed.
+    pub fn slice(&self, ranges: &[Range1]) -> Tensor {
+        assert!(ranges.len() <= self.rank());
+        let mut full: Vec<(usize, usize)> = Vec::with_capacity(self.rank());
+        for (i, &d) in self.dims().iter().enumerate() {
+            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+            full.push(r.clamp(d));
+        }
+        let out_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
+        let out_shape = Shape::new(&out_dims);
+        let mut data = Vec::with_capacity(out_shape.numel());
+        // iterate output indices, map to input
+        let mut idx = vec![0usize; self.rank()];
+        for flat in 0..out_shape.numel() {
+            let oidx = out_shape.unravel(flat);
+            for (k, &(s, _)) in full.iter().enumerate() {
+                idx[k] = s + oidx[k];
+            }
+            data.push(self.at(&idx));
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// Assign `src` into the slice of `self` described by `ranges`
+    /// (shape of `src` must equal the slice shape). This is the setter
+    /// primitive: `layer.output[1, t, :] = v`.
+    pub fn slice_assign(&mut self, ranges: &[Range1], src: &Tensor) {
+        assert!(ranges.len() <= self.rank());
+        let mut full: Vec<(usize, usize)> = Vec::with_capacity(self.rank());
+        for (i, &d) in self.dims().iter().enumerate() {
+            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+            full.push(r.clamp(d));
+        }
+        let slice_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
+        assert_eq!(
+            slice_dims,
+            src.dims(),
+            "slice_assign shape mismatch: slice {slice_dims:?} vs src {:?}",
+            src.dims()
+        );
+        let src_shape = Shape::new(&slice_dims);
+        let mut idx = vec![0usize; self.rank()];
+        for flat in 0..src_shape.numel() {
+            let sidx = src_shape.unravel(flat);
+            for (k, &(s, _)) in full.iter().enumerate() {
+                idx[k] = s + sidx[k];
+            }
+            let off = self.shape().offset(&idx);
+            self.data_mut()[off] = src.data()[flat];
+        }
+    }
+
+    /// Fill a slice with a constant (ablation setter).
+    pub fn slice_fill(&mut self, ranges: &[Range1], v: f32) {
+        let slice_dims: Vec<usize> = {
+            let mut dims = Vec::new();
+            for (i, &d) in self.dims().iter().enumerate() {
+                let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+                let (s, e) = r.clamp(d);
+                dims.push(e - s);
+            }
+            dims
+        };
+        let src = Tensor::full(&slice_dims, v);
+        self.slice_assign(ranges, &src);
+    }
+
+    /// Gather rows along an axis by integer indices.
+    pub fn index_select(&self, axis: usize, indices: &[usize]) -> Tensor {
+        assert!(axis < self.rank());
+        let mut out_dims = self.dims().to_vec();
+        out_dims[axis] = indices.len();
+        let out_shape = Shape::new(&out_dims);
+        let mut data = Vec::with_capacity(out_shape.numel());
+        let mut idx;
+        for flat in 0..out_shape.numel() {
+            idx = out_shape.unravel(flat);
+            idx[axis] = indices[idx[axis]];
+            data.push(self.at(&idx));
+        }
+        Tensor::new(&out_dims, data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear algebra & reductions
+// ---------------------------------------------------------------------------
+
+impl Tensor {
+    /// Matrix multiply. Supports 2-D × 2-D and batched N-D × 2-D (the last
+    /// two axes of `self` contract with `other`).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(other.rank(), 2, "rhs of matmul must be 2-D");
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        let k = *self.dims().last().expect("matmul on scalar");
+        assert_eq!(k, k2, "contraction mismatch {k} vs {k2}");
+        let rows: usize = self.numel() / k;
+        let mut out = vec![0.0f32; rows * n];
+        let a = self.data();
+        let b = other.data();
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        let mut out_dims = self.dims().to_vec();
+        *out_dims.last_mut().unwrap() = n;
+        Tensor::new(&out_dims, out)
+    }
+
+    /// Softmax over the last axis (numerically stabilized).
+    pub fn softmax_last(&self) -> Tensor {
+        let d = *self.dims().last().expect("softmax on scalar");
+        let mut data = self.data().to_vec();
+        for row in data.chunks_mut(d) {
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Tensor::new(self.dims(), data)
+    }
+
+    /// Argmax over the last axis; result drops that axis.
+    pub fn argmax_last(&self) -> Tensor {
+        let d = *self.dims().last().expect("argmax on scalar");
+        let out_dims = &self.dims()[..self.rank() - 1];
+        let data: Vec<f32> = self
+            .data()
+            .chunks(d)
+            .map(|row| {
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best as f32
+            })
+            .collect();
+        Tensor::new(out_dims, data)
+    }
+
+    pub fn sum_all(&self) -> f32 {
+        self.data().iter().sum()
+    }
+
+    pub fn mean_all(&self) -> f32 {
+        self.sum_all() / self.numel() as f32
+    }
+
+    /// Reduce-mean over one axis.
+    pub fn mean_axis(&self, axis: usize) -> Tensor {
+        assert!(axis < self.rank());
+        let mut out_dims = self.dims().to_vec();
+        let n = out_dims.remove(axis);
+        let out_shape = Shape::new(&out_dims);
+        let mut data = vec![0.0f32; out_shape.numel()];
+        for flat in 0..self.numel() {
+            let mut idx = self.shape().unravel(flat);
+            idx.remove(axis);
+            data[out_shape.offset(&idx)] += self.data()[flat];
+        }
+        for v in data.iter_mut() {
+            *v /= n as f32;
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// L2 norm of the whole tensor.
+    pub fn norm(&self) -> f32 {
+        self.data().iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Concatenate along an axis.
+    pub fn concat(parts: &[&Tensor], axis: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let rank = parts[0].rank();
+        assert!(axis < rank);
+        for p in parts {
+            assert_eq!(p.rank(), rank);
+            for d in 0..rank {
+                if d != axis {
+                    assert_eq!(p.dims()[d], parts[0].dims()[d], "concat dim mismatch");
+                }
+            }
+        }
+        let mut out_dims = parts[0].dims().to_vec();
+        out_dims[axis] = parts.iter().map(|p| p.dims()[axis]).sum();
+        let out_shape = Shape::new(&out_dims);
+        let mut out = Tensor::zeros(&out_dims);
+        let mut offset = 0usize;
+        for p in parts {
+            let mut idx;
+            for flat in 0..p.numel() {
+                idx = p.shape().unravel(flat);
+                idx[axis] += offset;
+                let o = out_shape.offset(&idx);
+                out.data_mut()[o] = p.data()[flat];
+            }
+            offset += p.dims()[axis];
+        }
+        out
+    }
+
+    /// Split into equal chunks along an axis.
+    pub fn split(&self, axis: usize, chunks: usize) -> Vec<Tensor> {
+        assert!(axis < self.rank());
+        let d = self.dims()[axis];
+        assert_eq!(d % chunks, 0, "split {d} into {chunks}");
+        let step = d / chunks;
+        (0..chunks)
+            .map(|c| {
+                let mut ranges = vec![Range1::all(); axis + 1];
+                ranges[axis] = Range1::new(c * step, (c + 1) * step);
+                self.slice(&ranges)
+            })
+            .collect()
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        let mut data = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                data[j * m + i] = self.data()[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], data)
+    }
+}
+
+/// The standard activation-patching metric: `logit[target] - logit[foil]`
+/// on the last-token logits of each batch row. Returns shape `[batch]`.
+pub fn logit_diff(logits: &Tensor, target: usize, foil: usize) -> Tensor {
+    assert!(logits.rank() >= 2, "logit_diff expects [.., seq, vocab]");
+    let vocab = *logits.dims().last().unwrap();
+    let seq = logits.dims()[logits.rank() - 2];
+    let batch: usize = logits.numel() / (vocab * seq);
+    assert!(target < vocab && foil < vocab);
+    let data: Vec<f32> = (0..batch)
+        .map(|b| {
+            let base = b * seq * vocab + (seq - 1) * vocab;
+            logits.data()[base + target] - logits.data()[base + foil]
+        })
+        .collect();
+    Tensor::new(&[batch], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_same_shape() {
+        let a = Tensor::iota(&[2, 2]);
+        let b = Tensor::full(&[2, 2], 2.0);
+        assert_eq!(a.add(&b).data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.mul(&b).data(), &[0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(a.sub(&b).data(), &[-2.0, -1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn broadcast_row_and_scalar() {
+        let a = Tensor::iota(&[2, 3]);
+        let row = Tensor::new(&[3], vec![10.0, 20.0, 30.0]);
+        assert_eq!(a.add(&row).data(), &[10.0, 21.0, 32.0, 13.0, 24.0, 35.0]);
+        let s = Tensor::scalar(1.0);
+        assert_eq!(a.add(&s).data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn broadcast_incompatible_panics() {
+        let _ = Tensor::iota(&[2, 3]).add(&Tensor::iota(&[4]));
+    }
+
+    #[test]
+    fn slice_middle() {
+        let t = Tensor::iota(&[3, 4]);
+        let s = t.slice(&[Range1::new(1, 3), Range1::new(0, 2)]);
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.data(), &[4.0, 5.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn slice_trailing_dims_whole() {
+        let t = Tensor::iota(&[2, 3]);
+        let s = t.slice(&[Range1::one(1)]);
+        assert_eq!(s.dims(), &[1, 3]);
+        assert_eq!(s.data(), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_assign_round_trip() {
+        let mut t = Tensor::zeros(&[3, 3]);
+        let patch = Tensor::full(&[1, 3], 7.0);
+        t.slice_assign(&[Range1::one(1)], &patch);
+        assert_eq!(t.data(), &[0.0, 0.0, 0.0, 7.0, 7.0, 7.0, 0.0, 0.0, 0.0]);
+        // extract back
+        let got = t.slice(&[Range1::one(1)]);
+        assert_eq!(got, patch);
+    }
+
+    #[test]
+    fn slice_fill_ablates() {
+        let mut t = Tensor::iota(&[2, 4]);
+        t.slice_fill(&[Range1::all(), Range1::new(1, 3)], 0.0);
+        assert_eq!(t.data(), &[0.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn index_select_axis0_and_1() {
+        let t = Tensor::iota(&[3, 2]);
+        let g0 = t.index_select(0, &[2, 0]);
+        assert_eq!(g0.data(), &[4.0, 5.0, 0.0, 1.0]);
+        let g1 = t.index_select(1, &[1]);
+        assert_eq!(g1.dims(), &[3, 1]);
+        assert_eq!(g1.data(), &[1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_2d() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_batched() {
+        let a = Tensor::iota(&[2, 2, 3]);
+        let b = Tensor::new(&[3, 1], vec![1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.dims(), &[2, 2, 1]);
+        assert_eq!(c.data(), &[3.0, 12.0, 21.0, 30.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::iota(&[4, 7]);
+        let s = t.softmax_last();
+        for row in s.data().chunks(7) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.windows(2).all(|w| w[0] <= w[1])); // monotone input -> monotone output
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let t = Tensor::new(&[1, 3], vec![1000.0, 1000.0, 1000.0]);
+        let s = t.softmax_last();
+        for &v in s.data() {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn argmax_last_axis() {
+        let t = Tensor::new(&[2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]);
+        let a = t.argmax_last();
+        assert_eq!(a.dims(), &[2]);
+        assert_eq!(a.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::iota(&[2, 3]);
+        assert_eq!(t.sum_all(), 15.0);
+        assert_eq!(t.mean_all(), 2.5);
+        let m0 = t.mean_axis(0);
+        assert_eq!(m0.dims(), &[3]);
+        assert_eq!(m0.data(), &[1.5, 2.5, 3.5]);
+        let m1 = t.mean_axis(1);
+        assert_eq!(m1.data(), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn concat_and_split_inverse() {
+        let t = Tensor::iota(&[2, 6]);
+        let parts = t.split(1, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].dims(), &[2, 2]);
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let back = Tensor::concat(&refs, 1);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_axis0() {
+        let a = Tensor::iota(&[1, 2]);
+        let b = Tensor::full(&[2, 2], 9.0);
+        let c = Tensor::concat(&[&a, &b], 0);
+        assert_eq!(c.dims(), &[3, 2]);
+        assert_eq!(c.data(), &[0.0, 1.0, 9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn transpose2_involution() {
+        let t = Tensor::iota(&[2, 3]);
+        assert_eq!(t.transpose2().transpose2(), t);
+        assert_eq!(t.transpose2().at(&[2, 1]), t.at(&[1, 2]));
+    }
+
+    #[test]
+    fn logit_diff_last_token() {
+        // batch=2, seq=2, vocab=3
+        let logits = Tensor::new(
+            &[2, 2, 3],
+            vec![
+                0.0, 0.0, 0.0, // b0 t0
+                1.0, 4.0, 2.0, // b0 t1 (last)
+                0.0, 0.0, 0.0, // b1 t0
+                5.0, 1.0, 0.0, // b1 t1 (last)
+            ],
+        );
+        let ld = logit_diff(&logits, 1, 0);
+        assert_eq!(ld.data(), &[3.0, -4.0]);
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let mut a = Tensor::iota(&[3, 3]);
+        let b = Tensor::full(&[3, 3], 2.0);
+        let expect = a.add(&b);
+        a.add_assign(&b);
+        assert_eq!(a, expect);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let t = Tensor::new(&[3], vec![-10.0, 0.0, 10.0]);
+        let g = t.gelu();
+        assert!(g.data()[0].abs() < 1e-3);
+        assert_eq!(g.data()[1], 0.0);
+        assert!((g.data()[2] - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,197 @@
+//! Host-side optimizers for client-driven training loops.
+//!
+//! The paper's Code Examples 5 and 8 train parameters (LoRA adapters,
+//! linear probes) against remotely-fetched activations. The activations
+//! come back through intervention graphs; the parameter updates run on the
+//! researcher's side. These optimizers power `examples/probe_training.rs`
+//! (the Code Example 8 analog).
+
+use super::Tensor;
+
+/// Plain SGD with optional momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Sgd {
+        Sgd { lr, momentum, velocity: Vec::new() }
+    }
+
+    /// Apply one step; `params` and `grads` are parallel slices.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            assert_eq!(p.dims(), g.dims());
+            for i in 0..p.numel() {
+                let vel = self.momentum * v.data()[i] + g.data()[i];
+                v.data_mut()[i] = vel;
+                p.data_mut()[i] -= self.lr * vel;
+            }
+        }
+    }
+}
+
+/// Adam (Kingma & Ba), the optimizer of the paper's probe example.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+            self.v = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t);
+        let b2t = 1.0 - self.beta2.powi(self.t);
+        for (((p, g), m), v) in params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v) {
+            for i in 0..p.numel() {
+                let gi = g.data()[i];
+                let mi = self.beta1 * m.data()[i] + (1.0 - self.beta1) * gi;
+                let vi = self.beta2 * v.data()[i] + (1.0 - self.beta2) * gi * gi;
+                m.data_mut()[i] = mi;
+                v.data_mut()[i] = vi;
+                let mhat = mi / b1t;
+                let vhat = vi / b2t;
+                p.data_mut()[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Mean-squared-error loss and its gradient w.r.t. `pred`.
+pub fn mse(pred: &Tensor, target: &Tensor) -> (f32, Tensor) {
+    assert_eq!(pred.dims(), target.dims());
+    let n = pred.numel() as f32;
+    let mut grad = Tensor::zeros(pred.dims());
+    let mut loss = 0.0f32;
+    for i in 0..pred.numel() {
+        let d = pred.data()[i] - target.data()[i];
+        loss += d * d;
+        grad.data_mut()[i] = 2.0 * d / n;
+    }
+    (loss / n, grad)
+}
+
+/// A linear probe `y = x @ w + b` trained with backprop on the host.
+pub struct LinearProbe {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+impl LinearProbe {
+    pub fn new(d_in: usize, d_out: usize, rng: &mut crate::util::Prng) -> LinearProbe {
+        let mut w = Tensor::zeros(&[d_in, d_out]);
+        rng.fill_uniform_sym(w.data_mut(), 0.05);
+        LinearProbe { w, b: Tensor::zeros(&[d_out]) }
+    }
+
+    /// Forward over `[rows, d_in]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        x.matmul(&self.w).add(&self.b)
+    }
+
+    /// One MSE training step; returns the loss.
+    pub fn train_step(&mut self, x: &Tensor, target: &Tensor, opt: &mut Adam) -> f32 {
+        let pred = self.forward(x);
+        let (loss, gout) = mse(&pred, target);
+        // grads: dW = xᵀ·g ; db = Σ_rows g
+        let gw = x.transpose2().matmul(&gout);
+        let gb = gout.mean_axis(0).scale(gout.dims()[0] as f32);
+        let mut params = [self.w.clone(), self.b.clone()];
+        opt.step(&mut params, &[gw, gb]);
+        let [w, b] = params;
+        self.w = w;
+        self.b = b;
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn sgd_reduces_quadratic() {
+        // minimize ||p||² with grad 2p
+        let mut p = vec![Tensor::new(&[3], vec![1.0, -2.0, 3.0])];
+        let mut opt = Sgd::new(0.1, 0.0);
+        for _ in 0..100 {
+            let g = vec![p[0].scale(2.0)];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].norm() < 1e-3, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn sgd_momentum_accelerates() {
+        let run = |mom: f32| {
+            let mut p = vec![Tensor::new(&[1], vec![10.0])];
+            let mut opt = Sgd::new(0.01, mom);
+            for _ in 0..50 {
+                let g = vec![p[0].scale(2.0)];
+                opt.step(&mut p, &g);
+            }
+            p[0].data()[0].abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        let mut p = vec![Tensor::new(&[4], vec![5.0, -5.0, 2.0, -0.5])];
+        let mut opt = Adam::new(0.1);
+        for _ in 0..300 {
+            let g = vec![p[0].scale(2.0)];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].norm() < 1e-2, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn mse_and_grad() {
+        let pred = Tensor::new(&[2], vec![1.0, 3.0]);
+        let target = Tensor::new(&[2], vec![0.0, 3.0]);
+        let (loss, g) = mse(&pred, &target);
+        assert!((loss - 0.5).abs() < 1e-6);
+        assert_eq!(g.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn probe_learns_identity_map() {
+        let mut rng = Prng::new(42);
+        let mut probe = LinearProbe::new(4, 4, &mut rng);
+        let mut opt = Adam::new(0.05);
+        // target function: y = x (identity); train on random batches
+        let mut last = f32::MAX;
+        for step in 0..400 {
+            let x = Tensor::from_randn(&[16, 4], &mut rng, 1.0);
+            let loss = probe.train_step(&x, &x, &mut opt);
+            if step == 0 {
+                last = loss;
+            }
+        }
+        let x = Tensor::from_randn(&[8, 4], &mut rng, 1.0);
+        let (final_loss, _) = mse(&probe.forward(&x), &x);
+        assert!(final_loss < last * 0.05, "{final_loss} vs initial {last}");
+    }
+}

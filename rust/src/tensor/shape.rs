@@ -1,0 +1,118 @@
+//! Shapes and row-major stride arithmetic.
+
+/// A tensor shape: dimensions plus cached row-major strides.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<usize>,
+    strides: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        let mut strides = vec![1usize; dims.len()];
+        for i in (0..dims.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * dims[i + 1];
+        }
+        Shape { dims: dims.to_vec(), strides }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Flat offset of a multi-index (bounds-checked).
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.dims.len(), "index rank mismatch");
+        let mut off = 0;
+        for (i, (&ix, (&d, &s))) in idx.iter().zip(self.dims.iter().zip(&self.strides)).enumerate() {
+            assert!(ix < d, "index {ix} out of bounds for dim {i} (size {d})");
+            off += ix * s;
+        }
+        off
+    }
+
+    /// Inverse of `offset`: multi-index of a flat position.
+    pub fn unravel(&self, mut flat: usize) -> Vec<usize> {
+        let mut idx = vec![0; self.rank()];
+        for i in 0..self.rank() {
+            idx[i] = flat / self.strides[i];
+            flat %= self.strides[i];
+        }
+        idx
+    }
+
+    /// Broadcast two shapes (numpy rules); None if incompatible.
+    pub fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+        let rank = a.len().max(b.len());
+        let mut out = vec![0usize; rank];
+        for i in 0..rank {
+            let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+            let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+            out[i] = if da == db {
+                da
+            } else if da == 1 {
+                db
+            } else if db == 1 {
+                da
+            } else {
+                return None;
+            };
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.strides(), &[12, 4, 1]);
+        assert_eq!(s.numel(), 24);
+    }
+
+    #[test]
+    fn offset_unravel_inverse() {
+        let s = Shape::new(&[3, 4, 5]);
+        for flat in 0..s.numel() {
+            let idx = s.unravel(flat);
+            assert_eq!(s.offset(&idx), flat);
+        }
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::new(&[]);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.offset(&[]), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn offset_out_of_bounds() {
+        Shape::new(&[2, 2]).offset(&[2, 0]);
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(Shape::broadcast(&[2, 3], &[3]), Some(vec![2, 3]));
+        assert_eq!(Shape::broadcast(&[2, 1], &[1, 4]), Some(vec![2, 4]));
+        assert_eq!(Shape::broadcast(&[], &[5]), Some(vec![5]));
+        assert_eq!(Shape::broadcast(&[2, 3], &[4]), None);
+        assert_eq!(Shape::broadcast(&[2], &[2]), Some(vec![2]));
+    }
+}

@@ -1,0 +1,127 @@
+//! Base64 (standard alphabet, padded) — used to pack f32 tensor payloads
+//! in result messages. JSON float arrays cost ~13 bytes/value and a parse;
+//! base64-packed little-endian f32 costs 5.33 bytes/value and a memcpy —
+//! a §Perf L3 win measured in EXPERIMENTS.md (the paper's NDIF likewise
+//! returns binary tensors, not JSON numbers).
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes to base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn decode_char(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode base64 (rejects malformed input).
+pub fn decode(s: &str) -> Option<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 4 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for chunk in b.chunks(4) {
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && chunk[..4 - pad].iter().any(|&c| c == b'=')) {
+            return None;
+        }
+        let mut n = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' { 0 } else { decode_char(c)? };
+            n |= v << (18 - 6 * i);
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+/// Pack f32s little-endian and base64-encode.
+pub fn encode_f32(data: &[f32]) -> String {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    encode(bytes)
+}
+
+/// Decode base64 into f32s (must be a multiple of 4 bytes).
+pub fn decode_f32(s: &str) -> Option<Vec<f32>> {
+    let bytes = decode(s)?;
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    let mut out = vec![0.0f32; bytes.len() / 4];
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(encode(b""), "");
+        assert_eq!(encode(b"f"), "Zg==");
+        assert_eq!(encode(b"fo"), "Zm8=");
+        assert_eq!(encode(b"foo"), "Zm9v");
+        assert_eq!(encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(decode("Zg==").unwrap(), b"f");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode("abc").is_none()); // not multiple of 4
+        assert!(decode("ab=c").is_none()); // pad in middle
+        assert!(decode("a\nb=").is_none()); // bad char
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0];
+        let enc = encode_f32(&xs);
+        assert_eq!(decode_f32(&enc).unwrap(), xs);
+    }
+
+    #[test]
+    fn random_bytes_round_trip() {
+        let mut rng = crate::util::Prng::new(64);
+        for _ in 0..50 {
+            let n = rng.range(0, 100);
+            let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn packing_is_compact() {
+        let xs = vec![1.2345678f32; 1000];
+        let b64 = encode_f32(&xs).len();
+        let json: usize = xs.iter().map(|v| format!("{v},").len()).sum();
+        assert!(b64 as f64 * 1.8 < json as f64, "b64 {b64} vs json {json}");
+    }
+}

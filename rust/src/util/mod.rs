@@ -1,0 +1,14 @@
+//! Small self-contained utilities: PRNG, statistics, table formatting,
+//! CLI parsing, and timing — the pieces normally pulled from crates.io
+//! (`rand`, `criterion`, `clap`) that are unavailable in this offline
+//! build and are therefore first-class substrates of the repo.
+
+pub mod b64;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod cli;
+pub mod time;
+
+pub use prng::Prng;
+pub use stats::Summary;

@@ -1,0 +1,276 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `rand` is not available offline, so the repo carries its own generator:
+//! SplitMix64 for seeding and xoshiro256++ for the stream (the same pairing
+//! the `rand` ecosystem recommends). Determinism matters here: synthetic
+//! model weights are generated from a seed derived from the model name, so
+//! the Rust runtime, the Python oracle tests, and every benchmark see the
+//! same parameters without shipping weight files in the repo.
+
+/// SplitMix64 step: used to expand a single `u64` seed into the xoshiro
+/// state. Reference: Steele, Lea & Flood, "Fast splittable pseudorandom
+/// number generators" (OOPSLA 2014).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ pseudo-random generator (Blackman & Vigna).
+///
+/// Not cryptographic; statistical quality is more than sufficient for
+/// synthetic weights, workload generation, and property-test case
+/// generation.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Prng { s }
+    }
+
+    /// Derive a seed from a string (FNV-1a hash) — used to key weight
+    /// streams by model/module/parameter name.
+    pub fn from_name(name: &str) -> Self {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Prng::new(h)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit mantissa method).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection-free-ish method
+    /// (simple modulo is fine for our non-adversarial uses, but we debias).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        // rejection sampling to remove modulo bias
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Standard normal sample (Box–Muller; one value per call, the twin is
+    /// discarded for simplicity — weight generation is not on a hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Normal `f32` with the given mean and standard deviation.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fill a buffer with normal samples scaled by `std` — the synthetic
+    /// weight initializer (truncation at 3σ to keep activations tame).
+    pub fn fill_normal(&mut self, buf: &mut [f32], std: f32) {
+        for v in buf.iter_mut() {
+            let mut z = self.normal() as f32;
+            if z > 3.0 {
+                z = 3.0;
+            } else if z < -3.0 {
+                z = -3.0;
+            }
+            *v = z * std;
+        }
+    }
+
+    /// Fill a buffer with symmetric-uniform samples `(2u - 1) * a` — the
+    /// synthetic weight initializer. Unlike [`Prng::fill_normal`] this is
+    /// **bit-exact reproducible in Python** (`python/compile/prng.py`
+    /// mirrors it), which lets pytest regenerate identical weights for the
+    /// cross-language oracle checks. Variance = a²/3, so `a = std·√3`.
+    pub fn fill_uniform_sym(&mut self, buf: &mut [f32], a: f64) {
+        for v in buf.iter_mut() {
+            *v = ((2.0 * self.uniform() - 1.0) * a) as f32;
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn from_name_is_stable() {
+        let x = Prng::from_name("llama8b-sim/layer.0/wq").next_u64();
+        let y = Prng::from_name("llama8b-sim/layer.0/wq").next_u64();
+        let z = Prng::from_name("llama8b-sim/layer.0/wk").next_u64();
+        assert_eq!(x, y);
+        assert_ne!(x, z);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            let u = p.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut p = Prng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut p = Prng::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[p.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        p.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    /// Known-answer test shared with `python/compile/prng.py` — if either
+    /// side drifts, the cross-language weight contract is broken.
+    #[test]
+    fn cross_language_known_answers() {
+        let mut p = Prng::from_name("xcheck");
+        assert_eq!(p.next_u64(), 0x1c801f4c48a0b4ec);
+        assert_eq!(p.next_u64(), 0xa6b3ee2bb4a9612c);
+        assert_eq!(p.next_u64(), 0x3ff86e8d2fea04d6);
+        assert_eq!(p.next_u64(), 0x09274f6ed2dbf80f);
+        let mut buf = [0.0f32; 4];
+        Prng::from_name("xcheck").fill_uniform_sym(&mut buf, 0.5);
+        assert_eq!(buf, [-0.38867, 0.15118302, -0.25011548, -0.46424392]);
+    }
+
+    #[test]
+    fn fill_uniform_sym_bounded() {
+        let mut p = Prng::new(17);
+        let mut buf = vec![0.0f32; 10_000];
+        p.fill_uniform_sym(&mut buf, 0.1);
+        assert!(buf.iter().all(|v| v.abs() <= 0.1));
+        let mean: f32 = buf.iter().sum::<f32>() / buf.len() as f32;
+        assert!(mean.abs() < 0.005);
+    }
+
+    #[test]
+    fn fill_normal_truncates() {
+        let mut p = Prng::new(13);
+        let mut buf = vec![0.0f32; 50_000];
+        p.fill_normal(&mut buf, 0.02);
+        for &v in &buf {
+            assert!(v.abs() <= 0.06 + 1e-6);
+        }
+    }
+}

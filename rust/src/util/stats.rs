@@ -1,0 +1,175 @@
+//! Descriptive statistics for benchmark reporting.
+//!
+//! The paper reports `mean ± std` for every table and quantile bands for
+//! the load test (Fig. 9); this module provides those plus the simple
+//! linear regression used to check "median response time is approximately
+//! linear in the number of concurrent users".
+
+/// Summary statistics of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample standard deviation (n-1 denominator).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub q25: f64,
+    pub q75: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty sample.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            median: quantile_sorted(&s, 0.5),
+            q25: quantile_sorted(&s, 0.25),
+            q75: quantile_sorted(&s, 0.75),
+        }
+    }
+
+    /// Format as the paper's `mean ± std` (3 decimal places, seconds).
+    pub fn pm(&self) -> String {
+        format!("{:.3} ± {:.3}", self.mean, self.std)
+    }
+
+    /// 95% confidence half-width of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.std / (self.n as f64).sqrt()
+    }
+}
+
+/// Linear-interpolated quantile of a **sorted** sample, q in [0, 1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Quantile of an unsorted sample.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&s, q)
+}
+
+/// Ordinary least squares fit `y = a + b x`. Returns `(a, b, r2)`.
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let syy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let (_, _, r2) = linfit(x, y);
+    let (_, b, _) = linfit(x, y);
+    r2.sqrt() * b.signum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[2.5]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.q25, 2.5);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let s = [0.0, 10.0];
+        assert_eq!(quantile(&s, 0.5), 5.0);
+        assert_eq!(quantile(&s, 0.25), 2.5);
+        assert_eq!(quantile(&s, 0.0), 0.0);
+        assert_eq!(quantile(&s, 1.0), 10.0);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let s = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&s, 0.5), 3.0);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 2.0 + 3.0 * v).collect();
+        let (a, b, r2) = linfit(&x, &y);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_noise_reduces_r2() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v + if i % 2 == 0 { 5.0 } else { -5.0 })
+            .collect();
+        let (_, b, r2) = linfit(&x, &y);
+        assert!(b > 0.5 && b < 1.5);
+        assert!(r2 < 1.0);
+    }
+
+    #[test]
+    fn pm_formatting() {
+        let s = Summary::of(&[1.0, 1.0, 1.0]);
+        assert_eq!(s.pm(), "1.000 ± 0.000");
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let a = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        let many: Vec<f64> = (0..400).map(|i| 1.0 + (i % 4) as f64).collect();
+        let b = Summary::of(&many);
+        assert!(b.ci95() < a.ci95());
+    }
+}

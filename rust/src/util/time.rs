@@ -1,0 +1,86 @@
+//! Timing helpers for the hand-rolled benchmark harness (criterion is
+//! unavailable offline). Provides warmed, repeated measurement with
+//! per-iteration wallclock capture in seconds.
+
+use std::time::Instant;
+
+/// Time a closure once; returns (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Run `warmup` untimed iterations then `n` timed iterations, returning
+/// per-iteration seconds. The closure receives the iteration index.
+pub fn sample(warmup: usize, n: usize, mut f: impl FnMut(usize)) -> Vec<f64> {
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let t0 = Instant::now();
+        f(i);
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// A simple stopwatch accumulating named segments — used in profiling the
+/// request hot path (§Perf).
+#[derive(Default, Debug)]
+pub struct Stopwatch {
+    segments: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch::default()
+    }
+
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let r = f();
+        self.segments.push((name.to_string(), t0.elapsed().as_secs_f64()));
+        r
+    }
+
+    pub fn segments(&self) -> &[(String, f64)] {
+        &self.segments
+    }
+
+    pub fn report(&self) -> String {
+        let total: f64 = self.segments.iter().map(|(_, t)| t).sum();
+        let mut s = String::new();
+        for (name, t) in &self.segments {
+            s.push_str(&format!(
+                "{name:<24} {:>10.6}s  {:>5.1}%\n",
+                t,
+                if total > 0.0 { 100.0 * t / total } else { 0.0 }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_returns_n() {
+        let xs = sample(2, 5, |_| std::thread::sleep(std::time::Duration::from_micros(10)));
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        let v = sw.measure("a", || 41 + 1);
+        assert_eq!(v, 42);
+        sw.measure("b", || ());
+        assert_eq!(sw.segments().len(), 2);
+        assert!(sw.report().contains("a"));
+    }
+}

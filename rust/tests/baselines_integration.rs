@@ -1,0 +1,123 @@
+//! Cross-framework validation: every Table-1 mechanism and the Petals
+//! swarm must produce identical activation-patching numerics — the
+//! benchmarks then measure purely architectural costs.
+
+use nnscope::baselines::hooks::{BaukitLike, NnsightLocal, PyveneLike};
+use nnscope::baselines::tlens::TlensLike;
+use nnscope::baselines::{patch_rows, Framework};
+use nnscope::models::workload::IoiBatch;
+use nnscope::models::{artifacts_dir, ModelRunner, ModelWeights};
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::tensor::Tensor;
+
+fn ioi() -> IoiBatch {
+    let m = nnscope::runtime::Manifest::load(&artifacts_dir(), "tiny-sim").unwrap();
+    IoiBatch::generate(2, m.vocab, m.seq, 7)
+}
+
+#[test]
+fn all_frameworks_agree_on_patching_numerics() {
+    // ensure weights.bin exists for the cold-load paths
+    let m = nnscope::runtime::Manifest::load(&artifacts_dir(), "tiny-sim").unwrap();
+    ModelWeights::ensure_on_disk(&m).unwrap();
+
+    let batch = ioi();
+    let baukit = BaukitLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    let pyvene = PyveneLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    let tlens = TlensLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    let nnsight = NnsightLocal::setup(&artifacts_dir(), "tiny-sim").unwrap();
+
+    let a = baukit.activation_patch(&batch, 1).unwrap();
+    let b = pyvene.activation_patch(&batch, 1).unwrap();
+    let c = tlens.activation_patch(&batch, 1).unwrap();
+    let d = nnsight.activation_patch(&batch, 1).unwrap();
+
+    assert!(a.allclose(&b, 1e-6), "baukit vs pyvene: {}", a.max_abs_diff(&b));
+    assert!(a.allclose(&c, 1e-6), "baukit vs tlens: {}", a.max_abs_diff(&c));
+    assert!(a.allclose(&d, 1e-5), "baukit vs nnsight: {}", a.max_abs_diff(&d));
+    // and the patch actually does something
+    assert!(a.data().iter().any(|v| v.abs() > 1e-6));
+}
+
+#[test]
+fn petals_standard_inference_matches_direct() {
+    let runner = ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap();
+    let swarm = nnscope::baselines::petals::PetalsSwarm::start(
+        &artifacts_dir(),
+        "tiny-sim",
+        NetSim::new(0.0, 1e12, Mode::Account),
+    )
+    .unwrap();
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+    let direct = runner.forward_plain(&tokens).unwrap();
+    let petals = swarm.infer(&tokens).unwrap();
+    assert!(
+        direct.allclose(&petals, 1e-5),
+        "diff {}",
+        direct.max_abs_diff(&petals)
+    );
+    // two hidden-state transfers for plain inference
+    let hb = runner.manifest.hidden_bytes(1) as u64;
+    assert_eq!(swarm.link.bytes_transferred(), 2 * hb);
+}
+
+#[test]
+fn petals_intervention_matches_hooked_run_and_costs_more_wire() {
+    let swarm = nnscope::baselines::petals::PetalsSwarm::start(
+        &artifacts_dir(),
+        "tiny-sim",
+        NetSim::new(0.0, 1e12, Mode::Account),
+    )
+    .unwrap();
+    let batch = ioi();
+    let tokens = batch.interleaved_tokens();
+    let (padded, _) = swarm.runner().pad_tokens(&tokens).unwrap();
+    let seq = swarm.runner().manifest.seq;
+
+    swarm.link.reset();
+    let petals_logits = swarm
+        .patched_infer(&padded, 1, |t| patch_rows(t, seq))
+        .unwrap();
+    let hb = swarm.runner().manifest.hidden_bytes(padded.dims()[0]) as u64;
+    // four hidden-state transfers for an intervention
+    assert_eq!(swarm.link.bytes_transferred(), 4 * hb);
+
+    // numerics equal the directly-hooked run
+    let baukit = BaukitLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    let direct = baukit
+        .run_with_hook(&padded, "layer.1", |t| patch_rows(t, seq))
+        .unwrap();
+    assert!(
+        petals_logits.allclose(&direct, 1e-5),
+        "diff {}",
+        petals_logits.max_abs_diff(&direct)
+    );
+}
+
+#[test]
+fn tlens_standardization_is_real_work() {
+    let tlens = TlensLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    assert_eq!(tlens.standardized.len(), tlens.runner().manifest.n_layers);
+    let orig_wo = &tlens.runner().weights.modules["layer.0"][5];
+    let std_wo = &tlens.standardized[0].wo_centered;
+    assert_eq!(std_wo.dims(), &[orig_wo.dims()[1], orig_wo.dims()[0]]); // transposed
+}
+
+#[test]
+fn pyvene_collect_scheme_returns_activations() {
+    use nnscope::baselines::hooks::{InterventionConfig, InterventionType};
+    let pv = PyveneLike::setup(&artifacts_dir(), "tiny-sim").unwrap();
+    let tokens = Tensor::new(&[1, 16], vec![2.0; 16]);
+    let scheme = [
+        InterventionConfig { point: "layer.0".into(), kind: InterventionType::Collect },
+        InterventionConfig {
+            point: "layer.1".into(),
+            kind: InterventionType::ZeroNeurons { from: 0, to: 4 },
+        },
+    ];
+    let (logits, collected) = pv.run_scheme(&tokens, &scheme).unwrap();
+    assert_eq!(collected.len(), 1);
+    assert_eq!(collected[0].0, "layer.0");
+    assert_eq!(collected[0].1.dims(), &[1, 16, 32]);
+    assert_eq!(logits.dims(), &[1, 16, 64]);
+}

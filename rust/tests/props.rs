@@ -1,0 +1,202 @@
+//! Property tests over the full stack: randomly generated intervention
+//! graphs must (a) round-trip the wire format, (b) agree between scan's
+//! predicted shapes and executed shapes, (c) never corrupt co-tenant
+//! neighbours, and (d) never crash the server even when mangled.
+
+use nnscope::client::Trace;
+use nnscope::graph::serde as gserde;
+use nnscope::json::parse;
+use nnscope::models::{artifacts_dir, Hooks, ModelRunner};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::Prng;
+
+/// Build a random-but-valid trace over tiny-sim.
+fn random_trace(rng: &mut Prng, seq: usize, vocab: usize, n_layers: usize) -> Trace {
+    let batch = rng.range(1, 3); // 1 or 2 rows (exported batches 1,4)
+    let tokens = Tensor::new(
+        &[batch, seq],
+        (0..batch * seq).map(|_| rng.range(0, vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let layer = rng.range(0, n_layers);
+    let point = format!("layer.{layer}");
+    let h = tr.output(&point);
+    // a random chain of shape-preserving ops
+    let mut cur = h;
+    for _ in 0..rng.range(0, 4) {
+        cur = match rng.range(0, 4) {
+            0 => tr.scale(cur, 0.5 + rng.uniform_f32()),
+            1 => tr.gelu(cur),
+            2 => tr.add(cur, h),
+            _ => {
+                let f = rng.uniform_f32();
+                tr.fill(cur, &[Range1::one(0), Range1::one(seq - 1)], f)
+            }
+        };
+    }
+    // maybe write it back (valid: same module)
+    if rng.below(2) == 0 {
+        tr.set_output(&point, cur);
+    }
+    // read somewhere downstream and reduce
+    let later = rng.range(layer, n_layers);
+    let h2 = tr.output(&format!("layer.{later}"));
+    let m = tr.mean(h2);
+    tr.save(m);
+    tr.save(cur);
+    tr
+}
+
+#[test]
+fn random_graphs_scan_execute_and_round_trip() {
+    let runner = ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap();
+    let m = runner.manifest.clone();
+    let mut rng = Prng::new(0x5EED);
+    for case in 0..25 {
+        let tr = random_trace(&mut rng, m.seq, m.vocab, m.n_layers);
+        // wire round trip preserves the graph
+        let g = tr.graph().clone();
+        let wire = gserde::to_json(&g).to_string();
+        let back = gserde::from_json(&parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.nodes, g.nodes, "case {case}");
+
+        // scan's shapes match executed shapes for every save
+        let shapes = tr.scan(&m).unwrap_or_else(|e| panic!("case {case}: scan {e}"));
+        let res = tr
+            .run_local(&runner)
+            .unwrap_or_else(|e| panic!("case {case}: exec {e}"));
+        for (id, t) in &res.inner().values {
+            // the save node's shape equals its dependency's shape
+            assert_eq!(
+                t.dims(),
+                &shapes[*id][..],
+                "case {case}: node {id} shape mismatch"
+            );
+            assert!(t.data().iter().all(|v| v.is_finite()), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn random_cotenant_merges_preserve_solo_results() {
+    use nnscope::scheduler::execute_merged;
+    let runner = ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap();
+    let m = runner.manifest.clone();
+    let mut rng = Prng::new(0xC0C0);
+    for case in 0..10 {
+        // two single-row graphs (fit in batch 4 together)
+        let mut graphs = Vec::new();
+        for _ in 0..2 {
+            let tokens = Tensor::new(
+                &[1, m.seq],
+                (0..m.seq).map(|_| rng.range(0, m.vocab) as f32).collect(),
+            );
+            let mut tr = Trace::new("tiny-sim", &tokens);
+            let layer = rng.range(0, m.n_layers);
+            let point = format!("layer.{layer}");
+            let h = tr.output(&point);
+            if rng.below(2) == 0 {
+                let z = tr.scale(h, rng.uniform_f32());
+                tr.set_output(&point, z);
+            }
+            let logits = tr.output("lm_head");
+            tr.save(logits);
+            graphs.push(tr.into_graph());
+        }
+        let solo: Vec<_> = graphs
+            .iter()
+            .map(|g| nnscope::interp::execute(g, &runner).unwrap())
+            .collect();
+        let merged = execute_merged(&graphs, &runner).unwrap();
+        for (i, (s, mr)) in solo.iter().zip(&merged).enumerate() {
+            let mr = mr.as_ref().unwrap();
+            for (id, t) in &s.values {
+                assert!(
+                    mr.values[id].allclose(t, 1e-4),
+                    "case {case} graph {i} node {id}: diff {}",
+                    mr.values[id].max_abs_diff(t)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mangled_requests_never_crash_the_server() {
+    use nnscope::server::{http, NdifConfig, NdifServer};
+    let server = NdifServer::start(NdifConfig::local(&["tiny-sim"])).unwrap();
+    let addr = server.addr();
+
+    // a valid request to mutate
+    let runner_manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), "tiny-sim").unwrap();
+    let tokens = Tensor::zeros(&[1, runner_manifest.seq]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    let valid = gserde::to_json(tr.graph()).to_string();
+
+    let mut rng = Prng::new(0xFA22);
+    for _ in 0..40 {
+        let mut bytes = valid.clone().into_bytes();
+        match rng.range(0, 4) {
+            0 => {
+                // truncate
+                let cut = rng.range(0, bytes.len());
+                bytes.truncate(cut);
+            }
+            1 => {
+                // flip a byte
+                let i = rng.range(0, bytes.len());
+                bytes[i] = bytes[i].wrapping_add(rng.below(255) as u8 + 1);
+            }
+            2 => {
+                // duplicate a chunk
+                let i = rng.range(0, bytes.len());
+                let chunk: Vec<u8> = bytes[i..].to_vec();
+                bytes.extend_from_slice(&chunk);
+            }
+            _ => {
+                // random garbage
+                bytes = (0..rng.range(1, 200)).map(|_| rng.below(256) as u8).collect();
+            }
+        }
+        // must answer (with any status), not hang or die
+        let (status, _) = http::post(addr, "/v1/trace", &bytes).expect("server alive");
+        assert!(status == 202 || status == 400 || status == 404 || status == 401);
+    }
+
+    // the server still works after the fuzzing
+    let (status, _) = http::get(addr, "/health").unwrap();
+    assert_eq!(status, 200);
+    let client = nnscope::client::remote::NdifClient::new(addr);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    let s = tr.save(h);
+    let res = tr.run_remote(&client).unwrap();
+    assert_eq!(res.get(s).dims(), &[1, 16, 32]);
+}
+
+#[test]
+fn executor_frees_values_along_random_chains() {
+    use nnscope::graph::{InterventionGraph, Op, Port};
+    use nnscope::interp::Executor;
+    let fseq: Vec<String> = vec!["embed".into(), "layer.0".into(), "lm_head".into()];
+    let mut rng = Prng::new(0xF2EE);
+    for _ in 0..50 {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let mut cur = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let len = rng.range(2, 20);
+        for _ in 0..len {
+            cur = g.push(Op::Scale { arg: cur, factor: 0.9 });
+        }
+        g.push(Op::Save { arg: cur });
+        let mut ex = Executor::new(&g, &fseq).unwrap();
+        ex.run_pre().unwrap();
+        let mut t = Tensor::iota(&[1, 4]);
+        assert!(ex.wants("layer.0"));
+        ex.on_output("layer.0", &mut t);
+        // linear chain: at most two unlocked values live at any time
+        assert!(ex.peak_live() <= 2, "peak {}", ex.peak_live());
+    }
+}

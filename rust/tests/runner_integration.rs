@@ -1,0 +1,237 @@
+//! Integration: the python-AOT → rust-PJRT bridge, end to end.
+//!
+//! `python/compile/aot.py` exports `artifacts/tiny-sim/check.json` with
+//! reference logits computed in pure JAX from the shared deterministic
+//! weights. These tests regenerate the weights in Rust, execute the
+//! compiled module sequence through PJRT, and assert the numbers match —
+//! proving the weight contract, the HLO-text interchange, and the runner's
+//! interleaving semantics all at once.
+
+use nnscope::json::parse;
+use nnscope::models::{artifacts_dir, Hooks, ModelRunner};
+use nnscope::tensor::{Range1, Tensor};
+
+fn check_json() -> nnscope::json::Json {
+    let path = artifacts_dir().join("tiny-sim/check.json");
+    let text = std::fs::read_to_string(path).expect("check.json (run `make artifacts`)");
+    parse(&text).unwrap()
+}
+
+fn runner() -> ModelRunner {
+    ModelRunner::load(&artifacts_dir(), "tiny-sim").expect("load tiny-sim")
+}
+
+fn tokens_from_check(check: &nnscope::json::Json, seq: usize) -> Tensor {
+    let toks: Vec<f32> = check
+        .get("tokens")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let b = check.get("batch").as_usize().unwrap();
+    Tensor::new(&[b, seq], toks)
+}
+
+#[test]
+fn forward_matches_python_reference() {
+    let r = runner();
+    let check = check_json();
+    let tol = check.get("tol").as_f64().unwrap() as f32;
+    let tokens = tokens_from_check(&check, r.manifest.seq);
+
+    let logits = r.forward_plain(&tokens).unwrap();
+    assert_eq!(logits.dims(), &[1, r.manifest.seq, r.manifest.vocab]);
+
+    let expect: Vec<f32> = check
+        .get("logits_sample")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let last = logits.slice(&[
+        Range1::one(0),
+        Range1::one(r.manifest.seq - 1),
+        Range1::new(0, 8),
+    ]);
+    for (i, (&got, &want)) in last.data().iter().zip(&expect).enumerate() {
+        assert!(
+            (got - want).abs() <= tol,
+            "logit {i}: rust={got} python={want} (tol {tol})"
+        );
+    }
+    let norm = logits.norm();
+    let expect_norm = check.get("logits_norm").as_f64().unwrap() as f32;
+    assert!(
+        (norm - expect_norm).abs() / expect_norm < 1e-3,
+        "norm {norm} vs {expect_norm}"
+    );
+}
+
+#[test]
+fn hook_observes_python_reference_hidden_state() {
+    let r = runner();
+    let check = check_json();
+    let tol = check.get("tol").as_f64().unwrap() as f32;
+    let tokens = tokens_from_check(&check, r.manifest.seq);
+
+    struct Capture {
+        seen: Option<Tensor>,
+    }
+    impl Hooks for Capture {
+        fn wants(&self, point: &str) -> bool {
+            point == "layer.0"
+        }
+        fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+            self.seen = Some(t.clone());
+            false
+        }
+    }
+    let mut cap = Capture { seen: None };
+    r.forward(&tokens, &mut cap).unwrap();
+    let h = cap.seen.expect("hook fired");
+    let expect: Vec<f32> = check
+        .get("hidden_l0_sample")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let got = h.slice(&[
+        Range1::one(0),
+        Range1::one(r.manifest.seq - 1),
+        Range1::new(0, 8),
+    ]);
+    for (i, (&g, &w)) in got.data().iter().zip(&expect).enumerate() {
+        assert!((g - w).abs() <= tol, "hidden {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn setter_hook_reproduces_python_patched_logits() {
+    let r = runner();
+    let check = check_json();
+    let tol = check.get("tol").as_f64().unwrap() as f32;
+    let tokens = tokens_from_check(&check, r.manifest.seq);
+    let seq = r.manifest.seq;
+    let d = r.manifest.d_model;
+
+    struct Patch {
+        seq: usize,
+        d: usize,
+    }
+    impl Hooks for Patch {
+        fn wants(&self, point: &str) -> bool {
+            point == "layer.0"
+        }
+        fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+            t.slice_assign(
+                &[Range1::one(0), Range1::one(self.seq - 1)],
+                &Tensor::full(&[1, 1, self.d], 1.0),
+            );
+            true
+        }
+    }
+    let logits = r.forward(&tokens, &mut Patch { seq, d }).unwrap();
+    let expect: Vec<f32> = check
+        .get("patched_logits_sample")
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let got = logits.slice(&[Range1::one(0), Range1::one(seq - 1), Range1::new(0, 8)]);
+    for (i, (&g, &w)) in got.data().iter().zip(&expect).enumerate() {
+        assert!((g - w).abs() <= tol, "patched logit {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn sharded_forward_matches_unsharded() {
+    let r = runner();
+    let check = check_json();
+    let tokens = tokens_from_check(&check, r.manifest.seq);
+    let base = r.forward_plain(&tokens).unwrap();
+    let sharded = r
+        .forward_sharded(&tokens, 2, &mut nnscope::models::NoHooks)
+        .unwrap();
+    assert!(
+        base.allclose(&sharded, 5e-4),
+        "tp=2 max diff {}",
+        base.max_abs_diff(&sharded)
+    );
+}
+
+#[test]
+fn sharded_rejects_unexported_shard_count() {
+    let r = runner();
+    let tokens = Tensor::zeros(&[1, r.manifest.seq]);
+    assert!(r
+        .forward_sharded(&tokens, 3, &mut nnscope::models::NoHooks)
+        .is_err());
+}
+
+#[test]
+fn backward_produces_finite_grads_that_decrease_loss() {
+    let r = runner();
+    let seq = r.manifest.seq;
+    let tokens = Tensor::new(&[1, seq], (0..seq).map(|i| (i % 7) as f32).collect());
+    let targets = Tensor::new(&[1], vec![3.0]);
+    let points = vec!["layer.0".to_string(), "layer.1".to_string()];
+    let (loss, grads) = r.backward(&tokens, &targets, &points).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    assert_eq!(grads.len(), 2);
+    for (p, g) in &grads {
+        assert_eq!(g.dims(), &[1, seq, r.manifest.d_model], "{p}");
+        assert!(g.data().iter().all(|v| v.is_finite()), "{p}");
+        assert!(g.norm() > 0.0, "{p} grad is zero");
+    }
+
+    // gradient sanity: perturbing the layer.1 output against the gradient
+    // direction must reduce the loss (first-order).
+    let g1 = &grads["layer.1"];
+    let eps = 0.05 / g1.norm();
+    struct Nudge<'a> {
+        g: &'a Tensor,
+        eps: f32,
+    }
+    impl Hooks for Nudge<'_> {
+        fn wants(&self, p: &str) -> bool {
+            p == "layer.1"
+        }
+        fn on_output(&mut self, _p: &str, t: &mut Tensor) -> bool {
+            let stepped = t.sub(&self.g.scale(self.eps));
+            *t = stepped;
+            true
+        }
+    }
+    // recompute loss via lm_head_grad on nudged hidden state: use backward's
+    // loss with a hooked forward is not directly exposed; instead compare
+    // logit of target before/after nudging through plain forward + manual CE.
+    let base_logits = r.forward_plain(&tokens).unwrap();
+    let nudged_logits = r.forward(&tokens, &mut Nudge { g: g1, eps }).unwrap();
+    let ce = |logits: &Tensor| -> f32 {
+        let last = logits.slice(&[Range1::one(0), Range1::one(seq - 1)]);
+        let flat = last.clone().reshape(&[r.manifest.vocab]);
+        let sm = flat.softmax_last();
+        -(sm.data()[3].ln())
+    };
+    assert!(
+        ce(&nudged_logits) < ce(&base_logits),
+        "nudge against grad should reduce CE: {} !< {}",
+        ce(&nudged_logits),
+        ce(&base_logits)
+    );
+}
+
+#[test]
+fn pad_tokens_rounds_up_to_exported_batch() {
+    let r = runner();
+    let t = Tensor::zeros(&[3, r.manifest.seq]);
+    let (padded, n) = r.pad_tokens(&t).unwrap();
+    assert_eq!(n, 3);
+    assert_eq!(padded.dims()[0], 4); // tiny-sim exports b in {1,4}
+    let too_big = Tensor::zeros(&[5, r.manifest.seq]);
+    assert!(r.pad_tokens(&too_big).is_err());
+}

@@ -1,0 +1,189 @@
+//! NDIF server integration: loopback remote execution must agree with
+//! local execution; auth, sessions, co-tenancy, error paths, and
+//! concurrent clients all exercise the real HTTP + queue + store stack.
+
+use std::collections::HashMap;
+
+use nnscope::client::{remote::NdifClient, Session, Trace};
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+
+fn start_server(cotenancy: CoTenancy) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.cotenancy = cotenancy;
+    NdifServer::start(cfg).unwrap()
+}
+
+fn patch_trace(tokens: &Tensor) -> (Trace, nnscope::client::SavedRef) {
+    let mut tr = Trace::new("tiny-sim", tokens);
+    let h = tr.output("layer.0");
+    let filled = tr.fill(h, &[Range1::one(0), Range1::one(15)], 0.5);
+    tr.set_output("layer.0", filled);
+    let logits = tr.output("lm_head");
+    let s = tr.save(logits);
+    (tr, s)
+}
+
+#[test]
+fn remote_equals_local() {
+    let server = start_server(CoTenancy::Sequential);
+    let client = NdifClient::new(server.addr());
+    assert!(client.health().unwrap());
+    assert_eq!(client.models().unwrap(), vec!["tiny-sim".to_string()]);
+
+    let runner = ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap();
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+
+    let (tr, s) = patch_trace(&tokens);
+    let local = tr.run_local(&runner).unwrap();
+
+    let (tr, s2) = patch_trace(&tokens);
+    let remote = tr.run_remote(&client).unwrap();
+
+    assert!(
+        local.get(s).allclose(remote.get(s2), 1e-5),
+        "remote/local divergence {}",
+        local.get(s).max_abs_diff(remote.get(s2))
+    );
+}
+
+#[test]
+fn remote_session_round_trip() {
+    let server = start_server(CoTenancy::Sequential);
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], vec![1.0; 16]);
+
+    let mut session = Session::new();
+    let mut t1 = Trace::new("tiny-sim", &tokens);
+    let h = t1.output("layer.0");
+    let s1 = t1.save(h);
+    session.add(t1);
+    let mut t2 = Trace::new("tiny-sim", &tokens);
+    let h = t2.output("layer.1");
+    let s2 = t2.save(h);
+    session.add(t2);
+
+    let results = session.run_remote(&client).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].get(s1).dims(), &[1, 16, 32]);
+    assert_eq!(results[1].get(s2).dims(), &[1, 16, 32]);
+}
+
+#[test]
+fn auth_gates_models() {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.auth = HashMap::from([("tiny-sim".to_string(), vec!["sesame".to_string()])]);
+    let server = NdifServer::start(cfg).unwrap();
+    let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+
+    // no token: rejected
+    let client = NdifClient::new(server.addr());
+    let (tr, _) = patch_trace(&tokens);
+    let err = tr.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("401") || err.contains("authorized"), "{err}");
+
+    // wrong token: rejected
+    let client = NdifClient::new(server.addr()).with_token("wrong");
+    let (tr, _) = patch_trace(&tokens);
+    assert!(tr.run_remote(&client).is_err());
+
+    // right token: accepted
+    let client = NdifClient::new(server.addr()).with_token("sesame");
+    let (tr, s) = patch_trace(&tokens);
+    let res = tr.run_remote(&client).unwrap();
+    assert_eq!(res.get(s).dims(), &[1, 16, 64]);
+}
+
+#[test]
+fn bad_requests_rejected_cleanly() {
+    let server = start_server(CoTenancy::Sequential);
+    let addr = server.addr();
+
+    // malformed json
+    let (status, _) = nnscope::server::http::post(addr, "/v1/trace", b"{not json").unwrap();
+    assert_eq!(status, 400);
+
+    // unknown model
+    let (status, _) = nnscope::server::http::post(
+        addr,
+        "/v1/trace",
+        br#"{"model":"gpt-17","batch":1,"tokens":[],"nodes":[]}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+
+    // invalid graph (unknown module)
+    let (status, body) = nnscope::server::http::post(
+        addr,
+        "/v1/trace",
+        br#"{"model":"tiny-sim","batch":1,"tokens":[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0],
+             "nodes":[{"id":0,"op":"getter","module":"layer.9","port":"output"}]}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+
+    // unknown result id
+    let (status, _) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?timeout_ms=10").unwrap();
+    assert_eq!(status, 404);
+}
+
+#[test]
+fn concurrent_clients_parallel_cotenancy() {
+    let server = start_server(CoTenancy::Parallel { max_merge: 4 });
+    let addr = server.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                let tokens = Tensor::new(&[1, 16], vec![i as f32; 16]);
+                let mut tr = Trace::new("tiny-sim", &tokens);
+                let h = tr.output("layer.0");
+                let s = tr.save(h);
+                let res = tr.run_remote(&client).unwrap();
+                // each user's activation depends on their own tokens
+                res.get(s).data()[0]
+            })
+        })
+        .collect();
+    let vals: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // different tokens → different activations (no cross-tenant bleed)
+    let distinct: std::collections::BTreeSet<_> =
+        vals.iter().map(|v| (v * 1e6) as i64).collect();
+    assert!(distinct.len() > 4, "activations suspiciously identical: {vals:?}");
+    let (enq, done, failed, _merged) = server.metrics("tiny-sim").unwrap();
+    assert_eq!(enq, 8);
+    assert_eq!(done, 8);
+    assert_eq!(failed, 0);
+}
+
+#[test]
+fn server_side_error_is_reported_per_request() {
+    let server = start_server(CoTenancy::Sequential);
+    let client = NdifClient::new(server.addr());
+    // tokens length mismatch (batch 2 declared, 1 row of tokens) passes
+    // validation but fails at execution
+    let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    let mut g = tr.into_graph();
+    g.batch = 2; // corrupt
+    let err = client.execute(&g).unwrap_err().to_string();
+    assert!(err.contains("remote execution failed"), "{err}");
+}
+
+#[test]
+fn netsim_accounts_payload_bytes() {
+    use nnscope::netsim::{Mode, NetSim};
+    let server = start_server(CoTenancy::Sequential);
+    let link = NetSim::new(0.0, 1e9, Mode::Account);
+    let client = NdifClient::new(server.addr()).with_link(link.clone());
+    let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+    let (tr, _) = patch_trace(&tokens);
+    tr.run_remote(&client).unwrap();
+    // graph upload + logits download crossed the simulated link
+    assert!(link.bytes_transferred() > 1000, "{}", link.bytes_transferred());
+}
