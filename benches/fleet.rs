@@ -1,0 +1,137 @@
+//! Fleet scaling: aggregate throughput for 1 → 2 → 4 replicas behind the
+//! L3 coordinator, under the Fig. 9 load-test workload (≤24-token prompts,
+//! each saving a uniformly-random layer's output).
+//!
+//! Each replica is a full `NdifServer` (sequential co-tenancy — one worker
+//! per model, the configuration the paper's load test used), so replica
+//! count is the only parallelism axis. The coordinator routes least-loaded
+//! using heartbeat queue depths plus its own in-flight accounting.
+//! Expectation: aggregate throughput increases monotonically with replica
+//! count; perfect linearity is not expected when replicas share host cores.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::{Duration, Instant};
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::models::{artifacts_dir, workload};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+use nnscope::util::Prng;
+
+fn main() {
+    let model = if common::quick() { "tiny-sim" } else { "llama8b-sim" };
+    let fleet_sizes = [1usize, 2, 4];
+    let n_users = if common::quick() { 4 } else { 16 };
+    let reqs_per_user = common::samples(8);
+
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    common::section(&format!(
+        "Fleet — throughput vs replica count ({model}, {n_users} users × {reqs_per_user} reqs, least-loaded)"
+    ));
+
+    let mut table = Table::new("aggregate throughput by fleet size").header(vec![
+        "replicas", "wall (s)", "req/s", "speedup", "per-replica completed",
+    ]);
+    let mut throughput = Vec::new();
+
+    for &n in &fleet_sizes {
+        let mut coord_cfg = CoordinatorConfig::local();
+        coord_cfg.policy = Policy::LeastLoaded;
+        coord_cfg.probe_interval = Duration::from_millis(50);
+        let mut coord = Coordinator::start(coord_cfg).expect("coordinator");
+
+        let mut replicas: Vec<NdifServer> = (0..n)
+            .map(|_| {
+                let mut cfg = NdifConfig::local(&[model]);
+                cfg.cotenancy = CoTenancy::Sequential;
+                cfg.coordinator = Some(coord.addr().to_string());
+                cfg.heartbeat = Duration::from_millis(50);
+                NdifServer::start(cfg).expect("replica")
+            })
+            .collect();
+
+        // warm the fleet: n concurrent requests spread across all replicas
+        // (in-flight-aware least-loaded), absorbing lazy first-run init
+        {
+            let addr = coord.addr();
+            let warmers: Vec<_> = (0..n)
+                .map(|_| {
+                    let model = model.to_string();
+                    let seq = manifest.seq;
+                    std::thread::spawn(move || {
+                        let client = NdifClient::new(addr);
+                        let tokens = Tensor::new(&[1, seq], vec![1.0; seq]);
+                        let mut tr = Trace::new(&model, &tokens);
+                        let h = tr.output("layer.0");
+                        tr.save(h);
+                        tr.run_remote(&client).expect("warmup");
+                    })
+                })
+                .collect();
+            for w in warmers {
+                w.join().unwrap();
+            }
+        }
+
+        let addr = coord.addr();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_users)
+            .map(|u| {
+                let model = model.to_string();
+                let (vocab, seq, layers) = (manifest.vocab, manifest.seq, manifest.n_layers);
+                std::thread::spawn(move || {
+                    let client = NdifClient::new(addr);
+                    let mut rng = Prng::new((n * 1000 + u) as u64);
+                    for _ in 0..reqs_per_user {
+                        let req = workload::load_test_request(&mut rng, vocab, seq, layers);
+                        let tokens = Tensor::new(&[1, seq], req.tokens.clone());
+                        let mut tr = Trace::new(&model, &tokens);
+                        let h = tr.output(&format!("layer.{}", req.layer));
+                        tr.save(h);
+                        tr.run_remote(&client).expect("request");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = (n_users * reqs_per_user) as f64;
+        throughput.push(total / wall);
+
+        let completed: Vec<String> = replicas
+            .iter()
+            .map(|r| format!("{}", r.metrics(model).map(|m| m.1).unwrap_or(0)))
+            .collect();
+        table.row(vec![
+            format!("{n}"),
+            format!("{wall:.3}"),
+            format!("{:.2}", total / wall),
+            format!("{:.2}x", throughput.last().unwrap() / throughput[0]),
+            completed.join(" / "),
+        ]);
+
+        for r in replicas.iter_mut() {
+            r.shutdown();
+        }
+        coord.shutdown();
+    }
+    table.print();
+
+    let monotone = throughput.windows(2).all(|w| w[1] >= w[0]);
+    common::shape_note(&format!(
+        "aggregate throughput {} req/s across 1 → 2 → 4 replicas (monotone non-decreasing: {monotone})",
+        throughput
+            .iter()
+            .map(|t| format!("{t:.2}"))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    ));
+}

@@ -12,9 +12,20 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::graph::{serde as gserde, GraphResult, InterventionGraph};
-use crate::json::parse;
+use crate::json::{parse, Json};
 use crate::netsim::NetSim;
 use crate::server::http;
+
+/// What kind of service answers at an address. The trace/session/result
+/// surface is identical either way — discovery only matters to tools that
+/// want fleet topology (status dashboards, load generators).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A single [`crate::server::NdifServer`] deployment.
+    Single,
+    /// An L3 [`crate::coordinator::Coordinator`] fronting many replicas.
+    Fleet,
+}
 
 /// Client handle to an NDIF server.
 #[derive(Clone)]
@@ -60,6 +71,24 @@ impl NdifClient {
     pub fn health(&self) -> Result<bool> {
         let (status, _) = http::get(self.addr, "/health")?;
         Ok(status == 200)
+    }
+
+    /// Coordinator discovery: is this address a single NDIF server or a
+    /// fleet coordinator? Existing clients need not care — the NDIF API is
+    /// mirrored — but fleet-aware tools branch on this.
+    pub fn discover(&self) -> Result<Endpoint> {
+        let (status, _) = http::get(self.addr, "/v1/fleet/status")?;
+        Ok(if status == 200 { Endpoint::Fleet } else { Endpoint::Single })
+    }
+
+    /// Fleet topology and health, as reported by a coordinator's
+    /// `/v1/fleet/status`. Errors against a single server (404).
+    pub fn fleet_status(&self) -> Result<Json> {
+        let (status, body) = http::get(self.addr, "/v1/fleet/status")?;
+        if status != 200 {
+            return Err(anyhow!("fleet status returned {status} (not a coordinator?)"));
+        }
+        Ok(parse(std::str::from_utf8(&body)?)?)
     }
 
     /// Fetch hosted model metadata — the NDIF "setup" step measured by

@@ -1,0 +1,770 @@
+//! Coordinator HTTP front: one address for a whole NDIF fleet.
+//!
+//! The coordinator mirrors the single-server NDIF surface (`POST
+//! /v1/trace`, `GET /v1/result/<id>`, `POST /v1/session`, `GET
+//! /v1/models`) so existing clients and examples work unchanged against a
+//! fleet, and adds fleet management:
+//!
+//! * `POST /v1/fleet/register` / `deregister` — replica lifecycle;
+//! * `POST /v1/fleet/heartbeat` — load snapshots for least-loaded routing;
+//! * `GET /v1/fleet/status` — registry view: health, load, routing counts.
+//!
+//! Request lifecycle: an accepted trace is parked as pending in a
+//! coordinator-side [`ObjectStore`], a routing worker picks a replica via
+//! the configured [`Policy`], proxies the submit, and long-polls the
+//! replica for the result. If the replica dies mid-request (connect
+//! failure, lost result state), the worker marks it failed in the registry
+//! and *resubmits the retained request body* to the next candidate —
+//! bounded by `max_retries` — so a replica crash never loses an accepted
+//! request. A monitor thread probes replicas between heartbeats so dead
+//! deployments are evicted from routing even when they never said goodbye.
+//!
+//! One deliberate contract difference from a single server: because the
+//! coordinator accepts (202) before routing, replica-side rejections that
+//! a single server reports at submit time (401 auth, 400 validation)
+//! surface here through `GET /v1/result/<id>` as a 500 whose error message
+//! embeds the replica's status and body. [`crate::client::remote`] handles
+//! both shapes identically.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{parse, Json};
+use crate::scheduler::LoadSnapshot;
+use crate::server::api::parse_result_path;
+use crate::server::http::{self, Handler, HttpServer, Request, Response};
+use crate::server::store::{Entry, ObjectStore};
+use crate::threadpool::ThreadPool;
+
+use super::registry::{Health, HealthPolicy, Registry, Replica};
+use super::router::{Policy, Router};
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    /// Bind address; use port 0 for ephemeral.
+    pub addr: String,
+    /// HTTP worker threads.
+    pub workers: usize,
+    /// Routing worker threads — the cap on concurrently proxied traces
+    /// (each routed request occupies one worker while it long-polls its
+    /// replica; excess submissions queue, giving backpressure instead of
+    /// unbounded thread growth).
+    pub routing_workers: usize,
+    /// Routing policy.
+    pub policy: Policy,
+    /// Additional replica attempts after the first fails at transport level.
+    pub max_retries: usize,
+    /// Cadence of the active health/metrics probe.
+    pub probe_interval: Duration,
+    /// Heartbeat-age / failure thresholds for health derivation.
+    pub health: HealthPolicy,
+    /// Upper bound on one routed request (per replica attempt).
+    pub request_timeout: Duration,
+    /// Socket-level connect/read/write bound for coordinator→replica calls
+    /// (probes, submits, result polls) — a hung replica costs at most this
+    /// per exchange instead of wedging a routing worker or the monitor.
+    /// Result polls ask the replica to hold for at most half this value.
+    pub io_timeout: Duration,
+    /// Statically configured replicas: `host:port` or `host:port@latency_s`
+    /// (the latency a [`crate::netsim::NetSim`] profile would charge).
+    pub replicas: Vec<String>,
+}
+
+impl CoordinatorConfig {
+    pub fn local() -> CoordinatorConfig {
+        CoordinatorConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            routing_workers: 64,
+            policy: Policy::LeastLoaded,
+            max_retries: 3,
+            probe_interval: Duration::from_millis(250),
+            health: HealthPolicy::default(),
+            request_timeout: Duration::from_secs(300),
+            io_timeout: Duration::from_secs(10),
+            replicas: Vec::new(),
+        }
+    }
+}
+
+/// Routing state shared with worker jobs and the monitor thread — kept
+/// apart from [`CoordState`] so queued routing jobs never hold the pool
+/// that runs them (which would self-join on the last drop).
+struct RoutingCore {
+    registry: Registry,
+    router: Router,
+    max_retries: usize,
+    request_timeout: Duration,
+    io_timeout: Duration,
+}
+
+struct CoordState {
+    core: Arc<RoutingCore>,
+    store: Arc<ObjectStore>,
+    next_id: AtomicU64,
+    routing: ThreadPool,
+}
+
+/// A running fleet coordinator.
+pub struct Coordinator {
+    http: HttpServer,
+    state: Arc<CoordState>,
+    stop: Arc<AtomicBool>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Register any static replicas, start serving, then start the monitor
+    /// thread (bind-first so a failed bind leaves no stray thread behind).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        // keep health thresholds compatible with the probe cadence:
+        // statically configured replicas are kept alive only by probes, so
+        // aging them out faster than the monitor refreshes them would flap
+        // healthy replicas between Alive and Dead
+        let mut health = cfg.health;
+        health.degraded_after = health.degraded_after.max(cfg.probe_interval * 3);
+        health.dead_after = health.dead_after.max(cfg.probe_interval * 8);
+        let core = Arc::new(RoutingCore {
+            registry: Registry::new(health),
+            router: Router::new(cfg.policy),
+            max_retries: cfg.max_retries,
+            request_timeout: cfg.request_timeout,
+            io_timeout: cfg.io_timeout,
+        });
+        for spec in &cfg.replicas {
+            let (addr_s, latency_s) = match spec.split_once('@') {
+                Some((a, l)) => (
+                    a,
+                    l.parse::<f64>()
+                        .with_context(|| format!("replica latency in '{spec}'"))?,
+                ),
+                None => (spec.as_str(), 0.0),
+            };
+            let addr: SocketAddr = addr_s
+                .parse()
+                .with_context(|| format!("replica address '{spec}'"))?;
+            // learn hosted models now if the replica is already up; the
+            // monitor keeps trying otherwise
+            let models = probe_models(addr, cfg.io_timeout).unwrap_or_default();
+            core.registry.register(addr, models, latency_s, None);
+        }
+        let state = Arc::new(CoordState {
+            core: Arc::clone(&core),
+            store: Arc::new(ObjectStore::new()),
+            next_id: AtomicU64::new(1),
+            routing: ThreadPool::new(cfg.routing_workers),
+        });
+        let s2 = Arc::clone(&state);
+        let handler: Handler = Arc::new(move |req| route(&s2, req));
+        let http = HttpServer::bind(&cfg.addr, cfg.workers, handler)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (core2, stop2, interval) = (core, Arc::clone(&stop), cfg.probe_interval);
+        let monitor = std::thread::Builder::new()
+            .name("ndif-coord-monitor".into())
+            .spawn(move || monitor_loop(&core2, &stop2, interval))?;
+        Ok(Coordinator { http, state, stop, monitor: Some(monitor) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.http.addr()
+    }
+
+    /// Registry snapshot (tests, `coordinate` CLI).
+    pub fn replicas(&self) -> Vec<Replica> {
+        self.state.core.registry.snapshot()
+    }
+
+    /// Stop the monitor and the HTTP front. Routed requests still in
+    /// flight finish on the routing pool when the state drops.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.monitor.take() {
+            let _ = t.join();
+        }
+        self.http.shutdown();
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replica-side helpers (used by NdifServer self-registration)
+// ---------------------------------------------------------------------------
+
+/// Bound on replica→coordinator management calls: a hung coordinator must
+/// not wedge a replica's heartbeat thread (its shutdown joins that thread).
+const FLEET_CALL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Register `advertise` as a replica serving `models` with the coordinator.
+/// Returns the assigned replica id. Pass the previous `id` to reclaim an
+/// entry after the coordinator answered a heartbeat with 404.
+pub fn register_replica(
+    coordinator: SocketAddr,
+    advertise: SocketAddr,
+    models: &[String],
+    latency_s: f64,
+    id: Option<&str>,
+) -> Result<String> {
+    let mut fields = vec![
+        ("addr", Json::from(advertise.to_string())),
+        (
+            "models",
+            Json::Array(models.iter().map(|m| Json::from(m.as_str())).collect()),
+        ),
+        ("latency_s", Json::from(latency_s)),
+    ];
+    if let Some(i) = id {
+        fields.push(("id", Json::from(i)));
+    }
+    let payload = Json::obj(fields).to_string();
+    let (status, body) = http::http_request_timeout(
+        coordinator,
+        "POST",
+        "/v1/fleet/register",
+        payload.as_bytes(),
+        &[("Content-Type", "application/json")],
+        FLEET_CALL_TIMEOUT,
+    )?;
+    if status != 200 {
+        return Err(anyhow!(
+            "coordinator register failed ({status}): {}",
+            String::from_utf8_lossy(&body)
+        ));
+    }
+    parse(std::str::from_utf8(&body)?)?
+        .get("id")
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| anyhow!("register response missing id"))
+}
+
+/// Push one heartbeat with a load snapshot; returns the HTTP status
+/// (404 means the coordinator forgot us — re-register).
+pub fn send_heartbeat(coordinator: SocketAddr, id: &str, load: &LoadSnapshot) -> Result<u16> {
+    let payload = Json::obj(vec![
+        ("id", Json::from(id)),
+        ("queue_depth", Json::from(load.queue_depth)),
+        ("completed", Json::from(load.completed as i64)),
+        ("failed", Json::from(load.failed as i64)),
+    ])
+    .to_string();
+    let (status, _) = http::http_request_timeout(
+        coordinator,
+        "POST",
+        "/v1/fleet/heartbeat",
+        payload.as_bytes(),
+        &[("Content-Type", "application/json")],
+        FLEET_CALL_TIMEOUT,
+    )?;
+    Ok(status)
+}
+
+/// Graceful goodbye (best-effort; crashes simply stop heartbeating).
+pub fn deregister_replica(coordinator: SocketAddr, id: &str) -> Result<()> {
+    let payload = Json::obj(vec![("id", Json::from(id))]).to_string();
+    let _ = http::http_request_timeout(
+        coordinator,
+        "POST",
+        "/v1/fleet/deregister",
+        payload.as_bytes(),
+        &[("Content-Type", "application/json")],
+        FLEET_CALL_TIMEOUT,
+    )?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Monitor
+// ---------------------------------------------------------------------------
+
+fn monitor_loop(core: &Arc<RoutingCore>, stop: &Arc<AtomicBool>, interval: Duration) {
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(interval);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        for rep in core.registry.snapshot() {
+            match http::get_timeout(rep.addr, "/v1/metrics", core.io_timeout) {
+                Ok((200, body)) => {
+                    let (queue_depth, completed, failed) = parse_metrics(&body);
+                    core.registry.heartbeat(&rep.id, queue_depth, completed, failed);
+                    if rep.models.is_empty() {
+                        if let Ok(models) = probe_models(rep.addr, core.io_timeout) {
+                            core.registry.set_models(&rep.id, models);
+                        }
+                    }
+                }
+                _ => core.registry.probe_failed(&rep.id),
+            }
+        }
+    }
+}
+
+/// Sum the per-model counters of a replica `/v1/metrics` payload.
+fn parse_metrics(body: &[u8]) -> (usize, u64, u64) {
+    let Ok(s) = std::str::from_utf8(body) else { return (0, 0, 0) };
+    let Ok(j) = parse(s) else { return (0, 0, 0) };
+    let (mut queue_depth, mut completed, mut failed) = (0usize, 0u64, 0u64);
+    if let Some(models) = j.as_object() {
+        for m in models.values() {
+            queue_depth += m.get("queue_depth").as_usize().unwrap_or(0);
+            completed += m.get("completed").as_i64().unwrap_or(0).max(0) as u64;
+            failed += m.get("failed").as_i64().unwrap_or(0).max(0) as u64;
+        }
+    }
+    (queue_depth, completed, failed)
+}
+
+fn probe_models(addr: SocketAddr, timeout: Duration) -> Result<Vec<String>> {
+    let (status, body) = http::get_timeout(addr, "/v1/models", timeout)?;
+    if status != 200 {
+        return Err(anyhow!("models probe returned {status}"));
+    }
+    Ok(parse(std::str::from_utf8(&body)?)?
+        .get("models")
+        .as_array()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|m| m.get("name").as_str().map(String::from))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// HTTP routing
+// ---------------------------------------------------------------------------
+
+fn route(state: &Arc<CoordState>, req: Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::text(200, "ok"),
+        ("GET", "/v1/fleet/status") => status_endpoint(state),
+        ("POST", "/v1/fleet/register") => register_endpoint(state, &req),
+        ("POST", "/v1/fleet/deregister") => deregister_endpoint(state, &req),
+        ("POST", "/v1/fleet/heartbeat") => heartbeat_endpoint(state, &req),
+        ("GET", "/v1/models") => models_endpoint(state),
+        ("POST", "/v1/trace") => trace_endpoint(state, &req),
+        ("POST", "/v1/session") => session_endpoint(state, &req),
+        ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
+        _ => Response::not_found(),
+    }
+}
+
+fn body_json(req: &Request) -> Result<Json, Response> {
+    req.body_str()
+        .map_err(|e| Response::bad_request(&e.to_string()))
+        .and_then(|s| parse(s).map_err(|e| Response::bad_request(&e.to_string())))
+}
+
+fn register_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let j = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(addr_s) = j.get("addr").as_str() else {
+        return Response::bad_request("register missing addr");
+    };
+    let Ok(addr) = addr_s.parse::<SocketAddr>() else {
+        return Response::bad_request(&format!("invalid replica addr '{addr_s}'"));
+    };
+    let models: Vec<String> = j
+        .get("models")
+        .as_array()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|m| m.as_str().map(String::from))
+        .collect();
+    let latency_s = j.get("latency_s").as_f64().unwrap_or(0.0);
+    let id = state
+        .core
+        .registry
+        .register(addr, models, latency_s, j.get("id").as_str());
+    Response::json(200, Json::obj(vec![("id", Json::from(id))]).to_string())
+}
+
+fn deregister_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let j = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(id) = j.get("id").as_str() else {
+        return Response::bad_request("deregister missing id");
+    };
+    if state.core.registry.deregister(id) {
+        Response::json(200, "{\"removed\":true}".into())
+    } else {
+        Response::json(404, "{\"error\":\"unknown replica id\"}".into())
+    }
+}
+
+fn heartbeat_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let j = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(id) = j.get("id").as_str() else {
+        return Response::bad_request("heartbeat missing id");
+    };
+    let queue_depth = j.get("queue_depth").as_usize().unwrap_or(0);
+    let completed = j.get("completed").as_i64().unwrap_or(0).max(0) as u64;
+    let failed = j.get("failed").as_i64().unwrap_or(0).max(0) as u64;
+    if state.core.registry.heartbeat(id, queue_depth, completed, failed) {
+        Response::json(200, "{\"ok\":true}".into())
+    } else {
+        Response::json(404, "{\"error\":\"unknown replica id\"}".into())
+    }
+}
+
+fn status_endpoint(state: &Arc<CoordState>) -> Response {
+    let replicas: Vec<Json> = state
+        .core
+        .registry
+        .snapshot()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::from(r.id.as_str())),
+                ("addr", Json::from(r.addr.to_string())),
+                (
+                    "models",
+                    Json::Array(r.models.iter().map(|m| Json::from(m.as_str())).collect()),
+                ),
+                ("health", Json::from(r.health.as_str())),
+                ("queue_depth", Json::from(r.queue_depth)),
+                ("inflight", Json::from(r.inflight)),
+                ("completed", Json::from(r.completed as i64)),
+                ("failed", Json::from(r.failed as i64)),
+                ("routed", Json::from(r.routed as i64)),
+                ("consecutive_failures", Json::from(r.consecutive_failures as i64)),
+                ("latency_s", Json::from(r.latency_s)),
+                (
+                    "heartbeat_age_ms",
+                    Json::from(r.last_heartbeat.elapsed().as_millis() as i64),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("policy", Json::from(state.core.router.policy.as_str())),
+            ("replicas", Json::Array(replicas)),
+        ])
+        .to_string(),
+    )
+}
+
+/// Union of model manifests across live replicas, deduplicated by name —
+/// the fleet looks like one big server to `NdifClient::models`. Replicas
+/// are consulted healthiest-first with bounded per-call waits, and the
+/// fan-out stops as soon as every registry-known model is covered, so one
+/// slow replica doesn't tax a metadata call it adds nothing to.
+fn models_endpoint(state: &Arc<CoordState>) -> Response {
+    let want = state.core.registry.models();
+    let mut replicas = state.core.registry.snapshot();
+    replicas.sort_by(|a, b| a.health.cmp(&b.health).then_with(|| a.id.cmp(&b.id)));
+    let mut by_name: BTreeMap<String, Json> = BTreeMap::new();
+    for rep in replicas {
+        if rep.health == Health::Dead {
+            continue;
+        }
+        if !want.is_empty() && want.iter().all(|m| by_name.contains_key(m)) {
+            break;
+        }
+        let Ok((200, body)) = http::get_timeout(rep.addr, "/v1/models", state.core.io_timeout)
+        else {
+            continue;
+        };
+        let Ok(s) = String::from_utf8(body) else { continue };
+        let Ok(j) = parse(&s) else { continue };
+        for m in j.get("models").as_array().unwrap_or(&[]) {
+            if let Some(name) = m.get("name").as_str() {
+                by_name.entry(name.to_string()).or_insert_with(|| m.clone());
+            }
+        }
+    }
+    Response::json(
+        200,
+        Json::obj(vec![("models", Json::Array(by_name.into_values().collect()))]).to_string(),
+    )
+}
+
+fn trace_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let body = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(model) = body.get("model").as_str().map(String::from) else {
+        return Response::bad_request("graph missing model");
+    };
+    if state.core.registry.candidates(&model).is_empty() {
+        return Response::json(
+            404,
+            format!("{{\"error\":\"model '{model}' not hosted by any live replica\"}}"),
+        );
+    }
+    let id = format!("c-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
+    state.store.put_pending(&id);
+    // retain the raw body: it is resubmitted verbatim on failover
+    let payload = match req.body_str() {
+        Ok(s) => s.to_string(),
+        Err(e) => return Response::bad_request(&e.to_string()),
+    };
+    let auth = req.header("x-ndif-auth").map(String::from);
+    // bounded routing pool: jobs capture the core + store (never the pool
+    // itself), so the queue gives backpressure without thread growth
+    let core = Arc::clone(&state.core);
+    let store = Arc::clone(&state.store);
+    let rid = id.clone();
+    state.routing.execute(move || {
+        match route_and_execute(&core, &model, &payload, auth.as_deref()) {
+            Ok(json) => store.put_ready(&rid, json),
+            Err(e) => store.put_failed(&rid, &e),
+        }
+    });
+    Response::json(202, Json::obj(vec![("id", Json::from(id))]).to_string())
+}
+
+/// Outcome of one proxied attempt that *reached* a replica.
+enum Routed {
+    /// Result body ready to relay.
+    Done(String),
+    /// The replica answered but refused or failed the request itself
+    /// (auth, validation, execution error) — not a replica fault, so the
+    /// error is relayed to the client instead of failing over.
+    Reject(u16, String),
+}
+
+fn route_and_execute(
+    core: &RoutingCore,
+    model: &str,
+    payload: &str,
+    auth: Option<&str>,
+) -> Result<String, String> {
+    let mut tried: Vec<String> = Vec::new();
+    let mut last_err = String::from("no candidate replicas");
+    for attempt in 0..=core.max_retries {
+        let candidates = core.registry.candidates(model);
+        let Some(rep) = core.router.pick(&candidates, &tried) else {
+            return Err(format!(
+                "no live replica for model '{model}' after {attempt} attempt(s): {last_err}"
+            ));
+        };
+        core.registry.record_dispatch(&rep.id);
+        match proxy_trace(core, &rep, payload, auth) {
+            Ok(Routed::Done(body)) => {
+                core.registry.record_success(&rep.id);
+                return Ok(body);
+            }
+            Ok(Routed::Reject(status, body)) => {
+                core.registry.record_success(&rep.id);
+                return Err(format!("replica {} rejected request ({status}): {body}", rep.id));
+            }
+            Err(e) => {
+                core.registry.record_failure(&rep.id);
+                tried.push(rep.id.clone());
+                last_err = e;
+            }
+        }
+    }
+    Err(format!(
+        "request failed after {} attempt(s): {last_err}",
+        core.max_retries + 1
+    ))
+}
+
+/// One attempt: submit the trace to `rep` and long-poll its result, every
+/// exchange bounded by `io_timeout`. `Err` means the replica is
+/// unreachable or lost state, and the caller fails the attempt over to
+/// another replica. Failover is therefore **at-least-once**: if the
+/// transport drops after the replica accepted the submit, the graph may
+/// execute on two replicas (intervention results are pure reads, so the
+/// duplicate is wasted compute, not corruption) and the first replica's
+/// unfetched result stays parked in its store until restart.
+fn proxy_trace(
+    core: &RoutingCore,
+    rep: &Replica,
+    payload: &str,
+    auth: Option<&str>,
+) -> Result<Routed, String> {
+    let mut headers = vec![("Content-Type", "application/json")];
+    if let Some(t) = auth {
+        headers.push(("x-ndif-auth", t));
+    }
+    let (status, body) = http::http_request_timeout(
+        rep.addr,
+        "POST",
+        "/v1/trace",
+        payload.as_bytes(),
+        &headers,
+        core.io_timeout,
+    )
+    .map_err(|e| e.to_string())?;
+    let body_s = String::from_utf8_lossy(&body).into_owned();
+    if status == 503 {
+        return Err(format!("replica overloaded: {body_s}"));
+    }
+    if status != 202 {
+        return Ok(Routed::Reject(status, body_s));
+    }
+    let remote_id = parse(&body_s)
+        .ok()
+        .and_then(|j| j.get("id").as_str().map(String::from))
+        .ok_or_else(|| "submit response missing id".to_string())?;
+    // ask the replica to hold each poll for half the socket timeout so a
+    // legitimate long-poll never trips the read deadline (the floor is 1ms,
+    // not a fixed value, so tiny io_timeouts still satisfy hold < read)
+    let hold_ms = (core.io_timeout.as_millis() as u64 / 2).clamp(1, 5_000);
+    let deadline = Instant::now() + core.request_timeout;
+    loop {
+        if Instant::now() >= deadline {
+            return Err(format!("replica {} result timed out", rep.id));
+        }
+        let (status, body) = http::get_timeout(
+            rep.addr,
+            &format!("/v1/result/{remote_id}?timeout_ms={hold_ms}"),
+            core.io_timeout,
+        )
+        .map_err(|e| e.to_string())?;
+        match status {
+            200 => return Ok(Routed::Done(String::from_utf8_lossy(&body).into_owned())),
+            202 => continue,
+            500 => return Ok(Routed::Reject(500, String::from_utf8_lossy(&body).into_owned())),
+            404 => return Err(format!("replica {} lost result {remote_id}", rep.id)),
+            other => return Err(format!("replica {} result status {other}", rep.id)),
+        }
+    }
+}
+
+/// Sessions are routed whole: all traces of a session go to one replica so
+/// FIFO ordering is preserved (§B.1); the response is relayed verbatim.
+fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let body = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(traces) = body.get("traces").as_array() else {
+        return Response::bad_request("session missing traces");
+    };
+    let mut models: Vec<String> = Vec::new();
+    for t in traces {
+        if let Some(m) = t.get("model").as_str() {
+            if !models.iter().any(|x| x == m) {
+                models.push(m.to_string());
+            }
+        }
+    }
+    let Some(first) = models.first().cloned() else {
+        return Response::bad_request("session traces missing model");
+    };
+    let payload = match req.body_str() {
+        Ok(s) => s.to_string(),
+        Err(e) => return Response::bad_request(&e.to_string()),
+    };
+    let mut headers = vec![("Content-Type", "application/json")];
+    let auth = req.header("x-ndif-auth").map(String::from);
+    if let Some(t) = &auth {
+        headers.push(("x-ndif-auth", t.as_str()));
+    }
+    let mut tried: Vec<String> = Vec::new();
+    let mut last_err = String::from("no candidate replicas");
+    for _ in 0..=state.core.max_retries {
+        // the chosen replica must host every model the session touches
+        let candidates: Vec<Replica> = state
+            .core
+            .registry
+            .candidates(&first)
+            .into_iter()
+            .filter(|r| models.iter().all(|m| r.models.iter().any(|x| x == m)))
+            .collect();
+        let Some(rep) = state.core.router.pick(&candidates, &tried) else { break };
+        state.core.registry.record_dispatch(&rep.id);
+        // connect is bounded tight so a dead replica fails over fast, but
+        // the read waits out the full request timeout — sessions run
+        // synchronously on the replica and legitimately hold the response
+        match http::http_request_deadlines(
+            rep.addr,
+            "POST",
+            "/v1/session",
+            payload.as_bytes(),
+            &headers,
+            state.core.io_timeout,
+            state.core.request_timeout,
+        ) {
+            // 503 = replica queue unavailable, same retryable class as a
+            // transport failure on the trace path
+            Ok((503, b)) => {
+                state.core.registry.record_failure(&rep.id);
+                tried.push(rep.id.clone());
+                last_err = format!("replica busy (503): {}", String::from_utf8_lossy(&b));
+            }
+            Ok((status, b)) => {
+                state.core.registry.record_success(&rep.id);
+                return Response::json(status, String::from_utf8_lossy(&b).into_owned());
+            }
+            Err(e) => {
+                state.core.registry.record_failure(&rep.id);
+                tried.push(rep.id.clone());
+                last_err = e.to_string();
+            }
+        }
+    }
+    Response::json(
+        503,
+        format!(
+            "{{\"error\":{}}}",
+            Json::from(format!("no live replica for session: {last_err}"))
+        ),
+    )
+}
+
+fn result_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
+    let (id, timeout_ms) = match parse_result_path(path) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    match state.store.wait_outcome(id, Duration::from_millis(timeout_ms)) {
+        Some(Ok(json)) => {
+            state.store.remove(id);
+            Response::json(200, json)
+        }
+        Some(Err(e)) => {
+            state.store.remove(id);
+            Response::json(500, format!("{{\"error\":{}}}", Json::from(e)))
+        }
+        None => match state.store.peek(id) {
+            Some(Entry::Pending) => Response::json(202, "{\"status\":\"pending\"}".into()),
+            _ => Response::not_found(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_payload_sums_across_models() {
+        let body = br#"{"a":{"queue_depth":2,"completed":5,"failed":1},
+                        "b":{"queue_depth":3,"completed":7,"failed":0}}"#;
+        assert_eq!(parse_metrics(body), (5, 12, 1));
+        assert_eq!(parse_metrics(b"not json"), (0, 0, 0));
+        assert_eq!(parse_metrics(b"[]"), (0, 0, 0));
+    }
+
+    #[test]
+    fn config_default_is_sane() {
+        let cfg = CoordinatorConfig::local();
+        assert_eq!(cfg.policy, Policy::LeastLoaded);
+        assert!(cfg.max_retries >= 1);
+        assert!(cfg.replicas.is_empty());
+    }
+}

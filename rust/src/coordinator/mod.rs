@@ -1,1 +1,32 @@
-// paper's L3 coordination contribution
+//! L3 fleet coordination (§3.3, Fig. 4): many NDIF deployments behind one
+//! routing front.
+//!
+//! A single [`crate::server::NdifServer`] is one *replica*: it preloads
+//! models and serves intervention requests. The coordinator is the layer
+//! the paper draws above the model services — the piece that lets "many
+//! users share GPU resources across a fleet of preloaded model
+//! deployments":
+//!
+//! * [`registry`] — which replicas exist, which models each serves, and
+//!   how healthy each looks (heartbeat-derived Alive/Degraded/Dead);
+//! * [`router`] — pluggable routing policies (round-robin, least-loaded
+//!   on queue depth, latency-aware on advertised
+//!   [`crate::netsim::NetSim`] link profiles);
+//! * [`api`] — the coordinator HTTP front: it mirrors the single-server
+//!   NDIF API so clients are fleet-agnostic, adds `/v1/fleet/*`
+//!   management endpoints, and fails accepted requests over to surviving
+//!   replicas when a deployment dies mid-request.
+//!
+//! Replicas join the fleet by setting
+//! [`crate::server::NdifConfig::coordinator`]; they self-register on
+//! startup and push heartbeats carrying
+//! [`crate::scheduler::LoadSnapshot`]s. `nnscope coordinate` runs a
+//! standalone coordinator.
+
+pub mod api;
+pub mod registry;
+pub mod router;
+
+pub use api::{Coordinator, CoordinatorConfig};
+pub use registry::{Health, HealthPolicy, Registry, Replica};
+pub use router::{Policy, Router};

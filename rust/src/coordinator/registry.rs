@@ -1,0 +1,409 @@
+//! Fleet deployment registry: which replicas serve which models, and how
+//! healthy each one currently looks (L3 of the NDIF architecture, §3.3
+//! Fig. 4).
+//!
+//! A *replica* is one whole [`crate::server::NdifServer`] deployment.
+//! Replicas register over the HTTP substrate (`POST /v1/fleet/register`),
+//! push periodic heartbeats carrying a load snapshot, and are additionally
+//! probed by the coordinator's monitor thread. Health is always *derived*,
+//! never stored authority:
+//!
+//! * [`Health::Alive`] — heartbeats fresh, no recent transport failures;
+//! * [`Health::Degraded`] — heartbeats aging past `degraded_after`, or at
+//!   least one recent routing/probe failure: still routable, but only when
+//!   no fully-alive replica hosts the model;
+//! * [`Health::Dead`] — heartbeats older than `dead_after` or
+//!   `failure_limit` consecutive failures: never routed to; revived only by
+//!   a fresh heartbeat or re-registration.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Replica health, derived from heartbeat age and observed failures.
+/// Ordered best-first so routers can sort candidate lists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Health {
+    Alive,
+    Degraded,
+    Dead,
+}
+
+impl Health {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Health::Alive => "alive",
+            Health::Degraded => "degraded",
+            Health::Dead => "dead",
+        }
+    }
+}
+
+/// One registered replica endpoint (snapshot; the registry owns the truth).
+#[derive(Clone, Debug)]
+pub struct Replica {
+    pub id: String,
+    pub addr: SocketAddr,
+    /// Models this replica preloaded and serves.
+    pub models: Vec<String>,
+    pub health: Health,
+    pub last_heartbeat: Instant,
+    /// Queue depth reported by the replica's last heartbeat/probe.
+    pub queue_depth: usize,
+    /// Requests the coordinator dispatched here and has not yet seen finish
+    /// (fresher than the heartbeat-reported queue depth).
+    pub inflight: usize,
+    pub completed: u64,
+    pub failed: u64,
+    /// Requests ever routed here by the coordinator.
+    pub routed: u64,
+    pub consecutive_failures: u32,
+    /// One-way link latency (seconds) the replica advertises — its
+    /// [`crate::netsim::NetSim`] profile — used by latency-aware routing.
+    pub latency_s: f64,
+}
+
+impl Replica {
+    /// Router cost proxy: work queued on the replica plus work dispatched
+    /// by the coordinator that the replica has not yet reported back.
+    pub fn load(&self) -> usize {
+        self.queue_depth + self.inflight
+    }
+}
+
+/// Thresholds turning heartbeat age / failure counts into [`Health`].
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    pub degraded_after: Duration,
+    pub dead_after: Duration,
+    /// Consecutive transport failures before a replica is declared dead.
+    pub failure_limit: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy {
+            degraded_after: Duration::from_secs(1),
+            dead_after: Duration::from_secs(5),
+            failure_limit: 3,
+        }
+    }
+}
+
+/// Thread-safe replica registry with heartbeat-derived health states.
+pub struct Registry {
+    replicas: Mutex<BTreeMap<String, Replica>>,
+    next_id: AtomicU64,
+    policy: HealthPolicy,
+}
+
+impl Registry {
+    pub fn new(policy: HealthPolicy) -> Registry {
+        Registry {
+            replicas: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            policy,
+        }
+    }
+
+    /// Register (or re-register) a replica. An explicit `id` is always
+    /// honored — even when unknown — so a replica recovering from a
+    /// coordinator restart (heartbeat answered 404) reclaims its identity
+    /// instead of looping on a freshly minted one; without an id, an
+    /// address match reclaims the existing entry, else a fresh `rep-N` is
+    /// minted. Registration always resets the replica to [`Health::Alive`]
+    /// with a fresh heartbeat.
+    pub fn register(
+        &self,
+        addr: SocketAddr,
+        models: Vec<String>,
+        latency_s: f64,
+        id: Option<&str>,
+    ) -> String {
+        let mut g = self.replicas.lock().unwrap();
+        let id = match id {
+            Some(i) if !i.is_empty() => {
+                // keep the mint counter ahead of reclaimed ids so a later
+                // fresh registration can never collide with this entry
+                if let Some(n) = i.strip_prefix("rep-").and_then(|s| s.parse::<u64>().ok()) {
+                    self.next_id.fetch_max(n + 1, Ordering::Relaxed);
+                }
+                // one entry per address: drop any stale entry another id
+                // left behind for the same endpoint
+                let stale: Vec<String> = g
+                    .values()
+                    .filter(|r| r.addr == addr && r.id != i)
+                    .map(|r| r.id.clone())
+                    .collect();
+                for s in stale {
+                    g.remove(&s);
+                }
+                i.to_string()
+            }
+            _ => g
+                .values()
+                .find(|r| r.addr == addr)
+                .map(|r| r.id.clone())
+                .unwrap_or_else(|| {
+                    format!("rep-{}", self.next_id.fetch_add(1, Ordering::Relaxed))
+                }),
+        };
+        let rep = g.entry(id.clone()).or_insert_with(|| Replica {
+            id: id.clone(),
+            addr,
+            models: Vec::new(),
+            health: Health::Alive,
+            last_heartbeat: Instant::now(),
+            queue_depth: 0,
+            inflight: 0,
+            completed: 0,
+            failed: 0,
+            routed: 0,
+            consecutive_failures: 0,
+            latency_s,
+        });
+        rep.addr = addr;
+        if !models.is_empty() {
+            rep.models = models;
+        }
+        rep.latency_s = latency_s;
+        rep.consecutive_failures = 0;
+        rep.health = Health::Alive;
+        rep.last_heartbeat = Instant::now();
+        id
+    }
+
+    /// Remove a replica (graceful shutdown). Returns false on unknown id.
+    pub fn deregister(&self, id: &str) -> bool {
+        self.replicas.lock().unwrap().remove(id).is_some()
+    }
+
+    /// Record a heartbeat with the replica's load snapshot. Returns false
+    /// on unknown id (the replica should re-register).
+    pub fn heartbeat(&self, id: &str, queue_depth: usize, completed: u64, failed: u64) -> bool {
+        let mut g = self.replicas.lock().unwrap();
+        match g.get_mut(id) {
+            Some(rep) => {
+                rep.queue_depth = queue_depth;
+                rep.completed = completed;
+                rep.failed = failed;
+                rep.consecutive_failures = 0;
+                rep.last_heartbeat = Instant::now();
+                rep.health = Health::Alive;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fill in the hosted-model list learned from a probe.
+    pub fn set_models(&self, id: &str, models: Vec<String>) {
+        if let Some(rep) = self.replicas.lock().unwrap().get_mut(id) {
+            rep.models = models;
+        }
+    }
+
+    /// The router dispatched a request to this replica.
+    pub fn record_dispatch(&self, id: &str) {
+        if let Some(rep) = self.replicas.lock().unwrap().get_mut(id) {
+            rep.routed += 1;
+            rep.inflight += 1;
+        }
+    }
+
+    /// A dispatched request finished successfully on this replica.
+    pub fn record_success(&self, id: &str) {
+        if let Some(rep) = self.replicas.lock().unwrap().get_mut(id) {
+            rep.inflight = rep.inflight.saturating_sub(1);
+            rep.consecutive_failures = 0;
+        }
+    }
+
+    /// A dispatched request failed at the transport level on this replica.
+    pub fn record_failure(&self, id: &str) {
+        if let Some(rep) = self.replicas.lock().unwrap().get_mut(id) {
+            rep.inflight = rep.inflight.saturating_sub(1);
+            rep.consecutive_failures += 1;
+        }
+    }
+
+    /// An active probe (no dispatched request) failed to reach the replica.
+    pub fn probe_failed(&self, id: &str) {
+        if let Some(rep) = self.replicas.lock().unwrap().get_mut(id) {
+            rep.consecutive_failures += 1;
+        }
+    }
+
+    fn refresh(g: &mut BTreeMap<String, Replica>, policy: HealthPolicy) {
+        let now = Instant::now();
+        for rep in g.values_mut() {
+            let age = now.saturating_duration_since(rep.last_heartbeat);
+            rep.health = if rep.consecutive_failures >= policy.failure_limit
+                || age > policy.dead_after
+            {
+                Health::Dead
+            } else if rep.consecutive_failures > 0 || age > policy.degraded_after {
+                Health::Degraded
+            } else {
+                Health::Alive
+            };
+        }
+    }
+
+    /// Non-dead replicas hosting `model`, best health first (ties broken by
+    /// id for determinism).
+    pub fn candidates(&self, model: &str) -> Vec<Replica> {
+        let mut g = self.replicas.lock().unwrap();
+        Self::refresh(&mut g, self.policy);
+        let mut v: Vec<Replica> = g
+            .values()
+            .filter(|r| r.health != Health::Dead && r.models.iter().any(|m| m == model))
+            .cloned()
+            .collect();
+        v.sort_by(|a, b| a.health.cmp(&b.health).then_with(|| a.id.cmp(&b.id)));
+        v
+    }
+
+    /// All replicas with refreshed health, id order.
+    pub fn snapshot(&self) -> Vec<Replica> {
+        let mut g = self.replicas.lock().unwrap();
+        Self::refresh(&mut g, self.policy);
+        g.values().cloned().collect()
+    }
+
+    /// Union of models hosted anywhere in the fleet.
+    pub fn models(&self) -> BTreeSet<String> {
+        self.replicas
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|r| r.models.iter().cloned())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn fast_policy() -> HealthPolicy {
+        HealthPolicy {
+            degraded_after: Duration::from_millis(40),
+            dead_after: Duration::from_millis(120),
+            failure_limit: 2,
+        }
+    }
+
+    #[test]
+    fn register_heartbeat_and_candidates() {
+        let reg = Registry::new(fast_policy());
+        let id = reg.register(addr(7001), vec!["m".into()], 0.0, None);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.heartbeat(&id, 3, 10, 1));
+        assert!(!reg.heartbeat("rep-999", 0, 0, 0));
+        let c = reg.candidates("m");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].queue_depth, 3);
+        assert_eq!(c[0].completed, 10);
+        assert_eq!(c[0].health, Health::Alive);
+        assert!(reg.candidates("other").is_empty());
+        assert!(reg.models().contains("m"));
+    }
+
+    #[test]
+    fn reregistration_keeps_identity() {
+        let reg = Registry::new(fast_policy());
+        let id1 = reg.register(addr(7002), vec!["m".into()], 0.0, None);
+        // same address → same id
+        let id2 = reg.register(addr(7002), vec![], 0.1, None);
+        assert_eq!(id1, id2);
+        assert_eq!(reg.len(), 1);
+        let snap = reg.snapshot();
+        // empty model list on re-register keeps the learned models
+        assert_eq!(snap[0].models, vec!["m".to_string()]);
+        assert!((snap[0].latency_s - 0.1).abs() < 1e-12);
+        // explicit id → same entry even at a new address
+        let id3 = reg.register(addr(7003), vec![], 0.0, Some(&id1));
+        assert_eq!(id3, id1);
+        assert_eq!(reg.snapshot()[0].addr, addr(7003));
+    }
+
+    #[test]
+    fn unknown_explicit_id_is_reclaimed_after_restart() {
+        // a replica re-registering with the id a previous coordinator
+        // incarnation assigned must get that id back, not a fresh mint
+        let reg = Registry::new(fast_policy());
+        let id = reg.register(addr(7010), vec!["m".into()], 0.0, Some("rep-7"));
+        assert_eq!(id, "rep-7");
+        assert!(reg.heartbeat("rep-7", 0, 0, 0), "heartbeats resolve after reclaim");
+        // the mint counter moved past the reclaimed id: no collision
+        let fresh = reg.register(addr(7011), vec!["m".into()], 0.0, None);
+        assert_ne!(fresh, "rep-7");
+        // reclaiming an id for an address a stale entry also claims
+        // replaces the stale entry rather than duplicating the endpoint
+        let dup = reg.register(addr(7011), vec![], 0.0, Some("rep-40"));
+        assert_eq!(dup, "rep-40");
+        let ids: Vec<String> = reg.snapshot().iter().map(|r| r.id.clone()).collect();
+        assert!(!ids.contains(&fresh));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn health_decays_without_heartbeats() {
+        let reg = Registry::new(fast_policy());
+        let id = reg.register(addr(7004), vec!["m".into()], 0.0, None);
+        assert_eq!(reg.snapshot()[0].health, Health::Alive);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(reg.snapshot()[0].health, Health::Degraded);
+        assert_eq!(reg.candidates("m").len(), 1, "degraded is still routable");
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(reg.snapshot()[0].health, Health::Dead);
+        assert!(reg.candidates("m").is_empty(), "dead is not routable");
+        // a fresh heartbeat revives it
+        assert!(reg.heartbeat(&id, 0, 0, 0));
+        assert_eq!(reg.snapshot()[0].health, Health::Alive);
+    }
+
+    #[test]
+    fn failures_kill_and_success_heals() {
+        let reg = Registry::new(fast_policy());
+        let id = reg.register(addr(7005), vec!["m".into()], 0.0, None);
+        reg.record_dispatch(&id);
+        reg.record_failure(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Degraded);
+        reg.probe_failed(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Dead, "failure_limit=2 reached");
+        // re-registration resurrects
+        reg.register(addr(7005), vec![], 0.0, Some(&id));
+        assert_eq!(reg.snapshot()[0].health, Health::Alive);
+        reg.record_dispatch(&id);
+        reg.record_success(&id);
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].consecutive_failures, 0);
+        assert_eq!(snap[0].inflight, 0);
+        assert_eq!(snap[0].routed, 2);
+    }
+
+    #[test]
+    fn deregister_removes() {
+        let reg = Registry::new(HealthPolicy::default());
+        let id = reg.register(addr(7006), vec!["m".into()], 0.0, None);
+        assert!(reg.deregister(&id));
+        assert!(!reg.deregister(&id));
+        assert!(reg.is_empty());
+    }
+}

@@ -1,0 +1,178 @@
+//! Pluggable routing policies over the replica registry.
+//!
+//! The router answers one question: *given the non-dead replicas hosting a
+//! model, which one takes the next request?* Three policies are provided:
+//!
+//! * **round-robin** — rotate through candidates; the paper's implicit
+//!   baseline for stateless front-ends;
+//! * **least-loaded** — minimize `queue_depth + inflight`, where
+//!   `queue_depth` comes from replica heartbeats
+//!   ([`crate::scheduler::ServiceMetrics`]) and `inflight` is the
+//!   coordinator's own fresher dispatch accounting;
+//! * **latency-aware** — prefer the replica with the smallest advertised
+//!   [`crate::netsim::NetSim`] link latency, breaking ties by load.
+//!
+//! All policies prefer [`Health::Alive`] replicas and fall back to
+//! [`Health::Degraded`] ones only when no alive candidate remains.
+//! Failover (retrying a request on the next replica when one dies
+//! mid-request) lives in [`crate::coordinator::api`]; the router only
+//! supports it by honoring an exclusion list of already-failed replicas.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::registry::{Health, Replica};
+
+/// Health of the best candidate still in the pool — the router only mixes
+/// equally-healthy replicas within one pick.
+fn best_health(pool: &[&Replica]) -> Option<Health> {
+    pool.iter().map(|r| r.health).min()
+}
+
+/// Routing policy selector (CLI: `--policy <name>`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+    LatencyAware,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "round-robin" | "rr" => Some(Policy::RoundRobin),
+            "least-loaded" | "ll" => Some(Policy::LeastLoaded),
+            "latency-aware" | "latency" => Some(Policy::LatencyAware),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::LatencyAware => "latency-aware",
+        }
+    }
+}
+
+/// Stateless-per-request replica chooser (the round-robin cursor is the
+/// only internal state).
+pub struct Router {
+    pub policy: Policy,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Router {
+        Router { policy, rr: AtomicUsize::new(0) }
+    }
+
+    /// Choose a replica among `candidates` (pre-filtered to non-dead
+    /// replicas hosting the model, as produced by
+    /// [`super::registry::Registry::candidates`]), skipping ids in
+    /// `exclude` — replicas that already failed this request.
+    pub fn pick(&self, candidates: &[Replica], exclude: &[String]) -> Option<Replica> {
+        let pool: Vec<&Replica> = candidates
+            .iter()
+            .filter(|r| !exclude.iter().any(|e| e == &r.id))
+            .collect();
+        let best = best_health(&pool)?;
+        let pool: Vec<&Replica> = pool.into_iter().filter(|r| r.health == best).collect();
+        let chosen = match self.policy {
+            Policy::RoundRobin => pool[self.rr.fetch_add(1, Ordering::Relaxed) % pool.len()],
+            Policy::LeastLoaded => pool
+                .iter()
+                .copied()
+                .min_by_key(|r| (r.load(), r.routed))
+                .expect("non-empty pool"),
+            Policy::LatencyAware => pool
+                .iter()
+                .copied()
+                .min_by(|a, b| {
+                    a.latency_s
+                        .partial_cmp(&b.latency_s)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then_with(|| a.load().cmp(&b.load()))
+                        .then_with(|| a.id.cmp(&b.id))
+                })
+                .expect("non-empty pool"),
+        };
+        Some(chosen.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn replica(id: &str, health: Health, load: usize, latency_s: f64) -> Replica {
+        Replica {
+            id: id.to_string(),
+            addr: "127.0.0.1:1".parse().unwrap(),
+            models: vec!["m".into()],
+            health,
+            last_heartbeat: Instant::now(),
+            queue_depth: load,
+            inflight: 0,
+            completed: 0,
+            failed: 0,
+            routed: 0,
+            consecutive_failures: 0,
+            latency_s,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(Policy::RoundRobin);
+        let pool = vec![
+            replica("a", Health::Alive, 0, 0.0),
+            replica("b", Health::Alive, 0, 0.0),
+        ];
+        let picks: Vec<String> = (0..4).map(|_| r.pick(&pool, &[]).unwrap().id).collect();
+        assert_eq!(picks, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_queue() {
+        let r = Router::new(Policy::LeastLoaded);
+        let pool = vec![
+            replica("a", Health::Alive, 5, 0.0),
+            replica("b", Health::Alive, 1, 0.0),
+            replica("c", Health::Alive, 3, 0.0),
+        ];
+        assert_eq!(r.pick(&pool, &[]).unwrap().id, "b");
+    }
+
+    #[test]
+    fn latency_aware_prefers_near_replica() {
+        let r = Router::new(Policy::LatencyAware);
+        let pool = vec![
+            replica("far", Health::Alive, 0, 0.060),
+            replica("near", Health::Alive, 0, 0.002),
+        ];
+        assert_eq!(r.pick(&pool, &[]).unwrap().id, "near");
+    }
+
+    #[test]
+    fn alive_preferred_over_degraded() {
+        let r = Router::new(Policy::LeastLoaded);
+        // degraded replica is idle, alive one is loaded — alive still wins
+        let pool = vec![
+            replica("tired", Health::Degraded, 0, 0.0),
+            replica("busy", Health::Alive, 9, 0.0),
+        ];
+        assert_eq!(r.pick(&pool, &[]).unwrap().id, "busy");
+        // …until the alive one is excluded (it failed this request)
+        assert_eq!(r.pick(&pool, &["busy".to_string()]).unwrap().id, "tired");
+    }
+
+    #[test]
+    fn exhausted_pool_returns_none() {
+        let r = Router::new(Policy::RoundRobin);
+        let pool = vec![replica("a", Health::Alive, 0, 0.0)];
+        assert!(r.pick(&pool, &["a".to_string()]).is_none());
+        assert!(r.pick(&[], &[]).is_none());
+    }
+}

@@ -16,6 +16,11 @@
 //!   interleaves their graphs with shared model execution (sequential and
 //!   batch-grouped parallel co-tenancy), and returns only saved values
 //!   ([`server`], [`scheduler`]);
+//! * the **L3 fleet coordinator** (§3.3, Fig. 4): a deployment registry
+//!   with heartbeat-derived health states, pluggable routing policies
+//!   (round-robin, least-loaded, latency-aware) with bounded-retry
+//!   failover, and an HTTP front that mirrors the single-server API so
+//!   clients are fleet-agnostic ([`coordinator`]);
 //! * the model substrate: OPT-style decoder-only transformers AOT-compiled
 //!   from JAX (+Pallas flash-attention / fused layernorm kernels) to HLO
 //!   text, executed via the PJRT CPU client ([`runtime`], [`models`],
@@ -45,6 +50,7 @@ pub mod runtime;
 pub mod models;
 pub mod server;
 pub mod scheduler;
+pub mod coordinator;
 pub mod shard;
 pub mod baselines;
 pub mod survey;

@@ -1,12 +1,14 @@
 //! nnscope CLI — serve, inspect, and exercise the NDIF reproduction.
 //!
 //! Subcommands:
-//!   serve    start an NDIF server       (--models a,b --addr host:port
-//!                                        --parallel-cotenancy --workers N)
-//!   models   list hosted model configs from the artifacts directory
-//!   survey   print the Fig. 2 / Fig. 7 survey analyses
-//!   trace    submit a demo intervention to a running server (--addr)
-//!   selftest quick sanity pass over the tiny model
+//!   serve      start an NDIF server     (--models a,b --addr host:port
+//!                                        --parallel-cotenancy --workers N
+//!                                        --coordinator host:port)
+//!   coordinate start an L3 fleet coordinator (--replicas a,b --policy p)
+//!   models     list hosted model configs from the artifacts directory
+//!   survey     print the Fig. 2 / Fig. 7 survey analyses
+//!   trace      submit a demo intervention to a running server (--addr)
+//!   selftest   quick sanity pass over the tiny model
 //!
 //! Artifacts are looked up in `$NNSCOPE_ARTIFACTS` or `<crate>/artifacts`
 //! (build them with `make artifacts`).
@@ -23,13 +25,18 @@ use nnscope::tensor::Tensor;
 use nnscope::util::cli::Args;
 use nnscope::util::table::Table;
 
-const USAGE: &str = "usage: nnscope <serve|models|survey|trace|selftest> [options]
-  serve     --models tiny-sim[,..] [--addr 127.0.0.1:7757] [--workers 8]
-            [--config deploy.json]
-            [--parallel-cotenancy] [--max-merge 8]
+const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selftest> [options]
+  serve       --models tiny-sim[,..] [--addr 127.0.0.1:7757] [--workers 8]
+              [--config deploy.json]
+              [--parallel-cotenancy] [--max-merge 8]
+              [--coordinator 127.0.0.1:7788] [--advertise host:port]
+              [--heartbeat-ms 250] [--link-latency 0.0]
+  coordinate  [--addr 127.0.0.1:7788] [--replicas host:port[@latency_s],..]
+              [--policy round-robin|least-loaded|latency-aware]
+              [--probe-ms 250] [--retries 3] [--workers 8]
   models
   survey
-  trace     --addr 127.0.0.1:7757 [--model tiny-sim]
+  trace       --addr 127.0.0.1:7757 [--model tiny-sim]
   selftest";
 
 fn main() -> Result<()> {
@@ -37,6 +44,7 @@ fn main() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
     match cmd.as_str() {
         "serve" => serve(&args),
+        "coordinate" => coordinate(&args),
         "models" => models(),
         "survey" => survey_cmd(),
         "trace" => trace(&args),
@@ -50,10 +58,28 @@ fn main() -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("config") {
-        let cfg = nnscope::server::config::from_file(std::path::Path::new(path))?;
+        let mut cfg = nnscope::server::config::from_file(std::path::Path::new(path))?;
+        // CLI fleet flags override the config file
+        if let Some(c) = args.get("coordinator") {
+            cfg.coordinator = Some(c.to_string());
+        }
+        if let Some(a) = args.get("advertise") {
+            cfg.advertise = Some(a.to_string());
+        }
+        if let Some(ms) = args.get("heartbeat-ms") {
+            let ms: u64 = ms
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid --heartbeat-ms '{ms}'"))?;
+            cfg.heartbeat = std::time::Duration::from_millis(ms.max(1));
+        }
+        if let Some(l) = args.get("link-latency") {
+            cfg.link_latency_s = l
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid --link-latency '{l}'"))?;
+        }
         println!("preloading {:?} (from {path}) …", cfg.models);
         let server = NdifServer::start(cfg)?;
-        println!("NDIF serving on {} — POST /v1/trace, GET /v1/models", server.addr());
+        announce_serving(&server);
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
@@ -74,10 +100,49 @@ fn serve(args: &Args) -> Result<()> {
             CoTenancy::Sequential
         },
         auth: Default::default(),
+        coordinator: args.get("coordinator").map(str::to_string),
+        advertise: args.get("advertise").map(str::to_string),
+        heartbeat: std::time::Duration::from_millis(args.u64_or("heartbeat-ms", 250).max(1)),
+        link_latency_s: args.f64_or("link-latency", 0.0),
     };
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;
+    announce_serving(&server);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn announce_serving(server: &NdifServer) {
     println!("NDIF serving on {} — POST /v1/trace, GET /v1/models", server.addr());
+    if let Some(id) = server.replica_id() {
+        println!("registered with fleet coordinator as replica {id}");
+    }
+}
+
+fn coordinate(args: &Args) -> Result<()> {
+    use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+    let policy_s = args.str_or("policy", "least-loaded");
+    let Some(policy) = Policy::parse(&policy_s) else {
+        anyhow::bail!("unknown policy '{policy_s}' (round-robin | least-loaded | latency-aware)");
+    };
+    let mut cfg = CoordinatorConfig::local();
+    cfg.addr = args.str_or("addr", "127.0.0.1:7788");
+    cfg.workers = args.usize_or("workers", 8);
+    cfg.policy = policy;
+    cfg.max_retries = args.usize_or("retries", 3);
+    cfg.probe_interval = std::time::Duration::from_millis(args.u64_or("probe-ms", 250));
+    if let Some(reps) = args.get("replicas") {
+        cfg.replicas = reps.split(',').map(str::to_string).collect();
+    }
+    let coord = Coordinator::start(cfg)?;
+    println!("NDIF fleet coordinator on {} — policy {policy_s}", coord.addr());
+    println!("  clients:  POST /v1/trace, POST /v1/session, GET /v1/models (proxied)");
+    println!("  replicas: POST /v1/fleet/register, /v1/fleet/heartbeat");
+    println!("  fleet:    GET /v1/fleet/status");
+    for r in coord.replicas() {
+        println!("  replica {} @ {} [{}]", r.id, r.addr, r.health.as_str());
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -32,6 +32,35 @@ pub struct ServiceMetrics {
     pub exec_nanos: AtomicU64,
 }
 
+/// Point-in-time copy of [`ServiceMetrics`] — the load snapshot carried by
+/// `/v1/metrics`, coordinator heartbeats, and the least-loaded router.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadSnapshot {
+    pub enqueued: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub merged_batches: u64,
+    pub queue_depth: usize,
+    pub exec_seconds: f64,
+}
+
+impl ServiceMetrics {
+    /// Snapshot the counters. Loads are individually `Relaxed`, so the copy
+    /// is not a single atomic cut, but each counter is exact and the
+    /// invariant `completed + failed <= enqueued` holds at any observation
+    /// point (counters bump before results publish).
+    pub fn snapshot(&self) -> LoadSnapshot {
+        LoadSnapshot {
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            merged_batches: self.merged_batches.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            exec_seconds: self.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
 struct Job {
     id: String,
     graph: InterventionGraph,
@@ -59,6 +88,12 @@ impl ModelService {
             .spawn(move || Self::worker_loop(rx, r2, store2, mode, m2))
             .expect("spawn service worker");
         ModelService { runner, metrics, store, tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Load snapshot for `/v1/metrics`, coordinator heartbeats, and fleet
+    /// status.
+    pub fn load(&self) -> LoadSnapshot {
+        self.metrics.snapshot()
     }
 
     /// Enqueue a request (non-blocking). The result will appear in the
@@ -240,6 +275,51 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn metrics_consistent_under_parallel_producers() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        let svc = Arc::new(svc);
+        let (n_threads, per) = (4usize, 8usize);
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        svc.submit(format!("p{t}-{i}"), simple_graph((t * per + i) as f32))
+                            .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..n_threads {
+            for i in 0..per {
+                store
+                    .wait_ready(&format!("p{t}-{i}"), std::time::Duration::from_secs(60))
+                    .unwrap();
+            }
+        }
+        let total = (n_threads * per) as u64;
+        let snap = svc.load();
+        assert_eq!(snap.enqueued, total);
+        assert_eq!(snap.completed, total);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.exec_seconds > 0.0);
+        // queue depth drains to zero shortly after the last result lands
+        // (the worker decrements after publishing)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while svc.load().queue_depth > 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "queue depth stuck at {}",
+                svc.load().queue_depth
+            );
+            std::thread::yield_now();
+        }
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! NDIF HTTP API: routing, auth, request validation, metrics.
+//! NDIF HTTP API: routing, auth, request validation, metrics, and fleet
+//! membership (self-registration with an L3 [`crate::coordinator`]).
 
 use std::collections::HashMap;
+use std::net::SocketAddr;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -32,6 +34,18 @@ pub struct NdifConfig {
     /// Per-model allowed auth tokens; models absent from the map are open.
     /// (Stands in for the paper's HuggingFace-gated model authorization.)
     pub auth: HashMap<String, Vec<String>>,
+    /// Fleet coordinator address (`host:port`) to self-register with at
+    /// startup; `None` runs standalone (the default).
+    pub coordinator: Option<String>,
+    /// Address advertised to the coordinator; defaults to the bound
+    /// address (override when clients reach this replica differently).
+    pub advertise: Option<String>,
+    /// Interval between heartbeats pushed to the coordinator.
+    pub heartbeat: Duration,
+    /// One-way link latency (seconds) advertised to the coordinator — the
+    /// replica's [`crate::netsim::NetSim`] profile, consumed by
+    /// latency-aware routing.
+    pub link_latency_s: f64,
 }
 
 impl NdifConfig {
@@ -43,6 +57,10 @@ impl NdifConfig {
             artifacts: crate::models::artifacts_dir(),
             cotenancy: CoTenancy::Sequential,
             auth: HashMap::new(),
+            coordinator: None,
+            advertise: None,
+            heartbeat: Duration::from_millis(250),
+            link_latency_s: 0.0,
         }
     }
 }
@@ -63,14 +81,25 @@ impl ServerState {
     }
 }
 
+/// Fleet membership of a replica that self-registered with a coordinator.
+struct FleetMembership {
+    coordinator: SocketAddr,
+    replica_id: String,
+    stop: Arc<AtomicBool>,
+    heartbeat_thread: Option<std::thread::JoinHandle<()>>,
+}
+
 /// A running NDIF server.
 pub struct NdifServer {
     http: HttpServer,
     state: Arc<ServerState>,
+    fleet: Option<FleetMembership>,
 }
 
 impl NdifServer {
-    /// Preload the configured models and start serving.
+    /// Preload the configured models and start serving. With
+    /// [`NdifConfig::coordinator`] set, also register this deployment as a
+    /// fleet replica and start pushing heartbeats.
     pub fn start(cfg: NdifConfig) -> Result<NdifServer> {
         let store = Arc::new(ObjectStore::new());
         let mut services = HashMap::new();
@@ -93,11 +122,82 @@ impl NdifServer {
         let s2 = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| route(&s2, req));
         let http = HttpServer::bind(&cfg.addr, cfg.workers, handler)?;
-        Ok(NdifServer { http, state })
+        let mut server = NdifServer { http, state, fleet: None };
+        if let Some(coordinator) = &cfg.coordinator {
+            server.join_fleet(&cfg, coordinator)?;
+        }
+        Ok(server)
+    }
+
+    /// Register with the coordinator and spawn the heartbeat pusher.
+    fn join_fleet(&mut self, cfg: &NdifConfig, coordinator: &str) -> Result<()> {
+        use crate::coordinator::api as fleet;
+        let coordinator: SocketAddr = coordinator
+            .parse()
+            .with_context(|| format!("coordinator address '{coordinator}'"))?;
+        let advertise: SocketAddr = match &cfg.advertise {
+            Some(a) => a.parse().with_context(|| format!("advertise address '{a}'"))?,
+            None => self.addr(),
+        };
+        if advertise.ip().is_unspecified() {
+            anyhow::bail!(
+                "replica bound to wildcard address {advertise}: the coordinator cannot \
+                 route to it — set NdifConfig.advertise (--advertise) to a reachable address"
+            );
+        }
+        let models: Vec<String> = cfg.models.clone();
+        let latency_s = cfg.link_latency_s;
+        let replica_id = fleet::register_replica(coordinator, advertise, &models, latency_s, None)
+            .context("register with fleet coordinator")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let state2 = Arc::clone(&self.state);
+        let id2 = replica_id.clone();
+        let interval = cfg.heartbeat;
+        let heartbeat_thread = std::thread::Builder::new()
+            .name("ndif-heartbeat".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let mut agg = crate::scheduler::LoadSnapshot::default();
+                    for s in state2.services.values() {
+                        let l = s.load();
+                        agg.queue_depth += l.queue_depth;
+                        agg.completed += l.completed;
+                        agg.failed += l.failed;
+                    }
+                    // 404 = the coordinator restarted and forgot us: reclaim
+                    // our id; transport errors are left for the next beat
+                    if let Ok(404) = fleet::send_heartbeat(coordinator, &id2, &agg) {
+                        let _ = fleet::register_replica(
+                            coordinator,
+                            advertise,
+                            &models,
+                            latency_s,
+                            Some(&id2),
+                        );
+                    }
+                }
+            })?;
+        self.fleet = Some(FleetMembership {
+            coordinator,
+            replica_id,
+            stop,
+            heartbeat_thread: Some(heartbeat_thread),
+        });
+        Ok(())
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.http.addr()
+    }
+
+    /// Fleet replica id, when registered with a coordinator.
+    pub fn replica_id(&self) -> Option<&str> {
+        self.fleet.as_ref().map(|f| f.replica_id.as_str())
     }
 
     /// Metrics snapshot for a model (enqueued, completed, failed, merged).
@@ -112,8 +212,36 @@ impl NdifServer {
         })
     }
 
+    /// Graceful shutdown: stop heartbeating, say goodbye to the
+    /// coordinator, then stop serving.
     pub fn shutdown(&mut self) {
+        if let Some(mut f) = self.fleet.take() {
+            f.stop.store(true, Ordering::SeqCst);
+            if let Some(t) = f.heartbeat_thread.take() {
+                let _ = t.join();
+            }
+            let _ = crate::coordinator::api::deregister_replica(f.coordinator, &f.replica_id);
+        }
         self.http.shutdown();
+    }
+
+    /// Simulate a crash (fleet tests): stop serving and heartbeating
+    /// WITHOUT deregistering, so the coordinator must detect the death via
+    /// heartbeat age / transport failures.
+    pub fn kill(&mut self) {
+        if let Some(mut f) = self.fleet.take() {
+            f.stop.store(true, Ordering::SeqCst);
+            if let Some(t) = f.heartbeat_thread.take() {
+                let _ = t.join();
+            }
+        }
+        self.http.shutdown();
+    }
+}
+
+impl Drop for NdifServer {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -236,18 +364,34 @@ fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     )
 }
 
-fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
-    // /v1/result/<id>[?timeout_ms=N]
+/// Parse `/v1/result/<id>[?…]` into `(id, timeout_ms)`. `timeout_ms` may
+/// appear anywhere in a multi-parameter query; a non-numeric value is a
+/// 400, not a silent fallback. Unknown parameters are ignored. Shared with
+/// the coordinator front, whose result endpoint has the same shape.
+pub(crate) fn parse_result_path(path: &str) -> Result<(&str, u64), Response> {
     let rest = &path["/v1/result/".len()..];
-    let (id, timeout_ms) = match rest.split_once('?') {
-        Some((id, q)) => {
-            let t = q
-                .strip_prefix("timeout_ms=")
-                .and_then(|v| v.parse::<u64>().ok())
-                .unwrap_or(30_000);
-            (id, t)
+    let (id, query) = match rest.split_once('?') {
+        Some((id, q)) => (id, Some(q)),
+        None => (rest, None),
+    };
+    let mut timeout_ms = 30_000u64;
+    if let Some(q) = query {
+        for pair in q.split('&') {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            if k == "timeout_ms" {
+                timeout_ms = v.parse().map_err(|_| {
+                    Response::bad_request(&format!("invalid timeout_ms '{v}'"))
+                })?;
+            }
         }
-        None => (rest, 30_000u64),
+    }
+    Ok((id, timeout_ms))
+}
+
+fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
+    let (id, timeout_ms) = match parse_result_path(path) {
+        Ok(v) => v,
+        Err(resp) => return resp,
     };
     match state.store.wait_outcome(id, Duration::from_millis(timeout_ms)) {
         Some(Ok(json)) => {
@@ -270,24 +414,16 @@ fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
 fn metrics_endpoint(state: &Arc<ServerState>) -> Response {
     let mut per_model = std::collections::BTreeMap::new();
     for (name, s) in &state.services {
+        let l = s.load();
         per_model.insert(
             name.clone(),
             Json::obj(vec![
-                ("enqueued", Json::from(s.metrics.enqueued.load(Ordering::Relaxed) as i64)),
-                ("completed", Json::from(s.metrics.completed.load(Ordering::Relaxed) as i64)),
-                ("failed", Json::from(s.metrics.failed.load(Ordering::Relaxed) as i64)),
-                (
-                    "merged_batches",
-                    Json::from(s.metrics.merged_batches.load(Ordering::Relaxed) as i64),
-                ),
-                (
-                    "queue_depth",
-                    Json::from(s.metrics.queue_depth.load(Ordering::Relaxed) as i64),
-                ),
-                (
-                    "exec_seconds",
-                    Json::from(s.metrics.exec_nanos.load(Ordering::Relaxed) as f64 / 1e9),
-                ),
+                ("enqueued", Json::from(l.enqueued as i64)),
+                ("completed", Json::from(l.completed as i64)),
+                ("failed", Json::from(l.failed as i64)),
+                ("merged_batches", Json::from(l.merged_batches as i64)),
+                ("queue_depth", Json::from(l.queue_depth as i64)),
+                ("exec_seconds", Json::from(l.exec_seconds)),
             ]),
         );
     }

@@ -10,12 +10,17 @@
 //!   "models": ["llama8b-sim", "opt-13b-sim"],
 //!   "artifacts": "/srv/nnscope/artifacts",
 //!   "cotenancy": { "mode": "parallel", "max_merge": 8 },
-//!   "auth": { "llama8b-sim": ["token-a", "token-b"] }
+//!   "auth": { "llama8b-sim": ["token-a", "token-b"] },
+//!   "coordinator": "10.0.0.1:7788",
+//!   "advertise": "10.0.0.5:7757",
+//!   "heartbeat_ms": 250,
+//!   "link_latency_s": 0.010
 //! }
 //! ```
 //!
 //! Every field is optional; omissions fall back to [`NdifConfig::local`]
-//! defaults (ephemeral port, sequential co-tenancy, open access).
+//! defaults (ephemeral port, sequential co-tenancy, open access,
+//! standalone — no coordinator).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -87,6 +92,18 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
         }
         cfg.auth = map;
     }
+    if let Some(c) = j.get("coordinator").as_str() {
+        cfg.coordinator = Some(c.to_string());
+    }
+    if let Some(a) = j.get("advertise").as_str() {
+        cfg.advertise = Some(a.to_string());
+    }
+    if let Some(ms) = j.get("heartbeat_ms").as_i64() {
+        cfg.heartbeat = std::time::Duration::from_millis(ms.max(1) as u64);
+    }
+    if let Some(l) = j.get("link_latency_s").as_f64() {
+        cfg.link_latency_s = l;
+    }
     if cfg.models.is_empty() {
         return Err(anyhow!("config must list at least one model"));
     }
@@ -106,7 +123,11 @@ mod tests {
               "models": ["llama8b-sim", "opt-13b-sim"],
               "artifacts": "/srv/a",
               "cotenancy": { "mode": "parallel", "max_merge": 4 },
-              "auth": { "llama8b-sim": ["t1", "t2"] }
+              "auth": { "llama8b-sim": ["t1", "t2"] },
+              "coordinator": "10.0.0.1:7788",
+              "advertise": "10.0.0.5:7757",
+              "heartbeat_ms": 100,
+              "link_latency_s": 0.01
             }"#,
         )
         .unwrap();
@@ -116,6 +137,10 @@ mod tests {
         assert_eq!(cfg.artifacts, std::path::PathBuf::from("/srv/a"));
         assert_eq!(cfg.cotenancy, CoTenancy::Parallel { max_merge: 4 });
         assert_eq!(cfg.auth["llama8b-sim"], vec!["t1", "t2"]);
+        assert_eq!(cfg.coordinator.as_deref(), Some("10.0.0.1:7788"));
+        assert_eq!(cfg.advertise.as_deref(), Some("10.0.0.5:7757"));
+        assert_eq!(cfg.heartbeat, std::time::Duration::from_millis(100));
+        assert!((cfg.link_latency_s - 0.01).abs() < 1e-12);
     }
 
     #[test]
@@ -124,6 +149,8 @@ mod tests {
         assert_eq!(cfg.cotenancy, CoTenancy::Sequential);
         assert!(cfg.auth.is_empty());
         assert!(cfg.workers >= 1);
+        assert!(cfg.coordinator.is_none());
+        assert!(cfg.advertise.is_none());
     }
 
     #[test]

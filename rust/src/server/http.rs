@@ -13,6 +13,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -199,7 +200,9 @@ impl Drop for HttpServer {
 // Client
 // ---------------------------------------------------------------------------
 
-/// Perform one HTTP request; returns (status, body).
+/// Perform one HTTP request; returns (status, body). No socket timeouts:
+/// the call blocks as long as the server holds the response (long-poll
+/// clients rely on this).
 pub fn http_request(
     addr: SocketAddr,
     method: &str,
@@ -207,7 +210,55 @@ pub fn http_request(
     body: &[u8],
     extra_headers: &[(&str, &str)],
 ) -> Result<(u16, Vec<u8>)> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    request_on(stream, addr, method, path, body, extra_headers)
+}
+
+/// Like [`http_request`] but with a connect deadline and socket read/write
+/// timeouts, so a hung peer cannot block the caller forever (the
+/// coordinator's proxy and probe paths). The read timeout must exceed any
+/// server-side long-poll hold the request asks for.
+pub fn http_request_timeout(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+    timeout: Duration,
+) -> Result<(u16, Vec<u8>)> {
+    http_request_deadlines(addr, method, path, body, extra_headers, timeout, timeout)
+}
+
+/// [`http_request_timeout`] with separate bounds: `connect` caps the TCP
+/// handshake and request writes (detects unreachable peers fast), `read`
+/// caps waiting for the response (longer for endpoints that legitimately
+/// hold, e.g. a synchronous session run).
+pub fn http_request_deadlines(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+    connect: Duration,
+    read: Duration,
+) -> Result<(u16, Vec<u8>)> {
+    let connect = connect.max(Duration::from_millis(1)); // zero would disable
+    let read = read.max(Duration::from_millis(1));
+    let stream = TcpStream::connect_timeout(&addr, connect)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_write_timeout(Some(connect))?;
+    stream.set_read_timeout(Some(read))?;
+    request_on(stream, addr, method, path, body, extra_headers)
+}
+
+fn request_on(
+    mut stream: TcpStream,
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+) -> Result<(u16, Vec<u8>)> {
     let mut head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
@@ -258,6 +309,11 @@ pub fn http_request(
 
 pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, Vec<u8>)> {
     http_request(addr, "GET", path, &[], &[])
+}
+
+/// GET with bounded connect/read/write waits (see [`http_request_timeout`]).
+pub fn get_timeout(addr: SocketAddr, path: &str, timeout: Duration) -> Result<(u16, Vec<u8>)> {
+    http_request_timeout(addr, "GET", path, &[], &[], timeout)
 }
 
 pub fn post(addr: SocketAddr, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
@@ -327,6 +383,19 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn timeout_requests_round_trip() {
+        let srv = echo_server();
+        let (status, body) = get_timeout(srv.addr(), "/health", Duration::from_secs(5)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"ok");
+        // a refused port fails fast rather than hanging
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(get_timeout(dead, "/health", Duration::from_millis(500)).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
     #[test]

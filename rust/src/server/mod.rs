@@ -13,6 +13,11 @@
 //!
 //! Models are preloaded at server start — the architectural property that
 //! produces the paper's flat NDIF setup times (Fig. 6a).
+//!
+//! One `NdifServer` is also one fleet *replica*: with
+//! [`NdifConfig::coordinator`] set it self-registers with an L3
+//! [`crate::coordinator`] front and pushes load heartbeats, so many
+//! deployments of the same model can serve one user population.
 
 pub mod api;
 pub mod config;

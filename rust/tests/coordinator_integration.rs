@@ -1,0 +1,234 @@
+//! Fleet coordinator integration: routing, health, failover.
+//!
+//! Replicas are full in-process `NdifServer` deployments that self-register
+//! with an L3 coordinator; clients talk only to the coordinator. The
+//! failover test kills one replica mid-load and asserts every request still
+//! completes — the coordinator resubmits interrupted work to a survivor, so
+//! a replica crash loses zero accepted requests.
+
+use std::time::{Duration, Instant};
+
+use nnscope::client::remote::{Endpoint, NdifClient};
+use nnscope::client::Trace;
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::server::{http, NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+
+fn coordinator(policy: Policy) -> Coordinator {
+    let mut cfg = CoordinatorConfig::local();
+    cfg.policy = policy;
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.health.degraded_after = Duration::from_millis(400);
+    cfg.health.dead_after = Duration::from_secs(2);
+    Coordinator::start(cfg).unwrap()
+}
+
+fn replica(coord: &Coordinator, latency_s: f64) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.coordinator = Some(coord.addr().to_string());
+    cfg.heartbeat = Duration::from_millis(50);
+    cfg.link_latency_s = latency_s;
+    NdifServer::start(cfg).unwrap()
+}
+
+fn run_one(client: &NdifClient, v: f32) -> anyhow::Result<()> {
+    let tokens = Tensor::new(&[1, 16], vec![v; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    let s = tr.save(h);
+    let res = tr.run_remote(client)?;
+    assert_eq!(res.get(s).dims(), &[1, 16, 32]);
+    Ok(())
+}
+
+#[test]
+fn fleet_routes_round_robin_and_discovers() {
+    let coord = coordinator(Policy::RoundRobin);
+    let r1 = replica(&coord, 0.0);
+    let r2 = replica(&coord, 0.0);
+
+    let client = NdifClient::new(coord.addr());
+    assert_eq!(client.discover().unwrap(), Endpoint::Fleet);
+    assert_eq!(NdifClient::new(r1.addr()).discover().unwrap(), Endpoint::Single);
+    assert!(client.health().unwrap());
+    assert!(client.models().unwrap().contains(&"tiny-sim".to_string()));
+
+    for i in 0..6 {
+        run_one(&client, i as f32).unwrap();
+    }
+    let (_, c1, f1, _) = r1.metrics("tiny-sim").unwrap();
+    let (_, c2, f2, _) = r2.metrics("tiny-sim").unwrap();
+    assert_eq!(c1 + c2, 6, "all requests served exactly once");
+    assert_eq!(f1 + f2, 0);
+    assert!(c1 >= 1 && c2 >= 1, "round-robin did not spread: {c1}/{c2}");
+
+    let status = client.fleet_status().unwrap();
+    assert_eq!(status.get("policy").as_str(), Some("round-robin"));
+    assert_eq!(status.get("replicas").as_array().unwrap().len(), 2);
+}
+
+#[test]
+fn latency_aware_prefers_low_latency_replica() {
+    let coord = coordinator(Policy::LatencyAware);
+    let slow = replica(&coord, 0.250); // a far WAN replica
+    let fast = replica(&coord, 0.002); // near replica
+
+    let client = NdifClient::new(coord.addr());
+    for i in 0..4 {
+        run_one(&client, i as f32).unwrap();
+    }
+    let (_, c_slow, _, _) = slow.metrics("tiny-sim").unwrap();
+    let (_, c_fast, _, _) = fast.metrics("tiny-sim").unwrap();
+    assert_eq!(c_fast, 4, "latency-aware sent {c_slow} requests to the far replica");
+}
+
+#[test]
+fn failover_loses_no_requests() {
+    let coord = coordinator(Policy::LeastLoaded);
+    let mut r1 = replica(&coord, 0.0);
+    let r2 = replica(&coord, 0.0);
+    let addr = coord.addr();
+
+    let (n_threads, per) = (4usize, 5usize);
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                for i in 0..per {
+                    let tokens = Tensor::new(&[1, 16], vec![(t * per + i) as f32; 16]);
+                    let mut tr = Trace::new("tiny-sim", &tokens);
+                    let h = tr.output("layer.0");
+                    tr.save(h);
+                    tr.run_remote(&client).expect("request must survive replica death");
+                    std::thread::sleep(Duration::from_millis(30));
+                }
+                per
+            })
+        })
+        .collect();
+
+    // let some requests land on both replicas, then crash one mid-load
+    std::thread::sleep(Duration::from_millis(100));
+    r1.kill();
+
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, n_threads * per, "zero lost results across the crash");
+
+    // the dead replica must eventually leave the routable set
+    let client = NdifClient::new(addr);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = client.fleet_status().unwrap();
+        let unhealthy = status
+            .get("replicas")
+            .as_array()
+            .unwrap()
+            .iter()
+            .any(|r| r.get("health").as_str() != Some("alive"));
+        if unhealthy {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "coordinator never noticed the dead replica: {status}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // the survivor keeps serving
+    run_one(&client, 99.0).unwrap();
+    drop(r2);
+}
+
+#[test]
+fn fleet_management_endpoints() {
+    let coord = coordinator(Policy::RoundRobin);
+    let caddr = coord.addr();
+
+    // register a replica that isn't actually up
+    let (status, body) = http::post(
+        caddr,
+        "/v1/fleet/register",
+        br#"{"addr":"127.0.0.1:1","models":["ghost-model"],"latency_s":0.02}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let id = nnscope::json::parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    // it shows up in fleet status with its advertised latency
+    let (status, body) = http::get(caddr, "/v1/fleet/status").unwrap();
+    assert_eq!(status, 200);
+    let j = nnscope::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let reps = j.get("replicas").as_array().unwrap();
+    assert!(reps.iter().any(|r| r.get("id").as_str() == Some(id.as_str())));
+
+    // heartbeats: known id accepted, unknown id → 404 (triggers re-register)
+    let hb = format!(r#"{{"id":"{id}","queue_depth":2,"completed":7,"failed":0}}"#);
+    let (status, _) = http::post(caddr, "/v1/fleet/heartbeat", hb.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) =
+        http::post(caddr, "/v1/fleet/heartbeat", br#"{"id":"rep-999"}"#).unwrap();
+    assert_eq!(status, 404);
+
+    // a trace to a model hosted only by an unreachable replica never hangs
+    // or gets lost: either the monitor already declared the ghost dead
+    // (404 at submit) or the request is accepted and cleanly reported
+    // failed once failover exhausts its candidates
+    let (status, body) = http::post(
+        caddr,
+        "/v1/trace",
+        br#"{"model":"ghost-model","batch":1,"tokens":[],"nodes":[]}"#,
+    )
+    .unwrap();
+    if status == 202 {
+        let tid = nnscope::json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap()
+            .get("id")
+            .as_str()
+            .unwrap()
+            .to_string();
+        let (status, body) =
+            http::get(caddr, &format!("/v1/result/{tid}?timeout_ms=30000")).unwrap();
+        assert_eq!(status, 500, "{}", String::from_utf8_lossy(&body));
+        assert!(String::from_utf8_lossy(&body).contains("error"));
+    } else {
+        assert_eq!(status, 404, "ghost replica already marked dead");
+    }
+
+    // a model nobody hosts is rejected at submit
+    let (status, _) = http::post(
+        caddr,
+        "/v1/trace",
+        br#"{"model":"nope","batch":1,"tokens":[],"nodes":[]}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+
+    // result query parsing mirrors the single server: multi-param queries
+    // work, non-numeric timeout_ms is a 400
+    let (status, _) = http::get(caddr, "/v1/result/c-999?x=1&timeout_ms=5").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::get(caddr, "/v1/result/c-999?timeout_ms=abc").unwrap();
+    assert_eq!(status, 400);
+
+    // deregistration removes the replica from the registry
+    let dr = format!(r#"{{"id":"{id}"}}"#);
+    let (status, _) = http::post(caddr, "/v1/fleet/deregister", dr.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = http::post(caddr, "/v1/fleet/deregister", dr.as_bytes()).unwrap();
+    assert_eq!(status, 404);
+    let (_, body) = http::get(caddr, "/v1/fleet/status").unwrap();
+    assert_eq!(
+        nnscope::json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap()
+            .get("replicas")
+            .as_array()
+            .unwrap()
+            .len(),
+        0
+    );
+}

@@ -131,6 +131,35 @@ fn bad_requests_rejected_cleanly() {
 }
 
 #[test]
+fn result_timeout_query_parsing() {
+    let server = start_server(CoTenancy::Sequential);
+    let addr = server.addr();
+
+    // timeout_ms is honored anywhere in a multi-parameter query
+    let (status, _) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?x=1&timeout_ms=10").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?timeout_ms=10&x=1").unwrap();
+    assert_eq!(status, 404);
+
+    // non-numeric or empty timeout_ms → 400, not a silent default
+    let (status, body) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?timeout_ms=abc").unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let (status, _) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?timeout_ms=").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        nnscope::server::http::get(addr, "/v1/result/r-404?timeout_ms=-5").unwrap();
+    assert_eq!(status, 400);
+
+    // unknown parameters alone are ignored (default timeout applies)
+    let (status, _) = nnscope::server::http::get(addr, "/v1/result/r-404?x=1").unwrap();
+    assert_eq!(status, 404);
+}
+
+#[test]
 fn concurrent_clients_parallel_cotenancy() {
     let server = start_server(CoTenancy::Parallel { max_merge: 4 });
     let addr = server.addr();
