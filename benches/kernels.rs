@@ -1,0 +1,170 @@
+//! Kernel micro-benchmarks: the optimized tensor kernels against the
+//! retained seed implementations (`nnscope::tensor::ops::naive`).
+//!
+//! Covers the three kernel families of the compute layer: matmul
+//! (cache-blocked + row-parallel), softmax (row-parallel large-vocab),
+//! and broadcast elementwise (stride-walk). Results are printed as a
+//! table and emitted to `BENCH_kernels.json`.
+//!
+//! **Tokens-equivalent throughput**: each kernel's natural per-token unit
+//! of work is one processed row — an LHS row for matmul (one token's
+//! hidden state against a weight matrix), one softmaxed vocab row (one
+//! decode step's logits), one hidden-state row for the bias add. The
+//! `tokens_equiv_per_s` field is rows processed per second at the
+//! optimized median, comparable across kernels at the same hidden size.
+//!
+//! Quick mode (`NNSCOPE_BENCH_QUICK=1`, the CI smoke step) shrinks shapes
+//! and sample counts; the full run includes the 512×512×512 matmul whose
+//! ≥4× speedup over the seed kernel is this layer's acceptance bar.
+
+#[path = "common.rs"]
+mod common;
+
+use std::hint::black_box;
+
+use nnscope::json::Json;
+use nnscope::tensor::{ops::naive, Tensor};
+use nnscope::util::table::Table;
+use nnscope::util::{Prng, Summary};
+
+struct Measured {
+    name: &'static str,
+    shape: String,
+    opt: Summary,
+    naive: Summary,
+    /// per-token work units (rows) processed per iteration.
+    rows_per_iter: usize,
+}
+
+impl Measured {
+    fn speedup(&self) -> f64 {
+        self.naive.median / self.opt.median.max(1e-12)
+    }
+    fn tokens_equiv_per_s(&self) -> f64 {
+        self.rows_per_iter as f64 / self.opt.median.max(1e-12)
+    }
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("shape", Json::Str(self.shape.clone())),
+            ("optimized_median_s", Json::Num(self.opt.median)),
+            ("naive_median_s", Json::Num(self.naive.median)),
+            ("speedup", Json::Num(self.speedup())),
+            ("tokens_equiv_per_s", Json::Num(self.tokens_equiv_per_s())),
+        ])
+    }
+}
+
+fn main() {
+    let quick = common::quick();
+    let n = common::samples(7);
+    let n_naive = if quick { 1 } else { 3 };
+    let mut rng = Prng::new(0xBE7C);
+    let mut measured: Vec<Measured> = Vec::new();
+
+    common::section(&format!(
+        "Kernel micro-benchmarks (compute pool: {} threads)",
+        nnscope::threadpool::compute_pool().size()
+    ));
+
+    // --- matmul: the model-compute analog --------------------------------
+    let mm_sizes: &[(usize, usize, usize)] =
+        if quick { &[(128, 128, 128)] } else { &[(256, 256, 256), (512, 512, 512)] };
+    for &(m, k, nn) in mm_sizes {
+        let a = Tensor::from_randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::from_randn(&[k, nn], &mut rng, 1.0);
+        let opt = common::bench(1, n, |_| {
+            black_box(a.matmul(&b));
+        });
+        let nai = common::bench(0, n_naive, |_| {
+            black_box(naive::matmul(&a, &b));
+        });
+        measured.push(Measured {
+            name: "matmul",
+            shape: format!("{m}x{k}x{nn}"),
+            opt,
+            naive: nai,
+            rows_per_iter: m,
+        });
+    }
+
+    // --- softmax: the large-vocab logits path ----------------------------
+    let sm_sizes: &[(usize, usize)] = if quick { &[(64, 8192)] } else { &[(256, 50272)] };
+    for &(rows, vocab) in sm_sizes {
+        let t = Tensor::from_randn(&[rows, vocab], &mut rng, 2.0);
+        let opt = common::bench(1, n, |_| {
+            black_box(t.softmax_last());
+        });
+        let nai = common::bench(0, n_naive, |_| {
+            black_box(naive::softmax_last(&t));
+        });
+        measured.push(Measured {
+            name: "softmax",
+            shape: format!("{rows}x{vocab}"),
+            opt,
+            naive: nai,
+            rows_per_iter: rows,
+        });
+    }
+
+    // --- broadcast: the bias-add / residual elementwise path -------------
+    let bc_sizes: &[(usize, usize, usize)] =
+        if quick { &[(4, 128, 1024)] } else { &[(8, 256, 4096)] };
+    for &(b, seq, d) in bc_sizes {
+        let x = Tensor::from_randn(&[b, seq, d], &mut rng, 1.0);
+        let bias = Tensor::from_randn(&[d], &mut rng, 1.0);
+        let opt = common::bench(1, n, |_| {
+            black_box(x.add(&bias));
+        });
+        let nai = common::bench(0, n_naive, |_| {
+            black_box(naive::binop(&x, &bias, |p, q| p + q));
+        });
+        measured.push(Measured {
+            name: "broadcast_add",
+            shape: format!("{b}x{seq}x{d}+{d}"),
+            opt,
+            naive: nai,
+            rows_per_iter: b * seq,
+        });
+    }
+
+    // --- report ----------------------------------------------------------
+    let mut table = Table::new("optimized vs seed kernels (median s)").header(vec![
+        "kernel",
+        "shape",
+        "optimized",
+        "naive seed",
+        "speedup",
+        "tokens-eq/s",
+    ]);
+    for m in &measured {
+        table.row(vec![
+            m.name.to_string(),
+            m.shape.clone(),
+            format!("{:.6}", m.opt.median),
+            format!("{:.6}", m.naive.median),
+            format!("{:.2}x", m.speedup()),
+            format!("{:.0}", m.tokens_equiv_per_s()),
+        ]);
+    }
+    table.print();
+    if let Some(mm) = measured.iter().rev().find(|m| m.name == "matmul") {
+        common::shape_note(&format!(
+            "largest matmul speedup vs seed kernel: {:.2}x (acceptance bar: ≥4x at 512³ on a multi-core host)",
+            mm.speedup()
+        ));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("kernels".to_string())),
+        ("quick", Json::Bool(quick)),
+        (
+            "compute_threads",
+            Json::Num(nnscope::threadpool::compute_pool().size() as f64),
+        ),
+        ("samples", Json::Num(n as f64)),
+        ("kernels", Json::arr(measured.iter().map(Measured::to_json).collect())),
+    ]);
+    std::fs::write("BENCH_kernels.json", json.pretty()).expect("write BENCH_kernels.json");
+    println!("\nwrote BENCH_kernels.json");
+}

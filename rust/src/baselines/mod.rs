@@ -30,7 +30,7 @@ pub mod tlens;
 use anyhow::Result;
 
 use crate::models::workload::IoiBatch;
-use crate::tensor::{Range1, Tensor};
+use crate::tensor::Tensor;
 
 /// A Table-1 "framework": something that can be set up for a model and
 /// then run the standard activation-patching workload.
@@ -54,10 +54,17 @@ pub trait Framework: Sized {
 /// the mechanism differs.
 pub fn patch_rows(t: &mut Tensor, seq: usize) {
     let rows = t.dims()[0];
+    // the last-token hidden state of row i is one contiguous block of
+    // `numel / (rows·seq)` elements: patch by memcpy, no slice tensors
+    let row_elems = t.numel() / rows;
+    let d = row_elems / seq;
+    let last = (seq - 1) * d;
+    let data = t.data_mut();
     let mut i = 0;
     while i + 1 < rows {
-        let src = t.slice(&[Range1::one(i), Range1::one(seq - 1)]);
-        t.slice_assign(&[Range1::one(i + 1), Range1::one(seq - 1)], &src);
+        let src = i * row_elems + last;
+        let dst = (i + 1) * row_elems + last;
+        data.copy_within(src..src + d, dst);
         i += 2;
     }
 }

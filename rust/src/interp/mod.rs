@@ -40,8 +40,12 @@ enum Phase {
 /// orchestrated by [`execute`] / [`Executor::run`].
 pub struct Executor<'g> {
     graph: &'g InterventionGraph,
-    /// forward point name -> node ids to run at that hook (in id order).
-    schedule: HashMap<String, Vec<NodeId>>,
+    /// forward-sequence index -> node ids to run at that hook (in id
+    /// order). Keyed by position, not module name, so building and probing
+    /// the schedule never clones module-name `String`s per node.
+    schedule: Vec<Vec<NodeId>>,
+    /// module name -> forward-sequence index (one entry per module).
+    point_index: HashMap<String, usize>,
     pre: Vec<NodeId>,
     post: Vec<NodeId>,
     values: Vec<Option<Tensor>>,
@@ -110,19 +114,18 @@ impl<'g> Executor<'g> {
             phase[node.id] = p;
         }
 
-        let mut schedule: HashMap<String, Vec<NodeId>> = HashMap::new();
+        let mut schedule: Vec<Vec<NodeId>> = vec![Vec::new(); forward_sequence.len()];
         let mut pre = Vec::new();
         let mut post = Vec::new();
         for node in &graph.nodes {
             match phase[node.id] {
                 Phase::Pre => pre.push(node.id),
-                Phase::Fwd(k) => schedule
-                    .entry(forward_sequence[k].clone())
-                    .or_default()
-                    .push(node.id),
+                Phase::Fwd(k) => schedule[k].push(node.id),
                 Phase::Post => post.push(node.id),
             }
         }
+        let point_index: HashMap<String, usize> =
+            order.into_iter().map(|(m, k)| (m.to_string(), k)).collect();
 
         // Save locks its dependency's value.
         let mut locked = vec![false; n];
@@ -136,6 +139,7 @@ impl<'g> Executor<'g> {
         Ok(Executor {
             graph,
             schedule,
+            point_index,
             pre,
             post,
             values: vec![None; n],
@@ -155,17 +159,20 @@ impl<'g> Executor<'g> {
         self.peak_live
     }
 
+    /// Consume one listener's claim on a node's value. The last unlocked
+    /// listener *moves* the tensor out instead of cloning it, so a chain
+    /// of ops never copies the hidden state it is transforming.
     fn take_dep(&mut self, id: NodeId) -> Result<Tensor> {
-        let v = self.values[id]
-            .as_ref()
-            .ok_or_else(|| anyhow!("node {id} value not available (freed or not computed)"))?
-            .clone();
+        if self.values[id].is_none() {
+            return Err(anyhow!("node {id} value not available (freed or not computed)"));
+        }
         self.listeners[id] = self.listeners[id].saturating_sub(1);
         if self.listeners[id] == 0 && !self.locked[id] {
-            self.values[id] = None;
             self.live = self.live.saturating_sub(1);
+            Ok(self.values[id].take().expect("presence checked above"))
+        } else {
+            Ok(self.values[id].as_ref().expect("presence checked above").clone())
         }
-        Ok(v)
     }
 
     fn put(&mut self, id: NodeId, v: Tensor) {
@@ -180,16 +187,21 @@ impl<'g> Executor<'g> {
 
     /// Execute one node. `current` is the module activation in flight at
     /// this hook (None in pre/post phases).
+    ///
+    /// Ops are matched by reference (the graph outlives the executor), so
+    /// per-node execution clones no `Op` payloads — no module-name
+    /// `String`s, no `Const` data, no range vectors. Unary transforms use
+    /// the in-place kernels over the (usually moved-out) dependency.
     fn exec_node(&mut self, id: NodeId, current: Option<&mut Tensor>) -> Result<()> {
-        let op = self.graph.nodes[id].op.clone();
-        let out = match op {
+        let graph = self.graph;
+        let out = match &graph.nodes[id].op {
             Op::Getter { .. } => {
                 let t = current.ok_or_else(|| anyhow!("getter outside hook"))?;
                 // a merged co-tenant run hands each user only their rows
                 self.slice_rows(t)
             }
             Op::Setter { arg, .. } => {
-                let v = self.take_dep(arg)?;
+                let v = self.take_dep(*arg)?;
                 let t = current.ok_or_else(|| anyhow!("setter outside hook"))?;
                 self.write_rows(t, &v)?;
                 v
@@ -198,40 +210,57 @@ impl<'g> Executor<'g> {
                 // value injected by the post-phase driver before exec
                 return Ok(());
             }
-            Op::Const { dims, data } => Tensor::new(&dims, data),
-            Op::Slice { arg, ranges } => self.take_dep(arg)?.slice(&ranges),
+            Op::Const { dims, data } => Tensor::new(dims, data.clone()),
+            Op::Slice { arg, ranges } => self.take_dep(*arg)?.slice(ranges),
             Op::Assign { dst, ranges, src } => {
-                let mut d = self.take_dep(dst)?;
-                let s = self.take_dep(src)?;
-                d.slice_assign(&ranges, &s);
+                let mut d = self.take_dep(*dst)?;
+                let s = self.take_dep(*src)?;
+                d.slice_assign(ranges, &s);
                 d
             }
             Op::Fill { dst, ranges, value } => {
-                let mut d = self.take_dep(dst)?;
-                d.slice_fill(&ranges, value);
+                let mut d = self.take_dep(*dst)?;
+                d.slice_fill(ranges, *value);
                 d
             }
-            Op::Add { a, b } => self.take_dep(a)?.add(&self.take_dep(b)?),
-            Op::Sub { a, b } => self.take_dep(a)?.sub(&self.take_dep(b)?),
-            Op::Mul { a, b } => self.take_dep(a)?.mul(&self.take_dep(b)?),
-            Op::Matmul { a, b } => self.take_dep(a)?.matmul(&self.take_dep(b)?),
-            Op::Scale { arg, factor } => self.take_dep(arg)?.scale(factor),
-            Op::Gelu { arg } => self.take_dep(arg)?.gelu(),
-            Op::Softmax { arg } => self.take_dep(arg)?.softmax_last(),
-            Op::Argmax { arg } => self.take_dep(arg)?.argmax_last(),
-            Op::Mean { arg } => Tensor::scalar(self.take_dep(arg)?.mean_all()),
-            Op::Sum { arg } => Tensor::scalar(self.take_dep(arg)?.sum_all()),
+            Op::Add { a, b } => self.take_dep(*a)?.add(&self.take_dep(*b)?),
+            Op::Sub { a, b } => self.take_dep(*a)?.sub(&self.take_dep(*b)?),
+            Op::Mul { a, b } => self.take_dep(*a)?.mul(&self.take_dep(*b)?),
+            Op::Matmul { a, b } => self.take_dep(*a)?.matmul(&self.take_dep(*b)?),
+            Op::Scale { arg, factor } => {
+                let mut t = self.take_dep(*arg)?;
+                t.scale_inplace(*factor);
+                t
+            }
+            Op::Gelu { arg } => {
+                let mut t = self.take_dep(*arg)?;
+                t.gelu_inplace();
+                t
+            }
+            Op::Softmax { arg } => {
+                let mut t = self.take_dep(*arg)?;
+                t.softmax_last_inplace();
+                t
+            }
+            Op::Argmax { arg } => self.take_dep(*arg)?.argmax_last(),
+            Op::Mean { arg } => Tensor::scalar(self.take_dep(*arg)?.mean_all()),
+            Op::Sum { arg } => Tensor::scalar(self.take_dep(*arg)?.sum_all()),
             Op::LogitDiff { logits, target, foil } => {
-                logit_diff(&self.take_dep(logits)?, target, foil)
+                logit_diff(&self.take_dep(*logits)?, *target, *foil)
             }
             Op::Save { arg } => {
-                let v = self.values[arg]
+                let v = self.values[*arg]
                     .as_ref()
                     .ok_or_else(|| anyhow!("save of unavailable node {arg}"))?
                     .clone();
-                self.listeners[arg] = self.listeners[arg].saturating_sub(1);
-                self.saved.insert(id, v.clone());
-                v
+                self.listeners[*arg] = self.listeners[*arg].saturating_sub(1);
+                // only clone again if some downstream node reads the save's
+                // own value; otherwise the result map takes sole ownership
+                if self.listeners[id] > 0 || self.locked[id] {
+                    self.put(id, v.clone());
+                }
+                self.saved.insert(id, v);
+                return Ok(());
             }
         };
         self.put(id, out);
@@ -318,13 +347,18 @@ impl<'g> Executor<'g> {
 
 impl Hooks for Executor<'_> {
     fn wants(&self, point: &str) -> bool {
-        self.error.is_none() && self.schedule.contains_key(point)
+        self.error.is_none()
+            && self.point_index.get(point).is_some_and(|&k| !self.schedule[k].is_empty())
     }
 
     fn on_output(&mut self, point: &str, t: &mut Tensor) -> bool {
-        let Some(ids) = self.schedule.get(point).cloned() else {
+        let Some(&k) = self.point_index.get(point) else {
             return false;
         };
+        if self.schedule[k].is_empty() {
+            return false;
+        }
+        let ids = self.schedule[k].clone();
         match self.run_list(&ids, Some(t)) {
             Ok(modified) => modified,
             Err(e) => {

@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::tensor::{Range1, Tensor};
+use crate::tensor::Tensor;
 
 use super::runner::{Hooks, ModelRunner, NoHooks};
 
@@ -45,21 +45,21 @@ impl ModelRunner {
         let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
         for _ in 0..steps {
             let logits = self.forward(&ctx, hooks)?;
-            let last = logits.slice(&[Range1::one(0), Range1::one(seq - 1)]);
-            let last = last.reshape(&[vocab]);
+            // argmax straight off the last-position row of the `[1, seq,
+            // vocab]` logits — no slice/reshape materialization per step
+            let row = &logits.data()[(seq - 1) * vocab..seq * vocab];
             let mut best = 0usize;
-            for (i, &v) in last.data().iter().enumerate() {
-                if v > last.data()[best] {
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
                     best = i;
                 }
             }
             out.tokens.push(best);
-            out.scores.push(last.data()[best]);
-            // slide the window left, append the new token
-            let mut next = vec![0.0f32; seq];
-            next[..seq - 1].copy_from_slice(&ctx.data()[1..seq]);
-            next[seq - 1] = best as f32;
-            ctx = Tensor::new(&[1, seq], next);
+            out.scores.push(row[best]);
+            // slide the window left in place, append the new token
+            let cd = ctx.data_mut();
+            cd.copy_within(1..seq, 0);
+            cd[seq - 1] = best as f32;
         }
         Ok(out)
     }
@@ -74,6 +74,7 @@ impl ModelRunner {
 mod tests {
     use super::*;
     use crate::models::artifacts_dir;
+    use crate::tensor::Range1;
 
     fn runner() -> ModelRunner {
         ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap()

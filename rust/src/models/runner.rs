@@ -257,17 +257,21 @@ impl ModelRunner {
         let out_dims = self.manifest.output_dims("layer", b);
         for i in 0..self.manifest.n_layers {
             let key = format!("layer.{i}");
-            let shard_w = self.weights.shard_layer(&key, shards);
+            // the per-shard weight sets are moved into the worker closures
+            // (not cloned): each shard owns its partials for the layer
+            let (attn_parts, mlp_parts): (Vec<_>, Vec<_>) =
+                self.weights.shard_layer(&key, shards).into_iter().unzip();
 
-            // phase 1: attention partials in parallel, then all-reduce
-            let x_arc = Arc::new(x.clone());
-            let jobs: Vec<_> = shard_w
-                .iter()
-                .map(|(attn_w, _)| {
+            // phase 1: attention partials in parallel, then all-reduce.
+            // The hidden state is shared with the workers by Arc and
+            // reclaimed afterwards — zero copies of `x` per phase.
+            let x_arc = Arc::new(x);
+            let jobs: Vec<_> = attn_parts
+                .into_iter()
+                .map(|w| {
                     let exe = Arc::clone(&attn_exe);
                     let eng = Arc::clone(&self.engine);
                     let xs = Arc::clone(&x_arc);
-                    let w = attn_w.clone();
                     let od = out_dims.clone();
                     move || -> Result<Tensor> {
                         let xd = eng.upload(&xs)?;
@@ -280,20 +284,21 @@ impl ModelRunner {
                 })
                 .collect();
             let partials = threadpool::parallel_map(jobs, shards);
-            let mut h = x;
+            // workers have finished and dropped their refs; the fallback
+            // clone is unreachable in practice
+            let mut h = Arc::try_unwrap(x_arc).unwrap_or_else(|a| (*a).clone());
             for p in partials {
                 h.add_assign(&p?);
             }
 
             // phase 2: MLP partials, all-reduce
-            let h_arc = Arc::new(h.clone());
-            let jobs: Vec<_> = shard_w
-                .iter()
-                .map(|(_, mlp_w)| {
+            let h_arc = Arc::new(h);
+            let jobs: Vec<_> = mlp_parts
+                .into_iter()
+                .map(|w| {
                     let exe = Arc::clone(&mlp_exe);
                     let eng = Arc::clone(&self.engine);
                     let hs = Arc::clone(&h_arc);
-                    let w = mlp_w.clone();
                     let od = out_dims.clone();
                     move || -> Result<Tensor> {
                         let hd = eng.upload(&hs)?;
@@ -306,7 +311,7 @@ impl ModelRunner {
                 })
                 .collect();
             let partials = threadpool::parallel_map(jobs, shards);
-            let mut out = h;
+            let mut out = Arc::try_unwrap(h_arc).unwrap_or_else(|a| (*a).clone());
             for p in partials {
                 out.add_assign(&p?);
             }

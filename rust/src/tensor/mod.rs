@@ -8,10 +8,14 @@
 //! tensors use `i64` stored losslessly in `f32` for vocab sizes ≪ 2^24,
 //! which holds for every simulated config).
 //!
-//! The engine favors clarity and testability over peak throughput — the hot
-//! compute path is inside the compiled XLA executables, not here — but the
-//! ops used on the request path (slice/assign, elementwise) are
-//! allocation-conscious (§Perf).
+//! The kernels on the request path are written for throughput (§Perf):
+//! matmul is cache-blocked over a packed RHS and row-parallel across the
+//! shared compute pool, slicing/broadcasting walk precomputed strides with
+//! contiguous-run memcpy fast paths, and the interpreter hot loops use
+//! in-place variants so hidden states are not cloned per op. The seed
+//! per-element kernels are retained in [`ops::naive`] as oracles; see the
+//! [`ops`] module docs for the blocking/packing scheme and the parity
+//! contract.
 
 mod shape;
 pub mod ops;

@@ -1,8 +1,85 @@
 //! Tensor operations used by the intervention-graph interpreter and the
-//! shard all-reduce. Each op is exercised by unit tests against naive
-//! oracles and by the interpreter's property tests.
+//! shard all-reduce.
+//!
+//! # Kernel architecture (§Perf)
+//!
+//! The ops on the request path are written for throughput; the seed
+//! per-element implementations are retained verbatim in [`naive`] as
+//! oracles for the property tests (`rust/tests/props.rs`) and as the
+//! baseline for `benches/kernels.rs`.
+//!
+//! **Matmul** is a cache-blocked dot-product kernel over a packed RHS:
+//! `B [k, n]` is transposed once into `Bt [n, k]` so both operands of
+//! every inner product are contiguous (unit-stride, autovectorizable).
+//! The kernel walks blocks of [`MATMUL_ROW_BLOCK`] LHS rows against one
+//! `Bt` row at a time, so each packed row is streamed once per row-block
+//! instead of once per output element. Row chunks are distributed across
+//! the shared lazy compute pool ([`crate::threadpool::compute_pool`],
+//! sized from `NNSCOPE_COMPUTE_THREADS` or `available_parallelism`);
+//! products below [`MATMUL_SEQ_CUTOFF`] multiply-adds (and single-row
+//! products, which cannot amortize the pack) take a direct sequential
+//! axpy path with no packing. The 8-lane accumulator reassociates the
+//! reduction, so matmul parity with [`naive::matmul`] is tolerance-based
+//! (≤ 1e-4 max-abs-diff on unit-scale data); everything else is
+//! bit-exact.
+//!
+//! **Slicing and broadcasting** never materialize per-element index
+//! vectors. A slice is decomposed by [`plan_slice`] into an innermost
+//! contiguous run (trailing whole dims fold into one `copy_from_slice` /
+//! `fill` block) plus a precomputed-stride odometer over the remaining
+//! outer dims; broadcasting walks both operands with
+//! [`Shape::broadcast_strides`] (stride 0 on expanded dims) and a shared
+//! odometer.
+//!
+//! **In-place / fused variants** (`gelu_inplace`, `scale_inplace`,
+//! `softmax_last_inplace`, `scale_add_assign`) let the interpreter and
+//! runner hot loops transform activations without cloning full hidden
+//! states; `softmax_last` / `argmax_last` / `gelu` split large-vocab rows
+//! across the compute pool (rows are independent, so parallelism does not
+//! change numerics).
 
 use super::{Shape, Tensor};
+use crate::threadpool;
+
+/// Below this many multiply-adds a matmul runs on the calling thread —
+/// pool dispatch costs more than it saves (≈ a 64×64×64 product).
+const MATMUL_SEQ_CUTOFF: usize = 1 << 18;
+
+/// LHS rows per block of the matmul kernel: one packed RHS row is
+/// streamed once per block, while the block's LHS rows stay cache-hot.
+const MATMUL_ROW_BLOCK: usize = 16;
+
+/// Below this many elements, elementwise/row kernels run sequentially.
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+// ---------------------------------------------------------------------------
+// Parallel dispatch helpers
+// ---------------------------------------------------------------------------
+
+/// The shared chunk-sizing heuristic for splitting `units` of work across
+/// the compute pool: floor division (≥ `size` chunks, so the queue stays
+/// balanced when chunks finish unevenly), at least one unit per chunk.
+fn par_chunk_units(units: usize, pool: &threadpool::ThreadPool) -> usize {
+    (units / pool.size()).max(1)
+}
+
+/// Apply `f` to `data` in chunks that are multiples of `granule` elements
+/// (the row boundary), in parallel across the compute pool when the input
+/// is large enough to pay for dispatch. `granule` must divide `data.len()`.
+fn par_chunks_mut(data: &mut [f32], granule: usize, f: impl Fn(&mut [f32]) + Send + Sync + Copy) {
+    let pool = threadpool::compute_pool();
+    if data.len() < PAR_MIN_ELEMS || pool.size() == 1 {
+        f(data);
+        return;
+    }
+    let units = data.len() / granule;
+    let per = par_chunk_units(units, pool) * granule;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(per)
+        .map(|chunk| Box::new(move || f(chunk)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    pool.scoped(jobs);
+}
 
 // ---------------------------------------------------------------------------
 // Elementwise with broadcasting
@@ -16,25 +93,71 @@ fn broadcast_binop(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tenso
     }
     let out_dims = Shape::broadcast(a.dims(), b.dims())
         .unwrap_or_else(|| panic!("broadcast {:?} vs {:?}", a.dims(), b.dims()));
-    let out_shape = Shape::new(&out_dims);
-    let mut data = Vec::with_capacity(out_shape.numel());
-    let ra = out_dims.len() - a.rank();
-    let rb = out_dims.len() - b.rank();
-    for flat in 0..out_shape.numel() {
-        let idx = out_shape.unravel(flat);
-        let ia: Vec<usize> = idx[ra..]
-            .iter()
-            .zip(a.dims())
-            .map(|(&i, &d)| if d == 1 { 0 } else { i })
-            .collect();
-        let ib: Vec<usize> = idx[rb..]
-            .iter()
-            .zip(b.dims())
-            .map(|(&i, &d)| if d == 1 { 0 } else { i })
-            .collect();
-        data.push(f(a.at(&ia), b.at(&ib)));
+    // equal-dims was handled above, so the output has rank ≥ 1 here
+    let rank = out_dims.len();
+    let numel: usize = out_dims.iter().product();
+    let mut data = Vec::with_capacity(numel);
+    if numel == 0 {
+        return Tensor::new(&out_dims, data);
     }
-    Tensor::new(&out_dims, data)
+    let sa = a.shape().broadcast_strides(&out_dims);
+    let sb = b.shape().broadcast_strides(&out_dims);
+    let (ad, bd) = (a.data(), b.data());
+    let inner = out_dims[rank - 1];
+    let (ia, ib) = (sa[rank - 1], sb[rank - 1]);
+    // odometer over dims 0..rank-1; the innermost dim is a tight loop
+    let mut idx = vec![0usize; rank];
+    let (mut oa, mut ob) = (0usize, 0usize);
+    loop {
+        match (ia, ib) {
+            (1, 1) => {
+                for i in 0..inner {
+                    data.push(f(ad[oa + i], bd[ob + i]));
+                }
+            }
+            (1, 0) => {
+                let y = bd[ob];
+                for i in 0..inner {
+                    data.push(f(ad[oa + i], y));
+                }
+            }
+            (0, 1) => {
+                let x = ad[oa];
+                for i in 0..inner {
+                    data.push(f(x, bd[ob + i]));
+                }
+            }
+            _ => {
+                for i in 0..inner {
+                    data.push(f(ad[oa + i * ia], bd[ob + i * ib]));
+                }
+            }
+        }
+        let mut d = rank - 1;
+        loop {
+            if d == 0 {
+                return Tensor::new(&out_dims, data);
+            }
+            d -= 1;
+            idx[d] += 1;
+            oa += sa[d];
+            ob += sb[d];
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            oa -= sa[d] * out_dims[d];
+            ob -= sb[d] * out_dims[d];
+            idx[d] = 0;
+        }
+    }
+}
+
+fn gelu_slice(xs: &mut [f32]) {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    for x in xs.iter_mut() {
+        let v = *x;
+        *x = 0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh());
+    }
 }
 
 impl Tensor {
@@ -51,9 +174,17 @@ impl Tensor {
         broadcast_binop(self, other, |a, b| a / b)
     }
 
+    /// In-place scalar multiply.
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in self.data_mut().iter_mut() {
+            *v *= s;
+        }
+    }
+
     pub fn scale(&self, s: f32) -> Tensor {
-        let data = self.data().iter().map(|&x| x * s).collect();
-        Tensor::new(self.dims(), data)
+        let mut out = self.clone();
+        out.scale_inplace(s);
+        out
     }
 
     pub fn add_scalar(&self, s: f32) -> Tensor {
@@ -72,15 +203,15 @@ impl Tensor {
 
     /// tanh-approximation GELU, matching the model's MLP activation.
     pub fn gelu(&self) -> Tensor {
-        let data = self
-            .data()
-            .iter()
-            .map(|&x| {
-                let c = (2.0f32 / std::f32::consts::PI).sqrt();
-                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
-            })
-            .collect();
-        Tensor::new(self.dims(), data)
+        let mut out = self.clone();
+        out.gelu_inplace();
+        out
+    }
+
+    /// In-place GELU — the interpreter's activation hot path. tanh is
+    /// compute-bound, so large tensors are chunked across the compute pool.
+    pub fn gelu_inplace(&mut self) {
+        par_chunks_mut(self.data_mut(), 1, gelu_slice);
     }
 
     /// In-place add (same shape) — used by the shard all-reduce hot path.
@@ -88,6 +219,16 @@ impl Tensor {
         assert_eq!(self.dims(), other.dims());
         for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
             *a += *b;
+        }
+    }
+
+    /// Fused axpy `self += s · other` (same shape): one pass instead of a
+    /// `scale` allocation followed by `add_assign` — the optimizer-update
+    /// and weighted-all-reduce primitive.
+    pub fn scale_add_assign(&mut self, s: f32, other: &Tensor) {
+        assert_eq!(self.dims(), other.dims());
+        for (a, &b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += s * b;
         }
     }
 }
@@ -121,88 +262,143 @@ impl Range1 {
     }
 }
 
+/// Precomputed walk for a multi-dimensional slice: an innermost contiguous
+/// run (trailing dims taken whole fold into a single block, plus the
+/// contiguous range of the first partial dim above them) and a stride
+/// odometer over the remaining outer dims. Shared by `slice`,
+/// `slice_assign`, and `slice_fill`, so a hidden-state row patch is one
+/// `memcpy` instead of `d_model` scalar index computations.
+struct SlicePlan {
+    /// dims `[0, outer)` are walked by the odometer within their ranges.
+    outer: usize,
+    /// contiguous elements per visited offset.
+    run: usize,
+    /// flat offset of the slice's first element.
+    start: usize,
+    /// per-dim clamped `(start, stop)`.
+    full: Vec<(usize, usize)>,
+    /// source strides (owned, so callers can borrow their data mutably).
+    strides: Vec<usize>,
+    /// the slice's shape.
+    out_dims: Vec<usize>,
+    /// total elements in the slice.
+    numel: usize,
+}
+
+fn plan_slice(shape: &Shape, ranges: &[Range1]) -> SlicePlan {
+    let dims = shape.dims();
+    assert!(ranges.len() <= dims.len());
+    let mut full: Vec<(usize, usize)> = Vec::with_capacity(dims.len());
+    for (i, &d) in dims.iter().enumerate() {
+        let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+        full.push(r.clamp(d));
+    }
+    let out_dims: Vec<usize> = full.iter().map(|&(s, e)| e - s).collect();
+    let numel: usize = out_dims.iter().product();
+    let strides = shape.strides().to_vec();
+    // first dim (from the end) not taken whole bounds the contiguous run
+    let mut k = dims.len();
+    while k > 0 && full[k - 1] == (0, dims[k - 1]) {
+        k -= 1;
+    }
+    let (run, start, outer) = if k == 0 {
+        (shape.numel(), 0, 0)
+    } else {
+        let tail = strides[k - 1];
+        ((full[k - 1].1 - full[k - 1].0) * tail, full[k - 1].0 * tail, k - 1)
+    };
+    let start =
+        start + full[..outer].iter().zip(&strides).map(|(&(s, _), &st)| s * st).sum::<usize>();
+    SlicePlan { outer, run, start, full, strides, out_dims, numel }
+}
+
+impl SlicePlan {
+    /// Invoke `f(offset)` once per contiguous run, in row-major slice
+    /// order; each run is `self.run` elements at `offset`.
+    fn walk(&self, mut f: impl FnMut(usize)) {
+        if self.numel == 0 {
+            return;
+        }
+        let mut idx: Vec<usize> = self.full[..self.outer].iter().map(|&(s, _)| s).collect();
+        let mut off = self.start;
+        loop {
+            f(off);
+            let mut d = self.outer;
+            loop {
+                if d == 0 {
+                    return;
+                }
+                d -= 1;
+                idx[d] += 1;
+                off += self.strides[d];
+                if idx[d] < self.full[d].1 {
+                    break;
+                }
+                off -= self.strides[d] * (self.full[d].1 - self.full[d].0);
+                idx[d] = self.full[d].0;
+            }
+        }
+    }
+}
+
 impl Tensor {
     /// Multi-dimensional slice. `ranges.len()` may be less than the rank;
     /// trailing dimensions are taken whole. The result keeps the sliced
     /// dimensions (no squeezing) — callers reshape if needed.
     pub fn slice(&self, ranges: &[Range1]) -> Tensor {
-        assert!(ranges.len() <= self.rank());
-        let mut full: Vec<(usize, usize)> = Vec::with_capacity(self.rank());
-        for (i, &d) in self.dims().iter().enumerate() {
-            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
-            full.push(r.clamp(d));
-        }
-        let out_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
-        let out_shape = Shape::new(&out_dims);
-        let mut data = Vec::with_capacity(out_shape.numel());
-        // iterate output indices, map to input
-        let mut idx = vec![0usize; self.rank()];
-        for flat in 0..out_shape.numel() {
-            let oidx = out_shape.unravel(flat);
-            for (k, &(s, _)) in full.iter().enumerate() {
-                idx[k] = s + oidx[k];
-            }
-            data.push(self.at(&idx));
-        }
-        Tensor::new(&out_dims, data)
+        let plan = plan_slice(self.shape(), ranges);
+        let mut data = Vec::with_capacity(plan.numel);
+        let src = self.data();
+        plan.walk(|off| data.extend_from_slice(&src[off..off + plan.run]));
+        Tensor::new(&plan.out_dims, data)
     }
 
     /// Assign `src` into the slice of `self` described by `ranges`
     /// (shape of `src` must equal the slice shape). This is the setter
     /// primitive: `layer.output[1, t, :] = v`.
     pub fn slice_assign(&mut self, ranges: &[Range1], src: &Tensor) {
-        assert!(ranges.len() <= self.rank());
-        let mut full: Vec<(usize, usize)> = Vec::with_capacity(self.rank());
-        for (i, &d) in self.dims().iter().enumerate() {
-            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
-            full.push(r.clamp(d));
-        }
-        let slice_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
+        let plan = plan_slice(self.shape(), ranges);
         assert_eq!(
-            slice_dims,
+            &plan.out_dims[..],
             src.dims(),
-            "slice_assign shape mismatch: slice {slice_dims:?} vs src {:?}",
+            "slice_assign shape mismatch: slice {:?} vs src {:?}",
+            plan.out_dims,
             src.dims()
         );
-        let src_shape = Shape::new(&slice_dims);
-        let mut idx = vec![0usize; self.rank()];
-        for flat in 0..src_shape.numel() {
-            let sidx = src_shape.unravel(flat);
-            for (k, &(s, _)) in full.iter().enumerate() {
-                idx[k] = s + sidx[k];
-            }
-            let off = self.shape().offset(&idx);
-            self.data_mut()[off] = src.data()[flat];
-        }
+        let sd = src.data();
+        let dst = self.data_mut();
+        let mut spos = 0usize;
+        plan.walk(|off| {
+            dst[off..off + plan.run].copy_from_slice(&sd[spos..spos + plan.run]);
+            spos += plan.run;
+        });
     }
 
-    /// Fill a slice with a constant (ablation setter).
+    /// Fill a slice with a constant (ablation setter), writing in place —
+    /// no materialized constant tensor.
     pub fn slice_fill(&mut self, ranges: &[Range1], v: f32) {
-        let slice_dims: Vec<usize> = {
-            let mut dims = Vec::new();
-            for (i, &d) in self.dims().iter().enumerate() {
-                let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
-                let (s, e) = r.clamp(d);
-                dims.push(e - s);
-            }
-            dims
-        };
-        let src = Tensor::full(&slice_dims, v);
-        self.slice_assign(ranges, &src);
+        let plan = plan_slice(self.shape(), ranges);
+        let dst = self.data_mut();
+        plan.walk(|off| dst[off..off + plan.run].fill(v));
     }
 
     /// Gather rows along an axis by integer indices.
     pub fn index_select(&self, axis: usize, indices: &[usize]) -> Tensor {
         assert!(axis < self.rank());
-        let mut out_dims = self.dims().to_vec();
+        let dims = self.dims();
+        let d = dims[axis];
+        let inner: usize = dims[axis + 1..].iter().product();
+        let outer: usize = dims[..axis].iter().product();
+        let mut out_dims = dims.to_vec();
         out_dims[axis] = indices.len();
-        let out_shape = Shape::new(&out_dims);
-        let mut data = Vec::with_capacity(out_shape.numel());
-        let mut idx;
-        for flat in 0..out_shape.numel() {
-            idx = out_shape.unravel(flat);
-            idx[axis] = indices[idx[axis]];
-            data.push(self.at(&idx));
+        let src = self.data();
+        let mut data = Vec::with_capacity(outer * indices.len() * inner);
+        for o in 0..outer {
+            let base = o * d * inner;
+            for &j in indices {
+                assert!(j < d, "index {j} out of bounds for dim {axis} (size {d})");
+                data.extend_from_slice(&src[base + j * inner..base + (j + 1) * inner]);
+            }
         }
         Tensor::new(&out_dims, data)
     }
@@ -212,9 +408,96 @@ impl Tensor {
 // Linear algebra & reductions
 // ---------------------------------------------------------------------------
 
+/// Unit-stride inner product with an 8-lane accumulator (autovectorizes).
+/// Reassociates the reduction relative to a sequential sum.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    const LANES: usize = 8;
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (av, bv) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
+        for ((s, &x), &y) in acc.iter_mut().zip(av).zip(bv) {
+            *s += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7])) + tail
+}
+
+/// Pack `b [k, n]` into its transpose `bt [n, k]` with square blocking so
+/// both source rows and destination rows stay cache-resident.
+fn pack_transposed(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    const TB: usize = 32;
+    let mut bt = vec![0.0f32; n * k];
+    let mut i0 = 0;
+    while i0 < k {
+        let i1 = (i0 + TB).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + TB).min(n);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    bt[j * k + i] = b[i * n + j];
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    bt
+}
+
+/// The small-product kernel: k-outer axpy straight over the un-packed
+/// RHS — the seed formulation minus its `av == 0.0` branch. Below the
+/// cutoff the O(k·n) pack would rival the product itself, so small and
+/// single-row (vector × matrix) shapes must not pay it.
+fn matmul_axpy(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if k == 0 {
+        return;
+    }
+    let rows = a.len() / k;
+    for r in 0..rows {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// The blocked kernel: `out[r, j] = dot(a_row_r, bt_row_j)` for all rows
+/// of the chunk. One `bt` row is streamed per [`MATMUL_ROW_BLOCK`] LHS
+/// rows; the block's LHS rows stay in cache across the whole `j` sweep.
+fn matmul_rows(a: &[f32], bt: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if k == 0 {
+        return;
+    }
+    let rows = a.len() / k;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + MATMUL_ROW_BLOCK).min(rows);
+        for j in 0..n {
+            let bj = &bt[j * k..(j + 1) * k];
+            for r in r0..r1 {
+                out[r * n + j] = dot(&a[r * k..(r + 1) * k], bj);
+            }
+        }
+        r0 = r1;
+    }
+}
+
 impl Tensor {
     /// Matrix multiply. Supports 2-D × 2-D and batched N-D × 2-D (the last
-    /// two axes of `self` contract with `other`).
+    /// two axes of `self` contract with `other`). See the module docs for
+    /// the blocking/packing scheme; agreement with [`naive::matmul`] is
+    /// within reassociation tolerance (≤ 1e-4 on unit-scale data).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         assert_eq!(other.rank(), 2, "rhs of matmul must be 2-D");
         let (k2, n) = (other.dims()[0], other.dims()[1]);
@@ -223,18 +506,31 @@ impl Tensor {
         let rows: usize = self.numel() / k;
         let mut out = vec![0.0f32; rows * n];
         let a = self.data();
-        let b = other.data();
-        for r in 0..rows {
-            let arow = &a[r * k..(r + 1) * k];
-            let orow = &mut out[r * n..(r + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+        let work = rows.saturating_mul(n).saturating_mul(k);
+        if work < MATMUL_SEQ_CUTOFF || rows == 1 {
+            // sequential small-size / single-row path: no pack, no
+            // dispatch — the O(k·n) pack has nothing to amortize over
+            matmul_axpy(a, other.data(), &mut out, k, n);
+        } else {
+            let pool = threadpool::compute_pool();
+            let bt = pack_transposed(other.data(), k, n);
+            if pool.size() == 1 {
+                matmul_rows(a, &bt, &mut out, k, n);
+            } else {
+                // row-chunk parallelism: disjoint output row bands, shared
+                // read-only A and packed B
+                let per = par_chunk_units(rows, pool);
+                let bts: &[f32] = &bt;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                    .chunks_mut(per * n)
+                    .enumerate()
+                    .map(|(ci, oc)| {
+                        let ac = &a[ci * per * k..ci * per * k + (oc.len() / n) * k];
+                        Box::new(move || matmul_rows(ac, bts, oc, k, n))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.scoped(jobs);
             }
         }
         let mut out_dims = self.dims().to_vec();
@@ -244,39 +540,40 @@ impl Tensor {
 
     /// Softmax over the last axis (numerically stabilized).
     pub fn softmax_last(&self) -> Tensor {
-        let d = *self.dims().last().expect("softmax on scalar");
-        let mut data = self.data().to_vec();
-        for row in data.chunks_mut(d) {
-            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let mut sum = 0.0;
-            for v in row.iter_mut() {
-                *v = (*v - m).exp();
-                sum += *v;
-            }
-            for v in row.iter_mut() {
-                *v /= sum;
-            }
-        }
-        Tensor::new(self.dims(), data)
+        let mut out = self.clone();
+        out.softmax_last_inplace();
+        out
     }
 
-    /// Argmax over the last axis; result drops that axis.
+    /// In-place softmax over the last axis. Rows are independent, so
+    /// large-vocab logits are processed row-parallel (identical numerics).
+    pub fn softmax_last_inplace(&mut self) {
+        let d = *self.dims().last().expect("softmax on scalar");
+        par_chunks_mut(self.data_mut(), d, move |chunk| softmax_rows(chunk, d));
+    }
+
+    /// Argmax over the last axis; result drops that axis. Row-parallel for
+    /// large inputs (the greedy-decode large-vocab path).
     pub fn argmax_last(&self) -> Tensor {
         let d = *self.dims().last().expect("argmax on scalar");
         let out_dims = &self.dims()[..self.rank() - 1];
-        let data: Vec<f32> = self
-            .data()
-            .chunks(d)
-            .map(|row| {
-                let mut best = 0usize;
-                for (i, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = i;
-                    }
-                }
-                best as f32
-            })
-            .collect();
+        let rows = self.numel() / d;
+        let mut data = vec![0.0f32; rows];
+        let src = self.data();
+        let pool = threadpool::compute_pool();
+        if self.numel() < PAR_MIN_ELEMS || pool.size() == 1 {
+            argmax_rows(src, &mut data, d);
+        } else {
+            let per = par_chunk_units(rows, pool);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(per)
+                .zip(src.chunks(per * d))
+                .map(|(oc, sc)| {
+                    Box::new(move || argmax_rows(sc, oc, d)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped(jobs);
+        }
         Tensor::new(out_dims, data)
     }
 
@@ -288,17 +585,29 @@ impl Tensor {
         self.sum_all() / self.numel() as f32
     }
 
-    /// Reduce-mean over one axis.
+    /// Reduce-mean over one axis: contiguous inner-row accumulation
+    /// instead of a per-element `unravel`. Accumulation order matches the
+    /// naive oracle (ascending along the reduced axis), so results are
+    /// bit-exact.
     pub fn mean_axis(&self, axis: usize) -> Tensor {
         assert!(axis < self.rank());
-        let mut out_dims = self.dims().to_vec();
-        let n = out_dims.remove(axis);
-        let out_shape = Shape::new(&out_dims);
-        let mut data = vec![0.0f32; out_shape.numel()];
-        for flat in 0..self.numel() {
-            let mut idx = self.shape().unravel(flat);
-            idx.remove(axis);
-            data[out_shape.offset(&idx)] += self.data()[flat];
+        let dims = self.dims();
+        let n = dims[axis];
+        let inner: usize = dims[axis + 1..].iter().product();
+        let outer: usize = dims[..axis].iter().product();
+        let mut out_dims = dims.to_vec();
+        out_dims.remove(axis);
+        let src = self.data();
+        let mut data = vec![0.0f32; outer * inner];
+        for o in 0..outer {
+            let ibase = o * n * inner;
+            let acc = &mut data[o * inner..(o + 1) * inner];
+            for a in 0..n {
+                let row = &src[ibase + a * inner..ibase + (a + 1) * inner];
+                for (x, &y) in acc.iter_mut().zip(row) {
+                    *x += y;
+                }
+            }
         }
         for v in data.iter_mut() {
             *v /= n as f32;
@@ -311,7 +620,8 @@ impl Tensor {
         self.data().iter().map(|&x| x * x).sum::<f32>().sqrt()
     }
 
-    /// Concatenate along an axis.
+    /// Concatenate along an axis: per-part block memcpy into the output's
+    /// strided destination rows.
     pub fn concat(parts: &[&Tensor], axis: usize) -> Tensor {
         assert!(!parts.is_empty());
         let rank = parts[0].rank();
@@ -324,22 +634,24 @@ impl Tensor {
                 }
             }
         }
+        let inner: usize = parts[0].dims()[axis + 1..].iter().product();
+        let outer: usize = parts[0].dims()[..axis].iter().product();
+        let out_axis: usize = parts.iter().map(|p| p.dims()[axis]).sum();
         let mut out_dims = parts[0].dims().to_vec();
-        out_dims[axis] = parts.iter().map(|p| p.dims()[axis]).sum();
-        let out_shape = Shape::new(&out_dims);
-        let mut out = Tensor::zeros(&out_dims);
+        out_dims[axis] = out_axis;
+        let mut data = vec![0.0f32; outer * out_axis * inner];
         let mut offset = 0usize;
         for p in parts {
-            let mut idx;
-            for flat in 0..p.numel() {
-                idx = p.shape().unravel(flat);
-                idx[axis] += offset;
-                let o = out_shape.offset(&idx);
-                out.data_mut()[o] = p.data()[flat];
+            let pa = p.dims()[axis];
+            let block = pa * inner;
+            let src = p.data();
+            for o in 0..outer {
+                let dst0 = (o * out_axis + offset) * inner;
+                data[dst0..dst0 + block].copy_from_slice(&src[o * block..(o + 1) * block]);
             }
-            offset += p.dims()[axis];
+            offset += pa;
         }
-        out
+        Tensor::new(&out_dims, data)
     }
 
     /// Split into equal chunks along an axis.
@@ -361,13 +673,34 @@ impl Tensor {
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.dims()[0], self.dims()[1]);
-        let mut data = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                data[j * m + i] = self.data()[i * n + j];
+        let data = pack_transposed(self.data(), m, n);
+        Tensor::new(&[n, m], data)
+    }
+}
+
+fn softmax_rows(chunk: &mut [f32], d: usize) {
+    for row in chunk.chunks_mut(d) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+fn argmax_rows(src: &[f32], out: &mut [f32], d: usize) {
+    for (row, o) in src.chunks(d).zip(out.iter_mut()) {
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
             }
         }
-        Tensor::new(&[n, m], data)
+        *o = best as f32;
     }
 }
 
@@ -386,6 +719,236 @@ pub fn logit_diff(logits: &Tensor, target: usize, foil: usize) -> Tensor {
         })
         .collect();
     Tensor::new(&[batch], data)
+}
+
+// ---------------------------------------------------------------------------
+// Naive oracles
+// ---------------------------------------------------------------------------
+
+/// The seed (pre-optimization) kernels, retained verbatim as oracles.
+///
+/// The optimized kernels above must stay bit-compatible with these
+/// (tolerance-compatible for the reassociated matmul reduction); the
+/// contract is enforced by the unit tests below and the randomized
+/// property tests in `rust/tests/props.rs`, and `benches/kernels.rs`
+/// reports speedups relative to them. Nothing here runs on a hot path.
+pub mod naive {
+    use super::super::{Shape, Tensor};
+    use super::Range1;
+
+    /// Seed broadcast elementwise op: per-element `unravel` + index `Vec`s.
+    pub fn binop(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        if a.dims() == b.dims() {
+            let data = a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
+            return Tensor::new(a.dims(), data);
+        }
+        let out_dims = Shape::broadcast(a.dims(), b.dims())
+            .unwrap_or_else(|| panic!("broadcast {:?} vs {:?}", a.dims(), b.dims()));
+        let out_shape = Shape::new(&out_dims);
+        let mut data = Vec::with_capacity(out_shape.numel());
+        let ra = out_dims.len() - a.rank();
+        let rb = out_dims.len() - b.rank();
+        for flat in 0..out_shape.numel() {
+            let idx = out_shape.unravel(flat);
+            let ia: Vec<usize> = idx[ra..]
+                .iter()
+                .zip(a.dims())
+                .map(|(&i, &d)| if d == 1 { 0 } else { i })
+                .collect();
+            let ib: Vec<usize> = idx[rb..]
+                .iter()
+                .zip(b.dims())
+                .map(|(&i, &d)| if d == 1 { 0 } else { i })
+                .collect();
+            data.push(f(a.at(&ia), b.at(&ib)));
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// Seed matmul: k-outer axpy with the `av == 0.0` skip.
+    pub fn matmul(lhs: &Tensor, other: &Tensor) -> Tensor {
+        assert_eq!(other.rank(), 2, "rhs of matmul must be 2-D");
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        let k = *lhs.dims().last().expect("matmul on scalar");
+        assert_eq!(k, k2, "contraction mismatch {k} vs {k2}");
+        let rows: usize = lhs.numel() / k;
+        let mut out = vec![0.0f32; rows * n];
+        let a = lhs.data();
+        let b = other.data();
+        for r in 0..rows {
+            let arow = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        let mut out_dims = lhs.dims().to_vec();
+        *out_dims.last_mut().unwrap() = n;
+        Tensor::new(&out_dims, out)
+    }
+
+    /// Seed slice: output-index `unravel` per element.
+    pub fn slice(t: &Tensor, ranges: &[Range1]) -> Tensor {
+        assert!(ranges.len() <= t.rank());
+        let mut full: Vec<(usize, usize)> = Vec::with_capacity(t.rank());
+        for (i, &d) in t.dims().iter().enumerate() {
+            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+            full.push(r.clamp(d));
+        }
+        let out_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
+        let out_shape = Shape::new(&out_dims);
+        let mut data = Vec::with_capacity(out_shape.numel());
+        let mut idx = vec![0usize; t.rank()];
+        for flat in 0..out_shape.numel() {
+            let oidx = out_shape.unravel(flat);
+            for (k, &(s, _)) in full.iter().enumerate() {
+                idx[k] = s + oidx[k];
+            }
+            data.push(t.at(&idx));
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// Seed slice_assign: per-element offset computation.
+    pub fn slice_assign(t: &mut Tensor, ranges: &[Range1], src: &Tensor) {
+        assert!(ranges.len() <= t.rank());
+        let mut full: Vec<(usize, usize)> = Vec::with_capacity(t.rank());
+        for (i, &d) in t.dims().iter().enumerate() {
+            let r = ranges.get(i).copied().unwrap_or_else(Range1::all);
+            full.push(r.clamp(d));
+        }
+        let slice_dims: Vec<usize> = full.iter().map(|(s, e)| e - s).collect();
+        assert_eq!(
+            slice_dims,
+            src.dims(),
+            "slice_assign shape mismatch: slice {slice_dims:?} vs src {:?}",
+            src.dims()
+        );
+        let src_shape = Shape::new(&slice_dims);
+        let mut idx = vec![0usize; t.rank()];
+        for flat in 0..src_shape.numel() {
+            let sidx = src_shape.unravel(flat);
+            for (k, &(s, _)) in full.iter().enumerate() {
+                idx[k] = s + sidx[k];
+            }
+            let off = t.shape().offset(&idx);
+            t.data_mut()[off] = src.data()[flat];
+        }
+    }
+
+    /// Seed index_select: per-element `unravel` and re-offset.
+    pub fn index_select(t: &Tensor, axis: usize, indices: &[usize]) -> Tensor {
+        assert!(axis < t.rank());
+        let mut out_dims = t.dims().to_vec();
+        out_dims[axis] = indices.len();
+        let out_shape = Shape::new(&out_dims);
+        let mut data = Vec::with_capacity(out_shape.numel());
+        let mut idx;
+        for flat in 0..out_shape.numel() {
+            idx = out_shape.unravel(flat);
+            idx[axis] = indices[idx[axis]];
+            data.push(t.at(&idx));
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// Seed mean_axis: flat scatter-accumulate via `unravel`.
+    pub fn mean_axis(t: &Tensor, axis: usize) -> Tensor {
+        assert!(axis < t.rank());
+        let mut out_dims = t.dims().to_vec();
+        let n = out_dims.remove(axis);
+        let out_shape = Shape::new(&out_dims);
+        let mut data = vec![0.0f32; out_shape.numel()];
+        for flat in 0..t.numel() {
+            let mut idx = t.shape().unravel(flat);
+            idx.remove(axis);
+            data[out_shape.offset(&idx)] += t.data()[flat];
+        }
+        for v in data.iter_mut() {
+            *v /= n as f32;
+        }
+        Tensor::new(&out_dims, data)
+    }
+
+    /// Seed concat: per-element `unravel` and re-offset into the output.
+    pub fn concat(parts: &[&Tensor], axis: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let rank = parts[0].rank();
+        assert!(axis < rank);
+        let mut out_dims = parts[0].dims().to_vec();
+        out_dims[axis] = parts.iter().map(|p| p.dims()[axis]).sum();
+        let out_shape = Shape::new(&out_dims);
+        let mut out = Tensor::zeros(&out_dims);
+        let mut offset = 0usize;
+        for p in parts {
+            let mut idx;
+            for flat in 0..p.numel() {
+                idx = p.shape().unravel(flat);
+                idx[axis] += offset;
+                let o = out_shape.offset(&idx);
+                out.data_mut()[o] = p.data()[flat];
+            }
+            offset += p.dims()[axis];
+        }
+        out
+    }
+
+    /// Seed softmax: sequential over rows.
+    pub fn softmax_last(t: &Tensor) -> Tensor {
+        let d = *t.dims().last().expect("softmax on scalar");
+        let mut data = t.data().to_vec();
+        for row in data.chunks_mut(d) {
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Tensor::new(t.dims(), data)
+    }
+
+    /// Seed argmax: sequential over rows.
+    pub fn argmax_last(t: &Tensor) -> Tensor {
+        let d = *t.dims().last().expect("argmax on scalar");
+        let out_dims = &t.dims()[..t.rank() - 1];
+        let data: Vec<f32> = t
+            .data()
+            .chunks(d)
+            .map(|row| {
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best as f32
+            })
+            .collect();
+        Tensor::new(out_dims, data)
+    }
+
+    /// Seed GELU: per-element map with a fresh output allocation.
+    pub fn gelu(t: &Tensor) -> Tensor {
+        let data = t
+            .data()
+            .iter()
+            .map(|&x| {
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            })
+            .collect();
+        Tensor::new(t.dims(), data)
+    }
 }
 
 #[cfg(test)]
@@ -411,6 +974,16 @@ mod tests {
     }
 
     #[test]
+    fn broadcast_middle_size_one_dim() {
+        // [2, 1, 3] + [2, 3] broadcasts over the middle and leading dims
+        let a = Tensor::iota(&[2, 1, 3]);
+        let b = Tensor::iota(&[2, 3]);
+        let c = a.add(&b);
+        assert_eq!(c.dims(), &[2, 2, 3]);
+        assert_eq!(c, naive::binop(&a, &b, |x, y| x + y));
+    }
+
+    #[test]
     #[should_panic]
     fn broadcast_incompatible_panics() {
         let _ = Tensor::iota(&[2, 3]).add(&Tensor::iota(&[4]));
@@ -433,6 +1006,21 @@ mod tests {
     }
 
     #[test]
+    fn slice_empty_range() {
+        let t = Tensor::iota(&[3, 4]);
+        let s = t.slice(&[Range1::new(1, 1)]);
+        assert_eq!(s.dims(), &[0, 4]);
+        assert_eq!(s.numel(), 0);
+    }
+
+    #[test]
+    fn slice_full_tensor_is_copy() {
+        let t = Tensor::iota(&[2, 3, 4]);
+        assert_eq!(t.slice(&[]), t);
+        assert_eq!(t.slice(&[Range1::all(), Range1::all()]), t);
+    }
+
+    #[test]
     fn slice_assign_round_trip() {
         let mut t = Tensor::zeros(&[3, 3]);
         let patch = Tensor::full(&[1, 3], 7.0);
@@ -448,6 +1036,14 @@ mod tests {
         let mut t = Tensor::iota(&[2, 4]);
         t.slice_fill(&[Range1::all(), Range1::new(1, 3)], 0.0);
         assert_eq!(t.data(), &[0.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn slice_fill_empty_is_noop() {
+        let mut t = Tensor::iota(&[2, 4]);
+        let before = t.clone();
+        t.slice_fill(&[Range1::new(1, 1)], 9.0);
+        assert_eq!(t, before);
     }
 
     #[test]
@@ -477,6 +1073,17 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_oracle_above_parallel_cutoff() {
+        // big enough to take the parallel blocked path
+        let mut rng = crate::util::Prng::new(7);
+        let a = Tensor::from_randn(&[96, 80], &mut rng, 1.0);
+        let b = Tensor::from_randn(&[80, 72], &mut rng, 1.0);
+        let got = a.matmul(&b);
+        let want = naive::matmul(&a, &b);
+        assert!(got.allclose(&want, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
     fn softmax_rows_sum_to_one() {
         let t = Tensor::iota(&[4, 7]);
         let s = t.softmax_last();
@@ -497,11 +1104,30 @@ mod tests {
     }
 
     #[test]
+    fn softmax_inplace_matches_pure_and_parallel_matches_oracle() {
+        let mut rng = crate::util::Prng::new(11);
+        // large enough to cross the row-parallel threshold
+        let t = Tensor::from_randn(&[64, 1024], &mut rng, 2.0);
+        let pure = t.softmax_last();
+        let mut inplace = t.clone();
+        inplace.softmax_last_inplace();
+        assert_eq!(pure, inplace);
+        assert_eq!(pure, naive::softmax_last(&t));
+    }
+
+    #[test]
     fn argmax_last_axis() {
         let t = Tensor::new(&[2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]);
         let a = t.argmax_last();
         assert_eq!(a.dims(), &[2]);
         assert_eq!(a.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn argmax_parallel_matches_oracle() {
+        let mut rng = crate::util::Prng::new(13);
+        let t = Tensor::from_randn(&[128, 512], &mut rng, 1.0);
+        assert_eq!(t.argmax_last(), naive::argmax_last(&t));
     }
 
     #[test]
@@ -569,11 +1195,37 @@ mod tests {
     }
 
     #[test]
+    fn scale_add_assign_is_fused_axpy() {
+        let mut a = Tensor::iota(&[2, 3]);
+        let b = Tensor::full(&[2, 3], 2.0);
+        let expect = a.add(&b.scale(-0.5));
+        a.scale_add_assign(-0.5, &b);
+        assert_eq!(a, expect);
+    }
+
+    #[test]
     fn gelu_known_values() {
         let t = Tensor::new(&[3], vec![-10.0, 0.0, 10.0]);
         let g = t.gelu();
         assert!(g.data()[0].abs() < 1e-3);
         assert_eq!(g.data()[1], 0.0);
         assert!((g.data()[2] - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_inplace_matches_oracle_above_parallel_threshold() {
+        let mut rng = crate::util::Prng::new(17);
+        let t = Tensor::from_randn(&[80, 1024], &mut rng, 1.0);
+        let mut got = t.clone();
+        got.gelu_inplace();
+        assert_eq!(got, naive::gelu(&t));
+    }
+
+    #[test]
+    fn scale_inplace_matches_scale() {
+        let t = Tensor::iota(&[4, 4]);
+        let mut got = t.clone();
+        got.scale_inplace(2.5);
+        assert_eq!(got, t.scale(2.5));
     }
 }

@@ -26,12 +26,22 @@ impl Sgd {
         if self.velocity.is_empty() {
             self.velocity = params.iter().map(|p| Tensor::zeros(p.dims())).collect();
         }
+        let (lr, momentum) = (self.lr, self.momentum);
         for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
             assert_eq!(p.dims(), g.dims());
-            for i in 0..p.numel() {
-                let vel = self.momentum * v.data()[i] + g.data()[i];
-                v.data_mut()[i] = vel;
-                p.data_mut()[i] -= self.lr * vel;
+            if momentum == 0.0 {
+                // velocity is identically the gradient: one fused axpy
+                p.scale_add_assign(-lr, g);
+                v.data_mut().copy_from_slice(g.data());
+                continue;
+            }
+            let pd = p.data_mut();
+            let gd = g.data();
+            let vd = v.data_mut();
+            for ((pv, &gv), vv) in pd.iter_mut().zip(gd).zip(vd.iter_mut()) {
+                let vel = momentum * *vv + gv;
+                *vv = vel;
+                *pv -= lr * vel;
             }
         }
     }
@@ -62,16 +72,22 @@ impl Adam {
         self.t += 1;
         let b1t = 1.0 - self.beta1.powi(self.t);
         let b2t = 1.0 - self.beta2.powi(self.t);
+        let (lr, b1, b2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
         for (((p, g), m), v) in params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v) {
-            for i in 0..p.numel() {
-                let gi = g.data()[i];
-                let mi = self.beta1 * m.data()[i] + (1.0 - self.beta1) * gi;
-                let vi = self.beta2 * v.data()[i] + (1.0 - self.beta2) * gi * gi;
-                m.data_mut()[i] = mi;
-                v.data_mut()[i] = vi;
+            let pd = p.data_mut();
+            let gd = g.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            for (((pv, &gi), mv), vv) in
+                pd.iter_mut().zip(gd).zip(md.iter_mut()).zip(vd.iter_mut())
+            {
+                let mi = b1 * *mv + (1.0 - b1) * gi;
+                let vi = b2 * *vv + (1.0 - b2) * gi * gi;
+                *mv = mi;
+                *vv = vi;
                 let mhat = mi / b1t;
                 let vhat = vi / b2t;
-                p.data_mut()[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                *pv -= lr * mhat / (vhat.sqrt() + eps);
             }
         }
     }
@@ -82,11 +98,12 @@ pub fn mse(pred: &Tensor, target: &Tensor) -> (f32, Tensor) {
     assert_eq!(pred.dims(), target.dims());
     let n = pred.numel() as f32;
     let mut grad = Tensor::zeros(pred.dims());
+    let gd = grad.data_mut();
     let mut loss = 0.0f32;
-    for i in 0..pred.numel() {
-        let d = pred.data()[i] - target.data()[i];
+    for ((gv, &pv), &tv) in gd.iter_mut().zip(pred.data()).zip(target.data()) {
+        let d = pv - tv;
         loss += d * d;
-        grad.data_mut()[i] = 2.0 * d / n;
+        *gv = 2.0 * d / n;
     }
     (loss / n, grad)
 }
@@ -116,7 +133,12 @@ impl LinearProbe {
         // grads: dW = xᵀ·g ; db = Σ_rows g
         let gw = x.transpose2().matmul(&gout);
         let gb = gout.mean_axis(0).scale(gout.dims()[0] as f32);
-        let mut params = [self.w.clone(), self.b.clone()];
+        // hand the parameters to the optimizer by move (scalar placeholders
+        // are one element each) instead of cloning full weight matrices
+        let mut params = [
+            std::mem::replace(&mut self.w, Tensor::scalar(0.0)),
+            std::mem::replace(&mut self.b, Tensor::scalar(0.0)),
+        ];
         opt.step(&mut params, &[gw, gb]);
         let [w, b] = params;
         self.w = w;

@@ -53,6 +53,26 @@ impl Shape {
         idx
     }
 
+    /// Strides for walking this shape's data with a multi-index of the
+    /// broadcast result `out_dims` (numpy rules): size-1 dims and missing
+    /// leading dims get stride 0, so they re-read the same element instead
+    /// of requiring a materialized expansion.
+    pub fn broadcast_strides(&self, out_dims: &[usize]) -> Vec<usize> {
+        assert!(self.rank() <= out_dims.len(), "broadcast to lower rank");
+        let lead = out_dims.len() - self.rank();
+        let mut out = vec![0usize; out_dims.len()];
+        for i in 0..self.rank() {
+            let d = self.dims[i];
+            assert!(
+                d == out_dims[lead + i] || d == 1,
+                "dim {i} (size {d}) not broadcastable to {}",
+                out_dims[lead + i]
+            );
+            out[lead + i] = if d == 1 && out_dims[lead + i] != 1 { 0 } else { self.strides[i] };
+        }
+        out
+    }
+
     /// Broadcast two shapes (numpy rules); None if incompatible.
     pub fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
         let rank = a.len().max(b.len());
@@ -105,6 +125,22 @@ mod tests {
     #[should_panic]
     fn offset_out_of_bounds() {
         Shape::new(&[2, 2]).offset(&[2, 0]);
+    }
+
+    #[test]
+    fn broadcast_strides_zero_out_expanded_dims() {
+        // [3] broadcast into [2, 3]: leading dim is virtual (stride 0)
+        let s = Shape::new(&[3]);
+        assert_eq!(s.broadcast_strides(&[2, 3]), vec![0, 1]);
+        // [2, 1] broadcast into [2, 4]: size-1 dim re-reads (stride 0)
+        let s = Shape::new(&[2, 1]);
+        assert_eq!(s.broadcast_strides(&[2, 4]), vec![1, 0]);
+        // scalar broadcast anywhere: all strides 0
+        let s = Shape::new(&[]);
+        assert_eq!(s.broadcast_strides(&[2, 2]), vec![0, 0]);
+        // exact match: native strides
+        let s = Shape::new(&[2, 3]);
+        assert_eq!(s.broadcast_strides(&[2, 3]), vec![3, 1]);
     }
 
     #[test]

@@ -1,17 +1,44 @@
 //! Fixed-size worker thread pool.
 //!
 //! Powers the NDIF HTTP frontend (one job per accepted connection), the
-//! load-test client fleet, and the simulated tensor-parallel shard workers.
-//! `tokio` is unavailable offline; a plain pool over `std::sync::mpsc` is
-//! sufficient because request handling is dominated by model execution,
-//! not connection counts.
+//! load-test client fleet, the simulated tensor-parallel shard workers,
+//! and — via [`compute_pool`] — the data-parallel tensor kernels in
+//! [`crate::tensor::ops`]. `tokio` is unavailable offline; a plain pool
+//! over `std::sync::mpsc` is sufficient because request handling is
+//! dominated by model execution, not connection counts.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Thread-name prefix of the shared compute pool's workers; used to detect
+/// (and serialize) accidental nested kernel dispatch, which would otherwise
+/// deadlock a bounded pool.
+const COMPUTE_PREFIX: &str = "nnscope-compute";
+
+static COMPUTE: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The shared lazy compute pool used by the parallel tensor kernels.
+///
+/// Sized from `NNSCOPE_COMPUTE_THREADS` if set (a value of `1` disables
+/// kernel parallelism), otherwise from `std::thread::available_parallelism`.
+/// Created on first use so binaries that never touch a large tensor spawn
+/// no extra threads.
+pub fn compute_pool() -> &'static ThreadPool {
+    COMPUTE.get_or_init(|| {
+        let size = std::env::var("NNSCOPE_COMPUTE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ThreadPool::with_name(size, COMPUTE_PREFIX)
+    })
+}
 
 /// A fixed pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
@@ -23,6 +50,11 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn `size` workers (≥1 enforced).
     pub fn new(size: usize) -> ThreadPool {
+        ThreadPool::with_name(size, "nnscope-worker")
+    }
+
+    /// Spawn `size` workers with a custom thread-name prefix.
+    pub fn with_name(size: usize, prefix: &str) -> ThreadPool {
         let size = size.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -32,7 +64,7 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 let inf = Arc::clone(&in_flight);
                 std::thread::Builder::new()
-                    .name(format!("nnscope-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || loop {
                         let job = {
                             let guard = rx.lock().unwrap();
@@ -76,6 +108,83 @@ impl ThreadPool {
 
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Run a set of jobs that may borrow from the caller's stack, blocking
+    /// until every job has finished (the fork-join primitive behind the
+    /// parallel tensor kernels). Unlike [`ThreadPool::wait_idle`], waiting
+    /// is scoped to exactly these jobs, so concurrent callers sharing the
+    /// pool never wait on each other's work.
+    ///
+    /// The last job runs inline on the caller's thread (one fewer
+    /// queue/wake round-trip, and single-job calls never leave the caller).
+    /// If the caller is itself a compute-pool worker — nested kernel
+    /// dispatch — all jobs run inline, which is slower but cannot deadlock
+    /// the bounded pool.
+    pub fn scoped<'scope>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let Some(inline) = jobs.pop() else { return };
+        let nested =
+            std::thread::current().name().is_some_and(|n| n.starts_with(COMPUTE_PREFIX));
+        if nested {
+            for job in jobs {
+                job();
+            }
+            inline();
+            return;
+        }
+
+        /// Counts a job as finished even if it unwinds, so a panicking
+        /// kernel cannot leave `scoped` blocked forever (the panic still
+        /// kills its worker thread, as in `execute`).
+        struct Done(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for Done {
+            fn drop(&mut self) {
+                let (count, cv) = &*self.0;
+                *count.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+        }
+
+        /// Blocks until all queued jobs finish — on normal return *and* on
+        /// unwind out of the inline job, so borrowed data can never be
+        /// freed while a worker still touches it.
+        struct WaitAll<'a> {
+            sync: &'a (Mutex<usize>, Condvar),
+            n: usize,
+        }
+        impl Drop for WaitAll<'_> {
+            fn drop(&mut self) {
+                let (count, cv) = self.sync;
+                let mut finished = count.lock().unwrap();
+                while *finished < self.n {
+                    finished = cv.wait(finished).unwrap();
+                }
+            }
+        }
+
+        let n = jobs.len();
+        let sync = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for job in jobs {
+            // SAFETY: `scoped` does not return until the completion count
+            // reaches `n`, and the count for each job is bumped (via the
+            // `Done` drop guard) only after the job has run or unwound —
+            // so every borrow captured in `job` strictly outlives its
+            // execution. The transmute only erases the `'scope` lifetime;
+            // the fat-pointer representation is identical.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let done = Done(Arc::clone(&sync));
+            self.execute(move || {
+                let _done = done;
+                job();
+            });
+        }
+        let _wait = WaitAll { sync: &*sync, n };
+        inline();
     }
 }
 
@@ -171,5 +280,98 @@ mod tests {
     fn pool_size_minimum_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_caller_data() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1024];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(100)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    Box::new(move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (c * 100 + i) as u64;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scoped(jobs);
+        }
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[test]
+    fn scoped_empty_and_single_job() {
+        let pool = ThreadPool::new(2);
+        pool.scoped(Vec::new());
+        let mut hit = false;
+        pool.scoped(vec![Box::new(|| hit = true) as Box<dyn FnOnce() + Send + '_>]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn scoped_concurrent_callers_do_not_cross_wait() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut acc = vec![0u64; 64];
+                    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = acc
+                        .chunks_mut(16)
+                        .map(|chunk| {
+                            Box::new(move || {
+                                for v in chunk.iter_mut() {
+                                    *v += 1;
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.scoped(jobs);
+                    acc.iter().sum::<u64>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 64);
+        }
+    }
+
+    #[test]
+    fn compute_pool_is_shared_and_nonempty() {
+        let a = compute_pool() as *const ThreadPool;
+        let b = compute_pool() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(compute_pool().size() >= 1);
+    }
+
+    #[test]
+    fn nested_scoped_dispatch_runs_inline() {
+        // scoped jobs that themselves call scoped must not deadlock, even
+        // when they land on compute-pool workers (nested dispatch is
+        // detected by thread name and serialized inline)
+        let hits = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                let hits = Arc::clone(&hits);
+                Box::new(move || {
+                    let inner_jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let hits = Arc::clone(&hits);
+                            Box::new(move || {
+                                hits.fetch_add(1, Ordering::SeqCst);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    compute_pool().scoped(inner_jobs);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        compute_pool().scoped(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
     }
 }

@@ -2,6 +2,14 @@
 //! graphs must (a) round-trip the wire format, (b) agree between scan's
 //! predicted shapes and executed shapes, (c) never corrupt co-tenant
 //! neighbours, and (d) never crash the server even when mangled.
+//!
+//! The second half of this file holds the kernel oracle-parity tests:
+//! every optimized tensor kernel is compared against the retained seed
+//! implementation (`nnscope::tensor::ops::naive`) across randomized
+//! shapes — broadcast rank mismatches and size-1 dims, non-contiguous and
+//! empty slices, and sizes on both sides of the parallel-dispatch
+//! cutoffs. Elementwise/slicing kernels must match exactly; matmul (a
+//! reassociated reduction) within 1e-4.
 
 use nnscope::client::Trace;
 use nnscope::graph::serde as gserde;
@@ -174,6 +182,218 @@ fn mangled_requests_never_crash_the_server() {
     let s = tr.save(h);
     let res = tr.run_remote(&client).unwrap();
     assert_eq!(res.get(s).dims(), &[1, 16, 32]);
+}
+
+// ---------------------------------------------------------------------------
+// Kernel oracle parity
+// ---------------------------------------------------------------------------
+
+use nnscope::tensor::ops::naive;
+
+/// Random dims, each in `[1, 6)`, rank in `[1, max_rank]`.
+fn rand_dims(rng: &mut Prng, max_rank: usize) -> Vec<usize> {
+    let rank = rng.range(1, max_rank + 1);
+    (0..rank).map(|_| rng.range(1, 6)).collect()
+}
+
+/// Derive a broadcast-compatible operand shape from `base`: drop a random
+/// number of leading dims (rank mismatch), then squash random surviving
+/// dims to size 1 (expansion).
+fn rand_broadcast_operand(rng: &mut Prng, base: &[usize]) -> Vec<usize> {
+    let drop = rng.range(0, base.len() + 1);
+    base[drop..]
+        .iter()
+        .map(|&d| if rng.below(3) == 0 { 1 } else { d })
+        .collect()
+}
+
+fn rand_tensor(rng: &mut Prng, dims: &[usize]) -> Tensor {
+    Tensor::from_randn(dims, rng, 1.0)
+}
+
+/// Random clamped ranges over a prefix of `dims`, with whole, partial,
+/// point, and empty ranges all represented.
+fn rand_ranges(rng: &mut Prng, dims: &[usize]) -> Vec<Range1> {
+    let prefix = rng.range(0, dims.len() + 1);
+    dims[..prefix]
+        .iter()
+        .map(|&d| match rng.below(4) {
+            0 => Range1::all(),
+            1 => {
+                let s = rng.range(0, d);
+                Range1::one(s)
+            }
+            2 => {
+                let s = rng.range(0, d + 1);
+                Range1::new(s, s) // empty
+            }
+            _ => {
+                let s = rng.range(0, d);
+                let e = rng.range(s + 1, d + 1);
+                Range1::new(s, e)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn broadcast_binop_matches_naive_across_random_shapes() {
+    let mut rng = Prng::new(0xB40C);
+    for case in 0..200 {
+        let base = rand_dims(&mut rng, 4);
+        let a = rand_tensor(&mut rng, &rand_broadcast_operand(&mut rng, &base));
+        let b = rand_tensor(&mut rng, &rand_broadcast_operand(&mut rng, &base));
+        assert_eq!(a.add(&b), naive::binop(&a, &b, |x, y| x + y), "case {case}: add");
+        assert_eq!(a.mul(&b), naive::binop(&a, &b, |x, y| x * y), "case {case}: mul");
+        assert_eq!(a.sub(&b), naive::binop(&a, &b, |x, y| x - y), "case {case}: sub");
+    }
+}
+
+#[test]
+fn slice_matches_naive_including_noncontiguous_and_empty() {
+    let mut rng = Prng::new(0x511CE);
+    for case in 0..200 {
+        let dims = rand_dims(&mut rng, 4);
+        let t = rand_tensor(&mut rng, &dims);
+        let ranges = rand_ranges(&mut rng, &dims);
+        assert_eq!(t.slice(&ranges), naive::slice(&t, &ranges), "case {case}: {ranges:?}");
+    }
+}
+
+#[test]
+fn slice_assign_matches_naive() {
+    let mut rng = Prng::new(0xA551);
+    for case in 0..200 {
+        let dims = rand_dims(&mut rng, 4);
+        let t = rand_tensor(&mut rng, &dims);
+        let ranges = rand_ranges(&mut rng, &dims);
+        let src = rand_tensor(&mut rng, naive::slice(&t, &ranges).dims());
+        let mut got = t.clone();
+        got.slice_assign(&ranges, &src);
+        let mut want = t.clone();
+        naive::slice_assign(&mut want, &ranges, &src);
+        assert_eq!(got, want, "case {case}: {ranges:?}");
+    }
+}
+
+#[test]
+fn slice_fill_matches_assign_of_constant() {
+    let mut rng = Prng::new(0xF111);
+    for case in 0..200 {
+        let dims = rand_dims(&mut rng, 4);
+        let t = rand_tensor(&mut rng, &dims);
+        let ranges = rand_ranges(&mut rng, &dims);
+        let v = rng.uniform_f32();
+        let mut got = t.clone();
+        got.slice_fill(&ranges, v);
+        let mut want = t.clone();
+        let patch = Tensor::full(naive::slice(&t, &ranges).dims(), v);
+        naive::slice_assign(&mut want, &ranges, &patch);
+        assert_eq!(got, want, "case {case}: {ranges:?}");
+    }
+}
+
+#[test]
+fn index_select_matches_naive_with_repeats() {
+    let mut rng = Prng::new(0x1D5E);
+    for case in 0..200 {
+        let dims = rand_dims(&mut rng, 4);
+        let t = rand_tensor(&mut rng, &dims);
+        let axis = rng.range(0, dims.len());
+        let n = rng.range(1, 7);
+        let indices: Vec<usize> = (0..n).map(|_| rng.range(0, dims[axis])).collect();
+        assert_eq!(
+            t.index_select(axis, &indices),
+            naive::index_select(&t, axis, &indices),
+            "case {case}: axis {axis} indices {indices:?}"
+        );
+    }
+}
+
+#[test]
+fn mean_axis_matches_naive_bit_exact() {
+    let mut rng = Prng::new(0x3EA4);
+    for case in 0..200 {
+        let dims = rand_dims(&mut rng, 4);
+        let t = rand_tensor(&mut rng, &dims);
+        let axis = rng.range(0, dims.len());
+        assert_eq!(t.mean_axis(axis), naive::mean_axis(&t, axis), "case {case}: axis {axis}");
+    }
+}
+
+#[test]
+fn concat_matches_naive() {
+    let mut rng = Prng::new(0xC04C);
+    for case in 0..100 {
+        let mut dims = rand_dims(&mut rng, 3);
+        let axis = rng.range(0, dims.len());
+        let parts: Vec<Tensor> = (0..rng.range(1, 5))
+            .map(|_| {
+                dims[axis] = rng.range(1, 6);
+                rand_tensor(&mut rng, &dims)
+            })
+            .collect();
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        assert_eq!(
+            Tensor::concat(&refs, axis),
+            naive::concat(&refs, axis),
+            "case {case}: axis {axis}"
+        );
+    }
+}
+
+#[test]
+fn matmul_matches_naive_within_reassociation_tolerance() {
+    let mut rng = Prng::new(0x3A73);
+    // small/odd shapes stay on the sequential path; the last cases cross
+    // the parallel cutoff (m·k·n ≥ 2^18)
+    for case in 0..60 {
+        let (m, k, n) = if case < 50 {
+            (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40))
+        } else {
+            (rng.range(64, 100), rng.range(64, 100), rng.range(64, 100))
+        };
+        let a = rand_tensor(&mut rng, &[m, k]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+        let got = a.matmul(&b);
+        let want = naive::matmul(&a, &b);
+        assert!(
+            got.allclose(&want, 1e-4),
+            "case {case}: {m}x{k}x{n} diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+    // batched N-D × 2-D
+    for case in 0..20 {
+        let (b1, b2, k, n) =
+            (rng.range(1, 5), rng.range(1, 6), rng.range(1, 30), rng.range(1, 30));
+        let a = rand_tensor(&mut rng, &[b1, b2, k]);
+        let b = rand_tensor(&mut rng, &[k, n]);
+        let got = a.matmul(&b);
+        let want = naive::matmul(&a, &b);
+        assert!(got.allclose(&want, 1e-4), "batched case {case}");
+    }
+}
+
+#[test]
+fn softmax_argmax_gelu_match_naive_across_parallel_cutoff() {
+    let mut rng = Prng::new(0x50F7);
+    // shapes straddling PAR_MIN_ELEMS (1 << 15) exercise both the
+    // sequential and row-parallel dispatch paths
+    let shapes: [&[usize]; 6] =
+        [&[3], &[7, 11], &[2, 5, 64], &[33, 1000], &[130, 300], &[4, 64, 257]];
+    for dims in shapes {
+        let t = rand_tensor(&mut rng, dims);
+        assert_eq!(t.softmax_last(), naive::softmax_last(&t), "softmax {dims:?}");
+        assert_eq!(t.argmax_last(), naive::argmax_last(&t), "argmax {dims:?}");
+        assert_eq!(t.gelu(), naive::gelu(&t), "gelu {dims:?}");
+        let mut inplace = t.clone();
+        inplace.softmax_last_inplace();
+        assert_eq!(inplace, t.softmax_last(), "softmax_last_inplace {dims:?}");
+        let mut inplace = t.clone();
+        inplace.gelu_inplace();
+        assert_eq!(inplace, t.gelu(), "gelu_inplace {dims:?}");
+    }
 }
 
 #[test]
