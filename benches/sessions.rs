@@ -1,0 +1,222 @@
+//! Stateful sessions vs per-step round trips: the WAN cost of an N-step
+//! in-fabric training loop (ISSUE 3 acceptance bench).
+//!
+//! Workload: the `probe_training` loop — train a d×d linear probe mapping
+//! layer-0 activations to layer-1 activations, SGD, one step per epoch.
+//! Two wire strategies over the paper's WAN profile (10 ms one-way,
+//! 60 MB/s, `NetSim::paper_wan`):
+//!
+//! * **stateful session** — parameters live in server-side session state;
+//!   the whole loop is ONE `POST /v1/session` (N+1 traces, the last one
+//!   fetching the trained parameters). 2 transfers total; only per-epoch
+//!   loss scalars + the final parameters come back.
+//! * **stateless round trips** — the pre-session-state workflow: each step
+//!   fetches layer-0/layer-1 activations (one trace request = 2 transfers)
+//!   and updates the parameters client-side. 2N transfers, with full
+//!   activations downloaded every step.
+//!
+//! The link runs in `Mode::Account`, so the simulated seconds are computed
+//! from real payload byte counts without sleeping; wallclock additionally
+//! shows the loopback execution cost. Emits `BENCH_sessions.json`.
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::client::infabric::{probe_training_session, stable_lr};
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::json::Json;
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::optim::{mse, Sgd};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+use nnscope::util::Prng;
+
+struct Measured {
+    name: &'static str,
+    wall_s: f64,
+    sim_s: f64,
+    bytes: u64,
+    transfers: usize,
+    final_loss: f32,
+}
+
+impl Measured {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name)),
+            ("wall_s", Json::from(self.wall_s)),
+            ("simulated_wan_s", Json::from(self.sim_s)),
+            ("bytes", Json::from(self.bytes as i64)),
+            ("transfers", Json::from(self.transfers as i64)),
+            ("final_loss", Json::from(self.final_loss as f64)),
+        ])
+    }
+}
+
+fn init_probe(d: usize) -> (Tensor, Tensor) {
+    let mut rng = Prng::new(8);
+    let mut w = Tensor::zeros(&[d, d]);
+    rng.fill_uniform_sym(w.data_mut(), 0.05);
+    (w, Tensor::zeros(&[d]))
+}
+
+fn prompt(seq: usize, vocab: usize) -> Tensor {
+    Tensor::new(&[1, seq], (0..seq).map(|i| ((i * 7 + 3) % vocab) as f32).collect())
+}
+
+/// One POST: the full loop in session state (the probe_training graph,
+/// built by the shared `client::infabric` builder).
+fn run_stateful(client: &NdifClient, model: &str, m: &Manifest, steps: usize, lr: f32) -> Measured {
+    let (w0, b0) = init_probe(m.d_model);
+    let tokens = prompt(m.seq, m.vocab);
+    let plan =
+        probe_training_session(model, &tokens, ("layer.0", "layer.1"), steps, lr, (&w0, &b0));
+
+    let t0 = std::time::Instant::now();
+    let results = plan.session.run_remote(client).expect("stateful session");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let final_loss = results[steps - 1].get(plan.loss_saves[steps - 1]).item();
+    Measured {
+        name: "stateful_session",
+        wall_s,
+        sim_s: client.link.seconds_charged(),
+        bytes: client.link.bytes_transferred(),
+        transfers: 2,
+        final_loss,
+    }
+}
+
+/// 2N transfers: fetch activations per step, update the probe on the host.
+fn run_stateless(
+    client: &NdifClient,
+    model: &str,
+    m: &Manifest,
+    steps: usize,
+    lr: f32,
+) -> Measured {
+    let (seq, d) = (m.seq, m.d_model);
+    let (mut w, mut b) = init_probe(d);
+    let tokens = prompt(seq, m.vocab);
+    let mut opt = Sgd::new(lr, 0.0);
+    let mut final_loss = 0.0f32;
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let mut tr = Trace::new(model, &tokens);
+        let h0 = tr.output("layer.0");
+        let h1 = tr.output("layer.1");
+        let s0 = tr.save(h0);
+        let s1 = tr.save(h1);
+        let res = tr.run_remote(client).expect("stateless trace");
+        let x = Tensor::new(&[seq, d], res.get(s0).data().to_vec());
+        let y = Tensor::new(&[seq, d], res.get(s1).data().to_vec());
+        let pred = x.matmul(&w).add(&b);
+        let (loss, gout) = mse(&pred, &y);
+        final_loss = loss;
+        let gw = x.transpose2().matmul(&gout);
+        let gb = gout.mean_axis(0).scale(gout.dims()[0] as f32);
+        let mut params = [
+            std::mem::replace(&mut w, Tensor::scalar(0.0)),
+            std::mem::replace(&mut b, Tensor::scalar(0.0)),
+        ];
+        opt.step(&mut params, &[gw, gb]);
+        let [w2, b2] = params;
+        w = w2;
+        b = b2;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Measured {
+        name: "stateless_round_trips",
+        wall_s,
+        sim_s: client.link.seconds_charged(),
+        bytes: client.link.bytes_transferred(),
+        transfers: 2 * steps,
+        final_loss,
+    }
+}
+
+fn main() {
+    let quick = common::quick();
+    let model = "tiny-sim";
+    let steps = if quick { 6 } else { 30 };
+
+    let manifest = Manifest::load(&nnscope::models::artifacts_dir(), model).unwrap();
+    common::section(&format!(
+        "Sessions — {steps}-step in-fabric training loop vs per-step round trips \
+         (paper WAN: 10 ms / 60 MB/s, {model})"
+    ));
+
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[model]) };
+    let server = NdifServer::start(cfg).expect("server");
+
+    // stable SGD step size from the activation scale; measured outside
+    // the timed strategies
+    let lr = {
+        let client = NdifClient::new(server.addr());
+        let mut tr = Trace::new(model, &prompt(manifest.seq, manifest.vocab));
+        let h0 = tr.output("layer.0");
+        let s0 = tr.save(h0);
+        let res = tr.run_remote(&client).expect("scale probe");
+        stable_lr(res.get(s0), 0.5)
+    };
+
+    let measured: Vec<Measured> = ["stateful", "stateless"]
+        .iter()
+        .map(|which| {
+            let link = NetSim::paper_wan(Mode::Account);
+            let client = NdifClient::new(server.addr()).with_link(link);
+            if *which == "stateful" {
+                run_stateful(&client, model, &manifest, steps, lr)
+            } else {
+                run_stateless(&client, model, &manifest, steps, lr)
+            }
+        })
+        .collect();
+
+    let mut table = Table::new("WAN cost of the training loop").header(vec![
+        "strategy", "transfers", "bytes", "simulated WAN (s)", "wall (s)", "final mse",
+    ]);
+    for m in &measured {
+        table.row(vec![
+            m.name.to_string(),
+            m.transfers.to_string(),
+            m.bytes.to_string(),
+            format!("{:.4}", m.sim_s),
+            format!("{:.3}", m.wall_s),
+            format!("{:.5}", m.final_loss),
+        ]);
+    }
+    table.print();
+
+    let stateful = &measured[0];
+    let stateless = &measured[1];
+    let speedup = stateless.sim_s / stateful.sim_s.max(1e-12);
+    common::shape_note(&format!(
+        "stateful session cuts simulated WAN time {speedup:.2}x \
+         ({} -> {} transfers; acceptance bar: stateful < stateless)",
+        stateless.transfers, stateful.transfers
+    ));
+    assert!(
+        stateful.sim_s < stateless.sim_s,
+        "stateful session must beat per-step round trips on simulated WAN time"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("sessions")),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::from(model)),
+        ("steps", Json::from(steps as i64)),
+        ("wan_latency_s", Json::from(0.010)),
+        ("wan_bandwidth_bps", Json::from(60.0e6)),
+        ("speedup_simulated_wan", Json::from(speedup)),
+        (
+            "strategies",
+            Json::Array(measured.iter().map(Measured::to_json).collect()),
+        ),
+    ]);
+    std::fs::write("BENCH_sessions.json", json.pretty()).expect("write BENCH_sessions.json");
+    println!("\nwrote BENCH_sessions.json");
+}

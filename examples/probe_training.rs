@@ -1,19 +1,26 @@
-//! Remote linear-probe training — the paper's Code Example 8 analog.
+//! Remote linear-probe training — the paper's Code Example 5/8 analog,
+//! now fully *in-fabric*.
 //!
 //! Train a probe to predict layer-1 hidden states from layer-0 hidden
-//! states: activations are fetched from a (remote) NDIF server via
-//! intervention graphs (a Session batches the epoch's traces into one
-//! request); the probe's parameters and optimizer live client-side in the
-//! host tensor engine.
+//! states. Unlike the host-side version (which fetched activations every
+//! epoch and updated parameters on the client), the probe's weights live
+//! in **server-side session state**: every epoch is one trace that loads
+//! `probe.w`/`probe.b` from state, computes the forward + MSE gradients +
+//! SGD update *as intervention-graph ops*, and stores the new parameters
+//! back (see [`nnscope::client::infabric`]). The whole training loop ships
+//! as a single `POST /v1/session` — one upload, one download, zero
+//! per-step WAN round trips — and only per-epoch loss scalars (plus the
+//! final parameters) ever cross the wire.
 //!
 //! Run: `cargo run --release --example probe_training -- \
-//!           [--model tiny-sim] [--epochs 30] [--remote]`
+//!           [--model tiny-sim] [--epochs 40] [--lr-mult 0.5] [--local]`
 
-use nnscope::client::{remote::NdifClient, Session, Trace};
+use nnscope::client::infabric::{probe_training_session, stable_lr};
+use nnscope::client::{remote::NdifClient, Trace};
 use nnscope::models::{artifacts_dir, ModelRunner};
 use nnscope::scheduler::CoTenancy;
 use nnscope::server::{NdifConfig, NdifServer};
-use nnscope::tensor::optim::{mse, Adam, LinearProbe};
+use nnscope::tensor::optim::mse;
 use nnscope::tensor::Tensor;
 use nnscope::util::cli::Args;
 use nnscope::util::Prng;
@@ -21,93 +28,109 @@ use nnscope::util::Prng;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(1);
     let model = args.str_or("model", "tiny-sim");
-    let epochs = args.usize_or("epochs", 30);
-    let remote = args.flag("remote");
+    let epochs = args.usize_or("epochs", 40);
+    let lr_mult = args.f64_or("lr-mult", 0.5) as f32;
+    let local = args.flag("local");
 
     let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
-    let m = manifest.clone();
-    let d = m.d_model;
+    let (seq, d) = (manifest.seq, manifest.d_model);
+
+    // client-side init only: the parameters never come back until training
+    // is done
+    let mut rng = Prng::new(8);
+    let mut w0 = Tensor::zeros(&[d, d]);
+    rng.fill_uniform_sym(w0.data_mut(), 0.05);
+    let b0 = Tensor::zeros(&[d]);
+
+    // one fixed prompt = full-batch gradient descent in the fabric
+    let tokens = Tensor::new(
+        &[1, seq],
+        (0..seq).map(|i| ((i * 7 + 3) % manifest.vocab) as f32).collect(),
+    );
 
     // execution backends
-    let local_runner = if remote { None } else { Some(ModelRunner::load(&artifacts_dir(), &model)?) };
+    let local_runner =
+        if local { Some(ModelRunner::load(&artifacts_dir(), &model)?) } else { None };
     let server;
-    let client = if remote {
-        println!("starting NDIF server with {model} …");
+    let client = if local {
+        None
+    } else {
+        println!("starting NDIF server with {model} ...");
         let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[&model]) };
         server = NdifServer::start(cfg)?;
         Some(NdifClient::new(server.addr()))
-    } else {
-        None
     };
 
-    let mut rng = Prng::new(8);
-    let mut probe = LinearProbe::new(d, d, &mut rng);
-    let mut opt = Adam::new(0.01);
+    // setup trace: fetch the training activations once to pick a stable
+    // step size from the activation scale
+    let mut tr = Trace::new(&model, &tokens);
+    let h0 = tr.output("layer.0");
+    let s0 = tr.save(h0);
+    let res = match (&local_runner, &client) {
+        (Some(r), _) => tr.run_local(r)?,
+        (_, Some(c)) => tr.run_remote(c)?,
+        _ => unreachable!(),
+    };
+    let lr = stable_lr(res.get(s0), lr_mult);
 
-    println!("training a {d}×{d} probe: layer.0 output → layer.1 output ({} mode)",
-        if remote { "remote" } else { "local" });
-    let mut first_loss = None;
-    let mut last_loss = 0.0;
-    for epoch in 0..epochs {
-        // one batch of random prompts, activations fetched via a session
-        let mut session = Session::new();
-        let mut saves = Vec::new();
-        for _ in 0..4 {
-            let tokens = Tensor::new(
-                &[1, m.seq],
-                (0..m.seq).map(|_| rng.range(1, m.vocab) as f32).collect(),
-            );
-            let mut tr = Trace::new(&model, &tokens);
-            let h0 = tr.output("layer.0");
-            let h1 = tr.output("layer.1");
-            let s0 = tr.save(h0);
-            let s1 = tr.save(h1);
-            saves.push((s0, s1));
-            session.add(tr);
-        }
-        let results = match (&local_runner, &client) {
-            (Some(r), _) => session.run_local(r)?,
-            (_, Some(c)) => session.run_remote(c)?,
-            _ => unreachable!(),
-        };
+    let plan = probe_training_session(
+        &model,
+        &tokens,
+        ("layer.0", "layer.1"),
+        epochs,
+        lr,
+        (&w0, &b0),
+    );
+    println!(
+        "training a {d}x{d} probe in-fabric: layer.0 -> layer.1, {epochs} epochs, lr {lr:.4}, \
+         {} traces in one session ({} mode)",
+        plan.session.len(),
+        if local { "local" } else { "remote, single POST /v1/session" }
+    );
 
-        // stack the fetched activations into training rows
-        let mut xs = Vec::new();
-        let mut ys = Vec::new();
-        for (res, (s0, s1)) in results.iter().zip(&saves) {
-            xs.extend_from_slice(res.get(*s0).data());
-            ys.extend_from_slice(res.get(*s1).data());
-        }
-        let rows = xs.len() / d;
-        let x = Tensor::new(&[rows, d], xs);
-        let y = Tensor::new(&[rows, d], ys);
+    let results = match (&local_runner, &client) {
+        (Some(r), _) => plan.session.run_local(r)?,
+        // the entire loop is ONE request: parameters never cross the wire
+        (_, Some(c)) => plan.session.run_remote(c)?,
+        _ => unreachable!(),
+    };
 
-        let loss = probe.train_step(&x, &y, &mut opt);
-        if first_loss.is_none() {
-            first_loss = Some(loss);
-        }
-        last_loss = loss;
-        if epoch % 5 == 0 || epoch + 1 == epochs {
-            println!("  epoch {epoch:>3}: mse {loss:.5}");
+    let losses: Vec<f32> = plan
+        .loss_saves
+        .iter()
+        .zip(&results)
+        .map(|(s, r)| r.get(*s).item())
+        .collect();
+    for (e, l) in losses.iter().enumerate() {
+        if e % 5 == 0 || e + 1 == losses.len() {
+            println!("  epoch {e:>3}: mse {l:.5}");
         }
     }
+    let (first, last) = (losses[0], *losses.last().unwrap());
+    println!(
+        "\nloss {first:.5} -> {last:.5} ({:.1}% reduction)",
+        100.0 * (1.0 - last / first)
+    );
 
-    let first = first_loss.unwrap();
-    println!("\nloss {first:.5} → {last_loss:.5} ({:.1}% reduction)",
-        100.0 * (1.0 - last_loss / first));
-    // evaluate on a held-out prompt
-    let tokens = Tensor::new(&[1, m.seq], (0..m.seq).map(|i| ((i * 11) % m.vocab) as f32).collect());
+    // held-out evaluation with the fetched parameters
+    let final_res = results.last().unwrap();
+    let w = final_res.get(plan.w_save).clone();
+    let b = final_res.get(plan.b_save).clone();
+    let eval_tokens = Tensor::new(
+        &[1, seq],
+        (0..seq).map(|i| ((i * 11) % manifest.vocab) as f32).collect(),
+    );
     let eval_runner = ModelRunner::load(&artifacts_dir(), &model)?;
-    let mut tr = Trace::new(&model, &tokens);
+    let mut tr = Trace::new(&model, &eval_tokens);
     let h0 = tr.output("layer.0");
     let h1 = tr.output("layer.1");
     let s0 = tr.save(h0);
     let s1 = tr.save(h1);
     let res = tr.run_local(&eval_runner)?;
-    let x = Tensor::new(&[m.seq, d], res.get(s0).data().to_vec());
-    let y = Tensor::new(&[m.seq, d], res.get(s1).data().to_vec());
-    let (holdout, _) = mse(&probe.forward(&x), &y);
+    let x = Tensor::new(&[seq, d], res.get(s0).data().to_vec());
+    let y = Tensor::new(&[seq, d], res.get(s1).data().to_vec());
+    let (holdout, _) = mse(&x.matmul(&w).add(&b), &y);
     println!("held-out mse: {holdout:.5}");
-    assert!(last_loss < first, "probe failed to learn");
+    assert!(last < first, "probe failed to learn in-fabric");
     Ok(())
 }

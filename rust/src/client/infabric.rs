@@ -1,0 +1,139 @@
+//! In-fabric training-loop builders (paper §B.1 Code Example 5).
+//!
+//! Builds the canonical "train a linear probe between two module points"
+//! workload as a stateful [`Session`]: every epoch is one trace that loads
+//! the probe parameters from server-side session state, computes the
+//! forward pass, MSE gradients, and SGD update as intervention-graph ops,
+//! and stores the updated parameters back — so an N-epoch loop costs one
+//! request, with only per-epoch loss scalars (and the final parameters,
+//! fetched by a last trace) crossing the wire. Shared by
+//! `examples/probe_training.rs`, `benches/sessions.rs`, and the
+//! session-state integration tests so they all measure the same graph.
+
+use crate::tensor::Tensor;
+
+use super::{SavedRef, Session, Trace};
+
+/// Session-state keys the probe parameters live under.
+pub const W_KEY: &str = "probe.w";
+pub const B_KEY: &str = "probe.b";
+
+/// A built in-fabric training session plus the handles needed to read its
+/// outcome: per-epoch losses and the final parameters (saved by a last,
+/// extra trace).
+pub struct ProbeTrainingPlan {
+    pub session: Session,
+    pub loss_saves: Vec<SavedRef>,
+    pub w_save: SavedRef,
+    pub b_save: SavedRef,
+}
+
+/// A stable full-batch SGD step size from the activation scale: GD on the
+/// probe's quadratic objective converges for `lr < 2/λ_max`, and
+/// `λ_max ≤ 2·E[x²]` bounds the curvature whatever the activation scale of
+/// the source module is — so `mult` up to ~1.0 is safe, 0.5 comfortable.
+pub fn stable_lr(h_src: &Tensor, mult: f32) -> f32 {
+    let data = h_src.data();
+    let x_ms = data.iter().map(|v| v * v).sum::<f32>() / data.len().max(1) as f32;
+    mult / x_ms.max(1e-6)
+}
+
+/// Build the training loop: probe `dst = src @ w + b` between module
+/// outputs `(src, dst)`, `epochs` SGD steps on one fixed prompt, all
+/// parameter state server-side. `w0` must be `[d, d]` and `b0` `[d]` for
+/// the model's hidden size `d`; `tokens` is one `[1, seq]` prompt.
+/// `epochs` is clamped to at least 1 — the final fetch trace loads the
+/// stored parameters, so a zero-epoch plan would be load-before-store.
+pub fn probe_training_session(
+    model: &str,
+    tokens: &Tensor,
+    points: (&str, &str),
+    epochs: usize,
+    lr: f32,
+    init: (&Tensor, &Tensor),
+) -> ProbeTrainingPlan {
+    let epochs = epochs.max(1);
+    let (src, dst) = points;
+    let (w0, b0) = init;
+    let seq = tokens.dims()[1];
+    let d = w0.dims()[0];
+    let n = (seq * d) as f32;
+
+    let mut session = Session::new();
+    let mut loss_saves = Vec::with_capacity(epochs);
+    for epoch in 0..epochs {
+        let mut tr = Trace::new(model, tokens);
+        let h0 = tr.output(src);
+        let h1 = tr.output(dst);
+        let x = tr.reshape(h0, &[seq, d]);
+        let y = tr.reshape(h1, &[seq, d]);
+        // epoch 0 ships the init as constants; later epochs continue from
+        // the parameters the previous epoch stored
+        let (w, b) = if epoch == 0 {
+            (tr.constant(w0), tr.constant(b0))
+        } else {
+            (tr.from_state(W_KEY), tr.from_state(B_KEY))
+        };
+        // forward + MSE loss
+        let xw = tr.matmul(x, w);
+        let pred = tr.add(xw, b);
+        let diff = tr.sub(pred, y);
+        let sq = tr.mul(diff, diff);
+        let loss = tr.mean(sq);
+        loss_saves.push(tr.save(loss));
+        // gradients: dL/dpred = 2·diff/n ; dW = xᵀ·gout ; db = Σ_rows gout
+        let gout = tr.scale(diff, 2.0 / n);
+        let xt = tr.transpose(x);
+        let dw = tr.matmul(xt, gout);
+        let gcol = tr.mean_axis(gout, 0);
+        let db = tr.scale(gcol, seq as f32);
+        // SGD step, stored for the next epoch
+        let wstep = tr.scale(dw, lr);
+        let bstep = tr.scale(db, lr);
+        let w2 = tr.sub(w, wstep);
+        let b2 = tr.sub(b, bstep);
+        tr.save_to_state(W_KEY, w2);
+        tr.save_to_state(B_KEY, b2);
+        session.add(tr);
+    }
+    // final trace: bring the trained parameters home
+    let mut tr = Trace::new(model, tokens);
+    let w = tr.from_state(W_KEY);
+    let b = tr.from_state(B_KEY);
+    let w_save = tr.save(w);
+    let b_save = tr.save(b);
+    session.add(tr);
+
+    ProbeTrainingPlan { session, loss_saves, w_save, b_save }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shape_and_state_threading() {
+        let tokens = Tensor::zeros(&[1, 16]);
+        let w0 = Tensor::zeros(&[32, 32]);
+        let b0 = Tensor::zeros(&[32]);
+        let plan = probe_training_session(
+            "tiny-sim",
+            &tokens,
+            ("layer.0", "layer.1"),
+            3,
+            0.1,
+            (&w0, &b0),
+        );
+        assert_eq!(plan.session.len(), 4); // 3 epochs + fetch trace
+        assert_eq!(plan.loss_saves.len(), 3);
+    }
+
+    #[test]
+    fn stable_lr_scales_inversely_with_activation_power() {
+        let small = Tensor::full(&[4, 4], 0.5); // E[x²] = 0.25
+        let big = Tensor::full(&[4, 4], 2.0); // E[x²] = 4
+        assert!((stable_lr(&small, 0.5) - 2.0).abs() < 1e-5);
+        assert!((stable_lr(&big, 0.5) - 0.125).abs() < 1e-6);
+        assert!(stable_lr(&small, 0.5) > stable_lr(&big, 0.5));
+    }
+}

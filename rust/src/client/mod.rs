@@ -28,6 +28,7 @@
 //! let _logits = res.get(saved);
 //! ```
 
+pub mod infabric;
 pub mod remote;
 pub mod scan;
 pub mod session;
@@ -172,6 +173,36 @@ impl Trace {
 
     pub fn sum(&mut self, x: NodeRef) -> NodeRef {
         NodeRef(self.graph.push(Op::Sum { arg: x.0 }))
+    }
+
+    /// 2-D transpose (`xᵀ` for in-graph weight gradients).
+    pub fn transpose(&mut self, x: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::Transpose { arg: x.0 }))
+    }
+
+    pub fn reshape(&mut self, x: NodeRef, dims: &[usize]) -> NodeRef {
+        NodeRef(self.graph.push(Op::Reshape { arg: x.0, dims: dims.to_vec() }))
+    }
+
+    pub fn mean_axis(&mut self, x: NodeRef, axis: usize) -> NodeRef {
+        NodeRef(self.graph.push(Op::MeanAxis { arg: x.0, axis }))
+    }
+
+    // ---- session state ------------------------------------------------------
+
+    /// Proxy for a named session-state variable (server-side parameter
+    /// state). Valid only when an earlier trace of the same session stored
+    /// the key — loading first is a validation error. The value observed
+    /// is the key's value as of trace start.
+    pub fn from_state(&mut self, key: &str) -> NodeRef {
+        NodeRef(self.graph.push(Op::LoadState { key: key.into() }))
+    }
+
+    /// Store a value into a named session-state variable; the update
+    /// commits when the trace completes and is visible to later traces of
+    /// the session. Returns a proxy for the stored value.
+    pub fn save_to_state(&mut self, key: &str, v: NodeRef) -> NodeRef {
+        NodeRef(self.graph.push(Op::StoreState { key: key.into(), arg: v.0 }))
     }
 
     /// The standard patching metric (server-side; only the scalar per row

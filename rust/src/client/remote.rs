@@ -170,11 +170,30 @@ impl NdifClient {
     }
 
     /// Execute a session: multiple traces in order, one request, one
-    /// bundled response (§B.1 "Remote Execution and Session").
+    /// bundled response (§B.1 "Remote Execution and Session"). Ephemeral
+    /// session state: any cross-trace variables are dropped server-side
+    /// once the response is sent.
     pub fn execute_session(&self, graphs: &[InterventionGraph]) -> Result<Vec<GraphResult>> {
+        self.execute_session_in(graphs, None)
+    }
+
+    /// [`NdifClient::execute_session`] against a named persistent session:
+    /// server-side state created by this bundle survives for follow-up
+    /// bundles under the same id (until [`NdifClient::drop_session`] or
+    /// TTL expiry). A coordinator pins the session to the replica holding
+    /// its state; if that replica dies mid-session the error carries
+    /// `retryable` ([`is_retryable_session_err`]) — restart the session.
+    pub fn execute_session_in(
+        &self,
+        graphs: &[InterventionGraph],
+        session: Option<&str>,
+    ) -> Result<Vec<GraphResult>> {
         let traces: Vec<crate::json::Json> = graphs.iter().map(gserde::to_json).collect();
-        let payload =
-            crate::json::Json::obj(vec![("traces", crate::json::Json::Array(traces))]).to_string();
+        let mut fields = vec![("traces", crate::json::Json::Array(traces))];
+        if let Some(s) = session {
+            fields.push(("session", crate::json::Json::from(s)));
+        }
+        let payload = crate::json::Json::obj(fields).to_string();
         self.link.send(payload.len());
         let (status, body) = http::http_request(
             self.addr,
@@ -198,4 +217,50 @@ impl NdifClient {
             .map(gserde::result_from_json)
             .collect()
     }
+
+    /// State summary of a live persistent session:
+    /// `(keys, bytes, idle_ms)`. Errors on unknown/expired sessions.
+    pub fn session_info(&self, session: &str) -> Result<(Vec<String>, usize, u64)> {
+        let (status, body) = http::http_request(
+            self.addr,
+            "GET",
+            &format!("/v1/session/{session}"),
+            b"",
+            &self.headers(),
+        )?;
+        if status != 200 {
+            return Err(anyhow!("session info returned {status}"));
+        }
+        let j = parse(std::str::from_utf8(&body)?)?;
+        let keys = j
+            .get("keys")
+            .as_array()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|k| k.as_str().map(String::from))
+            .collect();
+        Ok((
+            keys,
+            j.get("bytes").as_usize().unwrap_or(0),
+            j.get("idle_ms").as_i64().unwrap_or(0).max(0) as u64,
+        ))
+    }
+
+    /// End a persistent session, dropping its server-side state.
+    pub fn drop_session(&self, session: &str) -> Result<bool> {
+        let (status, _) = http::http_request(
+            self.addr,
+            "DELETE",
+            &format!("/v1/session/{session}"),
+            b"",
+            &self.headers(),
+        )?;
+        Ok(status == 200)
+    }
+}
+
+/// Does this error mean the session's server-side state was lost and the
+/// loop should restart from scratch (replica death mid-session)?
+pub fn is_retryable_session_err(e: &anyhow::Error) -> bool {
+    e.to_string().contains("\"retryable\":true")
 }

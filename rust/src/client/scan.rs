@@ -3,6 +3,8 @@
 //! Catches slice-out-of-bounds, broadcast mismatches, and contraction
 //! errors before a forward pass (local or remote) is spent.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Result};
 
 use crate::graph::{InterventionGraph, Op, Port};
@@ -28,10 +30,23 @@ fn slice_dims(dims: &[usize], ranges: &[Range1]) -> Result<Vec<usize>> {
     Ok(out)
 }
 
-/// Infer all node shapes; errors mirror what execution would hit.
+/// Infer all node shapes; errors mirror what execution would hit. A graph
+/// that loads session state cannot be scanned without knowing the state's
+/// shapes — use [`scan_with_state`].
 pub fn scan(g: &InterventionGraph, manifest: &Manifest) -> Result<Vec<Vec<usize>>> {
+    scan_with_state(g, manifest, &BTreeMap::new())
+}
+
+/// [`scan`] with `state_shapes` declaring the dims of every session-state
+/// key that exists when the trace starts.
+pub fn scan_with_state(
+    g: &InterventionGraph,
+    manifest: &Manifest,
+    state_shapes: &BTreeMap<String, Vec<usize>>,
+) -> Result<Vec<Vec<usize>>> {
     let fseq = manifest.forward_sequence();
-    crate::graph::validate::validate(g, &fseq)?;
+    let keys = state_shapes.keys().cloned().collect();
+    crate::graph::validate::validate_with_state(g, &fseq, &keys)?;
     let rows = g.batch_group.map(|(_, r)| r).unwrap_or(g.batch.max(1));
     let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.nodes.len());
 
@@ -101,8 +116,38 @@ pub fn scan(g: &InterventionGraph, manifest: &Manifest) -> Result<Vec<Vec<usize>
                 *out.last_mut().unwrap() = sb[1];
                 out
             }
-            Op::Scale { arg, .. } | Op::Gelu { arg } | Op::Softmax { arg } | Op::Save { arg } => {
-                shapes[*arg].clone()
+            Op::Scale { arg, .. } | Op::Gelu { arg } | Op::Softmax { arg } | Op::Save { arg }
+            | Op::StoreState { arg, .. } => shapes[*arg].clone(),
+            Op::LoadState { key } => state_shapes
+                .get(key)
+                .cloned()
+                .ok_or_else(|| anyhow!("no declared shape for state key '{key}'"))?,
+            Op::Transpose { arg } => {
+                let s = &shapes[*arg];
+                if s.len() != 2 {
+                    return Err(anyhow!("transpose needs a 2-D tensor, got {s:?}"));
+                }
+                vec![s[1], s[0]]
+            }
+            Op::Reshape { arg, dims } => {
+                let have: usize = shapes[*arg].iter().product();
+                let want: usize = dims.iter().product();
+                if have != want {
+                    return Err(anyhow!(
+                        "reshape {:?} -> {dims:?} changes element count",
+                        shapes[*arg]
+                    ));
+                }
+                dims.clone()
+            }
+            Op::MeanAxis { arg, axis } => {
+                let s = &shapes[*arg];
+                if *axis >= s.len() {
+                    return Err(anyhow!("mean_axis axis {axis} out of rank {}", s.len()));
+                }
+                let mut out = s.clone();
+                out.remove(*axis);
+                out
             }
             Op::Argmax { arg } => {
                 let s = &shapes[*arg];
@@ -198,6 +243,46 @@ mod tests {
         tr.save(h);
         let shapes = tr.scan(&m).unwrap();
         assert_eq!(shapes[h.0], vec![2, 16, 32]);
+    }
+
+    #[test]
+    fn scan_state_and_shape_ops() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0"); // [1,16,32]
+        let x = tr.reshape(h, &[16, 32]);
+        let w = tr.from_state("w"); // [32,32] via declared shape
+        let pred = tr.matmul(x, w);
+        let xt = tr.transpose(x); // [32,16]
+        let dw = tr.matmul(xt, pred); // [32,32]
+        let col = tr.mean_axis(dw, 0); // [32]
+        tr.save_to_state("w", dw);
+        tr.save(col);
+        // without the declared state shape, scan fails validation
+        assert!(tr.scan(&m).is_err());
+        let mut shapes = BTreeMap::new();
+        shapes.insert("w".to_string(), vec![32usize, 32]);
+        let out = scan_with_state(tr.graph(), &m, &shapes).unwrap();
+        assert_eq!(out[x.0], vec![16, 32]);
+        assert_eq!(out[xt.0], vec![32, 16]);
+        assert_eq!(out[dw.0], vec![32, 32]);
+        assert_eq!(out[col.0], vec![32]);
+    }
+
+    #[test]
+    fn scan_rejects_bad_reshape_and_transpose() {
+        let m = manifest();
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0"); // [1,16,32] — rank 3
+        let t = tr.transpose(h);
+        tr.save(t);
+        assert!(tr.scan(&m).is_err());
+
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        let r = tr.reshape(h, &[3, 3]); // wrong numel
+        tr.save(r);
+        assert!(tr.scan(&m).is_err());
     }
 
     #[test]

@@ -3,29 +3,53 @@
 //!
 //! A [`Session`] bundles several traces so that remote execution costs one
 //! request instead of N round trips — the paper's mechanism for iterative
-//! experiments (multi-pass probing, LoRA-style loops). Values cannot yet
-//! flow *between* traces on the server (that requires remote parameter
-//! state, paper Code Example 5); each trace's saved values return to the
-//! client, which can feed them into the next trace as constants before
-//! submission — the builder supports this via deferred construction.
+//! experiments (multi-pass probing, LoRA-style loops). Values flow
+//! *between* traces on the server through named session-state variables
+//! (paper Code Example 5): a trace stores a tensor with
+//! [`Trace::save_to_state`] and any later trace of the same session reads
+//! it back with [`Trace::from_state`], so parameters being trained never
+//! leave the fabric. An entire optimizer loop therefore costs one upload
+//! and one download — see `examples/probe_training.rs`.
+//!
+//! By default a session's server-side state is ephemeral: it is dropped
+//! when the bundled response is sent. Naming the session with
+//! [`Session::with_id`] makes the state persist across requests — follow-up
+//! bundles submitted under the same id continue from the stored
+//! parameters (the coordinator pins such sessions to the replica holding
+//! the state) — until `DELETE /v1/session/<id>` or server-side TTL expiry.
 
 use anyhow::Result;
 
 use crate::graph::InterventionGraph;
+use crate::interp::{self, StateView};
 use crate::models::ModelRunner;
 
 use super::remote::NdifClient;
 use super::{Trace, TraceResult};
 
-/// An ordered bundle of traces executed together.
+/// An ordered bundle of traces executed together, with cross-trace state.
 #[derive(Default)]
 pub struct Session {
     graphs: Vec<InterventionGraph>,
+    /// Persistent session-state id; `None` = ephemeral state.
+    id: Option<String>,
 }
 
 impl Session {
     pub fn new() -> Session {
         Session::default()
+    }
+
+    /// Name the session: its server-side state survives this request and
+    /// follow-up bundles under the same id continue from it.
+    pub fn with_id(mut self, id: &str) -> Session {
+        self.id = Some(id.to_string());
+        self
+    }
+
+    /// The persistent session-state id, if any.
+    pub fn id(&self) -> Option<&str> {
+        self.id.as_deref()
     }
 
     /// Add a completed trace to the session; returns its index.
@@ -42,18 +66,26 @@ impl Session {
         self.graphs.is_empty()
     }
 
-    /// Execute all traces locally, in order.
+    /// Execute all traces locally, in order, threading session state
+    /// between them (stores commit after each trace; loads observe the
+    /// state as of trace start).
     pub fn run_local(self, runner: &ModelRunner) -> Result<Vec<TraceResult>> {
+        let mut state = StateView::new();
         self.graphs
             .iter()
-            .map(|g| Ok(TraceResult::from_graph_result(crate::interp::execute(g, runner)?)))
+            .map(|g| {
+                Ok(TraceResult::from_graph_result(interp::execute_stateful(
+                    g, runner, &mut state,
+                )?))
+            })
             .collect()
     }
 
-    /// Execute all traces remotely as one bundled request.
+    /// Execute all traces remotely as one bundled request; state lives on
+    /// the server for the whole loop.
     pub fn run_remote(self, client: &NdifClient) -> Result<Vec<TraceResult>> {
         Ok(client
-            .execute_session(&self.graphs)?
+            .execute_session_in(&self.graphs, self.id.as_deref())?
             .into_iter()
             .map(TraceResult::from_graph_result)
             .collect())

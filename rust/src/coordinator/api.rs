@@ -25,11 +25,21 @@
 //! surface here through `GET /v1/result/<id>` as a 500 whose error message
 //! embeds the replica's status and body. [`crate::client::remote`] handles
 //! both shapes identically.
+//!
+//! **Session-state stickiness:** a `POST /v1/session` naming a persistent
+//! session (`"session": "<id>"`) pins that session to the replica that
+//! serves its first request — the state tensors live in that replica's
+//! memory, so follow-up bundles must land there. If the pinned replica
+//! dies (or the request to it fails at transport level), the coordinator
+//! does NOT fail over — the state is gone with the replica — it unpins the
+//! session and answers `503 {"error": …, "retryable": true}` so the client
+//! can restart the session from scratch instead of hanging or silently
+//! training against a replica that never saw its parameters.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -71,6 +81,10 @@ pub struct CoordinatorConfig {
     /// per exchange instead of wedging a routing worker or the monitor.
     /// Result polls ask the replica to hold for at most half this value.
     pub io_timeout: Duration,
+    /// Idle bound on session→replica pins: pins untouched for longer are
+    /// swept (align with the replicas' session-state TTL so the pin map
+    /// stays bounded and pins don't outlive the state they point at).
+    pub session_pin_ttl: Duration,
     /// Statically configured replicas: `host:port` or `host:port@latency_s`
     /// (the latency a [`crate::netsim::NetSim`] profile would charge).
     pub replicas: Vec<String>,
@@ -88,6 +102,7 @@ impl CoordinatorConfig {
             health: HealthPolicy::default(),
             request_timeout: Duration::from_secs(300),
             io_timeout: Duration::from_secs(10),
+            session_pin_ttl: Duration::from_secs(600),
             replicas: Vec::new(),
         }
     }
@@ -104,11 +119,33 @@ struct RoutingCore {
     io_timeout: Duration,
 }
 
+/// One persistent session's pin: the replica holding its state, plus the
+/// last time the pin was used (for TTL sweeping).
+struct Pin {
+    replica: String,
+    at: Instant,
+}
+
 struct CoordState {
     core: Arc<RoutingCore>,
     store: Arc<ObjectStore>,
     next_id: AtomicU64,
     routing: ThreadPool,
+    /// Persistent-session pinning: session id → replica holding its
+    /// server-side state. Entries are dropped on DELETE, on observed
+    /// replica death, or after `session_pin_ttl` idle — NOT on transient
+    /// transport errors (the replica may be alive with the state intact).
+    sessions: Mutex<HashMap<String, Pin>>,
+    session_pin_ttl: Duration,
+}
+
+impl CoordState {
+    /// Sweep idle pins, then return the replica id pinned for `sid`.
+    fn pinned_replica(&self, sid: &str) -> Option<String> {
+        let mut m = self.sessions.lock().unwrap();
+        m.retain(|_, p| p.at.elapsed() <= self.session_pin_ttl);
+        m.get(sid).map(|p| p.replica.clone())
+    }
 }
 
 /// A running fleet coordinator.
@@ -159,6 +196,8 @@ impl Coordinator {
             store: Arc::new(ObjectStore::new()),
             next_id: AtomicU64::new(1),
             routing: ThreadPool::new(cfg.routing_workers),
+            sessions: Mutex::new(HashMap::new()),
+            session_pin_ttl: cfg.session_pin_ttl,
         });
         let s2 = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| route(&s2, req));
@@ -354,6 +393,12 @@ fn route(state: &Arc<CoordState>, req: Request) -> Response {
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
         ("POST", "/v1/session") => session_endpoint(state, &req),
         ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
+        ("GET", path) if path.starts_with("/v1/session/") => {
+            session_proxy_endpoint(state, &req, "GET")
+        }
+        ("DELETE", path) if path.starts_with("/v1/session/") => {
+            session_proxy_endpoint(state, &req, "DELETE")
+        }
         _ => Response::not_found(),
     }
 }
@@ -644,8 +689,19 @@ fn proxy_trace(
     }
 }
 
+/// `503 {"error": …, "retryable": true}` — the session's server-side state
+/// is gone (replica death / transport failure); the client should restart
+/// the session rather than expect its parameters to still exist.
+fn retryable_503(msg: String) -> Response {
+    Response::json(
+        503,
+        Json::obj(vec![("error", Json::from(msg)), ("retryable", Json::Bool(true))]).to_string(),
+    )
+}
+
 /// Sessions are routed whole: all traces of a session go to one replica so
 /// FIFO ordering is preserved (§B.1); the response is relayed verbatim.
+/// A named (persistent) session is sticky — see the module docs.
 fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
     let body = match body_json(req) {
         Ok(j) => j,
@@ -654,6 +710,7 @@ fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
     let Some(traces) = body.get("traces").as_array() else {
         return Response::bad_request("session missing traces");
     };
+    let sticky = body.get("session").as_str().map(String::from);
     let mut models: Vec<String> = Vec::new();
     for t in traces {
         if let Some(m) = t.get("model").as_str() {
@@ -674,6 +731,101 @@ fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
     if let Some(t) = &auth {
         headers.push(("x-ndif-auth", t.as_str()));
     }
+
+    // a pinned session has exactly one legal destination: the replica
+    // holding its state — never fail over, surface state loss instead
+    if let Some(sid) = &sticky {
+        loop {
+            let pinned = state.pinned_replica(sid);
+            let (rep, fresh) = if let Some(rid) = pinned {
+                let rep = state
+                    .core
+                    .registry
+                    .snapshot()
+                    .into_iter()
+                    .find(|r| r.id == rid && r.health != Health::Dead);
+                let Some(rep) = rep else {
+                    state.sessions.lock().unwrap().remove(sid);
+                    return retryable_503(format!(
+                        "session '{sid}' state lost: replica {rid} is dead; restart the session"
+                    ));
+                };
+                (rep, false)
+            } else {
+                // fresh placement: pick a candidate, then claim the pin
+                // atomically — losing the claim race means a concurrent
+                // request already placed this session, so loop and honor
+                // the winner's pin instead of forking state
+                let candidates: Vec<Replica> = state
+                    .core
+                    .registry
+                    .candidates(&first)
+                    .into_iter()
+                    .filter(|r| models.iter().all(|m| r.models.iter().any(|x| x == m)))
+                    .collect();
+                let Some(rep) = state.core.router.pick(&candidates, &[]) else {
+                    return Response::json(
+                        503,
+                        format!(
+                            "{{\"error\":{}}}",
+                            Json::from(format!("no live replica for session '{sid}'"))
+                        ),
+                    );
+                };
+                let claimed = {
+                    let mut m = state.sessions.lock().unwrap();
+                    match m.entry(sid.clone()) {
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            v.insert(Pin { replica: rep.id.clone(), at: Instant::now() });
+                            true
+                        }
+                        std::collections::hash_map::Entry::Occupied(_) => false,
+                    }
+                };
+                if !claimed {
+                    continue;
+                }
+                (rep, true)
+            };
+            state.core.registry.record_dispatch(&rep.id);
+            match http::http_request_deadlines(
+                rep.addr,
+                "POST",
+                "/v1/session",
+                payload.as_bytes(),
+                &headers,
+                state.core.io_timeout,
+                state.core.request_timeout,
+            ) {
+                // relay whatever the state-holding replica says — even its
+                // errors belong to this session, not to another replica
+                Ok((status, b)) => {
+                    state.core.registry.record_success(&rep.id);
+                    let mut m = state.sessions.lock().unwrap();
+                    if fresh && (400..500).contains(&status) {
+                        // refused at submit: no state was created, release
+                        // the freshly claimed pin
+                        m.remove(sid);
+                    } else if let Some(p) = m.get_mut(sid) {
+                        p.at = Instant::now();
+                    }
+                    drop(m);
+                    return Response::json(status, String::from_utf8_lossy(&b).into_owned());
+                }
+                Err(e) => {
+                    // the replica may be alive (slow) with the state intact
+                    // — keep the pin so a retried/restarted session still
+                    // targets it; a genuinely dead replica is unpinned once
+                    // the registry marks it Dead
+                    state.core.registry.record_failure(&rep.id);
+                    return retryable_503(format!(
+                        "session '{sid}' request failed in transit ({e}); restart the session"
+                    ));
+                }
+            }
+        }
+    }
+
     let mut tried: Vec<String> = Vec::new();
     let mut last_err = String::from("no candidate replicas");
     for _ in 0..=state.core.max_retries {
@@ -726,20 +878,60 @@ fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
     )
 }
 
+/// Proxy `GET`/`DELETE /v1/session/<id>` (with the client's auth header)
+/// to the replica pinned for that session; `DELETE` also unpins it here.
+fn session_proxy_endpoint(state: &Arc<CoordState>, req: &Request, method: &str) -> Response {
+    let path = req.path.as_str();
+    let sid = &path["/v1/session/".len()..];
+    let Some(rid) = state.pinned_replica(sid) else {
+        return Response::not_found();
+    };
+    let rep = state
+        .core
+        .registry
+        .snapshot()
+        .into_iter()
+        .find(|r| r.id == rid && r.health != Health::Dead);
+    let Some(rep) = rep else {
+        // the state died with the replica: a DELETE has nothing left to
+        // drop, a GET has nothing left to show
+        state.sessions.lock().unwrap().remove(sid);
+        return match method {
+            "DELETE" => Response::json(200, "{\"dropped\":true}".into()),
+            _ => Response::not_found(),
+        };
+    };
+    let mut headers: Vec<(&str, &str)> = Vec::new();
+    if let Some(t) = req.header("x-ndif-auth") {
+        headers.push(("x-ndif-auth", t));
+    }
+    let out =
+        http::http_request_timeout(rep.addr, method, path, b"", &headers, state.core.io_timeout);
+    match out {
+        Ok((status, b)) => {
+            // unpin only when the replica confirmed the state is gone —
+            // a rejected DELETE (401 unauthorized) must not let an
+            // unauthenticated caller orphan someone else's pinned state
+            if method == "DELETE" && (status == 200 || status == 404) {
+                state.sessions.lock().unwrap().remove(sid);
+            }
+            Response::json(status, String::from_utf8_lossy(&b).into_owned())
+        }
+        // transient transport failure must NOT unpin a live session; a
+        // dead replica is unpinned once the registry marks it Dead
+        Err(e) => retryable_503(format!("session '{sid}' replica unreachable ({e})")),
+    }
+}
+
 fn result_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
     let (id, timeout_ms) = match parse_result_path(path) {
         Ok(v) => v,
         Err(resp) => return resp,
     };
+    // wait_outcome evicts completed entries on pickup
     match state.store.wait_outcome(id, Duration::from_millis(timeout_ms)) {
-        Some(Ok(json)) => {
-            state.store.remove(id);
-            Response::json(200, json)
-        }
-        Some(Err(e)) => {
-            state.store.remove(id);
-            Response::json(500, format!("{{\"error\":{}}}", Json::from(e)))
-        }
+        Some(Ok(json)) => Response::json(200, json),
+        Some(Err(e)) => Response::json(500, format!("{{\"error\":{}}}", Json::from(e))),
         None => match state.store.peek(id) {
             Some(Entry::Pending) => Response::json(202, "{\"status\":\"pending\"}".into()),
             _ => Response::not_found(),

@@ -94,6 +94,35 @@ impl InterventionGraph {
             .collect()
     }
 
+    /// Keys read from session state (`Op::LoadState`).
+    pub fn state_loads(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::LoadState { key } => Some(key.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Keys written to session state (`Op::StoreState`).
+    pub fn state_stores(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::StoreState { key, .. } => Some(key.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Does this graph touch session state at all?
+    pub fn uses_state(&self) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::LoadState { .. } | Op::StoreState { .. }))
+    }
+
     /// Module points whose gradients are requested.
     pub fn grad_points(&self) -> Vec<String> {
         self.nodes

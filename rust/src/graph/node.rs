@@ -59,17 +59,32 @@ pub enum Op {
     Argmax { arg: NodeId },
     Mean { arg: NodeId },
     Sum { arg: NodeId },
+    /// 2-D transpose (probe/optimizer math: `xᵀ·g` weight gradients).
+    Transpose { arg: NodeId },
+    /// Reshape to `dims` (element count must match).
+    Reshape { arg: NodeId, dims: Vec<usize> },
+    /// Reduce-mean over one axis.
+    MeanAxis { arg: NodeId, axis: usize },
     /// The standard patching metric on last-token logits.
     LogitDiff { logits: NodeId, target: usize, foil: usize },
     /// LockProtocol: pin the value for return to the user (`.save()`).
     Save { arg: NodeId },
+    /// Read a named session-state variable (server-side parameter state,
+    /// paper Code Example 5). Resolved in the pre-phase from the session's
+    /// state view — within one trace a load always observes the value the
+    /// key had when the trace started.
+    LoadState { key: String },
+    /// Write a value into a named session-state variable. Commits after
+    /// the trace completes (post-phase), so later traces in the same
+    /// session observe it. Produces the stored value.
+    StoreState { key: String, arg: NodeId },
 }
 
 impl Op {
     /// Dependency node ids of this op (edges into this apply node).
     pub fn deps(&self) -> Vec<NodeId> {
         match self {
-            Op::Getter { .. } | Op::Grad { .. } | Op::Const { .. } => vec![],
+            Op::Getter { .. } | Op::Grad { .. } | Op::Const { .. } | Op::LoadState { .. } => vec![],
             Op::Setter { arg, .. }
             | Op::Slice { arg, .. }
             | Op::Scale { arg, .. }
@@ -78,7 +93,11 @@ impl Op {
             | Op::Argmax { arg }
             | Op::Mean { arg }
             | Op::Sum { arg }
-            | Op::Save { arg } => vec![*arg],
+            | Op::Transpose { arg }
+            | Op::Reshape { arg, .. }
+            | Op::MeanAxis { arg, .. }
+            | Op::Save { arg }
+            | Op::StoreState { arg, .. } => vec![*arg],
             Op::Fill { dst, .. } => vec![*dst],
             Op::Assign { dst, src, .. } => vec![*dst, *src],
             Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Matmul { a, b } => {
@@ -108,8 +127,13 @@ impl Op {
             Op::Argmax { .. } => "argmax",
             Op::Mean { .. } => "mean",
             Op::Sum { .. } => "sum",
+            Op::Transpose { .. } => "transpose",
+            Op::Reshape { .. } => "reshape",
+            Op::MeanAxis { .. } => "mean_axis",
             Op::LogitDiff { .. } => "logit_diff",
             Op::Save { .. } => "save",
+            Op::LoadState { .. } => "load_state",
+            Op::StoreState { .. } => "store_state",
         }
     }
 }
@@ -136,6 +160,11 @@ mod tests {
             vec![3, 5]
         );
         assert_eq!(Op::Save { arg: 7 }.deps(), vec![7]);
+        assert!(Op::LoadState { key: "w".into() }.deps().is_empty());
+        assert_eq!(Op::StoreState { key: "w".into(), arg: 4 }.deps(), vec![4]);
+        assert_eq!(Op::Transpose { arg: 2 }.deps(), vec![2]);
+        assert_eq!(Op::Reshape { arg: 3, dims: vec![2, 2] }.deps(), vec![3]);
+        assert_eq!(Op::MeanAxis { arg: 1, axis: 0 }.deps(), vec![1]);
     }
 
     #[test]
@@ -146,6 +175,11 @@ mod tests {
             Op::Add { a: 0, b: 0 },
             Op::Save { arg: 0 },
             Op::LogitDiff { logits: 0, target: 0, foil: 1 },
+            Op::Transpose { arg: 0 },
+            Op::Reshape { arg: 0, dims: vec![1] },
+            Op::MeanAxis { arg: 0, axis: 0 },
+            Op::LoadState { key: "w".into() },
+            Op::StoreState { key: "w".into(), arg: 0 },
         ];
         let tags: std::collections::BTreeSet<_> = ops.iter().map(|o| o.tag()).collect();
         assert_eq!(tags.len(), ops.len());

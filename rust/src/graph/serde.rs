@@ -88,7 +88,22 @@ fn node_to_json(n: &Node) -> Json {
             o.set("factor", Json::from(*factor));
         }
         Op::Gelu { arg } | Op::Softmax { arg } | Op::Argmax { arg } | Op::Mean { arg }
-        | Op::Sum { arg } | Op::Save { arg } => o.set("arg", Json::from(*arg as i64)),
+        | Op::Sum { arg } | Op::Transpose { arg } | Op::Save { arg } => {
+            o.set("arg", Json::from(*arg as i64))
+        }
+        Op::Reshape { arg, dims } => {
+            o.set("arg", Json::from(*arg as i64));
+            o.set("dims", Json::from(dims.clone()));
+        }
+        Op::MeanAxis { arg, axis } => {
+            o.set("arg", Json::from(*arg as i64));
+            o.set("axis", Json::from(*axis as i64));
+        }
+        Op::LoadState { key } => o.set("key", Json::from(key.as_str())),
+        Op::StoreState { key, arg } => {
+            o.set("key", Json::from(key.as_str()));
+            o.set("arg", Json::from(*arg as i64));
+        }
         Op::LogitDiff { logits, target, foil } => {
             o.set("logits", Json::from(*logits as i64));
             o.set("target", Json::from(*target as i64));
@@ -221,6 +236,23 @@ fn json_to_op(j: &Json) -> Result<Op> {
         "argmax" => Op::Argmax { arg: req_id(j, "arg")? },
         "mean" => Op::Mean { arg: req_id(j, "arg")? },
         "sum" => Op::Sum { arg: req_id(j, "arg")? },
+        "transpose" => Op::Transpose { arg: req_id(j, "arg")? },
+        "reshape" => Op::Reshape {
+            arg: req_id(j, "arg")?,
+            dims: j
+                .get("dims")
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("reshape missing dims"))?,
+        },
+        "mean_axis" => Op::MeanAxis {
+            arg: req_id(j, "arg")?,
+            axis: j
+                .get("axis")
+                .as_usize()
+                .ok_or_else(|| anyhow!("mean_axis missing axis"))?,
+        },
+        "load_state" => Op::LoadState { key: req_str(j, "key")? },
+        "store_state" => Op::StoreState { key: req_str(j, "key")?, arg: req_id(j, "arg")? },
         "logit_diff" => Op::LogitDiff {
             logits: req_id(j, "logits")?,
             target: req_id(j, "target")?,
@@ -383,6 +415,22 @@ mod tests {
     }
 
     #[test]
+    fn state_and_shape_ops_round_trip() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let w = g.push(Op::LoadState { key: "probe.w".into() });
+        let t = g.push(Op::Transpose { arg: w });
+        let r = g.push(Op::Reshape { arg: t, dims: vec![4, 1] });
+        let m = g.push(Op::MeanAxis { arg: r, axis: 0 });
+        g.push(Op::StoreState { key: "probe.w".into(), arg: m });
+        let text = to_json(&g).to_string();
+        let back = from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nodes, g.nodes);
+        assert_eq!(back.state_loads(), vec!["probe.w"]);
+        assert_eq!(back.state_stores(), vec!["probe.w"]);
+    }
+
+    #[test]
     fn rejects_forward_reference() {
         let bad = r#"{"model":"m","batch":1,"tokens":[],"nodes":[
             {"id":0,"op":"scale","arg":1,"factor":2.0},
@@ -436,7 +484,7 @@ mod tests {
         for _ in 0..rng.range(1, 12) {
             let n = g.nodes.len();
             let pick = |rng: &mut Prng| rng.range(0, n);
-            let op = match rng.range(0, 8) {
+            let op = match rng.range(0, 11) {
                 0 => Op::Const { dims: vec![2], data: vec![1.0, -2.5] },
                 1 => Op::Scale { arg: pick(rng), factor: 0.5 },
                 2 => Op::Add { a: pick(rng), b: pick(rng) },
@@ -444,6 +492,9 @@ mod tests {
                 4 => Op::Fill { dst: pick(rng), ranges: vec![Range1::all()], value: 0.0 },
                 5 => Op::Softmax { arg: pick(rng) },
                 6 => Op::Save { arg: pick(rng) },
+                7 => Op::Transpose { arg: pick(rng) },
+                8 => Op::LoadState { key: format!("k{}", rng.range(0, 3)) },
+                9 => Op::StoreState { key: format!("k{}", rng.range(0, 3)), arg: pick(rng) },
                 _ => Op::Mean { arg: pick(rng) },
             };
             g.push(op);

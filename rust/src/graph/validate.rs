@@ -19,14 +19,24 @@
 //!    setters (the backward pass runs after the forward pass completes —
 //!    a grad-driven setter would need a second forward, which is a
 //!    Session, not a single trace);
-//! 6. batch groups fit the declared batch.
+//! 6. batch groups fit the declared batch;
+//! 7. the **state dataflow rule**: every `LoadState` key must already
+//!    exist when the trace starts — created by a `StoreState` in an
+//!    *earlier* trace of the same session (or pre-existing session state).
+//!    Loading a key first stored later — even later in the same trace — is
+//!    a load-before-store error, because loads resolve in the pre-phase
+//!    from the session's state view while stores commit post-phase.
+//!    `StoreState` may depend on gradients (unlike setters): the store
+//!    commits after the backward pass, which is exactly what in-fabric
+//!    optimizer steps need. [`validate_session`] threads the key set
+//!    across an ordered trace bundle.
 //!
 //! [`bipartite_view`] exports the formal C′ = (V′, A′, E′) structure so
 //! tests can check the paper's graph-theoretic properties directly
 //! (bipartiteness, apply-nodes-one-output, weak connectivity of each
 //! component).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, Result};
 
@@ -41,8 +51,37 @@ fn order_map(forward_sequence: &[String]) -> BTreeMap<&str, usize> {
         .collect()
 }
 
-/// Validate a graph against a model's forward sequence.
+/// Validate a standalone graph against a model's forward sequence. No
+/// session state is in scope, so any `LoadState` is a load-before-store
+/// error; use [`validate_with_state`] when executing inside a session.
 pub fn validate(g: &InterventionGraph, forward_sequence: &[String]) -> Result<()> {
+    validate_with_state(g, forward_sequence, &BTreeSet::new())
+}
+
+/// Validate an ordered session bundle: trace `i` may load any key in
+/// `initial_keys` or stored by traces `0..i`.
+pub fn validate_session(
+    graphs: &[InterventionGraph],
+    forward_sequence: &[String],
+    initial_keys: &BTreeSet<String>,
+) -> Result<()> {
+    let mut keys = initial_keys.clone();
+    for (i, g) in graphs.iter().enumerate() {
+        validate_with_state(g, forward_sequence, &keys)
+            .map_err(|e| anyhow!("session trace {i}: {e}"))?;
+        keys.extend(g.state_stores());
+    }
+    Ok(())
+}
+
+/// Validate a graph against a model's forward sequence, with
+/// `state_keys` naming the session-state variables that exist when the
+/// trace starts.
+pub fn validate_with_state(
+    g: &InterventionGraph,
+    forward_sequence: &[String],
+    state_keys: &BTreeSet<String>,
+) -> Result<()> {
     let order = order_map(forward_sequence);
 
     // rule 1: topological ordering (dense ids are structural in `nodes`)
@@ -128,6 +167,21 @@ pub fn validate(g: &InterventionGraph, forward_sequence: &[String]) -> Result<()
     }
     if has_grad && g.targets.is_none() {
         return Err(anyhow!("graph uses grad nodes but request carries no targets"));
+    }
+
+    // rule 7: state dataflow — loads require the key to exist at trace
+    // start (keys stored by this trace only become visible to LATER
+    // traces: stores commit post-phase, loads resolve pre-phase)
+    for n in &g.nodes {
+        if let Op::LoadState { key } = &n.op {
+            if !state_keys.contains(key) {
+                return Err(anyhow!(
+                    "load-before-store: state key '{key}' does not exist at trace start \
+                     (node {}); create it with a store in an earlier trace of the session",
+                    n.id
+                ));
+            }
+        }
     }
 
     // rule 6: batch group
@@ -283,6 +337,66 @@ mod tests {
         g.push(Op::Setter { module: "layer.2".into(), port: Port::Output, arg: s });
         let err = validate(&g, &fseq()).unwrap_err().to_string();
         assert!(err.contains("gradient"), "{err}");
+    }
+
+    #[test]
+    fn rejects_load_before_store() {
+        // standalone: any load fails
+        let mut g = InterventionGraph::new("m");
+        let w = g.push(Op::LoadState { key: "w".into() });
+        g.push(Op::Save { arg: w });
+        let err = validate(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("load-before-store"), "{err}");
+
+        // a store later in the SAME trace does not legalize the load
+        let mut g = InterventionGraph::new("m");
+        let w = g.push(Op::LoadState { key: "w".into() });
+        g.push(Op::StoreState { key: "w".into(), arg: w });
+        assert!(validate(&g, &fseq()).is_err());
+
+        // with the key in scope, the load is fine
+        let keys: BTreeSet<String> = ["w".to_string()].into();
+        let mut g = InterventionGraph::new("m");
+        let w = g.push(Op::LoadState { key: "w".into() });
+        g.push(Op::Save { arg: w });
+        validate_with_state(&g, &fseq(), &keys).unwrap();
+    }
+
+    #[test]
+    fn session_threads_keys_across_traces() {
+        let store = |key: &str| {
+            let mut g = InterventionGraph::new("m");
+            let c = g.push(Op::Const { dims: vec![1], data: vec![1.0] });
+            g.push(Op::StoreState { key: key.into(), arg: c });
+            g
+        };
+        let load = |key: &str| {
+            let mut g = InterventionGraph::new("m");
+            let w = g.push(Op::LoadState { key: key.into() });
+            g.push(Op::Save { arg: w });
+            g
+        };
+        // store in trace 0 → load in trace 1: ok
+        validate_session(&[store("w"), load("w")], &fseq(), &BTreeSet::new()).unwrap();
+        // load in trace 0 → store in trace 1: rejected, names the trace
+        let err = validate_session(&[load("w"), store("w")], &fseq(), &BTreeSet::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session trace 0"), "{err}");
+        // cross-session key access: a key another session stored is not
+        // in this session's initial set
+        assert!(validate_session(&[load("other")], &fseq(), &BTreeSet::new()).is_err());
+    }
+
+    #[test]
+    fn store_state_may_depend_on_grad() {
+        // unlike setters, stores commit post-phase — grads are legal deps
+        let mut g = InterventionGraph::new("m");
+        g.targets = Some(vec![1.0]);
+        let gr = g.push(Op::Grad { module: "layer.1".into() });
+        let s = g.push(Op::Scale { arg: gr, factor: -0.1 });
+        g.push(Op::StoreState { key: "w".into(), arg: s });
+        validate(&g, &fseq()).unwrap();
     }
 
     #[test]

@@ -13,14 +13,29 @@
 //! as its remaining listener count reaches zero, except values locked by a
 //! Save node (LockProtocol). [`Executor::peak_live`] exposes the high-water
 //! mark so tests can pin this behaviour down.
+//!
+//! **Session state** (paper Code Example 5): an executor built with
+//! [`Executor::with_state`] resolves `Op::LoadState` nodes in the
+//! pre-phase from the supplied [`StateView`] and collects `Op::StoreState`
+//! values; [`Executor::into_outcome`] returns them alongside the saved
+//! values so the session driver can commit them post-phase. Within one
+//! trace every load observes the pre-trace value of its key; updates only
+//! become visible to later traces.
 
 use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{anyhow, Result};
 
-use crate::graph::{validate::validate, GraphResult, InterventionGraph, NodeId, Op, Port};
+use crate::graph::{
+    validate::validate_with_state, GraphResult, InterventionGraph, NodeId, Op, Port,
+};
 use crate::models::{Hooks, ModelRunner};
 use crate::tensor::{logit_diff, Tensor};
+
+/// The session-state snapshot a trace executes against: named tensors as
+/// they were when the trace started. Also the type state updates commit
+/// back into.
+pub type StateView = HashMap<String, Tensor>;
 
 /// Execution phase of a node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +67,11 @@ pub struct Executor<'g> {
     listeners: Vec<usize>,
     locked: Vec<bool>,
     saved: BTreeMap<NodeId, Tensor>,
+    /// session-state snapshot loads resolve from (pre-trace values).
+    state_in: StateView,
+    /// state updates collected from StoreState nodes, committed by the
+    /// session driver after the trace completes.
+    state_out: BTreeMap<String, Tensor>,
     /// batch-group slice of this user within the running batch.
     row_offset: usize,
     rows: usize,
@@ -63,10 +83,21 @@ pub struct Executor<'g> {
 }
 
 impl<'g> Executor<'g> {
-    /// Build an executor; validates the graph against the model's forward
-    /// sequence and computes the per-hook schedule.
+    /// Build an executor with no session state in scope; validates the
+    /// graph against the model's forward sequence and computes the
+    /// per-hook schedule.
     pub fn new(graph: &'g InterventionGraph, forward_sequence: &[String]) -> Result<Executor<'g>> {
-        validate(graph, forward_sequence)?;
+        Executor::with_state(graph, forward_sequence, StateView::new())
+    }
+
+    /// Build an executor whose LoadState nodes resolve against `state`.
+    pub fn with_state(
+        graph: &'g InterventionGraph,
+        forward_sequence: &[String],
+        state: StateView,
+    ) -> Result<Executor<'g>> {
+        let keys = state.keys().cloned().collect();
+        validate_with_state(graph, forward_sequence, &keys)?;
         let order: HashMap<&str, usize> = forward_sequence
             .iter()
             .enumerate()
@@ -146,6 +177,8 @@ impl<'g> Executor<'g> {
             listeners: graph.listener_counts(),
             locked,
             saved: BTreeMap::new(),
+            state_in: state,
+            state_out: BTreeMap::new(),
             row_offset,
             rows,
             live: 0,
@@ -245,8 +278,49 @@ impl<'g> Executor<'g> {
             Op::Argmax { arg } => self.take_dep(*arg)?.argmax_last(),
             Op::Mean { arg } => Tensor::scalar(self.take_dep(*arg)?.mean_all()),
             Op::Sum { arg } => Tensor::scalar(self.take_dep(*arg)?.sum_all()),
+            Op::Transpose { arg } => {
+                let t = self.take_dep(*arg)?;
+                if t.rank() != 2 {
+                    return Err(anyhow!("transpose needs a 2-D tensor, got {:?}", t.dims()));
+                }
+                t.transpose2()
+            }
+            Op::Reshape { arg, dims } => {
+                let t = self.take_dep(*arg)?;
+                let want: usize = dims.iter().product();
+                if want != t.numel() {
+                    return Err(anyhow!(
+                        "reshape {:?} -> {dims:?} changes element count",
+                        t.dims()
+                    ));
+                }
+                t.reshape(dims)
+            }
+            Op::MeanAxis { arg, axis } => {
+                let t = self.take_dep(*arg)?;
+                if *axis >= t.rank() {
+                    return Err(anyhow!("mean_axis axis {axis} out of rank {}", t.rank()));
+                }
+                t.mean_axis(*axis)
+            }
             Op::LogitDiff { logits, target, foil } => {
                 logit_diff(&self.take_dep(*logits)?, *target, *foil)
+            }
+            Op::LoadState { key } => self
+                .state_in
+                .get(key)
+                .cloned()
+                .ok_or_else(|| anyhow!("state key '{key}' not present in session state"))?,
+            Op::StoreState { key, arg } => {
+                let v = self.take_dep(*arg)?;
+                // only keep a second copy when some downstream node reads
+                // the store's own value; the update map otherwise takes
+                // sole ownership
+                if self.listeners[id] > 0 || self.locked[id] {
+                    self.put(id, v.clone());
+                }
+                self.state_out.insert(key.clone(), v);
+                return Ok(());
             }
             Op::Save { arg } => {
                 let v = self.values[*arg]
@@ -332,12 +406,19 @@ impl<'g> Executor<'g> {
         Ok(())
     }
 
-    /// Take the saved values (consumes the executor's result map).
+    /// Take the saved values (consumes the executor's result map); state
+    /// updates, if any, are discarded.
     pub fn into_result(self) -> Result<GraphResult> {
+        Ok(self.into_outcome()?.0)
+    }
+
+    /// Take the saved values AND the session-state updates collected from
+    /// StoreState nodes (the post-phase commit set).
+    pub fn into_outcome(self) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
         if let Some(e) = self.error {
             return Err(e);
         }
-        Ok(GraphResult { values: self.saved })
+        Ok((GraphResult { values: self.saved }, self.state_out))
     }
 
     pub fn had_error(&self) -> Option<&anyhow::Error> {
@@ -372,8 +453,43 @@ impl Hooks for Executor<'_> {
 /// Execute a standalone graph against a loaded model: pre-phase → hooked
 /// forward (sharded if requested) → backward/post-phase → saved values.
 pub fn execute(graph: &InterventionGraph, runner: &ModelRunner) -> Result<GraphResult> {
+    Ok(execute_with_view(graph, runner, StateView::new())?.0)
+}
+
+/// Execute a graph inside a session: loads resolve against `state`, and on
+/// success the collected store updates are committed back into `state`
+/// (the post-phase commit). On error `state` is left untouched.
+pub fn execute_stateful(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state: &mut StateView,
+) -> Result<GraphResult> {
+    // clone only the keys this graph actually loads — the view is a
+    // snapshot, so the trace observes pre-trace values throughout
+    let mut view = StateView::new();
+    for key in graph.state_loads() {
+        if let Some(t) = state.get(&key) {
+            view.insert(key, t.clone());
+        }
+    }
+    // validation needs the full key set (a load of an uncloned-but-present
+    // key is impossible: state_loads() covers every load)
+    let (result, updates) = execute_with_view(graph, runner, view)?;
+    for (k, v) in updates {
+        state.insert(k, v);
+    }
+    Ok(result)
+}
+
+/// Core driver: run one graph against `state_in`, returning saved values
+/// and uncommitted state updates.
+pub fn execute_with_view(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state_in: StateView,
+) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
     let fseq = runner.manifest.forward_sequence();
-    let mut ex = Executor::new(graph, &fseq)?;
+    let mut ex = Executor::with_state(graph, &fseq, state_in)?;
     ex.run_pre()?;
 
     let seq = runner.manifest.seq;
@@ -413,7 +529,7 @@ pub fn execute(graph: &InterventionGraph, runner: &ModelRunner) -> Result<GraphR
         ex.run_post(&grads)?;
     }
 
-    ex.into_result()
+    ex.into_outcome()
 }
 
 #[cfg(test)]
@@ -617,6 +733,85 @@ mod tests {
         ex.run_post(&grads).unwrap();
         let res = ex.into_result().unwrap();
         assert_eq!(res.get(save).unwrap().data(), &[-3.0; 4]);
+    }
+
+    #[test]
+    fn state_load_sees_pre_trace_value_and_store_collects_update() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let w = g.push(Op::LoadState { key: "w".into() });
+        let s = g.push(Op::Scale { arg: w, factor: 2.0 });
+        g.push(Op::StoreState { key: "w".into(), arg: s });
+        let save = g.push(Op::Save { arg: s });
+        let mut state = StateView::new();
+        state.insert("w".into(), Tensor::full(&[2], 3.0));
+        let mut ex = Executor::with_state(&g, &fseq(), state).unwrap();
+        ex.run_pre().unwrap();
+        let (res, updates) = ex.into_outcome().unwrap();
+        assert_eq!(res.get(save).unwrap().data(), &[6.0; 2]);
+        assert_eq!(updates["w"].data(), &[6.0; 2]);
+    }
+
+    #[test]
+    fn state_load_of_missing_key_rejected_at_build() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let w = g.push(Op::LoadState { key: "nope".into() });
+        g.push(Op::Save { arg: w });
+        let err = Executor::with_state(&g, &fseq(), StateView::new())
+            .err()
+            .expect("missing key must fail validation")
+            .to_string();
+        assert!(err.contains("load-before-store"), "{err}");
+    }
+
+    #[test]
+    fn store_of_activation_runs_at_hook_phase() {
+        // store a getter-derived value: the store executes at the hook,
+        // the update is still only visible in the outcome (post-phase)
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        g.push(Op::StoreState { key: "h".into(), arg: h });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let (_, updates) = ex.into_outcome().unwrap();
+        assert_eq!(updates["h"], Tensor::iota(&[1, 4]).scale(2.0));
+    }
+
+    #[test]
+    fn shape_ops_execute() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] });
+        let t = g.push(Op::Transpose { arg: c });
+        let st = g.push(Op::Save { arg: t });
+        let c2 = g.push(Op::Const { dims: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] });
+        let r = g.push(Op::Reshape { arg: c2, dims: vec![3, 2] });
+        let sr = g.push(Op::Save { arg: r });
+        let c3 = g.push(Op::Const { dims: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] });
+        let m = g.push(Op::MeanAxis { arg: c3, axis: 0 });
+        let sm = g.push(Op::Save { arg: m });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(st).unwrap(), &Tensor::new(&[3, 2], vec![1., 4., 2., 5., 3., 6.]));
+        assert_eq!(res.get(sr).unwrap().dims(), &[3, 2]);
+        assert_eq!(res.get(sm).unwrap(), &Tensor::new(&[3], vec![2.5, 3.5, 4.5]));
+    }
+
+    #[test]
+    fn shape_op_errors_are_graceful() {
+        // transpose of a 3-D tensor is an error, not a panic
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![1, 2, 2], data: vec![0.0; 4] });
+        let t = g.push(Op::Transpose { arg: c });
+        g.push(Op::Save { arg: t });
+        let mut ex = Executor::new(&g, &fseq()).unwrap();
+        assert!(ex.run_pre().is_err());
     }
 
     #[test]

@@ -104,6 +104,10 @@ fn serve(args: &Args) -> Result<()> {
         advertise: args.get("advertise").map(str::to_string),
         heartbeat: std::time::Duration::from_millis(args.u64_or("heartbeat-ms", 250).max(1)),
         link_latency_s: args.f64_or("link-latency", 0.0),
+        state_limits: nnscope::server::StateLimits {
+            ttl: std::time::Duration::from_secs(args.u64_or("state-ttl-s", 600).max(1)),
+            ..Default::default()
+        },
     };
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;

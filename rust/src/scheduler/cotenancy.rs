@@ -59,7 +59,8 @@ pub fn plan_merge_chunks(rows: &[usize], exported: &[usize]) -> Vec<usize> {
 /// Can these graphs share one forward pass on this runner?
 ///
 /// Requirements: same model, no gradient work (the backward pass is
-/// per-request), unsharded, and the combined rows fit an exported batch.
+/// per-request), no session-state dataflow (state threading is strictly
+/// ordered), unsharded, and the combined rows fit an exported batch.
 pub fn mergeable(graphs: &[&InterventionGraph], runner: &ModelRunner) -> bool {
     if graphs.len() < 2 {
         return true;
@@ -68,6 +69,7 @@ pub fn mergeable(graphs: &[&InterventionGraph], runner: &ModelRunner) -> bool {
     graphs.iter().all(|g| {
         g.model == runner.manifest.name
             && g.grad_points().is_empty()
+            && !g.uses_state()
             && g.shards <= 1
             && g.batch > 0
     }) && runner.batch_for(total_rows).is_ok()

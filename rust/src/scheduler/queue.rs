@@ -6,6 +6,13 @@
 //! drains up to `max_merge` compatible requests and runs them as one
 //! batch-grouped forward pass; anything unmergeable falls back to
 //! sequential execution. Results land in the object store.
+//!
+//! **Stateful sessions** ride the same FIFO: a session job carries an
+//! ordered trace bundle plus a session-state id; the worker executes the
+//! traces strictly in order, threading loads/stores through the shared
+//! [`SessionStateStore`], and publishes one bundled result. Running on the
+//! model's single worker thread gives the ordering guarantee state
+//! dataflow needs for free.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -15,7 +22,9 @@ use anyhow::Result;
 
 use crate::graph::{serde as gserde, InterventionGraph};
 use crate::interp;
+use crate::json::Json;
 use crate::models::ModelRunner;
+use crate::server::state::SessionStateStore;
 use crate::server::store::ObjectStore;
 
 use super::cotenancy::{execute_merged, mergeable, plan_merge_chunks, CoTenancy};
@@ -61,9 +70,24 @@ impl ServiceMetrics {
     }
 }
 
-struct Job {
+struct TraceJob {
     id: String,
     graph: InterventionGraph,
+}
+
+struct SessionJob {
+    id: String,
+    /// Session-state id the traces thread their loads/stores through.
+    session: String,
+    graphs: Vec<InterventionGraph>,
+    /// Keep the session's state alive after this bundle (multi-request
+    /// sessions); ephemeral sessions drop it at the end.
+    persist: bool,
+}
+
+enum Job {
+    Trace(TraceJob),
+    Session(SessionJob),
 }
 
 /// One model's request service: queue + worker thread + shared runner.
@@ -71,29 +95,41 @@ pub struct ModelService {
     pub runner: Arc<ModelRunner>,
     pub metrics: Arc<ServiceMetrics>,
     store: Arc<ObjectStore>,
+    session_state: Arc<SessionStateStore>,
     tx: Option<Sender<Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ModelService {
     /// Spawn the service worker.
-    pub fn start(runner: Arc<ModelRunner>, store: Arc<ObjectStore>, mode: CoTenancy) -> ModelService {
+    pub fn start(
+        runner: Arc<ModelRunner>,
+        store: Arc<ObjectStore>,
+        session_state: Arc<SessionStateStore>,
+        mode: CoTenancy,
+    ) -> ModelService {
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(ServiceMetrics::default());
         let m2 = Arc::clone(&metrics);
         let r2 = Arc::clone(&runner);
         let store2 = Arc::clone(&store);
+        let state2 = Arc::clone(&session_state);
         let worker = std::thread::Builder::new()
             .name(format!("ndif-service-{}", runner.manifest.name))
-            .spawn(move || Self::worker_loop(rx, r2, store2, mode, m2))
+            .spawn(move || Self::worker_loop(rx, r2, store2, state2, mode, m2))
             .expect("spawn service worker");
-        ModelService { runner, metrics, store, tx: Some(tx), worker: Some(worker) }
+        ModelService { runner, metrics, store, session_state, tx: Some(tx), worker: Some(worker) }
     }
 
     /// Load snapshot for `/v1/metrics`, coordinator heartbeats, and fleet
     /// status.
     pub fn load(&self) -> LoadSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The session-state store stateful bundles thread through.
+    pub fn session_state(&self) -> &Arc<SessionStateStore> {
+        &self.session_state
     }
 
     /// Enqueue a request (non-blocking). The result will appear in the
@@ -105,7 +141,29 @@ impl ModelService {
         self.tx
             .as_ref()
             .expect("service stopped")
-            .send(Job { id, graph })
+            .send(Job::Trace(TraceJob { id, graph }))
+            .map_err(|_| anyhow::anyhow!("service worker exited"))
+    }
+
+    /// Enqueue an ordered stateful trace bundle. One bundled result (the
+    /// full `{"results": [...]}` payload) will appear under `id`; loads
+    /// and stores thread through session-state `session`, which is dropped
+    /// afterwards unless `persist`.
+    pub fn submit_session(
+        &self,
+        id: String,
+        session: String,
+        persist: bool,
+        graphs: Vec<InterventionGraph>,
+    ) -> Result<()> {
+        let n = graphs.len() as u64;
+        self.store.put_pending(&id);
+        self.metrics.enqueued.fetch_add(n, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(graphs.len(), Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("service stopped")
+            .send(Job::Session(SessionJob { id, session, graphs, persist }))
             .map_err(|_| anyhow::anyhow!("service worker exited"))
     }
 
@@ -113,16 +171,30 @@ impl ModelService {
         rx: Receiver<Job>,
         runner: Arc<ModelRunner>,
         store: Arc<ObjectStore>,
+        session_state: Arc<SessionStateStore>,
         mode: CoTenancy,
         metrics: Arc<ServiceMetrics>,
     ) {
         while let Ok(first) = rx.recv() {
-            // drain compatible follow-ups in Parallel mode
+            let first = match first {
+                Job::Session(s) => {
+                    Self::run_session(&runner, &store, &session_state, &metrics, s);
+                    continue;
+                }
+                Job::Trace(t) => t,
+            };
+            // drain compatible follow-ups in Parallel mode; a drained
+            // session job runs after the batch (it arrived after them)
             let mut batch = vec![first];
+            let mut deferred_session = None;
             if let CoTenancy::Parallel { max_merge } = mode {
                 while batch.len() < max_merge {
                     match rx.try_recv() {
-                        Ok(job) => batch.push(job),
+                        Ok(Job::Trace(t)) => batch.push(t),
+                        Ok(Job::Session(s)) => {
+                            deferred_session = Some(s);
+                            break;
+                        }
                         Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
                     }
                 }
@@ -144,14 +216,72 @@ impl ModelService {
             } else {
                 Self::run_batch(&runner, &store, &metrics, batch, mode);
             }
+            if let Some(s) = deferred_session {
+                Self::run_session(&runner, &store, &session_state, &metrics, s);
+            }
         }
+    }
+
+    /// Execute a stateful session bundle in order on this worker thread.
+    /// Each trace runs against a snapshot of the session state and commits
+    /// its store updates on success; the first failure fails the whole
+    /// bundle (updates from earlier traces stay committed — they already
+    /// happened, exactly like earlier requests of a multi-request session).
+    fn run_session(
+        runner: &ModelRunner,
+        store: &ObjectStore,
+        session_state: &SessionStateStore,
+        metrics: &ServiceMetrics,
+        job: SessionJob,
+    ) {
+        let t0 = std::time::Instant::now();
+        let n = job.graphs.len();
+        let outcome = (|| -> Result<String, String> {
+            session_state
+                .open(&job.session, &runner.manifest.name)
+                .map_err(|e| e.to_string())?;
+            let mut results = Vec::with_capacity(n);
+            for (i, g) in job.graphs.iter().enumerate() {
+                let view = session_state
+                    .snapshot(&job.session)
+                    .ok_or_else(|| format!("session '{}' expired mid-run", job.session))?;
+                let (res, updates) = interp::execute_with_view(g, runner, view)
+                    .map_err(|e| format!("session trace {i}: {e}"))?;
+                session_state
+                    .commit(&job.session, updates)
+                    .map_err(|e| format!("session trace {i}: {e}"))?;
+                results.push(gserde::result_to_json(&res));
+            }
+            Ok(Json::obj(vec![
+                ("session", Json::from(job.session.as_str())),
+                ("results", Json::Array(results)),
+            ])
+            .to_string())
+        })();
+        if !job.persist {
+            session_state.drop_session(&job.session);
+        }
+        match outcome {
+            Ok(json) => {
+                metrics.completed.fetch_add(n as u64, Ordering::Relaxed);
+                store.put_ready(&job.id, json);
+            }
+            Err(e) => {
+                metrics.failed.fetch_add(n as u64, Ordering::Relaxed);
+                store.put_failed(&job.id, &e);
+            }
+        }
+        metrics
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
     }
 
     fn run_batch(
         runner: &ModelRunner,
         store: &ObjectStore,
         metrics: &ServiceMetrics,
-        batch: Vec<Job>,
+        batch: Vec<TraceJob>,
         mode: CoTenancy,
     ) {
         let t0 = std::time::Instant::now();
@@ -236,7 +366,8 @@ mod tests {
     fn service(mode: CoTenancy) -> (ModelService, Arc<ObjectStore>) {
         let runner = Arc::new(ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap());
         let store = Arc::new(ObjectStore::new());
-        (ModelService::start(runner, Arc::clone(&store), mode), store)
+        let state = Arc::new(SessionStateStore::default());
+        (ModelService::start(runner, Arc::clone(&store), state, mode), store)
     }
 
     fn simple_graph(v: f32) -> InterventionGraph {
@@ -320,6 +451,63 @@ mod tests {
             );
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn stateful_session_threads_values_across_traces() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        let tokens = Tensor::zeros(&[1, 16]);
+        // t0: store 2.0 → "acc"; t1: acc*3 → store+save; t2: acc+1 → save
+        let mut t0 = Trace::new("tiny-sim", &tokens);
+        let c = t0.constant(&Tensor::scalar(2.0));
+        t0.save_to_state("acc", c);
+        let mut t1 = Trace::new("tiny-sim", &tokens);
+        let a = t1.from_state("acc");
+        let a3 = t1.scale(a, 3.0);
+        t1.save_to_state("acc", a3);
+        t1.save(a3);
+        let mut t2 = Trace::new("tiny-sim", &tokens);
+        let a = t2.from_state("acc");
+        let one = t2.constant(&Tensor::scalar(1.0));
+        let sum = t2.add(a, one);
+        t2.save(sum);
+        svc.submit_session(
+            "s".into(),
+            "sess-1".into(),
+            false,
+            vec![t0.into_graph(), t1.into_graph(), t2.into_graph()],
+        )
+        .unwrap();
+        let json = store
+            .wait_ready("s", std::time::Duration::from_secs(30))
+            .unwrap();
+        let j = crate::json::parse(&json).unwrap();
+        let results = j.get("results").as_array().unwrap();
+        assert_eq!(results.len(), 3);
+        let r1 = gserde::result_from_json(&results[1]).unwrap();
+        let r2 = gserde::result_from_json(&results[2]).unwrap();
+        assert_eq!(r1.values.values().next().unwrap().item(), 6.0);
+        assert_eq!(r2.values.values().next().unwrap().item(), 7.0);
+        // ephemeral session: state dropped at the end
+        assert!(svc.session_state().is_empty());
+    }
+
+    #[test]
+    fn failed_session_trace_fails_bundle_with_index() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        let tokens = Tensor::zeros(&[1, 16]);
+        let mut t0 = Trace::new("tiny-sim", &tokens);
+        let c = t0.constant(&Tensor::new(&[1, 2, 2], vec![0.0; 4]));
+        let t = t0.transpose(c); // rank-3 transpose fails at exec
+        t0.save(t);
+        svc.submit_session("s".into(), "sess-err".into(), false, vec![t0.into_graph()])
+            .unwrap();
+        let err = store
+            .wait_outcome("s", std::time::Duration::from_secs(30))
+            .unwrap()
+            .unwrap_err();
+        assert!(err.contains("session trace 0"), "{err}");
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::models::ModelRunner;
 use crate::scheduler::{CoTenancy, ModelService};
 
 use super::http::{Handler, HttpServer, Request, Response};
+use super::state::{SessionStateStore, StateLimits};
 use super::store::{Entry, ObjectStore};
 
 /// Server configuration.
@@ -46,6 +47,9 @@ pub struct NdifConfig {
     /// replica's [`crate::netsim::NetSim`] profile, consumed by
     /// latency-aware routing.
     pub link_latency_s: f64,
+    /// Budgets and TTL for server-side session state (named tensor
+    /// variables held across traces — remote training loops).
+    pub state_limits: StateLimits,
 }
 
 impl NdifConfig {
@@ -61,6 +65,7 @@ impl NdifConfig {
             advertise: None,
             heartbeat: Duration::from_millis(250),
             link_latency_s: 0.0,
+            state_limits: StateLimits::default(),
         }
     }
 }
@@ -68,6 +73,7 @@ impl NdifConfig {
 struct ServerState {
     services: HashMap<String, ModelService>,
     store: Arc<ObjectStore>,
+    session_state: Arc<SessionStateStore>,
     next_id: AtomicU64,
     auth: HashMap<String, Vec<String>>,
 }
@@ -102,6 +108,7 @@ impl NdifServer {
     /// fleet replica and start pushing heartbeats.
     pub fn start(cfg: NdifConfig) -> Result<NdifServer> {
         let store = Arc::new(ObjectStore::new());
+        let session_state = Arc::new(SessionStateStore::new(cfg.state_limits));
         let mut services = HashMap::new();
         for name in &cfg.models {
             let runner = Arc::new(
@@ -110,12 +117,18 @@ impl NdifServer {
             );
             services.insert(
                 name.clone(),
-                ModelService::start(runner, Arc::clone(&store), cfg.cotenancy),
+                ModelService::start(
+                    runner,
+                    Arc::clone(&store),
+                    Arc::clone(&session_state),
+                    cfg.cotenancy,
+                ),
             );
         }
         let state = Arc::new(ServerState {
             services,
             store,
+            session_state,
             next_id: AtomicU64::new(1),
             auth: cfg.auth.clone(),
         });
@@ -253,6 +266,12 @@ fn route(state: &Arc<ServerState>, req: Request) -> Response {
         ("POST", "/v1/session") => session_endpoint(state, &req),
         ("GET", "/v1/metrics") => metrics_endpoint(state),
         ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
+        ("GET", path) if path.starts_with("/v1/session/") => {
+            session_info_endpoint(state, &req, &path["/v1/session/".len()..])
+        }
+        ("DELETE", path) if path.starts_with("/v1/session/") => {
+            session_drop_endpoint(state, &req, &path["/v1/session/".len()..])
+        }
         _ => Response::not_found(),
     }
 }
@@ -280,6 +299,14 @@ fn models_endpoint(state: &Arc<ServerState>) -> Response {
 
 fn submit_graph(state: &Arc<ServerState>, req: &Request, body: &Json) -> Result<String, Response> {
     let graph = gserde::from_json(body).map_err(|e| Response::bad_request(&e.to_string()))?;
+    submit_parsed_graph(state, req, graph)
+}
+
+fn submit_parsed_graph(
+    state: &Arc<ServerState>,
+    req: &Request,
+    graph: crate::graph::InterventionGraph,
+) -> Result<String, Response> {
     let Some(service) = state.services.get(&graph.model) else {
         return Err(Response::json(
             404,
@@ -290,6 +317,12 @@ fn submit_graph(state: &Arc<ServerState>, req: &Request, body: &Json) -> Result<
         return Err(Response::json(
             401,
             "{\"error\":\"not authorized for this model\"}".into(),
+        ));
+    }
+    // state dataflow needs the ordered session pipeline, not a lone trace
+    if graph.uses_state() {
+        return Err(Response::bad_request(
+            "graph uses session-state ops (load_state/store_state); submit it via POST /v1/session",
         ));
     }
     // early validation against the manifest so bad graphs fail at submit
@@ -320,9 +353,19 @@ fn trace_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
 
 /// A Session: multiple traces executed in order within one request
 /// (§B.1 "Remote Execution and Session"). Sent as
-/// `{"traces": [graph, graph, ...]}`; FIFO queueing per model preserves
-/// order, and the response bundles all results, eliminating per-trace
-/// round trips.
+/// `{"traces": [graph, graph, ...]}` plus an optional `"session"` name;
+/// FIFO queueing per model preserves order, and the response bundles all
+/// results, eliminating per-trace round trips.
+///
+/// Two execution paths:
+/// * **stateless** (no state ops, no `"session"` field) — each trace is an
+///   independent submit; parallel co-tenancy may merge them;
+/// * **stateful** — the bundle is validated as a whole (state keys thread
+///   across traces) and runs strictly in order on the model's worker,
+///   loads/stores resolving against server-side session state. With a
+///   client-named `"session"` the state persists for follow-up requests
+///   (until `DELETE /v1/session/<id>` or TTL expiry); anonymous sessions
+///   drop their state when the response is sent.
 fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
         parse(s).map_err(|e| e.to_string())
@@ -333,9 +376,31 @@ fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     let Some(traces) = body.get("traces").as_array() else {
         return Response::bad_request("session missing traces");
     };
-    let mut ids = Vec::with_capacity(traces.len());
+    let mut graphs = Vec::with_capacity(traces.len());
     for t in traces {
-        match submit_graph(state, req, t) {
+        match gserde::from_json(t) {
+            Ok(g) => graphs.push(g),
+            Err(e) => return Response::bad_request(&e.to_string()),
+        }
+    }
+    let named = body.get("session").as_str();
+    if named.is_some() || graphs.iter().any(|g| g.uses_state()) {
+        stateful_session(state, req, graphs, named)
+    } else {
+        stateless_session(state, req, graphs)
+    }
+}
+
+/// The legacy bundling path: independent per-trace submits, results
+/// gathered in order.
+fn stateless_session(
+    state: &Arc<ServerState>,
+    req: &Request,
+    graphs: Vec<crate::graph::InterventionGraph>,
+) -> Response {
+    let mut ids = Vec::with_capacity(graphs.len());
+    for g in graphs {
+        match submit_parsed_graph(state, req, g) {
             Ok(id) => ids.push(id),
             Err(resp) => return resp,
         }
@@ -344,15 +409,11 @@ fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     let mut results = Vec::with_capacity(ids.len());
     for id in &ids {
         match state.store.wait_outcome(id, Duration::from_secs(300)) {
-            Some(Ok(json)) => {
-                state.store.remove(id);
-                match parse(&json) {
-                    Ok(j) => results.push(j),
-                    Err(e) => return Response::json(500, format!("{{\"error\":\"{e}\"}}")),
-                }
-            }
+            Some(Ok(json)) => match parse(&json) {
+                Ok(j) => results.push(j),
+                Err(e) => return Response::json(500, format!("{{\"error\":\"{e}\"}}")),
+            },
             Some(Err(e)) => {
-                state.store.remove(id);
                 return Response::json(500, format!("{{\"error\":{}}}", Json::from(e)));
             }
             None => return Response::json(500, "{\"error\":\"session timeout\"}".into()),
@@ -362,6 +423,108 @@ fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
         200,
         Json::obj(vec![("results", Json::Array(results))]).to_string(),
     )
+}
+
+/// The stateful path: whole-bundle validation, ordered execution with
+/// server-side state threading, one bundled result.
+fn stateful_session(
+    state: &Arc<ServerState>,
+    req: &Request,
+    graphs: Vec<crate::graph::InterventionGraph>,
+    named: Option<&str>,
+) -> Response {
+    let Some(model) = graphs.first().map(|g| g.model.clone()) else {
+        return Response::bad_request("stateful session has no traces");
+    };
+    if graphs.iter().any(|g| g.model != model) {
+        return Response::bad_request(
+            "stateful session traces must target one model (state lives with its service)",
+        );
+    }
+    let Some(service) = state.services.get(&model) else {
+        return Response::json(404, format!("{{\"error\":\"model '{model}' not hosted\"}}"));
+    };
+    if !state.authorize(&model, req.header("x-ndif-auth")) {
+        return Response::json(401, "{\"error\":\"not authorized for this model\"}".into());
+    }
+    // "es-" is the anonymous-session namespace: a client-named session in
+    // it could collide with a generated id, exposing or destroying state
+    if let Some(s) = named {
+        if s.starts_with("es-") {
+            return Response::bad_request(
+                "session ids beginning with 'es-' are reserved for anonymous sessions",
+            );
+        }
+    }
+    let (session, persist) = match named {
+        Some(s) => (s.to_string(), true),
+        None => (format!("es-{}", state.next_id.fetch_add(1, Ordering::Relaxed)), false),
+    };
+    // a reused session id must stay on the model its state is bound to
+    if let Some(bound) = state.session_state.model_of(&session) {
+        if bound != model {
+            return Response::bad_request(&format!(
+                "session '{session}' is bound to model '{bound}', not '{model}'"
+            ));
+        }
+    }
+    // whole-bundle validation: keys stored by trace i are loadable from
+    // trace i+1 on; a persistent session also starts with its live keys
+    let initial = state.session_state.keys(&session).unwrap_or_default();
+    let fseq = service.runner.manifest.forward_sequence();
+    if let Err(e) = crate::graph::validate::validate_session(&graphs, &fseq, &initial) {
+        return Response::bad_request(&e.to_string());
+    }
+    let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
+    if let Err(e) = service.submit_session(id.clone(), session, persist, graphs) {
+        return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
+    }
+    match state.store.wait_outcome(&id, Duration::from_secs(300)) {
+        Some(Ok(json)) => Response::json(200, json),
+        Some(Err(e)) => Response::json(500, format!("{{\"error\":{}}}", Json::from(e))),
+        None => Response::json(500, "{\"error\":\"session timeout\"}".into()),
+    }
+}
+
+/// Observability: keys, bytes, and idle age of a live session's state.
+/// Gated by the same per-model auth as submitting to that model.
+fn session_info_endpoint(state: &Arc<ServerState>, req: &Request, id: &str) -> Response {
+    let Some(s) = state.session_state.summary(id) else {
+        return Response::not_found();
+    };
+    if !state.authorize(&s.model, req.header("x-ndif-auth")) {
+        return Response::json(401, "{\"error\":\"not authorized for this model\"}".into());
+    }
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("session", Json::from(id)),
+            ("model", Json::from(s.model.as_str())),
+            (
+                "keys",
+                Json::Array(s.keys.iter().map(|k| Json::from(k.as_str())).collect()),
+            ),
+            ("bytes", Json::from(s.bytes)),
+            ("idle_ms", Json::from(s.idle.as_millis() as i64)),
+        ])
+        .to_string(),
+    )
+}
+
+/// Explicit end-of-session: drop the state (the client is done). Gated by
+/// the same per-model auth as submitting to that model.
+fn session_drop_endpoint(state: &Arc<ServerState>, req: &Request, id: &str) -> Response {
+    let Some(model) = state.session_state.model_of(id) else {
+        return Response::not_found();
+    };
+    if !state.authorize(&model, req.header("x-ndif-auth")) {
+        return Response::json(401, "{\"error\":\"not authorized for this model\"}".into());
+    }
+    if state.session_state.drop_session(id) {
+        Response::json(200, "{\"dropped\":true}".into())
+    } else {
+        Response::not_found()
+    }
 }
 
 /// Parse `/v1/result/<id>[?…]` into `(id, timeout_ms)`. `timeout_ms` may
@@ -393,15 +556,10 @@ fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
         Ok(v) => v,
         Err(resp) => return resp,
     };
+    // wait_outcome evicts completed entries on pickup
     match state.store.wait_outcome(id, Duration::from_millis(timeout_ms)) {
-        Some(Ok(json)) => {
-            state.store.remove(id);
-            Response::json(200, json)
-        }
-        Some(Err(e)) => {
-            state.store.remove(id);
-            Response::json(500, format!("{{\"error\":{}}}", Json::from(e)))
-        }
+        Some(Ok(json)) => Response::json(200, json),
+        Some(Err(e)) => Response::json(500, format!("{{\"error\":{}}}", Json::from(e))),
         None => match state.store.peek(id) {
             Some(Entry::Pending) => {
                 Response::json(202, "{\"status\":\"pending\"}".into())

@@ -22,6 +22,8 @@
 pub mod api;
 pub mod config;
 pub mod http;
+pub mod state;
 pub mod store;
 
 pub use api::{NdifConfig, NdifServer};
+pub use state::{SessionStateStore, StateLimits};

@@ -1,0 +1,313 @@
+//! Server-side session state: named tensor variables that live *in the
+//! fabric* across traces (paper §B.1 Code Example 5, "Remote Execution and
+//! Session").
+//!
+//! Each session owns a keyed map of tensors — probe weights, LoRA
+//! adapters, optimizer moments — created and updated by `Op::StoreState`
+//! nodes and read by `Op::LoadState` nodes. Keeping this state co-resident
+//! with the model turns an N-step training loop from 2N WAN transfers
+//! into 2 (upload the trace bundle once, download the saved scalars once).
+//!
+//! Lifecycle:
+//! * **create** — a session entry is opened on first use (`open`);
+//! * **read** — each trace executes against a [`snapshot`] of the values
+//!   as of trace start (loads are pre-phase);
+//! * **update** — the trace's collected store updates [`commit`]
+//!   atomically after it completes (post-phase), with byte accounting
+//!   against a per-session budget;
+//! * **drop** — explicit end-of-session, or TTL expiry for sessions a
+//!   client abandoned (swept opportunistically on every open/commit).
+//!
+//! [`snapshot`]: SessionStateStore::snapshot
+//! [`commit`]: SessionStateStore::commit
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+/// Budget and expiry knobs for a [`SessionStateStore`].
+#[derive(Clone, Copy, Debug)]
+pub struct StateLimits {
+    /// Upper bound on one session's tensor bytes (f32 payload).
+    pub max_bytes_per_session: usize,
+    /// Upper bound on live sessions.
+    pub max_sessions: usize,
+    /// Sessions untouched for longer than this are expired.
+    pub ttl: Duration,
+}
+
+impl Default for StateLimits {
+    fn default() -> StateLimits {
+        StateLimits {
+            max_bytes_per_session: 64 << 20, // 64 MiB of parameters
+            max_sessions: 1024,
+            ttl: Duration::from_secs(600),
+        }
+    }
+}
+
+struct SessionEntry {
+    /// The model this session is bound to: state lives with one model
+    /// service, and an id collision across models is a client error, not a
+    /// silent shared namespace.
+    model: String,
+    vars: HashMap<String, Tensor>,
+    bytes: usize,
+    last_touch: Instant,
+}
+
+/// Point-in-time description of one session's state (observability).
+#[derive(Clone, Debug)]
+pub struct SessionSummary {
+    pub model: String,
+    pub keys: Vec<String>,
+    pub bytes: usize,
+    pub idle: Duration,
+}
+
+/// Thread-safe store of per-session named tensors.
+pub struct SessionStateStore {
+    sessions: Mutex<HashMap<String, SessionEntry>>,
+    limits: StateLimits,
+}
+
+fn tensor_bytes(t: &Tensor) -> usize {
+    t.numel() * std::mem::size_of::<f32>()
+}
+
+impl Default for SessionStateStore {
+    fn default() -> Self {
+        Self::new(StateLimits::default())
+    }
+}
+
+impl SessionStateStore {
+    pub fn new(limits: StateLimits) -> SessionStateStore {
+        SessionStateStore { sessions: Mutex::new(HashMap::new()), limits }
+    }
+
+    pub fn limits(&self) -> StateLimits {
+        self.limits
+    }
+
+    /// Create the session (bound to `model`) if absent and refresh its TTL
+    /// clock. Errors when the store is at its session cap and the id is
+    /// new, or when the id already exists bound to a different model.
+    pub fn open(&self, id: &str, model: &str) -> Result<()> {
+        let mut g = self.sessions.lock().unwrap();
+        Self::sweep(&mut g, self.limits.ttl);
+        if let Some(e) = g.get_mut(id) {
+            if e.model != model {
+                return Err(anyhow!(
+                    "session '{id}' is bound to model '{}', not '{model}'",
+                    e.model
+                ));
+            }
+            e.last_touch = Instant::now();
+            return Ok(());
+        }
+        if g.len() >= self.limits.max_sessions {
+            return Err(anyhow!(
+                "session-state store full ({} sessions)",
+                self.limits.max_sessions
+            ));
+        }
+        g.insert(
+            id.to_string(),
+            SessionEntry {
+                model: model.to_string(),
+                vars: HashMap::new(),
+                bytes: 0,
+                last_touch: Instant::now(),
+            },
+        );
+        Ok(())
+    }
+
+    /// The model a live session is bound to.
+    pub fn model_of(&self, id: &str) -> Option<String> {
+        self.sessions.lock().unwrap().get(id).map(|e| e.model.clone())
+    }
+
+    /// Clone the session's variables (the state view a trace executes
+    /// against). None = unknown/expired session.
+    pub fn snapshot(&self, id: &str) -> Option<HashMap<String, Tensor>> {
+        let mut g = self.sessions.lock().unwrap();
+        let e = g.get_mut(id)?;
+        e.last_touch = Instant::now();
+        Some(e.vars.clone())
+    }
+
+    /// Keys currently present in a session (validation of follow-up
+    /// trace bundles).
+    pub fn keys(&self, id: &str) -> Option<BTreeSet<String>> {
+        let g = self.sessions.lock().unwrap();
+        Some(g.get(id)?.vars.keys().cloned().collect())
+    }
+
+    /// Commit a trace's store updates atomically: either every update
+    /// lands or (over budget / unknown session) none do.
+    pub fn commit(&self, id: &str, updates: BTreeMap<String, Tensor>) -> Result<()> {
+        let mut g = self.sessions.lock().unwrap();
+        Self::sweep(&mut g, self.limits.ttl);
+        let e = g
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("session '{id}' unknown or expired"))?;
+        let mut bytes = e.bytes;
+        for (k, v) in &updates {
+            bytes += tensor_bytes(v);
+            if let Some(old) = e.vars.get(k) {
+                bytes -= tensor_bytes(old);
+            }
+        }
+        if bytes > self.limits.max_bytes_per_session {
+            return Err(anyhow!(
+                "session '{id}' state budget exceeded: {bytes} bytes > {} byte cap",
+                self.limits.max_bytes_per_session
+            ));
+        }
+        for (k, v) in updates {
+            e.vars.insert(k, v);
+        }
+        e.bytes = bytes;
+        e.last_touch = Instant::now();
+        Ok(())
+    }
+
+    /// End a session, freeing its tensors. Returns whether it existed.
+    pub fn drop_session(&self, id: &str) -> bool {
+        self.sessions.lock().unwrap().remove(id).is_some()
+    }
+
+    /// Observability snapshot for `GET /v1/session/<id>`.
+    pub fn summary(&self, id: &str) -> Option<SessionSummary> {
+        let g = self.sessions.lock().unwrap();
+        let e = g.get(id)?;
+        let mut keys: Vec<String> = e.vars.keys().cloned().collect();
+        keys.sort();
+        Some(SessionSummary {
+            model: e.model.clone(),
+            keys,
+            bytes: e.bytes,
+            idle: e.last_touch.elapsed(),
+        })
+    }
+
+    /// Expire sessions idle past the TTL (also runs opportunistically on
+    /// every open/commit). Returns how many were dropped.
+    pub fn expire(&self) -> usize {
+        let mut g = self.sessions.lock().unwrap();
+        let before = g.len();
+        Self::sweep(&mut g, self.limits.ttl);
+        before - g.len()
+    }
+
+    fn sweep(g: &mut HashMap<String, SessionEntry>, ttl: Duration) {
+        g.retain(|_, e| e.last_touch.elapsed() <= ttl);
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total tensor bytes held across all sessions.
+    pub fn total_bytes(&self) -> usize {
+        self.sessions.lock().unwrap().values().map(|e| e.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(limits: StateLimits) -> SessionStateStore {
+        SessionStateStore::new(limits)
+    }
+
+    #[test]
+    fn create_read_update_lifecycle() {
+        let s = store(StateLimits::default());
+        s.open("a", "tiny-sim").unwrap();
+        assert!(s.snapshot("a").unwrap().is_empty());
+        assert_eq!(s.model_of("a").as_deref(), Some("tiny-sim"));
+        // the id is bound to its model: reuse under another model is an error
+        assert!(s.open("a", "other-model").is_err());
+        let mut up = BTreeMap::new();
+        up.insert("w".to_string(), Tensor::full(&[2, 2], 1.0));
+        s.commit("a", up).unwrap();
+        assert_eq!(s.snapshot("a").unwrap()["w"].data(), &[1.0; 4]);
+        assert_eq!(s.keys("a").unwrap().len(), 1);
+        assert_eq!(s.total_bytes(), 16);
+
+        // update in place: byte accounting replaces, not accumulates
+        let mut up = BTreeMap::new();
+        up.insert("w".to_string(), Tensor::full(&[2, 2], 2.0));
+        s.commit("a", up).unwrap();
+        assert_eq!(s.total_bytes(), 16);
+
+        assert!(s.drop_session("a"));
+        assert!(s.snapshot("a").is_none());
+        assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn byte_budget_enforced_atomically() {
+        let s = store(StateLimits { max_bytes_per_session: 32, ..Default::default() });
+        s.open("a", "m").unwrap();
+        let mut up = BTreeMap::new();
+        up.insert("small".to_string(), Tensor::full(&[4], 0.0)); // 16 B
+        up.insert("big".to_string(), Tensor::full(&[8], 0.0)); // 32 B → 48 total
+        assert!(s.commit("a", up).is_err());
+        // nothing landed
+        assert!(s.snapshot("a").unwrap().is_empty());
+        assert_eq!(s.total_bytes(), 0);
+    }
+
+    #[test]
+    fn session_cap_enforced() {
+        let s = store(StateLimits { max_sessions: 2, ..Default::default() });
+        s.open("a", "m").unwrap();
+        s.open("b", "m").unwrap();
+        assert!(s.open("c", "m").is_err());
+        // reopening an existing session is fine at the cap
+        s.open("a", "m").unwrap();
+    }
+
+    #[test]
+    fn ttl_expires_abandoned_sessions() {
+        let s = store(StateLimits { ttl: Duration::from_millis(20), ..Default::default() });
+        s.open("a", "m").unwrap();
+        let mut up = BTreeMap::new();
+        up.insert("w".to_string(), Tensor::full(&[1], 0.0));
+        s.commit("a", up).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(s.expire(), 1);
+        assert!(s.snapshot("a").is_none());
+        // committing into an expired session is an error, not a revival
+        let mut up = BTreeMap::new();
+        up.insert("w".to_string(), Tensor::full(&[1], 0.0));
+        assert!(s.commit("a", up).is_err());
+    }
+
+    #[test]
+    fn touch_keeps_sessions_alive() {
+        let s = store(StateLimits { ttl: Duration::from_millis(60), ..Default::default() });
+        s.open("a", "m").unwrap();
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(s.snapshot("a").is_some(), "touched session must not expire");
+        }
+        let sum = s.summary("a").unwrap();
+        assert!(sum.keys.is_empty());
+        assert!(sum.idle < Duration::from_millis(60));
+    }
+}

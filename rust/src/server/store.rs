@@ -6,6 +6,18 @@
 //! the websocket with condvar-backed long-polling: `GET /v1/result/<id>`
 //! blocks (bounded) until the entry is ready — same lifecycle, one fewer
 //! protocol.
+//!
+//! Memory is bounded two ways so the map cannot grow forever under
+//! sustained traffic:
+//! * **eviction on pickup** — [`ObjectStore::wait_outcome`] *takes* a
+//!   `Ready`/`Failed` entry out of the map as it hands it to the waiter
+//!   (first puller wins; a re-poll of a delivered id is a 404, which was
+//!   already the contract when callers removed after reading);
+//! * **TTL expiry** — entries a client abandoned are swept on subsequent
+//!   store writes: `Ready`/`Failed` entries older than the TTL, and
+//!   `Pending` entries older than 4× the TTL (pending work may
+//!   legitimately sit behind a deep queue; results nobody ever asked for
+//!   must still go away).
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
@@ -19,10 +31,22 @@ pub enum Entry {
     Failed(String),
 }
 
-/// Thread-safe result store with wakeups.
+struct Slot {
+    entry: Entry,
+    at: Instant,
+}
+
+struct Slots {
+    map: HashMap<String, Slot>,
+    last_sweep: Instant,
+}
+
+/// Thread-safe result store with wakeups, bounded by pickup-eviction and
+/// TTL expiry.
 pub struct ObjectStore {
-    entries: Mutex<HashMap<String, Entry>>,
+    slots: Mutex<Slots>,
     cv: Condvar,
+    ttl: Duration,
 }
 
 impl Default for ObjectStore {
@@ -32,49 +56,81 @@ impl Default for ObjectStore {
 }
 
 impl ObjectStore {
+    /// Default TTL: long enough for the longest legitimate long-poll
+    /// cadence, short enough that abandoned results don't accumulate.
+    pub const DEFAULT_TTL: Duration = Duration::from_secs(600);
+
     pub fn new() -> ObjectStore {
-        ObjectStore { entries: Mutex::new(HashMap::new()), cv: Condvar::new() }
+        ObjectStore::with_ttl(Self::DEFAULT_TTL)
+    }
+
+    pub fn with_ttl(ttl: Duration) -> ObjectStore {
+        ObjectStore {
+            slots: Mutex::new(Slots { map: HashMap::new(), last_sweep: Instant::now() }),
+            cv: Condvar::new(),
+            ttl,
+        }
+    }
+
+    fn put(&self, id: &str, entry: Entry) {
+        let mut g = self.slots.lock().unwrap();
+        Self::maybe_sweep(&mut g, self.ttl, false);
+        g.map
+            .insert(id.to_string(), Slot { entry, at: Instant::now() });
+    }
+
+    /// Sweep at most every `ttl / 4` so writes stay O(1) amortized.
+    fn maybe_sweep(g: &mut Slots, ttl: Duration, force: bool) {
+        if !force && g.last_sweep.elapsed() < ttl / 4 {
+            return;
+        }
+        g.last_sweep = Instant::now();
+        g.map.retain(|_, s| {
+            let limit = match s.entry {
+                Entry::Pending => ttl * 4,
+                _ => ttl,
+            };
+            s.at.elapsed() <= limit
+        });
     }
 
     /// Register a pending request id.
     pub fn put_pending(&self, id: &str) {
-        self.entries
-            .lock()
-            .unwrap()
-            .insert(id.to_string(), Entry::Pending);
+        self.put(id, Entry::Pending);
     }
 
     pub fn put_ready(&self, id: &str, json: String) {
-        self.entries
-            .lock()
-            .unwrap()
-            .insert(id.to_string(), Entry::Ready(json));
+        self.put(id, Entry::Ready(json));
         self.cv.notify_all();
     }
 
     pub fn put_failed(&self, id: &str, err: &str) {
-        self.entries
-            .lock()
-            .unwrap()
-            .insert(id.to_string(), Entry::Failed(err.to_string()));
+        self.put(id, Entry::Failed(err.to_string()));
         self.cv.notify_all();
     }
 
-    /// Current state without blocking (None = unknown id).
+    /// Current state without blocking (None = unknown id). Does not evict.
     pub fn peek(&self, id: &str) -> Option<Entry> {
-        self.entries.lock().unwrap().get(id).cloned()
+        self.slots.lock().unwrap().map.get(id).map(|s| s.entry.clone())
     }
 
-    /// Block until the entry leaves Pending or the timeout passes.
-    /// Returns None on unknown id or timeout-while-pending.
+    /// Block until the entry leaves Pending or the timeout passes,
+    /// **taking** the completed entry out of the store (eviction on
+    /// pickup). Returns None on unknown id or timeout-while-pending.
     pub fn wait_outcome(&self, id: &str, timeout: Duration) -> Option<Result<String, String>> {
         let deadline = Instant::now() + timeout;
-        let mut guard = self.entries.lock().unwrap();
+        let mut guard = self.slots.lock().unwrap();
         loop {
-            match guard.get(id) {
+            match guard.map.get(id).map(|s| &s.entry) {
                 None => return None,
-                Some(Entry::Ready(s)) => return Some(Ok(s.clone())),
-                Some(Entry::Failed(e)) => return Some(Err(e.clone())),
+                Some(Entry::Ready(_) | Entry::Failed(_)) => {
+                    let slot = guard.map.remove(id).expect("presence checked above");
+                    return Some(match slot.entry {
+                        Entry::Ready(s) => Ok(s),
+                        Entry::Failed(e) => Err(e),
+                        Entry::Pending => unreachable!("matched completed above"),
+                    });
+                }
                 Some(Entry::Pending) => {
                     let now = Instant::now();
                     if now >= deadline {
@@ -95,13 +151,20 @@ impl ObjectStore {
         }
     }
 
-    /// Remove a delivered entry (client fetched it).
+    /// Remove an entry regardless of state (cancellation paths).
     pub fn remove(&self, id: &str) -> Option<Entry> {
-        self.entries.lock().unwrap().remove(id)
+        self.slots.lock().unwrap().map.remove(id).map(|s| s.entry)
+    }
+
+    /// Force-expire overdue entries now (tests); returns how many remain.
+    pub fn sweep_now(&self) -> usize {
+        let mut g = self.slots.lock().unwrap();
+        Self::maybe_sweep(&mut g, self.ttl, true);
+        g.map.len()
     }
 
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.slots.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -115,16 +178,17 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
-    fn lifecycle() {
+    fn lifecycle_with_pickup_eviction() {
         let s = ObjectStore::new();
         assert!(s.peek("x").is_none());
         s.put_pending("x");
         assert_eq!(s.peek("x"), Some(Entry::Pending));
         s.put_ready("x", "{}".into());
         assert_eq!(s.peek("x"), Some(Entry::Ready("{}".into())));
+        // pickup takes the entry with it
         assert_eq!(s.wait_ready("x", Duration::from_millis(1)), Some("{}".into()));
-        s.remove("x");
         assert!(s.peek("x").is_none());
+        assert!(s.is_empty());
     }
 
     #[test]
@@ -149,10 +213,12 @@ mod tests {
         s.put_pending("r");
         let got = s.wait_outcome("r", Duration::from_millis(20));
         assert!(got.is_none());
+        // a timeout does not evict: the job may still complete
+        assert_eq!(s.peek("r"), Some(Entry::Pending));
     }
 
     #[test]
-    fn failure_propagates() {
+    fn failure_propagates_and_evicts() {
         let s = ObjectStore::new();
         s.put_pending("r");
         s.put_failed("r", "boom");
@@ -160,5 +226,37 @@ mod tests {
             s.wait_outcome("r", Duration::from_millis(1)),
             Some(Err("boom".into()))
         );
+        assert!(s.peek("r").is_none());
+    }
+
+    #[test]
+    fn ttl_expires_abandoned_results() {
+        let s = ObjectStore::with_ttl(Duration::from_millis(20));
+        s.put_ready("abandoned", "{}".into());
+        s.put_failed("also-abandoned", "boom");
+        s.put_pending("queued");
+        std::thread::sleep(Duration::from_millis(40));
+        // completed entries past the TTL are gone; pending survives to 4×
+        assert_eq!(s.sweep_now(), 1);
+        assert!(s.peek("abandoned").is_none());
+        assert!(s.peek("also-abandoned").is_none());
+        assert_eq!(s.peek("queued"), Some(Entry::Pending));
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(s.sweep_now(), 0);
+        assert!(s.peek("queued").is_none());
+    }
+
+    #[test]
+    fn sustained_traffic_stays_bounded() {
+        // unfetched results must not accumulate past the TTL window
+        let s = ObjectStore::with_ttl(Duration::from_millis(10));
+        for i in 0..200 {
+            s.put_ready(&format!("r{i}"), "{}".into());
+            if i % 50 == 49 {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(s.sweep_now() < 200, "store grew without bound");
     }
 }

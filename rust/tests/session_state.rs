@@ -1,0 +1,354 @@
+//! Session-state integration: server-side variables flowing across traces
+//! (store → load → update), validator rejections over the wire, persistent
+//! sessions, and coordinator stickiness with replica-death semantics.
+
+use std::time::{Duration, Instant};
+
+use nnscope::client::infabric::{probe_training_session, stable_lr};
+use nnscope::client::remote::{is_retryable_session_err, NdifClient};
+use nnscope::client::{Session, Trace};
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{http, NdifConfig, NdifServer, StateLimits};
+use nnscope::tensor::Tensor;
+
+fn start_server() -> NdifServer {
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&["tiny-sim"]) };
+    NdifServer::start(cfg).unwrap()
+}
+
+fn tokens() -> Tensor {
+    Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect())
+}
+
+/// t0 stores 2.0 → `acc`; t1 loads, ×3, stores + saves; t2 loads, +1,
+/// saves. A three-trace chain whose results prove cross-trace dataflow.
+fn accumulator_session() -> (Session, nnscope::client::SavedRef, nnscope::client::SavedRef) {
+    let mut session = Session::new();
+    let mut t0 = Trace::new("tiny-sim", &tokens());
+    let c = t0.constant(&Tensor::scalar(2.0));
+    t0.save_to_state("acc", c);
+    session.add(t0);
+    let mut t1 = Trace::new("tiny-sim", &tokens());
+    let a = t1.from_state("acc");
+    let a3 = t1.scale(a, 3.0);
+    t1.save_to_state("acc", a3);
+    let s1 = t1.save(a3);
+    session.add(t1);
+    let mut t2 = Trace::new("tiny-sim", &tokens());
+    let a = t2.from_state("acc");
+    let one = t2.constant(&Tensor::scalar(1.0));
+    let sum = t2.add(a, one);
+    let s2 = t2.save(sum);
+    session.add(t2);
+    (session, s1, s2)
+}
+
+#[test]
+fn state_flows_across_three_traces_remote_and_local() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let (session, s1, s2) = accumulator_session();
+    let results = session.run_remote(&client).unwrap();
+    assert_eq!(results.len(), 3);
+    assert_eq!(results[1].get(s1).item(), 6.0);
+    assert_eq!(results[2].get(s2).item(), 7.0);
+
+    // the local path threads state identically
+    let runner =
+        nnscope::models::ModelRunner::load(&nnscope::models::artifacts_dir(), "tiny-sim").unwrap();
+    let (session, s1, s2) = accumulator_session();
+    let results = session.run_local(&runner).unwrap();
+    assert_eq!(results[1].get(s1).item(), 6.0);
+    assert_eq!(results[2].get(s2).item(), 7.0);
+}
+
+#[test]
+fn load_before_store_rejected_at_submit() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let mut session = Session::new();
+    let mut t0 = Trace::new("tiny-sim", &tokens());
+    let w = t0.from_state("never-stored");
+    t0.save(w);
+    session.add(t0);
+    let err = session.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("load-before-store"), "{err}");
+}
+
+#[test]
+fn state_ops_rejected_on_trace_endpoint() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    let c = tr.constant(&Tensor::scalar(1.0));
+    tr.save_to_state("w", c);
+    let err = tr.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("/v1/session"), "{err}");
+}
+
+#[test]
+fn persistent_session_survives_requests_until_dropped() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+
+    // request 1: store
+    let mut session = Session::new().with_id("probe-42");
+    let mut t0 = Trace::new("tiny-sim", &tokens());
+    let c = t0.constant(&Tensor::full(&[2], 5.0));
+    t0.save_to_state("w", c);
+    session.add(t0);
+    session.run_remote(&client).unwrap();
+
+    // state is observable between requests
+    let (keys, bytes, _idle) = client.session_info("probe-42").unwrap();
+    assert_eq!(keys, vec!["w".to_string()]);
+    assert_eq!(bytes, 8);
+
+    // request 2: load continues from the stored value
+    let mut session = Session::new().with_id("probe-42");
+    let mut t1 = Trace::new("tiny-sim", &tokens());
+    let w = t1.from_state("w");
+    let s = t1.save(w);
+    session.add(t1);
+    let results = session.run_remote(&client).unwrap();
+    assert_eq!(results[0].get(s).data(), &[5.0, 5.0]);
+
+    // drop, then the key is gone (load-before-store again)
+    assert!(client.drop_session("probe-42").unwrap());
+    assert!(client.session_info("probe-42").is_err());
+    let mut session = Session::new().with_id("probe-42");
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let w = t.from_state("w");
+    t.save(w);
+    session.add(t);
+    assert!(session.run_remote(&client).is_err());
+}
+
+#[test]
+fn anonymous_namespace_is_reserved() {
+    // a client-named session may not squat the generated-id namespace
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let mut session = Session::new().with_id("es-1");
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let c = t.constant(&Tensor::scalar(1.0));
+    t.save_to_state("w", c);
+    session.add(t);
+    let err = session.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("reserved"), "{err}");
+}
+
+#[test]
+fn sessions_cannot_read_each_others_state() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+
+    let mut session = Session::new().with_id("alice");
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let c = t.constant(&Tensor::scalar(1.0));
+    t.save_to_state("secret", c);
+    session.add(t);
+    session.run_remote(&client).unwrap();
+
+    // a different session loading alice's key fails validation
+    let mut session = Session::new().with_id("mallory");
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let w = t.from_state("secret");
+    t.save(w);
+    session.add(t);
+    let err = session.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("load-before-store"), "{err}");
+
+    // ...and so does an anonymous (ephemeral) session
+    let mut session = Session::new();
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let w = t.from_state("secret");
+    t.save(w);
+    session.add(t);
+    assert!(session.run_remote(&client).is_err());
+}
+
+#[test]
+fn session_lifecycle_endpoints_respect_model_auth() {
+    use std::collections::HashMap;
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.auth = HashMap::from([("tiny-sim".to_string(), vec!["sesame".to_string()])]);
+    let server = NdifServer::start(cfg).unwrap();
+    let authed = NdifClient::new(server.addr()).with_token("sesame");
+
+    let mut session = Session::new().with_id("gated");
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let c = t.constant(&Tensor::scalar(1.0));
+    t.save_to_state("w", c);
+    session.add(t);
+    session.run_remote(&authed).unwrap();
+
+    // no token: neither inspect nor destroy another client's state
+    let anon = NdifClient::new(server.addr());
+    assert!(anon.session_info("gated").is_err());
+    let (status, _) = http::http_request(
+        server.addr(),
+        "DELETE",
+        "/v1/session/gated",
+        b"",
+        &[],
+    )
+    .unwrap();
+    assert_eq!(status, 401);
+    // the state is still there for the authorized owner
+    let (keys, _, _) = authed.session_info("gated").unwrap();
+    assert_eq!(keys, vec!["w".to_string()]);
+    assert!(authed.drop_session("gated").unwrap());
+}
+
+#[test]
+fn state_byte_budget_fails_session_cleanly() {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.state_limits = StateLimits { max_bytes_per_session: 8, ..Default::default() };
+    let server = NdifServer::start(cfg).unwrap();
+    let client = NdifClient::new(server.addr());
+    let mut session = Session::new();
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let c = t.constant(&Tensor::full(&[16], 1.0)); // 64 B > 8 B cap
+    t.save_to_state("w", c);
+    session.add(t);
+    let err = session.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn in_fabric_training_loop_single_request_reduces_loss() {
+    // the probe_training example's core, as an assertion: a 5-step SGD
+    // loop whose parameters live entirely in session state
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let (d, steps) = (32usize, 5usize);
+
+    // stable step size from the activation scale
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    let h0 = tr.output("layer.0");
+    let s0 = tr.save(h0);
+    let res = tr.run_remote(&client).unwrap();
+    let lr = stable_lr(res.get(s0), 0.5);
+
+    let mut w0 = Tensor::zeros(&[d, d]);
+    let mut rng = nnscope::util::Prng::new(8);
+    rng.fill_uniform_sym(w0.data_mut(), 0.05);
+    let b0 = Tensor::zeros(&[d]);
+
+    let plan = probe_training_session(
+        "tiny-sim",
+        &tokens(),
+        ("layer.0", "layer.1"),
+        steps,
+        lr,
+        (&w0, &b0),
+    );
+    let results = plan.session.run_remote(&client).unwrap();
+    let losses: Vec<f32> = plan
+        .loss_saves
+        .iter()
+        .zip(&results)
+        .map(|(s, r)| r.get(*s).item())
+        .collect();
+    assert!(
+        losses[steps - 1] < losses[0],
+        "in-fabric SGD failed to reduce loss: {losses:?}"
+    );
+    // the final trace returns the trained parameters
+    let final_res = results.last().unwrap();
+    assert_eq!(final_res.get(plan.w_save).dims(), &[d, d]);
+    assert_eq!(final_res.get(plan.b_save).dims(), &[d]);
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator stickiness
+// ---------------------------------------------------------------------------
+
+fn coordinator() -> Coordinator {
+    let mut cfg = CoordinatorConfig::local();
+    cfg.policy = Policy::RoundRobin;
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.health.degraded_after = Duration::from_millis(400);
+    cfg.health.dead_after = Duration::from_secs(2);
+    Coordinator::start(cfg).unwrap()
+}
+
+fn replica(coord: &Coordinator) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.coordinator = Some(coord.addr().to_string());
+    cfg.heartbeat = Duration::from_millis(50);
+    NdifServer::start(cfg).unwrap()
+}
+
+fn store_via(client: &NdifClient, session_id: &str, v: f32) -> anyhow::Result<()> {
+    let mut session = Session::new().with_id(session_id);
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let c = t.constant(&Tensor::scalar(v));
+    t.save_to_state("w", c);
+    session.add(t);
+    session.run_remote(client).map(|_| ())
+}
+
+fn load_via(client: &NdifClient, session_id: &str) -> anyhow::Result<f32> {
+    let mut session = Session::new().with_id(session_id);
+    let mut t = Trace::new("tiny-sim", &tokens());
+    let w = t.from_state("w");
+    let s = t.save(w);
+    session.add(t);
+    let results = session.run_remote(client)?;
+    Ok(results[0].get(s).item())
+}
+
+#[test]
+fn coordinator_pins_sessions_and_surfaces_replica_death_as_retryable() {
+    let coord = coordinator();
+    let r1 = replica(&coord);
+    let r2 = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+
+    store_via(&client, "sticky", 9.0).unwrap();
+    // follow-up bundles land on the state-holding replica — a mis-route
+    // would fail validation with load-before-store
+    for _ in 0..3 {
+        assert_eq!(load_via(&client, "sticky").unwrap(), 9.0);
+    }
+
+    // find and kill the replica holding the state
+    let mut replicas = [r1, r2];
+    let holder = replicas
+        .iter()
+        .position(|r| matches!(http::get(r.addr(), "/v1/session/sticky"), Ok((200, _))))
+        .expect("some replica holds the session state");
+    replicas[holder].kill();
+
+    // the session must now fail with a clean retryable error — not hang,
+    // not silently reroute to a replica that never saw the parameters
+    let err = load_via(&client, "sticky").unwrap_err();
+    assert!(is_retryable_session_err(&err), "{err}");
+
+    // once the registry notices the death, fresh sessions place on the
+    // survivor (fresh sticky placement does not fail over mid-request, so
+    // wait out the health transition instead of racing it)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = client.fleet_status().unwrap();
+        let dead = status
+            .get("replicas")
+            .as_array()
+            .unwrap()
+            .iter()
+            .filter(|r| r.get("health").as_str() == Some("dead"))
+            .count();
+        if dead >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "registry never marked the replica dead");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    store_via(&client, "sticky2", 4.0).unwrap();
+    assert_eq!(load_via(&client, "sticky2").unwrap(), 4.0);
+}
