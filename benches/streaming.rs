@@ -1,0 +1,132 @@
+//! Time-to-first-token vs full-generation latency over the paper WAN
+//! (ISSUE 4 acceptance bench).
+//!
+//! Workload: a streaming generation (`POST /v1/stream`) whose graph
+//! step-hooks a layer's hidden state — every decode step ships a real
+//! tensor payload, like an interactive probing client. The WAN link is
+//! [`NetSim::paper_wan`] in `Mode::Sleep`, so wallclock includes the
+//! simulated 10 ms / 60 MB/s link: the request and the first event each
+//! pay propagation latency, later events ride the open chunked pipeline
+//! and pay bandwidth only.
+//!
+//! Two numbers per run:
+//! * **time-to-first-token** — when the first `StepEvent` lands (what an
+//!   interactive client waits before it can render anything);
+//! * **full-generation latency** — when the `done` event lands (what a
+//!   blocking whole-request client waits for the same work).
+//!
+//! The acceptance bar is TTFT strictly below the full-generation round
+//! trip. Emits `BENCH_streaming.json` (gated by `tools/bench_gate.rs`).
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::client::remote::{NdifClient, StreamEvent};
+use nnscope::client::Trace;
+use nnscope::json::Json;
+use nnscope::netsim::{Mode, NetSim};
+use nnscope::runtime::Manifest;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+
+fn main() {
+    let quick = common::quick();
+    let model = "tiny-sim";
+    let steps = if quick { 48 } else { 128 };
+
+    let manifest = Manifest::load(&nnscope::models::artifacts_dir(), model).unwrap();
+    common::section(&format!(
+        "Streaming — time-to-first-token vs full generation, {steps} steps \
+         (paper WAN: 10 ms / 60 MB/s, {model})"
+    ));
+
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[model]) };
+    let server = NdifServer::start(cfg).expect("server");
+    let link = NetSim::paper_wan(Mode::Sleep);
+    let client = NdifClient::new(server.addr()).with_link(link.clone());
+
+    let tokens = Tensor::new(
+        &[1, manifest.seq],
+        (0..manifest.seq)
+            .map(|i| ((i * 7 + 3) % manifest.vocab) as f32)
+            .collect(),
+    );
+    // step-hook a whole hidden state so each event carries a real payload
+    let mut tr = Trace::new(model, &tokens);
+    let h = tr.output("layer.0");
+    tr.step_hook(h);
+
+    let t0 = std::time::Instant::now();
+    let mut ttft_wall = None;
+    let mut ttft_sim = None;
+    let mut events = 0usize;
+    let mut generated = 0usize;
+    for item in tr.run_stream(&client, steps).expect("open stream") {
+        match item.expect("stream event") {
+            StreamEvent::Step { .. } => {
+                if ttft_wall.is_none() {
+                    ttft_wall = Some(t0.elapsed().as_secs_f64());
+                    ttft_sim = Some(link.seconds_charged());
+                }
+                events += 1;
+            }
+            StreamEvent::Done { tokens, .. } => generated = tokens.len(),
+        }
+    }
+    let full_wall = t0.elapsed().as_secs_f64();
+    let full_sim = link.seconds_charged();
+    let ttft_wall = ttft_wall.expect("no step event");
+    let ttft_sim = ttft_sim.expect("no step event");
+    assert_eq!(events, steps);
+    assert_eq!(generated, steps);
+
+    let stream_speedup = full_wall / ttft_wall.max(1e-12);
+    let tokens_per_s = steps as f64 / full_wall.max(1e-12);
+
+    let mut table = Table::new("first token vs full generation").header(vec![
+        "milestone",
+        "wall (s)",
+        "simulated WAN share (s)",
+    ]);
+    table.row(vec![
+        "first StepEvent".to_string(),
+        format!("{ttft_wall:.4}"),
+        format!("{ttft_sim:.4}"),
+    ]);
+    table.row(vec![
+        format!("done ({steps} tokens)"),
+        format!("{full_wall:.4}"),
+        format!("{full_sim:.4}"),
+    ]);
+    table.print();
+    common::shape_note(&format!(
+        "first token after {:.0} ms; a blocking client waits {:.0} ms — {stream_speedup:.2}x \
+         longer (acceptance bar: TTFT strictly below full-generation latency)",
+        ttft_wall * 1e3,
+        full_wall * 1e3
+    ));
+    assert!(
+        ttft_wall < full_wall,
+        "time-to-first-token must beat the full-generation round trip"
+    );
+    assert!(ttft_sim <= full_sim);
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("streaming")),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::from(model)),
+        ("steps", Json::from(steps)),
+        ("wan_latency_s", Json::from(0.010)),
+        ("wan_bandwidth_bps", Json::from(60.0e6)),
+        ("ttft_wall_s", Json::from(ttft_wall)),
+        ("full_wall_s", Json::from(full_wall)),
+        ("ttft_simulated_wan_s", Json::from(ttft_sim)),
+        ("full_simulated_wan_s", Json::from(full_sim)),
+        ("stream_speedup", Json::from(stream_speedup)),
+        ("tokens_per_s", Json::from(tokens_per_s)),
+    ]);
+    std::fs::write("BENCH_streaming.json", json.pretty()).expect("write BENCH_streaming.json");
+    println!("\nwrote BENCH_streaming.json");
+}

@@ -1,0 +1,101 @@
+//! Streaming generation with per-step interventions: a logit lens probed
+//! at EVERY decode step, with events arriving while the rest of the
+//! generation is still running.
+//!
+//! Each step event carries, per layer, the token the unembedding would
+//! decode from that layer's last-position hidden state — watch the
+//! prediction form across depth, token by token, without waiting for the
+//! full generation (the latency gap `benches/streaming.rs` measures).
+//!
+//! Run: `cargo run --release --example streaming_probe -- [--model tiny-sim] [--steps 8]`
+
+use std::time::Instant;
+
+use nnscope::client::remote::{NdifClient, StreamEvent};
+use nnscope::client::{Trace, TraceResult};
+use nnscope::models::artifacts_dir;
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1);
+    let model = args.str_or("model", "tiny-sim");
+    let steps = args.usize_or("steps", 8);
+
+    let m = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
+    let wout = nnscope::models::weights::gen_param(
+        &m.name,
+        "lm_head",
+        "wout",
+        &[m.d_model, m.vocab],
+    );
+
+    println!("starting NDIF server with {model} …");
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&[&model]) };
+    let server = NdifServer::start(cfg)?;
+    let client = NdifClient::new(server.addr());
+
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 7 + 3) % m.vocab) as f32).collect(),
+    );
+
+    // the per-step probe: at every decode step, decode each layer's
+    // last-position hidden state through the unembedding; step_hook makes
+    // the per-layer argmax ids ride that step's event
+    let mut tr = Trace::new(&m.name, &tokens);
+    let w = tr.constant(&wout);
+    let mut lens_hooks = Vec::new();
+    for l in 0..m.n_layers {
+        let h = tr.output(&format!("layer.{l}"));
+        let last = tr.slice(h, &[Range1::one(0), Range1::one(m.seq - 1)]);
+        let lens = tr.matmul(last, w);
+        let top = tr.argmax(lens);
+        lens_hooks.push((l, tr.step_hook(top)));
+    }
+
+    let mut header = vec!["step".to_string(), "token".to_string()];
+    header.extend((0..m.n_layers).map(|l| format!("lens L{l}")));
+    let mut table =
+        Table::new(&format!("per-step logit lens — {model}, {steps} steps")).header(header);
+
+    let t0 = Instant::now();
+    let mut first_event = None;
+    let mut generated = Vec::new();
+    for item in tr.run_stream(&client, steps)? {
+        match item? {
+            StreamEvent::Step { step, token, values, .. } => {
+                if first_event.is_none() {
+                    first_event = Some(t0.elapsed());
+                }
+                let res = TraceResult::from_graph_result(values);
+                let mut row = vec![format!("{step}"), format!("{token}")];
+                for (_, hook) in &lens_hooks {
+                    row.push(format!("{}", res.get(*hook).data()[0] as usize));
+                }
+                table.row(row);
+            }
+            StreamEvent::Done { tokens, .. } => generated = tokens,
+        }
+    }
+    let total = t0.elapsed();
+    table.print();
+
+    let first = first_event.expect("no step event arrived");
+    println!(
+        "\ngenerated {:?}\nfirst StepEvent after {:.1} ms; full generation took {:.1} ms \
+         ({:.1}x the wait a blocking client pays)",
+        generated,
+        first.as_secs_f64() * 1e3,
+        total.as_secs_f64() * 1e3,
+        total.as_secs_f64() / first.as_secs_f64().max(1e-9),
+    );
+    assert!(
+        first < total,
+        "first event must arrive before the generation completes"
+    );
+    Ok(())
+}

@@ -216,6 +216,14 @@ impl Trace {
         SavedRef(self.graph.push(Op::Save { arg: x.0 }))
     }
 
+    /// Per-step emission for streaming generation: the value is computed
+    /// and returned at EVERY decode step (in that step's `StepEvent`),
+    /// not once per request. Only valid when the trace is executed as a
+    /// stream ([`remote::NdifClient::execute_stream`]).
+    pub fn step_hook(&mut self, x: NodeRef) -> SavedRef {
+        SavedRef(self.graph.push(Op::StepHook { arg: x.0 }))
+    }
+
     // ---- execution ----------------------------------------------------------
 
     /// Pre-flight shape check (FakeTensor analog); returns per-node shapes.
@@ -233,6 +241,17 @@ impl Trace {
     pub fn run_remote(self, client: &remote::NdifClient) -> Result<TraceResult> {
         let result = client.execute(&self.graph)?;
         Ok(TraceResult { result })
+    }
+
+    /// Execute remotely as a streaming generation: greedy-decode `steps`
+    /// tokens with this trace's interventions re-run at every step,
+    /// yielding per-step events as they arrive.
+    pub fn run_stream(
+        self,
+        client: &remote::NdifClient,
+        steps: usize,
+    ) -> Result<remote::StreamIter> {
+        client.execute_stream(&self.graph, steps)
     }
 
     /// The underlying graph (for the scheduler / tests / serialization).

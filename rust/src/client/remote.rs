@@ -218,6 +218,39 @@ impl NdifClient {
             .collect()
     }
 
+    /// Start a streaming generation (`POST /v1/stream`): greedy-decode
+    /// `steps` tokens, re-running the graph's interventions at every step.
+    /// Returns a blocking [`StreamIter`] that yields [`StreamEvent`]s as
+    /// the server produces them — the first event arrives while the rest
+    /// of the generation is still running, which is the whole point.
+    ///
+    /// Works identically against a single server or a coordinator (which
+    /// proxies the stream and converts a mid-stream replica death into a
+    /// retryable tail error — see [`is_retryable_stream_err`]).
+    pub fn execute_stream(&self, graph: &InterventionGraph, steps: usize) -> Result<StreamIter> {
+        let mut payload = gserde::to_json(graph);
+        payload.set("steps", Json::from(steps));
+        let payload = payload.to_string();
+        self.link.send(payload.len());
+        let (status, mut stream) = http::http_request_stream(
+            self.addr,
+            "POST",
+            "/v1/stream",
+            payload.as_bytes(),
+            &self.headers(),
+            Duration::from_secs(10),
+            self.poll_timeout,
+        )?;
+        if status != 200 {
+            let body = stream.read_body().unwrap_or_default();
+            return Err(anyhow!(
+                "stream submit failed ({status}): {}",
+                String::from_utf8_lossy(&body)
+            ));
+        }
+        Ok(StreamIter { stream, link: self.link.clone(), opened: false, finished: false })
+    }
+
     /// State summary of a live persistent session:
     /// `(keys, bytes, idle_ms)`. Errors on unknown/expired sessions.
     pub fn session_info(&self, session: &str) -> Result<(Vec<String>, usize, u64)> {
@@ -263,4 +296,134 @@ impl NdifClient {
 /// loop should restart from scratch (replica death mid-session)?
 pub fn is_retryable_session_err(e: &anyhow::Error) -> bool {
     e.to_string().contains("\"retryable\":true")
+}
+
+/// Does this stream error mean the serving replica died mid-stream and the
+/// client should restart the stream (rather than a graph/request fault)?
+pub fn is_retryable_stream_err(e: &anyhow::Error) -> bool {
+    e.to_string().contains("\"retryable\":true")
+}
+
+// ---------------------------------------------------------------------------
+// Streaming
+// ---------------------------------------------------------------------------
+
+/// One event of a streaming generation.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// A decode step completed: the chosen token, its logit, and the
+    /// values collected by `step_hook`/`save` nodes during that step.
+    Step {
+        step: usize,
+        token: usize,
+        score: f32,
+        values: GraphResult,
+    },
+    /// The stream finished; the full greedy trajectory.
+    Done {
+        tokens: Vec<usize>,
+        scores: Vec<f32>,
+    },
+}
+
+/// Blocking iterator over a live event stream. Yields `Step` events as
+/// they arrive, then exactly one `Done` — or one `Err`:
+/// * mid-stream replica death (via a coordinator) arrives as a tail error
+///   with `"retryable":true` ([`is_retryable_stream_err`]);
+/// * a direct transport cut (no coordinator to append the tail) surfaces
+///   as the same retryable error — truncation is NEVER a silent clean end;
+/// * a graph execution error arrives as a non-retryable error.
+///
+/// The iterator ends (returns `None`) after the terminal item either way.
+pub struct StreamIter {
+    stream: http::HttpStream,
+    link: NetSim,
+    /// First body frame already charged (latency paid once; later frames
+    /// ride the open pipeline).
+    opened: bool,
+    finished: bool,
+}
+
+impl StreamIter {
+    fn charge(&mut self, bytes: usize) {
+        if self.opened {
+            self.link.send_streamed(bytes);
+        } else {
+            self.link.send(bytes);
+            self.opened = true;
+        }
+    }
+
+    fn parse_event(&mut self, line: &str) -> Result<StreamEvent> {
+        let j = parse(line)?;
+        match j.get("event").as_str() {
+            Some("step") => {
+                let values = gserde::result_from_json(&j)?;
+                Ok(StreamEvent::Step {
+                    step: j.get("step").as_usize().unwrap_or(0),
+                    token: j.get("token").as_usize().unwrap_or(0),
+                    score: j.get("score").as_f64().unwrap_or(0.0) as f32,
+                    values,
+                })
+            }
+            Some("done") => Ok(StreamEvent::Done {
+                tokens: j
+                    .get("tokens")
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow!("done event missing tokens"))?,
+                scores: j
+                    .get("scores")
+                    .as_f64_vec()
+                    .unwrap_or_default()
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+            }),
+            Some("error") => {
+                let msg = j.get("error").as_str().unwrap_or("unknown stream error");
+                let retryable = j.get("retryable").as_bool().unwrap_or(false);
+                Err(anyhow!(
+                    "stream failed: {msg} {}",
+                    if retryable { "{\"retryable\":true}" } else { "" }
+                ))
+            }
+            other => Err(anyhow!("unknown stream event {other:?} in {line:?}")),
+        }
+    }
+}
+
+impl Iterator for StreamIter {
+    type Item = Result<StreamEvent>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        match self.stream.next_line() {
+            Ok(Some(line)) => {
+                self.charge(line.len() + 1);
+                let item = self.parse_event(&line);
+                if matches!(item, Ok(StreamEvent::Done { .. }) | Err(_)) {
+                    self.finished = true;
+                }
+                Some(item)
+            }
+            Ok(None) => {
+                // a clean chunked end without a terminal event: the server
+                // side stopped early — report it, retryably, not silently
+                self.finished = true;
+                Some(Err(anyhow!(
+                    "stream ended without a terminal event (server stopped mid-stream) \
+                     {{\"retryable\":true}}"
+                )))
+            }
+            Err(e) => {
+                // transport death mid-stream (direct replica connection)
+                self.finished = true;
+                Some(Err(anyhow!(
+                    "stream transport died mid-stream ({e}) {{\"retryable\":true}}"
+                )))
+            }
+        }
+    }
 }

@@ -117,7 +117,7 @@ pub fn scan_with_state(
                 out
             }
             Op::Scale { arg, .. } | Op::Gelu { arg } | Op::Softmax { arg } | Op::Save { arg }
-            | Op::StoreState { arg, .. } => shapes[*arg].clone(),
+            | Op::StepHook { arg } | Op::StoreState { arg, .. } => shapes[*arg].clone(),
             Op::LoadState { key } => state_shapes
                 .get(key)
                 .cloned()

@@ -47,7 +47,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::json::{parse, Json};
 use crate::scheduler::LoadSnapshot;
 use crate::server::api::parse_result_path;
-use crate::server::http::{self, Handler, HttpServer, Request, Response};
+use crate::server::http::{self, Chunk, Handler, HttpServer, Request, Response};
 use crate::server::store::{Entry, ObjectStore};
 use crate::threadpool::ThreadPool;
 
@@ -392,6 +392,7 @@ fn route(state: &Arc<CoordState>, req: Request) -> Response {
         ("GET", "/v1/models") => models_endpoint(state),
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
         ("POST", "/v1/session") => session_endpoint(state, &req),
+        ("POST", "/v1/stream") => stream_endpoint(state, &req),
         ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
         ("GET", path) if path.starts_with("/v1/session/") => {
             session_proxy_endpoint(state, &req, "GET")
@@ -687,6 +688,139 @@ fn proxy_trace(
             other => return Err(format!("replica {} result status {other}", rep.id)),
         }
     }
+}
+
+/// Proxy a streaming-generation request (`POST /v1/stream`) to a replica,
+/// relaying event lines as they arrive — the coordinator is transparent:
+/// clients see the same chunked NDJSON surface a single server exposes.
+///
+/// Failover semantics differ by phase:
+/// * **before the stream opens** (connect failure, 503, non-200): retry
+///   another candidate, bounded by `max_retries` — no client-visible state
+///   exists yet;
+/// * **mid-stream** (the replica dies after events were relayed): the
+///   coordinator does NOT silently re-run the request on another replica
+///   (the client already consumed a prefix; replaying would duplicate
+///   steps). It appends a terminal
+///   `{"event":"error", "error":…, "retryable":true}` tail event and ends
+///   the stream cleanly, mirroring the session-failover contract — the
+///   client restarts the stream if it wants the rest.
+fn stream_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
+    let body = match body_json(req) {
+        Ok(j) => j,
+        Err(resp) => return resp,
+    };
+    let Some(model) = body.get("model").as_str().map(String::from) else {
+        return Response::bad_request("graph missing model");
+    };
+    let payload = match req.body_str() {
+        Ok(s) => s.to_string(),
+        Err(e) => return Response::bad_request(&e.to_string()),
+    };
+    let mut headers = vec![("Content-Type", "application/json")];
+    let auth = req.header("x-ndif-auth").map(String::from);
+    if let Some(t) = &auth {
+        headers.push(("x-ndif-auth", t.as_str()));
+    }
+
+    let mut tried: Vec<String> = Vec::new();
+    let mut last_err = String::from("no candidate replicas");
+    for _ in 0..=state.core.max_retries {
+        let candidates = state.core.registry.candidates(&model);
+        let Some(rep) = state.core.router.pick(&candidates, &tried) else { break };
+        state.core.registry.record_dispatch(&rep.id);
+        // connect is bounded tight so a dead replica fails over fast; the
+        // read deadline is per-chunk and generous — streams legitimately
+        // pause between decode steps while the model computes
+        match http::http_request_stream(
+            rep.addr,
+            "POST",
+            "/v1/stream",
+            payload.as_bytes(),
+            &headers,
+            state.core.io_timeout,
+            state.core.request_timeout,
+        ) {
+            Ok((200, reader)) => {
+                return relay_stream(Arc::clone(&state.core), rep.id.clone(), reader);
+            }
+            Ok((503, mut reader)) => {
+                state.core.registry.record_failure(&rep.id);
+                tried.push(rep.id.clone());
+                let b = reader.read_body().unwrap_or_default();
+                last_err = format!("replica busy (503): {}", String::from_utf8_lossy(&b));
+            }
+            Ok((status, mut reader)) => {
+                // the replica refused the request itself (auth, validation):
+                // relay its verdict — not a replica fault
+                state.core.registry.record_success(&rep.id);
+                let b = reader.read_body().unwrap_or_default();
+                return Response::json(status, String::from_utf8_lossy(&b).into_owned());
+            }
+            Err(e) => {
+                state.core.registry.record_failure(&rep.id);
+                tried.push(rep.id.clone());
+                last_err = e.to_string();
+            }
+        }
+    }
+    Response::json(
+        503,
+        format!(
+            "{{\"error\":{}}}",
+            Json::from(format!("no live replica for stream: {last_err}"))
+        ),
+    )
+}
+
+/// Relay one replica's open event stream to the client, converting a
+/// mid-stream transport death into the retryable tail event.
+fn relay_stream(
+    core: Arc<RoutingCore>,
+    replica_id: String,
+    mut reader: http::HttpStream,
+) -> Response {
+    let mut finished = false;
+    Response::chunked(
+        200,
+        "application/x-ndjson",
+        Box::new(move || {
+            if finished {
+                return Chunk::End;
+            }
+            match reader.next_line() {
+                Ok(Some(mut line)) => {
+                    line.push('\n');
+                    Chunk::Data(line.into_bytes())
+                }
+                Ok(None) => {
+                    // clean chunked terminator from the replica
+                    core.registry.record_success(&replica_id);
+                    finished = true;
+                    Chunk::End
+                }
+                Err(e) => {
+                    // the replica died (or hung past the read deadline)
+                    // mid-stream: no silent truncation, no replay — a
+                    // retryable tail event, then a clean end
+                    core.registry.record_failure(&replica_id);
+                    finished = true;
+                    let tail = Json::obj(vec![
+                        ("event", Json::from("error")),
+                        (
+                            "error",
+                            Json::from(format!(
+                                "replica {replica_id} died mid-stream ({e}); restart the stream"
+                            )),
+                        ),
+                        ("retryable", Json::Bool(true)),
+                    ])
+                    .to_string();
+                    Chunk::Data(format!("{tail}\n").into_bytes())
+                }
+            }
+        }),
+    )
 }
 
 /// `503 {"error": …, "retryable": true}` — the session's server-side state

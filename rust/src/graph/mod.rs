@@ -94,6 +94,23 @@ impl InterventionGraph {
             .collect()
     }
 
+    /// Ids of all StepHook nodes (values emitted per decode step when the
+    /// graph runs as a streaming request).
+    pub fn step_hooks(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::StepHook { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Does this graph carry per-step emission markers (stream-only)?
+    pub fn uses_step_hooks(&self) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::StepHook { .. }))
+    }
+
     /// Keys read from session state (`Op::LoadState`).
     pub fn state_loads(&self) -> Vec<String> {
         self.nodes

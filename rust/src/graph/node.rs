@@ -69,6 +69,11 @@ pub enum Op {
     LogitDiff { logits: NodeId, target: usize, foil: usize },
     /// LockProtocol: pin the value for return to the user (`.save()`).
     Save { arg: NodeId },
+    /// Per-step emission marker for streaming generation: like `Save`, but
+    /// the graph re-executes at every decode step and this value is
+    /// emitted in that step's `StepEvent` instead of one final result.
+    /// Only valid in a streaming request (`POST /v1/stream`).
+    StepHook { arg: NodeId },
     /// Read a named session-state variable (server-side parameter state,
     /// paper Code Example 5). Resolved in the pre-phase from the session's
     /// state view — within one trace a load always observes the value the
@@ -97,6 +102,7 @@ impl Op {
             | Op::Reshape { arg, .. }
             | Op::MeanAxis { arg, .. }
             | Op::Save { arg }
+            | Op::StepHook { arg }
             | Op::StoreState { arg, .. } => vec![*arg],
             Op::Fill { dst, .. } => vec![*dst],
             Op::Assign { dst, src, .. } => vec![*dst, *src],
@@ -132,6 +138,7 @@ impl Op {
             Op::MeanAxis { .. } => "mean_axis",
             Op::LogitDiff { .. } => "logit_diff",
             Op::Save { .. } => "save",
+            Op::StepHook { .. } => "step_hook",
             Op::LoadState { .. } => "load_state",
             Op::StoreState { .. } => "store_state",
         }
@@ -160,6 +167,7 @@ mod tests {
             vec![3, 5]
         );
         assert_eq!(Op::Save { arg: 7 }.deps(), vec![7]);
+        assert_eq!(Op::StepHook { arg: 7 }.deps(), vec![7]);
         assert!(Op::LoadState { key: "w".into() }.deps().is_empty());
         assert_eq!(Op::StoreState { key: "w".into(), arg: 4 }.deps(), vec![4]);
         assert_eq!(Op::Transpose { arg: 2 }.deps(), vec![2]);
@@ -174,6 +182,7 @@ mod tests {
             Op::Setter { module: "m".into(), port: Port::Output, arg: 0 },
             Op::Add { a: 0, b: 0 },
             Op::Save { arg: 0 },
+            Op::StepHook { arg: 0 },
             Op::LogitDiff { logits: 0, target: 0, foil: 1 },
             Op::Transpose { arg: 0 },
             Op::Reshape { arg: 0, dims: vec![1] },

@@ -88,7 +88,7 @@ fn node_to_json(n: &Node) -> Json {
             o.set("factor", Json::from(*factor));
         }
         Op::Gelu { arg } | Op::Softmax { arg } | Op::Argmax { arg } | Op::Mean { arg }
-        | Op::Sum { arg } | Op::Transpose { arg } | Op::Save { arg } => {
+        | Op::Sum { arg } | Op::Transpose { arg } | Op::Save { arg } | Op::StepHook { arg } => {
             o.set("arg", Json::from(*arg as i64))
         }
         Op::Reshape { arg, dims } => {
@@ -259,6 +259,7 @@ fn json_to_op(j: &Json) -> Result<Op> {
             foil: req_id(j, "foil")?,
         },
         "save" => Op::Save { arg: req_id(j, "arg")? },
+        "step_hook" => Op::StepHook { arg: req_id(j, "arg")? },
         other => return Err(anyhow!("unknown op tag '{other}'")),
     })
 }
@@ -315,13 +316,15 @@ pub fn from_json(j: &Json) -> Result<InterventionGraph> {
 // Results
 // ---------------------------------------------------------------------------
 
-/// Serialize saved values: `{"values": {"<id>": {"dims": [..], "data": [..]}}}`.
-pub fn result_to_json(r: &super::GraphResult) -> Json {
-    let mut values = std::collections::BTreeMap::new();
-    for (id, t) in &r.values {
+/// Serialize a node-id → tensor map to the `{"<id>": {"dims": [..],
+/// "b64": ..}}` wire object (shared by final results and per-step
+/// streaming events).
+pub fn values_to_json(values: &std::collections::BTreeMap<NodeId, crate::tensor::Tensor>) -> Json {
+    let mut out = std::collections::BTreeMap::new();
+    for (id, t) in values {
         // base64-packed f32 payload: ~2.4x smaller than JSON floats and
         // parse-free on the client (§Perf L3, EXPERIMENTS.md)
-        values.insert(
+        out.insert(
             id.to_string(),
             Json::obj(vec![
                 ("dims", Json::from(t.dims().to_vec())),
@@ -329,7 +332,12 @@ pub fn result_to_json(r: &super::GraphResult) -> Json {
             ]),
         );
     }
-    Json::obj(vec![("values", Json::Object(values))])
+    Json::Object(out)
+}
+
+/// Serialize saved values: `{"values": {"<id>": {"dims": [..], "b64": ..}}}`.
+pub fn result_to_json(r: &super::GraphResult) -> Json {
+    Json::obj(vec![("values", values_to_json(&r.values))])
 }
 
 /// Deserialize saved values.
@@ -428,6 +436,20 @@ mod tests {
         assert_eq!(back.nodes, g.nodes);
         assert_eq!(back.state_loads(), vec!["probe.w"]);
         assert_eq!(back.state_stores(), vec!["probe.w"]);
+    }
+
+    #[test]
+    fn step_hook_round_trips() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let top = g.push(Op::Argmax { arg: get });
+        g.push(Op::StepHook { arg: top });
+        let text = to_json(&g).to_string();
+        let back = from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nodes, g.nodes);
+        assert_eq!(back.step_hooks(), vec![2]);
+        assert!(back.uses_step_hooks());
     }
 
     #[test]

@@ -82,6 +82,43 @@ pub fn validate_with_state(
     forward_sequence: &[String],
     state_keys: &BTreeSet<String>,
 ) -> Result<()> {
+    validate_impl(g, forward_sequence, state_keys, false)
+}
+
+/// Validate a graph for streaming generation (`POST /v1/stream`): the
+/// graph re-executes at every decode step, so `StepHook` markers are
+/// legal, while gradients (the backward pass runs once per request, not
+/// per step) and session-state ops (streams are not ordered sessions) are
+/// rejected — the **stream execution rule** (rule 8).
+pub fn validate_stream(g: &InterventionGraph, forward_sequence: &[String]) -> Result<()> {
+    for n in &g.nodes {
+        match &n.op {
+            Op::Grad { module } => {
+                return Err(anyhow!(
+                    "streaming generation cannot use gradients (grad of '{module}', node {}): \
+                     the backward pass is per-request, not per-step",
+                    n.id
+                ));
+            }
+            Op::LoadState { .. } | Op::StoreState { .. } => {
+                return Err(anyhow!(
+                    "streaming generation cannot use session-state ops (node {}); \
+                     submit stateful work via POST /v1/session",
+                    n.id
+                ));
+            }
+            _ => {}
+        }
+    }
+    validate_impl(g, forward_sequence, &BTreeSet::new(), true)
+}
+
+fn validate_impl(
+    g: &InterventionGraph,
+    forward_sequence: &[String],
+    state_keys: &BTreeSet<String>,
+    streaming: bool,
+) -> Result<()> {
     let order = order_map(forward_sequence);
 
     // rule 1: topological ordering (dense ids are structural in `nodes`)
@@ -178,6 +215,20 @@ pub fn validate_with_state(
                 return Err(anyhow!(
                     "load-before-store: state key '{key}' does not exist at trace start \
                      (node {}); create it with a store in an earlier trace of the session",
+                    n.id
+                ));
+            }
+        }
+    }
+
+    // rule 8: per-step emission markers only exist in streaming requests
+    // (a one-shot trace has no step to attach them to)
+    if !streaming {
+        for n in &g.nodes {
+            if matches!(n.op, Op::StepHook { .. }) {
+                return Err(anyhow!(
+                    "step_hook (node {}) outside a streaming request; \
+                     submit the graph via POST /v1/stream",
                     n.id
                 ));
             }
@@ -397,6 +448,46 @@ mod tests {
         let s = g.push(Op::Scale { arg: gr, factor: -0.1 });
         g.push(Op::StoreState { key: "w".into(), arg: s });
         validate(&g, &fseq()).unwrap();
+    }
+
+    #[test]
+    fn step_hooks_are_stream_only() {
+        // a step hook in a plain trace is rejected with a pointer to the
+        // streaming endpoint...
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        g.push(Op::StepHook { arg: h });
+        let err = validate(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("/v1/stream"), "{err}");
+        // ...and accepted by the streaming validator
+        validate_stream(&g, &fseq()).unwrap();
+    }
+
+    #[test]
+    fn stream_rejects_grads_and_state_ops() {
+        let mut g = InterventionGraph::new("m");
+        g.targets = Some(vec![1.0]);
+        let gr = g.push(Op::Grad { module: "layer.0".into() });
+        g.push(Op::Save { arg: gr });
+        let err = validate_stream(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("per-step"), "{err}");
+
+        let mut g = InterventionGraph::new("m");
+        let c = g.push(Op::Const { dims: vec![1], data: vec![0.0] });
+        g.push(Op::StoreState { key: "w".into(), arg: c });
+        let err = validate_stream(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("session"), "{err}");
+    }
+
+    #[test]
+    fn stream_keeps_structural_rules() {
+        // acyclicity still applies when validating for a stream
+        let mut g = InterventionGraph::new("m");
+        let logits = g.push(Op::Getter { module: "lm_head".into(), port: Port::Output });
+        g.push(Op::Setter { module: "layer.0".into(), port: Port::Output, arg: logits });
+        let err = validate_stream(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("acyclicity"), "{err}");
     }
 
     #[test]

@@ -27,8 +27,10 @@ use std::collections::{BTreeMap, HashMap};
 use anyhow::{anyhow, Result};
 
 use crate::graph::{
-    validate::validate_with_state, GraphResult, InterventionGraph, NodeId, Op, Port,
+    validate::{validate_stream, validate_with_state},
+    GraphResult, InterventionGraph, NodeId, Op, Port,
 };
+use crate::models::generate::{advance_window, Generation};
 use crate::models::{Hooks, ModelRunner};
 use crate::tensor::{logit_diff, Tensor};
 
@@ -98,6 +100,28 @@ impl<'g> Executor<'g> {
     ) -> Result<Executor<'g>> {
         let keys = state.keys().cloned().collect();
         validate_with_state(graph, forward_sequence, &keys)?;
+        Executor::prevalidated(graph, forward_sequence, state)
+    }
+
+    /// Build an executor for ONE decode step of a streaming request:
+    /// `StepHook` markers are legal (validated by the stream rules) and
+    /// collect into the per-step result exactly like `Save`.
+    pub fn for_stream(
+        graph: &'g InterventionGraph,
+        forward_sequence: &[String],
+    ) -> Result<Executor<'g>> {
+        validate_stream(graph, forward_sequence)?;
+        Executor::prevalidated(graph, forward_sequence, StateView::new())
+    }
+
+    /// Build without re-validating (the caller has already run the
+    /// applicable rule set — per-request for traces, once per stream for
+    /// the step-hook form).
+    fn prevalidated(
+        graph: &'g InterventionGraph,
+        forward_sequence: &[String],
+        state: StateView,
+    ) -> Result<Executor<'g>> {
         let order: HashMap<&str, usize> = forward_sequence
             .iter()
             .enumerate()
@@ -158,10 +182,10 @@ impl<'g> Executor<'g> {
         let point_index: HashMap<String, usize> =
             order.into_iter().map(|(m, k)| (m.to_string(), k)).collect();
 
-        // Save locks its dependency's value.
+        // Save locks its dependency's value (StepHook is a per-step Save).
         let mut locked = vec![false; n];
         for node in &graph.nodes {
-            if let Op::Save { arg } = node.op {
+            if let Op::Save { arg } | Op::StepHook { arg } = node.op {
                 locked[arg] = true;
             }
         }
@@ -322,7 +346,7 @@ impl<'g> Executor<'g> {
                 self.state_out.insert(key.clone(), v);
                 return Ok(());
             }
-            Op::Save { arg } => {
+            Op::Save { arg } | Op::StepHook { arg } => {
                 let v = self.values[*arg]
                     .as_ref()
                     .ok_or_else(|| anyhow!("save of unavailable node {arg}"))?
@@ -532,6 +556,75 @@ pub fn execute_with_view(
     ex.into_outcome()
 }
 
+// ---------------------------------------------------------------------------
+// Streaming generation
+// ---------------------------------------------------------------------------
+
+/// What one decode step of a streaming request produced: the greedy token,
+/// its logit, and the values collected by `Save`/`StepHook` nodes during
+/// that step's graph re-execution.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub token: usize,
+    pub score: f32,
+    pub values: GraphResult,
+}
+
+/// Streaming decode with per-step interventions: greedy-generate `steps`
+/// tokens from the graph's `[1, seq]` prompt, **re-entering the
+/// intervention graph at every decode step** against that step's hidden
+/// state (the paper's iterative `.generate()` + per-step hook execution).
+/// `sink` receives each step's outcome as soon as the step completes and
+/// returns `false` to stop decoding early (a gone consumer). Returns the
+/// full greedy trajectory.
+///
+/// The window slides as in [`ModelRunner::generate`]: the exported modules
+/// are shape-specialized, so each step is a full forward over the shifted
+/// context rather than a KV-incremental one — the per-step *intervention*
+/// semantics are identical either way.
+pub fn execute_stream(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    steps: usize,
+    sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+) -> Result<Generation> {
+    let fseq = runner.manifest.forward_sequence();
+    validate_stream(graph, &fseq)?;
+    if graph.shards > 1 {
+        return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
+    }
+    if graph.batch_group.is_some() {
+        return Err(anyhow!("streaming decode does not merge into co-tenant batches"));
+    }
+    let seq = runner.manifest.seq;
+    if graph.batch != 1 || graph.tokens.len() != seq {
+        return Err(anyhow!(
+            "streaming generation is single-sequence: need [1, {seq}] tokens, got batch {} × {}",
+            graph.batch,
+            graph.tokens.len()
+        ));
+    }
+    let vocab = runner.manifest.vocab;
+    let mut ctx = Tensor::new(&[1, seq], graph.tokens.clone());
+    let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
+    for step in 0..steps {
+        let mut ex = Executor::prevalidated(graph, &fseq, StateView::new())?;
+        ex.run_pre()?;
+        let logits = runner.forward(&ctx, &mut ex)?;
+        if let Some(e) = ex.error.take() {
+            return Err(e);
+        }
+        let values = ex.into_result()?;
+        let (token, score) = advance_window(&mut ctx, &logits, seq, vocab);
+        out.tokens.push(token);
+        out.scores.push(score);
+        if !sink(step, StepOutcome { token, score, values }) {
+            break;
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -733,6 +826,23 @@ mod tests {
         ex.run_post(&grads).unwrap();
         let res = ex.into_result().unwrap();
         assert_eq!(res.get(save).unwrap().data(), &[-3.0; 4]);
+    }
+
+    #[test]
+    fn step_hook_collects_like_save_in_stream_mode() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let get = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let sc = g.push(Op::Scale { arg: get, factor: 2.0 });
+        let hook = g.push(Op::StepHook { arg: sc });
+        // a plain executor refuses the graph; the stream executor runs it
+        assert!(Executor::new(&g, &fseq()).is_err());
+        let mut ex = Executor::for_stream(&g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        let res = ex.into_result().unwrap();
+        assert_eq!(res.get(hook).unwrap(), &Tensor::iota(&[1, 4]).scale(4.0));
     }
 
     #[test]

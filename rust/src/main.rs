@@ -31,6 +31,7 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
               [--parallel-cotenancy] [--max-merge 8]
               [--coordinator 127.0.0.1:7788] [--advertise host:port]
               [--heartbeat-ms 250] [--link-latency 0.0]
+              [--stream-buffer 32] [--stream-send-timeout-s 10]
   coordinate  [--addr 127.0.0.1:7788] [--replicas host:port[@latency_s],..]
               [--policy round-robin|least-loaded|latency-aware]
               [--probe-ms 250] [--retries 3] [--workers 8]
@@ -108,6 +109,10 @@ fn serve(args: &Args) -> Result<()> {
             ttl: std::time::Duration::from_secs(args.u64_or("state-ttl-s", 600).max(1)),
             ..Default::default()
         },
+        stream_buffer: args.usize_or("stream-buffer", 32).max(1),
+        stream_send_timeout: std::time::Duration::from_secs(
+            args.u64_or("stream-send-timeout-s", 10).max(1),
+        ),
     };
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;

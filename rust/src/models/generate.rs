@@ -26,6 +26,28 @@ pub struct Generation {
     pub scores: Vec<f32>,
 }
 
+/// One greedy decode step over the sliding window: pick the argmax of the
+/// last position of `[1, seq, vocab]` logits, shift the `[1, seq]` context
+/// left by one, and append the chosen token. Returns `(token, logit)`.
+/// Shared by [`ModelRunner::generate`] and the streaming interpreter
+/// (`crate::interp::execute_stream`).
+pub fn advance_window(ctx: &mut Tensor, logits: &Tensor, seq: usize, vocab: usize) -> (usize, f32) {
+    // argmax straight off the last-position row — no slice/reshape
+    // materialization per step
+    let row = &logits.data()[(seq - 1) * vocab..seq * vocab];
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    let score = row[best];
+    let cd = ctx.data_mut();
+    cd.copy_within(1..seq, 0);
+    cd[seq - 1] = best as f32;
+    (best, score)
+}
+
 impl ModelRunner {
     /// Greedy-decode `steps` tokens from a `[1, seq]` prompt, applying
     /// `hooks` at every step's forward pass.
@@ -45,21 +67,9 @@ impl ModelRunner {
         let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
         for _ in 0..steps {
             let logits = self.forward(&ctx, hooks)?;
-            // argmax straight off the last-position row of the `[1, seq,
-            // vocab]` logits — no slice/reshape materialization per step
-            let row = &logits.data()[(seq - 1) * vocab..seq * vocab];
-            let mut best = 0usize;
-            for (i, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = i;
-                }
-            }
-            out.tokens.push(best);
-            out.scores.push(row[best]);
-            // slide the window left in place, append the new token
-            let cd = ctx.data_mut();
-            cd.copy_within(1..seq, 0);
-            cd[seq - 1] = best as f32;
+            let (token, score) = advance_window(&mut ctx, &logits, seq, vocab);
+            out.tokens.push(token);
+            out.scores.push(score);
         }
         Ok(out)
     }
@@ -97,6 +107,45 @@ mod tests {
         let a = r.generate_plain(&prompt, 4).unwrap();
         let b = r.generate_plain(&prompt, 4).unwrap();
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn streaming_decode_matches_plain_generation() {
+        use crate::client::Trace;
+        let r = runner();
+        let prompt = Tensor::new(&[1, 16], (0..16).map(|i| (i % 9) as f32).collect());
+        let plain = r.generate_plain(&prompt, 4).unwrap();
+
+        // a pure probe (step-hook the mean of layer.0) must not perturb
+        // the greedy trajectory, and must fire once per step
+        let mut tr = Trace::new("tiny-sim", &prompt);
+        let h = tr.output("layer.0");
+        let m = tr.mean(h);
+        let hook = tr.step_hook(m);
+        let graph = tr.into_graph();
+        let mut events = Vec::new();
+        let gen = crate::interp::execute_stream(&graph, &r, 4, &mut |step, out| {
+            assert!(out.values.get(hook.0).is_some(), "step {step} missing hooked value");
+            events.push(out.token);
+            true
+        })
+        .unwrap();
+        assert_eq!(gen.tokens, plain.tokens);
+        assert_eq!(events, plain.tokens);
+    }
+
+    #[test]
+    fn streaming_sink_can_stop_early() {
+        use crate::client::Trace;
+        let r = runner();
+        let prompt = Tensor::new(&[1, 16], (0..16).map(|i| (i % 5) as f32).collect());
+        let mut tr = Trace::new("tiny-sim", &prompt);
+        let h = tr.output("layer.0");
+        let m = tr.mean(h);
+        tr.step_hook(m);
+        let graph = tr.into_graph();
+        let gen = crate::interp::execute_stream(&graph, &r, 10, &mut |_, _| false).unwrap();
+        assert_eq!(gen.tokens.len(), 1, "sink=false must stop decoding");
     }
 
     #[test]

@@ -67,9 +67,9 @@ impl NetSim {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
-    /// Charge a one-way transfer; sleeps in `Mode::Sleep`.
-    pub fn send(&self, bytes: usize) -> f64 {
-        let t = self.transfer_time(bytes);
+    /// Record (and in `Mode::Sleep`, wait out) a transfer of `bytes`
+    /// taking `t` seconds.
+    fn charge(&self, bytes: usize, t: f64) -> f64 {
         self.bytes_total.fetch_add(bytes as u64, Ordering::Relaxed);
         self.nanos_total
             .fetch_add((t * 1e9) as u64, Ordering::Relaxed);
@@ -77,6 +77,24 @@ impl NetSim {
             std::thread::sleep(Duration::from_secs_f64(t));
         }
         t
+    }
+
+    /// Charge a one-way transfer; sleeps in `Mode::Sleep`.
+    pub fn send(&self, bytes: usize) -> f64 {
+        self.charge(bytes, self.transfer_time(bytes))
+    }
+
+    /// Charge a continuation of an already-open stream: bytes move at the
+    /// link bandwidth but pay no propagation latency (the pipeline is
+    /// full — chunked-transfer frames after the first). Sleeps in
+    /// `Mode::Sleep`.
+    pub fn send_streamed(&self, bytes: usize) -> f64 {
+        let t = if self.bandwidth_bps.is_infinite() {
+            0.0
+        } else {
+            bytes as f64 / self.bandwidth_bps
+        };
+        self.charge(bytes, t)
     }
 
     /// Charge a round trip of `up` then `down` bytes.
@@ -128,6 +146,17 @@ mod tests {
     fn ideal_link_is_free() {
         let l = NetSim::ideal();
         assert_eq!(l.send(1_000_000_000), 0.0);
+    }
+
+    #[test]
+    fn streamed_send_pays_bandwidth_but_not_latency() {
+        let l = NetSim::new(0.010, 1000.0, Mode::Account);
+        // opening transfer: latency + bytes; continuation: bytes only
+        let t0 = l.send(1000);
+        let t1 = l.send_streamed(1000);
+        assert!((t0 - 1.010).abs() < 1e-9);
+        assert!((t1 - 1.000).abs() < 1e-9);
+        assert_eq!(l.bytes_transferred(), 2000);
     }
 
     #[test]

@@ -268,4 +268,59 @@ mod chunk_tests {
     fn oversized_job_is_its_own_chunk() {
         assert_eq!(plan_merge_chunks(&[64, 1], &[1, 4, 8, 32]), vec![1, 1]);
     }
+
+    #[test]
+    fn empty_burst_plans_no_chunks() {
+        assert_eq!(plan_merge_chunks(&[], &[1, 4, 8]), Vec::<usize>::new());
+        assert_eq!(plan_merge_chunks(&[], &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn empty_exported_batches_degrade_to_per_job_chunks() {
+        // a manifest with no exported batch sizes must not panic or merge:
+        // every job becomes its own chunk
+        assert_eq!(plan_merge_chunks(&[1, 1, 1], &[]), vec![1, 1, 1]);
+        assert_eq!(plan_merge_chunks(&[3, 3], &[]), vec![1, 1]);
+    }
+
+    #[test]
+    fn single_oversized_job_alone_forms_one_chunk() {
+        // larger than every exported batch, no companions: exactly one
+        // chunk of one job (the runner pads/fails downstream, the planner
+        // must not loop or drop it)
+        assert_eq!(plan_merge_chunks(&[64], &[1, 4, 8, 32]), vec![1]);
+        assert_eq!(plan_merge_chunks(&[64], &[]), vec![1]);
+    }
+
+    #[test]
+    fn tail_underfilling_smallest_exported_batch_still_ships() {
+        // 5 single-row jobs with batches {4, 8}: the first chunk fills the
+        // 4-batch, the 1-row tail underfills even the smallest exported
+        // batch but must still be planned (padded at execution)
+        assert_eq!(plan_merge_chunks(&[1; 5], &[4, 8]), vec![4, 1]);
+        // same with a multi-row tail: 4+4 fills 8, the 3-row tail rides
+        // alone under the 4-batch
+        assert_eq!(plan_merge_chunks(&[4, 4, 3], &[4, 8]), vec![2, 1]);
+    }
+
+    #[test]
+    fn chunks_always_cover_every_job() {
+        // planner invariant: chunk sizes sum to the burst length for
+        // arbitrary row/batch mixes
+        let cases: &[(&[usize], &[usize])] = &[
+            (&[1; 13], &[1, 4, 8, 32]),
+            (&[2, 5, 1, 7, 3], &[4, 8]),
+            (&[9, 9, 9], &[8]),
+            (&[1, 1], &[]),
+        ];
+        for (rows, exported) in cases {
+            let chunks = plan_merge_chunks(rows, exported);
+            assert_eq!(
+                chunks.iter().sum::<usize>(),
+                rows.len(),
+                "rows {rows:?} exported {exported:?} -> {chunks:?}"
+            );
+            assert!(chunks.iter().all(|&c| c > 0), "{chunks:?}");
+        }
+    }
 }

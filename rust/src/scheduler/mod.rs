@@ -15,4 +15,4 @@ pub mod cotenancy;
 pub mod queue;
 
 pub use cotenancy::{execute_merged, CoTenancy};
-pub use queue::{LoadSnapshot, ModelService, ServiceMetrics};
+pub use queue::{LoadSnapshot, ModelService, ServiceMetrics, StreamChunk};

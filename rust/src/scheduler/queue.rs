@@ -15,8 +15,9 @@
 //! dataflow needs for free.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -85,9 +86,35 @@ struct SessionJob {
     persist: bool,
 }
 
+/// One frame of a streaming response, already serialized for the wire.
+/// `Event` frames flow while the decode runs; exactly one `Done` or
+/// `Failed` frame terminates a well-behaved stream.
+#[derive(Debug)]
+pub enum StreamChunk {
+    /// One per-step event line.
+    Event(String),
+    /// Terminal success line (the full trajectory summary).
+    Done(String),
+    /// Terminal failure line (graph execution error).
+    Failed(String),
+}
+
+struct StreamJob {
+    graph: InterventionGraph,
+    steps: usize,
+    /// Bounded per-request channel: the HTTP handler drains it into the
+    /// chunked response. The bound is the backpressure contract — see
+    /// [`ModelService::submit_stream`].
+    tx: SyncSender<StreamChunk>,
+    /// How long the worker will wait on a full channel before declaring
+    /// the consumer gone and aborting the decode.
+    send_timeout: Duration,
+}
+
 enum Job {
     Trace(TraceJob),
     Session(SessionJob),
+    Stream(StreamJob),
 }
 
 /// One model's request service: queue + worker thread + shared runner.
@@ -167,6 +194,27 @@ impl ModelService {
             .map_err(|_| anyhow::anyhow!("service worker exited"))
     }
 
+    /// Enqueue a streaming decode. Per-step events (and the terminal
+    /// `Done`/`Failed` frame) are pushed into `tx` as they are produced; a
+    /// consumer that stops draining for longer than `send_timeout` while
+    /// the channel is full is treated as gone and the decode is aborted,
+    /// so a slow reader can never pin the model worker.
+    pub fn submit_stream(
+        &self,
+        graph: InterventionGraph,
+        steps: usize,
+        tx: SyncSender<StreamChunk>,
+        send_timeout: Duration,
+    ) -> Result<()> {
+        self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("service stopped")
+            .send(Job::Stream(StreamJob { graph, steps, tx, send_timeout }))
+            .map_err(|_| anyhow::anyhow!("service worker exited"))
+    }
+
     fn worker_loop(
         rx: Receiver<Job>,
         runner: Arc<ModelRunner>,
@@ -181,18 +229,23 @@ impl ModelService {
                     Self::run_session(&runner, &store, &session_state, &metrics, s);
                     continue;
                 }
+                Job::Stream(s) => {
+                    Self::run_stream(&runner, &metrics, s);
+                    continue;
+                }
                 Job::Trace(t) => t,
             };
             // drain compatible follow-ups in Parallel mode; a drained
-            // session job runs after the batch (it arrived after them)
+            // session/stream job runs after the batch (it arrived after
+            // them, and neither merges into a co-tenant forward)
             let mut batch = vec![first];
-            let mut deferred_session = None;
+            let mut deferred = None;
             if let CoTenancy::Parallel { max_merge } = mode {
                 while batch.len() < max_merge {
                     match rx.try_recv() {
                         Ok(Job::Trace(t)) => batch.push(t),
-                        Ok(Job::Session(s)) => {
-                            deferred_session = Some(s);
+                        Ok(other) => {
+                            deferred = Some(other);
                             break;
                         }
                         Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
@@ -216,10 +269,92 @@ impl ModelService {
             } else {
                 Self::run_batch(&runner, &store, &metrics, batch, mode);
             }
-            if let Some(s) = deferred_session {
-                Self::run_session(&runner, &store, &session_state, &metrics, s);
+            match deferred {
+                Some(Job::Session(s)) => {
+                    Self::run_session(&runner, &store, &session_state, &metrics, s)
+                }
+                Some(Job::Stream(s)) => Self::run_stream(&runner, &metrics, s),
+                Some(Job::Trace(_)) | None => {}
             }
         }
+    }
+
+    /// Push one frame into the bounded stream channel, waiting at most
+    /// `timeout` for a slow consumer to make room. Returns false when the
+    /// consumer is gone (disconnected) or too slow (timeout) — the decode
+    /// must stop rather than pin this worker.
+    fn send_chunk(tx: &SyncSender<StreamChunk>, mut chunk: StreamChunk, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match tx.try_send(chunk) {
+                Ok(()) => return true,
+                Err(TrySendError::Disconnected(_)) => return false,
+                Err(TrySendError::Full(c)) => {
+                    if Instant::now() >= deadline {
+                        return false;
+                    }
+                    chunk = c;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+
+    /// Execute a streaming decode on this worker thread, pushing one
+    /// event frame per step and a terminal frame at the end.
+    fn run_stream(runner: &ModelRunner, metrics: &ServiceMetrics, job: StreamJob) {
+        let t0 = Instant::now();
+        let mut consumer_gone = false;
+        let res = interp::execute_stream(&job.graph, runner, job.steps, &mut |step, out| {
+            let ev = Json::obj(vec![
+                ("event", Json::from("step")),
+                ("step", Json::from(step)),
+                ("token", Json::from(out.token)),
+                ("score", Json::from(out.score)),
+                ("values", gserde::values_to_json(&out.values.values)),
+            ])
+            .to_string();
+            if Self::send_chunk(&job.tx, StreamChunk::Event(ev), job.send_timeout) {
+                true
+            } else {
+                consumer_gone = true;
+                false
+            }
+        });
+        match res {
+            Ok(_) if consumer_gone => {
+                // the consumer vanished mid-stream; nothing to deliver to
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(gen) => {
+                let tokens = Json::Array(gen.tokens.iter().map(|&t| Json::from(t)).collect());
+                let scores = Json::Array(gen.scores.iter().map(|&s| Json::from(s)).collect());
+                let done = Json::obj(vec![
+                    ("event", Json::from("done")),
+                    ("steps", Json::from(gen.tokens.len())),
+                    ("tokens", tokens),
+                    ("scores", scores),
+                ])
+                .to_string();
+                if Self::send_chunk(&job.tx, StreamChunk::Done(done), job.send_timeout) {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                let _ = Self::send_chunk(
+                    &job.tx,
+                    StreamChunk::Failed(e.to_string()),
+                    job.send_timeout,
+                );
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        metrics
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Execute a stateful session bundle in order on this worker thread.
@@ -508,6 +643,60 @@ mod tests {
             .unwrap_err();
         assert!(err.contains("session trace 0"), "{err}");
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stream_job_emits_step_events_then_done() {
+        let (svc, _store) = service(CoTenancy::Sequential);
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        let m = tr.mean(h);
+        tr.step_hook(m);
+        let (tx, rx) = std::sync::mpsc::sync_channel(32);
+        svc.submit_stream(tr.into_graph(), 3, tx, std::time::Duration::from_secs(5))
+            .unwrap();
+        let mut steps = 0;
+        loop {
+            match rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap() {
+                StreamChunk::Event(e) => {
+                    assert!(e.contains("\"event\":\"step\""), "{e}");
+                    steps += 1;
+                }
+                StreamChunk::Done(d) => {
+                    assert!(d.contains("\"event\":\"done\""), "{d}");
+                    break;
+                }
+                StreamChunk::Failed(e) => panic!("stream failed: {e}"),
+            }
+        }
+        assert_eq!(steps, 3);
+        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slow_stream_consumer_cannot_pin_the_worker() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        tr.step_hook(h);
+        // capacity-1 channel that nobody drains, with a short send
+        // timeout: the worker must abort the decode, count a failure, and
+        // go on to serve the next (normal) request
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        svc.submit_stream(
+            tr.into_graph(),
+            1000,
+            tx,
+            std::time::Duration::from_millis(50),
+        )
+        .unwrap();
+        svc.submit("after".into(), simple_graph(1.0)).unwrap();
+        let json = store
+            .wait_ready("after", std::time::Duration::from_secs(30))
+            .unwrap();
+        assert!(json.contains("values"));
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+        drop(rx);
     }
 
     #[test]

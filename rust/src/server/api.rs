@@ -5,17 +5,18 @@ use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{RecvTimeoutError, sync_channel};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::graph::serde as gserde;
 use crate::json::{parse, Json};
 use crate::models::ModelRunner;
-use crate::scheduler::{CoTenancy, ModelService};
+use crate::scheduler::{CoTenancy, ModelService, StreamChunk};
 
-use super::http::{Handler, HttpServer, Request, Response};
+use super::http::{Chunk, Handler, HttpServer, Request, Response};
 use super::state::{SessionStateStore, StateLimits};
 use super::store::{Entry, ObjectStore};
 
@@ -50,6 +51,13 @@ pub struct NdifConfig {
     /// Budgets and TTL for server-side session state (named tensor
     /// variables held across traces — remote training loops).
     pub state_limits: StateLimits,
+    /// Per-stream event buffer: how many step events may queue between the
+    /// model worker and a slow chunked-response consumer before the worker
+    /// blocks (the backpressure bound for `POST /v1/stream`).
+    pub stream_buffer: usize,
+    /// How long the model worker waits on a full stream buffer before
+    /// declaring the consumer gone and aborting the decode.
+    pub stream_send_timeout: Duration,
 }
 
 impl NdifConfig {
@@ -66,6 +74,8 @@ impl NdifConfig {
             heartbeat: Duration::from_millis(250),
             link_latency_s: 0.0,
             state_limits: StateLimits::default(),
+            stream_buffer: 32,
+            stream_send_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -76,6 +86,14 @@ struct ServerState {
     session_state: Arc<SessionStateStore>,
     next_id: AtomicU64,
     auth: HashMap<String, Vec<String>>,
+    /// Stream backpressure knobs (see [`NdifConfig`]).
+    stream_buffer: usize,
+    stream_send_timeout: Duration,
+    /// Set during shutdown/kill: in-flight chunked responses abort (drop
+    /// the connection without the terminator) instead of outliving the
+    /// server — this is what lets a mid-stream replica death surface as a
+    /// truncated stream at the coordinator.
+    draining: AtomicBool,
 }
 
 impl ServerState {
@@ -131,6 +149,9 @@ impl NdifServer {
             session_state,
             next_id: AtomicU64::new(1),
             auth: cfg.auth.clone(),
+            stream_buffer: cfg.stream_buffer.max(1),
+            stream_send_timeout: cfg.stream_send_timeout,
+            draining: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| route(&s2, req));
@@ -228,6 +249,7 @@ impl NdifServer {
     /// Graceful shutdown: stop heartbeating, say goodbye to the
     /// coordinator, then stop serving.
     pub fn shutdown(&mut self) {
+        self.state.draining.store(true, Ordering::SeqCst);
         if let Some(mut f) = self.fleet.take() {
             f.stop.store(true, Ordering::SeqCst);
             if let Some(t) = f.heartbeat_thread.take() {
@@ -240,8 +262,10 @@ impl NdifServer {
 
     /// Simulate a crash (fleet tests): stop serving and heartbeating
     /// WITHOUT deregistering, so the coordinator must detect the death via
-    /// heartbeat age / transport failures.
+    /// heartbeat age / transport failures. In-flight streams are cut
+    /// without their terminator, exactly like a process death.
     pub fn kill(&mut self) {
+        self.state.draining.store(true, Ordering::SeqCst);
         if let Some(mut f) = self.fleet.take() {
             f.stop.store(true, Ordering::SeqCst);
             if let Some(t) = f.heartbeat_thread.take() {
@@ -264,6 +288,7 @@ fn route(state: &Arc<ServerState>, req: Request) -> Response {
         ("GET", "/v1/models") => models_endpoint(state),
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
         ("POST", "/v1/session") => session_endpoint(state, &req),
+        ("POST", "/v1/stream") => stream_endpoint(state, &req),
         ("GET", "/v1/metrics") => metrics_endpoint(state),
         ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
         ("GET", path) if path.starts_with("/v1/session/") => {
@@ -484,6 +509,130 @@ fn stateful_session(
         Some(Err(e)) => Response::json(500, format!("{{\"error\":{}}}", Json::from(e))),
         None => Response::json(500, "{\"error\":\"session timeout\"}".into()),
     }
+}
+
+/// Upper bound on one streaming request's decode length (a runaway-loop
+/// backstop, far above any interactive use).
+const MAX_STREAM_STEPS: usize = 100_000;
+
+/// Streaming generation with per-step interventions (`POST /v1/stream`).
+///
+/// Request body: an intervention-graph JSON (as for `/v1/trace`) plus a
+/// top-level `"steps": N`. The graph re-executes at every decode step;
+/// `step_hook` (and `save`) values are emitted per step. Response:
+/// `Transfer-Encoding: chunked`, one NDJSON line per event —
+/// `{"event":"step", "step":i, "token":t, "score":s, "values":{...}}` per
+/// decode step, terminated by exactly one
+/// `{"event":"done", "tokens":[..], "scores":[..]}` or
+/// `{"event":"error", "error":..., "retryable":false}`. A stream that ends
+/// WITHOUT a terminal event (connection cut before the chunked terminator)
+/// means the server died mid-stream; the coordinator converts that into a
+/// retryable tail event for its clients.
+///
+/// Backpressure: events flow through a bounded channel sized
+/// [`NdifConfig::stream_buffer`]; a consumer that stops draining for
+/// longer than [`NdifConfig::stream_send_timeout`] aborts the decode, so
+/// slow readers cannot pin the model worker.
+fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
+    let body = match req.body_str().map_err(|e| e.to_string()).and_then(|s| {
+        parse(s).map_err(|e| e.to_string())
+    }) {
+        Ok(j) => j,
+        Err(e) => return Response::bad_request(&e),
+    };
+    let Some(steps) = body.get("steps").as_usize() else {
+        return Response::bad_request("stream request missing steps");
+    };
+    if steps == 0 || steps > MAX_STREAM_STEPS {
+        return Response::bad_request(&format!(
+            "steps must be in 1..={MAX_STREAM_STEPS}, got {steps}"
+        ));
+    }
+    let graph = match gserde::from_json(&body) {
+        Ok(g) => g,
+        Err(e) => return Response::bad_request(&e.to_string()),
+    };
+    let model = graph.model.clone();
+    let Some(service) = state.services.get(&model) else {
+        return Response::json(404, format!("{{\"error\":\"model '{model}' not hosted\"}}"));
+    };
+    if !state.authorize(&model, req.header("x-ndif-auth")) {
+        return Response::json(401, "{\"error\":\"not authorized for this model\"}".into());
+    }
+    let fseq = service.runner.manifest.forward_sequence();
+    if let Err(e) = crate::graph::validate::validate_stream(&graph, &fseq) {
+        return Response::bad_request(&e.to_string());
+    }
+    // fail fast at submit on constraints the decode loop would otherwise
+    // only hit mid-stream
+    if graph.batch != 1 {
+        return Response::bad_request(&format!(
+            "streaming generation is single-sequence, got batch {}",
+            graph.batch
+        ));
+    }
+    let seq = service.runner.manifest.seq;
+    if graph.tokens.len() != seq {
+        return Response::bad_request(&format!(
+            "streaming prompt must be [1, {seq}] tokens, got {}",
+            graph.tokens.len()
+        ));
+    }
+    if graph.shards > 1 {
+        return Response::bad_request("streaming decode is unsharded");
+    }
+    let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
+    if let Err(e) = service.submit_stream(graph, steps, tx, state.stream_send_timeout) {
+        return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
+    }
+    // the chunked source runs on the HTTP worker serving this connection:
+    // it pulls frames off the bounded channel and pushes them to the
+    // client as they arrive
+    let st = Arc::clone(state);
+    let deadline = Instant::now() + Duration::from_secs(3600);
+    let mut finished = false;
+    Response::chunked(
+        200,
+        "application/x-ndjson",
+        Box::new(move || {
+            if finished {
+                return Chunk::End;
+            }
+            loop {
+                if st.draining.load(Ordering::SeqCst) || Instant::now() >= deadline {
+                    // server going down (or stream absurdly old): cut the
+                    // connection without the terminator so the peer sees
+                    // death, not completion
+                    return Chunk::Abort;
+                }
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(StreamChunk::Event(e)) => return Chunk::Data(ndjson_line(e)),
+                    Ok(StreamChunk::Done(d)) => {
+                        finished = true;
+                        return Chunk::Data(ndjson_line(d));
+                    }
+                    Ok(StreamChunk::Failed(err)) => {
+                        finished = true;
+                        let ev = Json::obj(vec![
+                            ("event", Json::from("error")),
+                            ("error", Json::from(err)),
+                            ("retryable", Json::Bool(false)),
+                        ])
+                        .to_string();
+                        return Chunk::Data(ndjson_line(ev));
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    // worker died without a terminal frame: truncate
+                    Err(RecvTimeoutError::Disconnected) => return Chunk::Abort,
+                }
+            }
+        }),
+    )
+}
+
+fn ndjson_line(mut s: String) -> Vec<u8> {
+    s.push('\n');
+    s.into_bytes()
 }
 
 /// Observability: keys, bytes, and idle age of a live session's state.

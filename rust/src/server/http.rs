@@ -41,21 +41,62 @@ impl Request {
     }
 }
 
-/// An HTTP response under construction.
-#[derive(Debug)]
+/// One pull from a chunked-response source.
+pub enum Chunk {
+    /// Bytes to send as one transfer chunk (empty slices are skipped — a
+    /// zero-length chunk is the HTTP terminator).
+    Data(Vec<u8>),
+    /// Clean end of stream: the terminating zero chunk is written.
+    End,
+    /// Abort: drop the connection WITHOUT the terminator, so the peer can
+    /// tell truncation from completion (mid-stream failure semantics).
+    Abort,
+}
+
+/// Pull-based producer for a chunked response body. Called repeatedly by
+/// the connection handler until it returns `End` or `Abort`.
+pub type ChunkSource = Box<dyn FnMut() -> Chunk + Send>;
+
+/// An HTTP response under construction: either a complete body
+/// (Content-Length) or a streamed one (Transfer-Encoding: chunked).
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// When set, `body` is ignored and the response streams chunks pulled
+    /// from this source.
+    pub stream: Option<ChunkSource>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("body_len", &self.body.len())
+            .field("streamed", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Response {
+    /// A complete (non-streamed) response.
+    pub fn bytes(status: u16, content_type: &'static str, body: Vec<u8>) -> Response {
+        Response { status, content_type, body, stream: None }
+    }
+
     pub fn json(status: u16, body: String) -> Response {
-        Response { status, content_type: "application/json", body: body.into_bytes() }
+        Response::bytes(status, "application/json", body.into_bytes())
     }
 
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        Response::bytes(status, "text/plain", body.as_bytes().to_vec())
+    }
+
+    /// A chunked (streaming) response; the body is produced incrementally
+    /// by `source`.
+    pub fn chunked(status: u16, content_type: &'static str, source: ChunkSource) -> Response {
+        Response { status, content_type, body: Vec::new(), stream: Some(source) }
     }
 
     pub fn not_found() -> Response {
@@ -117,19 +158,53 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     Ok(Request { method, path, headers, body })
 }
 
-/// Write a response (and close the connection).
-pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+/// Write a response (and close the connection). Streamed responses are
+/// written chunk-by-chunk with `Transfer-Encoding: chunked`, each chunk
+/// flushed as it is produced so the peer sees events as they happen; an
+/// `Abort` pull drops the connection without the terminating zero chunk.
+pub fn write_response(stream: &mut TcpStream, resp: &mut Response) -> Result<()> {
+    let Some(mut source) = resp.stream.take() else {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            resp.status,
+            resp.status_text(),
+            resp.content_type,
+            resp.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&resp.body)?;
+        stream.flush()?;
+        return Ok(());
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
         resp.status,
         resp.status_text(),
         resp.content_type,
-        resp.body.len()
     );
     stream.write_all(head.as_bytes())?;
-    stream.write_all(&resp.body)?;
     stream.flush()?;
-    Ok(())
+    loop {
+        match source() {
+            Chunk::Data(d) => {
+                if d.is_empty() {
+                    continue; // a zero-length chunk would terminate the body
+                }
+                stream.write_all(format!("{:x}\r\n", d.len()).as_bytes())?;
+                stream.write_all(&d)?;
+                stream.write_all(b"\r\n")?;
+                stream.flush()?;
+            }
+            Chunk::End => {
+                stream.write_all(b"0\r\n\r\n")?;
+                stream.flush()?;
+                return Ok(());
+            }
+            Chunk::Abort => {
+                return Err(anyhow!("chunked response aborted mid-stream"));
+            }
+        }
+    }
 }
 
 /// Handler signature: pure request → response.
@@ -160,13 +235,19 @@ impl HttpServer {
                     }
                     match conn {
                         Ok(mut stream) => {
+                            // bound per-write stalls so a wedged client
+                            // cannot pin a worker (and with it, shutdown)
+                            // forever; slow-but-progressing clients are
+                            // unaffected (the bound is per write, not per
+                            // response)
+                            let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
                             let handler = Arc::clone(&handler);
                             pool.execute(move || {
-                                let resp = match read_request(&mut stream) {
+                                let mut resp = match read_request(&mut stream) {
                                     Ok(req) => handler(req),
                                     Err(e) => Response::bad_request(&e.to_string()),
                                 };
-                                let _ = write_response(&mut stream, &resp);
+                                let _ = write_response(&mut stream, &mut resp);
                             });
                         }
                         Err(_) => break,
@@ -251,14 +332,14 @@ pub fn http_request_deadlines(
     request_on(stream, addr, method, path, body, extra_headers)
 }
 
-fn request_on(
-    mut stream: TcpStream,
+fn write_request_head(
+    stream: &mut TcpStream,
     addr: SocketAddr,
     method: &str,
     path: &str,
     body: &[u8],
     extra_headers: &[(&str, &str)],
-) -> Result<(u16, Vec<u8>)> {
+) -> Result<()> {
     let mut head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
@@ -270,8 +351,12 @@ fn request_on(
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
+    Ok(())
+}
 
-    let mut reader = BufReader::new(stream);
+/// Parse a response's status line + headers, returning
+/// `(status, content_length, chunked)`.
+fn read_response_head(reader: &mut BufReader<TcpStream>) -> Result<(u16, Option<usize>, bool)> {
     let mut status_line = String::new();
     reader.read_line(&mut status_line)?;
     let status: u16 = status_line
@@ -281,6 +366,7 @@ fn request_on(
         .parse()
         .context("bad status code")?;
     let mut content_length: Option<usize> = None;
+    let mut chunked = false;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -289,10 +375,36 @@ fn request_on(
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
                 content_length = Some(v.trim().parse().context("bad content-length")?);
+            } else if k.eq_ignore_ascii_case("transfer-encoding")
+                && v.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
             }
         }
+    }
+    Ok((status, content_length, chunked))
+}
+
+fn request_on(
+    mut stream: TcpStream,
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+) -> Result<(u16, Vec<u8>)> {
+    write_request_head(&mut stream, addr, method, path, body, extra_headers)?;
+    let mut reader = BufReader::new(stream);
+    let (status, content_length, chunked) = read_response_head(&mut reader)?;
+    if chunked {
+        // a non-streaming caller of a streaming endpoint still gets the
+        // whole body, de-chunked
+        let mut hs = HttpStream::new(reader, None, true);
+        let body = hs.read_body().context("read chunked body")?;
+        return Ok((status, body));
     }
     let mut body = Vec::new();
     match content_length {
@@ -305,6 +417,175 @@ fn request_on(
         }
     }
     Ok((status, body))
+}
+
+// ---------------------------------------------------------------------------
+// Streaming client
+// ---------------------------------------------------------------------------
+
+enum Transfer {
+    /// chunked transfer: bytes left in the current chunk.
+    Chunked { left: usize },
+    /// Content-Length body: bytes left.
+    Length { left: usize },
+    /// EOF-delimited body (no framing; end cannot be told from truncation).
+    Eof,
+}
+
+/// The body of an in-flight HTTP response, decoded incrementally — the
+/// client half of chunked-transfer streaming. `next_line()` yields
+/// NDJSON event lines as the server produces them; a connection that dies
+/// before the chunked terminator surfaces as `UnexpectedEof`, so callers
+/// can distinguish mid-stream death from completion.
+pub struct HttpStream {
+    reader: BufReader<TcpStream>,
+    transfer: Transfer,
+    done: bool,
+    buf: Vec<u8>,
+}
+
+impl HttpStream {
+    fn new(reader: BufReader<TcpStream>, content_length: Option<usize>, chunked: bool) -> Self {
+        let transfer = if chunked {
+            Transfer::Chunked { left: 0 }
+        } else if let Some(n) = content_length {
+            Transfer::Length { left: n }
+        } else {
+            Transfer::Eof
+        };
+        HttpStream { reader, transfer, done: false, buf: Vec::new() }
+    }
+
+    /// Decode more body bytes into the buffer. Ok(false) = clean end of
+    /// body; Err(UnexpectedEof) = the peer vanished mid-body.
+    fn fill(&mut self) -> std::io::Result<bool> {
+        use std::io::{Error, ErrorKind, Read};
+        if self.done {
+            return Ok(false);
+        }
+        let eof = |what: &str| Error::new(ErrorKind::UnexpectedEof, format!("stream died {what}"));
+        match &mut self.transfer {
+            Transfer::Chunked { left } => {
+                if *left == 0 {
+                    let mut size_line = String::new();
+                    if self.reader.read_line(&mut size_line)? == 0 {
+                        return Err(eof("before a chunk header"));
+                    }
+                    let size_s = size_line.trim().split(';').next().unwrap_or("").trim();
+                    let size = usize::from_str_radix(size_s, 16).map_err(|_| {
+                        Error::new(ErrorKind::InvalidData, format!("bad chunk size {size_line:?}"))
+                    })?;
+                    if size == 0 {
+                        // consume the trailing CRLF after the zero chunk
+                        let mut trail = String::new();
+                        let _ = self.reader.read_line(&mut trail);
+                        self.done = true;
+                        return Ok(false);
+                    }
+                    *left = size;
+                }
+                let want = (*left).min(16 * 1024);
+                let start = self.buf.len();
+                self.buf.resize(start + want, 0);
+                let n = self.reader.read(&mut self.buf[start..])?;
+                self.buf.truncate(start + n);
+                if n == 0 {
+                    return Err(eof("inside a chunk"));
+                }
+                *left -= n;
+                if *left == 0 {
+                    let mut crlf = [0u8; 2];
+                    self.reader.read_exact(&mut crlf).map_err(|_| eof("at a chunk boundary"))?;
+                }
+                Ok(true)
+            }
+            Transfer::Length { left } => {
+                if *left == 0 {
+                    self.done = true;
+                    return Ok(false);
+                }
+                let want = (*left).min(16 * 1024);
+                let start = self.buf.len();
+                self.buf.resize(start + want, 0);
+                let n = self.reader.read(&mut self.buf[start..])?;
+                self.buf.truncate(start + n);
+                if n == 0 {
+                    return Err(eof("mid-body"));
+                }
+                *left -= n;
+                Ok(true)
+            }
+            Transfer::Eof => {
+                let start = self.buf.len();
+                self.buf.resize(start + 16 * 1024, 0);
+                let n = self.reader.read(&mut self.buf[start..])?;
+                self.buf.truncate(start + n);
+                if n == 0 {
+                    self.done = true;
+                    return Ok(false);
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Next newline-terminated line of the body (the NDJSON event frame),
+    /// blocking until the server produces one. `Ok(None)` = the body ended
+    /// cleanly; `Err` = transport death mid-stream.
+    pub fn next_line(&mut self) -> std::io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+            }
+            if !self.fill()? {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                let line = String::from_utf8_lossy(&self.buf).into_owned();
+                self.buf.clear();
+                return Ok(Some(line));
+            }
+        }
+    }
+
+    /// Drain the rest of the body (non-streaming consumption of an error
+    /// response, or a caller that wants the whole payload at once).
+    pub fn read_body(&mut self) -> std::io::Result<Vec<u8>> {
+        while self.fill()? {}
+        Ok(std::mem::take(&mut self.buf))
+    }
+}
+
+/// Open a streaming request: returns the response status and an
+/// [`HttpStream`] that decodes the body incrementally. `connect` bounds
+/// the TCP handshake and request write; `read` bounds each wait for the
+/// next body byte (use a generous value — streams legitimately pause
+/// between decode steps while the model computes).
+pub fn http_request_stream(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+    connect: Duration,
+    read: Duration,
+) -> Result<(u16, HttpStream)> {
+    let connect = connect.max(Duration::from_millis(1));
+    let read = read.max(Duration::from_millis(1));
+    let mut stream = TcpStream::connect_timeout(&addr, connect)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_write_timeout(Some(connect))?;
+    stream.set_read_timeout(Some(read))?;
+    write_request_head(&mut stream, addr, method, path, body, extra_headers)?;
+    let mut reader = BufReader::new(stream);
+    let (status, content_length, chunked) = read_response_head(&mut reader)?;
+    Ok((status, HttpStream::new(reader, content_length, chunked)))
 }
 
 pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, Vec<u8>)> {
@@ -332,7 +613,7 @@ mod tests {
                 if req.path == "/health" {
                     Response::text(200, "ok")
                 } else if req.method == "POST" {
-                    Response { status: 200, content_type: "application/json", body: req.body }
+                    Response::bytes(200, "application/json", req.body)
                 } else {
                     Response::not_found()
                 }
@@ -396,6 +677,101 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert!(get_timeout(dead, "/health", Duration::from_millis(500)).is_err());
         assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    /// `/stream` emits `count` NDJSON lines as chunks; `/truncate` aborts
+    /// after 2 lines without the terminator.
+    fn chunk_server() -> HttpServer {
+        HttpServer::bind(
+            "127.0.0.1:0",
+            2,
+            Arc::new(|req: Request| {
+                let truncate = req.path.starts_with("/truncate");
+                let count = 5usize;
+                let mut i = 0usize;
+                Response::chunked(
+                    200,
+                    "application/x-ndjson",
+                    Box::new(move || {
+                        if truncate && i == 2 {
+                            return Chunk::Abort;
+                        }
+                        if i >= count {
+                            return Chunk::End;
+                        }
+                        i += 1;
+                        Chunk::Data(format!("{{\"n\":{}}}\n", i - 1).into_bytes())
+                    }),
+                )
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chunked_stream_yields_lines_incrementally() {
+        let srv = chunk_server();
+        let (status, mut hs) = http_request_stream(
+            srv.addr(),
+            "GET",
+            "/stream",
+            &[],
+            &[],
+            Duration::from_secs(5),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        let mut lines = Vec::new();
+        while let Some(line) = hs.next_line().unwrap() {
+            lines.push(line);
+        }
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[0], "{\"n\":0}");
+        assert_eq!(lines[4], "{\"n\":4}");
+    }
+
+    #[test]
+    fn chunked_truncation_is_an_error_not_a_clean_end() {
+        let srv = chunk_server();
+        let (status, mut hs) = http_request_stream(
+            srv.addr(),
+            "GET",
+            "/truncate",
+            &[],
+            &[],
+            Duration::from_secs(5),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(hs.next_line().unwrap().is_some());
+        assert!(hs.next_line().unwrap().is_some());
+        // the third pull hits the dropped connection: an error, never a
+        // silent clean end
+        let err = loop {
+            match hs.next_line() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("truncation reported as clean end"),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            matches!(
+                err.kind(),
+                std::io::ErrorKind::UnexpectedEof | std::io::ErrorKind::ConnectionReset
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn non_streaming_client_still_reads_chunked_bodies() {
+        let srv = chunk_server();
+        let (status, body) = get(srv.addr(), "/stream").unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert_eq!(text.lines().count(), 5);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Streaming generation end-to-end: incremental event delivery, coordinator
+//! transparency, mid-stream replica death (retryable tail, no hang, no
+//! silent truncation), and request validation over the wire.
+
+use std::time::{Duration, Instant};
+
+use nnscope::client::remote::{is_retryable_stream_err, NdifClient, StreamEvent};
+use nnscope::client::Trace;
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::scheduler::CoTenancy;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+
+fn start_server() -> NdifServer {
+    let cfg = NdifConfig { cotenancy: CoTenancy::Sequential, ..NdifConfig::local(&["tiny-sim"]) };
+    NdifServer::start(cfg).unwrap()
+}
+
+fn tokens() -> Tensor {
+    Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect())
+}
+
+/// A probe trace: step-hook the mean of layer.0 (small per-step payload).
+fn probe_trace() -> Trace {
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    let h = tr.output("layer.0");
+    let m = tr.mean(h);
+    tr.step_hook(m);
+    tr
+}
+
+/// A fat probe: step-hook the whole layer.0 hidden state, so events carry
+/// kilobytes and a long stream cannot hide in socket buffers.
+fn fat_trace() -> Trace {
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    let h = tr.output("layer.0");
+    tr.step_hook(h);
+    tr
+}
+
+#[test]
+fn stream_delivers_events_before_completion() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let steps = 6usize;
+
+    let t0 = Instant::now();
+    let mut first_event = None;
+    let mut seen_steps = Vec::new();
+    let mut done = None;
+    for item in probe_trace().run_stream(&client, steps).unwrap() {
+        match item.unwrap() {
+            StreamEvent::Step { step, token, values, .. } => {
+                if first_event.is_none() {
+                    first_event = Some(t0.elapsed());
+                }
+                assert_eq!(step, seen_steps.len(), "events must arrive in step order");
+                assert!(!values.values.is_empty(), "step event carries hooked values");
+                seen_steps.push(token);
+            }
+            StreamEvent::Done { tokens, scores } => {
+                assert_eq!(scores.len(), tokens.len());
+                done = Some(tokens);
+            }
+        }
+    }
+    let total = t0.elapsed();
+    let done = done.expect("stream must end with a done event");
+    assert_eq!(seen_steps.len(), steps);
+    assert_eq!(done, seen_steps, "done trajectory must match the streamed steps");
+    assert!(
+        first_event.expect("no step event") < total,
+        "first event must land before the stream completes"
+    );
+
+    // the streamed trajectory matches plain (non-streaming) generation:
+    // a pure probe must not perturb decoding
+    let runner =
+        nnscope::models::ModelRunner::load(&nnscope::models::artifacts_dir(), "tiny-sim").unwrap();
+    let plain = runner.generate_plain(&tokens(), steps).unwrap();
+    assert_eq!(done, plain.tokens);
+}
+
+#[test]
+fn stream_rejections_are_clean_400s() {
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+
+    // a step_hook graph on the one-shot trace endpoint points at /v1/stream
+    let err = probe_trace().run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("/v1/stream"), "{err}");
+
+    // grads are per-request, not per-step
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    tr.targets(&[1.0]);
+    let g = tr.grad("layer.0");
+    tr.step_hook(g);
+    let err = tr.run_stream(&client, 4).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+
+    // batch > 1 is rejected at submit (streaming is single-sequence)
+    let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[2, 16]));
+    let h = tr.output("layer.0");
+    tr.step_hook(h);
+    let err = tr.run_stream(&client, 4).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("single-sequence"), "{err}");
+
+    // a wrong-length prompt is rejected at submit too
+    let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 8]));
+    let h = tr.output("layer.0");
+    tr.step_hook(h);
+    let err = tr.run_stream(&client, 4).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("prompt"), "{err}");
+
+    // steps are mandatory and bounded
+    let (status, body) = nnscope::server::http::post(
+        server.addr(),
+        "/v1/stream",
+        nnscope::graph::serde::to_json(probe_trace().graph()).to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    assert!(String::from_utf8_lossy(&body).contains("steps"));
+}
+
+#[test]
+fn steering_setter_applies_at_every_step() {
+    // an ablation setter changes the trajectory vs the plain stream —
+    // per-step intervention execution, not just per-step observation
+    let server = start_server();
+    let client = NdifClient::new(server.addr());
+    let steps = 5usize;
+
+    let collect = |tr: Trace| -> Vec<usize> {
+        let mut out = Vec::new();
+        for item in tr.run_stream(&client, steps).unwrap() {
+            if let StreamEvent::Done { tokens, .. } = item.unwrap() {
+                out = tokens;
+            }
+        }
+        out
+    };
+
+    let plain = collect(probe_trace());
+    let mut tr = Trace::new("tiny-sim", &tokens());
+    let h = tr.output("layer.0");
+    let z = tr.scale(h, 0.0);
+    tr.set_output("layer.0", z);
+    let l = tr.output("lm_head");
+    let m = tr.mean(l);
+    tr.step_hook(m);
+    let steered = collect(tr);
+    assert_eq!(plain.len(), steps);
+    assert_eq!(steered.len(), steps);
+    assert_ne!(plain, steered, "ablating layer.0 every step must change decoding");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+fn coordinator() -> Coordinator {
+    let mut cfg = CoordinatorConfig::local();
+    cfg.policy = Policy::RoundRobin;
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.health.degraded_after = Duration::from_millis(400);
+    cfg.health.dead_after = Duration::from_secs(2);
+    Coordinator::start(cfg).unwrap()
+}
+
+fn replica(coord: &Coordinator) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.coordinator = Some(coord.addr().to_string());
+    cfg.heartbeat = Duration::from_millis(50);
+    NdifServer::start(cfg).unwrap()
+}
+
+#[test]
+fn coordinator_proxies_streams_transparently() {
+    let coord = coordinator();
+    let _replica = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+    let steps = 4usize;
+
+    let mut events = 0usize;
+    let mut done = false;
+    for item in probe_trace().run_stream(&client, steps).unwrap() {
+        match item.unwrap() {
+            StreamEvent::Step { .. } => events += 1,
+            StreamEvent::Done { tokens, .. } => {
+                assert_eq!(tokens.len(), steps);
+                done = true;
+            }
+        }
+    }
+    assert_eq!(events, steps);
+    assert!(done, "proxied stream must terminate with done");
+}
+
+#[test]
+fn killing_the_serving_replica_mid_stream_yields_retryable_tail() {
+    let coord = coordinator();
+    let rep = replica(&coord);
+    let mut client = NdifClient::new(coord.addr());
+    // bound every wait so a regression shows up as a test failure, not a
+    // hang
+    client.poll_timeout = Duration::from_secs(30);
+
+    // fat events + a step count far beyond what socket buffers can absorb:
+    // the decode is guaranteed to still be running when the replica dies
+    let mut iter = fat_trace().run_stream(&client, 2000).unwrap();
+    match iter.next().expect("stream opened").unwrap() {
+        StreamEvent::Step { .. } => {}
+        other => panic!("expected a step event first, got {other:?}"),
+    }
+
+    // kill from another thread: a real replica death is never synchronized
+    // with the client's reads
+    let killer = std::thread::spawn(move || {
+        let mut rep = rep;
+        rep.kill();
+        rep
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut tail_err = None;
+    for item in iter {
+        assert!(
+            Instant::now() < deadline,
+            "no tail event within 60s of replica death (client would hang)"
+        );
+        match item {
+            Ok(StreamEvent::Done { .. }) => {
+                panic!("stream reported clean completion despite replica death")
+            }
+            Ok(StreamEvent::Step { .. }) => continue, // frames already in flight
+            Err(e) => {
+                tail_err = Some(e);
+                break;
+            }
+        }
+    }
+    let e = tail_err.expect("stream ended with neither done nor an error item");
+    assert!(is_retryable_stream_err(&e), "tail must be retryable: {e}");
+    let _rep = killer.join().unwrap();
+
+    // the fleet keeps serving: a fresh stream against a new replica works
+    let _replacement = replica(&coord);
+    let mut done = false;
+    for item in probe_trace().run_stream(&client, 3).unwrap() {
+        if let StreamEvent::Done { .. } = item.unwrap() {
+            done = true;
+        }
+    }
+    assert!(done, "fresh stream after failover must complete");
+}
+
+#[test]
+fn direct_replica_death_surfaces_as_retryable_transport_error() {
+    // no coordinator in between: the client itself sees the truncated
+    // chunk stream and reports it retryably instead of hanging
+    let server = start_server();
+    let mut client = NdifClient::new(server.addr());
+    client.poll_timeout = Duration::from_secs(30);
+
+    let mut iter = fat_trace().run_stream(&client, 2000).unwrap();
+    assert!(matches!(
+        iter.next().expect("stream opened").unwrap(),
+        StreamEvent::Step { .. }
+    ));
+    let killer = std::thread::spawn(move || {
+        let mut server = server;
+        server.kill();
+        server
+    });
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut tail_err = None;
+    for item in iter {
+        assert!(Instant::now() < deadline, "no error within 60s of server death");
+        match item {
+            Ok(StreamEvent::Done { .. }) => panic!("clean completion despite server death"),
+            Ok(StreamEvent::Step { .. }) => continue,
+            Err(e) => {
+                tail_err = Some(e);
+                break;
+            }
+        }
+    }
+    let e = tail_err.expect("no terminal item after server death");
+    assert!(is_retryable_stream_err(&e), "{e}");
+    let _server = killer.join().unwrap();
+}

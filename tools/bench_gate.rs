@@ -1,0 +1,152 @@
+//! Bench-regression gate: compare freshly emitted `BENCH_*.json` files
+//! against checked-in baselines and fail CI on a >25% regression.
+//!
+//! Usage (from the repo root, after the quick-mode benches have run):
+//!
+//! ```sh
+//! cargo run --release --bin bench_gate              # check (CI)
+//! cargo run --release --bin bench_gate -- --update  # ratchet baselines
+//! cargo run --release --bin bench_gate -- --dir benches/baselines
+//! ```
+//!
+//! Every gated metric is higher-is-better; a fresh value below
+//! `baseline × (1 - 25%)` fails the job. The checked-in baselines are
+//! deliberately **conservative floors** (CI runners vary wildly in core
+//! count and clock): they catch order-of-magnitude regressions — a kernel
+//! falling back to the naive path, streaming losing its first-token
+//! advantage, sessions losing their round-trip advantage — without
+//! flaking on hardware noise. Ratchet them upward over time by running
+//! `--update` on a representative runner and committing the result.
+
+use nnscope::json::{parse, Json};
+use nnscope::util::cli::Args;
+use nnscope::util::table::Table;
+
+/// Allowed relative regression before the gate fails.
+const MAX_REGRESSION: f64 = 0.25;
+
+/// One gated metric: where it lives and how to pull it out of the JSON.
+struct Metric {
+    file: &'static str,
+    name: &'static str,
+    extract: fn(&Json) -> Option<f64>,
+}
+
+/// `kernels[]` entry by name → its tokens-equivalent throughput.
+fn kernel_throughput(j: &Json, kernel: &str) -> Option<f64> {
+    j.get("kernels")
+        .as_array()?
+        .iter()
+        .find(|k| k.get("name").as_str() == Some(kernel))
+        .and_then(|k| k.get("tokens_equiv_per_s").as_f64())
+}
+
+fn metrics() -> Vec<Metric> {
+    vec![
+        Metric {
+            file: "BENCH_kernels.json",
+            name: "matmul tokens_equiv_per_s",
+            extract: |j| kernel_throughput(j, "matmul"),
+        },
+        Metric {
+            file: "BENCH_kernels.json",
+            name: "softmax tokens_equiv_per_s",
+            extract: |j| kernel_throughput(j, "softmax"),
+        },
+        Metric {
+            file: "BENCH_kernels.json",
+            name: "broadcast_add tokens_equiv_per_s",
+            extract: |j| kernel_throughput(j, "broadcast_add"),
+        },
+        Metric {
+            file: "BENCH_sessions.json",
+            name: "sessions speedup_simulated_wan",
+            extract: |j| j.get("speedup_simulated_wan").as_f64(),
+        },
+        Metric {
+            file: "BENCH_streaming.json",
+            name: "streaming stream_speedup (full/ttft)",
+            extract: |j| j.get("stream_speedup").as_f64(),
+        },
+        Metric {
+            file: "BENCH_streaming.json",
+            name: "streaming tokens_per_s",
+            extract: |j| j.get("tokens_per_s").as_f64(),
+        },
+    ]
+}
+
+fn load(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    parse(&text).map_err(|e| format!("parse {path:?}: {e}"))
+}
+
+fn main() {
+    let args = Args::from_env(1);
+    let baseline_dir = std::path::PathBuf::from(args.str_or("dir", "benches/baselines"));
+    let files = ["BENCH_kernels.json", "BENCH_sessions.json", "BENCH_streaming.json"];
+
+    if args.flag("update") {
+        std::fs::create_dir_all(&baseline_dir).expect("create baseline dir");
+        for f in files {
+            std::fs::copy(f, baseline_dir.join(f))
+                .unwrap_or_else(|e| panic!("copy fresh {f} into baselines: {e}"));
+            println!("baseline updated: {}", baseline_dir.join(f).display());
+        }
+        return;
+    }
+
+    let mut table = Table::new("bench-regression gate").header(vec![
+        "metric", "fresh", "baseline", "floor", "verdict",
+    ]);
+    let mut failures = Vec::new();
+    for m in metrics() {
+        let fresh = load(std::path::Path::new(m.file)).and_then(|j| {
+            (m.extract)(&j).ok_or_else(|| format!("{} missing in fresh {}", m.name, m.file))
+        });
+        let base = load(&baseline_dir.join(m.file)).and_then(|j| {
+            (m.extract)(&j).ok_or_else(|| {
+                format!("{} missing in baseline {} (run --update?)", m.name, m.file)
+            })
+        });
+        match (fresh, base) {
+            (Ok(fresh), Ok(base)) => {
+                let floor = base * (1.0 - MAX_REGRESSION);
+                let ok = fresh >= floor;
+                table.row(vec![
+                    m.name.to_string(),
+                    format!("{fresh:.3}"),
+                    format!("{base:.3}"),
+                    format!("{floor:.3}"),
+                    if ok { "ok".to_string() } else { "REGRESSION".to_string() },
+                ]);
+                if !ok {
+                    failures.push(format!(
+                        "{}: {fresh:.3} < floor {floor:.3} (baseline {base:.3})",
+                        m.name
+                    ));
+                }
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                table.row(vec![
+                    m.name.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "MISSING".to_string(),
+                ]);
+                failures.push(e);
+            }
+        }
+    }
+    table.print();
+    if failures.is_empty() {
+        println!("bench gate: all metrics within {:.0}% of baseline", MAX_REGRESSION * 100.0);
+    } else {
+        eprintln!("bench gate FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}
