@@ -1,0 +1,242 @@
+//! Intervention-graph compiler payoff: optimized vs `--no-opt` execution
+//! (ISSUE 5 acceptance bench).
+//!
+//! Two workloads, both realistic compiler fodder:
+//!
+//! * **all-layers logit-lens stream** — a streaming generation whose
+//!   graph reads every layer, decodes each hidden state through a
+//!   `Const` projection chain, and step-hooks the result. Unoptimized,
+//!   the `Const`-only chain re-evaluates at EVERY decode step and the
+//!   speculative dead getters force extra hook work; the compiler folds
+//!   the chain once at admission, eliminates the dead reads, hash-conses
+//!   the duplicate getters, and fuses the softmax-of-scale lens.
+//! * **CSE-heavy co-tenant burst** — a merged forward pass of graphs
+//!   that each repeat an identical probe chain; the compiler collapses
+//!   the duplicates so the shared forward carries one evaluation per
+//!   chain instead of many.
+//!
+//! The acceptance bar is the stream strictly faster optimized than
+//! `--no-opt`. Emits `BENCH_graphopt.json` (gated by
+//! `tools/bench_gate.rs` against `benches/baselines/`).
+
+#[path = "common.rs"]
+mod common;
+
+use nnscope::client::Trace;
+use nnscope::graph::{opt, InterventionGraph};
+use nnscope::interp;
+use nnscope::json::Json;
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::scheduler::execute_merged;
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+
+/// The all-layers logit-lens stream graph: per-layer lens through a
+/// const projection chain, plus duplicate and speculative reads.
+fn lens_stream_trace(runner: &ModelRunner) -> Trace {
+    let m = &runner.manifest;
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 7 + 3) % m.vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new(&m.name, &tokens);
+    // a Const-only projection chain: chained 128×128 matmuls, sliced down
+    // to d_model×d_model at the end. Unoptimized this re-evaluates at
+    // EVERY decode step; the compiler folds it to one literal at
+    // admission, so the stream pays it once per request.
+    let d = m.d_model;
+    let big = 128usize;
+    let mut chain = tr.constant(&Tensor::new(
+        &[big, big],
+        (0..big * big).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect(),
+    ));
+    for k in 0..6 {
+        let w = tr.constant(&Tensor::new(
+            &[big, big],
+            (0..big * big).map(|i| (((i + k) % 11) as f32 - 5.0) * 0.01).collect(),
+        ));
+        chain = tr.matmul(chain, w);
+    }
+    let proj = tr.slice(
+        chain,
+        &[nnscope::tensor::Range1::new(0, d), nnscope::tensor::Range1::new(0, d)],
+    );
+    for layer in 0..m.n_layers {
+        let point = format!("layer.{layer}");
+        let h = tr.output(&point);
+        let h_dup = tr.output(&point); // duplicate read: CSE
+        let _speculative = tr.output(&point); // dead read: DCE
+        let flat = tr.reshape(h, &[m.seq, d]);
+        let lensed = tr.matmul(flat, proj);
+        let sc = tr.scale(lensed, 1.7);
+        let sm = tr.softmax(sc); // Softmax-of-Scale: fused
+        let mn = tr.mean(sm);
+        tr.step_hook(mn);
+        let mn2 = tr.mean(h_dup);
+        tr.step_hook(mn2);
+    }
+    tr
+}
+
+fn time_stream(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    steps: usize,
+    optimize: bool,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut events = 0usize;
+    let mut sink = |_: usize, _: interp::StepOutcome| {
+        events += 1;
+        true
+    };
+    interp::execute_stream_full(graph, runner, steps, optimize, &mut sink).unwrap();
+    assert_eq!(events, steps);
+    t0.elapsed().as_secs_f64()
+}
+
+/// One CSE-heavy co-tenant graph: `k` copies of an identical probe chain
+/// (read → project through a wide const → softmax → mean), which the
+/// compiler hash-conses down to a single evaluation.
+fn cotenant_graph(runner: &ModelRunner, k: usize, seed: usize) -> InterventionGraph {
+    let m = &runner.manifest;
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 3 + seed) % m.vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new(&m.name, &tokens);
+    let (d, wide) = (m.d_model, 128usize);
+    let w = tr.constant(&Tensor::new(
+        &[d, wide],
+        (0..d * wide).map(|i| ((i % 17) as f32 - 8.0) * 0.02).collect(),
+    ));
+    for _ in 0..k {
+        let h = tr.output("layer.0");
+        let flat = tr.reshape(h, &[m.seq, d]);
+        let pr = tr.matmul(flat, w);
+        let sc = tr.scale(pr, 2.0);
+        let sm = tr.softmax(sc);
+        let mn = tr.mean(sm);
+        tr.save(mn);
+    }
+    tr.into_graph()
+}
+
+fn main() {
+    let quick = common::quick();
+    let model = "tiny-sim";
+    let runner = ModelRunner::load(&artifacts_dir(), model).unwrap();
+    let steps = if quick { 24 } else { 96 };
+    let reps = if quick { 3 } else { 7 };
+
+    // ---- workload 1: all-layers logit-lens stream -------------------------
+    common::section(&format!(
+        "Graph compiler — all-layers logit-lens stream, {steps} steps ({model})"
+    ));
+    let graph = lens_stream_trace(&runner).into_graph();
+    let fseq = runner.manifest.forward_sequence();
+    let report = opt::optimize(&graph, &fseq).unwrap().report;
+
+    // warmup one short run each, then alternate measurements
+    time_stream(&graph, &runner, 2, false);
+    time_stream(&graph, &runner, 2, true);
+    let mut noopt = Vec::with_capacity(reps);
+    let mut opted = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        noopt.push(time_stream(&graph, &runner, steps, false));
+        opted.push(time_stream(&graph, &runner, steps, true));
+    }
+    let stream_noopt = nnscope::util::stats::Summary::of(&noopt).median;
+    let stream_opt = nnscope::util::stats::Summary::of(&opted).median;
+    let stream_speedup = stream_noopt / stream_opt.max(1e-12);
+
+    let mut table = Table::new("stream: optimized vs --no-opt").header(vec![
+        "path", "median wall (s)", "graph nodes",
+    ]);
+    table.row(vec![
+        "--no-opt".to_string(),
+        format!("{stream_noopt:.4}"),
+        format!("{}", report.nodes_before),
+    ]);
+    table.row(vec![
+        "optimized".to_string(),
+        format!("{stream_opt:.4}"),
+        format!("{}", report.nodes_after),
+    ]);
+    table.print();
+    common::shape_note(&format!(
+        "{} → {} nodes (dce {}, folded {}, cse {}, fused {}): {stream_speedup:.2}x faster \
+         (acceptance bar: optimized strictly faster)",
+        report.nodes_before,
+        report.nodes_after,
+        report.dce_removed,
+        report.folded,
+        report.cse_merged,
+        report.fused
+    ));
+    assert!(
+        stream_opt < stream_noopt,
+        "optimized stream ({stream_opt:.4}s) must beat --no-opt ({stream_noopt:.4}s)"
+    );
+
+    // ---- workload 2: CSE-heavy co-tenant burst ----------------------------
+    common::section("Graph compiler — CSE-heavy co-tenant merged burst");
+    let chains = 8;
+    let graphs: Vec<InterventionGraph> =
+        (0..4).map(|i| cotenant_graph(&runner, chains, i)).collect();
+    let optimized: Vec<opt::Optimized> = graphs
+        .iter()
+        .map(|g| opt::optimize(g, &fseq).unwrap())
+        .collect();
+    let opt_graphs: Vec<InterventionGraph> =
+        optimized.iter().map(|o| o.graph.clone()).collect();
+    let burst_reps = if quick { 6 } else { 20 };
+    let run_burst = |gs: &[InterventionGraph]| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..burst_reps {
+            let results = execute_merged(gs, &runner).unwrap();
+            assert!(results.iter().all(|r| r.is_ok()));
+        }
+        t0.elapsed().as_secs_f64() / burst_reps as f64
+    };
+    run_burst(&graphs); // warmup
+    let cot_noopt = run_burst(&graphs);
+    let cot_opt = run_burst(&opt_graphs);
+    let cotenant_speedup = cot_noopt / cot_opt.max(1e-12);
+    let creport = &optimized[0].report;
+    let mut table = Table::new("co-tenant burst: optimized vs raw merge").header(vec![
+        "path", "wall per merge (s)", "nodes per graph",
+    ]);
+    table.row(vec![
+        "raw".to_string(),
+        format!("{cot_noopt:.5}"),
+        format!("{}", creport.nodes_before),
+    ]);
+    table.row(vec![
+        "optimized".to_string(),
+        format!("{cot_opt:.5}"),
+        format!("{}", creport.nodes_after),
+    ]);
+    table.print();
+    common::shape_note(&format!(
+        "{chains} duplicate probe chains per co-tenant hash-consed to one: \
+         {cotenant_speedup:.2}x faster merged execution"
+    ));
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("graphopt")),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::from(model)),
+        ("steps", Json::from(steps)),
+        ("stream_wall_noopt_s", Json::from(stream_noopt)),
+        ("stream_wall_opt_s", Json::from(stream_opt)),
+        ("stream_speedup_opt", Json::from(stream_speedup)),
+        ("stream_nodes_before", Json::from(report.nodes_before)),
+        ("stream_nodes_after", Json::from(report.nodes_after)),
+        ("cotenant_wall_noopt_s", Json::from(cot_noopt)),
+        ("cotenant_wall_opt_s", Json::from(cot_opt)),
+        ("cotenant_speedup_opt", Json::from(cotenant_speedup)),
+    ]);
+    std::fs::write("BENCH_graphopt.json", json.pretty()).expect("write BENCH_graphopt.json");
+    println!("\nwrote BENCH_graphopt.json");
+}

@@ -12,6 +12,34 @@
 //! manifest without executing anything, catching shape bugs before the
 //! forward pass runs.
 //!
+//! # Examples
+//!
+//! Building a trace records intervention-graph nodes without touching
+//! any model (deferred execution), so the graph can be inspected,
+//! validated, and serialized before anything runs:
+//!
+//! ```
+//! use nnscope::client::Trace;
+//! use nnscope::graph::validate::validate;
+//! use nnscope::tensor::Tensor;
+//!
+//! let fseq: Vec<String> = vec!["embed".into(), "layer.0".into(), "lm_head".into()];
+//! let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+//! let h = tr.output("layer.0");      // getter proxy — nothing executes
+//! let scaled = tr.scale(h, 2.0);
+//! tr.set_output("layer.0", scaled);  // setter edge back into the model
+//! let logits = tr.output("lm_head");
+//! let saved = tr.save(logits);       // LockProtocol: returned to the user
+//!
+//! let g = tr.graph();
+//! validate(g, &fseq).unwrap();
+//! assert_eq!(g.saves().len(), 1);
+//! assert_eq!(g.setter_points(), vec!["layer.0"]);
+//! # let _ = saved;
+//! ```
+//!
+//! Executing against a loaded model (requires built artifacts):
+//!
 //! ```no_run
 //! # use nnscope::client::Trace;
 //! # use nnscope::models::{ModelRunner, artifacts_dir};
@@ -231,16 +259,18 @@ impl Trace {
         scan::scan(&self.graph, manifest)
     }
 
-    /// Execute locally against a loaded model.
+    /// Execute locally against a loaded model. The graph runs through the
+    /// same admission compiler a server would apply ([`crate::graph::opt`]);
+    /// the report is available via [`TraceResult::opt_report`].
     pub fn run_local(self, runner: &ModelRunner) -> Result<TraceResult> {
-        let result = interp::execute(&self.graph, runner)?;
-        Ok(TraceResult { result })
+        let (result, opt_report) = interp::execute_reported(&self.graph, runner, true)?;
+        Ok(TraceResult { result, opt_report })
     }
 
     /// Execute remotely against an NDIF server.
     pub fn run_remote(self, client: &remote::NdifClient) -> Result<TraceResult> {
-        let result = client.execute(&self.graph)?;
-        Ok(TraceResult { result })
+        let (result, opt_report) = client.execute_detailed(&self.graph)?;
+        Ok(TraceResult { result, opt_report })
     }
 
     /// Execute remotely as a streaming generation: greedy-decode `steps`
@@ -268,11 +298,22 @@ impl Trace {
 #[derive(Debug, Clone)]
 pub struct TraceResult {
     result: GraphResult,
+    /// What the executing fabric's graph compiler did (None when the
+    /// request ran unoptimized or the path doesn't surface a report).
+    opt_report: Option<crate::graph::opt::OptReport>,
 }
 
 impl TraceResult {
     pub fn from_graph_result(result: GraphResult) -> TraceResult {
-        TraceResult { result }
+        TraceResult { result, opt_report: None }
+    }
+
+    /// The per-request optimization report, when the executing side ran
+    /// the graph through [`crate::graph::opt`] (local runs always do;
+    /// remote runs surface the server's `/v1/result` `"opt"` metadata —
+    /// absent under `--no-opt`).
+    pub fn opt_report(&self) -> Option<&crate::graph::opt::OptReport> {
+        self.opt_report.as_ref()
     }
 
     /// Get a saved value; panics if the handle is not from this trace.

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::graph::{serde as gserde, GraphResult, InterventionGraph};
+use crate::graph::{opt::OptReport, serde as gserde, GraphResult, InterventionGraph};
 use crate::json::{parse, Json};
 use crate::netsim::NetSim;
 use crate::server::http;
@@ -111,6 +111,18 @@ impl NdifClient {
 
     /// Execute one intervention graph remotely.
     pub fn execute(&self, graph: &InterventionGraph) -> Result<GraphResult> {
+        Ok(self.execute_detailed(graph)?.0)
+    }
+
+    /// [`NdifClient::execute`] plus the server's per-request optimization
+    /// report (the `"opt"` metadata of `/v1/result`; `None` when the
+    /// server ran with `--no-opt`). Saved values are always keyed by the
+    /// ids of the graph as built — the server's rewrite is invisible
+    /// except through this report.
+    pub fn execute_detailed(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Option<OptReport>)> {
         let payload = gserde::to_json(graph).to_string();
         // upstream: the graph + tokens
         self.link.send(payload.len());
@@ -133,11 +145,16 @@ impl NdifClient {
             .as_str()
             .ok_or_else(|| anyhow!("submit response missing id"))?
             .to_string();
-        self.fetch_result(&id)
+        self.fetch_result_detailed(&id)
     }
 
     /// Long-poll a result id until completion.
     pub fn fetch_result(&self, id: &str) -> Result<GraphResult> {
+        Ok(self.fetch_result_detailed(id)?.0)
+    }
+
+    /// [`NdifClient::fetch_result`] plus the `"opt"` metadata object.
+    pub fn fetch_result_detailed(&self, id: &str) -> Result<(GraphResult, Option<OptReport>)> {
         let deadline = std::time::Instant::now() + self.poll_timeout;
         loop {
             let remaining = deadline.saturating_duration_since(std::time::Instant::now());
@@ -155,7 +172,8 @@ impl NdifClient {
                     // server-side-intervention advantage)
                     self.link.send(body.len());
                     let j = parse(std::str::from_utf8(&body)?)?;
-                    return gserde::result_from_json(&j);
+                    let report = OptReport::from_json(j.get("opt"));
+                    return Ok((gserde::result_from_json(&j)?, report));
                 }
                 202 => continue,
                 500 => {

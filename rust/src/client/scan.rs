@@ -98,12 +98,13 @@ pub fn scan_with_state(
                 slice_dims(&shapes[*dst], ranges)?;
                 shapes[*dst].clone()
             }
-            Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } => {
+            Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b }
+            | Op::FusedScaleAdd { a, b, .. } => {
                 Shape::broadcast(&shapes[*a], &shapes[*b]).ok_or_else(|| {
                     anyhow!("broadcast {:?} vs {:?}", shapes[*a], shapes[*b])
                 })?
             }
-            Op::Matmul { a, b } => {
+            Op::Matmul { a, b } | Op::FusedMatmulGelu { a, b } => {
                 let (sa, sb) = (&shapes[*a], &shapes[*b]);
                 if sb.len() != 2 {
                     return Err(anyhow!("matmul rhs must be 2-D, got {sb:?}"));
@@ -117,7 +118,8 @@ pub fn scan_with_state(
                 out
             }
             Op::Scale { arg, .. } | Op::Gelu { arg } | Op::Softmax { arg } | Op::Save { arg }
-            | Op::StepHook { arg } | Op::StoreState { arg, .. } => shapes[*arg].clone(),
+            | Op::StepHook { arg } | Op::StoreState { arg, .. }
+            | Op::FusedScaleSoftmax { arg, .. } => shapes[*arg].clone(),
             Op::LoadState { key } => state_shapes
                 .get(key)
                 .cloned()

@@ -5,10 +5,34 @@
 //! attached to the model's forward pass via getter edges (read a module
 //! activation) and setter edges (write one back). Graphs are built by the
 //! [`crate::client`] tracing API, validated ([`validate`]), serialized
-//! ([`serde`]), optionally transmitted to an NDIF server, and interleaved
-//! with model execution by the [`crate::interp`] executor.
+//! ([`serde`]), optionally transmitted to an NDIF server, **optimized**
+//! by the admission compiler ([`opt`]: dead-code elimination, constant
+//! folding, CSE, kernel fusion — saved values stay bit-identical), and
+//! interleaved with model execution by the [`crate::interp`] executor.
+//! The full request lifecycle is documented in `docs/ARCHITECTURE.md`.
+//!
+//! # Examples
+//!
+//! Build a graph directly (the [`crate::client::Trace`] builder is the
+//! ergonomic front end for the same thing) and validate it:
+//!
+//! ```
+//! use nnscope::graph::{validate::validate, InterventionGraph, Op, Port};
+//!
+//! let fseq: Vec<String> = vec!["embed".into(), "layer.0".into(), "lm_head".into()];
+//! let mut g = InterventionGraph::new("tiny-sim");
+//! let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+//! let m = g.push(Op::Mean { arg: h });
+//! let s = g.push(Op::Save { arg: m });
+//! validate(&g, &fseq).unwrap();
+//! assert_eq!(g.saves(), vec![s]);
+//! assert_eq!(g.listener_counts(), vec![1, 1, 0]);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod node;
+pub mod opt;
 pub mod serde;
 pub mod validate;
 
@@ -43,6 +67,7 @@ pub struct InterventionGraph {
 }
 
 impl InterventionGraph {
+    /// An empty graph targeting `model` (unsharded, no tokens yet).
     pub fn new(model: &str) -> InterventionGraph {
         InterventionGraph { model: model.to_string(), shards: 1, ..Default::default() }
     }
@@ -59,6 +84,7 @@ impl InterventionGraph {
         id
     }
 
+    /// The node with id `id` (ids are dense positions).
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id]
     }
@@ -175,10 +201,14 @@ impl InterventionGraph {
 /// node id.
 #[derive(Clone, Debug, Default)]
 pub struct GraphResult {
+    /// Saved tensors keyed by the id of the `Save`/`StepHook` node that
+    /// locked them — always the ids of the graph *as submitted*, even
+    /// when the server rewrote it ([`opt::Optimized::remap_result`]).
     pub values: BTreeMap<NodeId, Tensor>,
 }
 
 impl GraphResult {
+    /// The value locked by save node `id`, if present.
     pub fn get(&self, id: NodeId) -> Option<&Tensor> {
         self.values.get(&id)
     }

@@ -8,6 +8,15 @@
 //! node (the many-to-one form; Appendix E of the paper shows the
 //! equivalence with Theano's many-to-many form). Getter/Setter ops carry
 //! the attachment points.
+//!
+//! A graph is a *description* of the experiment, not a fixed execution
+//! recipe: because the intervention graph decouples experimental design
+//! from the model runtime, the fabric is free to rewrite a submitted
+//! graph — dead-code elimination, constant folding, common-subexpression
+//! elimination, and kernel fusion ([`crate::graph::opt`]) — as long as
+//! every saved value is bit-identical to the unoptimized execution. The
+//! `Fused*` variants below are the internal ops that rewriting produces;
+//! clients never need to build them directly.
 
 use crate::tensor::Range1;
 
@@ -21,7 +30,9 @@ pub type NodeId = usize;
 /// is kept for API fidelity with NNsight's `.input`/`.output`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Port {
+    /// The module's input activation (= the previous module's output).
     Input,
+    /// The module's output activation.
     Output,
 }
 
@@ -49,15 +60,27 @@ pub enum Op {
     Assign { dst: NodeId, ranges: Ranges, src: NodeId },
     /// Functional fill: `dst` with `ranges` set to `value` (ablation).
     Fill { dst: NodeId, ranges: Ranges, value: f32 },
+    /// Elementwise (broadcasting) addition.
     Add { a: NodeId, b: NodeId },
+    /// Elementwise (broadcasting) subtraction.
     Sub { a: NodeId, b: NodeId },
+    /// Elementwise (broadcasting) multiplication.
     Mul { a: NodeId, b: NodeId },
+    /// Scalar multiply.
     Scale { arg: NodeId, factor: f32 },
+    /// Matrix product (`b` must be 2-D; contracts `a`'s last axis).
     Matmul { a: NodeId, b: NodeId },
+    /// tanh-approximation GELU (the model's MLP activation).
     Gelu { arg: NodeId },
+    /// Softmax over the last axis.
     Softmax { arg: NodeId },
+    /// Argmax over the last axis (drops that axis).
     Argmax { arg: NodeId },
+    /// Mean over all elements (scalar result). Empty inputs are an
+    /// execution error, not NaN — see `docs/PROTOCOL.md`.
     Mean { arg: NodeId },
+    /// Sum over all elements (scalar result). Empty inputs are an
+    /// execution error, matching [`Op::Mean`].
     Sum { arg: NodeId },
     /// 2-D transpose (probe/optimizer math: `xᵀ·g` weight gradients).
     Transpose { arg: NodeId },
@@ -83,6 +106,19 @@ pub enum Op {
     /// the trace completes (post-phase), so later traces in the same
     /// session observe it. Produces the stored value.
     StoreState { key: String, arg: NodeId },
+    /// Internal fused op (`a + factor·b`), produced by the optimizer's
+    /// fusion pass from an `Add` whose operand is a single-use `Scale`;
+    /// dispatches to the in-place `scale_add_assign` kernel. Numerically
+    /// bit-identical to the unfused pair.
+    FusedScaleAdd { a: NodeId, b: NodeId, factor: f32 },
+    /// Internal fused op (`gelu(matmul(a, b))`), produced from a `Gelu`
+    /// consuming a single-use `Matmul`; the GELU runs in place on the
+    /// product (`gelu_inplace`) with no intermediate node.
+    FusedMatmulGelu { a: NodeId, b: NodeId },
+    /// Internal fused op (`softmax(arg · factor)` over the last axis),
+    /// produced from a `Softmax` consuming a single-use `Scale`; runs
+    /// `scale_inplace` + `softmax_last_inplace` on one buffer.
+    FusedScaleSoftmax { arg: NodeId, factor: f32 },
 }
 
 impl Op {
@@ -103,13 +139,58 @@ impl Op {
             | Op::MeanAxis { arg, .. }
             | Op::Save { arg }
             | Op::StepHook { arg }
-            | Op::StoreState { arg, .. } => vec![*arg],
+            | Op::StoreState { arg, .. }
+            | Op::FusedScaleSoftmax { arg, .. } => vec![*arg],
             Op::Fill { dst, .. } => vec![*dst],
             Op::Assign { dst, src, .. } => vec![*dst, *src],
-            Op::Add { a, b } | Op::Sub { a, b } | Op::Mul { a, b } | Op::Matmul { a, b } => {
+            Op::Add { a, b }
+            | Op::Sub { a, b }
+            | Op::Mul { a, b }
+            | Op::Matmul { a, b }
+            | Op::FusedScaleAdd { a, b, .. }
+            | Op::FusedMatmulGelu { a, b } => {
                 vec![*a, *b]
             }
             Op::LogitDiff { logits, .. } => vec![*logits],
+        }
+    }
+
+    /// Rewrite every dependency id through `f` (used by the optimizer when
+    /// it redirects consumers to a merged node or renumbers a compacted
+    /// graph). The mapping is applied to each edge exactly once.
+    pub fn map_deps(&mut self, mut f: impl FnMut(NodeId) -> NodeId) {
+        match self {
+            Op::Getter { .. } | Op::Grad { .. } | Op::Const { .. } | Op::LoadState { .. } => {}
+            Op::Setter { arg, .. }
+            | Op::Slice { arg, .. }
+            | Op::Scale { arg, .. }
+            | Op::Gelu { arg }
+            | Op::Softmax { arg }
+            | Op::Argmax { arg }
+            | Op::Mean { arg }
+            | Op::Sum { arg }
+            | Op::Transpose { arg }
+            | Op::Reshape { arg, .. }
+            | Op::MeanAxis { arg, .. }
+            | Op::Save { arg }
+            | Op::StepHook { arg }
+            | Op::StoreState { arg, .. }
+            | Op::FusedScaleSoftmax { arg, .. } => *arg = f(*arg),
+            Op::Fill { dst, .. } => *dst = f(*dst),
+            Op::Assign { dst, src, .. } => {
+                *dst = f(*dst);
+                *src = f(*src);
+            }
+            Op::Add { a, b }
+            | Op::Sub { a, b }
+            | Op::Mul { a, b }
+            | Op::Matmul { a, b }
+            | Op::FusedScaleAdd { a, b, .. }
+            | Op::FusedMatmulGelu { a, b } => {
+                *a = f(*a);
+                *b = f(*b);
+            }
+            Op::LogitDiff { logits, .. } => *logits = f(*logits),
         }
     }
 
@@ -141,6 +222,9 @@ impl Op {
             Op::StepHook { .. } => "step_hook",
             Op::LoadState { .. } => "load_state",
             Op::StoreState { .. } => "store_state",
+            Op::FusedScaleAdd { .. } => "fused_scale_add",
+            Op::FusedMatmulGelu { .. } => "fused_matmul_gelu",
+            Op::FusedScaleSoftmax { .. } => "fused_scale_softmax",
         }
     }
 }
@@ -148,7 +232,9 @@ impl Op {
 /// One apply node.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Node {
+    /// Dense position in the graph's node list (ids ascend with order).
     pub id: NodeId,
+    /// The operation this node applies.
     pub op: Op,
 }
 
@@ -173,6 +259,22 @@ mod tests {
         assert_eq!(Op::Transpose { arg: 2 }.deps(), vec![2]);
         assert_eq!(Op::Reshape { arg: 3, dims: vec![2, 2] }.deps(), vec![3]);
         assert_eq!(Op::MeanAxis { arg: 1, axis: 0 }.deps(), vec![1]);
+        assert_eq!(Op::FusedScaleAdd { a: 1, b: 2, factor: 0.5 }.deps(), vec![1, 2]);
+        assert_eq!(Op::FusedMatmulGelu { a: 3, b: 4 }.deps(), vec![3, 4]);
+        assert_eq!(Op::FusedScaleSoftmax { arg: 5, factor: 2.0 }.deps(), vec![5]);
+    }
+
+    #[test]
+    fn map_deps_rewrites_every_edge() {
+        let mut op = Op::Assign { dst: 3, ranges: vec![], src: 5 };
+        op.map_deps(|d| d + 10);
+        assert_eq!(op.deps(), vec![13, 15]);
+        let mut op = Op::FusedScaleAdd { a: 1, b: 2, factor: 0.5 };
+        op.map_deps(|d| d * 2);
+        assert_eq!(op.deps(), vec![2, 4]);
+        let mut op = Op::Getter { module: "m".into(), port: Port::Output };
+        op.map_deps(|_| unreachable!("no deps to map"));
+        assert!(op.deps().is_empty());
     }
 
     #[test]
@@ -189,6 +291,9 @@ mod tests {
             Op::MeanAxis { arg: 0, axis: 0 },
             Op::LoadState { key: "w".into() },
             Op::StoreState { key: "w".into(), arg: 0 },
+            Op::FusedScaleAdd { a: 0, b: 0, factor: 1.0 },
+            Op::FusedMatmulGelu { a: 0, b: 0 },
+            Op::FusedScaleSoftmax { arg: 0, factor: 1.0 },
         ];
         let tags: std::collections::BTreeSet<_> = ops.iter().map(|o| o.tag()).collect();
         assert_eq!(tags.len(), ops.len());

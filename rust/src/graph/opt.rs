@@ -1,0 +1,1061 @@
+//! The intervention-graph compiler: optimization passes that run between
+//! validation and execution.
+//!
+//! The paper's central architectural claim — the intervention graph
+//! "decouples experimental design from model runtime" — is exactly what
+//! makes server-side optimization legal: the fabric may rewrite a
+//! request's graph freely as long as every value the user asked for
+//! (`Save`, `StepHook`, `StoreState`) is **bit-identical** to what the
+//! submitted graph would have produced. [`optimize`] runs four passes:
+//!
+//! 1. **Dead-code elimination** — drop every node not (transitively)
+//!    reachable from a `Save`/`StepHook`/`StoreState`/`Setter` root, so a
+//!    speculative getter that feeds nothing never materializes an
+//!    activation and never forces its hook to fire.
+//! 2. **Constant folding** — evaluate `Const`-only subtrees once at
+//!    admission with the same tensor kernels the executor uses. This is
+//!    the big win for streams, where the graph re-executes at every
+//!    decode step: a folded subtree is paid once per request instead of
+//!    once per token. Folding never crosses `Getter`, `Grad`, or
+//!    `LoadState` (their values are unknown at admission), and a folding
+//!    error (e.g. `mean` of an empty tensor) fails the request at
+//!    admission instead of mid-execution.
+//! 3. **Common-subexpression elimination** — hash-cons structurally
+//!    identical pure nodes so repeated `Getter{module, port}` reads and
+//!    duplicated op chains share one evaluation. Getters merge on their
+//!    *normalized* forward point (a module's `Input` is the previous
+//!    module's `Output`) and never merge across a `Setter` writing the
+//!    same point. `Grad` nodes are a CSE **barrier**: gradient values are
+//!    injected per-node by the post-phase driver, so they are kept
+//!    distinct rather than hash-consed.
+//! 4. **Fusion** — rewrite `Add`-of-`Scale`, `Gelu`-after-`Matmul`, and
+//!    `Softmax`-after-`Scale` patterns into the internal
+//!    [`Op::FusedScaleAdd`] / [`Op::FusedMatmulGelu`] /
+//!    [`Op::FusedScaleSoftmax`] ops, which dispatch to the in-place
+//!    `tensor::ops` kernels (`scale_add_assign`, `gelu_inplace`,
+//!    `softmax_last_inplace`). A node is only fused away when the fused
+//!    consumer is its *sole* listener and it is not locked by a save.
+//!
+//! Node ids change under rewriting, but the user addressed their results
+//! by the ids of the graph they submitted. [`Optimized::save_remap`]
+//! records `original id → optimized id` for every `Save`/`StepHook`
+//! node; [`Optimized::remap_result`] (and [`Prepared::remap_values`])
+//! re-key an executed [`GraphResult`] back into the submitted id space
+//! before it reaches the result assembler.
+//!
+//! # Examples
+//!
+//! A `Const`-only chain folds to a single literal and a dangling getter
+//! is eliminated, without touching the saved value's id:
+//!
+//! ```
+//! use nnscope::graph::{opt, InterventionGraph, Op, Port};
+//!
+//! let fseq = vec!["embed".to_string(), "layer.0".to_string()];
+//! let mut g = InterventionGraph::new("m");
+//! let a = g.push(Op::Const { dims: vec![2], data: vec![1.0, 2.0] });
+//! let b = g.push(Op::Scale { arg: a, factor: 3.0 });
+//! let save = g.push(Op::Save { arg: b });
+//! // a speculative getter nobody reads: dead code
+//! g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+//!
+//! let o = opt::optimize(&g, &fseq).unwrap();
+//! assert_eq!(o.report.nodes_before, 4);
+//! assert_eq!(o.report.nodes_after, 2); // folded const + save
+//! assert_eq!(o.report.dce_removed, 2); // the getter and the folded-away const
+//! assert_eq!(o.report.folded, 1);
+//! assert!(o.save_remap.contains_key(&save));
+//! ```
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+use crate::tensor::{logit_diff, Tensor};
+
+use super::{GraphResult, InterventionGraph, Node, NodeId, Op, Port};
+
+/// Per-request optimization report: what each pass did. Surfaced in
+/// `/v1/result` metadata (and the streaming `done` event) as the `"opt"`
+/// object so users can see what the fabric rewrote.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Node count of the submitted graph.
+    pub nodes_before: usize,
+    /// Node count after all passes.
+    pub nodes_after: usize,
+    /// Nodes removed by dead-code elimination (both sweeps).
+    pub dce_removed: usize,
+    /// Nodes replaced by a precomputed `Const` (constant folding).
+    pub folded: usize,
+    /// Duplicate nodes merged into a representative (CSE).
+    pub cse_merged: usize,
+    /// Pattern rewrites into fused ops (each absorbs one node).
+    pub fused: usize,
+}
+
+impl OptReport {
+    /// Serialize as the `"opt"` result-metadata object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes_before", Json::from(self.nodes_before as i64)),
+            ("nodes_after", Json::from(self.nodes_after as i64)),
+            ("dce_removed", Json::from(self.dce_removed as i64)),
+            ("folded", Json::from(self.folded as i64)),
+            ("cse_merged", Json::from(self.cse_merged as i64)),
+            ("fused", Json::from(self.fused as i64)),
+        ])
+    }
+
+    /// Parse the `"opt"` result-metadata object; `None` when absent or
+    /// malformed (e.g. the server ran with `--no-opt`).
+    pub fn from_json(j: &Json) -> Option<OptReport> {
+        let nodes_before = j.get("nodes_before").as_usize()?;
+        Some(OptReport {
+            nodes_before,
+            nodes_after: j.get("nodes_after").as_usize()?,
+            dce_removed: j.get("dce_removed").as_usize().unwrap_or(0),
+            folded: j.get("folded").as_usize().unwrap_or(0),
+            cse_merged: j.get("cse_merged").as_usize().unwrap_or(0),
+            fused: j.get("fused").as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// The output of [`optimize`]: the rewritten graph, the saved-id remap
+/// table, and the per-pass report.
+#[derive(Clone, Debug)]
+pub struct Optimized {
+    /// The rewritten graph (dense, topologically ordered, same metadata).
+    pub graph: InterventionGraph,
+    /// `original id → optimized id` for every `Save`/`StepHook` node.
+    pub save_remap: BTreeMap<NodeId, NodeId>,
+    /// What each pass did.
+    pub report: OptReport,
+}
+
+impl Optimized {
+    /// Re-key an executed result from optimized ids back to the ids of
+    /// the submitted graph (the result assembler's contract: users
+    /// address values by the ids they built).
+    pub fn remap_result(&self, res: GraphResult) -> GraphResult {
+        let mut values = res.values;
+        let mut out = BTreeMap::new();
+        for (&orig, &new) in &self.save_remap {
+            if let Some(t) = values.remove(&new) {
+                out.insert(orig, t);
+            }
+        }
+        GraphResult { values: out }
+    }
+}
+
+/// A graph ready for execution: either optimized at admission (with the
+/// remap/report needed by the result assembler) or raw (`--no-opt`, or a
+/// caller that bypasses the compiler). This is what scheduler jobs carry.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    /// The graph the executor will run.
+    pub graph: InterventionGraph,
+    /// Saved-id remap (`None` when the graph was not rewritten).
+    pub save_remap: Option<BTreeMap<NodeId, NodeId>>,
+    /// Optimization report (`None` when the graph was not rewritten).
+    pub report: Option<OptReport>,
+}
+
+impl Prepared {
+    /// Wrap a graph for unoptimized execution.
+    pub fn raw(graph: InterventionGraph) -> Prepared {
+        Prepared { graph, save_remap: None, report: None }
+    }
+
+    /// Re-key executed values back into submitted-graph ids (identity for
+    /// raw graphs).
+    pub fn remap_values(&self, res: GraphResult) -> GraphResult {
+        match &self.save_remap {
+            None => res,
+            Some(remap) => {
+                let mut values = res.values;
+                let mut out = BTreeMap::new();
+                for (&orig, &new) in remap {
+                    if let Some(t) = values.remove(&new) {
+                        out.insert(orig, t);
+                    }
+                }
+                GraphResult { values: out }
+            }
+        }
+    }
+}
+
+/// Run the pipeline (or don't) on an owned graph, producing the form the
+/// scheduler executes. With `optimize` set, errors surfaced here (folding
+/// failures, unknown modules) are admission errors — the server maps them
+/// to 400 instead of failing mid-execution.
+pub fn prepare(
+    graph: InterventionGraph,
+    forward_sequence: &[String],
+    optimize_graph: bool,
+) -> Result<Prepared> {
+    if !optimize_graph {
+        return Ok(Prepared::raw(graph));
+    }
+    let o = optimize(&graph, forward_sequence)?;
+    Ok(Prepared {
+        graph: o.graph,
+        save_remap: Some(o.save_remap),
+        report: Some(o.report),
+    })
+}
+
+/// Run all four passes (DCE → fold → DCE → CSE → fuse) and renumber.
+///
+/// Errors mirror what execution of the submitted graph would hit —
+/// unknown module points, input-of-first-module getters, and failing
+/// constant subtrees all error here, at admission, rather than
+/// mid-forward-pass. A graph that would execute cleanly never fails to
+/// optimize.
+pub fn optimize(g: &InterventionGraph, forward_sequence: &[String]) -> Result<Optimized> {
+    let n = g.nodes.len();
+    let mut report = OptReport { nodes_before: n, ..OptReport::default() };
+
+    // Normalized forward point per node (getters and setters), mirroring
+    // the executor's `point_of` so optimization fails exactly when
+    // executor construction would.
+    let points = normalize_points(g, forward_sequence)?;
+
+    let mut ops: Vec<Op> = g.nodes.iter().map(|node| node.op.clone()).collect();
+    let mut alive = vec![true; n];
+
+    // Pass 1: DCE (so dead constant subtrees are never folded — a dead
+    // failing subtree costs nothing, it does not fail the request).
+    report.dce_removed += dce(&ops, &mut alive);
+
+    // Pass 2: constant folding, then a second DCE sweep for the
+    // now-unreferenced literals that fed the folded nodes.
+    report.folded = fold(&mut ops, &alive)?;
+    report.dce_removed += dce(&ops, &mut alive);
+
+    // Pass 3: CSE (redirects consumers onto representatives).
+    report.cse_merged = cse(&mut ops, &mut alive, &points);
+
+    // Pass 4: fusion of single-use kernel patterns.
+    report.fused = fuse(&mut ops, &mut alive);
+
+    // Compact + renumber, preserving relative order.
+    let mut new_id = vec![usize::MAX; n];
+    let mut nodes = Vec::new();
+    for i in 0..n {
+        if !alive[i] {
+            continue;
+        }
+        new_id[i] = nodes.len();
+        let mut op = ops[i].clone();
+        op.map_deps(|d| {
+            debug_assert!(new_id[d] != usize::MAX, "dep {d} of node {i} was eliminated");
+            new_id[d]
+        });
+        nodes.push(Node { id: nodes.len(), op });
+    }
+    report.nodes_after = nodes.len();
+
+    let mut save_remap = BTreeMap::new();
+    for node in &g.nodes {
+        if matches!(node.op, Op::Save { .. } | Op::StepHook { .. }) {
+            save_remap.insert(node.id, new_id[node.id]);
+        }
+    }
+
+    let graph = InterventionGraph {
+        model: g.model.clone(),
+        tokens: g.tokens.clone(),
+        batch: g.batch,
+        nodes,
+        targets: g.targets.clone(),
+        batch_group: g.batch_group,
+        shards: g.shards,
+    };
+    Ok(Optimized { graph, save_remap, report })
+}
+
+// ---------------------------------------------------------------------------
+// Pass helpers
+// ---------------------------------------------------------------------------
+
+/// Normalized forward point of every Getter/Setter (input of module k =
+/// output of module k-1), `None` for other ops. Errors match the
+/// executor's: unknown modules and input-of-the-first-module.
+fn normalize_points(
+    g: &InterventionGraph,
+    forward_sequence: &[String],
+) -> Result<Vec<Option<usize>>> {
+    let order: HashMap<&str, usize> = forward_sequence
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (m.as_str(), i))
+        .collect();
+    let point_of = |module: &str, port: Port| -> Result<usize> {
+        let k = *order
+            .get(module)
+            .ok_or_else(|| anyhow!("unknown module {module}"))?;
+        match port {
+            Port::Output => Ok(k),
+            Port::Input if k == 0 => {
+                Err(anyhow!("module {module} has no observable input (it is first)"))
+            }
+            Port::Input => Ok(k - 1),
+        }
+    };
+    g.nodes
+        .iter()
+        .map(|node| match &node.op {
+            Op::Getter { module, port } | Op::Setter { module, port, .. } => {
+                point_of(module, *port).map(Some)
+            }
+            _ => Ok(None),
+        })
+        .collect()
+}
+
+/// Is this op a root the optimizer must keep: an effect on the model pass
+/// (`Setter`), on session state (`StoreState`), or a value the user asked
+/// for (`Save`/`StepHook`)?
+fn is_root(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Setter { .. } | Op::StoreState { .. } | Op::Save { .. } | Op::StepHook { .. }
+    )
+}
+
+/// Mark nodes unreachable from any root as dead; returns how many were
+/// newly killed. One descending sweep suffices: deps always point to
+/// lower ids, so a consumer is visited before its dependencies.
+fn dce(ops: &[Op], alive: &mut [bool]) -> usize {
+    let n = ops.len();
+    let mut keep = vec![false; n];
+    for i in (0..n).rev() {
+        if alive[i] && (is_root(&ops[i]) || keep[i]) {
+            keep[i] = true;
+            for d in ops[i].deps() {
+                keep[d] = true;
+            }
+        }
+    }
+    let mut removed = 0;
+    for i in 0..n {
+        if alive[i] && !keep[i] {
+            alive[i] = false;
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Is this op a pure value computation (no model, gradient, or state
+/// access, no lock/emit semantics)? Pure ops with all-constant inputs are
+/// foldable; pure ops are also the CSE candidates.
+fn is_pure_value(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Const { .. }
+            | Op::Slice { .. }
+            | Op::Assign { .. }
+            | Op::Fill { .. }
+            | Op::Add { .. }
+            | Op::Sub { .. }
+            | Op::Mul { .. }
+            | Op::Scale { .. }
+            | Op::Matmul { .. }
+            | Op::Gelu { .. }
+            | Op::Softmax { .. }
+            | Op::Argmax { .. }
+            | Op::Mean { .. }
+            | Op::Sum { .. }
+            | Op::Transpose { .. }
+            | Op::Reshape { .. }
+            | Op::MeanAxis { .. }
+            | Op::LogitDiff { .. }
+            | Op::FusedScaleAdd { .. }
+            | Op::FusedMatmulGelu { .. }
+            | Op::FusedScaleSoftmax { .. }
+    )
+}
+
+/// Evaluate one pure op over already-computed inputs, using the same
+/// kernels (and the same error conditions) as `interp`'s `exec_node`, so
+/// a folded value is bit-identical to the executed one and a folding
+/// failure is exactly the failure execution would have hit.
+pub(crate) fn eval_pure(op: &Op, input: &dyn Fn(NodeId) -> Tensor) -> Result<Tensor> {
+    Ok(match op {
+        Op::Const { dims, data } => Tensor::new(dims, data.clone()),
+        Op::Slice { arg, ranges } => input(*arg).slice(ranges),
+        Op::Assign { dst, ranges, src } => {
+            let mut d = input(*dst);
+            d.slice_assign(ranges, &input(*src));
+            d
+        }
+        Op::Fill { dst, ranges, value } => {
+            let mut d = input(*dst);
+            d.slice_fill(ranges, *value);
+            d
+        }
+        Op::Add { a, b } => input(*a).add(&input(*b)),
+        Op::Sub { a, b } => input(*a).sub(&input(*b)),
+        Op::Mul { a, b } => input(*a).mul(&input(*b)),
+        Op::Matmul { a, b } => input(*a).matmul(&input(*b)),
+        Op::Scale { arg, factor } => {
+            let mut t = input(*arg);
+            t.scale_inplace(*factor);
+            t
+        }
+        Op::Gelu { arg } => {
+            let mut t = input(*arg);
+            t.gelu_inplace();
+            t
+        }
+        Op::Softmax { arg } => {
+            let mut t = input(*arg);
+            t.softmax_last_inplace();
+            t
+        }
+        Op::Argmax { arg } => input(*arg).argmax_last(),
+        Op::Mean { arg } => {
+            let t = input(*arg);
+            if t.numel() == 0 {
+                return Err(anyhow!(
+                    "mean of an empty tensor; empty reductions are rejected rather than \
+                     producing NaN (see docs/PROTOCOL.md)"
+                ));
+            }
+            Tensor::scalar(t.mean_all())
+        }
+        Op::Sum { arg } => {
+            let t = input(*arg);
+            if t.numel() == 0 {
+                return Err(anyhow!(
+                    "sum of an empty tensor; empty reductions are rejected rather than \
+                     producing a silent zero (see docs/PROTOCOL.md)"
+                ));
+            }
+            Tensor::scalar(t.sum_all())
+        }
+        Op::Transpose { arg } => {
+            let t = input(*arg);
+            if t.rank() != 2 {
+                return Err(anyhow!("transpose needs a 2-D tensor, got {:?}", t.dims()));
+            }
+            t.transpose2()
+        }
+        Op::Reshape { arg, dims } => {
+            let t = input(*arg);
+            let want: usize = dims.iter().product();
+            if want != t.numel() {
+                return Err(anyhow!("reshape {:?} -> {dims:?} changes element count", t.dims()));
+            }
+            t.reshape(dims)
+        }
+        Op::MeanAxis { arg, axis } => {
+            let t = input(*arg);
+            if *axis >= t.rank() {
+                return Err(anyhow!("mean_axis axis {axis} out of rank {}", t.rank()));
+            }
+            if t.dims()[*axis] == 0 {
+                return Err(anyhow!(
+                    "mean_axis over an empty axis {axis}; empty reductions are rejected \
+                     rather than producing NaN (see docs/PROTOCOL.md)"
+                ));
+            }
+            t.mean_axis(*axis)
+        }
+        Op::LogitDiff { logits, target, foil } => logit_diff(&input(*logits), *target, *foil),
+        Op::FusedScaleAdd { a, b, factor } => {
+            let mut x = input(*a);
+            let y = input(*b);
+            if x.dims() == y.dims() {
+                x.scale_add_assign(*factor, &y);
+                x
+            } else {
+                let mut s = y;
+                s.scale_inplace(*factor);
+                x.add(&s)
+            }
+        }
+        Op::FusedMatmulGelu { a, b } => {
+            let mut t = input(*a).matmul(&input(*b));
+            t.gelu_inplace();
+            t
+        }
+        Op::FusedScaleSoftmax { arg, factor } => {
+            let mut t = input(*arg);
+            t.scale_inplace(*factor);
+            t.softmax_last_inplace();
+            t
+        }
+        _ => return Err(anyhow!("eval_pure on non-pure op '{}'", op.tag())),
+    })
+}
+
+/// Replace every live pure node whose inputs are all constants with a
+/// precomputed `Const`. Returns the number of nodes folded (pre-existing
+/// `Const` nodes don't count). Errors abort the whole optimization — a
+/// live constant subtree that cannot evaluate cannot execute either.
+fn fold(ops: &mut [Op], alive: &[bool]) -> Result<usize> {
+    let n = ops.len();
+    let mut val: Vec<Option<Tensor>> = vec![None; n];
+    let mut folded = 0;
+    for i in 0..n {
+        if !alive[i] {
+            continue;
+        }
+        if let Op::Const { dims, data } = &ops[i] {
+            val[i] = Some(Tensor::new(dims, data.clone()));
+            continue;
+        }
+        if !is_pure_value(&ops[i]) {
+            continue;
+        }
+        if !ops[i].deps().iter().all(|&d| val[d].is_some()) {
+            continue;
+        }
+        let v = eval_pure(&ops[i], &|d: NodeId| {
+            val[d].clone().expect("const input checked above")
+        })?;
+        ops[i] = Op::Const { dims: v.dims().to_vec(), data: v.data().to_vec() };
+        val[i] = Some(v);
+        folded += 1;
+    }
+    Ok(folded)
+}
+
+/// Structural hash-cons key for CSE candidates; `None` for ops that must
+/// not merge (effects, `Grad` barriers). Getter keys use the normalized
+/// forward point so `input`-of-layer-k and `output`-of-layer-(k-1) merge.
+fn cse_key(op: &Op, point: Option<usize>) -> Option<String> {
+    let mut k = String::new();
+    let deps = op.deps();
+    match op {
+        // effects and per-node-injected values never merge
+        Op::Setter { .. }
+        | Op::Save { .. }
+        | Op::StepHook { .. }
+        | Op::StoreState { .. }
+        | Op::Grad { .. } => return None,
+        Op::Getter { .. } => {
+            write!(k, "get@{}", point.expect("getter point normalized")).unwrap();
+            return Some(k);
+        }
+        // loads observe the pre-trace snapshot: all loads of one key are
+        // the same value within a trace
+        Op::LoadState { key } => {
+            write!(k, "load:{}:{key}", key.len()).unwrap();
+            return Some(k);
+        }
+        Op::Const { dims, data } => {
+            write!(k, "const:{dims:?}:").unwrap();
+            for v in data {
+                write!(k, "{:08x}", v.to_bits()).unwrap();
+            }
+            return Some(k);
+        }
+        Op::Slice { ranges, .. } => write!(k, "slice:{ranges:?}").unwrap(),
+        Op::Assign { ranges, .. } => write!(k, "assign:{ranges:?}").unwrap(),
+        Op::Fill { ranges, value, .. } => {
+            write!(k, "fill:{ranges:?}:{:08x}", value.to_bits()).unwrap()
+        }
+        Op::Add { .. } => k.push_str("add"),
+        Op::Sub { .. } => k.push_str("sub"),
+        Op::Mul { .. } => k.push_str("mul"),
+        Op::Matmul { .. } => k.push_str("matmul"),
+        Op::Scale { factor, .. } => write!(k, "scale:{:08x}", factor.to_bits()).unwrap(),
+        Op::Gelu { .. } => k.push_str("gelu"),
+        Op::Softmax { .. } => k.push_str("softmax"),
+        Op::Argmax { .. } => k.push_str("argmax"),
+        Op::Mean { .. } => k.push_str("mean"),
+        Op::Sum { .. } => k.push_str("sum"),
+        Op::Transpose { .. } => k.push_str("transpose"),
+        Op::Reshape { dims, .. } => write!(k, "reshape:{dims:?}").unwrap(),
+        Op::MeanAxis { axis, .. } => write!(k, "mean_axis:{axis}").unwrap(),
+        Op::LogitDiff { target, foil, .. } => {
+            write!(k, "logit_diff:{target}:{foil}").unwrap()
+        }
+        Op::FusedScaleAdd { factor, .. } => {
+            write!(k, "fused_scale_add:{:08x}", factor.to_bits()).unwrap()
+        }
+        Op::FusedMatmulGelu { .. } => k.push_str("fused_matmul_gelu"),
+        Op::FusedScaleSoftmax { factor, .. } => {
+            write!(k, "fused_scale_softmax:{:08x}", factor.to_bits()).unwrap()
+        }
+    }
+    write!(k, ":{deps:?}").unwrap();
+    Some(k)
+}
+
+/// Hash-cons structurally identical pure nodes: consumers of a duplicate
+/// are redirected to the first (or, for getters, the latest
+/// non-interfering) representative, and the duplicate dies. Returns the
+/// number of merged nodes.
+fn cse(ops: &mut [Op], alive: &mut [bool], points: &[Option<usize>]) -> usize {
+    let n = ops.len();
+    // setters by normalized point, for the getter interference rule:
+    // a getter must not merge across a setter writing its point, because
+    // in-hook execution order makes the two reads observe different
+    // activations.
+    let setters: Vec<(usize, usize)> = (0..n)
+        .filter(|&i| alive[i] && matches!(ops[i], Op::Setter { .. }))
+        .map(|i| (points[i].expect("setter point normalized"), i))
+        .collect();
+
+    let mut repr: HashMap<String, NodeId> = HashMap::new();
+    let mut target: Vec<NodeId> = (0..n).collect();
+    let mut merged = 0;
+    for i in 0..n {
+        if !alive[i] {
+            continue;
+        }
+        // route this node's edges through earlier merges first
+        ops[i].map_deps(|d| target[d]);
+        let Some(key) = cse_key(&ops[i], points[i]) else {
+            continue;
+        };
+        match repr.get(&key).copied() {
+            Some(r) => {
+                let interferes = matches!(ops[i], Op::Getter { .. })
+                    && setters.iter().any(|&(p, sid)| {
+                        Some(p) == points[i] && r < sid && sid < i
+                    });
+                if interferes {
+                    // reads on opposite sides of the write: the later read
+                    // becomes the representative for what follows
+                    repr.insert(key, i);
+                } else {
+                    target[i] = r;
+                    alive[i] = false;
+                    merged += 1;
+                }
+            }
+            None => {
+                repr.insert(key, i);
+            }
+        }
+    }
+    merged
+}
+
+/// Rewrite single-use kernel patterns into fused internal ops. The inner
+/// node must have exactly one listener (the fusing consumer) and must not
+/// be locked by a `Save`/`StepHook`, so absorbing it cannot change any
+/// other node's input or any returned value.
+fn fuse(ops: &mut [Op], alive: &mut [bool]) -> usize {
+    let n = ops.len();
+    let mut listeners = vec![0usize; n];
+    let mut locked = vec![false; n];
+    for i in 0..n {
+        if !alive[i] {
+            continue;
+        }
+        for d in ops[i].deps() {
+            listeners[d] += 1;
+        }
+        if let Op::Save { arg } | Op::StepHook { arg } = ops[i] {
+            locked[arg] = true;
+        }
+    }
+    let absorbable = |inner: usize, listeners: &[usize], locked: &[bool]| {
+        listeners[inner] == 1 && !locked[inner]
+    };
+    let mut fused = 0;
+    for i in 0..n {
+        if !alive[i] {
+            continue;
+        }
+        let rewrite = match &ops[i] {
+            Op::Add { a, b } => {
+                if let Op::Scale { arg, factor } = &ops[*b] {
+                    absorbable(*b, &listeners, &locked)
+                        .then(|| (*b, Op::FusedScaleAdd { a: *a, b: *arg, factor: *factor }))
+                } else if let Op::Scale { arg, factor } = &ops[*a] {
+                    // addition commutes bitwise for f32, so the scaled side
+                    // may sit on either operand
+                    absorbable(*a, &listeners, &locked)
+                        .then(|| (*a, Op::FusedScaleAdd { a: *b, b: *arg, factor: *factor }))
+                } else {
+                    None
+                }
+            }
+            Op::Gelu { arg } => {
+                if let Op::Matmul { a, b } = &ops[*arg] {
+                    absorbable(*arg, &listeners, &locked)
+                        .then(|| (*arg, Op::FusedMatmulGelu { a: *a, b: *b }))
+                } else {
+                    None
+                }
+            }
+            Op::Softmax { arg } => {
+                if let Op::Scale { arg: inner, factor } = &ops[*arg] {
+                    absorbable(*arg, &listeners, &locked)
+                        .then(|| (*arg, Op::FusedScaleSoftmax { arg: *inner, factor: *factor }))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some((inner, op)) = rewrite {
+            ops[i] = op;
+            alive[inner] = false;
+            listeners[inner] = 0;
+            fused += 1;
+        }
+    }
+    fused
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::interp::Executor;
+    use crate::models::Hooks;
+    use crate::tensor::Range1;
+
+    fn fseq() -> Vec<String> {
+        vec!["embed".into(), "layer.0".into(), "layer.1".into(), "lm_head".into()]
+    }
+
+    /// Drive an executor by hand against fake activations (no model).
+    fn drive(ex: &mut Executor, acts: &mut BTreeMap<String, Tensor>) {
+        for point in fseq() {
+            if let Some(t) = acts.get_mut(&point) {
+                if ex.wants(&point) {
+                    ex.on_output(&point, t);
+                }
+            }
+        }
+    }
+
+    fn acts(batch: usize) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("embed".to_string(), Tensor::iota(&[batch, 4]));
+        m.insert("layer.0".to_string(), Tensor::iota(&[batch, 4]).scale(2.0));
+        m.insert("layer.1".to_string(), Tensor::iota(&[batch, 4]).scale(3.0));
+        m.insert("lm_head".to_string(), Tensor::iota(&[batch, 4]).scale(4.0));
+        m
+    }
+
+    /// Execute a graph by hand-driving an executor; returns values keyed
+    /// by the ORIGINAL graph's ids (through the remap when optimized).
+    fn run(g: &InterventionGraph, optimized: bool) -> GraphResult {
+        if optimized {
+            let o = optimize(g, &fseq()).unwrap();
+            let mut ex = Executor::new(&o.graph, &fseq()).unwrap();
+            ex.run_pre().unwrap();
+            let mut a = acts(g.batch.max(1));
+            drive(&mut ex, &mut a);
+            o.remap_result(ex.into_result().unwrap())
+        } else {
+            let mut ex = Executor::new(g, &fseq()).unwrap();
+            ex.run_pre().unwrap();
+            let mut a = acts(g.batch.max(1));
+            drive(&mut ex, &mut a);
+            ex.into_result().unwrap()
+        }
+    }
+
+    #[test]
+    fn dce_drops_speculative_getters_but_keeps_setters() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        // dead: a getter chain feeding nothing
+        let dead = g.push(Op::Getter { module: "lm_head".into(), port: Port::Output });
+        g.push(Op::Softmax { arg: dead });
+        // alive: a setter side effect with its feeding const
+        let c = g.push(Op::Const { dims: vec![1, 4], data: vec![9.0; 4] });
+        g.push(Op::Setter { module: "layer.0".into(), port: Port::Output, arg: c });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.dce_removed, 2);
+        assert_eq!(o.graph.nodes.len(), 2);
+        assert_eq!(o.graph.setter_points(), vec!["layer.0"]);
+        // the setter still fires: downstream activation is overwritten
+        let mut ex = Executor::new(&o.graph, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        assert_eq!(a["layer.0"].data(), &[9.0; 4]);
+        // and the dead getter no longer forces its hook
+        assert!(!ex.wants("lm_head"));
+    }
+
+    #[test]
+    fn folding_collapses_const_subtrees_bit_identically() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let a = g.push(Op::Const { dims: vec![2, 2], data: vec![1.0, -2.0, 3.0, 0.5] });
+        let b = g.push(Op::Const { dims: vec![2, 2], data: vec![0.25, 1.5, -1.0, 2.0] });
+        let mm = g.push(Op::Matmul { a, b });
+        let gl = g.push(Op::Gelu { arg: mm });
+        let sm = g.push(Op::Softmax { arg: gl });
+        let save = g.push(Op::Save { arg: sm });
+        let o = optimize(&g, &fseq()).unwrap();
+        // everything folds into one literal + the save
+        assert_eq!(o.graph.nodes.len(), 2);
+        assert!(o.report.folded >= 1);
+        assert!(matches!(o.graph.nodes[0].op, Op::Const { .. }));
+        let unopt = run(&g, false);
+        let opt = run(&g, true);
+        assert_eq!(unopt.get(save).unwrap(), opt.get(save).unwrap());
+    }
+
+    #[test]
+    fn folding_never_crosses_load_state() {
+        let keys: std::collections::BTreeSet<String> = ["w".to_string()].into();
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let w = g.push(Op::LoadState { key: "w".into() });
+        let s = g.push(Op::Scale { arg: w, factor: 2.0 });
+        g.push(Op::StoreState { key: "w".into(), arg: s });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.folded, 0, "state-dependent subtree must not fold");
+        assert!(o
+            .graph
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::LoadState { .. })));
+        assert!(o
+            .graph
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::StoreState { .. })));
+        crate::graph::validate::validate_with_state(&o.graph, &fseq(), &keys).unwrap();
+    }
+
+    #[test]
+    fn folding_error_surfaces_at_admission() {
+        // mean over a zero-width const slice would NaN at execution; the
+        // compiler rejects it up front
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![4], data: vec![1.0; 4] });
+        let empty = g.push(Op::Slice { arg: c, ranges: vec![Range1::new(2, 2)] });
+        let m = g.push(Op::Mean { arg: empty });
+        g.push(Op::Save { arg: m });
+        let err = optimize(&g, &fseq()).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+
+        // ...but the same subtree DEAD costs nothing and fails nothing
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![4], data: vec![1.0; 4] });
+        let empty = g.push(Op::Slice { arg: c, ranges: vec![Range1::new(2, 2)] });
+        g.push(Op::Mean { arg: empty });
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        g.push(Op::Save { arg: h });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.graph.nodes.len(), 2);
+    }
+
+    #[test]
+    fn cse_merges_duplicate_getters_and_chains() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h1 = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let h2 = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let s1 = g.push(Op::Scale { arg: h1, factor: 2.0 });
+        let s2 = g.push(Op::Scale { arg: h2, factor: 2.0 });
+        let sv1 = g.push(Op::Save { arg: s1 });
+        let sv2 = g.push(Op::Save { arg: s2 });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.cse_merged, 2); // getter + scale duplicates
+        // one getter, one scale, two saves
+        assert_eq!(o.graph.nodes.len(), 4);
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        assert_eq!(opt.get(sv1).unwrap(), unopt.get(sv1).unwrap());
+        assert_eq!(opt.get(sv2).unwrap(), unopt.get(sv2).unwrap());
+    }
+
+    #[test]
+    fn cse_normalizes_input_port_to_previous_output() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let a = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let b = g.push(Op::Getter { module: "layer.1".into(), port: Port::Input });
+        let sa = g.push(Op::Save { arg: a });
+        let sb = g.push(Op::Save { arg: b });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.cse_merged, 1);
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        assert_eq!(opt.get(sa).unwrap(), unopt.get(sa).unwrap());
+        assert_eq!(opt.get(sb).unwrap(), unopt.get(sb).unwrap());
+    }
+
+    #[test]
+    fn cse_does_not_merge_getters_across_a_setter_to_the_same_point() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let before = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let z = g.push(Op::Scale { arg: before, factor: 0.0 });
+        g.push(Op::Setter { module: "layer.0".into(), port: Port::Output, arg: z });
+        let after = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let s1 = g.push(Op::Save { arg: before });
+        let s2 = g.push(Op::Save { arg: after });
+        let o = optimize(&g, &fseq()).unwrap();
+        // the two reads observe different activations and must both survive
+        let getters = o
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Getter { .. }))
+            .count();
+        assert_eq!(getters, 2);
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        assert_eq!(opt.get(s1).unwrap(), unopt.get(s1).unwrap());
+        assert_eq!(opt.get(s2).unwrap(), unopt.get(s2).unwrap());
+        assert_eq!(opt.get(s2).unwrap().data(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn cse_respects_grad_barriers() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        g.targets = Some(vec![1.0]);
+        let g1 = g.push(Op::Grad { module: "layer.0".into() });
+        let g2 = g.push(Op::Grad { module: "layer.0".into() });
+        g.push(Op::Save { arg: g1 });
+        g.push(Op::Save { arg: g2 });
+        let o = optimize(&g, &fseq()).unwrap();
+        let grads = o
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Grad { .. }))
+            .count();
+        assert_eq!(grads, 2, "grad nodes are a CSE barrier: injected per-node");
+        assert_eq!(o.report.cse_merged, 0);
+    }
+
+    #[test]
+    fn fusion_rewrites_patterns_and_preserves_values() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        // h + 0.5·h₂  →  FusedScaleAdd
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let h2 = g.push(Op::Getter { module: "layer.1".into(), port: Port::Output });
+        let sc = g.push(Op::Scale { arg: h2, factor: 0.5 });
+        let add = g.push(Op::Add { a: h, b: sc });
+        let s1 = g.push(Op::Save { arg: add });
+        // gelu(h · W)  →  FusedMatmulGelu
+        let wdata: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let w = g.push(Op::Const { dims: vec![4, 4], data: wdata });
+        let mm = g.push(Op::Matmul { a: h, b: w });
+        let gl = g.push(Op::Gelu { arg: mm });
+        let s2 = g.push(Op::Save { arg: gl });
+        // softmax(h · 3)  →  FusedScaleSoftmax
+        let t = g.push(Op::Scale { arg: h, factor: 3.0 });
+        let sm = g.push(Op::Softmax { arg: t });
+        let s3 = g.push(Op::Save { arg: sm });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.fused, 3);
+        assert!(o.graph.nodes.iter().any(|n| matches!(n.op, Op::FusedScaleAdd { .. })));
+        assert!(o.graph.nodes.iter().any(|n| matches!(n.op, Op::FusedMatmulGelu { .. })));
+        assert!(o.graph.nodes.iter().any(|n| matches!(n.op, Op::FusedScaleSoftmax { .. })));
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        for s in [s1, s2, s3] {
+            assert_eq!(opt.get(s).unwrap(), unopt.get(s).unwrap(), "save {s}");
+        }
+    }
+
+    #[test]
+    fn fusion_refuses_shared_or_saved_inner_nodes() {
+        // the scaled value is ALSO saved: fusing it away would lose it
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let sc = g.push(Op::Scale { arg: h, factor: 0.5 });
+        let add = g.push(Op::Add { a: h, b: sc });
+        let s_sc = g.push(Op::Save { arg: sc });
+        let s_add = g.push(Op::Save { arg: add });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert_eq!(o.report.fused, 0);
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        assert_eq!(opt.get(s_sc).unwrap(), unopt.get(s_sc).unwrap());
+        assert_eq!(opt.get(s_add).unwrap(), unopt.get(s_add).unwrap());
+    }
+
+    #[test]
+    fn save_remap_preserves_submitted_ids() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        // a pile of foldable junk in front so ids shift a lot
+        let mut c = g.push(Op::Const { dims: vec![2], data: vec![1.0, 2.0] });
+        for _ in 0..5 {
+            c = g.push(Op::Scale { arg: c, factor: 1.5 });
+        }
+        let save_c = g.push(Op::Save { arg: c });
+        let h = g.push(Op::Getter { module: "layer.1".into(), port: Port::Output });
+        let save_h = g.push(Op::Save { arg: h });
+        let o = optimize(&g, &fseq()).unwrap();
+        assert!(o.graph.nodes.len() < g.nodes.len());
+        let opt = run(&g, true);
+        let unopt = run(&g, false);
+        // results keyed by the ORIGINAL ids in both worlds
+        assert_eq!(opt.get(save_c).unwrap(), unopt.get(save_c).unwrap());
+        assert_eq!(opt.get(save_h).unwrap(), unopt.get(save_h).unwrap());
+    }
+
+    #[test]
+    fn optimized_graphs_stay_valid() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 2;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let h_dup = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let s = g.push(Op::Scale { arg: h_dup, factor: 0.5 });
+        let a = g.push(Op::Add { a: h, b: s });
+        g.push(Op::Setter { module: "layer.1".into(), port: Port::Output, arg: a });
+        let logits = g.push(Op::Getter { module: "lm_head".into(), port: Port::Output });
+        let ld = g.push(Op::LogitDiff { logits, target: 1, foil: 2 });
+        g.push(Op::Save { arg: ld });
+        let o = optimize(&g, &fseq()).unwrap();
+        validate(&o.graph, &fseq()).unwrap();
+        // ids stay dense and topologically ordered
+        for (i, n) in o.graph.nodes.iter().enumerate() {
+            assert_eq!(n.id, i);
+            assert!(n.op.deps().iter().all(|&d| d < i));
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = OptReport {
+            nodes_before: 12,
+            nodes_after: 5,
+            dce_removed: 3,
+            folded: 2,
+            cse_merged: 1,
+            fused: 1,
+        };
+        let j = crate::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(OptReport::from_json(&j), Some(r));
+        assert_eq!(OptReport::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn prepare_raw_is_identity() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        g.push(Op::Getter { module: "lm_head".into(), port: Port::Output }); // dead
+        g.push(Op::Save { arg: h });
+        let p = prepare(g.clone(), &fseq(), false).unwrap();
+        assert_eq!(p.graph.nodes.len(), 3);
+        assert!(p.report.is_none());
+        let p = prepare(g, &fseq(), true).unwrap();
+        assert_eq!(p.graph.nodes.len(), 2);
+        assert_eq!(p.report.unwrap().dce_removed, 1);
+    }
+}

@@ -1,7 +1,11 @@
 //! Wire format: intervention graphs ⇄ the custom JSON format (§B.2).
 //!
 //! The format is deliberately explicit and boring — it is version-
-//! controlled experiment description, not an optimization target:
+//! controlled experiment description. (The *execution* of a graph is an
+//! optimization target — see [`crate::graph::opt`] — but the wire form a
+//! client writes is not: the server rewrites its own in-memory copy and
+//! answers in the submitted graph's node ids.) The full wire protocol is
+//! documented in `docs/PROTOCOL.md`.
 //!
 //! ```json
 //! { "model": "llama8b-sim", "batch": 2, "tokens": [..],
@@ -90,6 +94,19 @@ fn node_to_json(n: &Node) -> Json {
         Op::Gelu { arg } | Op::Softmax { arg } | Op::Argmax { arg } | Op::Mean { arg }
         | Op::Sum { arg } | Op::Transpose { arg } | Op::Save { arg } | Op::StepHook { arg } => {
             o.set("arg", Json::from(*arg as i64))
+        }
+        Op::FusedScaleAdd { a, b, factor } => {
+            o.set("a", Json::from(*a as i64));
+            o.set("b", Json::from(*b as i64));
+            o.set("factor", Json::from(*factor));
+        }
+        Op::FusedMatmulGelu { a, b } => {
+            o.set("a", Json::from(*a as i64));
+            o.set("b", Json::from(*b as i64));
+        }
+        Op::FusedScaleSoftmax { arg, factor } => {
+            o.set("arg", Json::from(*arg as i64));
+            o.set("factor", Json::from(*factor));
         }
         Op::Reshape { arg, dims } => {
             o.set("arg", Json::from(*arg as i64));
@@ -260,6 +277,25 @@ fn json_to_op(j: &Json) -> Result<Op> {
         },
         "save" => Op::Save { arg: req_id(j, "arg")? },
         "step_hook" => Op::StepHook { arg: req_id(j, "arg")? },
+        // internal fused ops: produced by the admission compiler
+        // (graph::opt) rather than by clients, but round-tripping them
+        // keeps optimized graphs first-class wire citizens
+        "fused_scale_add" => Op::FusedScaleAdd {
+            a: req_id(j, "a")?,
+            b: req_id(j, "b")?,
+            factor: j
+                .get("factor")
+                .as_f64()
+                .ok_or_else(|| anyhow!("fused_scale_add missing factor"))? as f32,
+        },
+        "fused_matmul_gelu" => Op::FusedMatmulGelu { a: req_id(j, "a")?, b: req_id(j, "b")? },
+        "fused_scale_softmax" => Op::FusedScaleSoftmax {
+            arg: req_id(j, "arg")?,
+            factor: j
+                .get("factor")
+                .as_f64()
+                .ok_or_else(|| anyhow!("fused_scale_softmax missing factor"))? as f32,
+        },
         other => return Err(anyhow!("unknown op tag '{other}'")),
     })
 }
@@ -338,6 +374,20 @@ pub fn values_to_json(values: &std::collections::BTreeMap<NodeId, crate::tensor:
 /// Serialize saved values: `{"values": {"<id>": {"dims": [..], "b64": ..}}}`.
 pub fn result_to_json(r: &super::GraphResult) -> Json {
     Json::obj(vec![("values", values_to_json(&r.values))])
+}
+
+/// [`result_to_json`] plus the per-request optimization report as the
+/// `"opt"` metadata object (omitted when the request ran unoptimized —
+/// `--no-opt`, or a scheduler path that bypassed the compiler).
+pub fn result_to_json_with_opt(
+    r: &super::GraphResult,
+    opt: Option<&super::opt::OptReport>,
+) -> Json {
+    let mut o = result_to_json(r);
+    if let Some(report) = opt {
+        o.set("opt", report.to_json());
+    }
+    o
 }
 
 /// Deserialize saved values.
@@ -450,6 +500,21 @@ mod tests {
         assert_eq!(back.nodes, g.nodes);
         assert_eq!(back.step_hooks(), vec![2]);
         assert!(back.uses_step_hooks());
+    }
+
+    #[test]
+    fn fused_ops_round_trip() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let w = g.push(Op::Const { dims: vec![2, 2], data: vec![0.0; 4] });
+        let fma = g.push(Op::FusedMatmulGelu { a: h, b: w });
+        let fsa = g.push(Op::FusedScaleAdd { a: h, b: fma, factor: -0.25 });
+        let fss = g.push(Op::FusedScaleSoftmax { arg: fsa, factor: 2.0 });
+        g.push(Op::Save { arg: fss });
+        let text = to_json(&g).to_string();
+        let back = from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nodes, g.nodes);
     }
 
     #[test]

@@ -1,6 +1,15 @@
 //! The intervention-graph interpreter: interleaves graph execution with
 //! the model's forward pass.
 //!
+//! Execution is preceded by a compile stage: the top-level drivers
+//! ([`execute`], [`execute_with_view`], [`execute_stream`], and the
+//! session paths) run the submitted graph through
+//! [`crate::graph::opt`] — DCE, constant folding, CSE, fusion — and
+//! re-key the results back into the submitted node ids, so callers never
+//! observe the rewrite. The `*_raw` variants execute a graph exactly as
+//! given; the server uses them for graphs already compiled at admission
+//! (and for the `--no-opt` escape hatch).
+//!
 //! Scheduling follows §B.1 of the paper: the graph is partitioned into
 //! sub-graphs keyed by the *latest* module activation they (transitively)
 //! depend on; each sub-graph executes when that module's hook fires.
@@ -27,6 +36,7 @@ use std::collections::{BTreeMap, HashMap};
 use anyhow::{anyhow, Result};
 
 use crate::graph::{
+    opt::{self, OptReport},
     validate::{validate_stream, validate_with_state},
     GraphResult, InterventionGraph, NodeId, Op, Port,
 };
@@ -300,8 +310,26 @@ impl<'g> Executor<'g> {
                 t
             }
             Op::Argmax { arg } => self.take_dep(*arg)?.argmax_last(),
-            Op::Mean { arg } => Tensor::scalar(self.take_dep(*arg)?.mean_all()),
-            Op::Sum { arg } => Tensor::scalar(self.take_dep(*arg)?.sum_all()),
+            Op::Mean { arg } => {
+                let t = self.take_dep(*arg)?;
+                if t.numel() == 0 {
+                    return Err(anyhow!(
+                        "mean of an empty tensor (node {id}); empty reductions are rejected \
+                         rather than producing NaN (see docs/PROTOCOL.md)"
+                    ));
+                }
+                Tensor::scalar(t.mean_all())
+            }
+            Op::Sum { arg } => {
+                let t = self.take_dep(*arg)?;
+                if t.numel() == 0 {
+                    return Err(anyhow!(
+                        "sum of an empty tensor (node {id}); empty reductions are rejected \
+                         rather than producing a silent zero (see docs/PROTOCOL.md)"
+                    ));
+                }
+                Tensor::scalar(t.sum_all())
+            }
             Op::Transpose { arg } => {
                 let t = self.take_dep(*arg)?;
                 if t.rank() != 2 {
@@ -325,7 +353,40 @@ impl<'g> Executor<'g> {
                 if *axis >= t.rank() {
                     return Err(anyhow!("mean_axis axis {axis} out of rank {}", t.rank()));
                 }
+                if t.dims()[*axis] == 0 {
+                    return Err(anyhow!(
+                        "mean_axis over an empty axis {axis} (node {id}); empty reductions \
+                         are rejected rather than producing NaN (see docs/PROTOCOL.md)"
+                    ));
+                }
                 t.mean_axis(*axis)
+            }
+            // fused internal ops (graph::opt fusion pass): each dispatches
+            // to the in-place kernel and is bit-identical to the unfused
+            // pair it replaced
+            Op::FusedScaleAdd { a, b, factor } => {
+                let mut x = self.take_dep(*a)?;
+                let y = self.take_dep(*b)?;
+                if x.dims() == y.dims() {
+                    x.scale_add_assign(*factor, &y);
+                    x
+                } else {
+                    // broadcasting operands: same kernels as the unfused pair
+                    let mut s = y;
+                    s.scale_inplace(*factor);
+                    x.add(&s)
+                }
+            }
+            Op::FusedMatmulGelu { a, b } => {
+                let mut t = self.take_dep(*a)?.matmul(&self.take_dep(*b)?);
+                t.gelu_inplace();
+                t
+            }
+            Op::FusedScaleSoftmax { arg, factor } => {
+                let mut t = self.take_dep(*arg)?;
+                t.scale_inplace(*factor);
+                t.softmax_last_inplace();
+                t
             }
             Op::LogitDiff { logits, target, foil } => {
                 logit_diff(&self.take_dep(*logits)?, *target, *foil)
@@ -476,8 +537,23 @@ impl Hooks for Executor<'_> {
 
 /// Execute a standalone graph against a loaded model: pre-phase → hooked
 /// forward (sharded if requested) → backward/post-phase → saved values.
+/// The graph is run through the admission compiler ([`crate::graph::opt`])
+/// first; use [`execute_reported`] with `optimize = false` for the
+/// uncompiled path (the `--no-opt` escape hatch, and the oracle side of
+/// the optimizer-parity property tests).
 pub fn execute(graph: &InterventionGraph, runner: &ModelRunner) -> Result<GraphResult> {
-    Ok(execute_with_view(graph, runner, StateView::new())?.0)
+    Ok(execute_full(graph, runner, StateView::new(), true)?.0)
+}
+
+/// [`execute`] with the optimizer toggle exposed; also returns the
+/// per-request optimization report (`None` when `optimize` is false).
+pub fn execute_reported(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    optimize: bool,
+) -> Result<(GraphResult, Option<OptReport>)> {
+    let (res, _, report) = execute_full(graph, runner, StateView::new(), optimize)?;
+    Ok((res, report))
 }
 
 /// Execute a graph inside a session: loads resolve against `state`, and on
@@ -487,6 +563,16 @@ pub fn execute_stateful(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state: &mut StateView,
+) -> Result<GraphResult> {
+    execute_stateful_opt(graph, runner, state, true)
+}
+
+/// [`execute_stateful`] with the optimizer toggle exposed.
+pub fn execute_stateful_opt(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state: &mut StateView,
+    optimize: bool,
 ) -> Result<GraphResult> {
     // clone only the keys this graph actually loads — the view is a
     // snapshot, so the trace observes pre-trace values throughout
@@ -498,16 +584,56 @@ pub fn execute_stateful(
     }
     // validation needs the full key set (a load of an uncloned-but-present
     // key is impossible: state_loads() covers every load)
-    let (result, updates) = execute_with_view(graph, runner, view)?;
+    let (result, updates, _) = execute_full(graph, runner, view, optimize)?;
     for (k, v) in updates {
         state.insert(k, v);
     }
     Ok(result)
 }
 
-/// Core driver: run one graph against `state_in`, returning saved values
-/// and uncommitted state updates.
+/// Run one graph against `state_in`, returning saved values and
+/// uncommitted state updates. Optimizes by default; scheduler workers
+/// executing graphs already compiled at admission call
+/// [`execute_view_raw`] instead and remap via the job's
+/// [`crate::graph::opt::Prepared`].
 pub fn execute_with_view(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state_in: StateView,
+) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
+    let (res, updates, _) = execute_full(graph, runner, state_in, true)?;
+    Ok((res, updates))
+}
+
+/// Core optimizing driver: validate the submitted graph, run it through
+/// the compiler pipeline (unless `optimize` is false), execute, and re-key
+/// the saved values back into the submitted graph's node ids.
+pub fn execute_full(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state_in: StateView,
+    optimize: bool,
+) -> Result<(GraphResult, BTreeMap<String, Tensor>, Option<OptReport>)> {
+    if !optimize {
+        let (res, updates) = execute_view_raw(graph, runner, state_in)?;
+        return Ok((res, updates, None));
+    }
+    let fseq = runner.manifest.forward_sequence();
+    // validate the graph AS SUBMITTED, so the optimized and unoptimized
+    // paths reject exactly the same graphs (DCE could otherwise hide an
+    // invalid-but-dead subgraph the raw path would refuse)
+    let keys = state_in.keys().cloned().collect();
+    validate_with_state(graph, &fseq, &keys)?;
+    let o = opt::optimize(graph, &fseq)?;
+    let (res, updates) = execute_view_raw(&o.graph, runner, state_in)?;
+    Ok((o.remap_result(res), updates, Some(o.report)))
+}
+
+/// Execute a graph exactly as given — no optimization passes, no id
+/// remapping. This is the executor the scheduler workers use for graphs
+/// the server already compiled at admission, and the oracle the parity
+/// tests compare against.
+pub fn execute_view_raw(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state_in: StateView,
@@ -582,7 +708,46 @@ pub struct StepOutcome {
 /// are shape-specialized, so each step is a full forward over the shifted
 /// context rather than a KV-incremental one — the per-step *intervention*
 /// semantics are identical either way.
+///
+/// The graph is compiled once per stream (not per step): dead getters are
+/// gone before the first token, and `Const`-only subtrees are folded once
+/// instead of re-evaluating at every decode step.
 pub fn execute_stream(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    steps: usize,
+    sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+) -> Result<Generation> {
+    Ok(execute_stream_full(graph, runner, steps, true, sink)?.0)
+}
+
+/// [`execute_stream`] with the optimizer toggle exposed; also returns the
+/// per-request optimization report (`None` when `optimize` is false).
+pub fn execute_stream_full(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    steps: usize,
+    optimize: bool,
+    sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+) -> Result<(Generation, Option<OptReport>)> {
+    if !optimize {
+        return Ok((execute_stream_raw(graph, runner, steps, sink)?, None));
+    }
+    let fseq = runner.manifest.forward_sequence();
+    // validate AS SUBMITTED for error parity with the raw path
+    validate_stream(graph, &fseq)?;
+    let o = opt::optimize(graph, &fseq)?;
+    let mut wrapped = |step: usize, mut out: StepOutcome| {
+        out.values = o.remap_result(out.values);
+        sink(step, out)
+    };
+    let gen = execute_stream_raw(&o.graph, runner, steps, &mut wrapped)?;
+    Ok((gen, Some(o.report)))
+}
+
+/// Streaming decode of a graph exactly as given — no optimization, no id
+/// remapping (the scheduler's path for streams compiled at admission).
+pub fn execute_stream_raw(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     steps: usize,

@@ -7,7 +7,10 @@
 //!
 //! * the **intervention graph** architecture (§3.1 of the paper): a
 //!   portable, JSON-serializable representation of an experiment on a
-//!   neural network's internals ([`graph`], [`interp`]);
+//!   neural network's internals ([`graph`], [`interp`]), plus an
+//!   **admission compiler** ([`graph::opt`]) that rewrites submitted
+//!   graphs (DCE, constant folding, CSE, kernel fusion) while keeping
+//!   every saved value bit-identical;
 //! * an **NNsight-like tracing client** (§3.2): a deferred-execution builder
 //!   DSL with proxies over module inputs/outputs, `.save()` locking, grad
 //!   access, and sessions ([`client`]);
@@ -37,6 +40,9 @@
 //!
 //! Python (JAX/Pallas) runs only at `make artifacts` time; the request path
 //! is pure Rust over AOT-compiled artifacts.
+//!
+//! The request lifecycle and subsystem map live in `docs/ARCHITECTURE.md`;
+//! the wire API is specified in `docs/PROTOCOL.md`.
 
 pub mod util;
 pub mod json;

@@ -32,6 +32,7 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
               [--coordinator 127.0.0.1:7788] [--advertise host:port]
               [--heartbeat-ms 250] [--link-latency 0.0]
               [--stream-buffer 32] [--stream-send-timeout-s 10]
+              [--no-opt]   (disable the admission graph compiler)
   coordinate  [--addr 127.0.0.1:7788] [--replicas host:port[@latency_s],..]
               [--policy round-robin|least-loaded|latency-aware]
               [--probe-ms 250] [--retries 3] [--workers 8]
@@ -78,6 +79,9 @@ fn serve(args: &Args) -> Result<()> {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("invalid --link-latency '{l}'"))?;
         }
+        if args.flag("no-opt") {
+            cfg.optimize = false;
+        }
         println!("preloading {:?} (from {path}) …", cfg.models);
         let server = NdifServer::start(cfg)?;
         announce_serving(&server);
@@ -113,6 +117,7 @@ fn serve(args: &Args) -> Result<()> {
         stream_send_timeout: std::time::Duration::from_secs(
             args.u64_or("stream-send-timeout-s", 10).max(1),
         ),
+        optimize: !args.flag("no-opt"),
     };
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;
@@ -226,6 +231,12 @@ fn trace(args: &Args) -> Result<()> {
         res.get(s).dims(),
         res.get(s).norm()
     );
+    if let Some(r) = res.opt_report() {
+        println!(
+            "server graph compiler: {} -> {} nodes (dce {}, folded {}, cse {}, fused {})",
+            r.nodes_before, r.nodes_after, r.dce_removed, r.folded, r.cse_merged, r.fused
+        );
+    }
     Ok(())
 }
 

@@ -21,8 +21,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::graph::{serde as gserde, InterventionGraph};
-use crate::interp;
+use crate::graph::{opt::Prepared, serde as gserde, InterventionGraph};
+use crate::interp::{self, StateView};
 use crate::json::Json;
 use crate::models::ModelRunner;
 use crate::server::state::SessionStateStore;
@@ -73,14 +73,16 @@ impl ServiceMetrics {
 
 struct TraceJob {
     id: String,
-    graph: InterventionGraph,
+    /// The graph to run — compiled at admission by the server (carrying
+    /// the saved-id remap and opt report), or raw for direct submits.
+    prepared: Prepared,
 }
 
 struct SessionJob {
     id: String,
     /// Session-state id the traces thread their loads/stores through.
     session: String,
-    graphs: Vec<InterventionGraph>,
+    graphs: Vec<Prepared>,
     /// Keep the session's state alive after this bundle (multi-request
     /// sessions); ephemeral sessions drop it at the end.
     persist: bool,
@@ -100,7 +102,7 @@ pub enum StreamChunk {
 }
 
 struct StreamJob {
-    graph: InterventionGraph,
+    prepared: Prepared,
     steps: usize,
     /// Bounded per-request channel: the HTTP handler drains it into the
     /// chunked response. The bound is the backpressure contract — see
@@ -160,15 +162,23 @@ impl ModelService {
     }
 
     /// Enqueue a request (non-blocking). The result will appear in the
-    /// object store under `id`.
+    /// object store under `id`. The graph runs exactly as given; the
+    /// server front compiles at admission and uses [`Self::submit_prepared`].
     pub fn submit(&self, id: String, graph: InterventionGraph) -> Result<()> {
+        self.submit_prepared(id, Prepared::raw(graph))
+    }
+
+    /// Enqueue a graph the admission compiler already processed: the
+    /// worker executes it raw and re-keys the result through the carried
+    /// remap table; the opt report rides the result JSON.
+    pub fn submit_prepared(&self, id: String, prepared: Prepared) -> Result<()> {
         self.store.put_pending(&id);
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("service stopped")
-            .send(Job::Trace(TraceJob { id, graph }))
+            .send(Job::Trace(TraceJob { id, prepared }))
             .map_err(|_| anyhow::anyhow!("service worker exited"))
     }
 
@@ -182,6 +192,22 @@ impl ModelService {
         session: String,
         persist: bool,
         graphs: Vec<InterventionGraph>,
+    ) -> Result<()> {
+        self.submit_session_prepared(
+            id,
+            session,
+            persist,
+            graphs.into_iter().map(Prepared::raw).collect(),
+        )
+    }
+
+    /// [`Self::submit_session`] for bundles compiled at admission.
+    pub fn submit_session_prepared(
+        &self,
+        id: String,
+        session: String,
+        persist: bool,
+        graphs: Vec<Prepared>,
     ) -> Result<()> {
         let n = graphs.len() as u64;
         self.store.put_pending(&id);
@@ -206,12 +232,25 @@ impl ModelService {
         tx: SyncSender<StreamChunk>,
         send_timeout: Duration,
     ) -> Result<()> {
+        self.submit_stream_prepared(Prepared::raw(graph), steps, tx, send_timeout)
+    }
+
+    /// [`Self::submit_stream`] for streams compiled at admission: per-step
+    /// values are re-keyed through the remap, and the terminal `done`
+    /// event carries the opt report.
+    pub fn submit_stream_prepared(
+        &self,
+        prepared: Prepared,
+        steps: usize,
+        tx: SyncSender<StreamChunk>,
+        send_timeout: Duration,
+    ) -> Result<()> {
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
             .expect("service stopped")
-            .send(Job::Stream(StreamJob { graph, steps, tx, send_timeout }))
+            .send(Job::Stream(StreamJob { prepared, steps, tx, send_timeout }))
             .map_err(|_| anyhow::anyhow!("service worker exited"))
     }
 
@@ -255,7 +294,8 @@ impl ModelService {
             // split the drained burst into exported-batch-aligned chunks so
             // merging never pads past the next exported batch size
             if matches!(mode, CoTenancy::Parallel { .. }) && batch.len() > 1 {
-                let rows: Vec<usize> = batch.iter().map(|j| j.graph.batch.max(1)).collect();
+                let rows: Vec<usize> =
+                    batch.iter().map(|j| j.prepared.graph.batch.max(1)).collect();
                 let chunks = plan_merge_chunks(&rows, &runner.manifest.batches);
                 let mut rest = batch;
                 for take in chunks {
@@ -301,11 +341,15 @@ impl ModelService {
     }
 
     /// Execute a streaming decode on this worker thread, pushing one
-    /// event frame per step and a terminal frame at the end.
+    /// event frame per step and a terminal frame at the end. The graph
+    /// runs as prepared at admission; per-step values are re-keyed into
+    /// the submitted graph's ids before they hit the wire.
     fn run_stream(runner: &ModelRunner, metrics: &ServiceMetrics, job: StreamJob) {
         let t0 = Instant::now();
         let mut consumer_gone = false;
-        let res = interp::execute_stream(&job.graph, runner, job.steps, &mut |step, out| {
+        let prepared = &job.prepared;
+        let mut on_step = |step: usize, mut out: crate::interp::StepOutcome| {
+            out.values = prepared.remap_values(out.values);
             let ev = Json::obj(vec![
                 ("event", Json::from("step")),
                 ("step", Json::from(step)),
@@ -320,7 +364,9 @@ impl ModelService {
                 consumer_gone = true;
                 false
             }
-        });
+        };
+        let res =
+            interp::execute_stream_raw(&prepared.graph, runner, job.steps, &mut on_step);
         match res {
             Ok(_) if consumer_gone => {
                 // the consumer vanished mid-stream; nothing to deliver to
@@ -329,13 +375,16 @@ impl ModelService {
             Ok(gen) => {
                 let tokens = Json::Array(gen.tokens.iter().map(|&t| Json::from(t)).collect());
                 let scores = Json::Array(gen.scores.iter().map(|&s| Json::from(s)).collect());
-                let done = Json::obj(vec![
+                let mut done_obj = Json::obj(vec![
                     ("event", Json::from("done")),
                     ("steps", Json::from(gen.tokens.len())),
                     ("tokens", tokens),
                     ("scores", scores),
-                ])
-                .to_string();
+                ]);
+                if let Some(report) = &job.prepared.report {
+                    done_obj.set("opt", report.to_json());
+                }
+                let done = done_obj.to_string();
                 if Self::send_chunk(&job.tx, StreamChunk::Done(done), job.send_timeout) {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -380,12 +429,13 @@ impl ModelService {
                 let view = session_state
                     .snapshot(&job.session)
                     .ok_or_else(|| format!("session '{}' expired mid-run", job.session))?;
-                let (res, updates) = interp::execute_with_view(g, runner, view)
+                let (res, updates) = interp::execute_view_raw(&g.graph, runner, view)
                     .map_err(|e| format!("session trace {i}: {e}"))?;
+                let res = g.remap_values(res);
                 session_state
                     .commit(&job.session, updates)
                     .map_err(|e| format!("session trace {i}: {e}"))?;
-                results.push(gserde::result_to_json(&res));
+                results.push(gserde::result_to_json_with_opt(&res, g.report.as_ref()));
             }
             Ok(Json::obj(vec![
                 ("session", Json::from(job.session.as_str())),
@@ -420,18 +470,23 @@ impl ModelService {
         mode: CoTenancy,
     ) {
         let t0 = std::time::Instant::now();
-        let graphs: Vec<&InterventionGraph> = batch.iter().map(|j| &j.graph).collect();
+        let graphs: Vec<&InterventionGraph> = batch.iter().map(|j| &j.prepared.graph).collect();
         let can_merge = matches!(mode, CoTenancy::Parallel { .. })
             && batch.len() > 1
             && mergeable(&graphs, runner);
 
         if can_merge {
-            let owned: Vec<InterventionGraph> = batch.iter().map(|j| j.graph.clone()).collect();
+            // graphs were individually compiled at admission, so duplicate
+            // work WITHIN each co-tenant graph is already hash-consed; the
+            // merge shares the forward pass across them
+            let owned: Vec<InterventionGraph> =
+                batch.iter().map(|j| j.prepared.graph.clone()).collect();
             match execute_merged(&owned, runner) {
                 Ok(results) => {
                     metrics.merged_batches.fetch_add(1, Ordering::Relaxed);
                     for (job, res) in batch.iter().zip(results) {
-                        Self::finish(store, metrics, &job.id, res);
+                        let res = res.map(|r| job.prepared.remap_values(r));
+                        Self::finish(store, metrics, &job.id, res, &job.prepared);
                     }
                 }
                 Err(e) => {
@@ -443,14 +498,16 @@ impl ModelService {
                             metrics,
                             &job.id,
                             Err::<crate::graph::GraphResult, &str>(&msg),
+                            &job.prepared,
                         );
                     }
                 }
             }
         } else {
             for job in &batch {
-                let res = interp::execute(&job.graph, runner);
-                Self::finish(store, metrics, &job.id, res);
+                let res = interp::execute_view_raw(&job.prepared.graph, runner, StateView::new())
+                    .map(|(r, _)| job.prepared.remap_values(r));
+                Self::finish(store, metrics, &job.id, res, &job.prepared);
             }
         }
         metrics
@@ -466,13 +523,17 @@ impl ModelService {
         metrics: &ServiceMetrics,
         id: &str,
         res: Result<crate::graph::GraphResult, impl std::fmt::Display>,
+        prepared: &Prepared,
     ) {
         // bump counters BEFORE publishing: clients wake on the store write
         // and may read metrics immediately.
         match res {
             Ok(r) => {
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
-                store.put_ready(id, gserde::result_to_json(&r).to_string());
+                store.put_ready(
+                    id,
+                    gserde::result_to_json_with_opt(&r, prepared.report.as_ref()).to_string(),
+                );
             }
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);

@@ -58,6 +58,12 @@ pub struct NdifConfig {
     /// How long the model worker waits on a full stream buffer before
     /// declaring the consumer gone and aborting the decode.
     pub stream_send_timeout: Duration,
+    /// Run submitted graphs through the admission compiler
+    /// (`graph::opt`: DCE, constant folding, CSE, fusion) before
+    /// execution. On by default; `--no-opt` (or `"optimize": false` in a
+    /// config file) is the escape hatch for debugging and for measuring
+    /// the optimizer itself (`benches/graphopt.rs`).
+    pub optimize: bool,
 }
 
 impl NdifConfig {
@@ -76,6 +82,7 @@ impl NdifConfig {
             state_limits: StateLimits::default(),
             stream_buffer: 32,
             stream_send_timeout: Duration::from_secs(10),
+            optimize: true,
         }
     }
 }
@@ -89,6 +96,8 @@ struct ServerState {
     /// Stream backpressure knobs (see [`NdifConfig`]).
     stream_buffer: usize,
     stream_send_timeout: Duration,
+    /// Admission-compiler toggle (see [`NdifConfig::optimize`]).
+    optimize: bool,
     /// Set during shutdown/kill: in-flight chunked responses abort (drop
     /// the connection without the terminator) instead of outliving the
     /// server — this is what lets a mid-stream replica death surface as a
@@ -151,6 +160,7 @@ impl NdifServer {
             auth: cfg.auth.clone(),
             stream_buffer: cfg.stream_buffer.max(1),
             stream_send_timeout: cfg.stream_send_timeout,
+            optimize: cfg.optimize,
             draining: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&state);
@@ -355,10 +365,16 @@ fn submit_parsed_graph(
     if let Err(e) = crate::graph::validate::validate(&graph, &fseq) {
         return Err(Response::bad_request(&e.to_string()));
     }
+    // admission compile (between validation and execution): DCE, constant
+    // folding, CSE, fusion. A folding failure — e.g. `mean` over an empty
+    // constant subtree — is a guaranteed execution failure, so it is a
+    // clean 400 here rather than a mid-forward 500.
+    let prepared = crate::graph::opt::prepare(graph, &fseq, state.optimize)
+        .map_err(|e| Response::bad_request(&e.to_string()))?;
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
     service
-        .submit(id.clone(), graph)
+        .submit_prepared(id.clone(), prepared)
         .map_err(|e| Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string()))))?;
     Ok(id)
 }
@@ -500,8 +516,17 @@ fn stateful_session(
     if let Err(e) = crate::graph::validate::validate_session(&graphs, &fseq, &initial) {
         return Response::bad_request(&e.to_string());
     }
+    // admission compile per trace (state ops are roots, so the compiler
+    // never folds across LoadState or drops a StoreState)
+    let mut prepared = Vec::with_capacity(graphs.len());
+    for (i, g) in graphs.into_iter().enumerate() {
+        match crate::graph::opt::prepare(g, &fseq, state.optimize) {
+            Ok(p) => prepared.push(p),
+            Err(e) => return Response::bad_request(&format!("session trace {i}: {e}")),
+        }
+    }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
-    if let Err(e) = service.submit_session(id.clone(), session, persist, graphs) {
+    if let Err(e) = service.submit_session_prepared(id.clone(), session, persist, prepared) {
         return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
     }
     match state.store.wait_outcome(&id, Duration::from_secs(300)) {
@@ -581,8 +606,14 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     if graph.shards > 1 {
         return Response::bad_request("streaming decode is unsharded");
     }
+    // admission compile, once per stream: folded constants and eliminated
+    // dead getters are paid once per request, not once per decode step
+    let prepared = match crate::graph::opt::prepare(graph, &fseq, state.optimize) {
+        Ok(p) => p,
+        Err(e) => return Response::bad_request(&e.to_string()),
+    };
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
-    if let Err(e) = service.submit_stream(graph, steps, tx, state.stream_send_timeout) {
+    if let Err(e) = service.submit_stream_prepared(prepared, steps, tx, state.stream_send_timeout) {
         return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
     }
     // the chunked source runs on the HTTP worker serving this connection:

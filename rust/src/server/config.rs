@@ -14,7 +14,8 @@
 //!   "coordinator": "10.0.0.1:7788",
 //!   "advertise": "10.0.0.5:7757",
 //!   "heartbeat_ms": 250,
-//!   "link_latency_s": 0.010
+//!   "link_latency_s": 0.010,
+//!   "optimize": true
 //! }
 //! ```
 //!
@@ -104,6 +105,9 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
     if let Some(l) = j.get("link_latency_s").as_f64() {
         cfg.link_latency_s = l;
     }
+    if let Some(o) = j.get("optimize").as_bool() {
+        cfg.optimize = o;
+    }
     if cfg.models.is_empty() {
         return Err(anyhow!("config must list at least one model"));
     }
@@ -151,6 +155,15 @@ mod tests {
         assert!(cfg.workers >= 1);
         assert!(cfg.coordinator.is_none());
         assert!(cfg.advertise.is_none());
+        assert!(cfg.optimize, "the admission compiler is on by default");
+    }
+
+    #[test]
+    fn optimize_toggle_parses() {
+        let cfg = from_json_text(r#"{"models": ["m"], "optimize": false}"#).unwrap();
+        assert!(!cfg.optimize);
+        let cfg = from_json_text(r#"{"models": ["m"], "optimize": true}"#).unwrap();
+        assert!(cfg.optimize);
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! Optimizer parity and admission-compiler integration tests.
+//!
+//! The compiler's contract is that every value the user asked for is
+//! **bit-identical** with and without optimization — across plain traces,
+//! co-tenant merges, streaming re-execution, and session state ops. The
+//! property tests here generate randomized graphs (duplicate getters,
+//! const subtrees, fusable chains, speculative dead reads, setters,
+//! grads) and hold the optimized execution to exact equality against the
+//! raw interpreter. The server-level tests pin the admission behavior:
+//! folding failures are clean 400s, `/v1/result` carries the `"opt"`
+//! report, and `optimize: false` restores the uncompiled path.
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::graph::{opt, InterventionGraph};
+use nnscope::interp;
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::Prng;
+
+fn runner() -> ModelRunner {
+    ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap()
+}
+
+/// A randomized graph exercising every optimizer pass: duplicate getter
+/// reads (CSE), const-only subtrees (folding), chains nothing consumes
+/// (DCE), add-of-scale / softmax-of-scale / gelu-of-matmul shapes
+/// (fusion), optional setters and grads.
+fn random_graph(rng: &mut Prng, seq: usize, vocab: usize, n_layers: usize) -> InterventionGraph {
+    let batch = 1;
+    let tokens = Tensor::new(
+        &[batch, seq],
+        (0..batch * seq).map(|_| rng.range(0, vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let layer = rng.range(0, n_layers);
+    let point = format!("layer.{layer}");
+    let h = tr.output(&point);
+    // a duplicate read of the same point (CSE fodder)
+    let h_dup = tr.output(&point);
+    // a const-only subtree (folding fodder)
+    let c1 = tr.constant(&Tensor::new(&[4, 4], (0..16).map(|i| (i as f32 - 8.0) * 0.3).collect()));
+    let c2 = tr.constant(&Tensor::new(&[4, 4], (0..16).map(|i| (i as f32).sin()).collect()));
+    let cm = tr.matmul(c1, c2);
+    let cs = tr.softmax(cm);
+    if rng.below(2) == 0 {
+        tr.save(cs);
+    } // else: the whole const subtree is dead (DCE fodder)
+    // a speculative getter nobody consumes
+    let _dead = tr.output(&format!("layer.{}", rng.range(0, n_layers)));
+    // a fusable chain over the activation
+    let mut cur = h;
+    for _ in 0..rng.range(0, 4) {
+        cur = match rng.range(0, 5) {
+            0 => {
+                let sc = tr.scale(h_dup, 0.25 + rng.uniform_f32());
+                tr.add(cur, sc) // Add-of-Scale → FusedScaleAdd
+            }
+            1 => {
+                let sc = tr.scale(cur, 1.0 + rng.uniform_f32());
+                tr.softmax(sc) // Softmax-of-Scale → FusedScaleSoftmax
+            }
+            2 => tr.gelu(cur),
+            3 => tr.fill(cur, &[Range1::one(0), Range1::one(seq - 1)], rng.uniform_f32()),
+            _ => tr.scale(cur, 0.5 + rng.uniform_f32()),
+        };
+    }
+    if rng.below(3) == 0 {
+        tr.set_output(&point, cur);
+    }
+    // grads on some graphs (post-phase parity; dead grads also exercise
+    // DCE skipping the backward pass)
+    if rng.below(3) == 0 {
+        tr.targets(&[1.0]);
+        let g = tr.grad(&format!("layer.{}", rng.range(0, n_layers)));
+        if rng.below(2) == 0 {
+            let ng = tr.scale(g, -1.0);
+            tr.save(ng);
+        }
+    }
+    let later = tr.output(&format!("layer.{}", rng.range(layer, n_layers)));
+    let m = tr.mean(later);
+    tr.save(m);
+    tr.save(cur);
+    tr.into_graph()
+}
+
+#[test]
+fn optimized_traces_are_bit_identical_to_raw() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let mut rng = Prng::new(0x0717);
+    let mut optimizer_did_something = false;
+    for case in 0..30 {
+        let g = random_graph(&mut rng, m.seq, m.vocab, m.n_layers);
+        let raw = interp::execute_reported(&g, &r, false);
+        let opt = interp::execute_reported(&g, &r, true);
+        match (raw, opt) {
+            (Ok((raw, _)), Ok((opt, report))) => {
+                let report = report.expect("optimized path must report");
+                assert_eq!(report.nodes_before, g.nodes.len(), "case {case}");
+                if report.nodes_after < report.nodes_before {
+                    optimizer_did_something = true;
+                }
+                assert_eq!(
+                    raw.values.keys().collect::<Vec<_>>(),
+                    opt.values.keys().collect::<Vec<_>>(),
+                    "case {case}: saved-id sets differ"
+                );
+                for (id, t) in &raw.values {
+                    assert_eq!(t, &opt.values[id], "case {case} node {id}: values differ");
+                }
+            }
+            (Err(_), Err(_)) => {} // parity on failure is parity too
+            (raw, opt) => panic!(
+                "case {case}: raw {:?} vs optimized {:?} disagree on success",
+                raw.map(|_| ()),
+                opt.map(|_| ())
+            ),
+        }
+    }
+    assert!(optimizer_did_something, "workload never triggered a rewrite");
+}
+
+#[test]
+fn optimized_streams_are_bit_identical_to_raw() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let mut rng = Prng::new(0x57EA);
+    for case in 0..6 {
+        let tokens = Tensor::new(
+            &[1, m.seq],
+            (0..m.seq).map(|_| rng.range(0, m.vocab) as f32).collect(),
+        );
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        // const subtree re-evaluated per step unoptimized, folded once
+        // optimized — values must still agree exactly
+        let c = tr.constant(&Tensor::new(&[4], vec![0.5, -1.0, 2.0, 0.25]));
+        let cs = tr.softmax(c);
+        let cm = tr.mean(cs);
+        tr.step_hook(cm);
+        let sc = tr.scale(h, 2.0);
+        let sm = tr.softmax(sc); // fusable
+        let mn = tr.mean(sm);
+        tr.step_hook(mn);
+        let _dead = tr.output("layer.1");
+        if rng.below(2) == 0 {
+            let z = tr.scale(h, 0.5);
+            tr.set_output("layer.0", z);
+        }
+        let g = tr.into_graph();
+
+        let steps = 4;
+        let mut raw_events = Vec::new();
+        let mut raw_sink = |step: usize, out: interp::StepOutcome| {
+            raw_events.push((step, out.token, out.values.values.clone()));
+            true
+        };
+        let (raw_gen, raw_report) =
+            interp::execute_stream_full(&g, &r, steps, false, &mut raw_sink).unwrap();
+        assert!(raw_report.is_none());
+        let mut opt_events = Vec::new();
+        let mut opt_sink = |step: usize, out: interp::StepOutcome| {
+            opt_events.push((step, out.token, out.values.values.clone()));
+            true
+        };
+        let (opt_gen, opt_report) =
+            interp::execute_stream_full(&g, &r, steps, true, &mut opt_sink).unwrap();
+        let report = opt_report.expect("optimized stream must report");
+        assert!(report.nodes_after < report.nodes_before, "case {case}");
+        assert_eq!(raw_gen.tokens, opt_gen.tokens, "case {case}");
+        assert_eq!(raw_gen.scores, opt_gen.scores, "case {case}");
+        assert_eq!(raw_events, opt_events, "case {case}: per-step values differ");
+    }
+}
+
+#[test]
+fn optimized_sessions_are_bit_identical_to_raw() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let tokens = Tensor::new(&[1, m.seq], vec![1.0; m.seq]);
+    // trace 0: store a getter-derived value; trace 1: load, fusable
+    // update, store back + save; trace 2: load + save
+    let build = || {
+        let mut t0 = Trace::new("tiny-sim", &tokens);
+        let h = t0.output("layer.0");
+        let flat = t0.mean_axis(h, 0);
+        t0.save_to_state("acc", flat);
+        let mut t1 = Trace::new("tiny-sim", &tokens);
+        let a = t1.from_state("acc");
+        let a2 = t1.from_state("acc"); // CSE fodder
+        let sc = t1.scale(a2, 0.5);
+        let upd = t1.add(a, sc); // FusedScaleAdd fodder
+        t1.save_to_state("acc", upd);
+        t1.save(upd);
+        let mut t2 = Trace::new("tiny-sim", &tokens);
+        let a = t2.from_state("acc");
+        let mn = t2.mean(a);
+        t2.save(mn);
+        vec![t0.into_graph(), t1.into_graph(), t2.into_graph()]
+    };
+    let graphs = build();
+    let run = |optimize: bool| {
+        let mut state = interp::StateView::new();
+        let mut results = Vec::new();
+        for g in &graphs {
+            results.push(interp::execute_stateful_opt(g, &r, &mut state, optimize).unwrap());
+        }
+        (results, state)
+    };
+    let (raw_res, raw_state) = run(false);
+    let (opt_res, opt_state) = run(true);
+    for (i, (raw, opt)) in raw_res.iter().zip(&opt_res).enumerate() {
+        assert_eq!(raw.values, opt.values, "trace {i} saved values diverged");
+    }
+    assert!(!raw_res[1].values.is_empty() && !raw_res[2].values.is_empty());
+    assert_eq!(raw_state.len(), opt_state.len());
+    for (k, v) in &raw_state {
+        assert_eq!(v, &opt_state[k], "state key {k} diverged");
+    }
+}
+
+#[test]
+fn optimized_cotenant_merges_match_raw_merges() {
+    use nnscope::scheduler::execute_merged;
+    let r = runner();
+    let m = r.manifest.clone();
+    let mut rng = Prng::new(0xC0DE);
+    for case in 0..5 {
+        // two single-row CSE-heavy graphs that fit one exported batch
+        let mut graphs = Vec::new();
+        for _ in 0..2 {
+            let tokens = Tensor::new(
+                &[1, m.seq],
+                (0..m.seq).map(|_| rng.range(0, m.vocab) as f32).collect(),
+            );
+            let mut tr = Trace::new("tiny-sim", &tokens);
+            for _ in 0..3 {
+                let h = tr.output("layer.0"); // duplicate reads
+                let sc = tr.scale(h, 2.0);
+                let sm = tr.softmax(sc);
+                let mn = tr.mean(sm);
+                tr.save(mn);
+            }
+            graphs.push(tr.into_graph());
+        }
+        let fseq = m.forward_sequence();
+        let optimized: Vec<opt::Optimized> = graphs
+            .iter()
+            .map(|g| opt::optimize(g, &fseq).unwrap())
+            .collect();
+        let raw_merged = execute_merged(&graphs, &r).unwrap();
+        let opt_graphs: Vec<InterventionGraph> =
+            optimized.iter().map(|o| o.graph.clone()).collect();
+        let opt_merged = execute_merged(&opt_graphs, &r).unwrap();
+        for (i, (o, (raw, opt_res))) in optimized
+            .iter()
+            .zip(raw_merged.iter().zip(opt_merged))
+            .enumerate()
+        {
+            let raw = raw.as_ref().unwrap();
+            let remapped = o.remap_result(opt_res.unwrap());
+            assert_eq!(raw.values.len(), remapped.values.len(), "case {case} graph {i}");
+            for (id, t) in &raw.values {
+                assert_eq!(t, &remapped.values[id], "case {case} graph {i} node {id}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-level admission behavior
+// ---------------------------------------------------------------------------
+
+fn start_server(optimize: bool) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.optimize = optimize;
+    NdifServer::start(cfg).unwrap()
+}
+
+fn probe_trace(tokens: &Tensor) -> (Trace, nnscope::client::SavedRef) {
+    let mut tr = Trace::new("tiny-sim", tokens);
+    let h = tr.output("layer.0");
+    let h2 = tr.output("layer.0"); // duplicate live read: CSE at admission
+    let sc = tr.scale(h2, 2.0);
+    let sm = tr.softmax(sc); // Softmax-of-Scale: fused at admission
+    let mn = tr.mean(sm);
+    let s = tr.save(mn);
+    let mn2 = tr.mean(h); // keeps the first read live too
+    tr.save(mn2);
+    let _dead = tr.gelu(h); // dead chain: DCE at admission
+    (tr, s)
+}
+
+#[test]
+fn result_metadata_carries_opt_report_and_no_opt_omits_it() {
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let (tr, s) = probe_trace(&tokens);
+    let graph = tr.graph().clone();
+    let res = tr.run_remote(&client).unwrap();
+    let report = *res.opt_report().expect("optimizing server must attach an opt report");
+    assert_eq!(report.nodes_before, graph.nodes.len());
+    assert!(report.nodes_after < report.nodes_before);
+    assert!(report.dce_removed >= 1);
+    assert!(report.cse_merged >= 1);
+    let optimized_value = res.get(s).clone();
+    drop(server);
+
+    let server = start_server(false);
+    let client = NdifClient::new(server.addr());
+    let (tr, s2) = probe_trace(&tokens);
+    let res = tr.run_remote(&client).unwrap();
+    assert!(res.opt_report().is_none(), "--no-opt must omit the report");
+    assert_eq!(&optimized_value, res.get(s2), "values must not depend on the compiler");
+}
+
+#[test]
+fn empty_const_reduction_is_a_clean_400_at_admission() {
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let c = tr.constant(&Tensor::new(&[4], vec![1.0; 4]));
+    let empty = tr.slice(c, &[Range1::new(2, 2)]);
+    let m = tr.mean(empty);
+    tr.save(m);
+    let err = tr.run_remote(&client).unwrap_err().to_string();
+    assert!(err.contains("400"), "expected admission 400, got: {err}");
+    assert!(err.contains("empty"), "error must name the empty reduction: {err}");
+}
+
+#[test]
+fn non_const_empty_reduction_fails_execution_not_nan() {
+    // an activation sliced to zero rows cannot be caught at admission
+    // (its shape is only known at execution) — it must fail with a clear
+    // message instead of returning NaN
+    let r = runner();
+    let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    let empty = tr.slice(h, &[Range1::new(0, 0)]);
+    let m = tr.mean(empty);
+    tr.save(m);
+    let err = tr.run_local(&r).unwrap_err().to_string();
+    assert!(err.contains("empty"), "{err}");
+}
+
+#[test]
+fn streamed_values_do_not_depend_on_the_compiler() {
+    use nnscope::client::remote::StreamEvent;
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 5) as f32).collect());
+    let build = || {
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        let sc = tr.scale(h, 3.0);
+        let sm = tr.softmax(sc);
+        let mn = tr.mean(sm);
+        tr.step_hook(mn);
+        let _dead = tr.output("layer.1");
+        tr
+    };
+    let mut collect = |optimize: bool| {
+        let server = start_server(optimize);
+        let client = NdifClient::new(server.addr());
+        let mut steps = Vec::new();
+        for ev in build().run_stream(&client, 3).unwrap() {
+            match ev.unwrap() {
+                StreamEvent::Step { step, token, values, .. } => {
+                    steps.push((step, token, values.values))
+                }
+                StreamEvent::Done { tokens, .. } => assert_eq!(tokens.len(), 3),
+            }
+        }
+        steps
+    };
+    let with_opt = collect(true);
+    let without = collect(false);
+    assert_eq!(with_opt, without, "per-step streamed values must not depend on the compiler");
+}
+
+#[test]
+fn session_endpoint_compiles_stateful_bundles() {
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], vec![2.0; 16]);
+    let mut t0 = Trace::new("tiny-sim", &tokens);
+    let c = t0.constant(&Tensor::scalar(2.0));
+    let c2 = t0.constant(&Tensor::scalar(3.0));
+    let folded = t0.mul(c, c2); // folds to 6.0 at admission
+    t0.save_to_state("acc", folded);
+    let mut t1 = Trace::new("tiny-sim", &tokens);
+    let a = t1.from_state("acc");
+    t1.save(a);
+    let results = client
+        .execute_session(&[t0.into_graph(), t1.into_graph()])
+        .unwrap();
+    assert_eq!(results[1].values.values().next().unwrap().item(), 6.0);
+
+    // a folding failure inside a bundle names the trace, as a 400
+    let mut bad = Trace::new("tiny-sim", &tokens);
+    let c = bad.constant(&Tensor::new(&[2], vec![1.0, 2.0]));
+    let empty = bad.slice(c, &[Range1::new(1, 1)]);
+    let m = bad.sum(empty);
+    bad.save_to_state("x", m);
+    let err = client
+        .execute_session(&[bad.into_graph()])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("empty"), "{err}");
+}
+
+#[test]
+fn dead_grad_skips_backward_but_saved_values_agree() {
+    // a grad node nothing consumes: DCE drops it, the backward pass is
+    // skipped entirely, and the saved forward values still agree exactly
+    let r = runner();
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 3) as f32).collect());
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    tr.targets(&[1.0]);
+    let _g = tr.grad("layer.0"); // dead
+    let h = tr.output("layer.1");
+    let m = tr.mean(h);
+    tr.save(m);
+    let g = tr.graph().clone();
+    let (raw, _) = interp::execute_reported(&g, &r, false).unwrap();
+    let (opt, report) = interp::execute_reported(&g, &r, true).unwrap();
+    let report = report.unwrap();
+    assert!(report.dce_removed >= 1);
+    assert!(!g.grad_points().is_empty());
+    assert_eq!(raw.values, opt.values);
+    assert!(!raw.values.is_empty());
+}
+
+#[test]
+fn random_wire_round_trips_survive_optimization() {
+    // serialize → deserialize → optimize → validate: the compiler's
+    // output is always a well-formed graph for whatever the wire accepts
+    use nnscope::graph::serde as gserde;
+    use nnscope::json::parse;
+    let r = runner();
+    let m = r.manifest.clone();
+    let fseq = m.forward_sequence();
+    let mut rng = Prng::new(0xAB5);
+    for case in 0..20 {
+        let g = random_graph(&mut rng, m.seq, m.vocab, m.n_layers);
+        let wire = gserde::to_json(&g).to_string();
+        let back = gserde::from_json(&parse(&wire).unwrap()).unwrap();
+        let o = match opt::optimize(&back, &fseq) {
+            Ok(o) => o,
+            Err(_) => continue, // admission-rejected graphs are fine
+        };
+        nnscope::graph::validate::validate(&o.graph, &fseq)
+            .unwrap_or_else(|e| panic!("case {case}: optimized graph invalid: {e}"));
+    }
+}

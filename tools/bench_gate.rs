@@ -73,6 +73,16 @@ fn metrics() -> Vec<Metric> {
             name: "streaming tokens_per_s",
             extract: |j| j.get("tokens_per_s").as_f64(),
         },
+        Metric {
+            file: "BENCH_graphopt.json",
+            name: "graphopt stream_speedup_opt (no-opt/opt)",
+            extract: |j| j.get("stream_speedup_opt").as_f64(),
+        },
+        Metric {
+            file: "BENCH_graphopt.json",
+            name: "graphopt cotenant_speedup_opt (raw/opt merge)",
+            extract: |j| j.get("cotenant_speedup_opt").as_f64(),
+        },
     ]
 }
 
@@ -84,7 +94,12 @@ fn load(path: &std::path::Path) -> Result<Json, String> {
 fn main() {
     let args = Args::from_env(1);
     let baseline_dir = std::path::PathBuf::from(args.str_or("dir", "benches/baselines"));
-    let files = ["BENCH_kernels.json", "BENCH_sessions.json", "BENCH_streaming.json"];
+    let files = [
+        "BENCH_kernels.json",
+        "BENCH_sessions.json",
+        "BENCH_streaming.json",
+        "BENCH_graphopt.json",
+    ];
 
     if args.flag("update") {
         std::fs::create_dir_all(&baseline_dir).expect("create baseline dir");
