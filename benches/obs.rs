@@ -1,0 +1,117 @@
+//! Observability overhead: throughput with the metrics/tracing layer on
+//! versus off, same workload, same process.
+//!
+//! The obs subsystem is designed to be lock-free on the hot path (atomic
+//! histogram adds, a fixed-size span vector moved with the job), so the
+//! instrumented server should stay within a few percent of the stripped
+//! one. Two servers run side by side — one with `obs: true`, one with
+//! `obs: false` — and the closed-loop Fig. 9 workload alternates between
+//! them in rounds so cache/thermal drift is charged to both equally.
+//!
+//! Emits `BENCH_obs.json` with the on/off throughput ratio (higher is
+//! better, 1.0 = free observability), gated by `tools/bench_gate.rs`.
+//! Note: `NNSCOPE_OBS=off` in the environment force-disables obs globally
+//! and collapses the comparison to ~1.0 — leave it unset for a real
+//! measurement.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::json::Json;
+use nnscope::models::{artifacts_dir, workload};
+use nnscope::runtime::Manifest;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+use nnscope::util::Prng;
+
+/// Drive `users × reqs` closed-loop requests at `addr`; returns wall seconds.
+fn drive(
+    addr: std::net::SocketAddr,
+    model: &str,
+    m: &Manifest,
+    users: usize,
+    reqs: usize,
+    seed: u64,
+) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..users)
+        .map(|u| {
+            let model = model.to_string();
+            let (vocab, seq, layers) = (m.vocab, m.seq, m.n_layers);
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                let mut rng = Prng::new(seed * 1000 + u as u64);
+                for _ in 0..reqs {
+                    let req = workload::load_test_request(&mut rng, vocab, seq, layers);
+                    let tokens = Tensor::new(&[1, seq], req.tokens.clone());
+                    let mut tr = Trace::new(&model, &tokens);
+                    let h = tr.output(&format!("layer.{}", req.layer));
+                    tr.save(h);
+                    tr.run_remote(&client).expect("request");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let model = "tiny-sim";
+    let users = if common::quick() { 4 } else { 8 };
+    let reqs = common::samples(8);
+    let rounds = if common::quick() { 2 } else { 4 };
+
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    common::section(&format!(
+        "Observability overhead — {model}, {users} users × {reqs} reqs × {rounds} rounds, obs on vs off"
+    ));
+
+    let on = NdifServer::start(NdifConfig::local(&[model])).expect("obs-on server");
+    let mut cfg = NdifConfig::local(&[model]);
+    cfg.obs = false;
+    let off = NdifServer::start(cfg).expect("obs-off server");
+
+    // one warmup pass each (lazy first-run init must not bill either side)
+    drive(on.addr(), model, &manifest, users, 1, 7);
+    drive(off.addr(), model, &manifest, users, 1, 7);
+
+    let (mut wall_on, mut wall_off) = (0.0f64, 0.0f64);
+    for round in 0..rounds {
+        wall_on += drive(on.addr(), model, &manifest, users, reqs, round as u64);
+        wall_off += drive(off.addr(), model, &manifest, users, reqs, round as u64);
+    }
+    let total = (rounds * users * reqs) as f64;
+    let (tp_on, tp_off) = (total / wall_on, total / wall_off);
+    let ratio = tp_on / tp_off;
+
+    let mut table = Table::new("throughput, instrumented vs stripped").header(vec![
+        "config", "wall (s)", "req/s",
+    ]);
+    table.row(vec!["obs on".into(), format!("{wall_on:.3}"), format!("{tp_on:.2}")]);
+    table.row(vec!["obs off".into(), format!("{wall_off:.3}"), format!("{tp_off:.2}")]);
+    table.print();
+    common::shape_note(&format!(
+        "on/off throughput ratio {ratio:.3} (1.0 = free; target ≥ 0.95, i.e. ≤5% overhead)"
+    ));
+    if std::env::var("NNSCOPE_OBS").is_ok() {
+        common::shape_note("NNSCOPE_OBS is set — the comparison may be degenerate");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("obs")),
+        ("quick", Json::Bool(common::quick())),
+        ("model", Json::from(model)),
+        ("throughput_on_rps", Json::from(tp_on)),
+        ("throughput_off_rps", Json::from(tp_off)),
+        ("obs_ratio_on_off", Json::from(ratio)),
+    ]);
+    std::fs::write("BENCH_obs.json", json.pretty()).expect("write BENCH_obs.json");
+    println!("\nwrote BENCH_obs.json");
+}

@@ -1,19 +1,33 @@
 //! Interactive load-test driver (the Fig. 9 scenario, standalone).
 //!
-//! Simulates N concurrent users, each submitting a request that saves the
-//! output of a uniformly-random layer of the served model, and reports the
-//! response-time distribution. `benches/fig9.rs` runs the full sweep; this
-//! example drives one configuration for exploration.
+//! Two driving modes:
+//!
+//! * **closed loop** (default) — N concurrent users each submit
+//!   back-to-back requests. Simple, but self-throttling: when the server
+//!   slows, users issue fewer requests and tail latency is understated.
+//! * **open loop** (`--open-loop`) — requests arrive on a schedule drawn
+//!   from an [`nnscope::netsim::Arrivals`] process regardless of how the
+//!   server keeps up. `--arrivals lognormal --sigma 1.5` produces the
+//!   heavy-tailed burst-then-lull clustering of real inference traffic,
+//!   which is what actually stresses queue-wait percentiles.
+//!
+//! Either way the report ends with the *server-side* latency breakdown —
+//! p50/p95/p99 of end-to-end, queue-wait, and execution time, read from
+//! the mergeable histograms behind `GET /v1/metrics` — next to the
+//! client-observed response-time summary.
 //!
 //! Run: `cargo run --release --example load_test -- \
-//!           [--model llama8b-sim] [--users 16] [--requests 2]`
+//!           [--model llama8b-sim] [--users 16] [--requests 2] \
+//!           [--open-loop --rate 20 --arrivals lognormal --sigma 1.5 --count 64]`
 
 use std::time::Instant;
 
 use nnscope::client::{remote::NdifClient, Trace};
 use nnscope::models::{artifacts_dir, workload};
+use nnscope::netsim::Arrivals;
+use nnscope::obs::HistSnapshot;
 use nnscope::scheduler::CoTenancy;
-use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::server::{http, NdifConfig, NdifServer};
 use nnscope::tensor::Tensor;
 use nnscope::util::cli::Args;
 use nnscope::util::{Prng, Summary};
@@ -21,15 +35,15 @@ use nnscope::util::{Prng, Summary};
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(1);
     let model = args.str_or("model", "llama8b-sim");
-    let users = args.usize_or("users", 16);
-    let requests = args.usize_or("requests", 2);
     let parallel = args.flag("parallel-cotenancy");
 
     let manifest = nnscope::runtime::Manifest::load(&artifacts_dir(), &model)?;
     let m = manifest.clone();
 
-    println!("starting NDIF server with {model} ({} co-tenancy) …",
-        if parallel { "parallel" } else { "sequential" });
+    println!(
+        "starting NDIF server with {model} ({} co-tenancy) …",
+        if parallel { "parallel" } else { "sequential" }
+    );
     let mut cfg = NdifConfig::local(&[&model]);
     cfg.cotenancy = if parallel {
         CoTenancy::Parallel { max_merge: 8 }
@@ -39,39 +53,143 @@ fn main() -> anyhow::Result<()> {
     let server = NdifServer::start(cfg)?;
     let addr = server.addr();
 
-    println!("simulating {users} concurrent users × {requests} requests …");
     let wall = Instant::now();
+    let all = if args.flag("open-loop") {
+        let count = args.usize_or("count", 64);
+        let rate = args.f64_or("rate", 20.0);
+        let sigma = args.f64_or("sigma", 1.5);
+        let kind = args.str_or("arrivals", "lognormal");
+        let Some(arrivals) = Arrivals::parse(&kind, rate, sigma) else {
+            anyhow::bail!("unknown arrival process '{kind}' (uniform | poisson | lognormal)");
+        };
+        println!(
+            "open loop: {count} requests, {kind} arrivals @ {rate:.1}/s (mean gap {:.1} ms) …",
+            arrivals.mean_gap() * 1e3
+        );
+        run_open_loop(addr, &model, &m, arrivals, count)?
+    } else {
+        let users = args.usize_or("users", 16);
+        let requests = args.usize_or("requests", 2);
+        println!("closed loop: {users} concurrent users × {requests} requests …");
+        run_closed_loop(addr, &model, &m, users, requests)?
+    };
+
+    let s = Summary::of(&all);
+    println!(
+        "\nwall {:.2}s | client response time: mean±std {}s | median {:.3}s | q25 {:.3} q75 {:.3} | min {:.3} max {:.3}",
+        wall.elapsed().as_secs_f64(),
+        s.pm(),
+        s.median,
+        s.q25,
+        s.q75,
+        s.min,
+        s.max
+    );
+    let (enq, done, failed, merged) = server.metrics(&model).unwrap();
+    println!("server: enqueued={enq} completed={done} failed={failed} merged_batches={merged}");
+    print_server_histograms(addr, &model)?;
+    Ok(())
+}
+
+/// N users, each issuing back-to-back requests (the original Fig. 9 mode).
+fn run_closed_loop(
+    addr: std::net::SocketAddr,
+    model: &str,
+    m: &nnscope::runtime::Manifest,
+    users: usize,
+    requests: usize,
+) -> anyhow::Result<Vec<f64>> {
     let handles: Vec<_> = (0..users)
         .map(|u| {
-            let model = model.clone();
+            let model = model.to_string();
             let (vocab, seq, n_layers) = (m.vocab, m.seq, m.n_layers);
             std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
                 let client = NdifClient::new(addr);
                 let mut rng = Prng::new(u as u64 + 1);
                 let mut times = Vec::new();
                 for _ in 0..requests {
-                    let req = workload::load_test_request(&mut rng, vocab, seq, n_layers);
-                    let tokens = Tensor::new(&[1, seq], req.tokens.clone());
-                    let mut tr = Trace::new(&model, &tokens);
-                    let h = tr.output(&format!("layer.{}", req.layer));
-                    tr.save(h);
-                    let t = Instant::now();
-                    tr.run_remote(&client)?;
-                    times.push(t.elapsed().as_secs_f64());
+                    times.push(one_request(&client, &model, &mut rng, vocab, seq, n_layers)?);
                 }
                 Ok(times)
             })
         })
         .collect();
-
     let mut all = Vec::new();
     for h in handles {
         all.extend(h.join().expect("user thread")?);
     }
-    let s = Summary::of(&all);
-    println!("\nwall {:.2}s | response time: mean±std {}s | median {:.3}s | q25 {:.3} q75 {:.3} | min {:.3} max {:.3}",
-        wall.elapsed().as_secs_f64(), s.pm(), s.median, s.q25, s.q75, s.min, s.max);
-    let (enq, done, failed, merged) = server.metrics(&model).unwrap();
-    println!("server: enqueued={enq} completed={done} failed={failed} merged_batches={merged}");
+    Ok(all)
+}
+
+/// Fire `count` requests on the arrival schedule, one thread per request,
+/// without waiting for earlier requests to finish (open loop).
+fn run_open_loop(
+    addr: std::net::SocketAddr,
+    model: &str,
+    m: &nnscope::runtime::Manifest,
+    arrivals: Arrivals,
+    count: usize,
+) -> anyhow::Result<Vec<f64>> {
+    let mut gaps = Prng::new(0xa221_11a1);
+    let mut handles = Vec::with_capacity(count);
+    for i in 0..count {
+        if i > 0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(arrivals.next_gap(&mut gaps)));
+        }
+        let model = model.to_string();
+        let (vocab, seq, n_layers) = (m.vocab, m.seq, m.n_layers);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let client = NdifClient::new(addr);
+            let mut rng = Prng::new(i as u64 + 1);
+            one_request(&client, &model, &mut rng, vocab, seq, n_layers)
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.push(h.join().expect("request thread")?);
+    }
+    Ok(all)
+}
+
+/// Submit one random-layer save request; returns the response time.
+fn one_request(
+    client: &NdifClient,
+    model: &str,
+    rng: &mut Prng,
+    vocab: usize,
+    seq: usize,
+    n_layers: usize,
+) -> anyhow::Result<f64> {
+    let req = workload::load_test_request(rng, vocab, seq, n_layers);
+    let tokens = Tensor::new(&[1, seq], req.tokens.clone());
+    let mut tr = Trace::new(model, &tokens);
+    let h = tr.output(&format!("layer.{}", req.layer));
+    tr.save(h);
+    let t = Instant::now();
+    tr.run_remote(client)?;
+    Ok(t.elapsed().as_secs_f64())
+}
+
+/// Print the server's own latency percentiles: e2e, queue wait, and
+/// execution, straight from the `GET /v1/metrics` histograms.
+fn print_server_histograms(addr: std::net::SocketAddr, model: &str) -> anyhow::Result<()> {
+    let (status, body) = http::get(addr, "/v1/metrics")?;
+    anyhow::ensure!(status == 200, "metrics endpoint returned {status}");
+    let j = nnscope::json::parse(std::str::from_utf8(&body)?)?;
+    let latency = j.get(model).get("latency");
+    println!("server histograms ({model}):");
+    for kind in ["e2e", "queue_wait", "exec"] {
+        match HistSnapshot::from_json(latency.get(kind)) {
+            Some(h) if h.count > 0 => println!(
+                "  {kind:<10} n={:<5} p50 {:>8.3} ms | p95 {:>8.3} ms | p99 {:>8.3} ms | mean {:>8.3} ms",
+                h.count,
+                h.percentile(0.50) * 1e3,
+                h.percentile(0.95) * 1e3,
+                h.percentile(0.99) * 1e3,
+                h.mean_s() * 1e3
+            ),
+            _ => println!("  {kind:<10} (no observations)"),
+        }
+    }
     Ok(())
 }

@@ -67,6 +67,15 @@ impl NdifClient {
         h
     }
 
+    /// Request headers carrying a client-minted trace id — the id the
+    /// whole pipeline (coordinator retries included) stamps its spans
+    /// under, echoed back in the result's `"timing"` metadata.
+    fn headers_traced<'a>(&'a self, trace_id: &'a str) -> Vec<(&'a str, &'a str)> {
+        let mut h = self.headers();
+        h.push((crate::obs::TRACE_HEADER, trace_id));
+        h
+    }
+
     /// Health check.
     pub fn health(&self) -> Result<bool> {
         let (status, _) = http::get(self.addr, "/health")?;
@@ -123,6 +132,20 @@ impl NdifClient {
         &self,
         graph: &InterventionGraph,
     ) -> Result<(GraphResult, Option<OptReport>)> {
+        let (res, report, _) = self.execute_observed(graph)?;
+        Ok((res, report))
+    }
+
+    /// [`NdifClient::execute_detailed`] plus the request's `"timing"`
+    /// metadata: the trace id (minted here, propagated end to end via the
+    /// `x-nnscope-trace` header), per-stage spans stamped by the serving
+    /// replica, and — through a coordinator — routing attempt counts.
+    /// `None` when the server runs without observability.
+    pub fn execute_observed(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
+        let trace_id = crate::obs::mint_trace_id();
         let payload = gserde::to_json(graph).to_string();
         // upstream: the graph + tokens
         self.link.send(payload.len());
@@ -131,7 +154,7 @@ impl NdifClient {
             "POST",
             "/v1/trace",
             payload.as_bytes(),
-            &self.headers(),
+            &self.headers_traced(&trace_id),
         )?;
         if status != 202 {
             return Err(anyhow!(
@@ -145,7 +168,7 @@ impl NdifClient {
             .as_str()
             .ok_or_else(|| anyhow!("submit response missing id"))?
             .to_string();
-        self.fetch_result_detailed(&id)
+        self.fetch_result_observed(&id)
     }
 
     /// Long-poll a result id until completion.
@@ -155,6 +178,16 @@ impl NdifClient {
 
     /// [`NdifClient::fetch_result`] plus the `"opt"` metadata object.
     pub fn fetch_result_detailed(&self, id: &str) -> Result<(GraphResult, Option<OptReport>)> {
+        let (res, report, _) = self.fetch_result_observed(id)?;
+        Ok((res, report))
+    }
+
+    /// [`NdifClient::fetch_result_detailed`] plus the `"timing"` metadata
+    /// object (`None` when the server runs without observability).
+    pub fn fetch_result_observed(
+        &self,
+        id: &str,
+    ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
         let deadline = std::time::Instant::now() + self.poll_timeout;
         loop {
             let remaining = deadline.saturating_duration_since(std::time::Instant::now());
@@ -173,7 +206,11 @@ impl NdifClient {
                     self.link.send(body.len());
                     let j = parse(std::str::from_utf8(&body)?)?;
                     let report = OptReport::from_json(j.get("opt"));
-                    return Ok((gserde::result_from_json(&j)?, report));
+                    let timing = match j.get("timing") {
+                        Json::Null => None,
+                        t => Some(t.clone()),
+                    };
+                    return Ok((gserde::result_from_json(&j)?, report, timing));
                 }
                 202 => continue,
                 500 => {
@@ -212,13 +249,14 @@ impl NdifClient {
             fields.push(("session", crate::json::Json::from(s)));
         }
         let payload = crate::json::Json::obj(fields).to_string();
+        let trace_id = crate::obs::mint_trace_id();
         self.link.send(payload.len());
         let (status, body) = http::http_request(
             self.addr,
             "POST",
             "/v1/session",
             payload.as_bytes(),
-            &self.headers(),
+            &self.headers_traced(&trace_id),
         )?;
         self.link.send(body.len());
         if status != 200 {
@@ -249,13 +287,14 @@ impl NdifClient {
         let mut payload = gserde::to_json(graph);
         payload.set("steps", Json::from(steps));
         let payload = payload.to_string();
+        let trace_id = crate::obs::mint_trace_id();
         self.link.send(payload.len());
         let (status, mut stream) = http::http_request_stream(
             self.addr,
             "POST",
             "/v1/stream",
             payload.as_bytes(),
-            &self.headers(),
+            &self.headers_traced(&trace_id),
             Duration::from_secs(10),
             self.poll_timeout,
         )?;

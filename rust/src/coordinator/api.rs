@@ -137,6 +137,10 @@ struct CoordState {
     /// transport errors (the replica may be alive with the state intact).
     sessions: Mutex<HashMap<String, Pin>>,
     session_pin_ttl: Duration,
+    /// Finished routed-request traces (`GET /v1/debug/requests`): the
+    /// coordinator-side view — trace id, model, attempts, outcome — of
+    /// the last N requests, written once per finished request.
+    ring: crate::obs::TraceRing,
 }
 
 impl CoordState {
@@ -198,6 +202,7 @@ impl Coordinator {
             routing: ThreadPool::new(cfg.routing_workers),
             sessions: Mutex::new(HashMap::new()),
             session_pin_ttl: cfg.session_pin_ttl,
+            ring: crate::obs::TraceRing::new(256),
         });
         let s2 = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| route(&s2, req));
@@ -287,14 +292,21 @@ pub fn register_replica(
         .ok_or_else(|| anyhow!("register response missing id"))
 }
 
-/// Push one heartbeat with a load snapshot; returns the HTTP status
-/// (404 means the coordinator forgot us — re-register).
-pub fn send_heartbeat(coordinator: SocketAddr, id: &str, load: &LoadSnapshot) -> Result<u16> {
+/// Push one heartbeat with a load snapshot and the replica's observed
+/// end-to-end p95 (ms; `0.0` = nothing observed yet); returns the HTTP
+/// status (404 means the coordinator forgot us — re-register).
+pub fn send_heartbeat(
+    coordinator: SocketAddr,
+    id: &str,
+    load: &LoadSnapshot,
+    p95_ms: f64,
+) -> Result<u16> {
     let payload = Json::obj(vec![
         ("id", Json::from(id)),
         ("queue_depth", Json::from(load.queue_depth)),
         ("completed", Json::from(load.completed as i64)),
         ("failed", Json::from(load.failed as i64)),
+        ("p95_ms", Json::from(p95_ms)),
     ])
     .to_string();
     let (status, _) = http::http_request_timeout(
@@ -336,7 +348,8 @@ fn monitor_loop(core: &Arc<RoutingCore>, stop: &Arc<AtomicBool>, interval: Durat
             match http::get_timeout(rep.addr, "/v1/metrics", core.io_timeout) {
                 Ok((200, body)) => {
                     let (queue_depth, completed, failed) = parse_metrics(&body);
-                    core.registry.heartbeat(&rep.id, queue_depth, completed, failed);
+                    let p95_ms = parse_metrics_p95_ms(&body);
+                    core.registry.heartbeat(&rep.id, queue_depth, completed, failed, p95_ms);
                     if rep.models.is_empty() {
                         if let Ok(models) = probe_models(rep.addr, core.io_timeout) {
                             core.registry.set_models(&rep.id, models);
@@ -350,6 +363,8 @@ fn monitor_loop(core: &Arc<RoutingCore>, stop: &Arc<AtomicBool>, interval: Durat
 }
 
 /// Sum the per-model counters of a replica `/v1/metrics` payload.
+/// (Underscore-prefixed process-wide keys carry no counters, so they
+/// contribute zero and need no special casing.)
 fn parse_metrics(body: &[u8]) -> (usize, u64, u64) {
     let Ok(s) = std::str::from_utf8(body) else { return (0, 0, 0) };
     let Ok(j) = parse(s) else { return (0, 0, 0) };
@@ -362,6 +377,30 @@ fn parse_metrics(body: &[u8]) -> (usize, u64, u64) {
         }
     }
     (queue_depth, completed, failed)
+}
+
+/// Merge the per-model e2e latency histograms of a replica `/v1/metrics`
+/// payload and return the merged p95 in milliseconds (`0.0` when the
+/// replica exposes no latency data — observability off or no traffic).
+fn parse_metrics_p95_ms(body: &[u8]) -> f64 {
+    let Ok(s) = std::str::from_utf8(body) else { return 0.0 };
+    let Ok(j) = parse(s) else { return 0.0 };
+    let mut merged = crate::obs::HistSnapshot::default();
+    if let Some(models) = j.as_object() {
+        for (name, m) in models {
+            if name.starts_with('_') {
+                continue;
+            }
+            if let Some(h) = crate::obs::HistSnapshot::from_json(m.get("latency").get("e2e")) {
+                merged.merge(&h);
+            }
+        }
+    }
+    if merged.count == 0 {
+        0.0
+    } else {
+        merged.percentile(0.95) * 1e3
+    }
 }
 
 fn probe_models(addr: SocketAddr, timeout: Duration) -> Result<Vec<String>> {
@@ -389,6 +428,8 @@ fn route(state: &Arc<CoordState>, req: Request) -> Response {
         ("POST", "/v1/fleet/register") => register_endpoint(state, &req),
         ("POST", "/v1/fleet/deregister") => deregister_endpoint(state, &req),
         ("POST", "/v1/fleet/heartbeat") => heartbeat_endpoint(state, &req),
+        ("GET", "/v1/fleet/metrics") => fleet_metrics_endpoint(state),
+        ("GET", "/v1/debug/requests") => debug_requests_endpoint(state),
         ("GET", "/v1/models") => models_endpoint(state),
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
         ("POST", "/v1/session") => session_endpoint(state, &req),
@@ -462,7 +503,8 @@ fn heartbeat_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
     let queue_depth = j.get("queue_depth").as_usize().unwrap_or(0);
     let completed = j.get("completed").as_i64().unwrap_or(0).max(0) as u64;
     let failed = j.get("failed").as_i64().unwrap_or(0).max(0) as u64;
-    if state.core.registry.heartbeat(id, queue_depth, completed, failed) {
+    let p95_ms = j.get("p95_ms").as_f64().unwrap_or(0.0);
+    if state.core.registry.heartbeat(id, queue_depth, completed, failed, p95_ms) {
         Response::json(200, "{\"ok\":true}".into())
     } else {
         Response::json(404, "{\"error\":\"unknown replica id\"}".into())
@@ -491,6 +533,7 @@ fn status_endpoint(state: &Arc<CoordState>) -> Response {
                 ("routed", Json::from(r.routed as i64)),
                 ("consecutive_failures", Json::from(r.consecutive_failures as i64)),
                 ("latency_s", Json::from(r.latency_s)),
+                ("p95_ms", Json::from(r.p95_ms)),
                 (
                     "heartbeat_age_ms",
                     Json::from(r.last_heartbeat.elapsed().as_millis() as i64),
@@ -505,6 +548,111 @@ fn status_endpoint(state: &Arc<CoordState>) -> Response {
             ("replicas", Json::Array(replicas)),
         ])
         .to_string(),
+    )
+}
+
+/// `GET /v1/fleet/metrics`: fleet-wide latency percentiles by per-bucket
+/// histogram merging.
+///
+/// The coordinator fans out to every non-dead replica's `/v1/metrics`,
+/// sums the flat counters, and **merges the latency histograms bucket by
+/// bucket** (legal because bucket boundaries are compile-time constants
+/// fleet-wide, [`crate::obs::hist`]). Percentiles are then computed from
+/// the merged counts with the same [`crate::obs::percentile_from_counts`]
+/// every replica uses, so a fleet p95 is bit-identical to the p95 of the
+/// concatenated per-replica observations — unlike the ad-hoc averaging of
+/// per-replica percentiles (which is statistically meaningless).
+///
+/// Response shape per model: the summed counters plus a `"latency"`
+/// object of merged histogram snapshots (e2e/queue_wait/exec/ttft); a
+/// `"_fleet"` key carries the replica count consulted.
+fn fleet_metrics_endpoint(state: &Arc<CoordState>) -> Response {
+    const KINDS: [&str; 4] = ["e2e", "queue_wait", "exec", "ttft"];
+    struct ModelAgg {
+        enqueued: i64,
+        completed: i64,
+        failed: i64,
+        merged_batches: i64,
+        queue_depth: i64,
+        latency: Vec<crate::obs::HistSnapshot>,
+    }
+    let mut agg: BTreeMap<String, ModelAgg> = BTreeMap::new();
+    let mut consulted = 0usize;
+    for rep in state.core.registry.snapshot() {
+        if rep.health == Health::Dead {
+            continue;
+        }
+        let Ok((200, body)) = http::get_timeout(rep.addr, "/v1/metrics", state.core.io_timeout)
+        else {
+            continue;
+        };
+        let Ok(s) = std::str::from_utf8(&body) else { continue };
+        let Ok(j) = parse(s) else { continue };
+        let Some(models) = j.as_object() else { continue };
+        consulted += 1;
+        for (name, m) in models {
+            if name.starts_with('_') {
+                continue;
+            }
+            let e = agg.entry(name.clone()).or_insert_with(|| ModelAgg {
+                enqueued: 0,
+                completed: 0,
+                failed: 0,
+                merged_batches: 0,
+                queue_depth: 0,
+                latency: vec![crate::obs::HistSnapshot::default(); KINDS.len()],
+            });
+            e.enqueued += m.get("enqueued").as_i64().unwrap_or(0);
+            e.completed += m.get("completed").as_i64().unwrap_or(0);
+            e.failed += m.get("failed").as_i64().unwrap_or(0);
+            e.merged_batches += m.get("merged_batches").as_i64().unwrap_or(0);
+            e.queue_depth += m.get("queue_depth").as_i64().unwrap_or(0);
+            for (slot, kind) in e.latency.iter_mut().zip(KINDS.iter()) {
+                if let Some(h) = crate::obs::HistSnapshot::from_json(m.get("latency").get(kind)) {
+                    slot.merge(&h);
+                }
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (name, a) in agg {
+        out.insert(
+            name,
+            Json::obj(vec![
+                ("enqueued", Json::from(a.enqueued)),
+                ("completed", Json::from(a.completed)),
+                ("failed", Json::from(a.failed)),
+                ("merged_batches", Json::from(a.merged_batches)),
+                ("queue_depth", Json::from(a.queue_depth)),
+                (
+                    "latency",
+                    Json::obj(
+                        KINDS
+                            .iter()
+                            .zip(a.latency.iter())
+                            .map(|(&k, h)| (k, h.to_json()))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        );
+    }
+    out.insert(
+        "_fleet".to_string(),
+        Json::obj(vec![
+            ("replicas", Json::from(consulted as i64)),
+            ("policy", Json::from(state.core.router.policy.as_str())),
+        ]),
+    );
+    Response::json(200, Json::Object(out).to_string())
+}
+
+/// `GET /v1/debug/requests`: the coordinator's bounded ring of recently
+/// routed requests (trace id, model, attempts, outcome), oldest first.
+fn debug_requests_endpoint(state: &Arc<CoordState>) -> Response {
+    Response::json(
+        200,
+        Json::obj(vec![("requests", Json::Array(state.ring.snapshot()))]).to_string(),
     )
 }
 
@@ -565,18 +713,59 @@ fn trace_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
         Err(e) => return Response::bad_request(&e.to_string()),
     };
     let auth = req.header("x-ndif-auth").map(String::from);
+    // the trace id rides the whole routing pipeline: reuse the client's
+    // (header) or mint here, send the SAME id to every replica attempt —
+    // a failover retry is a new attempt of one request, not a new request
+    let tid = req
+        .header(crate::obs::TRACE_HEADER)
+        .map(str::to_string)
+        .unwrap_or_else(crate::obs::mint_trace_id);
     // bounded routing pool: jobs capture the core + store (never the pool
     // itself), so the queue gives backpressure without thread growth
     let core = Arc::clone(&state.core);
     let store = Arc::clone(&state.store);
+    let st = Arc::clone(state);
     let rid = id.clone();
     state.routing.execute(move || {
-        match route_and_execute(&core, &model, &payload, auth.as_deref()) {
-            Ok(json) => store.put_ready(&rid, json),
+        let t0 = Instant::now();
+        let (res, attempts) = route_and_execute(&core, &model, &payload, auth.as_deref(), &tid);
+        let total_us = t0.elapsed().as_micros() as i64;
+        let ok = res.is_ok();
+        match res {
+            Ok(json) => {
+                store.put_ready(&rid, annotate_timing(json, &tid, attempts, total_us));
+            }
             Err(e) => store.put_failed(&rid, &e),
         }
+        st.ring.push(Json::obj(vec![
+            ("trace", Json::from(tid.as_str())),
+            ("endpoint", Json::from("trace")),
+            ("model", Json::from(model.as_str())),
+            ("attempts", Json::from(attempts as i64)),
+            ("total_us", Json::from(total_us)),
+            ("ok", Json::Bool(ok)),
+        ]));
     });
     Response::json(202, Json::obj(vec![("id", Json::from(id))]).to_string())
+}
+
+/// Stamp coordinator-side routing facts into a routed result's `"timing"`
+/// metadata: the trace id (for results produced by an un-instrumented
+/// replica), how many replica attempts the request took, and the
+/// coordinator-observed total. Non-object bodies pass through untouched.
+fn annotate_timing(body: String, tid: &str, attempts: usize, total_us: i64) -> String {
+    let Ok(mut j) = parse(&body) else { return body };
+    if j.as_object().is_none() {
+        return body;
+    }
+    let mut timing = match j.get("timing") {
+        Json::Object(o) => Json::Object(o.clone()),
+        _ => Json::obj(vec![("trace", Json::from(tid))]),
+    };
+    timing.set("attempts", Json::from(attempts as i64));
+    timing.set("coordinator_us", Json::from(total_us));
+    j.set("timing", timing);
+    j.to_string()
 }
 
 /// Outcome of one proxied attempt that *reached* a replica.
@@ -589,30 +778,41 @@ enum Routed {
     Reject(u16, String),
 }
 
+/// Route one trace, failing over across replicas. Returns the outcome
+/// plus how many replica attempts were made — every attempt carries the
+/// SAME trace id in the `x-nnscope-trace` header, so the surviving
+/// replica's `"timing"` metadata names the id the client started with.
 fn route_and_execute(
     core: &RoutingCore,
     model: &str,
     payload: &str,
     auth: Option<&str>,
-) -> Result<String, String> {
+    trace_id: &str,
+) -> (Result<String, String>, usize) {
     let mut tried: Vec<String> = Vec::new();
     let mut last_err = String::from("no candidate replicas");
     for attempt in 0..=core.max_retries {
         let candidates = core.registry.candidates(model);
         let Some(rep) = core.router.pick(&candidates, &tried) else {
-            return Err(format!(
-                "no live replica for model '{model}' after {attempt} attempt(s): {last_err}"
-            ));
+            return (
+                Err(format!(
+                    "no live replica for model '{model}' after {attempt} attempt(s): {last_err}"
+                )),
+                attempt,
+            );
         };
         core.registry.record_dispatch(&rep.id);
-        match proxy_trace(core, &rep, payload, auth) {
+        match proxy_trace(core, &rep, payload, auth, trace_id) {
             Ok(Routed::Done(body)) => {
                 core.registry.record_success(&rep.id);
-                return Ok(body);
+                return (Ok(body), attempt + 1);
             }
             Ok(Routed::Reject(status, body)) => {
                 core.registry.record_success(&rep.id);
-                return Err(format!("replica {} rejected request ({status}): {body}", rep.id));
+                return (
+                    Err(format!("replica {} rejected request ({status}): {body}", rep.id)),
+                    attempt + 1,
+                );
             }
             Err(e) => {
                 core.registry.record_failure(&rep.id);
@@ -621,10 +821,13 @@ fn route_and_execute(
             }
         }
     }
-    Err(format!(
-        "request failed after {} attempt(s): {last_err}",
-        core.max_retries + 1
-    ))
+    (
+        Err(format!(
+            "request failed after {} attempt(s): {last_err}",
+            core.max_retries + 1
+        )),
+        core.max_retries + 1,
+    )
 }
 
 /// One attempt: submit the trace to `rep` and long-poll its result, every
@@ -640,8 +843,12 @@ fn proxy_trace(
     rep: &Replica,
     payload: &str,
     auth: Option<&str>,
+    trace_id: &str,
 ) -> Result<Routed, String> {
-    let mut headers = vec![("Content-Type", "application/json")];
+    let mut headers = vec![
+        ("Content-Type", "application/json"),
+        (crate::obs::TRACE_HEADER, trace_id),
+    ];
     if let Some(t) = auth {
         headers.push(("x-ndif-auth", t));
     }
@@ -717,7 +924,14 @@ fn stream_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
         Ok(s) => s.to_string(),
         Err(e) => return Response::bad_request(&e.to_string()),
     };
-    let mut headers = vec![("Content-Type", "application/json")];
+    let tid = req
+        .header(crate::obs::TRACE_HEADER)
+        .map(str::to_string)
+        .unwrap_or_else(crate::obs::mint_trace_id);
+    let mut headers = vec![
+        ("Content-Type", "application/json"),
+        (crate::obs::TRACE_HEADER, tid.as_str()),
+    ];
     let auth = req.header("x-ndif-auth").map(String::from);
     if let Some(t) = &auth {
         headers.push(("x-ndif-auth", t.as_str()));
@@ -860,7 +1074,14 @@ fn session_endpoint(state: &Arc<CoordState>, req: &Request) -> Response {
         Ok(s) => s.to_string(),
         Err(e) => return Response::bad_request(&e.to_string()),
     };
-    let mut headers = vec![("Content-Type", "application/json")];
+    let tid = req
+        .header(crate::obs::TRACE_HEADER)
+        .map(str::to_string)
+        .unwrap_or_else(crate::obs::mint_trace_id);
+    let mut headers = vec![
+        ("Content-Type", "application/json"),
+        (crate::obs::TRACE_HEADER, tid.as_str()),
+    ];
     let auth = req.header("x-ndif-auth").map(String::from);
     if let Some(t) = &auth {
         headers.push(("x-ndif-auth", t.as_str()));

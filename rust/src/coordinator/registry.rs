@@ -63,6 +63,11 @@ pub struct Replica {
     /// One-way link latency (seconds) the replica advertises — its
     /// [`crate::netsim::NetSim`] profile — used by latency-aware routing.
     pub latency_s: f64,
+    /// Observed end-to-end p95 latency (ms) from the replica's merged
+    /// request histograms, carried on heartbeats/probes; `0.0` until the
+    /// replica has served traffic. Routers use it as a tie-break so two
+    /// equally-queued replicas split by who actually answers faster.
+    pub p95_ms: f64,
 }
 
 impl Replica {
@@ -163,6 +168,7 @@ impl Registry {
             routed: 0,
             consecutive_failures: 0,
             latency_s,
+            p95_ms: 0.0,
         });
         rep.addr = addr;
         if !models.is_empty() {
@@ -180,15 +186,28 @@ impl Registry {
         self.replicas.lock().unwrap().remove(id).is_some()
     }
 
-    /// Record a heartbeat with the replica's load snapshot. Returns false
-    /// on unknown id (the replica should re-register).
-    pub fn heartbeat(&self, id: &str, queue_depth: usize, completed: u64, failed: u64) -> bool {
+    /// Record a heartbeat with the replica's load snapshot and observed
+    /// p95 latency (ms; pass `0.0` when the replica reports none).
+    /// Returns false on unknown id (the replica should re-register).
+    pub fn heartbeat(
+        &self,
+        id: &str,
+        queue_depth: usize,
+        completed: u64,
+        failed: u64,
+        p95_ms: f64,
+    ) -> bool {
         let mut g = self.replicas.lock().unwrap();
         match g.get_mut(id) {
             Some(rep) => {
                 rep.queue_depth = queue_depth;
                 rep.completed = completed;
                 rep.failed = failed;
+                // 0.0 means "no latency observed yet" — keep the last
+                // real observation rather than zeroing the tie-break
+                if p95_ms.is_finite() && p95_ms > 0.0 {
+                    rep.p95_ms = p95_ms;
+                }
                 rep.consecutive_failures = 0;
                 rep.last_heartbeat = Instant::now();
                 rep.health = Health::Alive;
@@ -313,12 +332,16 @@ mod tests {
         let reg = Registry::new(fast_policy());
         let id = reg.register(addr(7001), vec!["m".into()], 0.0, None);
         assert_eq!(reg.len(), 1);
-        assert!(reg.heartbeat(&id, 3, 10, 1));
-        assert!(!reg.heartbeat("rep-999", 0, 0, 0));
+        assert!(reg.heartbeat(&id, 3, 10, 1, 12.5));
+        assert!(!reg.heartbeat("rep-999", 0, 0, 0, 0.0));
         let c = reg.candidates("m");
         assert_eq!(c.len(), 1);
         assert_eq!(c[0].queue_depth, 3);
         assert_eq!(c[0].completed, 10);
+        assert!((c[0].p95_ms - 12.5).abs() < 1e-12);
+        // a heartbeat without latency data keeps the last observation
+        assert!(reg.heartbeat(&id, 3, 10, 1, 0.0));
+        assert!((reg.candidates("m")[0].p95_ms - 12.5).abs() < 1e-12);
         assert_eq!(c[0].health, Health::Alive);
         assert!(reg.candidates("other").is_empty());
         assert!(reg.models().contains("m"));
@@ -349,7 +372,7 @@ mod tests {
         let reg = Registry::new(fast_policy());
         let id = reg.register(addr(7010), vec!["m".into()], 0.0, Some("rep-7"));
         assert_eq!(id, "rep-7");
-        assert!(reg.heartbeat("rep-7", 0, 0, 0), "heartbeats resolve after reclaim");
+        assert!(reg.heartbeat("rep-7", 0, 0, 0, 0.0), "heartbeats resolve after reclaim");
         // the mint counter moved past the reclaimed id: no collision
         let fresh = reg.register(addr(7011), vec!["m".into()], 0.0, None);
         assert_ne!(fresh, "rep-7");
@@ -374,7 +397,7 @@ mod tests {
         assert_eq!(reg.snapshot()[0].health, Health::Dead);
         assert!(reg.candidates("m").is_empty(), "dead is not routable");
         // a fresh heartbeat revives it
-        assert!(reg.heartbeat(&id, 0, 0, 0));
+        assert!(reg.heartbeat(&id, 0, 0, 0, 0.0));
         assert_eq!(reg.snapshot()[0].health, Health::Alive);
     }
 

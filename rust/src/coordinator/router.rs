@@ -28,6 +28,16 @@ fn best_health(pool: &[&Replica]) -> Option<Health> {
     pool.iter().map(|r| r.health).min()
 }
 
+/// Total order over non-negative metric values (NaN sorts last so a
+/// corrupt observation never wins a pick).
+fn cmp_f64(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap_or_else(|| match (a.is_nan(), b.is_nan()) {
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        _ => std::cmp::Ordering::Equal,
+    })
+}
+
 /// Routing policy selector (CLI: `--policy <name>`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -80,19 +90,28 @@ impl Router {
         let pool: Vec<&Replica> = pool.into_iter().filter(|r| r.health == best).collect();
         let chosen = match self.policy {
             Policy::RoundRobin => pool[self.rr.fetch_add(1, Ordering::Relaxed) % pool.len()],
+            // load first; ties split by the heartbeat-observed e2e p95 so
+            // equally-queued replicas prefer the one actually answering
+            // faster (a replica with no observation yet reports 0 and
+            // stays first pick, as before this field existed)
             Policy::LeastLoaded => pool
                 .iter()
                 .copied()
-                .min_by_key(|r| (r.load(), r.routed))
+                .min_by(|a, b| {
+                    a.load()
+                        .cmp(&b.load())
+                        .then_with(|| cmp_f64(a.p95_ms, b.p95_ms))
+                        .then_with(|| a.routed.cmp(&b.routed))
+                        .then_with(|| a.id.cmp(&b.id))
+                })
                 .expect("non-empty pool"),
             Policy::LatencyAware => pool
                 .iter()
                 .copied()
                 .min_by(|a, b| {
-                    a.latency_s
-                        .partial_cmp(&b.latency_s)
-                        .unwrap_or(std::cmp::Ordering::Equal)
+                    cmp_f64(a.latency_s, b.latency_s)
                         .then_with(|| a.load().cmp(&b.load()))
+                        .then_with(|| cmp_f64(a.p95_ms, b.p95_ms))
                         .then_with(|| a.id.cmp(&b.id))
                 })
                 .expect("non-empty pool"),
@@ -120,6 +139,7 @@ mod tests {
             routed: 0,
             consecutive_failures: 0,
             latency_s,
+            p95_ms: 0.0,
         }
     }
 
@@ -143,6 +163,20 @@ mod tests {
             replica("c", Health::Alive, 3, 0.0),
         ];
         assert_eq!(r.pick(&pool, &[]).unwrap().id, "b");
+    }
+
+    #[test]
+    fn least_loaded_ties_break_on_observed_p95() {
+        let r = Router::new(Policy::LeastLoaded);
+        let mut slow = replica("slow", Health::Alive, 2, 0.0);
+        slow.p95_ms = 80.0;
+        let mut fast = replica("fast", Health::Alive, 2, 0.0);
+        fast.p95_ms = 8.0;
+        // equal load: the replica with the better observed p95 wins
+        assert_eq!(r.pick(&[slow.clone(), fast.clone()], &[]).unwrap().id, "fast");
+        // load still dominates: a shorter queue beats a better p95
+        slow.queue_depth = 1;
+        assert_eq!(r.pick(&[slow, fast], &[]).unwrap().id, "slow");
     }
 
     #[test]

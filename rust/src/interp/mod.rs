@@ -653,10 +653,18 @@ pub fn execute_view_raw(
     let tokens = Tensor::new(&[graph.batch, seq], graph.tokens.clone());
     let (padded, _) = runner.pad_tokens(&tokens)?;
 
+    // phase timing is armed by the scheduler worker when the request is
+    // observed; the clock reads are skipped entirely otherwise, so the
+    // hooked computation is not perturbed (FlexModel's constraint)
+    let timed = crate::obs::phases::armed();
+    let tf = timed.then(std::time::Instant::now);
     if graph.shards > 1 {
         runner.forward_sharded(&padded, graph.shards, &mut ex)?;
     } else {
         runner.forward(&padded, &mut ex)?;
+    }
+    if let Some(t) = tf {
+        crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
     }
     if let Some(e) = ex.error.take() {
         return Err(e);
@@ -675,7 +683,11 @@ pub fn execute_view_raw(
             data.resize(padded.dims()[0], 0.0);
             t = Tensor::new(&[data.len()], data);
         }
+        let tb = timed.then(std::time::Instant::now);
         let (_, grads) = runner.backward(&padded, &t, &grad_points)?;
+        if let Some(t0) = tb {
+            crate::obs::phases::record("backward", t0.elapsed().as_nanos() as u64);
+        }
         ex.run_post(&grads)?;
     }
 
@@ -772,10 +784,15 @@ pub fn execute_stream_raw(
     let vocab = runner.manifest.vocab;
     let mut ctx = Tensor::new(&[1, seq], graph.tokens.clone());
     let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
+    let timed = crate::obs::phases::armed();
     for step in 0..steps {
         let mut ex = Executor::prevalidated(graph, &fseq, StateView::new())?;
         ex.run_pre()?;
+        let tf = timed.then(std::time::Instant::now);
         let logits = runner.forward(&ctx, &mut ex)?;
+        if let Some(t) = tf {
+            crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+        }
         if let Some(e) = ex.error.take() {
             return Err(e);
         }

@@ -31,6 +31,10 @@
 //! * the paper's **baselines**: hook-based intervention mechanisms
 //!   (baukit/pyvene/TransformerLens-like) and a Petals-like distributed
 //!   swarm with client-side interventions ([`baselines`]);
+//! * **fleet-wide observability** ([`obs`]): mergeable log-bucketed
+//!   latency histograms (fleet percentiles from summed buckets), request
+//!   tracing via the `x-nnscope-trace` header with per-stage spans, and
+//!   JSON/Prometheus metrics exposition;
 //! * the supporting substrates that are unavailable offline and that the
 //!   paper's service depends on: JSON ([`json`]), an HTTP/1.1 server and
 //!   client ([`server::http`]), a thread pool ([`threadpool`]), a simulated
@@ -49,6 +53,7 @@ pub mod json;
 pub mod tensor;
 pub mod threadpool;
 pub mod netsim;
+pub mod obs;
 pub mod graph;
 pub mod interp;
 pub mod client;

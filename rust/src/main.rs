@@ -33,6 +33,8 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
               [--heartbeat-ms 250] [--link-latency 0.0]
               [--stream-buffer 32] [--stream-send-timeout-s 10]
               [--no-opt]   (disable the admission graph compiler)
+              [--no-obs]   (disable latency histograms + request tracing)
+              [--trace-ring 256]   (GET /v1/debug/requests retention)
   coordinate  [--addr 127.0.0.1:7788] [--replicas host:port[@latency_s],..]
               [--policy round-robin|least-loaded|latency-aware]
               [--probe-ms 250] [--retries 3] [--workers 8]
@@ -82,6 +84,9 @@ fn serve(args: &Args) -> Result<()> {
         if args.flag("no-opt") {
             cfg.optimize = false;
         }
+        if args.flag("no-obs") {
+            cfg.obs = false;
+        }
         println!("preloading {:?} (from {path}) …", cfg.models);
         let server = NdifServer::start(cfg)?;
         announce_serving(&server);
@@ -118,6 +123,8 @@ fn serve(args: &Args) -> Result<()> {
             args.u64_or("stream-send-timeout-s", 10).max(1),
         ),
         optimize: !args.flag("no-opt"),
+        obs: !args.flag("no-obs"),
+        trace_ring: args.usize_or("trace-ring", 256),
     };
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;

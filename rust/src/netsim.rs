@@ -14,6 +14,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::util::Prng;
+
 /// How the simulated link manifests its cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -118,6 +120,62 @@ impl NetSim {
     }
 }
 
+/// Open-loop arrival process: how long until the *next* request starts,
+/// independent of when earlier requests finish. Closed-loop drivers (N
+/// users issuing back-to-back requests) self-throttle when the server
+/// slows down and therefore understate tail latency; an open-loop
+/// generator keeps arriving on schedule, which is what exposes queue-wait
+/// percentiles under overload (the Fig. 9 regime).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrivals {
+    /// Deterministic gaps of exactly `1/rate` seconds (a metronome).
+    Uniform { rate: f64 },
+    /// Poisson process — exponential gaps with mean `1/rate`.
+    Poisson { rate: f64 },
+    /// Heavy-tailed lognormal gaps with mean `1/rate` and log-σ `sigma`
+    /// (`sigma ≈ 1.5` gives the burst-then-lull clustering of real
+    /// inference traffic). `mu` is solved from `E[X] = exp(mu + σ²/2)`.
+    Lognormal { rate: f64, sigma: f64 },
+}
+
+impl Arrivals {
+    /// Parse a CLI spelling: `uniform` | `poisson` | `lognormal`.
+    /// `sigma` only applies to `lognormal`.
+    pub fn parse(kind: &str, rate: f64, sigma: f64) -> Option<Arrivals> {
+        if !(rate > 0.0) {
+            return None;
+        }
+        match kind {
+            "uniform" => Some(Arrivals::Uniform { rate }),
+            "poisson" | "exp" | "exponential" => Some(Arrivals::Poisson { rate }),
+            "lognormal" | "heavy" => Some(Arrivals::Lognormal { rate, sigma }),
+            _ => None,
+        }
+    }
+
+    /// Mean inter-arrival gap in seconds (`1/rate` for every variant).
+    pub fn mean_gap(&self) -> f64 {
+        match *self {
+            Arrivals::Uniform { rate }
+            | Arrivals::Poisson { rate }
+            | Arrivals::Lognormal { rate, .. } => 1.0 / rate,
+        }
+    }
+
+    /// Sample the gap before the next arrival, in seconds.
+    pub fn next_gap(&self, rng: &mut Prng) -> f64 {
+        match *self {
+            Arrivals::Uniform { rate } => 1.0 / rate,
+            Arrivals::Poisson { rate } => rng.exponential(rate),
+            Arrivals::Lognormal { rate, sigma } => {
+                // choose mu so the mean gap stays 1/rate regardless of sigma
+                let mu = (1.0 / rate).ln() - sigma * sigma / 2.0;
+                rng.lognormal(mu, sigma)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +222,48 @@ mod tests {
         let l = NetSim::new(0.001, 1000.0, Mode::Account);
         let t = l.round_trip(1000, 2000);
         assert!((t - (0.001 + 1.0 + 0.001 + 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrivals_parse_and_mean_gap() {
+        let a = Arrivals::parse("poisson", 50.0, 1.5).unwrap();
+        assert_eq!(a, Arrivals::Poisson { rate: 50.0 });
+        assert!((a.mean_gap() - 0.02).abs() < 1e-12);
+        assert!(Arrivals::parse("lognormal", 10.0, 1.5).is_some());
+        assert!(Arrivals::parse("uniform", 10.0, 0.0).is_some());
+        assert!(Arrivals::parse("bogus", 10.0, 0.0).is_none());
+        assert!(Arrivals::parse("poisson", 0.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn arrivals_preserve_mean_rate() {
+        let mut rng = Prng::new(31);
+        for a in [
+            Arrivals::Uniform { rate: 20.0 },
+            Arrivals::Poisson { rate: 20.0 },
+            Arrivals::Lognormal { rate: 20.0, sigma: 1.5 },
+        ] {
+            let n = 200_000;
+            let mean: f64 = (0..n).map(|_| a.next_gap(&mut rng)).sum::<f64>() / n as f64;
+            // every process is calibrated to the same 1/rate mean gap;
+            // the lognormal tail converges slowly, hence the loose band
+            assert!(
+                (mean - 0.05).abs() < 0.01,
+                "{a:?} mean gap {mean} (want 0.05)"
+            );
+        }
+    }
+
+    #[test]
+    fn lognormal_arrivals_are_heavier_tailed_than_poisson() {
+        let mut rng = Prng::new(37);
+        let n = 50_000;
+        let max_of = |a: Arrivals, rng: &mut Prng| -> f64 {
+            (0..n).map(|_| a.next_gap(rng)).fold(0.0, f64::max)
+        };
+        let pois = max_of(Arrivals::Poisson { rate: 10.0 }, &mut rng);
+        let logn = max_of(Arrivals::Lognormal { rate: 10.0, sigma: 1.5 }, &mut rng);
+        assert!(logn > pois, "lognormal max {logn} <= poisson max {pois}");
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Fixed log-bucketed latency histograms.
+//!
+//! Bucket boundaries are static: bucket 0 holds everything under
+//! [`LO`] (1 µs), buckets `1..=62` are log-spaced between [`LO`] and
+//! [`HI`] (100 s) with a constant growth factor, and bucket 63 is the
+//! overflow for anything at or above [`HI`]. Because every histogram in
+//! the fleet shares these boundaries, merging is per-bucket `u64`
+//! addition — and a percentile computed from merged counts is
+//! *bit-identical* to one computed from the concatenation of the
+//! per-replica bucket arrays, since both reduce to
+//! [`percentile_from_counts`] over the same summed counts.
+//!
+//! Recording is a pair of relaxed atomic adds; there is no lock and no
+//! allocation on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::json::Json;
+
+/// Number of buckets (including the under- and overflow buckets).
+pub const BUCKETS: usize = 64;
+/// Lower edge of the log range, seconds (everything below lands in
+/// bucket 0).
+pub const LO: f64 = 1e-6;
+/// Upper edge of the log range, seconds (everything at or above lands
+/// in the overflow bucket).
+pub const HI: f64 = 1e2;
+/// Log-spaced buckets strictly inside `[LO, HI)`.
+const LOG_BUCKETS: usize = BUCKETS - 2;
+
+/// `ln` of the per-bucket growth factor: `(HI/LO)^(1/62)`.
+fn ln_growth() -> f64 {
+    (HI / LO).ln() / LOG_BUCKETS as f64
+}
+
+/// Bucket index for a latency of `v` seconds.
+pub fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v < LO {
+        // negative, NaN, or sub-LO: the underflow bucket
+        return 0;
+    }
+    if v >= HI {
+        return BUCKETS - 1;
+    }
+    let idx = 1 + ((v / LO).ln() / ln_growth()).floor() as usize;
+    idx.min(BUCKETS - 2)
+}
+
+/// Lower edge of bucket `i` for `i` in `1..BUCKETS`. Every caller goes
+/// through this one expression, so adjacent buckets share the exact same
+/// `f64` edge value (no one-ULP seams between `upper(i)` and
+/// `lower(i+1)`).
+fn edge(i: usize) -> f64 {
+    (LO.ln() + ln_growth() * (i - 1) as f64).exp()
+}
+
+/// `[lower, upper)` bounds of bucket `i`, seconds (`upper` of the
+/// overflow bucket is `f64::INFINITY`).
+pub fn bucket_bounds(i: usize) -> (f64, f64) {
+    assert!(i < BUCKETS);
+    if i == 0 {
+        return (0.0, edge(1));
+    }
+    if i == BUCKETS - 1 {
+        return (edge(BUCKETS - 1), f64::INFINITY);
+    }
+    (edge(i), edge(i + 1))
+}
+
+/// Deterministic representative latency for bucket `i`: the geometric
+/// midpoint of its bounds (half of `LO` for the underflow bucket, `HI`
+/// for the overflow bucket). Percentile queries return these values, so
+/// two parties that agree on bucket counts agree on percentiles to the
+/// last bit.
+pub fn bucket_mid(i: usize) -> f64 {
+    assert!(i < BUCKETS);
+    if i == 0 {
+        return LO * 0.5;
+    }
+    if i == BUCKETS - 1 {
+        return HI;
+    }
+    let (lo, hi) = bucket_bounds(i);
+    (lo * hi).sqrt()
+}
+
+/// Percentile (`q` in `[0, 1]`) over a bucket-count array using the
+/// nearest-rank rule: the representative of the first bucket whose
+/// cumulative count reaches `ceil(q · total)`. Returns `0.0` for an
+/// empty histogram. This is the **single** percentile definition used by
+/// replicas, the coordinator's fleet merge, and the integration tests —
+/// determinism of this one pure function over summed counts is what
+/// makes fleet percentiles bit-identical to concatenated-array
+/// percentiles.
+pub fn percentile_from_counts(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return bucket_mid(i);
+        }
+    }
+    bucket_mid(BUCKETS - 1)
+}
+
+/// A lock-free latency histogram with static log buckets.
+#[derive(Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record a latency in seconds (two relaxed atomic adds plus the
+    /// bucket add).
+    pub fn record(&self, seconds: f64) {
+        self.counts[bucket_of(seconds)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        let nanos = if seconds.is_finite() && seconds > 0.0 {
+            (seconds * 1e9) as u64
+        } else {
+            0
+        };
+        self.sum_nanos.fetch_add(nanos, Relaxed);
+    }
+
+    /// Record an elapsed [`std::time::Duration`].
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    /// Point-in-time copy of the counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Relaxed)),
+            count: self.count.load(Relaxed),
+            sum_nanos: self.sum_nanos.load(Relaxed),
+        }
+    }
+
+    /// Total recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+}
+
+/// An owned, mergeable copy of a histogram's counts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_nanos: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { counts: [0; BUCKETS], count: 0, sum_nanos: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold another snapshot in (per-bucket addition — valid because
+    /// bucket boundaries are static fleet-wide).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_nanos += other.sum_nanos;
+    }
+
+    /// Percentile of the recorded latencies, seconds.
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_from_counts(&self.counts, q)
+    }
+
+    /// Mean latency, seconds (`0.0` when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / 1e9 / self.count as f64
+        }
+    }
+
+    /// Wire form: `{"buckets": [u64; 64], "count": n, "sum_ns": n}`.
+    /// Counts are integers, so the JSON round-trip is exact and a
+    /// receiver can merge and re-derive percentiles bit-identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "buckets",
+                Json::arr(self.counts.iter().map(|&c| Json::from(c as i64)).collect()),
+            ),
+            ("count", Json::from(self.count as i64)),
+            ("sum_ns", Json::from(self.sum_nanos as i64)),
+            ("p50", Json::from(self.percentile(0.50))),
+            ("p95", Json::from(self.percentile(0.95))),
+            ("p99", Json::from(self.percentile(0.99))),
+            ("mean_s", Json::from(self.mean_s())),
+        ])
+    }
+
+    /// Parse the wire form; `None` when the shape is wrong.
+    pub fn from_json(j: &Json) -> Option<HistSnapshot> {
+        let arr = j.get("buckets").as_array()?;
+        if arr.len() != BUCKETS {
+            return None;
+        }
+        let mut counts = [0u64; BUCKETS];
+        for (slot, v) in counts.iter_mut().zip(arr.iter()) {
+            *slot = v.as_i64()? as u64;
+        }
+        Some(HistSnapshot {
+            counts,
+            count: j.get("count").as_i64()? as u64,
+            sum_nanos: j.get("sum_ns").as_i64().unwrap_or(0) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_monotone_and_cover() {
+        let mut prev_hi = 0.0;
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, prev_hi, "bucket {i} lower edge");
+            assert!(hi > lo);
+            prev_hi = hi;
+        }
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, f64::INFINITY);
+    }
+
+    #[test]
+    fn bucket_of_respects_bounds() {
+        for i in 0..BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(i);
+            let probe = if i == 0 { lo } else { (lo * hi).sqrt() };
+            assert_eq!(bucket_of(probe), i, "midpoint of bucket {i}");
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(HI), BUCKETS - 1);
+        assert_eq!(bucket_of(1e9), BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile(0.5), 0.0);
+        assert_eq!(s.percentile(0.99), 0.0);
+        assert_eq!(s.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn single_bucket_percentiles_return_its_representative() {
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record(0.005); // 5 ms — all land in one bucket
+        }
+        let s = h.snapshot();
+        let b = bucket_of(0.005);
+        assert_eq!(s.counts[b], 10);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.percentile(q), bucket_mid(b), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_ranked_buckets() {
+        let h = Histogram::new();
+        // 90 fast (≈1 ms), 10 slow (≈1 s): p50 must be fast, p95+ slow.
+        for _ in 0..90 {
+            h.record(0.001);
+        }
+        for _ in 0..10 {
+            h.record(1.0);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.percentile(0.50), bucket_mid(bucket_of(0.001)));
+        assert_eq!(s.percentile(0.90), bucket_mid(bucket_of(0.001)));
+        assert_eq!(s.percentile(0.95), bucket_mid(bucket_of(1.0)));
+        assert_eq!(s.percentile(0.99), bucket_mid(bucket_of(1.0)));
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let both = Histogram::new();
+        let latencies_a = [1e-5, 3e-4, 0.002, 0.002, 0.7];
+        let latencies_b = [2e-6, 0.05, 0.05, 4.0, 250.0];
+        for &v in &latencies_a {
+            a.record(v);
+            both.record(v);
+        }
+        for &v in &latencies_b {
+            b.record(v);
+            both.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, both.snapshot());
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            // bit-identical, not approximately equal
+            assert_eq!(
+                merged.percentile(q).to_bits(),
+                both.snapshot().percentile(q).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let h = Histogram::new();
+        for v in [1e-7, 0.001, 0.02, 0.02, 3.0, 500.0] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let text = s.to_json().to_string();
+        let back = HistSnapshot::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.percentile(0.95).to_bits(), s.percentile(0.95).to_bits());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_shapes() {
+        assert!(HistSnapshot::from_json(&Json::Null).is_none());
+        let short = Json::obj(vec![
+            ("buckets", Json::arr(vec![Json::from(1i64)])),
+            ("count", Json::from(1i64)),
+        ]);
+        assert!(HistSnapshot::from_json(&short).is_none());
+    }
+}

@@ -1,0 +1,108 @@
+//! Fleet-wide observability: mergeable histograms, request tracing, and
+//! the per-process metrics registry.
+//!
+//! The paper frames NDIF as a shared fabric serving many concurrent
+//! researchers; operating such a fabric needs more than flat counters.
+//! This subsystem provides the three measurement primitives every tier
+//! (coordinator → replica → scheduler worker → interpreter) records into:
+//!
+//! * [`hist`] — fixed log-bucketed latency histograms. Bucket boundaries
+//!   are **static** (compile-time constants), so merging replica
+//!   histograms is per-bucket count addition and fleet-wide percentiles
+//!   computed from merged counts are *bit-identical* to percentiles
+//!   computed from the concatenated per-replica bucket arrays.
+//! * [`trace`] — request traces: a trace id minted at the client or
+//!   coordinator, propagated via the `x-nnscope-trace` header, with
+//!   per-stage spans (validate/opt/queue/exec/serialize) stamped as the
+//!   request moves through the pipeline. Finished traces land in a
+//!   bounded ring buffer served at `GET /v1/debug/requests`.
+//! * [`registry`] — the per-process hub: per-model and per-endpoint
+//!   histograms plus optimizer-pass counters, with JSON and Prometheus
+//!   text exposition for `GET /v1/metrics`.
+//!
+//! Everything on the hot path is an atomic fetch-add with relaxed
+//! ordering — no locks are taken while a request is being recorded
+//! (the trace ring, written once per *finished* request, is the only
+//! mutex, and it is bounded).
+//!
+//! Instrumentation can be disabled fleet-wide with `NNSCOPE_OBS=off`
+//! (or per server via `NdifConfig::obs`); the `benches/obs.rs` gate
+//! holds the instrumented-vs-disabled overhead under 5%.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{percentile_from_counts, HistSnapshot, Histogram, BUCKETS};
+pub use registry::{EndpointObs, ModelObs, Obs, ServiceObs};
+pub use trace::{mint_trace_id, timed, ReqTrace, SpanRec, TraceRing, TRACE_HEADER};
+
+/// Does the environment allow instrumentation? `NNSCOPE_OBS=off|0|false`
+/// forces observability off regardless of server config; anything else
+/// (including unset) defers to the config flag.
+pub fn env_allows() -> bool {
+    match std::env::var("NNSCOPE_OBS") {
+        Ok(v) => !matches!(v.as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Per-thread interpreter phase timings (forward/backward), recorded by
+/// the interpreter without it needing a handle to any registry: the
+/// scheduler worker arms collection before executing a job and takes the
+/// accumulated phases after, folding them into the request's trace as
+/// `exec:<phase>` spans.
+///
+/// Collection is disarmed by default, so un-instrumented callers of the
+/// interpreter (tests, benches, `NNSCOPE_OBS=off`) pay only a
+/// thread-local bool read per phase.
+pub mod phases {
+    use std::cell::RefCell;
+
+    thread_local! {
+        static PHASES: RefCell<Option<Vec<(&'static str, u64)>>> = const { RefCell::new(None) };
+    }
+
+    /// Start collecting phase timings on this thread (clears any
+    /// previous, un-taken collection).
+    pub fn arm() {
+        PHASES.with(|p| *p.borrow_mut() = Some(Vec::new()));
+    }
+
+    /// Is collection armed on this thread? Cheap guard so the
+    /// interpreter can skip the clock reads entirely when not observed.
+    pub fn armed() -> bool {
+        PHASES.with(|p| p.borrow().is_some())
+    }
+
+    /// Record `nanos` spent in `name` (no-op when disarmed).
+    pub fn record(name: &'static str, nanos: u64) {
+        PHASES.with(|p| {
+            if let Some(v) = p.borrow_mut().as_mut() {
+                v.push((name, nanos));
+            }
+        });
+    }
+
+    /// Take the collected phases and disarm.
+    pub fn take() -> Vec<(&'static str, u64)> {
+        PHASES.with(|p| p.borrow_mut().take().unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn phases_disarmed_by_default_and_take_disarms() {
+        assert!(!super::phases::armed());
+        super::phases::record("forward", 10); // no-op
+        super::phases::arm();
+        assert!(super::phases::armed());
+        super::phases::record("forward", 10);
+        super::phases::record("backward", 20);
+        let got = super::phases::take();
+        assert_eq!(got, vec![("forward", 10), ("backward", 20)]);
+        assert!(!super::phases::armed());
+        assert!(super::phases::take().is_empty());
+    }
+}

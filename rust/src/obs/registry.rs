@@ -1,0 +1,319 @@
+//! The per-process observability hub: per-model and per-endpoint
+//! histograms, optimizer-pass counters, and the debug trace ring, with
+//! JSON and Prometheus text exposition.
+//!
+//! The model and endpoint maps are built once at server startup and
+//! never mutated, so the hot path is a `BTreeMap` lookup plus relaxed
+//! atomic adds — no locks.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::json::Json;
+
+use super::hist::{HistSnapshot, Histogram};
+use super::trace::TraceRing;
+
+/// Endpoints with their own latency histograms. Fixed at compile time so
+/// the map never grows under load.
+pub const ENDPOINTS: [&str; 4] = ["trace", "session", "stream", "result"];
+
+/// Per-model latency histograms and optimizer-pass counters.
+#[derive(Default)]
+pub struct ModelObs {
+    /// Admission → result published (or stream done).
+    pub e2e: Histogram,
+    /// Enqueue → dequeue by a worker.
+    pub queue_wait: Histogram,
+    /// Worker execution (interpreter) time.
+    pub exec: Histogram,
+    /// Streaming time-to-first-token: admission → first event sent.
+    pub ttft: Histogram,
+    /// Requests that went through the admission graph compiler.
+    pub opt_requests: AtomicU64,
+    pub opt_dce: AtomicU64,
+    pub opt_folded: AtomicU64,
+    pub opt_cse: AtomicU64,
+    pub opt_fused: AtomicU64,
+}
+
+impl ModelObs {
+    /// Count an admission-compiler report into the pass counters.
+    pub fn record_opt(&self, r: &crate::graph::opt::OptReport) {
+        self.opt_requests.fetch_add(1, Relaxed);
+        self.opt_dce.fetch_add(r.dce_removed as u64, Relaxed);
+        self.opt_folded.fetch_add(r.folded as u64, Relaxed);
+        self.opt_cse.fetch_add(r.cse_merged as u64, Relaxed);
+        self.opt_fused.fetch_add(r.fused as u64, Relaxed);
+    }
+
+    /// The `"latency"` + `"opt"` halves of one model's metrics entry.
+    pub fn to_json(&self) -> (Json, Json) {
+        let latency = Json::obj(vec![
+            ("e2e", self.e2e.snapshot().to_json()),
+            ("queue_wait", self.queue_wait.snapshot().to_json()),
+            ("exec", self.exec.snapshot().to_json()),
+            ("ttft", self.ttft.snapshot().to_json()),
+        ]);
+        let opt = Json::obj(vec![
+            ("requests", Json::from(self.opt_requests.load(Relaxed) as i64)),
+            ("dce_removed", Json::from(self.opt_dce.load(Relaxed) as i64)),
+            ("folded", Json::from(self.opt_folded.load(Relaxed) as i64)),
+            ("cse_merged", Json::from(self.opt_cse.load(Relaxed) as i64)),
+            ("fused", Json::from(self.opt_fused.load(Relaxed) as i64)),
+        ]);
+        (latency, opt)
+    }
+}
+
+/// Per-endpoint request/error counters and latency histogram.
+#[derive(Default)]
+pub struct EndpointObs {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: Histogram,
+}
+
+/// Everything one scheduler worker needs to record into: its model's
+/// histograms plus the shared debug ring. Threaded into
+/// `ModelService::start` so the queue layer has no dependency on the
+/// full [`Obs`] hub.
+#[derive(Clone)]
+pub struct ServiceObs {
+    pub model: Arc<ModelObs>,
+    pub ring: Arc<TraceRing>,
+}
+
+/// The per-process observability registry.
+pub struct Obs {
+    enabled: bool,
+    models: BTreeMap<String, Arc<ModelObs>>,
+    endpoints: BTreeMap<&'static str, EndpointObs>,
+    ring: Arc<TraceRing>,
+}
+
+impl Obs {
+    /// Build the hub for a fixed model set. `enabled` combines the
+    /// server config flag with the `NNSCOPE_OBS` environment override.
+    pub fn new(enabled: bool, models: &[String], ring_cap: usize) -> Obs {
+        let enabled = enabled && super::env_allows();
+        Obs {
+            enabled,
+            models: models
+                .iter()
+                .map(|m| (m.clone(), Arc::new(ModelObs::default())))
+                .collect(),
+            endpoints: ENDPOINTS.iter().map(|&e| (e, EndpointObs::default())).collect(),
+            ring: Arc::new(TraceRing::new(ring_cap)),
+        }
+    }
+
+    /// Disabled hub (`NNSCOPE_OBS=off` / `obs: false`): recording calls
+    /// are skipped by callers checking [`Obs::enabled`].
+    pub fn disabled() -> Obs {
+        Obs::new(false, &[], 1)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The per-model recorder, `None` when disabled or unknown model.
+    pub fn model(&self, name: &str) -> Option<&Arc<ModelObs>> {
+        if !self.enabled {
+            return None;
+        }
+        self.models.get(name)
+    }
+
+    /// The bundle a `ModelService` worker records into.
+    pub fn service_obs(&self, model: &str) -> Option<ServiceObs> {
+        Some(ServiceObs { model: self.model(model)?.clone(), ring: self.ring.clone() })
+    }
+
+    pub fn ring(&self) -> &Arc<TraceRing> {
+        &self.ring
+    }
+
+    /// Record one HTTP request against a named endpoint.
+    pub fn record_endpoint(&self, endpoint: &str, latency: Duration, ok: bool) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(e) = self.endpoints.get(endpoint) {
+            e.requests.fetch_add(1, Relaxed);
+            if !ok {
+                e.errors.fetch_add(1, Relaxed);
+            }
+            e.latency.record_duration(latency);
+        }
+    }
+
+    /// Merged end-to-end snapshot across all models (what heartbeats
+    /// report p95 from).
+    pub fn merged_e2e(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for m in self.models.values() {
+            out.merge(&m.e2e.snapshot());
+        }
+        out
+    }
+
+    /// The `"_endpoints"` metrics object.
+    pub fn endpoints_json(&self) -> Json {
+        Json::obj(
+            self.endpoints
+                .iter()
+                .map(|(name, e)| {
+                    (
+                        *name,
+                        Json::obj(vec![
+                            ("requests", Json::from(e.requests.load(Relaxed) as i64)),
+                            ("errors", Json::from(e.errors.load(Relaxed) as i64)),
+                            ("latency", e.latency.snapshot().to_json()),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Prometheus text exposition (`GET /v1/metrics?format=prometheus`).
+    /// Histograms are emitted as cumulative `_bucket{le=...}` series in
+    /// the standard exposition format, with counters and gauges the
+    /// caller supplies appended as-is.
+    pub fn prometheus(&self, extra: &[(String, f64)]) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE nnscope_latency_seconds histogram\n");
+        for (model, m) in &self.models {
+            for (stage, h) in [
+                ("e2e", &m.e2e),
+                ("queue_wait", &m.queue_wait),
+                ("exec", &m.exec),
+                ("ttft", &m.ttft),
+            ] {
+                let s = h.snapshot();
+                let mut cum = 0u64;
+                for (i, &c) in s.counts.iter().enumerate() {
+                    cum += c;
+                    let (_, hi) = super::hist::bucket_bounds(i);
+                    let le = if hi.is_infinite() {
+                        "+Inf".to_string()
+                    } else {
+                        format!("{hi:e}")
+                    };
+                    out.push_str(&format!(
+                        "nnscope_latency_seconds_bucket{{model=\"{model}\",stage=\"{stage}\",le=\"{le}\"}} {cum}\n"
+                    ));
+                }
+                out.push_str(&format!(
+                    "nnscope_latency_seconds_sum{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
+                    s.sum_nanos as f64 / 1e9
+                ));
+                out.push_str(&format!(
+                    "nnscope_latency_seconds_count{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
+                    s.count
+                ));
+            }
+        }
+        out.push_str("# TYPE nnscope_endpoint_requests_total counter\n");
+        for (name, e) in &self.endpoints {
+            out.push_str(&format!(
+                "nnscope_endpoint_requests_total{{endpoint=\"{name}\"}} {}\n",
+                e.requests.load(Relaxed)
+            ));
+            out.push_str(&format!(
+                "nnscope_endpoint_errors_total{{endpoint=\"{name}\"}} {}\n",
+                e.errors.load(Relaxed)
+            ));
+        }
+        for (name, v) in extra {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn models() -> Vec<String> {
+        vec!["tiny-sim".to_string()]
+    }
+
+    #[test]
+    fn disabled_hub_records_nothing() {
+        let o = Obs::new(false, &models(), 8);
+        assert!(!o.enabled());
+        assert!(o.model("tiny-sim").is_none());
+        o.record_endpoint("trace", Duration::from_millis(5), true);
+        let j = o.endpoints_json();
+        assert_eq!(j.get("trace").get("requests").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn endpoint_recording_counts_errors() {
+        let o = Obs::new(true, &models(), 8);
+        o.record_endpoint("trace", Duration::from_millis(5), true);
+        o.record_endpoint("trace", Duration::from_millis(5), false);
+        o.record_endpoint("bogus-endpoint", Duration::from_millis(5), true);
+        let j = o.endpoints_json();
+        assert_eq!(j.get("trace").get("requests").as_i64(), Some(2));
+        assert_eq!(j.get("trace").get("errors").as_i64(), Some(1));
+        assert_eq!(j.get("trace").get("latency").get("count").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn merged_e2e_sums_across_models() {
+        let ms = vec!["a".to_string(), "b".to_string()];
+        let o = Obs::new(true, &ms, 8);
+        o.model("a").unwrap().e2e.record(0.01);
+        o.model("b").unwrap().e2e.record(0.02);
+        o.model("b").unwrap().e2e.record(0.03);
+        assert_eq!(o.merged_e2e().count, 3);
+    }
+
+    #[test]
+    fn opt_counters_accumulate() {
+        let o = Obs::new(true, &models(), 8);
+        let m = o.model("tiny-sim").unwrap();
+        m.record_opt(&crate::graph::opt::OptReport {
+            nodes_before: 10,
+            nodes_after: 7,
+            dce_removed: 2,
+            folded: 1,
+            cse_merged: 0,
+            fused: 0,
+        });
+        m.record_opt(&crate::graph::opt::OptReport {
+            nodes_before: 5,
+            nodes_after: 5,
+            ..Default::default()
+        });
+        let (_, opt) = m.to_json();
+        assert_eq!(opt.get("requests").as_i64(), Some(2));
+        assert_eq!(opt.get("dce_removed").as_i64(), Some(2));
+        assert_eq!(opt.get("folded").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_cumulative_buckets() {
+        let o = Obs::new(true, &models(), 8);
+        let m = o.model("tiny-sim").unwrap();
+        m.e2e.record(0.001);
+        m.e2e.record(0.5);
+        let text = o.prometheus(&[("nnscope_store_objects".to_string(), 3.0)]);
+        assert!(text.contains("# TYPE nnscope_latency_seconds histogram"));
+        assert!(text.contains("nnscope_latency_seconds_count{model=\"tiny-sim\",stage=\"e2e\"} 2"));
+        assert!(text.contains("nnscope_store_objects 3"));
+        // cumulative: the +Inf bucket of e2e equals the total count
+        let inf_line = text
+            .lines()
+            .find(|l| l.contains("stage=\"e2e\"") && l.contains("le=\"+Inf\""))
+            .unwrap();
+        assert!(inf_line.ends_with(" 2"));
+    }
+}

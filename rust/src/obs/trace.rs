@@ -1,0 +1,253 @@
+//! Request tracing: trace ids, per-stage spans, and the debug ring.
+//!
+//! A trace id is minted at the client (or by the coordinator for bare
+//! requests) and rides the `x-nnscope-trace` header through coordinator
+//! routing and retries, replica admission, scheduler queueing, co-tenant
+//! merge, and interpreter execution. Each tier stamps spans
+//! (validate/opt/queue/exec/serialize plus interpreter phases) onto the
+//! [`ReqTrace`] that travels *with the job* — by value, so no locks are
+//! held while a request is in flight. The finished trace is returned to
+//! the caller as `"timing"` metadata in `/v1/result` and retained in a
+//! bounded [`TraceRing`] served at `GET /v1/debug/requests`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// The header that carries a request's trace id across tiers.
+pub const TRACE_HEADER: &str = "x-nnscope-trace";
+
+static MINT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Mint a fresh 16-hex-char trace id (wall-clock nanos mixed with a
+/// process-wide counter, so concurrent mints never collide).
+pub fn mint_trace_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seq = MINT_SEQ.fetch_add(1, Relaxed);
+    format!("{:016x}", splitmix64(nanos ^ seq.rotate_left(32)))
+}
+
+/// One recorded span: a named stage with its offset from request start
+/// and duration, both in microseconds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRec {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// A request trace, moved along with the job through the pipeline.
+#[derive(Debug)]
+pub struct ReqTrace {
+    pub trace_id: String,
+    pub endpoint: &'static str,
+    pub model: String,
+    /// Admission time — the zero point all span offsets are relative to.
+    pub t0: Instant,
+    /// Set when the job is enqueued; the worker turns it into the
+    /// `queue` span at dequeue.
+    pub enqueued_at: Option<Instant>,
+    pub spans: Vec<SpanRec>,
+}
+
+impl ReqTrace {
+    pub fn new(trace_id: String, endpoint: &'static str, model: &str) -> ReqTrace {
+        ReqTrace {
+            trace_id,
+            endpoint,
+            model: model.to_string(),
+            t0: Instant::now(),
+            enqueued_at: None,
+            spans: Vec::new(),
+        }
+    }
+
+    /// Record a span that ran from `start` until now.
+    pub fn span_since(&mut self, name: &str, start: Instant) {
+        let start_us = start.saturating_duration_since(self.t0).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        self.spans.push(SpanRec { name: name.to_string(), start_us, dur_us });
+    }
+
+    /// Record a span by explicit offset and duration (used for
+    /// interpreter phases reported in nanoseconds).
+    pub fn span_at(&mut self, name: &str, start_us: u64, dur_us: u64) {
+        self.spans.push(SpanRec { name: name.to_string(), start_us, dur_us });
+    }
+
+    /// Time a closure as a span.
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let r = f();
+        self.span_since(name, start);
+        r
+    }
+
+    /// Stamp the enqueue instant (the worker closes the `queue` span at
+    /// dequeue via [`ReqTrace::close_queue_span`]).
+    pub fn mark_enqueued(&mut self) {
+        self.enqueued_at = Some(Instant::now());
+    }
+
+    /// Close the `queue` span and return the queue wait, if
+    /// [`ReqTrace::mark_enqueued`] was called.
+    pub fn close_queue_span(&mut self) -> Option<std::time::Duration> {
+        let start = self.enqueued_at.take()?;
+        let wait = start.elapsed();
+        self.span_since("queue", start);
+        Some(wait)
+    }
+
+    /// The `"timing"` metadata object returned in `/v1/result` and kept
+    /// in the debug ring: trace id, endpoint, model, total latency so
+    /// far, and all recorded spans in order.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::from(self.trace_id.as_str())),
+            ("endpoint", Json::from(self.endpoint)),
+            ("model", Json::from(self.model.as_str())),
+            ("total_us", Json::from(self.t0.elapsed().as_micros() as i64)),
+            (
+                "spans",
+                Json::arr(
+                    self.spans
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::from(s.name.as_str())),
+                                ("start_us", Json::from(s.start_us as i64)),
+                                ("dur_us", Json::from(s.dur_us as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Time a closure as a span on an optional trace — the admission-path
+/// idiom (`timed(&mut trace, "validate", || …)`), a plain call when
+/// observability is off.
+pub fn timed<R>(trace: &mut Option<ReqTrace>, name: &str, f: impl FnOnce() -> R) -> R {
+    match trace.as_mut() {
+        Some(t) => t.time(name, f),
+        None => f(),
+    }
+}
+
+/// Bounded ring buffer of finished request traces (most recent last).
+/// One short lock per *finished* request — nothing on the in-flight
+/// path touches it.
+pub struct TraceRing {
+    cap: usize,
+    buf: Mutex<VecDeque<Json>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), buf: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Append a finished trace, evicting the oldest past capacity.
+    pub fn push(&self, trace: Json) {
+        let mut g = self.buf.lock().unwrap();
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(trace);
+    }
+
+    /// Copy of the retained traces, oldest first.
+    pub fn snapshot(&self) -> Vec<Json> {
+        self.buf.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_ids_are_unique_and_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let id = mint_trace_id();
+            assert_eq!(id.len(), 16);
+            assert!(id.chars().all(|c| c.is_ascii_hexdigit()));
+            assert!(seen.insert(id), "trace id collision");
+        }
+    }
+
+    #[test]
+    fn spans_accumulate_and_serialize() {
+        let mut t = ReqTrace::new("abc".into(), "trace", "tiny-sim");
+        t.time("validate", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        t.mark_enqueued();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let wait = t.close_queue_span().unwrap();
+        assert!(wait.as_micros() >= 1000);
+        t.span_at("exec:forward", 0, 42);
+        let j = t.to_json();
+        assert_eq!(j.get("trace").as_str(), Some("abc"));
+        assert_eq!(j.get("model").as_str(), Some("tiny-sim"));
+        let spans = j.get("spans").as_array().unwrap();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].get("name").as_str(), Some("validate"));
+        assert_eq!(spans[1].get("name").as_str(), Some("queue"));
+        assert!(spans[1].get("dur_us").as_i64().unwrap() >= 1000);
+        assert_eq!(spans[2].get("dur_us").as_i64(), Some(42));
+    }
+
+    #[test]
+    fn queue_span_absent_without_enqueue_mark() {
+        let mut t = ReqTrace::new("abc".into(), "trace", "m");
+        assert!(t.close_queue_span().is_none());
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let r = TraceRing::new(3);
+        for i in 0..10i64 {
+            r.push(Json::from(i));
+        }
+        assert_eq!(r.len(), 3);
+        let got = r.snapshot();
+        assert_eq!(got, vec![Json::from(7i64), Json::from(8i64), Json::from(9i64)]);
+        assert_eq!(r.capacity(), 3);
+    }
+
+    #[test]
+    fn ring_capacity_floor_is_one() {
+        let r = TraceRing::new(0);
+        r.push(Json::from(1i64));
+        r.push(Json::from(2i64));
+        assert_eq!(r.snapshot(), vec![Json::from(2i64)]);
+    }
+}

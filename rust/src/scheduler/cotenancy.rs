@@ -140,8 +140,12 @@ pub fn execute_merged(
     }
 
     {
+        let tf = crate::obs::phases::armed().then(std::time::Instant::now);
         let mut hooks = MultiHooks { executors: &mut executors };
         runner.forward(&padded, &mut hooks)?;
+        if let Some(t) = tf {
+            crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+        }
     }
 
     Ok(executors.into_iter().map(|e| e.into_result()).collect())

@@ -25,6 +25,7 @@ use crate::graph::{opt::Prepared, serde as gserde, InterventionGraph};
 use crate::interp::{self, StateView};
 use crate::json::Json;
 use crate::models::ModelRunner;
+use crate::obs::{phases, ReqTrace, ServiceObs};
 use crate::server::state::SessionStateStore;
 use crate::server::store::ObjectStore;
 
@@ -76,6 +77,9 @@ struct TraceJob {
     /// The graph to run — compiled at admission by the server (carrying
     /// the saved-id remap and opt report), or raw for direct submits.
     prepared: Prepared,
+    /// Request trace, moved along with the job (None when observability
+    /// is off or the submit bypassed the server front).
+    trace: Option<ReqTrace>,
 }
 
 struct SessionJob {
@@ -86,6 +90,7 @@ struct SessionJob {
     /// Keep the session's state alive after this bundle (multi-request
     /// sessions); ephemeral sessions drop it at the end.
     persist: bool,
+    trace: Option<ReqTrace>,
 }
 
 /// One frame of a streaming response, already serialized for the wire.
@@ -111,6 +116,7 @@ struct StreamJob {
     /// How long the worker will wait on a full channel before declaring
     /// the consumer gone and aborting the decode.
     send_timeout: Duration,
+    trace: Option<ReqTrace>,
 }
 
 enum Job {
@@ -130,12 +136,15 @@ pub struct ModelService {
 }
 
 impl ModelService {
-    /// Spawn the service worker.
+    /// Spawn the service worker. `obs` is the model's observability
+    /// bundle (latency histograms + debug trace ring); `None` turns all
+    /// recording off.
     pub fn start(
         runner: Arc<ModelRunner>,
         store: Arc<ObjectStore>,
         session_state: Arc<SessionStateStore>,
         mode: CoTenancy,
+        obs: Option<ServiceObs>,
     ) -> ModelService {
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(ServiceMetrics::default());
@@ -145,7 +154,7 @@ impl ModelService {
         let state2 = Arc::clone(&session_state);
         let worker = std::thread::Builder::new()
             .name(format!("ndif-service-{}", runner.manifest.name))
-            .spawn(move || Self::worker_loop(rx, r2, store2, state2, mode, m2))
+            .spawn(move || Self::worker_loop(rx, r2, store2, state2, mode, m2, obs))
             .expect("spawn service worker");
         ModelService { runner, metrics, store, session_state, tx: Some(tx), worker: Some(worker) }
     }
@@ -172,14 +181,39 @@ impl ModelService {
     /// worker executes it raw and re-keys the result through the carried
     /// remap table; the opt report rides the result JSON.
     pub fn submit_prepared(&self, id: String, prepared: Prepared) -> Result<()> {
+        self.submit_prepared_traced(id, prepared, None)
+    }
+
+    /// [`Self::submit_prepared`] carrying a request trace: the worker
+    /// stamps queue/exec/serialize spans onto it, attaches it as
+    /// `"timing"` result metadata, and retains it in the debug ring.
+    pub fn submit_prepared_traced(
+        &self,
+        id: String,
+        prepared: Prepared,
+        mut trace: Option<ReqTrace>,
+    ) -> Result<()> {
         self.store.put_pending(&id);
+        if let Some(t) = trace.as_mut() {
+            t.mark_enqueued();
+        }
+        // counters bump before the send so a reader that wakes on the
+        // result never sees completed > enqueued; a failed send rolls
+        // them back (the job never reached the worker)
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        self.tx
+        let sent = self
+            .tx
             .as_ref()
             .expect("service stopped")
-            .send(Job::Trace(TraceJob { id, prepared }))
-            .map_err(|_| anyhow::anyhow!("service worker exited"))
+            .send(Job::Trace(TraceJob { id: id.clone(), prepared, trace }));
+        if sent.is_err() {
+            self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            self.store.put_failed(&id, "service worker exited");
+            return Err(anyhow::anyhow!("service worker exited"));
+        }
+        Ok(())
     }
 
     /// Enqueue an ordered stateful trace bundle. One bundled result (the
@@ -209,15 +243,37 @@ impl ModelService {
         persist: bool,
         graphs: Vec<Prepared>,
     ) -> Result<()> {
-        let n = graphs.len() as u64;
+        self.submit_session_traced(id, session, persist, graphs, None)
+    }
+
+    /// [`Self::submit_session_prepared`] carrying a request trace.
+    pub fn submit_session_traced(
+        &self,
+        id: String,
+        session: String,
+        persist: bool,
+        graphs: Vec<Prepared>,
+        mut trace: Option<ReqTrace>,
+    ) -> Result<()> {
+        let n = graphs.len();
         self.store.put_pending(&id);
-        self.metrics.enqueued.fetch_add(n, Ordering::Relaxed);
-        self.metrics.queue_depth.fetch_add(graphs.len(), Ordering::Relaxed);
-        self.tx
+        if let Some(t) = trace.as_mut() {
+            t.mark_enqueued();
+        }
+        self.metrics.enqueued.fetch_add(n as u64, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(n, Ordering::Relaxed);
+        let sent = self
+            .tx
             .as_ref()
             .expect("service stopped")
-            .send(Job::Session(SessionJob { id, session, graphs, persist }))
-            .map_err(|_| anyhow::anyhow!("service worker exited"))
+            .send(Job::Session(SessionJob { id: id.clone(), session, graphs, persist, trace }));
+        if sent.is_err() {
+            self.metrics.enqueued.fetch_sub(n as u64, Ordering::Relaxed);
+            self.metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
+            self.store.put_failed(&id, "service worker exited");
+            return Err(anyhow::anyhow!("service worker exited"));
+        }
+        Ok(())
     }
 
     /// Enqueue a streaming decode. Per-step events (and the terminal
@@ -245,13 +301,36 @@ impl ModelService {
         tx: SyncSender<StreamChunk>,
         send_timeout: Duration,
     ) -> Result<()> {
+        self.submit_stream_traced(prepared, steps, tx, send_timeout, None)
+    }
+
+    /// [`Self::submit_stream_prepared`] carrying a request trace: the
+    /// worker records TTFT at the first event sent and attaches
+    /// `"timing"` to the terminal `done` event.
+    pub fn submit_stream_traced(
+        &self,
+        prepared: Prepared,
+        steps: usize,
+        tx: SyncSender<StreamChunk>,
+        send_timeout: Duration,
+        mut trace: Option<ReqTrace>,
+    ) -> Result<()> {
+        if let Some(t) = trace.as_mut() {
+            t.mark_enqueued();
+        }
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        self.tx
+        let sent = self
+            .tx
             .as_ref()
             .expect("service stopped")
-            .send(Job::Stream(StreamJob { prepared, steps, tx, send_timeout }))
-            .map_err(|_| anyhow::anyhow!("service worker exited"))
+            .send(Job::Stream(StreamJob { prepared, steps, tx, send_timeout, trace }));
+        if sent.is_err() {
+            self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow::anyhow!("service worker exited"));
+        }
+        Ok(())
     }
 
     fn worker_loop(
@@ -261,15 +340,17 @@ impl ModelService {
         session_state: Arc<SessionStateStore>,
         mode: CoTenancy,
         metrics: Arc<ServiceMetrics>,
+        obs: Option<ServiceObs>,
     ) {
+        let obs = obs.as_ref();
         while let Ok(first) = rx.recv() {
             let first = match first {
                 Job::Session(s) => {
-                    Self::run_session(&runner, &store, &session_state, &metrics, s);
+                    Self::run_session(&runner, &store, &session_state, &metrics, obs, s);
                     continue;
                 }
                 Job::Stream(s) => {
-                    Self::run_stream(&runner, &metrics, s);
+                    Self::run_stream(&runner, &metrics, obs, s);
                     continue;
                 }
                 Job::Trace(t) => t,
@@ -300,21 +381,52 @@ impl ModelService {
                 let mut rest = batch;
                 for take in chunks {
                     let tail = rest.split_off(take.min(rest.len()));
-                    Self::run_batch(&runner, &store, &metrics, rest, mode);
+                    Self::run_batch(&runner, &store, &metrics, obs, rest, mode);
                     rest = tail;
                     if rest.is_empty() {
                         break;
                     }
                 }
+                // a chunk plan that under-covers the burst must not drop
+                // jobs: every drained request is owed a result and a
+                // completed/failed counter bump
+                if !rest.is_empty() {
+                    Self::run_batch(&runner, &store, &metrics, obs, rest, mode);
+                }
             } else {
-                Self::run_batch(&runner, &store, &metrics, batch, mode);
+                Self::run_batch(&runner, &store, &metrics, obs, batch, mode);
             }
             match deferred {
                 Some(Job::Session(s)) => {
-                    Self::run_session(&runner, &store, &session_state, &metrics, s)
+                    Self::run_session(&runner, &store, &session_state, &metrics, obs, s)
                 }
-                Some(Job::Stream(s)) => Self::run_stream(&runner, &metrics, s),
+                Some(Job::Stream(s)) => Self::run_stream(&runner, &metrics, obs, s),
                 Some(Job::Trace(_)) | None => {}
+            }
+        }
+    }
+
+    /// Sum interpreter phase timings by name (one entry per phase even
+    /// for multi-step streams), preserving first-seen order.
+    fn fold_phases(ph: &[(&'static str, u64)]) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = Vec::new();
+        for &(name, nanos) in ph {
+            match out.iter_mut().find(|(n, _)| *n == name) {
+                Some(slot) => slot.1 += nanos,
+                None => out.push((name, nanos)),
+            }
+        }
+        out
+    }
+
+    /// Stamp the queue span onto a job's trace and record the wait in
+    /// the model's queue-wait histogram.
+    fn note_dequeue(trace: &mut Option<ReqTrace>, obs: Option<&ServiceObs>) {
+        if let Some(tr) = trace.as_mut() {
+            if let Some(wait) = tr.close_queue_span() {
+                if let Some(o) = obs {
+                    o.model.queue_wait.record_duration(wait);
+                }
             }
         }
     }
@@ -344,10 +456,23 @@ impl ModelService {
     /// event frame per step and a terminal frame at the end. The graph
     /// runs as prepared at admission; per-step values are re-keyed into
     /// the submitted graph's ids before they hit the wire.
-    fn run_stream(runner: &ModelRunner, metrics: &ServiceMetrics, job: StreamJob) {
+    fn run_stream(
+        runner: &ModelRunner,
+        metrics: &ServiceMetrics,
+        obs: Option<&ServiceObs>,
+        mut job: StreamJob,
+    ) {
+        Self::note_dequeue(&mut job.trace, obs);
         let t0 = Instant::now();
+        // TTFT is admission → first event on the wire; fall back to
+        // dequeue time for untraced jobs
+        let admitted = job.trace.as_ref().map(|t| t.t0).unwrap_or(t0);
+        let mut ttft_recorded = false;
         let mut consumer_gone = false;
         let prepared = &job.prepared;
+        if obs.is_some() {
+            phases::arm();
+        }
         let mut on_step = |step: usize, mut out: crate::interp::StepOutcome| {
             out.values = prepared.remap_values(out.values);
             let ev = Json::obj(vec![
@@ -359,6 +484,12 @@ impl ModelService {
             ])
             .to_string();
             if Self::send_chunk(&job.tx, StreamChunk::Event(ev), job.send_timeout) {
+                if !ttft_recorded {
+                    ttft_recorded = true;
+                    if let Some(o) = obs {
+                        o.model.ttft.record_duration(admitted.elapsed());
+                    }
+                }
                 true
             } else {
                 consumer_gone = true;
@@ -367,10 +498,20 @@ impl ModelService {
         };
         let res =
             interp::execute_stream_raw(&prepared.graph, runner, job.steps, &mut on_step);
-        match res {
+        let ph = if obs.is_some() { Self::fold_phases(&phases::take()) } else { Vec::new() };
+        let exec_d = t0.elapsed();
+        if let Some(tr) = job.trace.as_mut() {
+            tr.span_since("exec", t0);
+            let off = t0.saturating_duration_since(tr.t0).as_micros() as u64;
+            for (name, nanos) in &ph {
+                tr.span_at(&format!("exec:{name}"), off, nanos / 1_000);
+            }
+        }
+        let ok = match res {
             Ok(_) if consumer_gone => {
                 // the consumer vanished mid-stream; nothing to deliver to
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                false
             }
             Ok(gen) => {
                 let tokens = Json::Array(gen.tokens.iter().map(|&t| Json::from(t)).collect());
@@ -384,11 +525,16 @@ impl ModelService {
                 if let Some(report) = &job.prepared.report {
                     done_obj.set("opt", report.to_json());
                 }
+                if let Some(tr) = &job.trace {
+                    done_obj.set("timing", tr.to_json());
+                }
                 let done = done_obj.to_string();
                 if Self::send_chunk(&job.tx, StreamChunk::Done(done), job.send_timeout) {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    true
                 } else {
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    false
                 }
             }
             Err(e) => {
@@ -398,11 +544,21 @@ impl ModelService {
                     job.send_timeout,
                 );
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        };
+        if let Some(o) = obs {
+            o.model.exec.record_duration(exec_d);
+            if let Some(tr) = &job.trace {
+                if ok {
+                    o.model.e2e.record_duration(tr.t0.elapsed());
+                }
+                o.ring.push(tr.to_json());
             }
         }
         metrics
             .exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(exec_d.as_nanos() as u64, Ordering::Relaxed);
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
     }
 
@@ -416,11 +572,16 @@ impl ModelService {
         store: &ObjectStore,
         session_state: &SessionStateStore,
         metrics: &ServiceMetrics,
-        job: SessionJob,
+        obs: Option<&ServiceObs>,
+        mut job: SessionJob,
     ) {
+        Self::note_dequeue(&mut job.trace, obs);
         let t0 = std::time::Instant::now();
         let n = job.graphs.len();
-        let outcome = (|| -> Result<String, String> {
+        if obs.is_some() {
+            phases::arm();
+        }
+        let outcome = (|| -> Result<Json, String> {
             session_state
                 .open(&job.session, &runner.manifest.name)
                 .map_err(|e| e.to_string())?;
@@ -440,25 +601,46 @@ impl ModelService {
             Ok(Json::obj(vec![
                 ("session", Json::from(job.session.as_str())),
                 ("results", Json::Array(results)),
-            ])
-            .to_string())
+            ]))
         })();
         if !job.persist {
             session_state.drop_session(&job.session);
         }
+        let ph = if obs.is_some() { Self::fold_phases(&phases::take()) } else { Vec::new() };
+        let exec_d = t0.elapsed();
+        if let Some(tr) = job.trace.as_mut() {
+            tr.span_since("exec", t0);
+            let off = t0.saturating_duration_since(tr.t0).as_micros() as u64;
+            for (name, nanos) in &ph {
+                tr.span_at(&format!("exec:{name}"), off, nanos / 1_000);
+            }
+        }
+        let ok = outcome.is_ok();
         match outcome {
-            Ok(json) => {
+            Ok(mut json) => {
+                if let Some(tr) = &job.trace {
+                    json.set("timing", tr.to_json());
+                }
                 metrics.completed.fetch_add(n as u64, Ordering::Relaxed);
-                store.put_ready(&job.id, json);
+                store.put_ready(&job.id, json.to_string());
             }
             Err(e) => {
                 metrics.failed.fetch_add(n as u64, Ordering::Relaxed);
                 store.put_failed(&job.id, &e);
             }
         }
+        if let Some(o) = obs {
+            o.model.exec.record_duration(exec_d);
+            if let Some(tr) = &job.trace {
+                if ok {
+                    o.model.e2e.record_duration(tr.t0.elapsed());
+                }
+                o.ring.push(tr.to_json());
+            }
+        }
         metrics
             .exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(exec_d.as_nanos() as u64, Ordering::Relaxed);
         metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
     }
 
@@ -466,9 +648,14 @@ impl ModelService {
         runner: &ModelRunner,
         store: &ObjectStore,
         metrics: &ServiceMetrics,
-        batch: Vec<TraceJob>,
+        obs: Option<&ServiceObs>,
+        mut batch: Vec<TraceJob>,
         mode: CoTenancy,
     ) {
+        let n = batch.len();
+        for job in &mut batch {
+            Self::note_dequeue(&mut job.trace, obs);
+        }
         let t0 = std::time::Instant::now();
         let graphs: Vec<&InterventionGraph> = batch.iter().map(|j| &j.prepared.graph).collect();
         let can_merge = matches!(mode, CoTenancy::Parallel { .. })
@@ -481,63 +668,116 @@ impl ModelService {
             // merge shares the forward pass across them
             let owned: Vec<InterventionGraph> =
                 batch.iter().map(|j| j.prepared.graph.clone()).collect();
+            if obs.is_some() {
+                phases::arm();
+            }
             match execute_merged(&owned, runner) {
                 Ok(results) => {
                     metrics.merged_batches.fetch_add(1, Ordering::Relaxed);
-                    for (job, res) in batch.iter().zip(results) {
+                    let ph = if obs.is_some() {
+                        Self::fold_phases(&phases::take())
+                    } else {
+                        Vec::new()
+                    };
+                    for (job, res) in batch.iter_mut().zip(results) {
                         let res = res.map(|r| job.prepared.remap_values(r));
-                        Self::finish(store, metrics, &job.id, res, &job.prepared);
+                        Self::finish(store, metrics, obs, t0, &ph, n, job, res);
                     }
                 }
                 Err(e) => {
                     // infrastructure failure: fail the whole merge
+                    let _ = phases::take();
                     let msg = e.to_string();
-                    for job in &batch {
+                    for job in batch.iter_mut() {
                         Self::finish(
                             store,
                             metrics,
-                            &job.id,
+                            obs,
+                            t0,
+                            &[],
+                            n,
+                            job,
                             Err::<crate::graph::GraphResult, &str>(&msg),
-                            &job.prepared,
                         );
                     }
                 }
             }
         } else {
-            for job in &batch {
+            for job in batch.iter_mut() {
+                if obs.is_some() {
+                    phases::arm();
+                }
+                let te = std::time::Instant::now();
                 let res = interp::execute_view_raw(&job.prepared.graph, runner, StateView::new())
                     .map(|(r, _)| job.prepared.remap_values(r));
-                Self::finish(store, metrics, &job.id, res, &job.prepared);
+                let ph = if obs.is_some() {
+                    Self::fold_phases(&phases::take())
+                } else {
+                    Vec::new()
+                };
+                Self::finish(store, metrics, obs, te, &ph, 1, job, res);
             }
         }
         metrics
             .exec_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        metrics
-            .queue_depth
-            .fetch_sub(batch.len(), Ordering::Relaxed);
+        metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
     }
 
+    /// Publish one trace result: bump counters, stamp exec/serialize
+    /// spans and interpreter phases onto the trace, attach `"timing"` to
+    /// the result payload, record histograms, and retain the trace in
+    /// the debug ring.
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         store: &ObjectStore,
         metrics: &ServiceMetrics,
-        id: &str,
+        obs: Option<&ServiceObs>,
+        exec_start: Instant,
+        ph: &[(&'static str, u64)],
+        merged: usize,
+        job: &mut TraceJob,
         res: Result<crate::graph::GraphResult, impl std::fmt::Display>,
-        prepared: &Prepared,
     ) {
+        let exec_d = exec_start.elapsed();
+        if let Some(tr) = job.trace.as_mut() {
+            tr.span_since("exec", exec_start);
+            let off = exec_start.saturating_duration_since(tr.t0).as_micros() as u64;
+            for &(name, nanos) in ph {
+                tr.span_at(&format!("exec:{name}"), off, nanos / 1_000);
+            }
+            if merged > 1 {
+                // zero-width marker: this request ran in a co-tenant
+                // merge of `merged` requests
+                tr.span_at(&format!("cotenant_merge:{merged}"), off, 0);
+            }
+        }
         // bump counters BEFORE publishing: clients wake on the store write
         // and may read metrics immediately.
+        let ok = res.is_ok();
         match res {
             Ok(r) => {
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
-                store.put_ready(
-                    id,
-                    gserde::result_to_json_with_opt(&r, prepared.report.as_ref()).to_string(),
-                );
+                let ser_start = Instant::now();
+                let mut json = gserde::result_to_json_with_opt(&r, job.prepared.report.as_ref());
+                if let Some(tr) = job.trace.as_mut() {
+                    tr.span_since("serialize", ser_start);
+                    json.set("timing", tr.to_json());
+                }
+                store.put_ready(&job.id, json.to_string());
             }
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
-                store.put_failed(id, &e.to_string());
+                store.put_failed(&job.id, &e.to_string());
+            }
+        }
+        if let Some(o) = obs {
+            o.model.exec.record_duration(exec_d);
+            if let Some(tr) = &job.trace {
+                if ok {
+                    o.model.e2e.record_duration(tr.t0.elapsed());
+                }
+                o.ring.push(tr.to_json());
             }
         }
     }
@@ -563,7 +803,7 @@ mod tests {
         let runner = Arc::new(ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap());
         let store = Arc::new(ObjectStore::new());
         let state = Arc::new(SessionStateStore::default());
-        (ModelService::start(runner, Arc::clone(&store), state, mode), store)
+        (ModelService::start(runner, Arc::clone(&store), state, mode, None), store)
     }
 
     fn simple_graph(v: f32) -> InterventionGraph {
@@ -758,6 +998,142 @@ mod tests {
         assert!(json.contains("values"));
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
         drop(rx);
+    }
+
+    /// Satellite audit: the documented invariant
+    /// `completed + failed <= enqueued` must converge to equality once
+    /// the queue drains — across plain traces, co-tenant merges, session
+    /// bundles, healthy streams, an aborted stream, and a failing trace.
+    #[test]
+    fn counters_balance_after_mixed_load() {
+        let (svc, store) = service(CoTenancy::Parallel { max_merge: 4 });
+        // burst of plain traces (some will merge)
+        for i in 0..6 {
+            svc.submit(format!("t{i}"), simple_graph(i as f32)).unwrap();
+        }
+        // a stateful session bundle (2 traces → 2 enqueued)
+        let tokens = Tensor::zeros(&[1, 16]);
+        let mut s0 = Trace::new("tiny-sim", &tokens);
+        let c = s0.constant(&Tensor::scalar(2.0));
+        s0.save_to_state("acc", c);
+        let mut s1 = Trace::new("tiny-sim", &tokens);
+        let a = s1.from_state("acc");
+        s1.save(a);
+        svc.submit_session(
+            "sess".into(),
+            "bal-1".into(),
+            false,
+            vec![s0.into_graph(), s1.into_graph()],
+        )
+        .unwrap();
+        // a healthy stream
+        let mut st = Trace::new("tiny-sim", &tokens);
+        let h = st.output("layer.0");
+        let m = st.mean(h);
+        st.step_hook(m);
+        let (tx, rx) = std::sync::mpsc::sync_channel(32);
+        svc.submit_stream(st.into_graph(), 2, tx, Duration::from_secs(5))
+            .unwrap();
+        // an aborted stream: capacity-1 channel that nobody drains
+        let mut ab = Trace::new("tiny-sim", &tokens);
+        let h2 = ab.output("layer.0");
+        ab.step_hook(h2);
+        let (tx2, _undrained_rx) = std::sync::mpsc::sync_channel(1);
+        svc.submit_stream(ab.into_graph(), 1000, tx2, Duration::from_millis(50))
+            .unwrap();
+        // a failing trace
+        let mut bad = simple_graph(0.0);
+        bad.nodes.clear();
+        let b = bad.push(crate::graph::Op::Getter {
+            module: "layer.99".into(),
+            port: crate::graph::Port::Output,
+        });
+        bad.push(crate::graph::Op::Save { arg: b });
+        svc.submit("bad".into(), bad).unwrap();
+
+        for i in 0..6 {
+            store
+                .wait_ready(&format!("t{i}"), Duration::from_secs(30))
+                .unwrap();
+        }
+        store.wait_ready("sess", Duration::from_secs(30)).unwrap();
+        assert!(store
+            .wait_outcome("bad", Duration::from_secs(30))
+            .unwrap()
+            .is_err());
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                StreamChunk::Done(_) => break,
+                StreamChunk::Failed(e) => panic!("healthy stream failed: {e}"),
+                StreamChunk::Event(_) => {}
+            }
+        }
+        // the aborted stream needs its send timeout to expire; poll
+        // until the queue drains and the counters balance exactly
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let expect_enqueued = 6 + 2 + 1 + 1 + 1;
+        loop {
+            let snap = svc.load();
+            assert!(
+                snap.completed + snap.failed <= snap.enqueued,
+                "invariant violated mid-drain: {snap:?}"
+            );
+            if snap.queue_depth == 0 && snap.completed + snap.failed == snap.enqueued {
+                break;
+            }
+            assert!(Instant::now() < deadline, "counters stuck: {snap:?}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let snap = svc.load();
+        assert_eq!(snap.enqueued, expect_enqueued);
+        assert_eq!(snap.failed, 2, "aborted stream + failing trace: {snap:?}");
+        assert_eq!(snap.completed, expect_enqueued - 2);
+    }
+
+    /// Worker-side observability: a traced job comes back with `"timing"`
+    /// metadata (queue/exec/serialize spans + interpreter phases), the
+    /// model histograms record it, and the debug ring retains it.
+    #[test]
+    fn traced_jobs_record_histograms_ring_and_timing() {
+        let runner = Arc::new(ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap());
+        let store = Arc::new(ObjectStore::new());
+        let state = Arc::new(SessionStateStore::default());
+        let obs = ServiceObs {
+            model: Arc::new(crate::obs::ModelObs::default()),
+            ring: Arc::new(crate::obs::TraceRing::new(8)),
+        };
+        let svc = ModelService::start(
+            runner,
+            Arc::clone(&store),
+            state,
+            CoTenancy::Sequential,
+            Some(obs.clone()),
+        );
+        let tr = ReqTrace::new("deadbeefdeadbeef".into(), "trace", "tiny-sim");
+        svc.submit_prepared_traced("r0".into(), Prepared::raw(simple_graph(1.0)), Some(tr))
+            .unwrap();
+        let json = store.wait_ready("r0", Duration::from_secs(30)).unwrap();
+        let j = crate::json::parse(&json).unwrap();
+        assert_eq!(j.get("timing").get("trace").as_str(), Some("deadbeefdeadbeef"));
+        let spans: Vec<String> = j
+            .get("timing")
+            .get("spans")
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("name").as_str().unwrap().to_string())
+            .collect();
+        for expected in ["queue", "exec", "exec:forward", "serialize"] {
+            assert!(spans.iter().any(|s| s == expected), "missing {expected}: {spans:?}");
+        }
+        assert_eq!(obs.model.e2e.count(), 1);
+        assert_eq!(obs.model.queue_wait.count(), 1);
+        assert_eq!(obs.model.exec.count(), 1);
+        assert_eq!(obs.ring.len(), 1);
+        assert_eq!(
+            obs.ring.snapshot()[0].get("trace").as_str(),
+            Some("deadbeefdeadbeef")
+        );
     }
 
     #[test]

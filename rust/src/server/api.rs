@@ -64,6 +64,13 @@ pub struct NdifConfig {
     /// config file) is the escape hatch for debugging and for measuring
     /// the optimizer itself (`benches/graphopt.rs`).
     pub optimize: bool,
+    /// Observability (latency histograms, request tracing, debug ring).
+    /// On by default; `NNSCOPE_OBS=off` forces it off regardless
+    /// (`benches/obs.rs` gates the instrumented-vs-off overhead).
+    pub obs: bool,
+    /// Capacity of the finished-request ring served at
+    /// `GET /v1/debug/requests`.
+    pub trace_ring: usize,
 }
 
 impl NdifConfig {
@@ -83,6 +90,8 @@ impl NdifConfig {
             stream_buffer: 32,
             stream_send_timeout: Duration::from_secs(10),
             optimize: true,
+            obs: true,
+            trace_ring: 256,
         }
     }
 }
@@ -98,6 +107,9 @@ struct ServerState {
     stream_send_timeout: Duration,
     /// Admission-compiler toggle (see [`NdifConfig::optimize`]).
     optimize: bool,
+    /// Observability hub: per-model/per-endpoint histograms, opt-pass
+    /// counters, and the finished-request debug ring.
+    obs: Arc<crate::obs::Obs>,
     /// Set during shutdown/kill: in-flight chunked responses abort (drop
     /// the connection without the terminator) instead of outliving the
     /// server — this is what lets a mid-stream replica death surface as a
@@ -136,6 +148,7 @@ impl NdifServer {
     pub fn start(cfg: NdifConfig) -> Result<NdifServer> {
         let store = Arc::new(ObjectStore::new());
         let session_state = Arc::new(SessionStateStore::new(cfg.state_limits));
+        let obs = Arc::new(crate::obs::Obs::new(cfg.obs, &cfg.models, cfg.trace_ring));
         let mut services = HashMap::new();
         for name in &cfg.models {
             let runner = Arc::new(
@@ -149,6 +162,7 @@ impl NdifServer {
                     Arc::clone(&store),
                     Arc::clone(&session_state),
                     cfg.cotenancy,
+                    obs.service_obs(name),
                 ),
             );
         }
@@ -161,6 +175,7 @@ impl NdifServer {
             stream_buffer: cfg.stream_buffer.max(1),
             stream_send_timeout: cfg.stream_send_timeout,
             optimize: cfg.optimize,
+            obs,
             draining: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&state);
@@ -213,9 +228,13 @@ impl NdifServer {
                         agg.completed += l.completed;
                         agg.failed += l.failed;
                     }
+                    // observed end-to-end p95 (ms) across all models, so
+                    // the coordinator's routers can weigh real latency,
+                    // not just queue depth
+                    let p95_ms = state2.obs.merged_e2e().percentile(0.95) * 1e3;
                     // 404 = the coordinator restarted and forgot us: reclaim
                     // our id; transport errors are left for the next beat
-                    if let Ok(404) = fleet::send_heartbeat(coordinator, &id2, &agg) {
+                    if let Ok(404) = fleet::send_heartbeat(coordinator, &id2, &agg, p95_ms) {
                         let _ = fleet::register_replica(
                             coordinator,
                             advertise,
@@ -293,13 +312,34 @@ impl Drop for NdifServer {
 }
 
 fn route(state: &Arc<ServerState>, req: Request) -> Response {
+    // per-endpoint request/error counters + latency histograms ride
+    // every call to an instrumented endpoint
+    let endpoint = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/trace") => Some("trace"),
+        ("POST", "/v1/session") => Some("session"),
+        ("POST", "/v1/stream") => Some("stream"),
+        ("GET", p) if p.starts_with("/v1/result/") => Some("result"),
+        _ => None,
+    };
+    let t0 = Instant::now();
+    let resp = route_inner(state, req);
+    if let Some(e) = endpoint {
+        state.obs.record_endpoint(e, t0.elapsed(), resp.status < 400);
+    }
+    resp
+}
+
+fn route_inner(state: &Arc<ServerState>, req: Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => Response::text(200, "ok"),
         ("GET", "/v1/models") => models_endpoint(state),
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
         ("POST", "/v1/session") => session_endpoint(state, &req),
         ("POST", "/v1/stream") => stream_endpoint(state, &req),
-        ("GET", "/v1/metrics") => metrics_endpoint(state),
+        ("GET", "/v1/debug/requests") => debug_requests_endpoint(state),
+        ("GET", path) if path == "/v1/metrics" || path.starts_with("/v1/metrics?") => {
+            metrics_endpoint(state, path)
+        }
         ("GET", path) if path.starts_with("/v1/result/") => result_endpoint(state, path),
         ("GET", path) if path.starts_with("/v1/session/") => {
             session_info_endpoint(state, &req, &path["/v1/session/".len()..])
@@ -334,13 +374,33 @@ fn models_endpoint(state: &Arc<ServerState>) -> Response {
 
 fn submit_graph(state: &Arc<ServerState>, req: &Request, body: &Json) -> Result<String, Response> {
     let graph = gserde::from_json(body).map_err(|e| Response::bad_request(&e.to_string()))?;
-    submit_parsed_graph(state, req, graph)
+    submit_parsed_graph(state, req, graph, "trace")
+}
+
+/// Open a request trace for an admitted request: reuse the id from the
+/// `x-nnscope-trace` header (client- or coordinator-minted) or mint one.
+/// `None` when observability is off.
+fn open_trace(
+    state: &Arc<ServerState>,
+    req: &Request,
+    endpoint: &'static str,
+    model: &str,
+) -> Option<crate::obs::ReqTrace> {
+    if !state.obs.enabled() {
+        return None;
+    }
+    let tid = req
+        .header(crate::obs::TRACE_HEADER)
+        .map(str::to_string)
+        .unwrap_or_else(crate::obs::mint_trace_id);
+    Some(crate::obs::ReqTrace::new(tid, endpoint, model))
 }
 
 fn submit_parsed_graph(
     state: &Arc<ServerState>,
     req: &Request,
     graph: crate::graph::InterventionGraph,
+    endpoint: &'static str,
 ) -> Result<String, Response> {
     let Some(service) = state.services.get(&graph.model) else {
         return Err(Response::json(
@@ -360,21 +420,30 @@ fn submit_parsed_graph(
             "graph uses session-state ops (load_state/store_state); submit it via POST /v1/session",
         ));
     }
+    let model = graph.model.clone();
+    let mut trace = open_trace(state, req, endpoint, &model);
     // early validation against the manifest so bad graphs fail at submit
     let fseq = service.runner.manifest.forward_sequence();
-    if let Err(e) = crate::graph::validate::validate(&graph, &fseq) {
+    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+        crate::graph::validate::validate(&graph, &fseq)
+    }) {
         return Err(Response::bad_request(&e.to_string()));
     }
     // admission compile (between validation and execution): DCE, constant
     // folding, CSE, fusion. A folding failure — e.g. `mean` over an empty
     // constant subtree — is a guaranteed execution failure, so it is a
     // clean 400 here rather than a mid-forward 500.
-    let prepared = crate::graph::opt::prepare(graph, &fseq, state.optimize)
-        .map_err(|e| Response::bad_request(&e.to_string()))?;
+    let prepared = crate::obs::timed(&mut trace, "opt", || {
+        crate::graph::opt::prepare(graph, &fseq, state.optimize)
+    })
+    .map_err(|e| Response::bad_request(&e.to_string()))?;
+    if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
+        m.record_opt(report);
+    }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
     service
-        .submit_prepared(id.clone(), prepared)
+        .submit_prepared_traced(id.clone(), prepared, trace)
         .map_err(|e| Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string()))))?;
     Ok(id)
 }
@@ -441,7 +510,7 @@ fn stateless_session(
 ) -> Response {
     let mut ids = Vec::with_capacity(graphs.len());
     for g in graphs {
-        match submit_parsed_graph(state, req, g) {
+        match submit_parsed_graph(state, req, g, "session") {
             Ok(id) => ids.push(id),
             Err(resp) => return resp,
         }
@@ -509,24 +578,44 @@ fn stateful_session(
             ));
         }
     }
+    let mut trace = open_trace(state, req, "session", &model);
     // whole-bundle validation: keys stored by trace i are loadable from
     // trace i+1 on; a persistent session also starts with its live keys
     let initial = state.session_state.keys(&session).unwrap_or_default();
     let fseq = service.runner.manifest.forward_sequence();
-    if let Err(e) = crate::graph::validate::validate_session(&graphs, &fseq, &initial) {
+    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+        crate::graph::validate::validate_session(&graphs, &fseq, &initial)
+    }) {
         return Response::bad_request(&e.to_string());
     }
     // admission compile per trace (state ops are roots, so the compiler
     // never folds across LoadState or drops a StoreState)
-    let mut prepared = Vec::with_capacity(graphs.len());
-    for (i, g) in graphs.into_iter().enumerate() {
-        match crate::graph::opt::prepare(g, &fseq, state.optimize) {
-            Ok(p) => prepared.push(p),
-            Err(e) => return Response::bad_request(&format!("session trace {i}: {e}")),
+    let prepared = {
+        let optimize = state.optimize;
+        let r = crate::obs::timed(&mut trace, "opt", || {
+            let mut acc = Vec::with_capacity(graphs.len());
+            for (i, g) in graphs.into_iter().enumerate() {
+                match crate::graph::opt::prepare(g, &fseq, optimize) {
+                    Ok(p) => acc.push(p),
+                    Err(e) => return Err(format!("session trace {i}: {e}")),
+                }
+            }
+            Ok(acc)
+        });
+        match r {
+            Ok(p) => p,
+            Err(e) => return Response::bad_request(&e),
+        }
+    };
+    if let Some(m) = state.obs.model(&model) {
+        for p in &prepared {
+            if let Some(report) = p.report.as_ref() {
+                m.record_opt(report);
+            }
         }
     }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
-    if let Err(e) = service.submit_session_prepared(id.clone(), session, persist, prepared) {
+    if let Err(e) = service.submit_session_traced(id.clone(), session, persist, prepared, trace) {
         return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
     }
     match state.store.wait_outcome(&id, Duration::from_secs(300)) {
@@ -584,8 +673,11 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     if !state.authorize(&model, req.header("x-ndif-auth")) {
         return Response::json(401, "{\"error\":\"not authorized for this model\"}".into());
     }
+    let mut trace = open_trace(state, req, "stream", &model);
     let fseq = service.runner.manifest.forward_sequence();
-    if let Err(e) = crate::graph::validate::validate_stream(&graph, &fseq) {
+    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+        crate::graph::validate::validate_stream(&graph, &fseq)
+    }) {
         return Response::bad_request(&e.to_string());
     }
     // fail fast at submit on constraints the decode loop would otherwise
@@ -608,12 +700,19 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     }
     // admission compile, once per stream: folded constants and eliminated
     // dead getters are paid once per request, not once per decode step
-    let prepared = match crate::graph::opt::prepare(graph, &fseq, state.optimize) {
+    let prepared = match crate::obs::timed(&mut trace, "opt", || {
+        crate::graph::opt::prepare(graph, &fseq, state.optimize)
+    }) {
         Ok(p) => p,
         Err(e) => return Response::bad_request(&e.to_string()),
     };
+    if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
+        m.record_opt(report);
+    }
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
-    if let Err(e) = service.submit_stream_prepared(prepared, steps, tx, state.stream_send_timeout) {
+    if let Err(e) =
+        service.submit_stream_traced(prepared, steps, tx, state.stream_send_timeout, trace)
+    {
         return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
     }
     // the chunked source runs on the HTTP worker serving this connection:
@@ -749,21 +848,91 @@ fn result_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
     }
 }
 
-fn metrics_endpoint(state: &Arc<ServerState>) -> Response {
+/// `GET /v1/metrics[?format=prometheus]`.
+///
+/// JSON form: one top-level key per hosted model with the flat service
+/// counters (the shape the coordinator's metrics aggregation predates
+/// this subsystem and still sums) plus, when observability is on, a
+/// nested `"latency"` object of histogram snapshots
+/// (e2e/queue_wait/exec/ttft, each with raw buckets and p50/p95/p99) and
+/// an `"opt"` object of compiler-pass counters. Keys starting with `_`
+/// carry process-wide gauges — `_store` (result-object occupancy),
+/// `_sessions` (server-side session state count/bytes), `_endpoints`
+/// (per-endpoint request latency), `_obs` — and are transparently
+/// skipped by older counter-summing consumers.
+fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
+    let prometheus = path
+        .split_once('?')
+        .map(|(_, q)| q.split('&').any(|kv| kv == "format=prometheus"))
+        .unwrap_or(false);
+    let (session_count, session_bytes) =
+        (state.session_state.len(), state.session_state.total_bytes());
+    if prometheus {
+        let mut extra = Vec::new();
+        for (name, s) in &state.services {
+            let l = s.load();
+            for (k, v) in [
+                ("enqueued", l.enqueued as f64),
+                ("completed", l.completed as f64),
+                ("failed", l.failed as f64),
+                ("merged_batches", l.merged_batches as f64),
+                ("queue_depth", l.queue_depth as f64),
+                ("exec_seconds", l.exec_seconds),
+            ] {
+                extra.push((format!("nnscope_service_{k}{{model=\"{name}\"}}"), v));
+            }
+        }
+        extra.push(("nnscope_store_objects".to_string(), state.store.len() as f64));
+        extra.push(("nnscope_session_count".to_string(), session_count as f64));
+        extra.push(("nnscope_session_bytes".to_string(), session_bytes as f64));
+        return Response::bytes(
+            200,
+            "text/plain; version=0.0.4",
+            state.obs.prometheus(&extra).into_bytes(),
+        );
+    }
     let mut per_model = std::collections::BTreeMap::new();
     for (name, s) in &state.services {
         let l = s.load();
-        per_model.insert(
-            name.clone(),
-            Json::obj(vec![
-                ("enqueued", Json::from(l.enqueued as i64)),
-                ("completed", Json::from(l.completed as i64)),
-                ("failed", Json::from(l.failed as i64)),
-                ("merged_batches", Json::from(l.merged_batches as i64)),
-                ("queue_depth", Json::from(l.queue_depth as i64)),
-                ("exec_seconds", Json::from(l.exec_seconds)),
-            ]),
-        );
+        let mut fields = vec![
+            ("enqueued", Json::from(l.enqueued as i64)),
+            ("completed", Json::from(l.completed as i64)),
+            ("failed", Json::from(l.failed as i64)),
+            ("merged_batches", Json::from(l.merged_batches as i64)),
+            ("queue_depth", Json::from(l.queue_depth as i64)),
+            ("exec_seconds", Json::from(l.exec_seconds)),
+        ];
+        if let Some(m) = state.obs.model(name) {
+            let (latency, opt) = m.to_json();
+            fields.push(("latency", latency));
+            fields.push(("opt", opt));
+        }
+        per_model.insert(name.clone(), Json::obj(fields));
     }
+    per_model.insert(
+        "_store".to_string(),
+        Json::obj(vec![("objects", Json::from(state.store.len() as i64))]),
+    );
+    per_model.insert(
+        "_sessions".to_string(),
+        Json::obj(vec![
+            ("count", Json::from(session_count as i64)),
+            ("bytes", Json::from(session_bytes as i64)),
+        ]),
+    );
+    per_model.insert("_endpoints".to_string(), state.obs.endpoints_json());
+    per_model.insert(
+        "_obs".to_string(),
+        Json::obj(vec![("enabled", Json::Bool(state.obs.enabled()))]),
+    );
     Response::json(200, Json::Object(per_model).to_string())
+}
+
+/// `GET /v1/debug/requests`: the bounded ring of recently finished
+/// request traces, oldest first.
+fn debug_requests_endpoint(state: &Arc<ServerState>) -> Response {
+    Response::json(
+        200,
+        Json::obj(vec![("requests", Json::Array(state.obs.ring().snapshot()))]).to_string(),
+    )
 }

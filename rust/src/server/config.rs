@@ -108,6 +108,12 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
     if let Some(o) = j.get("optimize").as_bool() {
         cfg.optimize = o;
     }
+    if let Some(o) = j.get("obs").as_bool() {
+        cfg.obs = o;
+    }
+    if let Some(n) = j.get("trace_ring").as_usize() {
+        cfg.trace_ring = n;
+    }
     if cfg.models.is_empty() {
         return Err(anyhow!("config must list at least one model"));
     }
@@ -164,6 +170,16 @@ mod tests {
         assert!(!cfg.optimize);
         let cfg = from_json_text(r#"{"models": ["m"], "optimize": true}"#).unwrap();
         assert!(cfg.optimize);
+    }
+
+    #[test]
+    fn obs_toggles_parse() {
+        let cfg = from_json_text(r#"{"models": ["m"]}"#).unwrap();
+        assert!(cfg.obs, "observability is on by default");
+        assert_eq!(cfg.trace_ring, 256);
+        let cfg = from_json_text(r#"{"models": ["m"], "obs": false, "trace_ring": 16}"#).unwrap();
+        assert!(!cfg.obs);
+        assert_eq!(cfg.trace_ring, 16);
     }
 
     #[test]

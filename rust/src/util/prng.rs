@@ -120,6 +120,27 @@ impl Prng {
         mean + std * self.normal() as f32
     }
 
+    /// Exponential sample with the given rate (mean `1/rate`) — the
+    /// inter-arrival gap of a Poisson arrival process, the standard
+    /// open-loop load model.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0, "exponential rate must be positive");
+        loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                return -u.ln() / rate;
+            }
+        }
+    }
+
+    /// Lognormal sample `exp(mu + sigma·Z)`. Heavy-tailed for `sigma ≳ 1`:
+    /// most gaps are short but occasional gaps are very long, which is how
+    /// real inference traffic burst-clusters (and what stresses queue-wait
+    /// percentiles in a way exponential arrivals cannot).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
     /// Fill a buffer with normal samples scaled by `std` — the synthetic
     /// weight initializer (truncation at 3σ to keep activations tame).
     pub fn fill_normal(&mut self, buf: &mut [f32], std: f32) {
@@ -227,6 +248,30 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut p = Prng::new(21);
+        let n = 100_000;
+        let rate = 4.0;
+        let mean: f64 = (0..n).map(|_| p.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_mean_and_tail() {
+        let mut p = Prng::new(23);
+        let n = 200_000;
+        let (mu, sigma) = (0.0, 1.0);
+        let xs: Vec<f64> = (0..n).map(|_| p.lognormal(mu, sigma)).collect();
+        // E[X] = exp(mu + sigma^2/2)
+        let expect = (mu + sigma * sigma / 2.0).exp();
+        let mean: f64 = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - expect).abs() < 0.05, "mean={mean} expect={expect}");
+        // heavy tail: max far above the mean, all samples positive
+        assert!(xs.iter().all(|&x| x > 0.0));
+        assert!(xs.iter().cloned().fold(0.0, f64::max) > 10.0 * mean);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Observability integration: fleet percentile merging, trace-id
+//! propagation across coordinator failover, and debug-ring bounding.
+//!
+//! The load-bearing assertion is bit-identity: a percentile served by the
+//! coordinator's `/v1/fleet/metrics` (computed from per-bucket-merged
+//! histograms) must equal — `f64::to_bits` equal, not approximately — the
+//! percentile computed from the concatenation of the per-replica bucket
+//! arrays. That is the property that makes fleet tail latency trustworthy:
+//! merging is exact, not an average of averages.
+
+use std::time::{Duration, Instant};
+
+use nnscope::client::remote::NdifClient;
+use nnscope::client::Trace;
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::json::{parse, Json};
+use nnscope::obs::{percentile_from_counts, HistSnapshot, BUCKETS, TRACE_HEADER};
+use nnscope::server::{http, NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+
+fn coordinator(policy: Policy, probe: Duration) -> Coordinator {
+    let mut cfg = CoordinatorConfig::local();
+    cfg.policy = policy;
+    cfg.probe_interval = probe;
+    Coordinator::start(cfg).unwrap()
+}
+
+fn replica(coord: &Coordinator) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.coordinator = Some(coord.addr().to_string());
+    cfg.heartbeat = Duration::from_millis(50);
+    NdifServer::start(cfg).unwrap()
+}
+
+fn run_one(client: &NdifClient, v: f32) {
+    let tokens = Tensor::new(&[1, 16], vec![v; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    tr.run_remote(client).unwrap();
+}
+
+fn get_json(addr: std::net::SocketAddr, path: &str) -> Json {
+    let (status, body) = http::get(addr, path).unwrap();
+    assert_eq!(status, 200, "{path}: {}", String::from_utf8_lossy(&body));
+    parse(std::str::from_utf8(&body).unwrap()).unwrap()
+}
+
+/// Replica-side e2e snapshot once it has recorded `want` observations
+/// (the worker records histograms just after publishing the result, so a
+/// brief wait closes the race with the last client response).
+fn e2e_when_counted(addr: std::net::SocketAddr, want: u64) -> HistSnapshot {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let j = get_json(addr, "/v1/metrics");
+        if let Some(h) = HistSnapshot::from_json(j.get("tiny-sim").get("latency").get("e2e")) {
+            if h.count >= want {
+                return h;
+            }
+        }
+        assert!(Instant::now() < deadline, "replica at {addr} never recorded {want} e2e obs");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn fleet_percentiles_match_concatenated_buckets() {
+    let coord = coordinator(Policy::RoundRobin, Duration::from_millis(50));
+    let r1 = replica(&coord);
+    let r2 = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+    let n = 6u64;
+    for i in 0..n {
+        run_one(&client, i as f32);
+    }
+
+    // quiesce: both replicas must have banked every observation before the
+    // fleet endpoint fans out, and round-robin guarantees both saw traffic
+    let (_, c1, _, _) = r1.metrics("tiny-sim").unwrap();
+    let (_, c2, _, _) = r2.metrics("tiny-sim").unwrap();
+    assert_eq!(c1 + c2, n);
+    assert!(c1 >= 1 && c2 >= 1, "round-robin did not spread: {c1}/{c2}");
+    let h1 = e2e_when_counted(r1.addr(), c1);
+    let h2 = e2e_when_counted(r2.addr(), c2);
+
+    let fleet = get_json(coord.addr(), "/v1/fleet/metrics");
+    let m = fleet.get("tiny-sim");
+    assert_eq!(m.get("completed").as_i64(), Some(n as i64));
+    assert_eq!(fleet.get("_fleet").get("replicas").as_i64(), Some(2));
+    let merged = HistSnapshot::from_json(m.get("latency").get("e2e")).unwrap();
+
+    // "concatenating" the per-replica observations is exactly an
+    // element-wise sum of their bucket arrays (boundaries are static)
+    let mut concat = [0u64; BUCKETS];
+    for (slot, (a, b)) in concat.iter_mut().zip(h1.counts.iter().zip(h2.counts.iter())) {
+        *slot = a + b;
+    }
+    assert_eq!(merged.counts, concat, "fleet merge must be the per-bucket sum");
+    assert_eq!(merged.count, n);
+    for q in [0.5, 0.9, 0.95, 0.99] {
+        assert_eq!(
+            merged.percentile(q).to_bits(),
+            percentile_from_counts(&concat, q).to_bits(),
+            "fleet p{} must be bit-identical to the concatenated percentile",
+            (q * 100.0) as u32
+        );
+    }
+
+    // queue-wait and exec histograms merge through the same machinery
+    for kind in ["queue_wait", "exec"] {
+        let h = HistSnapshot::from_json(m.get("latency").get(kind)).unwrap();
+        assert_eq!(h.count, n, "{kind} lost observations in the merge");
+    }
+}
+
+#[test]
+fn trace_id_survives_failover_retry() {
+    // slow probe: the monitor must not notice the ghost before the request
+    let coord = coordinator(Policy::LeastLoaded, Duration::from_secs(60));
+    // a dead replica registered FIRST — least-loaded breaks the 0-load tie
+    // by id, so the first routing attempt goes here and fails at transport
+    let (status, _) = http::post(
+        coord.addr(),
+        "/v1/fleet/register",
+        br#"{"addr":"127.0.0.1:9","models":["tiny-sim"],"latency_s":0.0}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let real = replica(&coord);
+
+    let tokens = Tensor::new(&[1, 16], vec![1.0; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    let payload = nnscope::graph::serde::to_json(tr.graph()).to_string();
+
+    let tid = "deadbeefcafef00d";
+    let (status, body) = http::http_request(
+        coord.addr(),
+        "POST",
+        "/v1/trace",
+        payload.as_bytes(),
+        &[("Content-Type", "application/json"), (TRACE_HEADER, tid)],
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let (status, body) =
+        http::get(coord.addr(), &format!("/v1/result/{id}?timeout_ms=30000")).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let timing = j.get("timing");
+    // the surviving replica stamped its spans under the id the client
+    // minted — the failover retry did NOT re-mint
+    assert_eq!(timing.get("trace").as_str(), Some(tid));
+    assert_eq!(timing.get("attempts").as_i64(), Some(2), "timing: {timing}");
+    assert!(timing.get("coordinator_us").as_i64().unwrap_or(-1) >= 0);
+    assert!(
+        timing.get("spans").as_array().is_some_and(|s| !s.is_empty()),
+        "replica spans missing: {timing}"
+    );
+
+    // the coordinator's own debug ring remembers the request by that id
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let j = get_json(coord.addr(), "/v1/debug/requests");
+        let reqs = j.get("requests").as_array().unwrap().to_vec();
+        if reqs
+            .iter()
+            .any(|r| r.get("trace").as_str() == Some(tid) && r.get("attempts").as_i64() == Some(2))
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "coordinator ring never saw {tid}: {j}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(real);
+}
+
+#[test]
+fn debug_ring_is_bounded() {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.trace_ring = 3;
+    let server = NdifServer::start(cfg).unwrap();
+    let client = NdifClient::new(server.addr());
+    let n = 9;
+    for i in 0..n {
+        run_one(&client, i as f32);
+    }
+
+    // the ring fills to its bound and stays there; the worker pushes just
+    // after the result publishes, so wait for the final push
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let j = get_json(server.addr(), "/v1/debug/requests");
+        let reqs = j.get("requests").as_array().unwrap().to_vec();
+        assert!(reqs.len() <= 3, "ring exceeded its bound: {} entries", reqs.len());
+        if reqs.len() == 3 {
+            for r in &reqs {
+                assert_eq!(r.get("endpoint").as_str(), Some("trace"));
+                assert!(r.get("trace").as_str().is_some_and(|t| !t.is_empty()));
+            }
+            break;
+        }
+        assert!(Instant::now() < deadline, "ring never filled: {j}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // client-visible timing: the observed variant surfaces the same spans
+    let tokens = Tensor::new(&[1, 16], vec![3.0; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    let (_, _, timing) = client.execute_observed(tr.graph()).unwrap();
+    let timing = timing.expect("obs-enabled server must return timing metadata");
+    assert!(timing.get("spans").as_array().is_some_and(|s| !s.is_empty()));
+}

@@ -83,6 +83,11 @@ fn metrics() -> Vec<Metric> {
             name: "graphopt cotenant_speedup_opt (raw/opt merge)",
             extract: |j| j.get("cotenant_speedup_opt").as_f64(),
         },
+        Metric {
+            file: "BENCH_obs.json",
+            name: "obs on/off throughput ratio",
+            extract: |j| j.get("obs_ratio_on_off").as_f64(),
+        },
     ]
 }
 
@@ -99,6 +104,7 @@ fn main() {
         "BENCH_sessions.json",
         "BENCH_streaming.json",
         "BENCH_graphopt.json",
+        "BENCH_obs.json",
     ];
 
     if args.flag("update") {
