@@ -1,0 +1,163 @@
+//! Fault-injection goodput: client-visible throughput of a fleet that is
+//! actively being abused — probabilistic dispatch faults the whole run and
+//! a replica crash a quarter of the way in.
+//!
+//! Every client runs under the unified `RetryPolicy` (backoff + jitter +
+//! Retry-After honoring), so the number measured here is *goodput*: requests
+//! that completed successfully end-to-end despite the chaos, per second of
+//! wall clock. The chaos schedule is deterministic — the dispatch failpoint
+//! draws from a seeded stream and the crash triggers at a fixed completion
+//! fraction — so a regression in this number means the fault-tolerance
+//! machinery (failover bookkeeping, retry policy, health hysteresis) got
+//! slower or lossier, not that the dice rolled differently.
+//!
+//! Emits `BENCH_faults.json` (gated by `tools/bench_gate.rs`).
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nnscope::client::{remote::NdifClient, RetryPolicy, Trace};
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::json::Json;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::failpoint::{self, FailAction, Spec};
+use nnscope::util::table::Table;
+
+fn main() {
+    let model = "tiny-sim";
+    let (n_users, reqs_per_user) = if common::quick() { (4usize, 8usize) } else { (8, 25) };
+    let total = (n_users * reqs_per_user) as u64;
+    common::section(&format!(
+        "Faults — goodput under chaos ({model}, {n_users} users × {reqs_per_user} reqs, \
+         5% dispatch faults, 1 of 2 replicas crashes at 25%)"
+    ));
+
+    let mut coord_cfg = CoordinatorConfig::local();
+    coord_cfg.policy = Policy::LeastLoaded;
+    coord_cfg.probe_interval = Duration::from_millis(50);
+    coord_cfg.health.degraded_after = Duration::from_millis(400);
+    coord_cfg.health.dead_after = Duration::from_secs(2);
+    let mut coord = Coordinator::start(coord_cfg).expect("coordinator");
+
+    let mk_replica = || {
+        let mut cfg = NdifConfig::local(&[model]);
+        cfg.coordinator = Some(coord.addr().to_string());
+        cfg.heartbeat = Duration::from_millis(50);
+        NdifServer::start(cfg).expect("replica")
+    };
+    let victim = mk_replica();
+    let mut survivor = mk_replica();
+    let addr = coord.addr();
+
+    // warm both replicas before the clock starts
+    for i in 0..2 {
+        let client = NdifClient::new(addr);
+        let mut tr = Trace::new(model, &Tensor::new(&[1, 16], vec![i as f32; 16]));
+        let h = tr.output("layer.0");
+        tr.save(h);
+        tr.run_remote(&client).expect("warmup");
+    }
+
+    // deterministic chaos: 5% of dispatches fault for the whole run
+    failpoint::arm(
+        "coord.dispatch",
+        Spec::prob(0.05, 0xFA17, FailAction::Error("injected dispatch fault".into())),
+    );
+
+    let done = Arc::new(AtomicU64::new(0));
+    let succeeded = Arc::new(AtomicU64::new(0));
+
+    // crash one replica once a quarter of the workload has completed
+    let killer = {
+        let done = Arc::clone(&done);
+        let mut victim = victim;
+        std::thread::spawn(move || {
+            while done.load(Ordering::Relaxed) < total / 4 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let t = Instant::now();
+            victim.kill();
+            t
+        })
+    };
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_users)
+        .map(|u| {
+            let done = Arc::clone(&done);
+            let succeeded = Arc::clone(&succeeded);
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                let policy = RetryPolicy::new(
+                    8,
+                    Duration::from_millis(20),
+                    Duration::from_secs(1),
+                    Duration::from_secs(20),
+                    0xC0FFEE + u as u64,
+                );
+                for i in 0..reqs_per_user {
+                    let mut tr =
+                        Trace::new(model, &Tensor::new(&[1, 16], vec![(u * 100 + i) as f32; 16]));
+                    let h = tr.output("layer.0");
+                    tr.save(h);
+                    let g = tr.into_graph();
+                    if client.execute_with_retry(&g, &policy).is_ok() {
+                        succeeded.fetch_add(1, Ordering::Relaxed);
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let kill_at = killer.join().unwrap().duration_since(t0).as_secs_f64();
+    failpoint::reset();
+
+    let ok = succeeded.load(Ordering::Relaxed);
+    let goodput = ok as f64 / wall;
+    let success_rate = ok as f64 / total as f64;
+    let injected = failpoint::fired("coord.dispatch");
+
+    let mut table = Table::new("goodput under chaos").header(vec![
+        "requests", "succeeded", "wall (s)", "goodput (req/s)", "success rate", "crash at (s)",
+    ]);
+    table.row(vec![
+        format!("{total}"),
+        format!("{ok}"),
+        format!("{wall:.3}"),
+        format!("{goodput:.2}"),
+        format!("{success_rate:.3}"),
+        format!("{kill_at:.3}"),
+    ]);
+    table.print();
+    common::shape_note(&format!(
+        "{ok}/{total} requests survived a replica crash plus {injected} injected dispatch \
+         faults — {goodput:.2} req/s goodput"
+    ));
+
+    survivor.shutdown();
+    coord.shutdown();
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("faults")),
+        ("quick", Json::Bool(common::quick())),
+        ("model", Json::from(model)),
+        ("requests", Json::from(total as i64)),
+        ("succeeded", Json::from(ok as i64)),
+        ("injected_dispatch_faults", Json::from(injected as i64)),
+        ("crash_at_s", Json::from(kill_at)),
+        ("wall_s", Json::from(wall)),
+        ("goodput_rps", Json::from(goodput)),
+        ("success_rate", Json::from(success_rate)),
+    ]);
+    std::fs::write("BENCH_faults.json", json.pretty()).expect("write BENCH_faults.json");
+    println!("\nwrote BENCH_faults.json");
+}

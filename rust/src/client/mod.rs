@@ -58,9 +58,11 @@
 
 pub mod infabric;
 pub mod remote;
+pub mod retry;
 pub mod scan;
 pub mod session;
 
+pub use retry::RetryPolicy;
 pub use session::Session;
 
 use anyhow::Result;

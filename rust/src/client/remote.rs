@@ -347,18 +347,75 @@ impl NdifClient {
         )?;
         Ok(status == 200)
     }
+
+    // ---- resilient variants (unified retry policy) ------------------------
+
+    /// [`NdifClient::execute`] under a [`crate::client::RetryPolicy`]:
+    /// replica deaths, 429 throttles, and load sheds are retried with
+    /// backoff + jitter (honoring `Retry-After`); request faults fail
+    /// immediately. Safe because trace submission is idempotent from the
+    /// client's view — each attempt is a fresh request id.
+    pub fn execute_with_retry(
+        &self,
+        graph: &InterventionGraph,
+        policy: &crate::client::RetryPolicy,
+    ) -> Result<GraphResult> {
+        policy.call(|_| self.execute(graph))
+    }
+
+    /// [`NdifClient::execute_session_in`] under a retry policy. Each
+    /// attempt re-submits the whole bundle, which is the correct recovery
+    /// for a replica death mid-session: the pin is released and the new
+    /// replica rebuilds state from the bundle itself. Only appropriate
+    /// when the bundle is self-contained (does not read state written by
+    /// *earlier* bundles of the same named session).
+    pub fn execute_session_with_retry(
+        &self,
+        graphs: &[InterventionGraph],
+        session: Option<&str>,
+        policy: &crate::client::RetryPolicy,
+    ) -> Result<Vec<GraphResult>> {
+        policy.call(|_| self.execute_session_in(graphs, session))
+    }
+
+    /// Run a streaming generation to completion under a retry policy,
+    /// restarting the stream from step 0 when it dies retryably (replica
+    /// death mid-stream, truncated transport). Returns the events of the
+    /// first attempt that reaches its terminal `Done` — partial events
+    /// from failed attempts are discarded, so the caller sees exactly one
+    /// consistent trajectory.
+    pub fn execute_stream_with_retry(
+        &self,
+        graph: &InterventionGraph,
+        steps: usize,
+        policy: &crate::client::RetryPolicy,
+    ) -> Result<Vec<StreamEvent>> {
+        policy.call(|_| {
+            let iter = self.execute_stream(graph, steps)?;
+            let mut events = Vec::new();
+            for ev in iter {
+                events.push(ev?);
+            }
+            Ok(events)
+        })
+    }
 }
 
 /// Does this error mean the session's server-side state was lost and the
 /// loop should restart from scratch (replica death mid-session)?
+///
+/// Thin alias over [`crate::client::retry::is_retryable`] — the envelope
+/// contract (and the backoff that should follow) lives in one place.
 pub fn is_retryable_session_err(e: &anyhow::Error) -> bool {
-    e.to_string().contains("\"retryable\":true")
+    crate::client::retry::is_retryable(e)
 }
 
 /// Does this stream error mean the serving replica died mid-stream and the
 /// client should restart the stream (rather than a graph/request fault)?
+///
+/// Thin alias over [`crate::client::retry::is_retryable`].
 pub fn is_retryable_stream_err(e: &anyhow::Error) -> bool {
-    e.to_string().contains("\"retryable\":true")
+    crate::client::retry::is_retryable(e)
 }
 
 // ---------------------------------------------------------------------------

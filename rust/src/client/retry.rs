@@ -1,0 +1,324 @@
+//! Unified client resilience: one retry policy for every remote path.
+//!
+//! Before this module, each call site decided ad hoc whether an error was
+//! worth retrying (`is_retryable_session_err`, `is_retryable_stream_err`,
+//! hand-rolled loops in tests). The fabric's error contract is simple —
+//! transient faults carry `"retryable":true` in the error envelope, and
+//! backpressure (429 / load shed) additionally carries `retry_after_ms` —
+//! so the retry decision belongs in exactly one place.
+//!
+//! [`RetryPolicy`] implements capped exponential backoff with
+//! *decorrelated jitter* (each sleep is drawn uniformly from
+//! `[base, 3 × previous]`, capped), the variant that best de-synchronizes
+//! a thundering herd of retrying clients. A server-advertised
+//! `Retry-After` (parsed from `retry_after_ms` in the envelope) acts as a
+//! floor on the next sleep — the server knows its refill rate better than
+//! the client's backoff curve does. A total deadline budget bounds the
+//! worst case: a retry is only attempted if its sleep still fits in the
+//! budget, so callers get an error in bounded time instead of a stall.
+//!
+//! Jitter draws come from the seeded [`Prng`], so a client's retry
+//! schedule is reproducible in tests and chaos runs.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::prng::Prng;
+
+/// How an error should be treated by a retry loop.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ErrorClass {
+    /// Transient: the operation may succeed if repeated (replica died and
+    /// the coordinator will re-route; bucket refills; shed clears).
+    /// `retry_after` is the server-advertised wait, when present.
+    Retryable { retry_after: Option<Duration> },
+    /// Permanent: a request fault (bad graph, auth failure) — repeating it
+    /// reproduces it.
+    Fatal,
+}
+
+/// Classify an error by the fabric's envelope contract: transient faults
+/// are marked `"retryable":true`; backpressure adds `retry_after_ms`.
+pub fn classify(e: &anyhow::Error) -> ErrorClass {
+    let s = e.to_string();
+    if !s.contains("\"retryable\":true") {
+        return ErrorClass::Fatal;
+    }
+    ErrorClass::Retryable { retry_after: parse_retry_after_ms(&s) }
+}
+
+/// Is this error worth retrying at all? (The predicate behind the old
+/// `is_retryable_session_err`/`is_retryable_stream_err` helpers.)
+pub fn is_retryable(e: &anyhow::Error) -> bool {
+    matches!(classify(e), ErrorClass::Retryable { .. })
+}
+
+/// Pull `"retry_after_ms":N` out of an error envelope, if present.
+fn parse_retry_after_ms(s: &str) -> Option<Duration> {
+    let key = "\"retry_after_ms\":";
+    let at = s.find(key)? + key.len();
+    let digits: String = s[at..]
+        .chars()
+        .skip_while(|c| c.is_whitespace())
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse::<u64>().ok().map(Duration::from_millis)
+}
+
+/// Capped exponential backoff with decorrelated jitter, a deadline
+/// budget, and `Retry-After` honoring.
+#[derive(Debug)]
+pub struct RetryPolicy {
+    /// Attempt ceiling (1 = no retries).
+    pub max_attempts: u32,
+    /// First backoff sleep (and the jitter distribution's floor).
+    pub base: Duration,
+    /// Per-sleep ceiling.
+    pub cap: Duration,
+    /// Total wall-clock budget across all attempts and sleeps.
+    pub budget: Duration,
+    /// Jitter stream; seeded so retry schedules replay deterministically.
+    prng: Mutex<Prng>,
+}
+
+impl Clone for RetryPolicy {
+    fn clone(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: self.max_attempts,
+            base: self.base,
+            cap: self.cap,
+            budget: self.budget,
+            prng: Mutex::new(self.prng.lock().unwrap().clone()),
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    /// 6 attempts, 50 ms base, 2 s cap, 30 s budget — tuned so a replica
+    /// death (coordinator re-routes on the next attempt) and a drained
+    /// token bucket (sub-second refill at sane rates) both recover well
+    /// inside the budget.
+    fn default() -> RetryPolicy {
+        RetryPolicy::new(6, Duration::from_millis(50), Duration::from_secs(2), Duration::from_secs(30), 0x7e7a)
+    }
+}
+
+impl RetryPolicy {
+    pub fn new(
+        max_attempts: u32,
+        base: Duration,
+        cap: Duration,
+        budget: Duration,
+        seed: u64,
+    ) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            base,
+            cap,
+            budget,
+            prng: Mutex::new(Prng::new(seed)),
+        }
+    }
+
+    /// A policy that never retries (for call sites that want the
+    /// classification contract but handle scheduling themselves).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy::new(1, Duration::ZERO, Duration::ZERO, Duration::from_secs(30), 0)
+    }
+
+    /// Next sleep: decorrelated jitter `uniform(base, 3 × prev)` capped at
+    /// `cap`, floored by the server's `Retry-After` when present.
+    fn next_sleep(&self, prev: Duration, retry_after: Option<Duration>) -> Duration {
+        let lo = self.base.as_secs_f64();
+        let hi = (prev.as_secs_f64() * 3.0).max(lo * 1.000_001);
+        let drawn = {
+            let mut p = self.prng.lock().unwrap();
+            lo + p.uniform() * (hi - lo)
+        };
+        let jittered = Duration::from_secs_f64(drawn).min(self.cap);
+        match retry_after {
+            Some(ra) => jittered.max(ra),
+            None => jittered,
+        }
+    }
+
+    /// Run `op` under this policy. `op` receives the 0-based attempt
+    /// index. Fatal errors and budget/attempt exhaustion return the last
+    /// error unchanged.
+    pub fn call<T>(&self, op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+        self.call_with_sleeper(op, |d| std::thread::sleep(d))
+    }
+
+    /// [`RetryPolicy::call`] with an injected sleeper (tests record the
+    /// schedule instead of actually sleeping).
+    pub fn call_with_sleeper<T>(
+        &self,
+        mut op: impl FnMut(u32) -> Result<T>,
+        mut sleep: impl FnMut(Duration),
+    ) -> Result<T> {
+        let start = Instant::now();
+        let mut prev_sleep = self.base;
+        for attempt in 0..self.max_attempts {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let retry_after = match classify(&e) {
+                        ErrorClass::Fatal => return Err(e),
+                        ErrorClass::Retryable { retry_after } => retry_after,
+                    };
+                    if attempt + 1 >= self.max_attempts {
+                        return Err(e);
+                    }
+                    let pause = self.next_sleep(prev_sleep, retry_after);
+                    if start.elapsed() + pause > self.budget {
+                        return Err(e.context(format!(
+                            "retry budget {:?} exhausted after {} attempts",
+                            self.budget,
+                            attempt + 1
+                        )));
+                    }
+                    sleep(pause);
+                    prev_sleep = pause;
+                }
+            }
+        }
+        unreachable!("loop returns on last attempt")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    fn retryable_err() -> anyhow::Error {
+        anyhow!("replica died {{\"retryable\":true}}")
+    }
+
+    fn throttled_err(ms: u64) -> anyhow::Error {
+        anyhow!("{{\"error\":\"rate limited\",\"retryable\":true,\"retry_after_ms\":{ms}}}")
+    }
+
+    #[test]
+    fn classifies_the_envelope_contract() {
+        assert_eq!(
+            classify(&retryable_err()),
+            ErrorClass::Retryable { retry_after: None }
+        );
+        assert_eq!(
+            classify(&throttled_err(250)),
+            ErrorClass::Retryable { retry_after: Some(Duration::from_millis(250)) }
+        );
+        assert_eq!(classify(&anyhow!("validation: unknown module")), ErrorClass::Fatal);
+        assert!(is_retryable(&retryable_err()));
+        assert!(!is_retryable(&anyhow!("auth required")));
+    }
+
+    #[test]
+    fn retries_transient_until_success() {
+        let p = RetryPolicy::new(5, Duration::from_millis(1), Duration::from_millis(4), Duration::from_secs(5), 1);
+        let mut calls = 0;
+        let out: Result<u32> = p.call_with_sleeper(
+            |_| {
+                calls += 1;
+                if calls < 3 { Err(retryable_err()) } else { Ok(7) }
+            },
+            |_| {},
+        );
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn fatal_errors_do_not_retry() {
+        let p = RetryPolicy::default();
+        let mut calls = 0;
+        let out: Result<()> = p.call_with_sleeper(
+            |_| {
+                calls += 1;
+                Err(anyhow!("bad graph"))
+            },
+            |_| panic!("must not sleep on fatal"),
+        );
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn attempts_are_capped() {
+        let p = RetryPolicy::new(3, Duration::from_millis(1), Duration::from_millis(2), Duration::from_secs(5), 2);
+        let mut calls = 0;
+        let out: Result<()> = p.call_with_sleeper(
+            |_| {
+                calls += 1;
+                Err(retryable_err())
+            },
+            |_| {},
+        );
+        assert!(out.is_err());
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn honors_retry_after_as_floor() {
+        let p = RetryPolicy::new(3, Duration::from_millis(1), Duration::from_secs(10), Duration::from_secs(30), 3);
+        let mut sleeps = Vec::new();
+        let mut calls = 0;
+        let _: Result<()> = p.call_with_sleeper(
+            |_| {
+                calls += 1;
+                Err(throttled_err(500))
+            },
+            |d| sleeps.push(d),
+        );
+        assert_eq!(sleeps.len(), 2);
+        for s in &sleeps {
+            assert!(*s >= Duration::from_millis(500), "Retry-After is a floor: {s:?}");
+        }
+    }
+
+    #[test]
+    fn sleeps_are_jittered_capped_and_deterministic() {
+        let run = |seed| -> Vec<Duration> {
+            let p = RetryPolicy::new(
+                6,
+                Duration::from_millis(10),
+                Duration::from_millis(80),
+                Duration::from_secs(30),
+                seed,
+            );
+            let mut sleeps = Vec::new();
+            let _: Result<()> =
+                p.call_with_sleeper(|_| Err(retryable_err()), |d| sleeps.push(d));
+            sleeps
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed, same schedule");
+        for s in &a {
+            assert!(*s >= Duration::from_millis(10) && *s <= Duration::from_millis(80), "{s:?}");
+        }
+        // jitter: not all sleeps identical
+        assert!(a.iter().any(|s| s != &a[0]), "{a:?}");
+    }
+
+    #[test]
+    fn budget_bounds_total_wait() {
+        // budget far smaller than what the advertised Retry-After demands:
+        // the loop must give up rather than stall
+        let p = RetryPolicy::new(10, Duration::from_millis(1), Duration::from_secs(60), Duration::from_millis(50), 4);
+        let mut calls = 0;
+        let out: Result<()> = p.call_with_sleeper(
+            |_| {
+                calls += 1;
+                Err(throttled_err(10_000))
+            },
+            |_| panic!("sleep would blow the budget"),
+        );
+        let msg = format!("{:#}", out.unwrap_err());
+        assert!(msg.contains("retry budget"), "{msg}");
+        assert_eq!(calls, 1);
+    }
+}

@@ -46,10 +46,12 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::json::{parse, Json};
 use crate::scheduler::LoadSnapshot;
-use crate::server::api::parse_result_path;
+use crate::server::admission::{AdmissionControl, Decision, RateLimit};
+use crate::server::api::{parse_result_path, throttle_response};
 use crate::server::http::{self, Chunk, Handler, HttpServer, Request, Response};
 use crate::server::store::{Entry, ObjectStore};
 use crate::threadpool::ThreadPool;
+use crate::util::failpoint::{self, FailAction};
 
 use super::registry::{Health, HealthPolicy, Registry, Replica};
 use super::router::{Policy, Router};
@@ -88,6 +90,11 @@ pub struct CoordinatorConfig {
     /// Statically configured replicas: `host:port` or `host:port@latency_s`
     /// (the latency a [`crate::netsim::NetSim`] profile would charge).
     pub replicas: Vec<String>,
+    /// Front-door per-tenant token-bucket rate limit (keyed by auth token,
+    /// anonymous traffic pooling), applied BEFORE routing so an overdrawn
+    /// tenant is throttled once at the fleet edge instead of burning a
+    /// routing worker per rejected request. `None` = unlimited.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl CoordinatorConfig {
@@ -104,6 +111,7 @@ impl CoordinatorConfig {
             io_timeout: Duration::from_secs(10),
             session_pin_ttl: Duration::from_secs(600),
             replicas: Vec::new(),
+            rate_limit: None,
         }
     }
 }
@@ -141,6 +149,10 @@ struct CoordState {
     /// coordinator-side view — trace id, model, attempts, outcome — of
     /// the last N requests, written once per finished request.
     ring: crate::obs::TraceRing,
+    /// Front-door per-tenant rate limiting (`None` = unlimited).
+    admission: Option<AdmissionControl>,
+    /// Requests throttled 429 at the front door.
+    throttled: AtomicU64,
 }
 
 impl CoordState {
@@ -203,6 +215,8 @@ impl Coordinator {
             sessions: Mutex::new(HashMap::new()),
             session_pin_ttl: cfg.session_pin_ttl,
             ring: crate::obs::TraceRing::new(256),
+            admission: cfg.rate_limit.map(AdmissionControl::new),
+            throttled: AtomicU64::new(0),
         });
         let s2 = Arc::clone(&state);
         let handler: Handler = Arc::new(move |req| route(&s2, req));
@@ -422,6 +436,22 @@ fn probe_models(addr: SocketAddr, timeout: Duration) -> Result<Vec<String>> {
 // ---------------------------------------------------------------------------
 
 fn route(state: &Arc<CoordState>, req: Request) -> Response {
+    // front-door rate limit on work-submitting endpoints, before any
+    // parsing or routing-worker dispatch. A replica-side 429 is relayed
+    // as-is further down — never failed over: the tenant's bucket is just
+    // as overdrawn at the next replica.
+    if matches!(
+        (req.method.as_str(), req.path.as_str()),
+        ("POST", "/v1/trace") | ("POST", "/v1/session") | ("POST", "/v1/stream")
+    ) {
+        if let Some(adm) = &state.admission {
+            let tenant = req.header("x-ndif-auth").unwrap_or("anon");
+            if let Decision::Throttle { retry_after } = adm.check(tenant) {
+                state.throttled.fetch_add(1, Ordering::Relaxed);
+                return throttle_response(retry_after);
+            }
+        }
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => Response::text(200, "ok"),
         ("GET", "/v1/fleet/status") => status_endpoint(state),
@@ -545,6 +575,7 @@ fn status_endpoint(state: &Arc<CoordState>) -> Response {
         200,
         Json::obj(vec![
             ("policy", Json::from(state.core.router.policy.as_str())),
+            ("throttled", Json::from(state.throttled.load(Ordering::Relaxed) as i64)),
             ("replicas", Json::Array(replicas)),
         ])
         .to_string(),
@@ -802,6 +833,15 @@ fn route_and_execute(
             );
         };
         core.registry.record_dispatch(&rep.id);
+        // chaos hook: a simulated transport fault on this dispatch — the
+        // attempt fails exactly like an unreachable replica, exercising
+        // the failover path deterministically
+        if let Some(FailAction::Error(msg)) = failpoint::hit("coord.dispatch") {
+            core.registry.record_failure(&rep.id);
+            tried.push(rep.id.clone());
+            last_err = format!("injected dispatch fault: {msg}");
+            continue;
+        }
         match proxy_trace(core, &rep, payload, auth, trace_id) {
             Ok(Routed::Done(body)) => {
                 core.registry.record_success(&rep.id);

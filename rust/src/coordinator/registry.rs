@@ -79,10 +79,19 @@ impl Replica {
 }
 
 /// Thresholds turning heartbeat age / failure counts into [`Health`].
+///
+/// Failure counts are hysteretic: one dropped probe or one failed dispatch
+/// is forgiven (`degraded_failures` consecutive misses demote to
+/// Degraded, `failure_limit` to Dead) — a single packet-loss blip must not
+/// drain a healthy replica's traffic, while a genuinely sick replica still
+/// decays in a bounded number of probe intervals.
 #[derive(Clone, Copy, Debug)]
 pub struct HealthPolicy {
     pub degraded_after: Duration,
     pub dead_after: Duration,
+    /// Consecutive transport failures before a replica is demoted to
+    /// [`Health::Degraded`] (must be ≤ `failure_limit` to matter).
+    pub degraded_failures: u32,
     /// Consecutive transport failures before a replica is declared dead.
     pub failure_limit: u32,
 }
@@ -92,6 +101,7 @@ impl Default for HealthPolicy {
         HealthPolicy {
             degraded_after: Duration::from_secs(1),
             dead_after: Duration::from_secs(5),
+            degraded_failures: 2,
             failure_limit: 3,
         }
     }
@@ -263,7 +273,9 @@ impl Registry {
                 || age > policy.dead_after
             {
                 Health::Dead
-            } else if rep.consecutive_failures > 0 || age > policy.degraded_after {
+            } else if rep.consecutive_failures >= policy.degraded_failures
+                || age > policy.degraded_after
+            {
                 Health::Degraded
             } else {
                 Health::Alive
@@ -323,7 +335,18 @@ mod tests {
         HealthPolicy {
             degraded_after: Duration::from_millis(40),
             dead_after: Duration::from_millis(120),
+            degraded_failures: 1,
             failure_limit: 2,
+        }
+    }
+
+    /// Hysteretic policy: forgive one miss, degrade at two, kill at three.
+    fn hysteresis_policy() -> HealthPolicy {
+        HealthPolicy {
+            degraded_after: Duration::from_secs(60),
+            dead_after: Duration::from_secs(120),
+            degraded_failures: 2,
+            failure_limit: 3,
         }
     }
 
@@ -419,6 +442,53 @@ mod tests {
         assert_eq!(snap[0].consecutive_failures, 0);
         assert_eq!(snap[0].inflight, 0);
         assert_eq!(snap[0].routed, 2);
+    }
+
+    #[test]
+    fn hysteresis_transition_table() {
+        // Full transition table under degraded_failures=2, failure_limit=3:
+        // a single blip is forgiven; sustained misses decay in steps; any
+        // heartbeat or dispatch success heals back to Alive.
+        let reg = Registry::new(hysteresis_policy());
+        let id = reg.register(addr(7007), vec!["m".into()], 0.0, None);
+        assert_eq!(reg.snapshot()[0].health, Health::Alive, "fresh replica");
+
+        reg.probe_failed(&id);
+        assert_eq!(
+            reg.snapshot()[0].health,
+            Health::Alive,
+            "one missed probe is forgiven (no flap on a single blip)"
+        );
+
+        reg.probe_failed(&id);
+        assert_eq!(
+            reg.snapshot()[0].health,
+            Health::Degraded,
+            "degraded_failures=2 consecutive misses demote"
+        );
+        assert_eq!(reg.candidates("m").len(), 1, "degraded still routable");
+
+        reg.probe_failed(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Dead, "failure_limit=3 kills");
+        assert!(reg.candidates("m").is_empty());
+
+        // A heartbeat resets the failure streak entirely.
+        assert!(reg.heartbeat(&id, 0, 0, 0, 0.0));
+        assert_eq!(reg.snapshot()[0].health, Health::Alive, "heartbeat heals");
+        assert_eq!(reg.snapshot()[0].consecutive_failures, 0);
+
+        // Dispatch failures follow the same ladder…
+        reg.record_dispatch(&id);
+        reg.record_failure(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Alive);
+        reg.record_dispatch(&id);
+        reg.record_failure(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Degraded);
+
+        // …and one success (not just a heartbeat) also resets the streak.
+        reg.record_dispatch(&id);
+        reg.record_success(&id);
+        assert_eq!(reg.snapshot()[0].health, Health::Alive, "success heals");
     }
 
     #[test]

@@ -35,9 +35,14 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
               [--no-opt]   (disable the admission graph compiler)
               [--no-obs]   (disable latency histograms + request tracing)
               [--trace-ring 256]   (GET /v1/debug/requests retention)
+              [--data-dir /path]   (journaled durable results, replayed on restart)
+              [--rate-limit N] [--rate-burst M]   (per-tenant requests/s + burst)
+              [--tenant-queue-cap N]   (per-tenant in-flight queue units)
+              [--shed-anon-above N] [--shed-all-above M]   (load-shed watermarks)
   coordinate  [--addr 127.0.0.1:7788] [--replicas host:port[@latency_s],..]
               [--policy round-robin|least-loaded|latency-aware]
               [--probe-ms 250] [--retries 3] [--workers 8]
+              [--rate-limit N] [--rate-burst M]   (front-door per-tenant limit)
   models
   survey
   trace       --addr 127.0.0.1:7757 [--model tiny-sim]
@@ -87,6 +92,7 @@ fn serve(args: &Args) -> Result<()> {
         if args.flag("no-obs") {
             cfg.obs = false;
         }
+        apply_fault_tolerance_flags(args, &mut cfg)?;
         println!("preloading {:?} (from {path}) …", cfg.models);
         let server = NdifServer::start(cfg)?;
         announce_serving(&server);
@@ -99,7 +105,7 @@ fn serve(args: &Args) -> Result<()> {
         .split(',')
         .map(str::to_string)
         .collect();
-    let cfg = NdifConfig {
+    let mut cfg = NdifConfig {
         addr: args.str_or("addr", "127.0.0.1:7757"),
         workers: args.usize_or("workers", 8),
         models: models.clone(),
@@ -125,13 +131,69 @@ fn serve(args: &Args) -> Result<()> {
         optimize: !args.flag("no-opt"),
         obs: !args.flag("no-obs"),
         trace_ring: args.usize_or("trace-ring", 256),
+        data_dir: None,
+        rate_limit: None,
+        tenant_queue_cap: usize::MAX,
+        shed: nnscope::server::admission::ShedPolicy::disabled(),
     };
+    apply_fault_tolerance_flags(args, &mut cfg)?;
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;
     announce_serving(&server);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Apply the fault-tolerance CLI flags (shared by the config-file path,
+/// where they override the file, and the flag-only path).
+fn apply_fault_tolerance_flags(args: &Args, cfg: &mut NdifConfig) -> Result<()> {
+    if let Some(d) = args.get("data-dir") {
+        cfg.data_dir = Some(d.into());
+    }
+    if let Some(rl) = rate_limit_from_args(args)? {
+        cfg.rate_limit = Some(rl);
+    }
+    if let Some(n) = args.get("tenant-queue-cap") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --tenant-queue-cap '{n}'"))?;
+        cfg.tenant_queue_cap = n.max(1);
+    }
+    if let Some(a) = args.get("shed-anon-above") {
+        let anon: usize = a
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --shed-anon-above '{a}'"))?;
+        let all = match args.get("shed-all-above") {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid --shed-all-above '{s}'"))?,
+            None => anon.saturating_mul(2),
+        };
+        cfg.shed = nnscope::server::admission::ShedPolicy {
+            shed_anon_above: anon,
+            shed_all_above: all,
+        };
+    }
+    Ok(())
+}
+
+/// Parse `--rate-limit N [--rate-burst M]` into a token-bucket config.
+fn rate_limit_from_args(args: &Args) -> Result<Option<nnscope::server::admission::RateLimit>> {
+    let Some(per_s) = args.get("rate-limit") else {
+        return Ok(None);
+    };
+    let per_s: f64 = per_s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("invalid --rate-limit '{per_s}'"))?;
+    if per_s <= 0.0 {
+        anyhow::bail!("--rate-limit must be positive");
+    }
+    let burst = match args.get("rate-burst") {
+        Some(b) => b.parse().map_err(|_| anyhow::anyhow!("invalid --rate-burst '{b}'"))?,
+        None => per_s.max(1.0),
+    };
+    Ok(Some(nnscope::server::admission::RateLimit::new(per_s, burst)))
 }
 
 fn announce_serving(server: &NdifServer) {
@@ -153,6 +215,7 @@ fn coordinate(args: &Args) -> Result<()> {
     cfg.policy = policy;
     cfg.max_retries = args.usize_or("retries", 3);
     cfg.probe_interval = std::time::Duration::from_millis(args.u64_or("probe-ms", 250));
+    cfg.rate_limit = rate_limit_from_args(args)?;
     if let Some(reps) = args.get("replicas") {
         cfg.replicas = reps.split(',').map(str::to_string).collect();
     }

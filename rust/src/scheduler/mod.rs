@@ -15,4 +15,6 @@ pub mod cotenancy;
 pub mod queue;
 
 pub use cotenancy::{execute_merged, CoTenancy};
-pub use queue::{LoadSnapshot, ModelService, ServiceMetrics, StreamChunk};
+pub use queue::{
+    LoadSnapshot, ModelService, ServiceMetrics, StreamChunk, TenantCapExceeded, TenantDepths,
+};

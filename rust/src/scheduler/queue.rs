@@ -14,9 +14,10 @@
 //! model's single worker thread gives the ordering guarantee state
 //! dataflow needs for free.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -28,8 +29,87 @@ use crate::models::ModelRunner;
 use crate::obs::{phases, ReqTrace, ServiceObs};
 use crate::server::state::SessionStateStore;
 use crate::server::store::ObjectStore;
+use crate::util::failpoint::{self, FailAction};
 
 use super::cotenancy::{execute_merged, mergeable, plan_merge_chunks, CoTenancy};
+
+/// Submission rejected because the tenant is at its queue-depth cap.
+/// Surfaced to the HTTP front as a 429 (the tenant's backpressure, not the
+/// replica's — a coordinator must NOT fail over on it).
+#[derive(Debug)]
+pub struct TenantCapExceeded {
+    pub tenant: String,
+    pub depth: usize,
+    pub cap: usize,
+}
+
+impl std::fmt::Display for TenantCapExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant '{}' at queue-depth cap ({}/{})",
+            self.tenant, self.depth, self.cap
+        )
+    }
+}
+
+impl std::error::Error for TenantCapExceeded {}
+
+/// Per-tenant in-flight accounting, shared across all model services of a
+/// replica so one tenant cannot monopolize the queues even by spreading
+/// requests over models. Anonymous traffic pools under one key (it is
+/// collectively lowest-priority).
+pub struct TenantDepths {
+    cap: AtomicUsize,
+    map: Mutex<HashMap<String, usize>>,
+}
+
+const ANON_TENANT: &str = "anon";
+
+impl Default for TenantDepths {
+    fn default() -> Self {
+        TenantDepths::new(usize::MAX)
+    }
+}
+
+impl TenantDepths {
+    pub fn new(cap: usize) -> TenantDepths {
+        TenantDepths { cap: AtomicUsize::new(cap.max(1)), map: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn set_cap(&self, cap: usize) {
+        self.cap.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// Current in-flight units for a tenant (tests, metrics).
+    pub fn depth(&self, tenant: Option<&str>) -> usize {
+        let key = tenant.unwrap_or(ANON_TENANT);
+        *self.map.lock().unwrap().get(key).unwrap_or(&0)
+    }
+
+    fn try_acquire(&self, tenant: Option<&str>, n: usize) -> Result<(), TenantCapExceeded> {
+        let cap = self.cap.load(Ordering::Relaxed);
+        let key = tenant.unwrap_or(ANON_TENANT);
+        let mut g = self.map.lock().unwrap();
+        let depth = g.entry(key.to_string()).or_insert(0);
+        if *depth + n > cap {
+            return Err(TenantCapExceeded { tenant: key.to_string(), depth: *depth, cap });
+        }
+        *depth += n;
+        Ok(())
+    }
+
+    fn release(&self, tenant: Option<&str>, n: usize) {
+        let key = tenant.unwrap_or(ANON_TENANT);
+        let mut g = self.map.lock().unwrap();
+        if let Some(depth) = g.get_mut(key) {
+            *depth = depth.saturating_sub(n);
+            if *depth == 0 {
+                g.remove(key);
+            }
+        }
+    }
+}
 
 /// Counters exposed at `/v1/metrics`.
 #[derive(Default)]
@@ -80,6 +160,9 @@ struct TraceJob {
     /// Request trace, moved along with the job (None when observability
     /// is off or the submit bypassed the server front).
     trace: Option<ReqTrace>,
+    /// Tenant the job's in-flight unit is charged to (None = anonymous
+    /// pool); released when the job completes.
+    tenant: Option<String>,
 }
 
 struct SessionJob {
@@ -91,6 +174,7 @@ struct SessionJob {
     /// sessions); ephemeral sessions drop it at the end.
     persist: bool,
     trace: Option<ReqTrace>,
+    tenant: Option<String>,
 }
 
 /// One frame of a streaming response, already serialized for the wire.
@@ -117,6 +201,7 @@ struct StreamJob {
     /// the consumer gone and aborting the decode.
     send_timeout: Duration,
     trace: Option<ReqTrace>,
+    tenant: Option<String>,
 }
 
 enum Job {
@@ -131,6 +216,7 @@ pub struct ModelService {
     pub metrics: Arc<ServiceMetrics>,
     store: Arc<ObjectStore>,
     session_state: Arc<SessionStateStore>,
+    tenants: Arc<TenantDepths>,
     tx: Option<Sender<Job>>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -138,7 +224,9 @@ pub struct ModelService {
 impl ModelService {
     /// Spawn the service worker. `obs` is the model's observability
     /// bundle (latency histograms + debug trace ring); `None` turns all
-    /// recording off.
+    /// recording off. The service gets a private (uncapped) tenant-depth
+    /// tracker; use [`Self::start_with_tenants`] to share one across a
+    /// replica's model services.
     pub fn start(
         runner: Arc<ModelRunner>,
         store: Arc<ObjectStore>,
@@ -146,17 +234,58 @@ impl ModelService {
         mode: CoTenancy,
         obs: Option<ServiceObs>,
     ) -> ModelService {
+        Self::start_with_tenants(
+            runner,
+            store,
+            session_state,
+            mode,
+            obs,
+            Arc::new(TenantDepths::default()),
+        )
+    }
+
+    /// [`Self::start`] with a shared tenant-depth tracker, so one tenant's
+    /// in-flight cap spans every model service of the replica.
+    pub fn start_with_tenants(
+        runner: Arc<ModelRunner>,
+        store: Arc<ObjectStore>,
+        session_state: Arc<SessionStateStore>,
+        mode: CoTenancy,
+        obs: Option<ServiceObs>,
+        tenants: Arc<TenantDepths>,
+    ) -> ModelService {
         let (tx, rx) = channel::<Job>();
         let metrics = Arc::new(ServiceMetrics::default());
         let m2 = Arc::clone(&metrics);
         let r2 = Arc::clone(&runner);
         let store2 = Arc::clone(&store);
         let state2 = Arc::clone(&session_state);
+        let t2 = Arc::clone(&tenants);
         let worker = std::thread::Builder::new()
             .name(format!("ndif-service-{}", runner.manifest.name))
-            .spawn(move || Self::worker_loop(rx, r2, store2, state2, mode, m2, obs))
+            .spawn(move || Self::worker_loop(rx, r2, store2, state2, mode, m2, obs, t2))
             .expect("spawn service worker");
-        ModelService { runner, metrics, store, session_state, tx: Some(tx), worker: Some(worker) }
+        ModelService {
+            runner,
+            metrics,
+            store,
+            session_state,
+            tenants,
+            tx: Some(tx),
+            worker: Some(worker),
+        }
+    }
+
+    /// The per-tenant depth tracker (shared or private — see
+    /// [`Self::start_with_tenants`]).
+    pub fn tenant_depths(&self) -> &Arc<TenantDepths> {
+        &self.tenants
+    }
+
+    /// Set the per-tenant in-flight cap (units match `queue_depth`:
+    /// 1 per trace/stream, bundle size per session).
+    pub fn set_tenant_cap(&self, cap: usize) {
+        self.tenants.set_cap(cap);
     }
 
     /// Load snapshot for `/v1/metrics`, coordinator heartbeats, and fleet
@@ -191,8 +320,22 @@ impl ModelService {
         &self,
         id: String,
         prepared: Prepared,
-        mut trace: Option<ReqTrace>,
+        trace: Option<ReqTrace>,
     ) -> Result<()> {
+        self.submit_prepared_for(id, prepared, trace, None)
+    }
+
+    /// [`Self::submit_prepared_traced`] attributed to a tenant: the
+    /// submission counts against the tenant's in-flight cap and is
+    /// rejected with [`TenantCapExceeded`] when the tenant is at it.
+    pub fn submit_prepared_for(
+        &self,
+        id: String,
+        prepared: Prepared,
+        mut trace: Option<ReqTrace>,
+        tenant: Option<&str>,
+    ) -> Result<()> {
+        self.tenants.try_acquire(tenant, 1).map_err(anyhow::Error::new)?;
         self.store.put_pending(&id);
         if let Some(t) = trace.as_mut() {
             t.mark_enqueued();
@@ -202,14 +345,16 @@ impl ModelService {
         // them back (the job never reached the worker)
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        let sent = self
-            .tx
-            .as_ref()
-            .expect("service stopped")
-            .send(Job::Trace(TraceJob { id: id.clone(), prepared, trace }));
+        let sent = self.tx.as_ref().expect("service stopped").send(Job::Trace(TraceJob {
+            id: id.clone(),
+            prepared,
+            trace,
+            tenant: tenant.map(str::to_string),
+        }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
             self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            self.tenants.release(tenant, 1);
             self.store.put_failed(&id, "service worker exited");
             return Err(anyhow::anyhow!("service worker exited"));
         }
@@ -253,23 +398,42 @@ impl ModelService {
         session: String,
         persist: bool,
         graphs: Vec<Prepared>,
+        trace: Option<ReqTrace>,
+    ) -> Result<()> {
+        self.submit_session_for(id, session, persist, graphs, trace, None)
+    }
+
+    /// [`Self::submit_session_traced`] attributed to a tenant; the bundle
+    /// counts `graphs.len()` units against the tenant's in-flight cap.
+    pub fn submit_session_for(
+        &self,
+        id: String,
+        session: String,
+        persist: bool,
+        graphs: Vec<Prepared>,
         mut trace: Option<ReqTrace>,
+        tenant: Option<&str>,
     ) -> Result<()> {
         let n = graphs.len();
+        self.tenants.try_acquire(tenant, n).map_err(anyhow::Error::new)?;
         self.store.put_pending(&id);
         if let Some(t) = trace.as_mut() {
             t.mark_enqueued();
         }
         self.metrics.enqueued.fetch_add(n as u64, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(n, Ordering::Relaxed);
-        let sent = self
-            .tx
-            .as_ref()
-            .expect("service stopped")
-            .send(Job::Session(SessionJob { id: id.clone(), session, graphs, persist, trace }));
+        let sent = self.tx.as_ref().expect("service stopped").send(Job::Session(SessionJob {
+            id: id.clone(),
+            session,
+            graphs,
+            persist,
+            trace,
+            tenant: tenant.map(str::to_string),
+        }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(n as u64, Ordering::Relaxed);
             self.metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
+            self.tenants.release(tenant, n);
             self.store.put_failed(&id, "service worker exited");
             return Err(anyhow::anyhow!("service worker exited"));
         }
@@ -313,26 +477,47 @@ impl ModelService {
         steps: usize,
         tx: SyncSender<StreamChunk>,
         send_timeout: Duration,
-        mut trace: Option<ReqTrace>,
+        trace: Option<ReqTrace>,
     ) -> Result<()> {
+        self.submit_stream_for(prepared, steps, tx, send_timeout, trace, None)
+    }
+
+    /// [`Self::submit_stream_traced`] attributed to a tenant; the stream
+    /// holds one unit of the tenant's in-flight cap until its terminal
+    /// frame.
+    pub fn submit_stream_for(
+        &self,
+        prepared: Prepared,
+        steps: usize,
+        tx: SyncSender<StreamChunk>,
+        send_timeout: Duration,
+        mut trace: Option<ReqTrace>,
+        tenant: Option<&str>,
+    ) -> Result<()> {
+        self.tenants.try_acquire(tenant, 1).map_err(anyhow::Error::new)?;
         if let Some(t) = trace.as_mut() {
             t.mark_enqueued();
         }
         self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        let sent = self
-            .tx
-            .as_ref()
-            .expect("service stopped")
-            .send(Job::Stream(StreamJob { prepared, steps, tx, send_timeout, trace }));
+        let sent = self.tx.as_ref().expect("service stopped").send(Job::Stream(StreamJob {
+            prepared,
+            steps,
+            tx,
+            send_timeout,
+            trace,
+            tenant: tenant.map(str::to_string),
+        }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
             self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            self.tenants.release(tenant, 1);
             return Err(anyhow::anyhow!("service worker exited"));
         }
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn worker_loop(
         rx: Receiver<Job>,
         runner: Arc<ModelRunner>,
@@ -341,16 +526,18 @@ impl ModelService {
         mode: CoTenancy,
         metrics: Arc<ServiceMetrics>,
         obs: Option<ServiceObs>,
+        tenants: Arc<TenantDepths>,
     ) {
         let obs = obs.as_ref();
+        let tenants = &*tenants;
         while let Ok(first) = rx.recv() {
             let first = match first {
                 Job::Session(s) => {
-                    Self::run_session(&runner, &store, &session_state, &metrics, obs, s);
+                    Self::run_session(&runner, &store, &session_state, &metrics, obs, tenants, s);
                     continue;
                 }
                 Job::Stream(s) => {
-                    Self::run_stream(&runner, &metrics, obs, s);
+                    Self::run_stream(&runner, &metrics, obs, tenants, s);
                     continue;
                 }
                 Job::Trace(t) => t,
@@ -381,7 +568,7 @@ impl ModelService {
                 let mut rest = batch;
                 for take in chunks {
                     let tail = rest.split_off(take.min(rest.len()));
-                    Self::run_batch(&runner, &store, &metrics, obs, rest, mode);
+                    Self::run_batch(&runner, &store, &metrics, obs, tenants, rest, mode);
                     rest = tail;
                     if rest.is_empty() {
                         break;
@@ -391,16 +578,16 @@ impl ModelService {
                 // jobs: every drained request is owed a result and a
                 // completed/failed counter bump
                 if !rest.is_empty() {
-                    Self::run_batch(&runner, &store, &metrics, obs, rest, mode);
+                    Self::run_batch(&runner, &store, &metrics, obs, tenants, rest, mode);
                 }
             } else {
-                Self::run_batch(&runner, &store, &metrics, obs, batch, mode);
+                Self::run_batch(&runner, &store, &metrics, obs, tenants, batch, mode);
             }
             match deferred {
                 Some(Job::Session(s)) => {
-                    Self::run_session(&runner, &store, &session_state, &metrics, obs, s)
+                    Self::run_session(&runner, &store, &session_state, &metrics, obs, tenants, s)
                 }
-                Some(Job::Stream(s)) => Self::run_stream(&runner, &metrics, obs, s),
+                Some(Job::Stream(s)) => Self::run_stream(&runner, &metrics, obs, tenants, s),
                 Some(Job::Trace(_)) | None => {}
             }
         }
@@ -436,6 +623,15 @@ impl ModelService {
     /// consumer is gone (disconnected) or too slow (timeout) — the decode
     /// must stop rather than pin this worker.
     fn send_chunk(tx: &SyncSender<StreamChunk>, mut chunk: StreamChunk, timeout: Duration) -> bool {
+        // chaos hooks: Skip drops the frame on the floor (lossy consumer
+        // path), Error declares the consumer gone, Delay stalls the
+        // producer as a slow consumer would
+        match failpoint::hit("stream.frame") {
+            Some(FailAction::Skip) => return true,
+            Some(FailAction::Error(_)) => return false,
+            Some(FailAction::Delay(d)) => std::thread::sleep(d),
+            _ => {}
+        }
         let deadline = Instant::now() + timeout;
         loop {
             match tx.try_send(chunk) {
@@ -460,6 +656,7 @@ impl ModelService {
         runner: &ModelRunner,
         metrics: &ServiceMetrics,
         obs: Option<&ServiceObs>,
+        tenants: &TenantDepths,
         mut job: StreamJob,
     ) {
         Self::note_dequeue(&mut job.trace, obs);
@@ -560,6 +757,7 @@ impl ModelService {
             .exec_nanos
             .fetch_add(exec_d.as_nanos() as u64, Ordering::Relaxed);
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        tenants.release(job.tenant.as_deref(), 1);
     }
 
     /// Execute a stateful session bundle in order on this worker thread.
@@ -573,6 +771,7 @@ impl ModelService {
         session_state: &SessionStateStore,
         metrics: &ServiceMetrics,
         obs: Option<&ServiceObs>,
+        tenants: &TenantDepths,
         mut job: SessionJob,
     ) {
         Self::note_dequeue(&mut job.trace, obs);
@@ -642,6 +841,7 @@ impl ModelService {
             .exec_nanos
             .fetch_add(exec_d.as_nanos() as u64, Ordering::Relaxed);
         metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
+        tenants.release(job.tenant.as_deref(), n);
     }
 
     fn run_batch(
@@ -649,6 +849,7 @@ impl ModelService {
         store: &ObjectStore,
         metrics: &ServiceMetrics,
         obs: Option<&ServiceObs>,
+        tenants: &TenantDepths,
         mut batch: Vec<TraceJob>,
         mode: CoTenancy,
     ) {
@@ -722,6 +923,9 @@ impl ModelService {
             .exec_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         metrics.queue_depth.fetch_sub(n, Ordering::Relaxed);
+        for job in &batch {
+            tenants.release(job.tenant.as_deref(), 1);
+        }
     }
 
     /// Publish one trace result: bump counters, stamp exec/serialize
@@ -1153,5 +1357,74 @@ mod tests {
             .unwrap();
         assert!(err.is_err());
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tenant_depths_acquire_release_and_cap() {
+        let td = TenantDepths::new(3);
+        td.try_acquire(Some("a"), 2).unwrap();
+        td.try_acquire(Some("a"), 1).unwrap();
+        let err = td.try_acquire(Some("a"), 1).unwrap_err();
+        assert_eq!(err.tenant, "a");
+        assert_eq!(err.depth, 3);
+        assert_eq!(err.cap, 3);
+        // other tenants (and the anonymous pool) are isolated
+        td.try_acquire(Some("b"), 3).unwrap();
+        td.try_acquire(None, 3).unwrap();
+        assert_eq!(td.depth(Some("a")), 3);
+        td.release(Some("a"), 2);
+        td.try_acquire(Some("a"), 1).unwrap();
+        // releases never underflow, and a drained tenant is pruned
+        td.release(Some("a"), 100);
+        assert_eq!(td.depth(Some("a")), 0);
+        assert!(td.map.lock().unwrap().get("a").is_none());
+        // raising the cap admits more
+        td.set_cap(5);
+        td.try_acquire(Some("b"), 2).unwrap();
+    }
+
+    /// Per-tenant admission: with the worker pinned by a stream whose
+    /// consumer never drains, a tenant at its in-flight cap gets a
+    /// [`TenantCapExceeded`] rejection while other tenants still enqueue;
+    /// once the queue drains the tenant is admitted again.
+    #[test]
+    fn tenant_cap_rejects_then_recovers() {
+        let (svc, store) = service(CoTenancy::Sequential);
+        svc.set_tenant_cap(2);
+        // pin the worker: capacity-1 channel nobody drains, short timeout
+        let mut tr = Trace::new("tiny-sim", &Tensor::zeros(&[1, 16]));
+        let h = tr.output("layer.0");
+        tr.step_hook(h);
+        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
+        svc.submit_stream(tr.into_graph(), 1000, tx, Duration::from_millis(200))
+            .unwrap();
+        // tenant "a" fills its cap while the worker is pinned
+        svc.submit_prepared_for("a0".into(), Prepared::raw(simple_graph(0.0)), None, Some("a"))
+            .unwrap();
+        svc.submit_prepared_for("a1".into(), Prepared::raw(simple_graph(1.0)), None, Some("a"))
+            .unwrap();
+        let err = svc
+            .submit_prepared_for("a2".into(), Prepared::raw(simple_graph(2.0)), None, Some("a"))
+            .unwrap_err();
+        let cap = err
+            .downcast_ref::<TenantCapExceeded>()
+            .expect("typed cap error for the 429 mapping");
+        assert_eq!(cap.tenant, "a");
+        // a different tenant is unaffected
+        svc.submit_prepared_for("b0".into(), Prepared::raw(simple_graph(3.0)), None, Some("b"))
+            .unwrap();
+        // the pinned stream aborts on send timeout, traces drain, and the
+        // tenant's in-flight units come back
+        for id in ["a0", "a1", "b0"] {
+            store.wait_ready(id, Duration::from_secs(30)).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while svc.tenant_depths().depth(Some("a")) > 0 {
+            assert!(Instant::now() < deadline, "tenant units never released");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        svc.submit_prepared_for("a3".into(), Prepared::raw(simple_graph(4.0)), None, Some("a"))
+            .unwrap();
+        store.wait_ready("a3", Duration::from_secs(30)).unwrap();
     }
 }

@@ -14,8 +14,10 @@ use anyhow::{Context, Result};
 use crate::graph::serde as gserde;
 use crate::json::{parse, Json};
 use crate::models::ModelRunner;
-use crate::scheduler::{CoTenancy, ModelService, StreamChunk};
+use crate::scheduler::{CoTenancy, ModelService, StreamChunk, TenantCapExceeded, TenantDepths};
+use crate::util::failpoint::{self, FailAction};
 
+use super::admission::{AdmissionControl, Decision, RateLimit, ShedPolicy};
 use super::http::{Chunk, Handler, HttpServer, Request, Response};
 use super::state::{SessionStateStore, StateLimits};
 use super::store::{Entry, ObjectStore};
@@ -71,6 +73,20 @@ pub struct NdifConfig {
     /// Capacity of the finished-request ring served at
     /// `GET /v1/debug/requests`.
     pub trace_ring: usize,
+    /// Durable-results directory: when set, completed results are
+    /// journaled to `<data_dir>/store.journal` and survive a crash —
+    /// a restarted replica replays the journal and serves them again
+    /// (exactly-once pickup still holds: delivery evicts durably too).
+    pub data_dir: Option<PathBuf>,
+    /// Per-tenant token-bucket rate limit (keyed by auth token; anonymous
+    /// traffic pools). `None` = unlimited (the default).
+    pub rate_limit: Option<RateLimit>,
+    /// Per-tenant in-flight queue-depth cap across this replica's model
+    /// services; breaching it is the tenant's own backpressure (429).
+    pub tenant_queue_cap: usize,
+    /// Graceful load shedding at total-queue-depth watermarks (anonymous
+    /// traffic shed first). Disabled by default.
+    pub shed: ShedPolicy,
 }
 
 impl NdifConfig {
@@ -92,8 +108,25 @@ impl NdifConfig {
             optimize: true,
             obs: true,
             trace_ring: 256,
+            data_dir: None,
+            rate_limit: None,
+            tenant_queue_cap: usize::MAX,
+            shed: ShedPolicy::disabled(),
         }
     }
+}
+
+/// Fault-tolerance counters surfaced under `_faults` in `/v1/metrics`.
+#[derive(Default)]
+struct FaultStats {
+    /// Requests rejected 429 (rate limit or tenant queue cap).
+    throttled: AtomicU64,
+    /// Requests shed 503 at the load watermarks.
+    shed: AtomicU64,
+    /// Completed results recovered from the journal at startup.
+    journal_replayed: AtomicU64,
+    /// Torn/corrupt bytes truncated from the journal tail at startup.
+    journal_truncated_bytes: AtomicU64,
 }
 
 struct ServerState {
@@ -110,6 +143,12 @@ struct ServerState {
     /// Observability hub: per-model/per-endpoint histograms, opt-pass
     /// counters, and the finished-request debug ring.
     obs: Arc<crate::obs::Obs>,
+    /// Per-tenant token buckets (`None` = unlimited).
+    admission: Option<AdmissionControl>,
+    /// Load-shed watermarks over the summed queue depth.
+    shed: ShedPolicy,
+    /// Fault-tolerance counters (throttles, sheds, journal recovery).
+    faults: FaultStats,
     /// Set during shutdown/kill: in-flight chunked responses abort (drop
     /// the connection without the terminator) instead of outliving the
     /// server — this is what lets a mid-stream replica death surface as a
@@ -123,6 +162,12 @@ impl ServerState {
             None => true,
             Some(allowed) => token.map(|t| allowed.iter().any(|a| a == t)).unwrap_or(false),
         }
+    }
+
+    /// Summed queue depth across all model services — the load-shed
+    /// signal.
+    fn total_queue_depth(&self) -> usize {
+        self.services.values().map(|s| s.load().queue_depth).sum()
     }
 }
 
@@ -146,9 +191,37 @@ impl NdifServer {
     /// [`NdifConfig::coordinator`] set, also register this deployment as a
     /// fleet replica and start pushing heartbeats.
     pub fn start(cfg: NdifConfig) -> Result<NdifServer> {
-        let store = Arc::new(ObjectStore::new());
+        // durable mode: open + replay the journal before serving, so
+        // results completed by a previous incarnation are deliverable
+        // again, and resume the id counter past every replayed id
+        let faults = FaultStats::default();
+        let (store, next_id) = match &cfg.data_dir {
+            Some(dir) => {
+                let (store, report) =
+                    ObjectStore::with_journal(ObjectStore::DEFAULT_TTL, &dir.join("store.journal"))
+                        .context("open durable result journal")?;
+                faults
+                    .journal_replayed
+                    .store(report.entries.len() as u64, Ordering::Relaxed);
+                faults
+                    .journal_truncated_bytes
+                    .store(report.truncated_bytes as u64, Ordering::Relaxed);
+                if report.truncated_bytes > 0 {
+                    eprintln!(
+                        "nnscope: journal replay truncated {} torn byte(s) at the tail",
+                        report.truncated_bytes
+                    );
+                }
+                let next = store.max_id_suffix("r-").map(|n| n + 1).unwrap_or(1);
+                (Arc::new(store), next)
+            }
+            None => (Arc::new(ObjectStore::new()), 1),
+        };
         let session_state = Arc::new(SessionStateStore::new(cfg.state_limits));
         let obs = Arc::new(crate::obs::Obs::new(cfg.obs, &cfg.models, cfg.trace_ring));
+        // one tenant-depth tracker spans every model service, so a
+        // tenant's in-flight cap can't be dodged by spreading over models
+        let tenants = Arc::new(TenantDepths::new(cfg.tenant_queue_cap));
         let mut services = HashMap::new();
         for name in &cfg.models {
             let runner = Arc::new(
@@ -157,12 +230,13 @@ impl NdifServer {
             );
             services.insert(
                 name.clone(),
-                ModelService::start(
+                ModelService::start_with_tenants(
                     runner,
                     Arc::clone(&store),
                     Arc::clone(&session_state),
                     cfg.cotenancy,
                     obs.service_obs(name),
+                    Arc::clone(&tenants),
                 ),
             );
         }
@@ -170,12 +244,15 @@ impl NdifServer {
             services,
             store,
             session_state,
-            next_id: AtomicU64::new(1),
+            next_id: AtomicU64::new(next_id),
             auth: cfg.auth.clone(),
             stream_buffer: cfg.stream_buffer.max(1),
             stream_send_timeout: cfg.stream_send_timeout,
             optimize: cfg.optimize,
             obs,
+            admission: cfg.rate_limit.map(AdmissionControl::new),
+            shed: cfg.shed,
+            faults,
             draining: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&state);
@@ -220,6 +297,14 @@ impl NdifServer {
                     std::thread::sleep(interval);
                     if stop2.load(Ordering::SeqCst) {
                         break;
+                    }
+                    // chaos hooks: Skip drops this beat on the floor (the
+                    // coordinator must ride it out via hysteresis), Delay
+                    // simulates a stalled replica
+                    match failpoint::hit("replica.heartbeat") {
+                        Some(FailAction::Skip) => continue,
+                        Some(FailAction::Delay(d)) => std::thread::sleep(d),
+                        _ => {}
                     }
                     let mut agg = crate::scheduler::LoadSnapshot::default();
                     for s in state2.services.values() {
@@ -286,6 +371,9 @@ impl NdifServer {
             }
             let _ = crate::coordinator::api::deregister_replica(f.coordinator, &f.replica_id);
         }
+        // flush any fsync-batched journal tail: a graceful shutdown loses
+        // nothing (a crash may lose up to the last fsync batch)
+        self.state.store.sync_journal();
         self.http.shutdown();
     }
 
@@ -329,7 +417,57 @@ fn route(state: &Arc<ServerState>, req: Request) -> Response {
     resp
 }
 
+/// Admission control for work-submitting endpoints, checked before any
+/// parsing: load shed at the queue-depth watermarks (503, retryable —
+/// any replica may be healthier), then the tenant's token bucket (429,
+/// retryable with `Retry-After` — the tenant's own backpressure, which a
+/// coordinator must NOT fail over on). The error envelope carries
+/// `retry_after_ms` because the in-repo client surfaces only the body.
+fn admission_gate(state: &Arc<ServerState>, req: &Request) -> Option<Response> {
+    let tenant = req.header("x-ndif-auth");
+    if state.shed.shed(state.total_queue_depth(), tenant.is_none()) {
+        state.faults.shed.fetch_add(1, Ordering::Relaxed);
+        return Some(
+            Response::json(
+                503,
+                "{\"error\":\"overloaded, load shed\",\"retryable\":true,\"retry_after_ms\":1000}"
+                    .into(),
+            )
+            .with_header("Retry-After", "1"),
+        );
+    }
+    let adm = state.admission.as_ref()?;
+    match adm.check(tenant.unwrap_or("anon")) {
+        Decision::Admit => None,
+        Decision::Throttle { retry_after } => {
+            state.faults.throttled.fetch_add(1, Ordering::Relaxed);
+            Some(throttle_response(retry_after))
+        }
+    }
+}
+
+/// 429 with the advertised wait in both forms: `Retry-After` header
+/// (whole seconds, ceiling, min 1) and `retry_after_ms` in the envelope.
+/// Shared with the coordinator front, which applies the same contract.
+pub(crate) fn throttle_response(retry_after: Duration) -> Response {
+    let ms = retry_after.as_millis().max(1) as u64;
+    let secs = ms.div_ceil(1000).max(1);
+    Response::json(
+        429,
+        format!("{{\"error\":\"rate limited\",\"retryable\":true,\"retry_after_ms\":{ms}}}"),
+    )
+    .with_header("Retry-After", &secs.to_string())
+}
+
 fn route_inner(state: &Arc<ServerState>, req: Request) -> Response {
+    if matches!(
+        (req.method.as_str(), req.path.as_str()),
+        ("POST", "/v1/trace") | ("POST", "/v1/session") | ("POST", "/v1/stream")
+    ) {
+        if let Some(resp) = admission_gate(state, &req) {
+            return resp;
+        }
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => Response::text(200, "ok"),
         ("GET", "/v1/models") => models_endpoint(state),
@@ -443,9 +581,30 @@ fn submit_parsed_graph(
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
     service
-        .submit_prepared_traced(id.clone(), prepared, trace)
-        .map_err(|e| Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string()))))?;
+        .submit_prepared_for(id.clone(), prepared, trace, req.header("x-ndif-auth"))
+        .map_err(|e| submit_error_response(state, e))?;
     Ok(id)
+}
+
+/// Map a scheduler submit error: a tenant at its queue-depth cap is a
+/// 429 (the tenant's own backpressure; a coordinator must not fail over
+/// on it), anything else — worker death — is a retryable 503.
+fn submit_error_response(state: &Arc<ServerState>, e: anyhow::Error) -> Response {
+    if e.downcast_ref::<TenantCapExceeded>().is_some() {
+        state.faults.throttled.fetch_add(1, Ordering::Relaxed);
+        return Response::json(
+            429,
+            format!(
+                "{{\"error\":{},\"retryable\":true,\"retry_after_ms\":250}}",
+                Json::from(e.to_string())
+            ),
+        )
+        .with_header("Retry-After", "1");
+    }
+    Response::json(
+        503,
+        format!("{{\"error\":{},\"retryable\":true}}", Json::from(e.to_string())),
+    )
 }
 
 fn trace_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
@@ -615,8 +774,15 @@ fn stateful_session(
         }
     }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
-    if let Err(e) = service.submit_session_traced(id.clone(), session, persist, prepared, trace) {
-        return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
+    if let Err(e) = service.submit_session_for(
+        id.clone(),
+        session,
+        persist,
+        prepared,
+        trace,
+        req.header("x-ndif-auth"),
+    ) {
+        return submit_error_response(state, e);
     }
     match state.store.wait_outcome(&id, Duration::from_secs(300)) {
         Some(Ok(json)) => Response::json(200, json),
@@ -710,10 +876,15 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
         m.record_opt(report);
     }
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
-    if let Err(e) =
-        service.submit_stream_traced(prepared, steps, tx, state.stream_send_timeout, trace)
-    {
-        return Response::json(503, format!("{{\"error\":{}}}", Json::from(e.to_string())));
+    if let Err(e) = service.submit_stream_for(
+        prepared,
+        steps,
+        tx,
+        state.stream_send_timeout,
+        trace,
+        req.header("x-ndif-auth"),
+    ) {
+        return submit_error_response(state, e);
     }
     // the chunked source runs on the HTTP worker serving this connection:
     // it pulls frames off the bounded channel and pushes them to the
@@ -885,6 +1056,22 @@ fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
         extra.push(("nnscope_store_objects".to_string(), state.store.len() as f64));
         extra.push(("nnscope_session_count".to_string(), session_count as f64));
         extra.push(("nnscope_session_bytes".to_string(), session_bytes as f64));
+        extra.push((
+            "nnscope_throttled_total".to_string(),
+            state.faults.throttled.load(Ordering::Relaxed) as f64,
+        ));
+        extra.push((
+            "nnscope_shed_total".to_string(),
+            state.faults.shed.load(Ordering::Relaxed) as f64,
+        ));
+        extra.push((
+            "nnscope_journal_replayed_total".to_string(),
+            state.faults.journal_replayed.load(Ordering::Relaxed) as f64,
+        ));
+        extra.push((
+            "nnscope_journal_truncated_bytes".to_string(),
+            state.faults.journal_truncated_bytes.load(Ordering::Relaxed) as f64,
+        ));
         return Response::bytes(
             200,
             "text/plain; version=0.0.4",
@@ -918,6 +1105,24 @@ fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
         Json::obj(vec![
             ("count", Json::from(session_count as i64)),
             ("bytes", Json::from(session_bytes as i64)),
+        ]),
+    );
+    per_model.insert(
+        "_faults".to_string(),
+        Json::obj(vec![
+            (
+                "throttled",
+                Json::from(state.faults.throttled.load(Ordering::Relaxed) as i64),
+            ),
+            ("shed", Json::from(state.faults.shed.load(Ordering::Relaxed) as i64)),
+            (
+                "journal_replayed",
+                Json::from(state.faults.journal_replayed.load(Ordering::Relaxed) as i64),
+            ),
+            (
+                "journal_truncated_bytes",
+                Json::from(state.faults.journal_truncated_bytes.load(Ordering::Relaxed) as i64),
+            ),
         ]),
     );
     per_model.insert("_endpoints".to_string(), state.obs.endpoints_json());

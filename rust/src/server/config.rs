@@ -114,6 +114,36 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
     if let Some(n) = j.get("trace_ring").as_usize() {
         cfg.trace_ring = n;
     }
+    if let Some(d) = j.get("data_dir").as_str() {
+        cfg.data_dir = Some(d.into());
+    }
+    let rl = j.get("rate_limit");
+    if !rl.is_null() {
+        let per_s = rl
+            .get("per_s")
+            .as_f64()
+            .ok_or_else(|| anyhow!("rate_limit.per_s must be a number"))?;
+        if per_s <= 0.0 {
+            return Err(anyhow!("rate_limit.per_s must be positive"));
+        }
+        let burst = rl.get("burst").as_f64().unwrap_or(per_s.max(1.0));
+        cfg.rate_limit = Some(crate::server::admission::RateLimit::new(per_s, burst));
+    }
+    if let Some(n) = j.get("tenant_queue_cap").as_usize() {
+        cfg.tenant_queue_cap = n.max(1);
+    }
+    let shed = j.get("shed");
+    if !shed.is_null() {
+        let anon = shed
+            .get("anon_above")
+            .as_usize()
+            .ok_or_else(|| anyhow!("shed.anon_above must be an integer"))?;
+        let all = shed.get("all_above").as_usize().unwrap_or(anon.saturating_mul(2));
+        cfg.shed = crate::server::admission::ShedPolicy {
+            shed_anon_above: anon,
+            shed_all_above: all,
+        };
+    }
     if cfg.models.is_empty() {
         return Err(anyhow!("config must list at least one model"));
     }
@@ -188,5 +218,55 @@ mod tests {
         assert!(from_json_text(r#"{"models": ["m"], "cotenancy": {"mode": "magic"}}"#).is_err());
         assert!(from_json_text(r#"{"models": [3]}"#).is_err());
         assert!(from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse() {
+        let cfg = from_json_text(
+            r#"{
+              "models": ["m"],
+              "data_dir": "/srv/nnscope/data",
+              "rate_limit": { "per_s": 50.0, "burst": 100.0 },
+              "tenant_queue_cap": 32,
+              "shed": { "anon_above": 64, "all_above": 256 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.data_dir, Some(std::path::PathBuf::from("/srv/nnscope/data")));
+        let rl = cfg.rate_limit.unwrap();
+        assert!((rl.per_s - 50.0).abs() < 1e-12);
+        assert!((rl.burst - 100.0).abs() < 1e-12);
+        assert_eq!(cfg.tenant_queue_cap, 32);
+        assert_eq!(cfg.shed.shed_anon_above, 64);
+        assert_eq!(cfg.shed.shed_all_above, 256);
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_default_off() {
+        let cfg = from_json_text(r#"{"models": ["m"]}"#).unwrap();
+        assert!(cfg.data_dir.is_none());
+        assert!(cfg.rate_limit.is_none());
+        assert_eq!(cfg.tenant_queue_cap, usize::MAX);
+        assert_eq!(cfg.shed, crate::server::admission::ShedPolicy::disabled());
+    }
+
+    #[test]
+    fn rate_limit_defaults_burst_and_rejects_nonpositive() {
+        let cfg =
+            from_json_text(r#"{"models": ["m"], "rate_limit": {"per_s": 5.0}}"#).unwrap();
+        let rl = cfg.rate_limit.unwrap();
+        assert!((rl.burst - 5.0).abs() < 1e-12, "burst defaults to per_s");
+        assert!(
+            from_json_text(r#"{"models": ["m"], "rate_limit": {"per_s": 0.0}}"#).is_err()
+        );
+        assert!(from_json_text(r#"{"models": ["m"], "rate_limit": {}}"#).is_err());
+    }
+
+    #[test]
+    fn shed_all_above_defaults_to_double_anon() {
+        let cfg =
+            from_json_text(r#"{"models": ["m"], "shed": {"anon_above": 10}}"#).unwrap();
+        assert_eq!(cfg.shed.shed_anon_above, 10);
+        assert_eq!(cfg.shed.shed_all_above, 20);
     }
 }

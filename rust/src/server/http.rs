@@ -63,6 +63,8 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on 429/503).
+    pub headers: Vec<(String, String)>,
     /// When set, `body` is ignored and the response streams chunks pulled
     /// from this source.
     pub stream: Option<ChunkSource>,
@@ -82,7 +84,7 @@ impl std::fmt::Debug for Response {
 impl Response {
     /// A complete (non-streamed) response.
     pub fn bytes(status: u16, content_type: &'static str, body: Vec<u8>) -> Response {
-        Response { status, content_type, body, stream: None }
+        Response { status, content_type, body, headers: Vec::new(), stream: None }
     }
 
     pub fn json(status: u16, body: String) -> Response {
@@ -96,7 +98,19 @@ impl Response {
     /// A chunked (streaming) response; the body is produced incrementally
     /// by `source`.
     pub fn chunked(status: u16, content_type: &'static str, source: ChunkSource) -> Response {
-        Response { status, content_type, body: Vec::new(), stream: Some(source) }
+        Response {
+            status,
+            content_type,
+            body: Vec::new(),
+            headers: Vec::new(),
+            stream: Some(source),
+        }
+    }
+
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 
     pub fn not_found() -> Response {
@@ -163,9 +177,13 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
 /// flushed as it is produced so the peer sees events as they happen; an
 /// `Abort` pull drops the connection without the terminating zero chunk.
 pub fn write_response(stream: &mut TcpStream, resp: &mut Response) -> Result<()> {
+    let mut extra = String::new();
+    for (k, v) in &resp.headers {
+        extra.push_str(&format!("{k}: {v}\r\n"));
+    }
     let Some(mut source) = resp.stream.take() else {
         let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n",
             resp.status,
             resp.status_text(),
             resp.content_type,
@@ -177,7 +195,7 @@ pub fn write_response(stream: &mut TcpStream, resp: &mut Response) -> Result<()>
         return Ok(());
     };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\n{extra}Connection: close\r\n\r\n",
         resp.status,
         resp.status_text(),
         resp.content_type,
@@ -772,6 +790,26 @@ mod tests {
         assert_eq!(status, 200);
         let text = String::from_utf8(body).unwrap();
         assert_eq!(text.lines().count(), 5);
+    }
+
+    #[test]
+    fn extra_headers_are_written() {
+        let srv = HttpServer::bind(
+            "127.0.0.1:0",
+            1,
+            Arc::new(|_req: Request| {
+                Response::text(429, "slow down").with_header("Retry-After", "2")
+            }),
+        )
+        .unwrap();
+        // raw client so we can see the header lines themselves
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 429 Too Many Requests"), "{raw}");
+        assert!(raw.contains("Retry-After: 2\r\n"), "{raw}");
     }
 
     #[test]

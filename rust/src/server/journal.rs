@@ -1,0 +1,439 @@
+//! Append-only result journal: crash durability for the object store.
+//!
+//! The coordinator already gives the fabric at-least-once *execution*
+//! (failed dispatches are retried on another replica); what it cannot do
+//! is resurrect a result that finished on a replica that then died before
+//! the client picked it up. With `--data-dir` set, every completed result
+//! (`Ready`/`Failed`) and every eviction is appended to a journal; a
+//! restarted replica replays it and the surviving completed results are
+//! served as if the crash never happened — at-least-once execution below,
+//! exactly-once pickup above.
+//!
+//! Design choices, in order of how much they matter:
+//! * **Append-only with explicit evictions.** The store's lifecycle is
+//!   write-once / read-once / expire; journaling `evict` records instead
+//!   of rewriting state keeps the hot path a single sequential append.
+//! * **Corrupt-tail truncation, not failure.** A crash mid-append leaves a
+//!   torn record at the tail; replay verifies each record's length frame
+//!   and FNV checksum and truncates at the first bad byte. Everything
+//!   before the tear survives; a torn journal is never fatal.
+//! * **Batched fsync.** Appends always flush to the OS (surviving process
+//!   death); `fsync` is amortized over [`Journal::fsync_every`] records,
+//!   bounding what a *machine* crash can lose to the last batch.
+//! * **Compaction on evict.** When dead records outnumber live ones the
+//!   journal is rewritten from the live set into a temp file and atomically
+//!   renamed into place, so the file tracks the working set, not history.
+//!
+//! `Pending` entries are deliberately not journaled: an unexecuted request
+//! is the coordinator's to retry, not the replica's to resurrect.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::{parse, Json};
+use crate::server::store::Entry;
+use crate::util::failpoint::{self, FailAction};
+
+/// First byte of every record frame — a fixed sentinel so replay can tell
+/// "next record" from "garbage tail" without heuristics.
+const MAGIC: u8 = 0xA7;
+/// Frame header: magic byte + u32 payload length + u32 FNV-1a checksum.
+const HEADER: usize = 1 + 4 + 4;
+/// Upper bound on a sane payload; anything larger is a corrupt length
+/// field, not a record.
+const MAX_PAYLOAD: usize = 256 * 1024 * 1024;
+
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// One journal record (the durable subset of the store's lifecycle).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    Ready { id: String, json: String },
+    Failed { id: String, err: String },
+    Evict { id: String },
+}
+
+impl Record {
+    fn to_payload(&self) -> Vec<u8> {
+        let j = match self {
+            Record::Ready { id, json } => Json::obj(vec![
+                ("op", Json::from("r")),
+                ("id", Json::from(id.as_str())),
+                ("v", Json::from(json.as_str())),
+            ]),
+            Record::Failed { id, err } => Json::obj(vec![
+                ("op", Json::from("f")),
+                ("id", Json::from(id.as_str())),
+                ("v", Json::from(err.as_str())),
+            ]),
+            Record::Evict { id } => Json::obj(vec![
+                ("op", Json::from("e")),
+                ("id", Json::from(id.as_str())),
+            ]),
+        };
+        j.to_string().into_bytes()
+    }
+
+    fn from_payload(bytes: &[u8]) -> Option<Record> {
+        let text = std::str::from_utf8(bytes).ok()?;
+        let j = parse(text).ok()?;
+        let id = j.get("id").as_str()?.to_string();
+        match j.get("op").as_str()? {
+            "r" => Some(Record::Ready { id, json: j.get("v").as_str()?.to_string() }),
+            "f" => Some(Record::Failed { id, err: j.get("v").as_str()?.to_string() }),
+            "e" => Some(Record::Evict { id }),
+            _ => None,
+        }
+    }
+
+    fn frame(&self) -> Vec<u8> {
+        let payload = self.to_payload();
+        let mut out = Vec::with_capacity(HEADER + payload.len());
+        out.push(MAGIC);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// What replay recovered (surfaced in the server log and obs counters).
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    /// Live completed entries after applying the whole journal.
+    pub entries: Vec<(String, Entry)>,
+    /// Total well-formed records read (including evictions).
+    pub records: usize,
+    /// Bytes cut off the tail because a record frame was torn or corrupt.
+    pub truncated_bytes: u64,
+}
+
+/// Append-only, checksummed, compacting result journal.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    /// fsync after this many appends (1 = every append; durability vs
+    /// throughput knob).
+    pub fsync_every: u32,
+    unsynced: u32,
+    live: usize,
+    dead: usize,
+}
+
+impl Journal {
+    /// Open (creating if absent) and replay the journal at `path`. A torn
+    /// or corrupt tail is truncated in place; replay itself never fails on
+    /// record content, only on I/O.
+    pub fn open(path: &Path) -> Result<(Journal, ReplayReport)> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create journal dir {dir:?}"))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("open journal {path:?}"))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes).context("read journal")?;
+
+        let mut report = ReplayReport::default();
+        let mut live: std::collections::HashMap<String, Entry> = std::collections::HashMap::new();
+        let mut order: Vec<String> = Vec::new();
+        let mut off = 0usize;
+        loop {
+            let rest = &bytes[off..];
+            if rest.is_empty() {
+                break;
+            }
+            let Some(rec) = decode_frame(rest) else {
+                // torn or corrupt tail: cut it off and stop
+                report.truncated_bytes = (bytes.len() - off) as u64;
+                file.set_len(off as u64).context("truncate torn journal tail")?;
+                break;
+            };
+            let (rec, frame_len) = rec;
+            report.records += 1;
+            match rec {
+                Record::Ready { id, json } => {
+                    if live.insert(id.clone(), Entry::Ready(json)).is_none() {
+                        order.push(id);
+                    }
+                }
+                Record::Failed { id, err } => {
+                    if live.insert(id.clone(), Entry::Failed(err)).is_none() {
+                        order.push(id);
+                    }
+                }
+                Record::Evict { id } => {
+                    live.remove(&id);
+                }
+            }
+            off += frame_len;
+        }
+        for id in order {
+            if let Some(e) = live.remove(&id) {
+                report.entries.push((id, e));
+            }
+        }
+
+        file.seek(SeekFrom::End(0)).context("seek journal end")?;
+        let n_live = report.entries.len();
+        let journal = Journal {
+            path: path.to_path_buf(),
+            file,
+            fsync_every: 8,
+            unsynced: 0,
+            live: n_live,
+            dead: report.records.saturating_sub(n_live),
+        };
+        Ok((journal, report))
+    }
+
+    /// Append one record. Failpoint site `journal.append` can fail the
+    /// append, drop it silently, delay it, or tear it mid-frame.
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        let frame = rec.frame();
+        match failpoint::hit("journal.append") {
+            Some(FailAction::Error(msg)) => anyhow::bail!("injected journal fault: {msg}"),
+            Some(FailAction::Skip) => return Ok(()),
+            Some(FailAction::Delay(d)) => std::thread::sleep(d),
+            Some(FailAction::Truncate(n)) => {
+                let torn = &frame[..n.min(frame.len())];
+                self.file.write_all(torn).context("journal torn write")?;
+                self.file.flush().ok();
+                anyhow::bail!("injected journal fault: torn write after {} bytes", torn.len());
+            }
+            None => {}
+        }
+        self.file.write_all(&frame).context("journal append")?;
+        match rec {
+            Record::Evict { .. } => {
+                self.live = self.live.saturating_sub(1);
+                self.dead += 1;
+            }
+            _ => self.live += 1,
+        }
+        self.unsynced += 1;
+        if self.unsynced >= self.fsync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force the batched fsync now.
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_all().context("journal fsync")?;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Compaction trigger: dead records dominate live ones (and the file
+    /// is past trivial size, so short-lived stores never bother).
+    pub fn should_compact(&self) -> bool {
+        self.dead > 64 && self.dead > 2 * self.live
+    }
+
+    /// Rewrite the journal to exactly `entries` (the store's current
+    /// completed set): fresh records into a temp file, fsync, atomic
+    /// rename over the old journal.
+    pub fn compact(&mut self, entries: &[(String, Entry)]) -> Result<()> {
+        let tmp = self.path.with_extension("journal.tmp");
+        let mut out = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut n = 0usize;
+        for (id, entry) in entries {
+            let rec = match entry {
+                Entry::Ready(json) => Record::Ready { id: id.clone(), json: json.clone() },
+                Entry::Failed(err) => Record::Failed { id: id.clone(), err: err.clone() },
+                Entry::Pending => continue,
+            };
+            out.write_all(&rec.frame()).context("compact write")?;
+            n += 1;
+        }
+        out.sync_all().context("compact fsync")?;
+        drop(out);
+        std::fs::rename(&tmp, &self.path).context("compact rename")?;
+        self.file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .open(&self.path)
+            .context("reopen compacted journal")?;
+        self.live = n;
+        self.dead = 0;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Current journal size in bytes (tests, metrics).
+    pub fn size_bytes(&self) -> u64 {
+        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+    }
+}
+
+/// Decode one frame from the head of `bytes`; `None` means torn/corrupt.
+fn decode_frame(bytes: &[u8]) -> Option<(Record, usize)> {
+    if bytes.len() < HEADER || bytes[0] != MAGIC {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+    let ck = u32::from_le_bytes(bytes[5..9].try_into().unwrap());
+    if len > MAX_PAYLOAD || bytes.len() < HEADER + len {
+        return None;
+    }
+    let payload = &bytes[HEADER..HEADER + len];
+    if fnv1a32(payload) != ck {
+        return None;
+    }
+    Record::from_payload(payload).map(|r| (r, HEADER + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nnscope-journal-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_replay_round_trip() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("results.journal");
+        {
+            let (mut j, rep) = Journal::open(&path).unwrap();
+            assert_eq!(rep.records, 0);
+            j.append(&Record::Ready { id: "r-1".into(), json: "{\"a\":1}".into() }).unwrap();
+            j.append(&Record::Failed { id: "r-2".into(), err: "boom".into() }).unwrap();
+            j.append(&Record::Ready { id: "r-3".into(), json: "{}".into() }).unwrap();
+            j.append(&Record::Evict { id: "r-1".into() }).unwrap();
+            j.sync().unwrap();
+        }
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.records, 4);
+        assert_eq!(rep.truncated_bytes, 0);
+        let mut ids: Vec<&str> = rep.entries.iter().map(|(id, _)| id.as_str()).collect();
+        ids.sort();
+        assert_eq!(ids, vec!["r-2", "r-3"]);
+        assert!(rep
+            .entries
+            .iter()
+            .any(|(id, e)| id == "r-2" && *e == Entry::Failed("boom".into())));
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = tmpdir("torn");
+        let path = dir.join("results.journal");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&Record::Ready { id: "ok-1".into(), json: "{}".into() }).unwrap();
+            j.append(&Record::Ready { id: "ok-2".into(), json: "{}".into() }).unwrap();
+            j.sync().unwrap();
+        }
+        // simulate a crash mid-append: garbage + half a frame at the tail
+        let good_len = std::fs::metadata(&path).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        let torn = &Record::Evict { id: "never".into() }.frame()[..6];
+        f.write_all(torn).unwrap();
+        drop(f);
+
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.entries.len(), 2, "records before the tear survive");
+        assert_eq!(rep.truncated_bytes, 6);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            good_len,
+            "tail physically truncated"
+        );
+        // and the journal is appendable again after truncation
+        let (mut j, _) = Journal::open(&path).unwrap();
+        j.append(&Record::Ready { id: "ok-3".into(), json: "{}".into() }).unwrap();
+        j.sync().unwrap();
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.entries.len(), 3);
+    }
+
+    #[test]
+    fn corrupt_checksum_truncates_from_bad_record() {
+        let dir = tmpdir("cksum");
+        let path = dir.join("results.journal");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&Record::Ready { id: "a".into(), json: "{}".into() }).unwrap();
+            j.append(&Record::Ready { id: "b".into(), json: "{}".into() }).unwrap();
+            j.sync().unwrap();
+        }
+        // flip a byte inside the second record's payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        let first_len = {
+            let l = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+            HEADER + l
+        };
+        let target = first_len + HEADER + 2;
+        bytes[target] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.entries.len(), 1);
+        assert_eq!(rep.entries[0].0, "a");
+        assert!(rep.truncated_bytes > 0);
+    }
+
+    #[test]
+    fn compaction_drops_dead_records() {
+        let dir = tmpdir("compact");
+        let path = dir.join("results.journal");
+        let (mut j, _) = Journal::open(&path).unwrap();
+        for i in 0..200 {
+            j.append(&Record::Ready { id: format!("r-{i}"), json: "{}".into() }).unwrap();
+            j.append(&Record::Evict { id: format!("r-{i}") }).unwrap();
+        }
+        j.append(&Record::Ready { id: "keep".into(), json: "{\"k\":1}".into() }).unwrap();
+        j.sync().unwrap();
+        assert!(j.should_compact());
+        let before = j.size_bytes();
+        j.compact(&[("keep".into(), Entry::Ready("{\"k\":1}".into()))]).unwrap();
+        assert!(j.size_bytes() < before / 10, "compaction must shrink the file");
+        assert!(!j.should_compact());
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.entries, vec![("keep".into(), Entry::Ready("{\"k\":1}".into()))]);
+    }
+
+    #[test]
+    fn injected_torn_write_reproduces_crash_mid_journal() {
+        use crate::util::failpoint::{Armed, FailAction, Spec};
+        let dir = tmpdir("failpoint");
+        let path = dir.join("results.journal");
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&Record::Ready { id: "done".into(), json: "{}".into() }).unwrap();
+            let _g = Armed::new("journal.append", Spec::nth(0, FailAction::Truncate(7)));
+            let err = j
+                .append(&Record::Ready { id: "torn".into(), json: "{}".into() })
+                .unwrap_err();
+            assert!(err.to_string().contains("torn"), "{err}");
+            j.sync().unwrap();
+        }
+        let (_j, rep) = Journal::open(&path).unwrap();
+        assert_eq!(rep.entries.len(), 1, "record before the tear survives");
+        assert_eq!(rep.entries[0].0, "done");
+        assert_eq!(rep.truncated_bytes, 7);
+    }
+}

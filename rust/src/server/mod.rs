@@ -19,11 +19,14 @@
 //! [`crate::coordinator`] front and pushes load heartbeats, so many
 //! deployments of the same model can serve one user population.
 
+pub mod admission;
 pub mod api;
 pub mod config;
 pub mod http;
+pub mod journal;
 pub mod state;
 pub mod store;
 
+pub use admission::{AdmissionControl, Decision, RateLimit, ShedPolicy};
 pub use api::{NdifConfig, NdifServer};
 pub use state::{SessionStateStore, StateLimits};

@@ -13,15 +13,26 @@
 //!   `Ready`/`Failed` entry out of the map as it hands it to the waiter
 //!   (first puller wins; a re-poll of a delivered id is a 404, which was
 //!   already the contract when callers removed after reading);
-//! * **TTL expiry** — entries a client abandoned are swept on subsequent
-//!   store writes: `Ready`/`Failed` entries older than the TTL, and
-//!   `Pending` entries older than 4× the TTL (pending work may
-//!   legitimately sit behind a deep queue; results nobody ever asked for
-//!   must still go away).
+//! * **TTL expiry** — abandoned entries are swept (amortized every
+//!   `ttl / 4`) on writes *and* on read/wait paths, so an idle server
+//!   that only serves result polls still expires its map: `Ready`/`Failed`
+//!   entries older than the TTL, `Pending` entries older than 4× the TTL
+//!   (pending work may legitimately sit behind a deep queue; results
+//!   nobody ever asked for must still go away).
+//!
+//! With [`ObjectStore::with_journal`] the store is additionally durable:
+//! completed entries and evictions are journaled to disk
+//! ([`crate::server::journal`]) and a restarted replica replays the
+//! journal, so a crash between job completion and client pickup loses
+//! nothing that reached the journal.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::server::journal::{Journal, Record, ReplayReport};
+use crate::util::failpoint::{self, FailAction};
 
 /// Entry lifecycle.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,10 +50,43 @@ struct Slot {
 struct Slots {
     map: HashMap<String, Slot>,
     last_sweep: Instant,
+    /// Durability journal; `None` = memory-only (the default).
+    journal: Option<Journal>,
+}
+
+impl Slots {
+    /// Append to the journal, surviving journal faults: durability is
+    /// best-effort relative to availability, so a failed append is
+    /// reported but never fails the request path.
+    fn journal_append(&mut self, rec: Record) {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append(&rec) {
+                eprintln!("[store] journal append failed (continuing in-memory): {e:#}");
+            }
+        }
+    }
+
+    /// Compact the journal when dead records dominate, rewriting it from
+    /// the live completed set.
+    fn maybe_compact(&mut self) {
+        let Some(j) = self.journal.as_mut() else { return };
+        if !j.should_compact() {
+            return;
+        }
+        let live: Vec<(String, Entry)> = self
+            .map
+            .iter()
+            .filter(|(_, s)| !matches!(s.entry, Entry::Pending))
+            .map(|(id, s)| (id.clone(), s.entry.clone()))
+            .collect();
+        if let Err(e) = j.compact(&live) {
+            eprintln!("[store] journal compaction failed: {e:#}");
+        }
+    }
 }
 
 /// Thread-safe result store with wakeups, bounded by pickup-eviction and
-/// TTL expiry.
+/// TTL expiry; optionally journaled to disk for crash durability.
 pub struct ObjectStore {
     slots: Mutex<Slots>,
     cv: Condvar,
@@ -66,32 +110,80 @@ impl ObjectStore {
 
     pub fn with_ttl(ttl: Duration) -> ObjectStore {
         ObjectStore {
-            slots: Mutex::new(Slots { map: HashMap::new(), last_sweep: Instant::now() }),
+            slots: Mutex::new(Slots {
+                map: HashMap::new(),
+                last_sweep: Instant::now(),
+                journal: None,
+            }),
             cv: Condvar::new(),
             ttl,
         }
     }
 
+    /// Durable store: open (or create) the journal at `path`, replay it,
+    /// and seed the map with the surviving completed entries. Returns the
+    /// replay report so the server can log/count what was recovered.
+    pub fn with_journal(ttl: Duration, path: &Path) -> anyhow::Result<(ObjectStore, ReplayReport)> {
+        let (journal, report) = Journal::open(path)?;
+        let now = Instant::now();
+        let map = report
+            .entries
+            .iter()
+            .map(|(id, e)| (id.clone(), Slot { entry: e.clone(), at: now }))
+            .collect();
+        let store = ObjectStore {
+            slots: Mutex::new(Slots { map, last_sweep: now, journal: Some(journal) }),
+            cv: Condvar::new(),
+            ttl,
+        };
+        Ok((store, report))
+    }
+
     fn put(&self, id: &str, entry: Entry) {
+        // failpoint: lose the write entirely (crash before publishing)
+        if matches!(failpoint::hit("store.put"), Some(FailAction::Skip)) {
+            return;
+        }
         let mut g = self.slots.lock().unwrap();
-        Self::maybe_sweep(&mut g, self.ttl, false);
+        self.sweep_locked(&mut g, false);
+        match &entry {
+            Entry::Ready(json) => {
+                g.journal_append(Record::Ready { id: id.to_string(), json: json.clone() })
+            }
+            Entry::Failed(err) => {
+                g.journal_append(Record::Failed { id: id.to_string(), err: err.clone() })
+            }
+            Entry::Pending => {}
+        }
         g.map
             .insert(id.to_string(), Slot { entry, at: Instant::now() });
     }
 
-    /// Sweep at most every `ttl / 4` so writes stay O(1) amortized.
-    fn maybe_sweep(g: &mut Slots, ttl: Duration, force: bool) {
-        if !force && g.last_sweep.elapsed() < ttl / 4 {
+    /// Sweep at most every `ttl / 4` so reads and writes stay O(1)
+    /// amortized; journaling evictions keeps the durable set in step.
+    fn sweep_locked(&self, g: &mut Slots, force: bool) {
+        if !force && g.last_sweep.elapsed() < self.ttl / 4 {
             return;
         }
         g.last_sweep = Instant::now();
-        g.map.retain(|_, s| {
-            let limit = match s.entry {
-                Entry::Pending => ttl * 4,
-                _ => ttl,
+        let ttl = self.ttl;
+        let mut expired: Vec<(String, bool)> = Vec::new();
+        for (id, s) in g.map.iter() {
+            let (limit, completed) = match s.entry {
+                Entry::Pending => (ttl * 4, false),
+                _ => (ttl, true),
             };
-            s.at.elapsed() <= limit
-        });
+            if s.at.elapsed() > limit {
+                expired.push((id.clone(), completed));
+            }
+        }
+        for (id, completed) in expired {
+            g.map.remove(&id);
+            if completed {
+                g.journal_append(Record::Evict { id });
+            }
+        }
+        g.maybe_compact();
     }
 
     /// Register a pending request id.
@@ -109,9 +201,13 @@ impl ObjectStore {
         self.cv.notify_all();
     }
 
-    /// Current state without blocking (None = unknown id). Does not evict.
+    /// Current state without blocking (None = unknown id). Does not evict
+    /// the looked-up entry, but does run the amortized TTL sweep — an
+    /// idle server that only serves reads must still expire its map.
     pub fn peek(&self, id: &str) -> Option<Entry> {
-        self.slots.lock().unwrap().map.get(id).map(|s| s.entry.clone())
+        let mut g = self.slots.lock().unwrap();
+        self.sweep_locked(&mut g, false);
+        g.map.get(id).map(|s| s.entry.clone())
     }
 
     /// Block until the entry leaves Pending or the timeout passes,
@@ -120,11 +216,17 @@ impl ObjectStore {
     pub fn wait_outcome(&self, id: &str, timeout: Duration) -> Option<Result<String, String>> {
         let deadline = Instant::now() + timeout;
         let mut guard = self.slots.lock().unwrap();
+        self.sweep_locked(&mut guard, false);
         loop {
             match guard.map.get(id).map(|s| &s.entry) {
                 None => return None,
                 Some(Entry::Ready(_) | Entry::Failed(_)) => {
+                    // journal the eviction before handing the payload out:
+                    // once delivered, a replayed journal must not
+                    // resurrect it (exactly-once pickup)
+                    guard.journal_append(Record::Evict { id: id.to_string() });
                     let slot = guard.map.remove(id).expect("presence checked above");
+                    guard.maybe_compact();
                     return Some(match slot.entry {
                         Entry::Ready(s) => Ok(s),
                         Entry::Failed(e) => Err(e),
@@ -138,6 +240,7 @@ impl ObjectStore {
                     }
                     let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
                     guard = g;
+                    self.sweep_locked(&mut guard, false);
                 }
             }
         }
@@ -153,14 +256,41 @@ impl ObjectStore {
 
     /// Remove an entry regardless of state (cancellation paths).
     pub fn remove(&self, id: &str) -> Option<Entry> {
-        self.slots.lock().unwrap().map.remove(id).map(|s| s.entry)
+        let mut g = self.slots.lock().unwrap();
+        let removed = g.map.remove(id).map(|s| s.entry);
+        if matches!(removed, Some(Entry::Ready(_) | Entry::Failed(_))) {
+            g.journal_append(Record::Evict { id: id.to_string() });
+        }
+        removed
     }
 
     /// Force-expire overdue entries now (tests); returns how many remain.
     pub fn sweep_now(&self) -> usize {
         let mut g = self.slots.lock().unwrap();
-        Self::maybe_sweep(&mut g, self.ttl, true);
+        self.sweep_locked(&mut g, true);
         g.map.len()
+    }
+
+    /// Flush the journal's batched fsync (graceful shutdown).
+    pub fn sync_journal(&self) {
+        let mut g = self.slots.lock().unwrap();
+        if let Some(j) = g.journal.as_mut() {
+            if let Err(e) = j.sync() {
+                eprintln!("[store] journal sync failed: {e:#}");
+            }
+        }
+    }
+
+    /// Largest numeric suffix among ids shaped `<prefix><n>` — lets a
+    /// restarted server resume its id counter past replayed results so
+    /// fresh requests cannot collide with journaled ones.
+    pub fn max_id_suffix(&self, prefix: &str) -> Option<u64> {
+        let g = self.slots.lock().unwrap();
+        g.map
+            .keys()
+            .filter_map(|id| id.strip_prefix(prefix))
+            .filter_map(|rest| rest.parse::<u64>().ok())
+            .max()
     }
 
     pub fn len(&self) -> usize {
@@ -175,7 +305,15 @@ impl ObjectStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
     use std::sync::Arc;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("nnscope-store-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
 
     #[test]
     fn lifecycle_with_pickup_eviction() {
@@ -246,6 +384,27 @@ mod tests {
         assert!(s.peek("queued").is_none());
     }
 
+    /// Regression test: the TTL sweep used to run only on writes, so a
+    /// server that went idle after a burst (serving only result reads)
+    /// never expired its map. Reads must sweep too.
+    #[test]
+    fn idle_server_expires_entries_on_reads_alone() {
+        let s = ObjectStore::with_ttl(Duration::from_millis(20));
+        s.put_ready("abandoned", "{}".into());
+        assert_eq!(s.len(), 1);
+        std::thread::sleep(Duration::from_millis(50));
+        // no writes from here on: a read of a *different* id must still
+        // trigger the sweep that expires the abandoned entry
+        assert!(s.peek("something-else").is_none());
+        assert_eq!(s.len(), 0, "read path must run the TTL sweep");
+
+        // same through the wait path
+        s.put_ready("abandoned-2", "{}".into());
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(s.wait_outcome("unknown", Duration::from_millis(1)).is_none());
+        assert_eq!(s.len(), 0, "wait path must run the TTL sweep");
+    }
+
     #[test]
     fn sustained_traffic_stays_bounded() {
         // unfetched results must not accumulate past the TTL window
@@ -258,5 +417,95 @@ mod tests {
         }
         std::thread::sleep(Duration::from_millis(15));
         assert!(s.sweep_now() < 200, "store grew without bound");
+    }
+
+    #[test]
+    fn journaled_results_survive_restart_and_delivered_ones_do_not() {
+        let dir = tmpdir("restart");
+        let path = dir.join("results.journal");
+        {
+            let (s, rep) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+            assert_eq!(rep.entries.len(), 0);
+            s.put_pending("r-1");
+            s.put_ready("r-1", "{\"saved\":1}".into());
+            s.put_pending("r-2");
+            s.put_failed("r-2", "exec error");
+            s.put_pending("r-3");
+            s.put_ready("r-3", "{\"saved\":3}".into());
+            // r-3 is delivered pre-crash: must NOT come back after replay
+            assert!(s.wait_ready("r-3", Duration::from_millis(1)).is_some());
+            s.sync_journal();
+            // store dropped without graceful shutdown = crash
+        }
+        let (s, rep) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+        assert_eq!(rep.entries.len(), 2, "undelivered completed results replayed");
+        assert_eq!(
+            s.wait_ready("r-1", Duration::from_millis(1)),
+            Some("{\"saved\":1}".into())
+        );
+        assert_eq!(
+            s.wait_outcome("r-2", Duration::from_millis(1)),
+            Some(Err("exec error".into()))
+        );
+        assert!(
+            s.peek("r-3").is_none(),
+            "evicted-before-crash result must not be resurrected"
+        );
+        assert_eq!(s.max_id_suffix("r-"), None, "all delivered by now");
+    }
+
+    #[test]
+    fn pending_entries_are_not_durable() {
+        let dir = tmpdir("pending");
+        let path = dir.join("results.journal");
+        {
+            let (s, _) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+            s.put_pending("r-9");
+            s.sync_journal();
+        }
+        let (s, rep) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+        assert_eq!(rep.entries.len(), 0, "pending work is the coordinator's to retry");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn max_id_suffix_resumes_counter() {
+        let dir = tmpdir("suffix");
+        let path = dir.join("results.journal");
+        {
+            let (s, _) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+            s.put_ready("r-7", "{}".into());
+            s.put_ready("r-12", "{}".into());
+            s.put_ready("other-99", "{}".into());
+            s.sync_journal();
+        }
+        let (s, _) = ObjectStore::with_journal(Duration::from_secs(60), &path).unwrap();
+        assert_eq!(s.max_id_suffix("r-"), Some(12));
+    }
+
+    #[test]
+    fn ttl_sweep_journals_evictions() {
+        let dir = tmpdir("sweepjournal");
+        let path = dir.join("results.journal");
+        {
+            let (s, _) = ObjectStore::with_journal(Duration::from_millis(10), &path).unwrap();
+            s.put_ready("stale", "{}".into());
+            std::thread::sleep(Duration::from_millis(30));
+            assert_eq!(s.sweep_now(), 0);
+            s.sync_journal();
+        }
+        let (_s, rep) = ObjectStore::with_journal(Duration::from_millis(10), &path).unwrap();
+        assert_eq!(rep.entries.len(), 0, "TTL-evicted entries must not replay");
+    }
+
+    #[test]
+    fn lost_write_failpoint_drops_result() {
+        use crate::util::failpoint::{Armed, FailAction, Spec};
+        let s = ObjectStore::new();
+        let _g = Armed::new("store.put", Spec::nth(0, FailAction::Skip));
+        s.put_ready("ghost", "{}".into());
+        assert!(s.peek("ghost").is_none(), "injected lost write");
+        s.put_ready("real", "{}".into());
+        assert!(s.peek("real").is_some());
     }
 }

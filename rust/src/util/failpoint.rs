@@ -1,0 +1,244 @@
+//! Deterministic fault injection — named failpoints threaded through the
+//! fabric's hot paths (journal appends, replica dispatch, heartbeats,
+//! stream frames).
+//!
+//! Chaos testing is only useful when a failing run can be replayed: every
+//! probabilistic failpoint draws from its own seeded [`Prng`] stream, so a
+//! chaos schedule is a pure function of `(name, seed, hit count)` and a CI
+//! failure reproduces locally with the same seed. The facility is compiled
+//! into the library (integration tests and benches link against the
+//! release lib), but the disarmed cost is a single relaxed atomic load —
+//! no lock, no map lookup — so production paths pay nothing measurable.
+//!
+//! A failpoint *site* names a place in the code
+//! (`failpoint::hit("journal.append")`); a *spec* arms it with a window
+//! (`skip` passes, then fire `take` times, each firing gated by `prob`)
+//! and an action (error, skip the guarded operation, delay, or truncate a
+//! write after N bytes). Sites are no-ops until armed by a test or bench.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::prng::Prng;
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FailAction {
+    /// Fail the guarded operation with this message.
+    Error(String),
+    /// Silently skip the guarded operation (drop a heartbeat, lose a
+    /// frame, swallow a write).
+    Skip,
+    /// Stall before continuing (slow-consumer / slow-disk simulation).
+    Delay(Duration),
+    /// Truncate the guarded write after this many bytes, then fail it
+    /// (torn journal tails: the crash landed mid-record).
+    Truncate(usize),
+}
+
+/// Arming spec: `skip` hits pass through untouched, then the next `take`
+/// hits fire (each with probability `prob` drawn from the seeded stream).
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub skip: u64,
+    pub take: u64,
+    pub prob: f64,
+    pub seed: u64,
+    pub action: FailAction,
+}
+
+impl Spec {
+    /// Fire forever with the given action (skip 0, take ∞, prob 1).
+    pub fn always(action: FailAction) -> Spec {
+        Spec { skip: 0, take: u64::MAX, prob: 1.0, seed: 0, action }
+    }
+
+    /// Fire exactly once, on the `n`-th hit (0-based).
+    pub fn nth(n: u64, action: FailAction) -> Spec {
+        Spec { skip: n, take: 1, prob: 1.0, seed: 0, action }
+    }
+
+    /// Fire each hit independently with probability `p`, deterministically
+    /// driven by `seed`.
+    pub fn prob(p: f64, seed: u64, action: FailAction) -> Spec {
+        Spec { skip: 0, take: u64::MAX, prob: p, seed, action }
+    }
+}
+
+struct Point {
+    spec: Spec,
+    prng: Prng,
+    hits: u64,
+    fired: u64,
+}
+
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, Point>> {
+    static REG: OnceLock<Mutex<HashMap<String, Point>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm a failpoint site. Re-arming replaces the previous spec and resets
+/// the hit/fired counters.
+pub fn arm(name: &str, spec: Spec) {
+    let mut reg = registry().lock().unwrap();
+    let prng = Prng::new(spec.seed);
+    reg.insert(name.to_string(), Point { spec, prng, hits: 0, fired: 0 });
+    ANY_ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm one site (no-op if it was not armed).
+pub fn disarm(name: &str) {
+    let mut reg = registry().lock().unwrap();
+    reg.remove(name);
+    if reg.is_empty() {
+        ANY_ARMED.store(false, Ordering::Release);
+    }
+}
+
+/// Disarm everything (test teardown).
+pub fn reset() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    ANY_ARMED.store(false, Ordering::Release);
+}
+
+/// How many times a site has fired (assertion helper for tests).
+pub fn fired(name: &str) -> u64 {
+    registry().lock().unwrap().get(name).map_or(0, |p| p.fired)
+}
+
+/// Evaluate a failpoint site. Returns the action to apply when the site
+/// fires, `None` otherwise. The disarmed fast path is one relaxed atomic
+/// load.
+#[inline]
+pub fn hit(name: &str) -> Option<FailAction> {
+    if !ANY_ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    hit_slow(name)
+}
+
+#[cold]
+fn hit_slow(name: &str) -> Option<FailAction> {
+    let mut reg = registry().lock().unwrap();
+    let p = reg.get_mut(name)?;
+    let n = p.hits;
+    p.hits += 1;
+    if n < p.spec.skip || p.fired >= p.spec.take {
+        return None;
+    }
+    if p.spec.prob < 1.0 && p.prng.uniform() >= p.spec.prob {
+        return None;
+    }
+    p.fired += 1;
+    Some(p.spec.action.clone())
+}
+
+/// Convenience for call sites whose only meaningful injected failure is an
+/// error: applies `Delay` inline, maps `Error` to `Err`, and treats
+/// `Skip`/`Truncate` as errors too (the guarded operation did not happen).
+pub fn check(name: &str) -> Result<(), String> {
+    match hit(name) {
+        None => Ok(()),
+        Some(FailAction::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FailAction::Error(msg)) => Err(msg),
+        Some(FailAction::Skip) => Err(format!("failpoint {name}: skipped")),
+        Some(FailAction::Truncate(_)) => Err(format!("failpoint {name}: truncated")),
+    }
+}
+
+/// RAII guard: arms a site on construction, disarms it on drop — keeps
+/// test failpoints from leaking into later tests in the same process.
+pub struct Armed {
+    name: String,
+}
+
+impl Armed {
+    pub fn new(name: &str, spec: Spec) -> Armed {
+        arm(name, spec);
+        Armed { name: name.to_string() }
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm(&self.name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Failpoint tests share the process-global registry; unique site names
+    // keep parallel test threads from interfering.
+
+    #[test]
+    fn disarmed_site_is_silent() {
+        assert_eq!(hit("fp.test.unarmed"), None);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = Armed::new("fp.test.nth", Spec::nth(2, FailAction::Skip));
+        assert_eq!(hit("fp.test.nth"), None);
+        assert_eq!(hit("fp.test.nth"), None);
+        assert_eq!(hit("fp.test.nth"), Some(FailAction::Skip));
+        assert_eq!(hit("fp.test.nth"), None);
+        assert_eq!(fired("fp.test.nth"), 1);
+    }
+
+    #[test]
+    fn always_fires_until_disarmed() {
+        arm("fp.test.always", Spec::always(FailAction::Error("boom".into())));
+        for _ in 0..5 {
+            assert_eq!(hit("fp.test.always"), Some(FailAction::Error("boom".into())));
+        }
+        disarm("fp.test.always");
+        assert_eq!(hit("fp.test.always"), None);
+    }
+
+    #[test]
+    fn probabilistic_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let _g = Armed::new(
+                "fp.test.prob",
+                Spec::prob(0.3, seed, FailAction::Skip),
+            );
+            (0..64).map(|_| hit("fp.test.prob").is_some()).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_ne!(a, c, "different seeds must differ");
+        let rate = a.iter().filter(|&&x| x).count();
+        assert!(rate > 5 && rate < 40, "~30% of 64 hits, got {rate}");
+    }
+
+    #[test]
+    fn check_maps_error_and_passes_delay() {
+        let _g = Armed::new(
+            "fp.test.check",
+            Spec::nth(0, FailAction::Error("injected".into())),
+        );
+        assert_eq!(check("fp.test.check"), Err("injected".into()));
+        assert_eq!(check("fp.test.check"), Ok(()));
+    }
+
+    #[test]
+    fn rearm_resets_counters() {
+        arm("fp.test.rearm", Spec::nth(0, FailAction::Skip));
+        assert!(hit("fp.test.rearm").is_some());
+        arm("fp.test.rearm", Spec::nth(0, FailAction::Skip));
+        assert!(hit("fp.test.rearm").is_some(), "re-arm must reset skip window");
+        disarm("fp.test.rearm");
+    }
+}

@@ -4,6 +4,7 @@
 //! build and are therefore first-class substrates of the repo.
 
 pub mod b64;
+pub mod failpoint;
 pub mod prng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,548 @@
+//! Deterministic fault-injection suite: the chaos tests behind the
+//! fabric's durability and isolation claims.
+//!
+//! * a replica crash after completion loses zero journaled results, and
+//!   restart delivers each exactly once;
+//! * a torn journal tail (crash mid-record) is truncated, not fatal;
+//! * a tenant hammering at 10× its rate limit gets clean 429s while other
+//!   tenants' latency stays within budget;
+//! * load shedding drops anonymous work first and admitted work rides out;
+//! * dropped heartbeats inside the hysteresis window do not flap health;
+//! * injected dispatch faults exercise the real failover bookkeeping;
+//! * concurrent clients hammering a pinned session through a replica death
+//!   all get an answer (success or retryable) in bounded time — no hangs.
+//!
+//! The failpoint registry is process-global, so every test here holds
+//! `FP_LOCK`: a failpoint armed by one test must never leak into the
+//! fabric traffic of another running in a parallel test thread.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use nnscope::client::remote::NdifClient;
+use nnscope::client::retry::is_retryable;
+use nnscope::client::{RetryPolicy, Session, Trace};
+use nnscope::coordinator::{Coordinator, CoordinatorConfig, Policy};
+use nnscope::json::Json;
+use nnscope::server::store::{Entry, ObjectStore};
+use nnscope::server::{http, NdifConfig, NdifServer, RateLimit, ShedPolicy};
+use nnscope::tensor::Tensor;
+use nnscope::util::failpoint::{self, Armed, FailAction, Spec};
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn fp_lock() -> std::sync::MutexGuard<'static, ()> {
+    FP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tokens(v: f32) -> Tensor {
+    Tensor::new(&[1, 16], vec![v; 16])
+}
+
+/// Wire payload of a minimal save-one-activation trace.
+fn trace_payload(v: f32) -> String {
+    let mut tr = Trace::new("tiny-sim", &tokens(v));
+    let h = tr.output("layer.0");
+    tr.save(h);
+    nnscope::graph::serde::to_json(&tr.into_graph()).to_string()
+}
+
+fn get_json(addr: SocketAddr, path: &str) -> Json {
+    let (status, body) = http::get(addr, path).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    nnscope::json::parse(std::str::from_utf8(&body).unwrap()).unwrap()
+}
+
+fn fault_counter(addr: SocketAddr, key: &str) -> i64 {
+    get_json(addr, "/v1/metrics").get("_faults").get(key).as_i64().unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "nnscope-faultinj-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Submit a trace and wait until the worker completes it WITHOUT picking
+/// up the result — the completed-but-undelivered window a crash must not
+/// lose.
+fn submit_and_complete(server: &NdifServer, v: f32) -> String {
+    let (_, before, _, _) = server.metrics("tiny-sim").unwrap();
+    let (status, body) =
+        http::post(server.addr(), "/v1/trace", trace_payload(v).as_bytes()).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = nnscope::json::parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, completed, failed, _) = server.metrics("tiny-sim").unwrap();
+        assert_eq!(failed, 0);
+        if completed > before {
+            return id;
+        }
+        assert!(Instant::now() < deadline, "worker never completed the trace");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 1: durable results
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_after_completion_loses_nothing_and_delivers_exactly_once() {
+    let _fp = fp_lock();
+    let dir = tmpdir("restart");
+
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.data_dir = Some(dir.clone());
+    let mut server = NdifServer::start(cfg).unwrap();
+    let id = submit_and_complete(&server, 3.0);
+    // crash: no graceful drain, no journal sync
+    server.kill();
+    drop(server);
+
+    // restart on the same data dir: the completed result must be there
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.data_dir = Some(dir.clone());
+    let server2 = NdifServer::start(cfg).unwrap();
+    assert!(
+        fault_counter(server2.addr(), "journal_replayed") >= 1,
+        "restart must replay the journaled result"
+    );
+    let (status, body) =
+        http::get(server2.addr(), &format!("/v1/result/{id}?timeout_ms=2000")).unwrap();
+    assert_eq!(status, 200, "replayed result must be deliverable: {}",
+        String::from_utf8_lossy(&body));
+    assert!(!body.is_empty());
+
+    // exactly once: the pickup evicted it
+    let (status, _) =
+        http::get(server2.addr(), &format!("/v1/result/{id}?timeout_ms=100")).unwrap();
+    assert_eq!(status, 404, "second pickup of the same id must 404");
+
+    // the id counter resumed past the replayed ids: no reuse
+    let (status, body) =
+        http::post(server2.addr(), "/v1/trace", trace_payload(4.0).as_bytes()).unwrap();
+    assert_eq!(status, 202);
+    let fresh = nnscope::json::parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_ne!(fresh, id, "restart must not mint a replayed id again");
+    drop(server2);
+
+    // the eviction itself was journaled: a third incarnation still 404s
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.data_dir = Some(dir.clone());
+    let server3 = NdifServer::start(cfg).unwrap();
+    let (status, _) =
+        http::get(server3.addr(), &format!("/v1/result/{id}?timeout_ms=100")).unwrap();
+    assert_eq!(status, 404, "delivered results must not resurrect across restarts");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_journal_tail_is_truncated_not_fatal() {
+    let _fp = fp_lock();
+    let dir = tmpdir("torn");
+
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.data_dir = Some(dir.clone());
+    let mut server = NdifServer::start(cfg).unwrap();
+    let id = submit_and_complete(&server, 5.0);
+    server.kill();
+    drop(server);
+
+    // simulate a crash that landed mid-append: magic byte + half a length
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("store.journal"))
+            .unwrap();
+        f.write_all(&[0xA7, 0x10, 0x00]).unwrap();
+    }
+
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.data_dir = Some(dir.clone());
+    let server2 = NdifServer::start(cfg).unwrap();
+    assert!(
+        fault_counter(server2.addr(), "journal_truncated_bytes") >= 3,
+        "the torn tail must be counted"
+    );
+    // every record before the tear survived
+    let (status, _) =
+        http::get(server2.addr(), &format!("/v1/result/{id}?timeout_ms=2000")).unwrap();
+    assert_eq!(status, 200, "records before the torn tail must replay");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_put_failpoint_drops_exactly_the_guarded_write() {
+    let _fp = fp_lock();
+    let store = ObjectStore::new();
+    {
+        let _g = Armed::new("store.put", Spec::nth(0, FailAction::Skip));
+        store.put_ready("x", "{}".into());
+        assert!(store.peek("x").is_none(), "the armed write must be lost");
+    }
+    store.put_ready("x", "{}".into());
+    assert!(matches!(store.peek("x"), Some(Entry::Ready(_))), "disarmed writes land");
+}
+
+// ---------------------------------------------------------------------------
+// Tier 2: per-tenant admission control
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tenant_at_10x_limit_gets_429s_without_collateral_damage() {
+    let _fp = fp_lock();
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.rate_limit = Some(RateLimit::new(50.0, 10.0));
+    let server = NdifServer::start(cfg).unwrap();
+    let addr = server.addr();
+
+    let polite = NdifClient::new(addr).with_token("polite");
+    let run_polite = |n: usize, base: f32| -> Vec<Duration> {
+        (0..n)
+            .map(|i| {
+                let mut tr = Trace::new("tiny-sim", &tokens(base + i as f32));
+                let h = tr.output("layer.0");
+                tr.save(h);
+                let t0 = Instant::now();
+                tr.run_remote(&polite).unwrap();
+                let dt = t0.elapsed();
+                std::thread::sleep(Duration::from_millis(30));
+                dt
+            })
+            .collect()
+    };
+    let p95 = |mut v: Vec<Duration>| -> Duration {
+        v.sort();
+        v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)]
+    };
+
+    let base = p95(run_polite(12, 0.0));
+
+    // the hog hammers the front door far past 10× its sustained rate.
+    // Bodies are deliberately unparsable so the test isolates the token
+    // bucket from queue contention (the per-tenant queue cap covers that).
+    let stop = Arc::new(AtomicBool::new(false));
+    let hog = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let (mut n429, mut attempts) = (0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                let (status, body) = http::http_request(
+                    addr,
+                    "POST",
+                    "/v1/trace",
+                    b"not a graph",
+                    &[("x-ndif-auth", "hog")],
+                )
+                .unwrap();
+                attempts += 1;
+                if status == 429 {
+                    let s = String::from_utf8_lossy(&body);
+                    assert!(s.contains("\"retryable\":true"), "{s}");
+                    assert!(s.contains("retry_after_ms"), "{s}");
+                    n429 += 1;
+                }
+            }
+            (n429, attempts)
+        })
+    };
+
+    let during = p95(run_polite(12, 100.0));
+    stop.store(true, Ordering::Relaxed);
+    let (n429, attempts) = hog.join().unwrap();
+
+    assert!(attempts >= 100, "hog only managed {attempts} attempts");
+    assert!(
+        n429 * 10 >= attempts * 8,
+        "a tenant far over its limit must be mostly throttled: {n429}/{attempts}"
+    );
+    assert!(fault_counter(addr, "throttled") as u64 >= n429);
+    // the polite tenant's p95 stays within 2× its baseline (plus a small
+    // absolute floor absorbing scheduler jitter on millisecond latencies)
+    let budget = (base * 2).max(Duration::from_millis(120));
+    assert!(
+        during <= budget,
+        "polite p95 {during:?} blew past 2× baseline {base:?}"
+    );
+}
+
+#[test]
+fn load_shed_drops_anonymous_first_and_admitted_ride_out() {
+    let _fp = fp_lock();
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.shed = ShedPolicy { shed_anon_above: 0, shed_all_above: 1000 };
+    let server = NdifServer::start(cfg).unwrap();
+    let addr = server.addr();
+    // the stream that builds the backlog is authenticated, so it cannot
+    // itself be shed at the anon watermark
+    let client = NdifClient::new(addr).with_token("vip");
+
+    // with nothing queued, anonymous work is admitted
+    let (status, _) = http::post(addr, "/v1/trace", trace_payload(0.0).as_bytes()).unwrap();
+    assert_eq!(status, 202, "below the watermark nothing is shed");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics("tiny-sim").unwrap().1 < 1 {
+        assert!(Instant::now() < deadline, "warmup trace never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // occupy the worker: a stream whose every frame is delayed keeps the
+    // queue depth above the anon watermark for a deterministic window
+    let _slow = Armed::new("stream.frame", Spec::always(FailAction::Delay(Duration::from_millis(40))));
+    let mut tr = Trace::new("tiny-sim", &tokens(1.0));
+    let h = tr.output("layer.0");
+    let m = tr.mean(h);
+    tr.step_hook(m);
+    let mut stream = tr.run_stream(&client, 30).unwrap();
+    let first = stream.next().expect("stream yields").unwrap();
+    drop(first);
+
+    // anonymous: shed with a retryable 503
+    let (status, body) = http::post(addr, "/v1/trace", trace_payload(2.0).as_bytes()).unwrap();
+    let s = String::from_utf8_lossy(&body);
+    assert_eq!(status, 503, "{s}");
+    assert!(s.contains("\"retryable\":true"), "{s}");
+    assert!(s.contains("shed"), "{s}");
+
+    // authenticated: rides out the first watermark
+    let (status, body) = http::http_request(
+        addr,
+        "POST",
+        "/v1/trace",
+        trace_payload(3.0).as_bytes(),
+        &[("x-ndif-auth", "vip")],
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    assert!(fault_counter(addr, "shed") >= 1);
+
+    // drain the stream so the worker finishes cleanly
+    for ev in stream {
+        ev.unwrap();
+    }
+}
+
+#[test]
+fn client_retry_rides_out_throttling_end_to_end() {
+    let _fp = fp_lock();
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.rate_limit = Some(RateLimit::new(20.0, 1.0));
+    let server = NdifServer::start(cfg).unwrap();
+    let client = NdifClient::new(server.addr()).with_token("steady");
+    let policy = RetryPolicy::new(
+        8,
+        Duration::from_millis(5),
+        Duration::from_millis(300),
+        Duration::from_secs(10),
+        42,
+    );
+
+    for i in 0..6 {
+        let mut tr = Trace::new("tiny-sim", &tokens(i as f32));
+        let h = tr.output("layer.0");
+        tr.save(h);
+        let g = tr.into_graph();
+        client
+            .execute_with_retry(&g, &policy)
+            .expect("retry policy must ride out 429s");
+    }
+    assert!(
+        fault_counter(server.addr(), "throttled") >= 1,
+        "burst=1 back-to-back submits must have throttled at least once"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tier 3/4: fleet chaos — heartbeats, dispatch faults, pinned sessions
+// ---------------------------------------------------------------------------
+
+fn coordinator() -> Coordinator {
+    let mut cfg = CoordinatorConfig::local();
+    cfg.policy = Policy::LeastLoaded;
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.health.degraded_after = Duration::from_millis(400);
+    cfg.health.dead_after = Duration::from_secs(2);
+    Coordinator::start(cfg).unwrap()
+}
+
+fn replica(coord: &Coordinator) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.coordinator = Some(coord.addr().to_string());
+    cfg.heartbeat = Duration::from_millis(50);
+    NdifServer::start(cfg).unwrap()
+}
+
+#[test]
+fn dropped_heartbeats_inside_hysteresis_window_do_not_flap_health() {
+    let _fp = fp_lock();
+    let coord = coordinator();
+    let _r = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+    // wait for registration
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while client.fleet_status().unwrap().get("replicas").as_array().unwrap().is_empty() {
+        assert!(Instant::now() < deadline, "replica never registered");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // drop 4 consecutive heartbeats (~200 ms of silence at a 50 ms
+    // cadence) — well inside the 400 ms degradation window
+    let _g = Armed::new(
+        "replica.heartbeat",
+        Spec { skip: 0, take: 4, prob: 1.0, seed: 0, action: FailAction::Skip },
+    );
+    let until = Instant::now() + Duration::from_millis(350);
+    while Instant::now() < until {
+        for r in client.fleet_status().unwrap().get("replicas").as_array().unwrap() {
+            assert_eq!(
+                r.get("health").as_str(),
+                Some("alive"),
+                "a blip inside the hysteresis window must not flap health"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(failpoint::fired("replica.heartbeat") >= 1, "the failpoint must have fired");
+
+    // and the fabric still serves
+    let mut tr = Trace::new("tiny-sim", &tokens(1.0));
+    let h = tr.output("layer.0");
+    tr.save(h);
+    tr.run_remote(&client).unwrap();
+}
+
+#[test]
+fn injected_dispatch_fault_fails_over_to_a_survivor() {
+    let _fp = fp_lock();
+    let coord = coordinator();
+    let r1 = replica(&coord);
+    let r2 = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+
+    let _g = Armed::new(
+        "coord.dispatch",
+        Spec::nth(0, FailAction::Error("chaos monkey".into())),
+    );
+    let mut tr = Trace::new("tiny-sim", &tokens(7.0));
+    let h = tr.output("layer.0");
+    let s = tr.save(h);
+    let res = tr.run_remote(&client).expect("failover must absorb the injected fault");
+    assert_eq!(res.get(s).dims(), &[1, 16, 32]);
+    assert_eq!(failpoint::fired("coord.dispatch"), 1);
+
+    // exactly one replica executed it — the faulted dispatch never ran
+    let (_, c1, _, _) = r1.metrics("tiny-sim").unwrap();
+    let (_, c2, _, _) = r2.metrics("tiny-sim").unwrap();
+    assert_eq!(c1 + c2, 1, "the request ran exactly once ({c1}/{c2})");
+}
+
+/// A self-contained bundle against a named (pinned) session: stores and
+/// saves in one request, so recovery after an unpin is a clean re-run.
+fn pinned_bundle(v: f32) -> Session {
+    let mut session = Session::new().with_id("pinned");
+    let mut t = Trace::new("tiny-sim", &tokens(v));
+    let c = t.constant(&Tensor::scalar(v));
+    t.save_to_state("w", c);
+    t.save(c);
+    session.add(t);
+    session
+}
+
+#[test]
+fn concurrent_pinned_session_hammer_through_replica_death_never_hangs() {
+    let _fp = fp_lock();
+    let t0 = Instant::now();
+    let coord = coordinator();
+    let r1 = replica(&coord);
+    let r2 = replica(&coord);
+    let addr = coord.addr();
+
+    // establish the pin, then find the replica holding it
+    pinned_bundle(1.0).run_remote(&NdifClient::new(addr)).unwrap();
+    let mut replicas = [r1, r2];
+    let holder = replicas
+        .iter()
+        .position(|r| matches!(http::get(r.addr(), "/v1/session/pinned"), Ok((200, _))))
+        .expect("some replica holds the pinned session");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                let (mut ok, mut ok_post, mut retryable) = (0u32, 0u32, 0u32);
+                let mut i = 0u32;
+                // hammer until a success lands AFTER the kill has settled —
+                // proof this client reached the surviving replica
+                loop {
+                    let settled = stop.load(Ordering::Relaxed);
+                    if settled && ok_post > 0 {
+                        break;
+                    }
+                    i += 1;
+                    assert!(i < 10_000, "thread {t} starved");
+                    match pinned_bundle((t * 1000 + i) as f32).run_remote(&client) {
+                        Ok(_) => {
+                            ok += 1;
+                            if settled {
+                                ok_post += 1;
+                            }
+                        }
+                        Err(e) => {
+                            assert!(
+                                is_retryable(&e),
+                                "every failure across the death must be retryable: {e}"
+                            );
+                            retryable += 1;
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                    }
+                }
+                (ok, retryable)
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(100));
+    replicas[holder].kill();
+    // after the registry marks the death, fresh placements go to the
+    // survivor; threads exit once they see a post-kill success
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut total_ok = 0;
+    for h in handles {
+        let (ok, _retryable) = h.join().unwrap();
+        assert!(ok > 0, "every client must eventually reach the new replica");
+        total_ok += ok;
+    }
+    assert!(total_ok >= 6);
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "the hammer must converge in bounded time"
+    );
+}

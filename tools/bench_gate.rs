@@ -88,6 +88,16 @@ fn metrics() -> Vec<Metric> {
             name: "obs on/off throughput ratio",
             extract: |j| j.get("obs_ratio_on_off").as_f64(),
         },
+        Metric {
+            file: "BENCH_faults.json",
+            name: "faults goodput_rps (chaos goodput)",
+            extract: |j| j.get("goodput_rps").as_f64(),
+        },
+        Metric {
+            file: "BENCH_faults.json",
+            name: "faults success_rate",
+            extract: |j| j.get("success_rate").as_f64(),
+        },
     ]
 }
 
@@ -105,6 +115,7 @@ fn main() {
         "BENCH_streaming.json",
         "BENCH_graphopt.json",
         "BENCH_obs.json",
+        "BENCH_faults.json",
     ];
 
     if args.flag("update") {
