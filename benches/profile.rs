@@ -1,0 +1,167 @@
+//! Deep-profiler overhead: un-profiled traffic must run at full speed.
+//!
+//! The profiler's disarmed path is one thread-local `bool` read per
+//! recording site (`obs::profile::armed()` — the same discipline as
+//! `util/failpoint.rs`), so traffic that does not opt in should be
+//! indistinguishable from a build without the profiler. This bench proves
+//! that from first principles rather than a flaky A/B wall-clock diff:
+//!
+//! 1. measure the cost of one `armed()` check in a tight loop;
+//! 2. count the recording sites one request actually crosses (executed
+//!    graph ops from a profiled run, times a generous per-op multiplier
+//!    covering set_point/set_step/alloc/value-lifecycle sites);
+//! 3. assert `checks × ns_per_check` is ≤3% of the measured per-request
+//!    service time. A violation means the disarmed path grew beyond the
+//!    single branch — a lock, an allocation, a clock read.
+//!
+//! Alongside, it measures closed-loop throughput for disarmed and armed
+//! traffic (`profile_off_rps` / `profiled_rps`) against one obs-enabled
+//! server; both are floor-gated in CI by `tools/bench_gate.rs` via
+//! `BENCH_profile.json`. Armed throughput is expected lower — profiled
+//! jobs record every op, and the scheduler never co-tenancy-merges them —
+//! which is exactly why profiling is per-request opt-in.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::json::Json;
+use nnscope::models::artifacts_dir;
+use nnscope::runtime::Manifest;
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::Tensor;
+use nnscope::util::table::Table;
+
+/// Generous bound on disarmed profiler checks per executed graph op:
+/// exec_node's branch, the hook's set_point pair, the phase timer pair,
+/// and the tensor-constructor / value-lifecycle notes an op can trigger.
+const CHECKS_PER_OP: u64 = 16;
+/// Flat per-request allowance for checks outside op execution (stream
+/// step markers, phase records, warm-up allocations).
+const CHECKS_FLAT: u64 = 256;
+
+/// Logit-lens request: save every layer's output.
+fn lens_trace(model: &str, m: &Manifest, v: f32) -> Trace {
+    let tokens = Tensor::new(&[1, m.seq], vec![v; m.seq]);
+    let mut tr = Trace::new(model, &tokens);
+    for l in 0..m.n_layers {
+        let h = tr.output(&format!("layer.{l}"));
+        tr.save(h);
+    }
+    tr
+}
+
+/// Drive `users × reqs` closed-loop requests; returns wall seconds.
+fn drive(
+    addr: std::net::SocketAddr,
+    model: &str,
+    m: &Manifest,
+    users: usize,
+    reqs: usize,
+    profiled: bool,
+) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..users)
+        .map(|u| {
+            let model = model.to_string();
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let client = NdifClient::new(addr);
+                for r in 0..reqs {
+                    let tr = lens_trace(&model, &m, (u * reqs + r) as f32);
+                    if profiled {
+                        let (_, profile, _) =
+                            client.execute_profiled(tr.graph()).expect("profiled request");
+                        assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
+                    } else {
+                        tr.run_remote(&client).expect("request");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let model = "tiny-sim";
+    let users = if common::quick() { 4 } else { 8 };
+    let reqs = common::samples(8);
+    let manifest = Manifest::load(&artifacts_dir(), model).unwrap();
+    common::section(&format!(
+        "Deep-profiler overhead — {model}, {users} users × {reqs} reqs, disarmed vs armed"
+    ));
+
+    // 1. the disarmed check, in isolation
+    let iters: u64 = if common::quick() { 2_000_000 } else { 20_000_000 };
+    let t0 = Instant::now();
+    let mut acc = false;
+    for _ in 0..iters {
+        acc ^= std::hint::black_box(nnscope::obs::profile::armed());
+    }
+    let ns_per_check = t0.elapsed().as_nanos() as f64 / iters as f64;
+    std::hint::black_box(acc);
+
+    let server = NdifServer::start(NdifConfig::local(&[model])).expect("server");
+
+    // warmup (lazy first-run init must not bill either side)
+    drive(server.addr(), model, &manifest, users, 1, false);
+    drive(server.addr(), model, &manifest, users, 1, true);
+
+    // 2. ops per request, from a real profiled run
+    let client = NdifClient::new(server.addr());
+    let (_, profile, _) = client
+        .execute_profiled(lens_trace(model, &manifest, 0.0).graph())
+        .expect("profiled probe");
+    let ops = profile.get("ops").as_i64().unwrap_or(0).max(1) as u64;
+
+    // 3. throughputs
+    let wall_off = drive(server.addr(), model, &manifest, users, reqs, false);
+    let wall_on = drive(server.addr(), model, &manifest, users, reqs, true);
+    let total = (users * reqs) as f64;
+    let (tp_off, tp_on) = (total / wall_off, total / wall_on);
+
+    // service time per request, fleet-wide: 1/throughput. Smaller than
+    // per-request latency under concurrency, which overstates the
+    // overhead share — the conservative direction for this assertion.
+    let request_ns = 1e9 / tp_off;
+    let checks = ops * CHECKS_PER_OP + CHECKS_FLAT;
+    let overhead_pct = checks as f64 * ns_per_check / request_ns * 100.0;
+
+    let mut table = Table::new("disarmed-path accounting").header(vec!["quantity", "value"]);
+    table.row(vec!["armed() check (ns)".into(), format!("{ns_per_check:.2}")]);
+    table.row(vec!["graph ops / request".into(), format!("{ops}")]);
+    table.row(vec!["bounded checks / request".into(), format!("{checks}")]);
+    table.row(vec!["service time / request (us)".into(), format!("{:.1}", request_ns / 1e3)]);
+    table.row(vec!["disarmed overhead (%)".into(), format!("{overhead_pct:.4}")]);
+    table.row(vec!["disarmed req/s".into(), format!("{tp_off:.2}")]);
+    table.row(vec!["profiled req/s".into(), format!("{tp_on:.2}")]);
+    table.print();
+    common::shape_note(&format!(
+        "disarmed profiler overhead {overhead_pct:.4}% of service time (budget ≤3%)"
+    ));
+    assert!(
+        overhead_pct <= 3.0,
+        "disarmed profiler overhead {overhead_pct:.3}% exceeds the 3% budget \
+         ({checks} checks × {ns_per_check:.2}ns against {request_ns:.0}ns/request) — \
+         the disarmed path must stay a single thread-local branch per site"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("profile")),
+        ("quick", Json::Bool(common::quick())),
+        ("model", Json::from(model)),
+        ("ns_per_check", Json::from(ns_per_check)),
+        ("ops_per_request", Json::from(ops as i64)),
+        ("disarmed_overhead_pct", Json::from(overhead_pct)),
+        ("profile_off_rps", Json::from(tp_off)),
+        ("profiled_rps", Json::from(tp_on)),
+    ]);
+    std::fs::write("BENCH_profile.json", json.pretty()).expect("write BENCH_profile.json");
+    println!("\nwrote BENCH_profile.json");
+}

@@ -16,16 +16,28 @@
 //! the mergeable histograms behind `GET /v1/metrics` — next to the
 //! client-observed response-time summary.
 //!
+//! A third mode finds the **capacity knee**: `--sweep` steps the
+//! open-loop arrival rate geometrically (`--rate` start, `--rate-growth`
+//! factor) and, after each round, reads the e2e p99 *for that round
+//! alone* — the server histograms are cumulative, so the round's counts
+//! are the per-bucket difference between consecutive snapshots, fed to
+//! the same [`percentile_from_counts`] the fleet merge uses. The sweep
+//! stops at the first rate whose p99 exceeds `--slo-ms` and reports the
+//! last rate that stayed under it: the capacity knee. A closed-loop
+//! driver cannot find this point — it self-throttles exactly when the
+//! queue starts growing.
+//!
 //! Run: `cargo run --release --example load_test -- \
 //!           [--model llama8b-sim] [--users 16] [--requests 2] \
-//!           [--open-loop --rate 20 --arrivals lognormal --sigma 1.5 --count 64]`
+//!           [--open-loop --rate 20 --arrivals lognormal --sigma 1.5 --count 64] \
+//!           [--sweep --rate 4 --rate-growth 1.5 --slo-ms 250 --count 48]`
 
 use std::time::Instant;
 
 use nnscope::client::{remote::NdifClient, Trace};
 use nnscope::models::{artifacts_dir, workload};
 use nnscope::netsim::Arrivals;
-use nnscope::obs::HistSnapshot;
+use nnscope::obs::{percentile_from_counts, HistSnapshot, BUCKETS};
 use nnscope::scheduler::CoTenancy;
 use nnscope::server::{http, NdifConfig, NdifServer};
 use nnscope::tensor::Tensor;
@@ -52,6 +64,10 @@ fn main() -> anyhow::Result<()> {
     };
     let server = NdifServer::start(cfg)?;
     let addr = server.addr();
+
+    if args.flag("sweep") {
+        return run_sweep(&server, addr, &model, &m, &args);
+    }
 
     let wall = Instant::now();
     let all = if args.flag("open-loop") {
@@ -149,6 +165,105 @@ fn run_open_loop(
         all.push(h.join().expect("request thread")?);
     }
     Ok(all)
+}
+
+/// Step the open-loop arrival rate geometrically until one round's e2e
+/// p99 exceeds the SLO; the last rate that stayed under it is the
+/// capacity knee. Round-local percentiles come from diffing consecutive
+/// cumulative histogram snapshots bucket-by-bucket — the same
+/// [`percentile_from_counts`] path the coordinator's fleet merge uses.
+fn run_sweep(
+    server: &NdifServer,
+    addr: std::net::SocketAddr,
+    model: &str,
+    m: &nnscope::runtime::Manifest,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let slo_ms = args.f64_or("slo-ms", 250.0);
+    let count = args.usize_or("count", 48);
+    let growth = args.f64_or("rate-growth", 1.5);
+    let rounds = args.usize_or("rounds", 10);
+    let sigma = args.f64_or("sigma", 1.5);
+    let kind = args.str_or("arrivals", "poisson");
+    let start_rate = args.f64_or("rate", 4.0);
+
+    // warm the lazy first-request path so round 1 is not billed for it
+    run_closed_loop(addr, model, m, 2, 1)?;
+
+    println!(
+        "sweep: {kind} arrivals, {count} requests/round, rate ×{growth:.2} per round, SLO e2e p99 ≤ {slo_ms:.0} ms"
+    );
+    let mut prev = fetch_e2e(addr, model, 0)?;
+    let mut rate = start_rate;
+    let mut knee: Option<(f64, f64)> = None;
+    let mut first_over: Option<(f64, f64)> = None;
+    for round in 1..=rounds {
+        let Some(arrivals) = Arrivals::parse(&kind, rate, sigma) else {
+            anyhow::bail!("unknown arrival process '{kind}' (uniform | poisson | lognormal)");
+        };
+        let wall = Instant::now();
+        run_open_loop(addr, model, m, arrivals, count)?;
+        let achieved = count as f64 / wall.elapsed().as_secs_f64();
+        let cur = fetch_e2e(addr, model, prev.count + count as u64)?;
+        let mut delta = [0u64; BUCKETS];
+        for (d, (c, p)) in delta.iter_mut().zip(cur.counts.iter().zip(prev.counts.iter())) {
+            *d = c.saturating_sub(*p);
+        }
+        let p50 = percentile_from_counts(&delta, 0.50) * 1e3;
+        let p99 = percentile_from_counts(&delta, 0.99) * 1e3;
+        let under = p99 <= slo_ms;
+        println!(
+            "  round {round:>2}: offered {rate:>7.2}/s achieved {achieved:>7.2}/s | e2e p50 {p50:>9.2} ms p99 {p99:>9.2} ms | {}",
+            if under { "under SLO" } else { "OVER SLO" }
+        );
+        if !under {
+            first_over = Some((rate, p99));
+            break;
+        }
+        knee = Some((rate, p99));
+        prev = cur;
+        rate *= growth;
+    }
+    match (knee, first_over) {
+        (Some((r, p99)), Some((over_r, over_p99))) => println!(
+            "\ncapacity knee ≈ {r:.1} req/s (e2e p99 {p99:.1} ms ≤ SLO {slo_ms:.0} ms); \
+             saturated at {over_r:.1} req/s (p99 {over_p99:.1} ms)"
+        ),
+        (Some((r, p99)), None) => println!(
+            "\nno knee found: p99 still {p99:.1} ms ≤ SLO {slo_ms:.0} ms at {r:.1} req/s — \
+             raise --rounds or --rate-growth"
+        ),
+        (None, Some((over_r, over_p99))) => println!(
+            "\nknee is below the starting rate: p99 already {over_p99:.1} ms > SLO {slo_ms:.0} ms \
+             at {over_r:.1} req/s — lower --rate"
+        ),
+        (None, None) => println!("\nsweep ran zero rounds (check --rounds)"),
+    }
+    let (enq, done, failed, merged) = server.metrics(model).unwrap();
+    println!("server: enqueued={enq} completed={done} failed={failed} merged_batches={merged}");
+    Ok(())
+}
+
+/// Cumulative e2e snapshot from `GET /v1/metrics`, polling until its
+/// count reaches `min_count`: the worker records e2e as it publishes a
+/// result, so a client that just received its answer can be one beat
+/// ahead of the histogram.
+fn fetch_e2e(
+    addr: std::net::SocketAddr,
+    model: &str,
+    min_count: u64,
+) -> anyhow::Result<HistSnapshot> {
+    let deadline = Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let (status, body) = http::get(addr, "/v1/metrics")?;
+        anyhow::ensure!(status == 200, "metrics endpoint returned {status}");
+        let j = nnscope::json::parse(std::str::from_utf8(&body)?)?;
+        let s = HistSnapshot::from_json(j.get(model).get("latency").get("e2e")).unwrap_or_default();
+        if s.count >= min_count || Instant::now() >= deadline {
+            return Ok(s);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
 }
 
 /// Submit one random-layer save request; returns the response time.

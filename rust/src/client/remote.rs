@@ -171,6 +171,74 @@ impl NdifClient {
         self.fetch_result_observed(&id)
     }
 
+    /// Execute one graph with the deep execution profiler armed (the
+    /// `x-nnscope-profile` header, honored by replicas directly or through
+    /// a coordinator, which forwards headers verbatim). Returns the saved
+    /// values, the result's `"profile"` metadata block — per-op self-times,
+    /// phase totals, allocation accounting — and the server-side request id
+    /// under which the full Chrome trace is retained
+    /// ([`NdifClient::profile_trace_events`]). Errors if the server ran
+    /// the request unprofiled (observability off), so callers never
+    /// silently read an empty profile.
+    pub fn execute_profiled(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Json, String)> {
+        let trace_id = crate::obs::mint_trace_id();
+        let payload = gserde::to_json(graph).to_string();
+        self.link.send(payload.len());
+        let mut headers = self.headers_traced(&trace_id);
+        headers.push((crate::obs::PROFILE_HEADER, "1"));
+        let (status, body) =
+            http::http_request(self.addr, "POST", "/v1/trace", payload.as_bytes(), &headers)?;
+        if status != 202 {
+            return Err(anyhow!(
+                "trace submit failed ({status}): {}",
+                String::from_utf8_lossy(&body)
+            ));
+        }
+        let j = parse(std::str::from_utf8(&body)?)?;
+        let id = j
+            .get("id")
+            .as_str()
+            .ok_or_else(|| anyhow!("submit response missing id"))?
+            .to_string();
+        let j = self.poll_result_json(&id)?;
+        let profile = j.get("profile");
+        if profile.is_null() {
+            return Err(anyhow!(
+                "result {id} carries no profile (server observability disabled?)"
+            ));
+        }
+        Ok((gserde::result_from_json(&j)?, profile.clone(), id))
+    }
+
+    /// Fetch the retained Chrome/Perfetto trace-event JSON of a profiled
+    /// request (`GET /v1/debug/profile/<id>` against the serving replica).
+    /// Errors once the bounded profile ring has evicted the id.
+    pub fn profile_trace_events(&self, id: &str) -> Result<Json> {
+        let (status, body) = http::get(self.addr, &format!("/v1/debug/profile/{id}"))?;
+        if status != 200 {
+            return Err(anyhow!("profile {id} not retained (ring evicted, or wrong server?)"));
+        }
+        Ok(parse(std::str::from_utf8(&body)?)?)
+    }
+
+    /// The hot-op table: cumulative per-op self-time across every profiled
+    /// request. Against a coordinator this is the fleet-merged
+    /// `/v1/fleet/hotops`; against a single server, its `/v1/debug/hotops`.
+    pub fn hotops(&self) -> Result<Json> {
+        let path = match self.discover()? {
+            Endpoint::Fleet => "/v1/fleet/hotops",
+            Endpoint::Single => "/v1/debug/hotops",
+        };
+        let (status, body) = http::get(self.addr, path)?;
+        if status != 200 {
+            return Err(anyhow!("hotops endpoint returned {status}"));
+        }
+        Ok(parse(std::str::from_utf8(&body)?)?)
+    }
+
     /// Long-poll a result id until completion.
     pub fn fetch_result(&self, id: &str) -> Result<GraphResult> {
         Ok(self.fetch_result_detailed(id)?.0)
@@ -188,6 +256,19 @@ impl NdifClient {
         &self,
         id: &str,
     ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
+        let j = self.poll_result_json(id)?;
+        let report = OptReport::from_json(j.get("opt"));
+        let timing = match j.get("timing") {
+            Json::Null => None,
+            t => Some(t.clone()),
+        };
+        Ok((gserde::result_from_json(&j)?, report, timing))
+    }
+
+    /// Long-poll `/v1/result/<id>` to completion and return the raw result
+    /// envelope — values plus whatever metadata blocks the server attached
+    /// (`opt`, `timing`, `profile`). Shared by the typed fetchers above.
+    fn poll_result_json(&self, id: &str) -> Result<Json> {
         let deadline = std::time::Instant::now() + self.poll_timeout;
         loop {
             let remaining = deadline.saturating_duration_since(std::time::Instant::now());
@@ -204,13 +285,7 @@ impl NdifClient {
                     // downstream: only the saved values (the Fig. 6c
                     // server-side-intervention advantage)
                     self.link.send(body.len());
-                    let j = parse(std::str::from_utf8(&body)?)?;
-                    let report = OptReport::from_json(j.get("opt"));
-                    let timing = match j.get("timing") {
-                        Json::Null => None,
-                        t => Some(t.clone()),
-                    };
-                    return Ok((gserde::result_from_json(&j)?, report, timing));
+                    return Ok(parse(std::str::from_utf8(&body)?)?);
                 }
                 202 => continue,
                 500 => {

@@ -458,7 +458,10 @@ fn route(state: &Arc<CoordState>, req: Request) -> Response {
         ("POST", "/v1/fleet/register") => register_endpoint(state, &req),
         ("POST", "/v1/fleet/deregister") => deregister_endpoint(state, &req),
         ("POST", "/v1/fleet/heartbeat") => heartbeat_endpoint(state, &req),
-        ("GET", "/v1/fleet/metrics") => fleet_metrics_endpoint(state),
+        ("GET", path) if path == "/v1/fleet/metrics" || path.starts_with("/v1/fleet/metrics?") => {
+            fleet_metrics_endpoint(state, path)
+        }
+        ("GET", "/v1/fleet/hotops") => fleet_hotops_endpoint(state),
         ("GET", "/v1/debug/requests") => debug_requests_endpoint(state),
         ("GET", "/v1/models") => models_endpoint(state),
         ("POST", "/v1/trace") => trace_endpoint(state, &req),
@@ -597,7 +600,17 @@ fn status_endpoint(state: &Arc<CoordState>) -> Response {
 /// Response shape per model: the summed counters plus a `"latency"`
 /// object of merged histogram snapshots (e2e/queue_wait/exec/ttft); a
 /// `"_fleet"` key carries the replica count consulted.
-fn fleet_metrics_endpoint(state: &Arc<CoordState>) -> Response {
+///
+/// `?format=prometheus` renders the same merged histograms in Prometheus
+/// text exposition via the replica's own formatter
+/// ([`crate::obs::registry::prometheus_histogram`]), so fleet and replica
+/// series are line-identical for identical counts; a
+/// `nnscope_fleet_replicas` gauge carries the replica count consulted.
+fn fleet_metrics_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
+    let prometheus = path
+        .split_once('?')
+        .map(|(_, q)| q.split('&').any(|kv| kv == "format=prometheus"))
+        .unwrap_or(false);
     const KINDS: [&str; 4] = ["e2e", "queue_wait", "exec", "ttft"];
     struct ModelAgg {
         enqueued: i64,
@@ -645,6 +658,18 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>) -> Response {
             }
         }
     }
+    if prometheus {
+        let mut text = String::new();
+        text.push_str("# TYPE nnscope_latency_seconds histogram\n");
+        for (name, a) in &agg {
+            for (kind, h) in KINDS.iter().zip(a.latency.iter()) {
+                crate::obs::registry::prometheus_histogram(&mut text, name, kind, h);
+            }
+        }
+        text.push_str("# TYPE nnscope_fleet_replicas gauge\n");
+        text.push_str(&format!("nnscope_fleet_replicas {consulted}\n"));
+        return Response::bytes(200, "text/plain; version=0.0.4", text.into_bytes());
+    }
     let mut out = BTreeMap::new();
     for (name, a) in agg {
         out.insert(
@@ -676,6 +701,36 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>) -> Response {
         ]),
     );
     Response::json(200, Json::Object(out).to_string())
+}
+
+/// `GET /v1/fleet/hotops`: the fleet's hottest ops by cumulative profiled
+/// self-time. Fans out to every non-dead replica's `/v1/debug/hotops`
+/// (each replica's table covers all profiled requests since its boot) and
+/// merges per-op `(count, self_ns)` pairs by addition — legal for the
+/// same reason histogram merging is: op kinds are a fleet-wide closed
+/// set, so summed self-times equal the self-times of the concatenated
+/// profiles. The answer to "what is the fleet spending its cycles on?"
+/// without downloading any individual profile.
+fn fleet_hotops_endpoint(state: &Arc<CoordState>) -> Response {
+    let mut acc: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let mut consulted = 0usize;
+    for rep in state.core.registry.snapshot() {
+        if rep.health == Health::Dead {
+            continue;
+        }
+        let Ok((200, body)) =
+            http::get_timeout(rep.addr, "/v1/debug/hotops", state.core.io_timeout)
+        else {
+            continue;
+        };
+        let Ok(s) = std::str::from_utf8(&body) else { continue };
+        let Ok(j) = parse(s) else { continue };
+        consulted += 1;
+        crate::obs::profile::merge_hotops(&mut acc, &j);
+    }
+    let mut j = crate::obs::profile::hotops_json(&acc, 64);
+    j.set("replicas", Json::from(consulted as i64));
+    Response::json(200, j.to_string())
 }
 
 /// `GET /v1/debug/requests`: the coordinator's bounded ring of recently

@@ -236,7 +236,9 @@ impl<'g> Executor<'g> {
         self.listeners[id] = self.listeners[id].saturating_sub(1);
         if self.listeners[id] == 0 && !self.locked[id] {
             self.live = self.live.saturating_sub(1);
-            Ok(self.values[id].take().expect("presence checked above"))
+            let t = self.values[id].take().expect("presence checked above");
+            crate::obs::profile::value_dead(t.numel() * 4);
+            Ok(t)
         } else {
             Ok(self.values[id].as_ref().expect("presence checked above").clone())
         }
@@ -247,6 +249,7 @@ impl<'g> Executor<'g> {
         if self.listeners[id] == 0 && !self.locked[id] {
             return;
         }
+        crate::obs::profile::value_live(v.numel() * 4);
         self.values[id] = Some(v);
         self.live += 1;
         self.peak_live = self.peak_live.max(self.live);
@@ -255,11 +258,27 @@ impl<'g> Executor<'g> {
     /// Execute one node. `current` is the module activation in flight at
     /// this hook (None in pre/post phases).
     ///
+    /// When the deep profiler is armed on this thread the node is timed
+    /// and recorded; the disarmed path pays exactly one thread-local
+    /// check per node (same discipline as `util/failpoint.rs`).
+    fn exec_node(&mut self, id: NodeId, current: Option<&mut Tensor>) -> Result<()> {
+        if !crate::obs::profile::armed() {
+            return self.exec_node_inner(id, current);
+        }
+        let kind = op_kind(&self.graph.nodes[id].op);
+        let t = std::time::Instant::now();
+        let r = self.exec_node_inner(id, current);
+        crate::obs::profile::record_op(kind, t);
+        r
+    }
+
+    /// The untimed node body.
+    ///
     /// Ops are matched by reference (the graph outlives the executor), so
     /// per-node execution clones no `Op` payloads — no module-name
     /// `String`s, no `Const` data, no range vectors. Unary transforms use
     /// the in-place kernels over the (usually moved-out) dependency.
-    fn exec_node(&mut self, id: NodeId, current: Option<&mut Tensor>) -> Result<()> {
+    fn exec_node_inner(&mut self, id: NodeId, current: Option<&mut Tensor>) -> Result<()> {
         let graph = self.graph;
         let out = match &graph.nodes[id].op {
             Op::Getter { .. } => {
@@ -524,14 +543,54 @@ impl Hooks for Executor<'_> {
         if self.schedule[k].is_empty() {
             return false;
         }
+        // tag ops recorded under this hook with its forward point
+        // (no-op thread-local check when the profiler is disarmed)
+        crate::obs::profile::set_point(point);
         let ids = self.schedule[k].clone();
-        match self.run_list(&ids, Some(t)) {
+        let r = match self.run_list(&ids, Some(t)) {
             Ok(modified) => modified,
             Err(e) => {
                 self.error = Some(e);
                 false
             }
-        }
+        };
+        crate::obs::profile::set_point("");
+        r
+    }
+}
+
+/// Stable profiler tag for an op (also the key of the fleet hot-op
+/// table, so it must not carry per-request payload like module names).
+fn op_kind(op: &Op) -> &'static str {
+    match op {
+        Op::Getter { .. } => "getter",
+        Op::Setter { .. } => "setter",
+        Op::Grad { .. } => "grad",
+        Op::Const { .. } => "const",
+        Op::Slice { .. } => "slice",
+        Op::Assign { .. } => "assign",
+        Op::Fill { .. } => "fill",
+        Op::Add { .. } => "add",
+        Op::Sub { .. } => "sub",
+        Op::Mul { .. } => "mul",
+        Op::Matmul { .. } => "matmul",
+        Op::Scale { .. } => "scale",
+        Op::Gelu { .. } => "gelu",
+        Op::Softmax { .. } => "softmax",
+        Op::Argmax { .. } => "argmax",
+        Op::Mean { .. } => "mean",
+        Op::Sum { .. } => "sum",
+        Op::Transpose { .. } => "transpose",
+        Op::Reshape { .. } => "reshape",
+        Op::MeanAxis { .. } => "mean_axis",
+        Op::FusedScaleAdd { .. } => "fused_scale_add",
+        Op::FusedMatmulGelu { .. } => "fused_matmul_gelu",
+        Op::FusedScaleSoftmax { .. } => "fused_scale_softmax",
+        Op::LogitDiff { .. } => "logit_diff",
+        Op::LoadState { .. } => "load_state",
+        Op::StoreState { .. } => "store_state",
+        Op::Save { .. } => "save",
+        Op::StepHook { .. } => "step_hook",
     }
 }
 
@@ -657,14 +716,20 @@ pub fn execute_view_raw(
     // observed; the clock reads are skipped entirely otherwise, so the
     // hooked computation is not perturbed (FlexModel's constraint)
     let timed = crate::obs::phases::armed();
-    let tf = timed.then(std::time::Instant::now);
+    let profiled = crate::obs::profile::armed();
+    let tf = (timed || profiled).then(std::time::Instant::now);
     if graph.shards > 1 {
         runner.forward_sharded(&padded, graph.shards, &mut ex)?;
     } else {
         runner.forward(&padded, &mut ex)?;
     }
     if let Some(t) = tf {
-        crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+        if timed {
+            crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+        }
+        if profiled {
+            crate::obs::profile::record_phase("forward", t);
+        }
     }
     if let Some(e) = ex.error.take() {
         return Err(e);
@@ -683,10 +748,15 @@ pub fn execute_view_raw(
             data.resize(padded.dims()[0], 0.0);
             t = Tensor::new(&[data.len()], data);
         }
-        let tb = timed.then(std::time::Instant::now);
+        let tb = (timed || profiled).then(std::time::Instant::now);
         let (_, grads) = runner.backward(&padded, &t, &grad_points)?;
         if let Some(t0) = tb {
-            crate::obs::phases::record("backward", t0.elapsed().as_nanos() as u64);
+            if timed {
+                crate::obs::phases::record("backward", t0.elapsed().as_nanos() as u64);
+            }
+            if profiled {
+                crate::obs::profile::record_phase("backward", t0);
+            }
         }
         ex.run_post(&grads)?;
     }
@@ -785,13 +855,22 @@ pub fn execute_stream_raw(
     let mut ctx = Tensor::new(&[1, seq], graph.tokens.clone());
     let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
     let timed = crate::obs::phases::armed();
+    let profiled = crate::obs::profile::armed();
     for step in 0..steps {
+        // per-step granularity: every op and phase recorded below carries
+        // the decode step index (no-op when the profiler is disarmed)
+        crate::obs::profile::set_step(step as i64);
         let mut ex = Executor::prevalidated(graph, &fseq, StateView::new())?;
         ex.run_pre()?;
-        let tf = timed.then(std::time::Instant::now);
+        let tf = (timed || profiled).then(std::time::Instant::now);
         let logits = runner.forward(&ctx, &mut ex)?;
         if let Some(t) = tf {
-            crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+            if timed {
+                crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
+            }
+            if profiled {
+                crate::obs::profile::record_phase("forward", t);
+            }
         }
         if let Some(e) = ex.error.take() {
             return Err(e);
@@ -804,6 +883,7 @@ pub fn execute_stream_raw(
             break;
         }
     }
+    crate::obs::profile::set_step(crate::obs::profile::NO_STEP);
     Ok(out)
 }
 

@@ -8,6 +8,7 @@
 //!   models     list hosted model configs from the artifacts directory
 //!   survey     print the Fig. 2 / Fig. 7 survey analyses
 //!   trace      submit a demo intervention to a running server (--addr)
+//!   profile    run a profiled logit-lens trace and print the op table
 //!   selftest   quick sanity pass over the tiny model
 //!
 //! Artifacts are looked up in `$NNSCOPE_ARTIFACTS` or `<crate>/artifacts`
@@ -25,7 +26,7 @@ use nnscope::tensor::Tensor;
 use nnscope::util::cli::Args;
 use nnscope::util::table::Table;
 
-const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selftest> [options]
+const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|profile|selftest> [options]
   serve       --models tiny-sim[,..] [--addr 127.0.0.1:7757] [--workers 8]
               [--config deploy.json]
               [--parallel-cotenancy] [--max-merge 8]
@@ -35,6 +36,8 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
               [--no-opt]   (disable the admission graph compiler)
               [--no-obs]   (disable latency histograms + request tracing)
               [--trace-ring 256]   (GET /v1/debug/requests retention)
+              [--profile-ring 64]  (GET /v1/debug/profile/<id> retention)
+              [--profile-sample-n N]   (deep-profile 1-in-N unsolicited requests)
               [--data-dir /path]   (journaled durable results, replayed on restart)
               [--rate-limit N] [--rate-burst M]   (per-tenant requests/s + burst)
               [--tenant-queue-cap N]   (per-tenant in-flight queue units)
@@ -46,6 +49,8 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|selfte
   models
   survey
   trace       --addr 127.0.0.1:7757 [--model tiny-sim]
+  profile     --addr 127.0.0.1:7757 [--model tiny-sim] [--top 10]
+              [--trace-out trace.json]   (write Chrome/Perfetto trace-event JSON)
   selftest";
 
 fn main() -> Result<()> {
@@ -57,6 +62,7 @@ fn main() -> Result<()> {
         "models" => models(),
         "survey" => survey_cmd(),
         "trace" => trace(&args),
+        "profile" => profile_cmd(&args),
         "selftest" => selftest(),
         _ => {
             eprintln!("{USAGE}");
@@ -92,6 +98,7 @@ fn serve(args: &Args) -> Result<()> {
         if args.flag("no-obs") {
             cfg.obs = false;
         }
+        apply_profile_flags(args, &mut cfg)?;
         apply_fault_tolerance_flags(args, &mut cfg)?;
         println!("preloading {:?} (from {path}) …", cfg.models);
         let server = NdifServer::start(cfg)?;
@@ -131,6 +138,8 @@ fn serve(args: &Args) -> Result<()> {
         optimize: !args.flag("no-opt"),
         obs: !args.flag("no-obs"),
         trace_ring: args.usize_or("trace-ring", 256),
+        profile_ring: args.usize_or("profile-ring", 64),
+        profile_sample_n: args.usize_or("profile-sample-n", 0),
         data_dir: None,
         rate_limit: None,
         tenant_queue_cap: usize::MAX,
@@ -143,6 +152,22 @@ fn serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Apply the profiler CLI flags on top of a config file (the flag-only
+/// path reads them straight into its literal).
+fn apply_profile_flags(args: &Args, cfg: &mut NdifConfig) -> Result<()> {
+    if let Some(n) = args.get("profile-ring") {
+        cfg.profile_ring = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --profile-ring '{n}'"))?;
+    }
+    if let Some(n) = args.get("profile-sample-n") {
+        cfg.profile_sample_n = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --profile-sample-n '{n}'"))?;
+    }
+    Ok(())
 }
 
 /// Apply the fault-tolerance CLI flags (shared by the config-file path,
@@ -306,6 +331,63 @@ fn trace(args: &Args) -> Result<()> {
             "server graph compiler: {} -> {} nodes (dce {}, folded {}, cse {}, fused {})",
             r.nodes_before, r.nodes_after, r.dce_removed, r.folded, r.cse_merged, r.fused
         );
+    }
+    Ok(())
+}
+
+/// Run a profiled logit-lens trace (save every layer's output) against a
+/// running server and pretty-print the deep profile: top ops by self-time,
+/// phase totals, and allocation accounting. `--trace-out` additionally
+/// fetches the retained Chrome/Perfetto trace-event JSON and writes it to
+/// a file (load it at ui.perfetto.dev or chrome://tracing).
+fn profile_cmd(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args.str_or("addr", "127.0.0.1:7757").parse()?;
+    let model = args.str_or("model", "tiny-sim");
+    let top = args.usize_or("top", 10);
+    let client = NdifClient::new(addr);
+    let m = Manifest::load(&artifacts_dir(), &model)?;
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| (i % m.vocab) as f32).collect(),
+    );
+    // logit-lens: save every layer's output, so the profile exercises
+    // every forward point
+    let mut tr = Trace::new(&model, &tokens);
+    for l in 0..m.n_layers {
+        let h = tr.output(&format!("layer.{l}"));
+        tr.save(h);
+    }
+    let (_, profile, id) = client.execute_profiled(tr.graph())?;
+    println!("request {id} profiled: {} ops recorded", profile.get("ops").as_i64().unwrap_or(0));
+    let mut table = Table::new(&format!("top ops by self-time ({model})")).header(vec![
+        "op", "count", "self (us)", "alloc (bytes)",
+    ]);
+    for o in profile.get("top_ops").as_array().unwrap_or(&[]).iter().take(top) {
+        table.row(vec![
+            o.get("op").as_str().unwrap_or("?").to_string(),
+            format!("{}", o.get("count").as_i64().unwrap_or(0)),
+            format!("{:.1}", o.get("self_us").as_f64().unwrap_or(0.0)),
+            format!("{}", o.get("alloc_bytes").as_i64().unwrap_or(0)),
+        ]);
+    }
+    table.print();
+    for p in profile.get("phases").as_array().unwrap_or(&[]) {
+        println!(
+            "phase {:<10} {:>10.1} us",
+            p.get("name").as_str().unwrap_or("?"),
+            p.get("total_us").as_f64().unwrap_or(0.0)
+        );
+    }
+    println!(
+        "memory: {} bytes allocated, {} freed, peak {}",
+        profile.get("alloc_bytes").as_i64().unwrap_or(0),
+        profile.get("freed_bytes").as_i64().unwrap_or(0),
+        profile.get("peak_bytes").as_i64().unwrap_or(0)
+    );
+    if let Some(path) = args.get("trace-out") {
+        let events = client.profile_trace_events(&id)?;
+        std::fs::write(path, events.to_string())?;
+        println!("Chrome trace-event JSON written to {path} (open in ui.perfetto.dev)");
     }
     Ok(())
 }

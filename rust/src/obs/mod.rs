@@ -19,6 +19,10 @@
 //! * [`registry`] — the per-process hub: per-model and per-endpoint
 //!   histograms plus optimizer-pass counters, with JSON and Prometheus
 //!   text exposition for `GET /v1/metrics`.
+//! * [`profile`] — the opt-in deep execution profiler: per-op timing and
+//!   memory accounting for individual requests (armed by the
+//!   `x-nnscope-profile` header), exported as result metadata, Chrome
+//!   trace-event JSON, and a fleet-aggregable hot-op table.
 //!
 //! Everything on the hot path is an atomic fetch-add with relaxed
 //! ordering — no locks are taken while a request is being recorded
@@ -30,10 +34,12 @@
 //! holds the instrumented-vs-disabled overhead under 5%.
 
 pub mod hist;
+pub mod profile;
 pub mod registry;
 pub mod trace;
 
 pub use hist::{percentile_from_counts, HistSnapshot, Histogram, BUCKETS};
+pub use profile::{HotOps, Profile, ProfileHub, ProfileRing, PROFILE_HEADER};
 pub use registry::{EndpointObs, ModelObs, Obs, ServiceObs};
 pub use trace::{mint_trace_id, timed, ReqTrace, SpanRec, TraceRing, TRACE_HEADER};
 

@@ -1,0 +1,641 @@
+//! Deep execution profiler: opt-in per-request, per-op timing and memory
+//! accounting.
+//!
+//! PR 6's [`super::trace::ReqTrace`] answers "where did this request's
+//! time go?" at request granularity (validate/opt/queue/exec spans).
+//! This module answers the next question down — "where inside `exec`?" —
+//! by recording, for every executed graph node and model phase: the op
+//! kind, the forward point it ran at, the decode step (for streams),
+//! wall time, the executing thread, and the bytes the tensor layer
+//! allocated while it ran. Value-lifecycle accounting in the interpreter
+//! (`put` / `take_dep`) drives live-bytes and peak-bytes gauges.
+//!
+//! The collector is the same thread-local arm/record/take pattern as
+//! [`super::phases`] — the scheduler worker arms it before executing a
+//! profiled job and takes the finished [`Profile`] after — so the
+//! **disarmed** path costs exactly one thread-local `bool` read per
+//! recording site (the same discipline as `util/failpoint.rs`), which is
+//! what keeps un-profiled traffic at pre-profiler throughput
+//! (`benches/profile.rs` asserts the disarmed overhead stays ≤3%).
+//!
+//! A finished profile surfaces three ways:
+//!
+//! * a `"profile"` summary block in result metadata
+//!   ([`Profile::summary_json`]: top-K ops by self-time, peak memory,
+//!   per-phase totals);
+//! * the full Chrome/Perfetto trace-event JSON at
+//!   `GET /v1/debug/profile/<req-id>` ([`Profile::trace_events_json`]),
+//!   held in a bounded [`ProfileRing`];
+//! * cumulative per-op self-time in a replica-wide [`HotOps`] table,
+//!   aggregated fleet-wide by the coordinator's `GET /v1/fleet/hotops`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// Request header arming the profiler for one request (value `1`). The
+/// body key `"profile": true` is equivalent and — because the
+/// coordinator forwards request bodies verbatim — also fleet-transparent.
+pub const PROFILE_HEADER: &str = "x-nnscope-profile";
+
+/// Sentinel step index for ops outside any decode step.
+pub const NO_STEP: i64 = -1;
+
+// Stable small integer ids for trace-event `tid` fields:
+// `std::thread::ThreadId` has no portable numeric form.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Relaxed);
+    static COLLECTOR: std::cell::RefCell<Option<Collector>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// One recorded op (a graph node execution) or model phase.
+#[derive(Clone, Debug)]
+pub struct OpRec {
+    /// Op tag (`"matmul"`, `"getter"`, …) or phase name (`"forward"`).
+    pub kind: &'static str,
+    /// `"op"` for graph nodes, `"phase"` for model phases.
+    pub cat: &'static str,
+    /// Interned index into [`Profile::points`] (`u32::MAX` = none).
+    pub point: u32,
+    /// Decode step, [`NO_STEP`] outside a stream step.
+    pub step: i64,
+    /// Start relative to arming, microseconds.
+    pub start_us: u64,
+    /// Duration, nanoseconds (sub-µs ops still sum meaningfully).
+    pub dur_ns: u64,
+    /// Tensor bytes allocated while this op ran.
+    pub alloc_bytes: u64,
+}
+
+/// The live thread-local collector while a profiled request executes.
+struct Collector {
+    t0: Instant,
+    tid: u64,
+    ops: Vec<OpRec>,
+    /// Interned forward points; ops reference them by index.
+    points: Vec<String>,
+    cur_point: u32,
+    cur_step: i64,
+    /// Alloc bytes since the last op record (attributed to that op).
+    pending_alloc: u64,
+    alloc_bytes: u64,
+    freed_bytes: u64,
+    live_bytes: u64,
+    peak_bytes: u64,
+}
+
+/// A finished, taken profile.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Every recorded op and phase, in execution order.
+    pub ops: Vec<OpRec>,
+    /// Interned forward-point names referenced by [`OpRec::point`].
+    pub points: Vec<String>,
+    /// Small stable id of the thread that executed the request.
+    pub tid: u64,
+    /// Total tensor bytes allocated while armed.
+    pub alloc_bytes: u64,
+    /// Bytes of graph values freed (moved out / dropped) while armed.
+    pub freed_bytes: u64,
+    /// High-water mark of live graph-value bytes.
+    pub peak_bytes: u64,
+    /// Live graph-value bytes at take time (normally ~0).
+    pub live_bytes: u64,
+}
+
+/// Start collecting on this thread (clears any previous, un-taken
+/// profile). The scheduler worker arms this alongside
+/// [`super::phases::arm`] for profiled jobs only.
+pub fn arm() {
+    COLLECTOR.with(|c| {
+        *c.borrow_mut() = Some(Collector {
+            t0: Instant::now(),
+            tid: TID.with(|t| *t),
+            ops: Vec::new(),
+            points: Vec::new(),
+            cur_point: u32::MAX,
+            cur_step: NO_STEP,
+            pending_alloc: 0,
+            alloc_bytes: 0,
+            freed_bytes: 0,
+            live_bytes: 0,
+            peak_bytes: 0,
+        });
+    });
+}
+
+/// Is the profiler armed on this thread? The ONE branch every disarmed
+/// recording site pays.
+#[inline]
+pub fn armed() -> bool {
+    COLLECTOR.with(|c| c.borrow().is_some())
+}
+
+/// Mark the forward point subsequent ops execute at (interned; no-op
+/// when disarmed). Pass `""` to clear (pre/post phases).
+pub fn set_point(point: &str) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            if point.is_empty() {
+                col.cur_point = u32::MAX;
+                return;
+            }
+            col.cur_point = match col.points.iter().position(|p| p == point) {
+                Some(i) => i as u32,
+                None => {
+                    col.points.push(point.to_string());
+                    (col.points.len() - 1) as u32
+                }
+            };
+        }
+    });
+}
+
+/// Mark the decode step subsequent ops belong to ([`NO_STEP`] = none).
+pub fn set_step(step: i64) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            col.cur_step = step;
+        }
+    });
+}
+
+/// Record one executed graph node: `start` was taken just before the op
+/// ran (armed-gated by the caller), duration is measured here. Pending
+/// tensor allocations since the previous record are attributed to it.
+pub fn record_op(kind: &'static str, start: Instant) {
+    record(kind, "op", start);
+}
+
+/// Record one model phase (`forward` / `backward`) the same way.
+pub fn record_phase(kind: &'static str, start: Instant) {
+    record(kind, "phase", start);
+}
+
+fn record(kind: &'static str, cat: &'static str, start: Instant) {
+    let dur_ns = start.elapsed().as_nanos() as u64;
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            let start_us = start.saturating_duration_since(col.t0).as_micros() as u64;
+            let alloc = std::mem::take(&mut col.pending_alloc);
+            col.ops.push(OpRec {
+                kind,
+                cat,
+                point: if cat == "op" { col.cur_point } else { u32::MAX },
+                step: col.cur_step,
+                start_us,
+                dur_ns,
+                alloc_bytes: alloc,
+            });
+        }
+    });
+}
+
+/// Account a tensor-layer allocation of `bytes` (constructor sites in
+/// `tensor/`). One thread-local read when disarmed.
+#[inline]
+pub fn note_alloc(bytes: usize) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            col.alloc_bytes += bytes as u64;
+            col.pending_alloc += bytes as u64;
+        }
+    });
+}
+
+/// A graph value of `bytes` became live in the executor (`put`).
+#[inline]
+pub fn value_live(bytes: usize) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            col.live_bytes += bytes as u64;
+            col.peak_bytes = col.peak_bytes.max(col.live_bytes);
+        }
+    });
+}
+
+/// A graph value of `bytes` died in the executor (moved out of
+/// `take_dep` by its last listener, or dropped).
+#[inline]
+pub fn value_dead(bytes: usize) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            col.freed_bytes += bytes as u64;
+            col.live_bytes = col.live_bytes.saturating_sub(bytes as u64);
+        }
+    });
+}
+
+/// Take the finished profile and disarm; `None` when not armed.
+pub fn take() -> Option<Profile> {
+    COLLECTOR.with(|c| {
+        c.borrow_mut().take().map(|col| Profile {
+            ops: col.ops,
+            points: col.points,
+            tid: col.tid,
+            alloc_bytes: col.alloc_bytes,
+            freed_bytes: col.freed_bytes,
+            peak_bytes: col.peak_bytes,
+            live_bytes: col.live_bytes,
+        })
+    })
+}
+
+impl Profile {
+    /// Sum of op self-times (category `"op"` only — phases overlap ops),
+    /// nanoseconds.
+    pub fn total_op_ns(&self) -> u64 {
+        self.ops.iter().filter(|o| o.cat == "op").map(|o| o.dur_ns).sum()
+    }
+
+    /// The `"profile"` result-metadata block: top-`k` ops by cumulative
+    /// self-time, per-phase totals, memory gauges.
+    pub fn summary_json(&self, k: usize) -> Json {
+        let mut by_op: BTreeMap<&'static str, (u64, u64, u64)> = BTreeMap::new();
+        let mut phases: Vec<(&'static str, u64)> = Vec::new();
+        for o in &self.ops {
+            if o.cat == "phase" {
+                match phases.iter_mut().find(|(n, _)| *n == o.kind) {
+                    Some((_, ns)) => *ns += o.dur_ns,
+                    None => phases.push((o.kind, o.dur_ns)),
+                }
+                continue;
+            }
+            let e = by_op.entry(o.kind).or_insert((0, 0, 0));
+            e.0 += 1;
+            e.1 += o.dur_ns;
+            e.2 += o.alloc_bytes;
+        }
+        let mut ranked: Vec<_> = by_op.into_iter().collect();
+        ranked.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then(a.0.cmp(b.0)));
+        let dropped = ranked.len().saturating_sub(k);
+        ranked.truncate(k);
+        let top: Vec<Json> = ranked
+            .into_iter()
+            .map(|(op, (count, ns, bytes))| {
+                Json::obj(vec![
+                    ("op", Json::from(op)),
+                    ("count", Json::from(count as i64)),
+                    ("self_us", Json::from((ns / 1_000) as i64)),
+                    ("self_ns", Json::from(ns as i64)),
+                    ("alloc_bytes", Json::from(bytes as i64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ops", Json::from(self.ops.iter().filter(|o| o.cat == "op").count() as i64)),
+            ("total_self_us", Json::from((self.total_op_ns() / 1_000) as i64)),
+            ("top_ops", Json::Array(top)),
+            ("dropped_ops", Json::from(dropped as i64)),
+            (
+                "phases",
+                Json::Array(
+                    phases
+                        .into_iter()
+                        .map(|(n, ns)| {
+                            Json::obj(vec![
+                                ("name", Json::from(n)),
+                                ("total_us", Json::from((ns / 1_000) as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("alloc_bytes", Json::from(self.alloc_bytes as i64)),
+            ("freed_bytes", Json::from(self.freed_bytes as i64)),
+            ("peak_bytes", Json::from(self.peak_bytes as i64)),
+        ])
+    }
+
+    /// The full profile as Chrome/Perfetto trace-event JSON: an object
+    /// with a `"traceEvents"` array of complete (`"ph": "X"`) events,
+    /// timestamps/durations in microseconds — loadable as-is in
+    /// `chrome://tracing` or ui.perfetto.dev.
+    pub fn trace_events_json(&self, req_id: &str) -> Json {
+        let events: Vec<Json> = self
+            .ops
+            .iter()
+            .map(|o| {
+                let mut args = vec![("alloc_bytes", Json::from(o.alloc_bytes as i64))];
+                if o.step != NO_STEP {
+                    args.push(("step", Json::from(o.step)));
+                }
+                if let Some(p) = self.points.get(o.point as usize) {
+                    args.push(("point", Json::from(p.as_str())));
+                }
+                Json::obj(vec![
+                    ("name", Json::from(o.kind)),
+                    ("cat", Json::from(o.cat)),
+                    ("ph", Json::from("X")),
+                    ("ts", Json::from(o.start_us as i64)),
+                    // trace-event durations are µs; keep sub-µs ops visible
+                    ("dur", Json::from((o.dur_ns as f64 / 1e3).max(0.001))),
+                    ("pid", Json::from(1i64)),
+                    ("tid", Json::from(self.tid as i64)),
+                    ("args", Json::obj(args)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Array(events)),
+            ("displayTimeUnit", Json::from("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("request", Json::from(req_id)),
+                    ("peak_bytes", Json::from(self.peak_bytes as i64)),
+                    ("alloc_bytes", Json::from(self.alloc_bytes as i64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Bounded, id-keyed ring of finished request profiles (trace-event
+/// JSON), same lifecycle as [`super::trace::TraceRing`]: push evicts the
+/// oldest beyond capacity, never blocks beyond the push itself.
+pub struct ProfileRing {
+    cap: usize,
+    entries: Mutex<VecDeque<(String, Json)>>,
+}
+
+impl ProfileRing {
+    /// Ring of at most `cap` profiles (minimum 1).
+    pub fn new(cap: usize) -> ProfileRing {
+        ProfileRing { cap: cap.max(1), entries: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Insert a finished profile under its request/trace id.
+    pub fn push(&self, id: &str, profile: Json) {
+        let mut e = self.entries.lock().unwrap();
+        if e.len() == self.cap {
+            e.pop_front();
+        }
+        e.push_back((id.to_string(), profile));
+    }
+
+    /// Look a profile up by id (most recent entry wins on duplicates).
+    pub fn get(&self, id: &str) -> Option<Json> {
+        let e = self.entries.lock().unwrap();
+        e.iter().rev().find(|(k, _)| k == id).map(|(_, v)| v.clone())
+    }
+
+    /// Retained ids, oldest first.
+    pub fn ids(&self) -> Vec<String> {
+        self.entries.lock().unwrap().iter().map(|(k, _)| k.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// Replica-wide cumulative per-op self-time, fed by every profiled
+/// request; the coordinator merges these across replicas for
+/// `GET /v1/fleet/hotops`. Written once per *profiled* request (bounded
+/// map: op kinds are a closed set), never touched by disarmed traffic.
+#[derive(Default)]
+pub struct HotOps {
+    ops: Mutex<BTreeMap<&'static str, (u64, u64)>>,
+}
+
+impl HotOps {
+    pub fn new() -> HotOps {
+        HotOps::default()
+    }
+
+    /// Fold one finished profile's op self-times in.
+    pub fn fold(&self, p: &Profile) {
+        let mut m = self.ops.lock().unwrap();
+        for o in p.ops.iter().filter(|o| o.cat == "op") {
+            let e = m.entry(o.kind).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += o.dur_ns;
+        }
+    }
+
+    /// `{"hotops": [{"op", "count", "self_ns", "self_us"}...]}` ranked by
+    /// cumulative self-time, top `k`.
+    pub fn to_json(&self, k: usize) -> Json {
+        let m = self.ops.lock().unwrap();
+        let acc: BTreeMap<String, (u64, u64)> =
+            m.iter().map(|(op, &v)| (op.to_string(), v)).collect();
+        hotops_json(&acc, k)
+    }
+}
+
+/// Render a `(count, self_ns)` per-op table as the wire `hotops` shape —
+/// shared by the replica ([`HotOps::to_json`]) and the coordinator's
+/// fleet merge so both tiers emit identical JSON.
+pub fn hotops_json(acc: &BTreeMap<String, (u64, u64)>, k: usize) -> Json {
+    let mut ranked: Vec<_> = acc.iter().collect();
+    ranked.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then(a.0.cmp(b.0)));
+    let total_ns: u64 = acc.values().map(|v| v.1).sum();
+    ranked.truncate(k);
+    Json::obj(vec![
+        ("total_self_ns", Json::from(total_ns as i64)),
+        (
+            "hotops",
+            Json::Array(
+                ranked
+                    .into_iter()
+                    .map(|(op, &(count, ns))| {
+                        Json::obj(vec![
+                            ("op", Json::from(op.as_str())),
+                            ("count", Json::from(count as i64)),
+                            ("self_ns", Json::from(ns as i64)),
+                            ("self_us", Json::from((ns / 1_000) as i64)),
+                            (
+                                "share",
+                                Json::from(if total_ns == 0 {
+                                    0.0
+                                } else {
+                                    ns as f64 / total_ns as f64
+                                }),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Merge one replica's `hotops` JSON into a fleet accumulator (the
+/// coordinator's half of the exchange; inverse of [`hotops_json`]).
+pub fn merge_hotops(acc: &mut BTreeMap<String, (u64, u64)>, j: &Json) {
+    for h in j.get("hotops").as_array().unwrap_or(&[]) {
+        let Some(op) = h.get("op").as_str() else { continue };
+        let count = h.get("count").as_i64().unwrap_or(0).max(0) as u64;
+        let ns = h.get("self_ns").as_i64().unwrap_or(0).max(0) as u64;
+        let e = acc.entry(op.to_string()).or_insert((0, 0));
+        e.0 += count;
+        e.1 += ns;
+    }
+}
+
+/// The per-replica profiler surface a scheduler worker records into:
+/// the bounded trace-event ring plus the cumulative hot-op table.
+pub struct ProfileHub {
+    /// Finished profiles for `GET /v1/debug/profile/<id>`.
+    pub ring: ProfileRing,
+    /// Cumulative per-op self-time for `GET /v1/debug/hotops`.
+    pub hotops: HotOps,
+}
+
+impl ProfileHub {
+    pub fn new(ring_cap: usize) -> ProfileHub {
+        ProfileHub { ring: ProfileRing::new(ring_cap), hotops: HotOps::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_profile() -> Profile {
+        arm();
+        set_point("layer.0");
+        let t = Instant::now();
+        note_alloc(1024);
+        value_live(1024);
+        record_op("getter", t);
+        let t = Instant::now();
+        note_alloc(2048);
+        value_live(2048);
+        record_op("matmul", t);
+        value_dead(1024);
+        set_step(2);
+        let t = Instant::now();
+        record_op("matmul", t);
+        let t = Instant::now();
+        record_phase("forward", t);
+        take().unwrap()
+    }
+
+    #[test]
+    fn disarmed_by_default_and_take_disarms() {
+        assert!(!armed());
+        note_alloc(64); // no-op
+        record_op("matmul", Instant::now()); // no-op
+        assert!(take().is_none());
+        arm();
+        assert!(armed());
+        assert!(take().is_some());
+        assert!(!armed());
+    }
+
+    #[test]
+    fn collector_attributes_allocs_and_tracks_peak() {
+        let p = small_profile();
+        assert_eq!(p.ops.len(), 4);
+        assert_eq!(p.ops[0].kind, "getter");
+        assert_eq!(p.ops[0].alloc_bytes, 1024);
+        assert_eq!(p.ops[1].alloc_bytes, 2048);
+        assert_eq!(p.ops[2].step, 2);
+        assert_eq!(p.ops[0].step, NO_STEP);
+        assert_eq!(p.points, vec!["layer.0".to_string()]);
+        assert_eq!(p.alloc_bytes, 3072);
+        assert_eq!(p.peak_bytes, 3072);
+        assert_eq!(p.freed_bytes, 1024);
+        assert_eq!(p.live_bytes, 2048);
+    }
+
+    #[test]
+    fn summary_ranks_ops_by_self_time_and_totals_phases() {
+        let p = small_profile();
+        let s = p.summary_json(8);
+        assert_eq!(s.get("ops").as_i64(), Some(3));
+        let top = s.get("top_ops").as_array().unwrap();
+        assert_eq!(top.len(), 2); // matmul + getter
+        let ops: Vec<&str> = top.iter().filter_map(|t| t.get("op").as_str()).collect();
+        assert!(ops.contains(&"matmul") && ops.contains(&"getter"));
+        let matmul = top.iter().find(|t| t.get("op").as_str() == Some("matmul")).unwrap();
+        assert_eq!(matmul.get("count").as_i64(), Some(2));
+        let phases = s.get("phases").as_array().unwrap();
+        assert_eq!(phases[0].get("name").as_str(), Some("forward"));
+        assert_eq!(s.get("peak_bytes").as_i64(), Some(3072));
+        // top-K truncation reports what it dropped
+        let s1 = p.summary_json(1);
+        assert_eq!(s1.get("top_ops").as_array().unwrap().len(), 1);
+        assert_eq!(s1.get("dropped_ops").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn trace_events_are_structurally_valid() {
+        let p = small_profile();
+        let j = p.trace_events_json("r-1");
+        let events = j.get("traceEvents").as_array().unwrap();
+        assert_eq!(events.len(), 4);
+        for e in events {
+            assert!(e.get("name").as_str().is_some());
+            assert_eq!(e.get("ph").as_str(), Some("X"));
+            assert!(e.get("ts").as_i64().is_some());
+            assert!(e.get("dur").as_f64().unwrap() > 0.0);
+            assert!(e.get("pid").as_i64().is_some());
+            assert!(e.get("tid").as_i64().is_some());
+        }
+        // round-trips through the wire form
+        let text = j.to_string();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.get("traceEvents").as_array().unwrap().len(), 4);
+        assert_eq!(back.get("otherData").get("request").as_str(), Some("r-1"));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keyed() {
+        let r = ProfileRing::new(2);
+        assert_eq!(r.capacity(), 2);
+        r.push("a", Json::from(1i64));
+        r.push("b", Json::from(2i64));
+        r.push("c", Json::from(3i64));
+        assert_eq!(r.len(), 2);
+        assert!(r.get("a").is_none(), "oldest evicted");
+        assert_eq!(r.get("c").as_ref().and_then(Json::as_i64), Some(3));
+        assert_eq!(r.ids(), vec!["b".to_string(), "c".to_string()]);
+        assert_eq!(ProfileRing::new(0).capacity(), 1, "cap floor");
+    }
+
+    #[test]
+    fn hotops_fold_rank_and_fleet_merge() {
+        let hub = HotOps::new();
+        hub.fold(&small_profile());
+        hub.fold(&small_profile());
+        let j = hub.to_json(10);
+        let ops = j.get("hotops").as_array().unwrap();
+        assert_eq!(ops.len(), 2);
+        let matmul = ops.iter().find(|o| o.get("op").as_str() == Some("matmul")).unwrap();
+        assert_eq!(matmul.get("count").as_i64(), Some(4));
+        // shares sum to ~1 over the full table
+        let total: f64 = ops.iter().map(|o| o.get("share").as_f64().unwrap()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // coordinator-side merge of two replicas doubles the counts
+        let mut acc = BTreeMap::new();
+        merge_hotops(&mut acc, &j);
+        merge_hotops(&mut acc, &j);
+        let merged = hotops_json(&acc, 10);
+        let m = merged
+            .get("hotops")
+            .as_array()
+            .unwrap()
+            .iter()
+            .find(|o| o.get("op").as_str() == Some("matmul"))
+            .unwrap()
+            .clone();
+        assert_eq!(m.get("count").as_i64(), Some(8));
+    }
+}

@@ -77,13 +77,14 @@ pub struct EndpointObs {
 }
 
 /// Everything one scheduler worker needs to record into: its model's
-/// histograms plus the shared debug ring. Threaded into
-/// `ModelService::start` so the queue layer has no dependency on the
-/// full [`Obs`] hub.
+/// histograms, the shared debug ring, and the profiler surface (bounded
+/// profile ring + hot-op table). Threaded into `ModelService::start` so
+/// the queue layer has no dependency on the full [`Obs`] hub.
 #[derive(Clone)]
 pub struct ServiceObs {
     pub model: Arc<ModelObs>,
     pub ring: Arc<TraceRing>,
+    pub profile: Arc<super::profile::ProfileHub>,
 }
 
 /// The per-process observability registry.
@@ -92,12 +93,14 @@ pub struct Obs {
     models: BTreeMap<String, Arc<ModelObs>>,
     endpoints: BTreeMap<&'static str, EndpointObs>,
     ring: Arc<TraceRing>,
+    profile: Arc<super::profile::ProfileHub>,
 }
 
 impl Obs {
     /// Build the hub for a fixed model set. `enabled` combines the
-    /// server config flag with the `NNSCOPE_OBS` environment override.
-    pub fn new(enabled: bool, models: &[String], ring_cap: usize) -> Obs {
+    /// server config flag with the `NNSCOPE_OBS` environment override;
+    /// `profile_ring` bounds the retained request profiles.
+    pub fn new(enabled: bool, models: &[String], ring_cap: usize, profile_ring: usize) -> Obs {
         let enabled = enabled && super::env_allows();
         Obs {
             enabled,
@@ -107,13 +110,14 @@ impl Obs {
                 .collect(),
             endpoints: ENDPOINTS.iter().map(|&e| (e, EndpointObs::default())).collect(),
             ring: Arc::new(TraceRing::new(ring_cap)),
+            profile: Arc::new(super::profile::ProfileHub::new(profile_ring)),
         }
     }
 
     /// Disabled hub (`NNSCOPE_OBS=off` / `obs: false`): recording calls
     /// are skipped by callers checking [`Obs::enabled`].
     pub fn disabled() -> Obs {
-        Obs::new(false, &[], 1)
+        Obs::new(false, &[], 1, 1)
     }
 
     pub fn enabled(&self) -> bool {
@@ -130,11 +134,20 @@ impl Obs {
 
     /// The bundle a `ModelService` worker records into.
     pub fn service_obs(&self, model: &str) -> Option<ServiceObs> {
-        Some(ServiceObs { model: self.model(model)?.clone(), ring: self.ring.clone() })
+        Some(ServiceObs {
+            model: self.model(model)?.clone(),
+            ring: self.ring.clone(),
+            profile: self.profile.clone(),
+        })
     }
 
     pub fn ring(&self) -> &Arc<TraceRing> {
         &self.ring
+    }
+
+    /// The profiler surface (`GET /v1/debug/profile/<id>`, hot-op table).
+    pub fn profile(&self) -> &Arc<super::profile::ProfileHub> {
+        &self.profile
     }
 
     /// Record one HTTP request against a named endpoint.
@@ -194,28 +207,7 @@ impl Obs {
                 ("exec", &m.exec),
                 ("ttft", &m.ttft),
             ] {
-                let s = h.snapshot();
-                let mut cum = 0u64;
-                for (i, &c) in s.counts.iter().enumerate() {
-                    cum += c;
-                    let (_, hi) = super::hist::bucket_bounds(i);
-                    let le = if hi.is_infinite() {
-                        "+Inf".to_string()
-                    } else {
-                        format!("{hi:e}")
-                    };
-                    out.push_str(&format!(
-                        "nnscope_latency_seconds_bucket{{model=\"{model}\",stage=\"{stage}\",le=\"{le}\"}} {cum}\n"
-                    ));
-                }
-                out.push_str(&format!(
-                    "nnscope_latency_seconds_sum{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
-                    s.sum_nanos as f64 / 1e9
-                ));
-                out.push_str(&format!(
-                    "nnscope_latency_seconds_count{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
-                    s.count
-                ));
+                prometheus_histogram(&mut out, model, stage, &h.snapshot());
             }
         }
         out.push_str("# TYPE nnscope_endpoint_requests_total counter\n");
@@ -236,6 +228,31 @@ impl Obs {
     }
 }
 
+/// Render one latency histogram snapshot as cumulative Prometheus
+/// `_bucket{le=...}` / `_sum` / `_count` series. Shared by
+/// [`Obs::prometheus`] (replica, live histograms) and the coordinator's
+/// `GET /v1/fleet/metrics?format=prometheus` (bucket-merged snapshots),
+/// so the two expositions are line-identical for identical counts.
+pub fn prometheus_histogram(out: &mut String, model: &str, stage: &str, s: &HistSnapshot) {
+    let mut cum = 0u64;
+    for (i, &c) in s.counts.iter().enumerate() {
+        cum += c;
+        let (_, hi) = super::hist::bucket_bounds(i);
+        let le = if hi.is_infinite() { "+Inf".to_string() } else { format!("{hi:e}") };
+        out.push_str(&format!(
+            "nnscope_latency_seconds_bucket{{model=\"{model}\",stage=\"{stage}\",le=\"{le}\"}} {cum}\n"
+        ));
+    }
+    out.push_str(&format!(
+        "nnscope_latency_seconds_sum{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
+        s.sum_nanos as f64 / 1e9
+    ));
+    out.push_str(&format!(
+        "nnscope_latency_seconds_count{{model=\"{model}\",stage=\"{stage}\"}} {}\n",
+        s.count
+    ));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,7 +263,7 @@ mod tests {
 
     #[test]
     fn disabled_hub_records_nothing() {
-        let o = Obs::new(false, &models(), 8);
+        let o = Obs::new(false, &models(), 8, 8);
         assert!(!o.enabled());
         assert!(o.model("tiny-sim").is_none());
         o.record_endpoint("trace", Duration::from_millis(5), true);
@@ -256,7 +273,7 @@ mod tests {
 
     #[test]
     fn endpoint_recording_counts_errors() {
-        let o = Obs::new(true, &models(), 8);
+        let o = Obs::new(true, &models(), 8, 8);
         o.record_endpoint("trace", Duration::from_millis(5), true);
         o.record_endpoint("trace", Duration::from_millis(5), false);
         o.record_endpoint("bogus-endpoint", Duration::from_millis(5), true);
@@ -269,7 +286,7 @@ mod tests {
     #[test]
     fn merged_e2e_sums_across_models() {
         let ms = vec!["a".to_string(), "b".to_string()];
-        let o = Obs::new(true, &ms, 8);
+        let o = Obs::new(true, &ms, 8, 8);
         o.model("a").unwrap().e2e.record(0.01);
         o.model("b").unwrap().e2e.record(0.02);
         o.model("b").unwrap().e2e.record(0.03);
@@ -278,7 +295,7 @@ mod tests {
 
     #[test]
     fn opt_counters_accumulate() {
-        let o = Obs::new(true, &models(), 8);
+        let o = Obs::new(true, &models(), 8, 8);
         let m = o.model("tiny-sim").unwrap();
         m.record_opt(&crate::graph::opt::OptReport {
             nodes_before: 10,
@@ -301,7 +318,7 @@ mod tests {
 
     #[test]
     fn prometheus_exposition_has_cumulative_buckets() {
-        let o = Obs::new(true, &models(), 8);
+        let o = Obs::new(true, &models(), 8, 8);
         let m = o.model("tiny-sim").unwrap();
         m.e2e.record(0.001);
         m.e2e.record(0.5);

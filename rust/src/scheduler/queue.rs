@@ -163,6 +163,8 @@ struct TraceJob {
     /// Tenant the job's in-flight unit is charged to (None = anonymous
     /// pool); released when the job completes.
     tenant: Option<String>,
+    /// Arm the deep per-op profiler for this job (see `obs/profile.rs`).
+    profile: bool,
 }
 
 struct SessionJob {
@@ -175,6 +177,7 @@ struct SessionJob {
     persist: bool,
     trace: Option<ReqTrace>,
     tenant: Option<String>,
+    profile: bool,
 }
 
 /// One frame of a streaming response, already serialized for the wire.
@@ -202,7 +205,12 @@ struct StreamJob {
     send_timeout: Duration,
     trace: Option<ReqTrace>,
     tenant: Option<String>,
+    profile: bool,
 }
+
+/// Top-K cap for the `"profile"` result-metadata block; the full per-op
+/// stream is available from the debug ring.
+const PROFILE_TOP_K: usize = 10;
 
 enum Job {
     Trace(TraceJob),
@@ -332,8 +340,23 @@ impl ModelService {
         &self,
         id: String,
         prepared: Prepared,
+        trace: Option<ReqTrace>,
+        tenant: Option<&str>,
+    ) -> Result<()> {
+        self.submit_prepared_profiled(id, prepared, trace, tenant, false)
+    }
+
+    /// [`Self::submit_prepared_for`] with the deep profiler optionally
+    /// armed: the worker records per-op timings and memory, attaches the
+    /// `"profile"` summary to the result, retains the full trace-event
+    /// stream in the profile ring, and folds the replica hot-op table.
+    pub fn submit_prepared_profiled(
+        &self,
+        id: String,
+        prepared: Prepared,
         mut trace: Option<ReqTrace>,
         tenant: Option<&str>,
+        profile: bool,
     ) -> Result<()> {
         self.tenants.try_acquire(tenant, 1).map_err(anyhow::Error::new)?;
         self.store.put_pending(&id);
@@ -350,6 +373,7 @@ impl ModelService {
             prepared,
             trace,
             tenant: tenant.map(str::to_string),
+            profile,
         }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
@@ -411,8 +435,25 @@ impl ModelService {
         session: String,
         persist: bool,
         graphs: Vec<Prepared>,
+        trace: Option<ReqTrace>,
+        tenant: Option<&str>,
+    ) -> Result<()> {
+        self.submit_session_profiled(id, session, persist, graphs, trace, tenant, false)
+    }
+
+    /// [`Self::submit_session_for`] with the deep profiler optionally
+    /// armed for the whole bundle (ops of all traces accumulate into one
+    /// profile).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_session_profiled(
+        &self,
+        id: String,
+        session: String,
+        persist: bool,
+        graphs: Vec<Prepared>,
         mut trace: Option<ReqTrace>,
         tenant: Option<&str>,
+        profile: bool,
     ) -> Result<()> {
         let n = graphs.len();
         self.tenants.try_acquire(tenant, n).map_err(anyhow::Error::new)?;
@@ -429,6 +470,7 @@ impl ModelService {
             persist,
             trace,
             tenant: tenant.map(str::to_string),
+            profile,
         }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(n as u64, Ordering::Relaxed);
@@ -491,8 +533,25 @@ impl ModelService {
         steps: usize,
         tx: SyncSender<StreamChunk>,
         send_timeout: Duration,
+        trace: Option<ReqTrace>,
+        tenant: Option<&str>,
+    ) -> Result<()> {
+        self.submit_stream_profiled(prepared, steps, tx, send_timeout, trace, tenant, false)
+    }
+
+    /// [`Self::submit_stream_for`] with the deep profiler optionally
+    /// armed: every decode step's ops are recorded with their step index,
+    /// and the terminal `done` event carries the `"profile"` summary.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_stream_profiled(
+        &self,
+        prepared: Prepared,
+        steps: usize,
+        tx: SyncSender<StreamChunk>,
+        send_timeout: Duration,
         mut trace: Option<ReqTrace>,
         tenant: Option<&str>,
+        profile: bool,
     ) -> Result<()> {
         self.tenants.try_acquire(tenant, 1).map_err(anyhow::Error::new)?;
         if let Some(t) = trace.as_mut() {
@@ -507,6 +566,7 @@ impl ModelService {
             send_timeout,
             trace,
             tenant: tenant.map(str::to_string),
+            profile,
         }));
         if sent.is_err() {
             self.metrics.enqueued.fetch_sub(1, Ordering::Relaxed);
@@ -669,8 +729,15 @@ impl ModelService {
         let prepared = &job.prepared;
         if obs.is_some() {
             phases::arm();
+            if job.profile {
+                crate::obs::profile::arm();
+            }
         }
         let mut on_step = |step: usize, mut out: crate::interp::StepOutcome| {
+            // per-step serialization + delivery is real exec-span time; a
+            // profiled stream records it as an "emit" phase so the profile
+            // accounts for the whole span, not just compute
+            let te = crate::obs::profile::armed().then(Instant::now);
             out.values = prepared.remap_values(out.values);
             let ev = Json::obj(vec![
                 ("event", Json::from("step")),
@@ -680,7 +747,11 @@ impl ModelService {
                 ("values", gserde::values_to_json(&out.values.values)),
             ])
             .to_string();
-            if Self::send_chunk(&job.tx, StreamChunk::Event(ev), job.send_timeout) {
+            let sent = Self::send_chunk(&job.tx, StreamChunk::Event(ev), job.send_timeout);
+            if let Some(t) = te {
+                crate::obs::profile::record_phase("emit", t);
+            }
+            if sent {
                 if !ttft_recorded {
                     ttft_recorded = true;
                     if let Some(o) = obs {
@@ -696,6 +767,7 @@ impl ModelService {
         let res =
             interp::execute_stream_raw(&prepared.graph, runner, job.steps, &mut on_step);
         let ph = if obs.is_some() { Self::fold_phases(&phases::take()) } else { Vec::new() };
+        let prof = crate::obs::profile::take();
         let exec_d = t0.elapsed();
         if let Some(tr) = job.trace.as_mut() {
             tr.span_since("exec", t0);
@@ -725,6 +797,9 @@ impl ModelService {
                 if let Some(tr) = &job.trace {
                     done_obj.set("timing", tr.to_json());
                 }
+                if let Some(p) = &prof {
+                    done_obj.set("profile", p.summary_json(PROFILE_TOP_K));
+                }
                 let done = done_obj.to_string();
                 if Self::send_chunk(&job.tx, StreamChunk::Done(done), job.send_timeout) {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -751,6 +826,15 @@ impl ModelService {
                     o.model.e2e.record_duration(tr.t0.elapsed());
                 }
                 o.ring.push(tr.to_json());
+            }
+            if let Some(p) = &prof {
+                // streams have no store id; the ring entry is keyed by
+                // the request's trace id (untraced streams keep only the
+                // inline summary and the hot-op fold)
+                if let Some(tr) = &job.trace {
+                    o.profile.ring.push(&tr.trace_id, p.trace_events_json(&tr.trace_id));
+                }
+                o.profile.hotops.fold(p);
             }
         }
         metrics
@@ -779,6 +863,9 @@ impl ModelService {
         let n = job.graphs.len();
         if obs.is_some() {
             phases::arm();
+            if job.profile {
+                crate::obs::profile::arm();
+            }
         }
         let outcome = (|| -> Result<Json, String> {
             session_state
@@ -806,6 +893,7 @@ impl ModelService {
             session_state.drop_session(&job.session);
         }
         let ph = if obs.is_some() { Self::fold_phases(&phases::take()) } else { Vec::new() };
+        let prof = crate::obs::profile::take();
         let exec_d = t0.elapsed();
         if let Some(tr) = job.trace.as_mut() {
             tr.span_since("exec", t0);
@@ -819,6 +907,9 @@ impl ModelService {
             Ok(mut json) => {
                 if let Some(tr) = &job.trace {
                     json.set("timing", tr.to_json());
+                }
+                if let Some(p) = &prof {
+                    json.set("profile", p.summary_json(PROFILE_TOP_K));
                 }
                 metrics.completed.fetch_add(n as u64, Ordering::Relaxed);
                 store.put_ready(&job.id, json.to_string());
@@ -835,6 +926,10 @@ impl ModelService {
                     o.model.e2e.record_duration(tr.t0.elapsed());
                 }
                 o.ring.push(tr.to_json());
+            }
+            if let Some(p) = &prof {
+                o.profile.ring.push(&job.id, p.trace_events_json(&job.id));
+                o.profile.hotops.fold(p);
             }
         }
         metrics
@@ -859,8 +954,11 @@ impl ModelService {
         }
         let t0 = std::time::Instant::now();
         let graphs: Vec<&InterventionGraph> = batch.iter().map(|j| &j.prepared.graph).collect();
+        // profiled jobs never merge: their per-op timings must measure
+        // only their own graph, not a co-tenant forward pass
         let can_merge = matches!(mode, CoTenancy::Parallel { .. })
             && batch.len() > 1
+            && batch.iter().all(|j| !j.profile)
             && mergeable(&graphs, runner);
 
         if can_merge {
@@ -882,7 +980,7 @@ impl ModelService {
                     };
                     for (job, res) in batch.iter_mut().zip(results) {
                         let res = res.map(|r| job.prepared.remap_values(r));
-                        Self::finish(store, metrics, obs, t0, &ph, n, job, res);
+                        Self::finish(store, metrics, obs, t0, &ph, n, job, res, None);
                     }
                 }
                 Err(e) => {
@@ -899,6 +997,7 @@ impl ModelService {
                             n,
                             job,
                             Err::<crate::graph::GraphResult, &str>(&msg),
+                            None,
                         );
                     }
                 }
@@ -907,6 +1006,9 @@ impl ModelService {
             for job in batch.iter_mut() {
                 if obs.is_some() {
                     phases::arm();
+                    if job.profile {
+                        crate::obs::profile::arm();
+                    }
                 }
                 let te = std::time::Instant::now();
                 let res = interp::execute_view_raw(&job.prepared.graph, runner, StateView::new())
@@ -916,7 +1018,8 @@ impl ModelService {
                 } else {
                     Vec::new()
                 };
-                Self::finish(store, metrics, obs, te, &ph, 1, job, res);
+                let prof = crate::obs::profile::take();
+                Self::finish(store, metrics, obs, te, &ph, 1, job, res, prof);
             }
         }
         metrics
@@ -929,9 +1032,10 @@ impl ModelService {
     }
 
     /// Publish one trace result: bump counters, stamp exec/serialize
-    /// spans and interpreter phases onto the trace, attach `"timing"` to
-    /// the result payload, record histograms, and retain the trace in
-    /// the debug ring.
+    /// spans and interpreter phases onto the trace, attach `"timing"`
+    /// (and, for profiled jobs, `"profile"`) to the result payload,
+    /// record histograms, and retain the trace in the debug ring and the
+    /// profile in the profile ring.
     #[allow(clippy::too_many_arguments)]
     fn finish(
         store: &ObjectStore,
@@ -942,6 +1046,7 @@ impl ModelService {
         merged: usize,
         job: &mut TraceJob,
         res: Result<crate::graph::GraphResult, impl std::fmt::Display>,
+        prof: Option<crate::obs::Profile>,
     ) {
         let exec_d = exec_start.elapsed();
         if let Some(tr) = job.trace.as_mut() {
@@ -968,6 +1073,9 @@ impl ModelService {
                     tr.span_since("serialize", ser_start);
                     json.set("timing", tr.to_json());
                 }
+                if let Some(p) = &prof {
+                    json.set("profile", p.summary_json(PROFILE_TOP_K));
+                }
                 store.put_ready(&job.id, json.to_string());
             }
             Err(e) => {
@@ -982,6 +1090,10 @@ impl ModelService {
                     o.model.e2e.record_duration(tr.t0.elapsed());
                 }
                 o.ring.push(tr.to_json());
+            }
+            if let Some(p) = &prof {
+                o.profile.ring.push(&job.id, p.trace_events_json(&job.id));
+                o.profile.hotops.fold(p);
             }
         }
     }
@@ -1305,6 +1417,7 @@ mod tests {
         let obs = ServiceObs {
             model: Arc::new(crate::obs::ModelObs::default()),
             ring: Arc::new(crate::obs::TraceRing::new(8)),
+            profile: Arc::new(crate::obs::ProfileHub::new(8)),
         };
         let svc = ModelService::start(
             runner,
@@ -1338,6 +1451,55 @@ mod tests {
             obs.ring.snapshot()[0].get("trace").as_str(),
             Some("deadbeefdeadbeef")
         );
+    }
+
+    /// Deep profiler wiring: a profiled job comes back with a
+    /// `"profile"` block (per-op self-times, memory gauges), the profile
+    /// ring retains the trace-event JSON under the request id, and the
+    /// replica hot-op table accumulates — while an unprofiled job on the
+    /// same service leaves no `"profile"` key and no ring entry.
+    #[test]
+    fn profiled_jobs_attach_profile_and_feed_hub() {
+        let runner = Arc::new(ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap());
+        let store = Arc::new(ObjectStore::new());
+        let state = Arc::new(SessionStateStore::default());
+        let obs = ServiceObs {
+            model: Arc::new(crate::obs::ModelObs::default()),
+            ring: Arc::new(crate::obs::TraceRing::new(8)),
+            profile: Arc::new(crate::obs::ProfileHub::new(8)),
+        };
+        let svc = ModelService::start(
+            runner,
+            Arc::clone(&store),
+            state,
+            CoTenancy::Sequential,
+            Some(obs.clone()),
+        );
+        svc.submit_prepared_profiled("p0".into(), Prepared::raw(simple_graph(1.0)), None, None, true)
+            .unwrap();
+        svc.submit_prepared_profiled("q0".into(), Prepared::raw(simple_graph(2.0)), None, None, false)
+            .unwrap();
+        let json = store.wait_ready("p0", Duration::from_secs(30)).unwrap();
+        let j = crate::json::parse(&json).unwrap();
+        let prof = j.get("profile");
+        assert!(prof.get("ops").as_i64().unwrap_or(0) > 0, "{json}");
+        assert!(prof.get("total_self_us").as_i64().is_some());
+        assert!(!prof.get("top_ops").as_array().unwrap().is_empty());
+        assert!(prof.get("peak_bytes").as_i64().unwrap_or(0) > 0);
+        // the getter's activation was allocated while armed
+        assert!(prof.get("alloc_bytes").as_i64().unwrap_or(0) > 0);
+        // ring entry is valid trace-event JSON keyed by the request id
+        let ring = obs.profile.ring.get("p0").expect("profile ring entry");
+        assert!(!ring.get("traceEvents").as_array().unwrap().is_empty());
+        // hot-op table accumulated at least the getter and save
+        let hot = obs.profile.hotops.to_json(16);
+        assert!(hot.get("total_self_ns").as_i64().unwrap_or(0) > 0);
+        // unprofiled job on the same worker: no profile key, no ring entry
+        let json2 = store.wait_ready("q0", Duration::from_secs(30)).unwrap();
+        let j2 = crate::json::parse(&json2).unwrap();
+        assert!(j2.get("profile").is_null(), "{json2}");
+        assert!(obs.profile.ring.get("q0").is_none());
+        assert_eq!(obs.profile.ring.len(), 1);
     }
 
     #[test]

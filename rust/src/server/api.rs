@@ -73,6 +73,13 @@ pub struct NdifConfig {
     /// Capacity of the finished-request ring served at
     /// `GET /v1/debug/requests`.
     pub trace_ring: usize,
+    /// Capacity of the finished-profile ring served at
+    /// `GET /v1/debug/profile/<id>` (trace-event JSON per profiled
+    /// request).
+    pub profile_ring: usize,
+    /// Deep-profile 1 in N unsolicited requests (0 = only requests that
+    /// ask, via the `x-nnscope-profile` header or `"profile": true`).
+    pub profile_sample_n: usize,
     /// Durable-results directory: when set, completed results are
     /// journaled to `<data_dir>/store.journal` and survive a crash —
     /// a restarted replica replays the journal and serves them again
@@ -108,6 +115,8 @@ impl NdifConfig {
             optimize: true,
             obs: true,
             trace_ring: 256,
+            profile_ring: 64,
+            profile_sample_n: 0,
             data_dir: None,
             rate_limit: None,
             tenant_queue_cap: usize::MAX,
@@ -143,6 +152,10 @@ struct ServerState {
     /// Observability hub: per-model/per-endpoint histograms, opt-pass
     /// counters, and the finished-request debug ring.
     obs: Arc<crate::obs::Obs>,
+    /// Deep-profile 1 in N unsolicited requests (0 = opt-in only).
+    profile_sample_n: usize,
+    /// Admitted-request counter driving the 1-in-N profile sampling.
+    profile_counter: AtomicU64,
     /// Per-tenant token buckets (`None` = unlimited).
     admission: Option<AdmissionControl>,
     /// Load-shed watermarks over the summed queue depth.
@@ -218,7 +231,12 @@ impl NdifServer {
             None => (Arc::new(ObjectStore::new()), 1),
         };
         let session_state = Arc::new(SessionStateStore::new(cfg.state_limits));
-        let obs = Arc::new(crate::obs::Obs::new(cfg.obs, &cfg.models, cfg.trace_ring));
+        let obs = Arc::new(crate::obs::Obs::new(
+            cfg.obs,
+            &cfg.models,
+            cfg.trace_ring,
+            cfg.profile_ring,
+        ));
         // one tenant-depth tracker spans every model service, so a
         // tenant's in-flight cap can't be dodged by spreading over models
         let tenants = Arc::new(TenantDepths::new(cfg.tenant_queue_cap));
@@ -250,6 +268,8 @@ impl NdifServer {
             stream_send_timeout: cfg.stream_send_timeout,
             optimize: cfg.optimize,
             obs,
+            profile_sample_n: cfg.profile_sample_n,
+            profile_counter: AtomicU64::new(0),
             admission: cfg.rate_limit.map(AdmissionControl::new),
             shed: cfg.shed,
             faults,
@@ -475,6 +495,10 @@ fn route_inner(state: &Arc<ServerState>, req: Request) -> Response {
         ("POST", "/v1/session") => session_endpoint(state, &req),
         ("POST", "/v1/stream") => stream_endpoint(state, &req),
         ("GET", "/v1/debug/requests") => debug_requests_endpoint(state),
+        ("GET", "/v1/debug/hotops") => debug_hotops_endpoint(state),
+        ("GET", path) if path.starts_with("/v1/debug/profile/") => {
+            debug_profile_endpoint(state, &path["/v1/debug/profile/".len()..])
+        }
         ("GET", path) if path == "/v1/metrics" || path.starts_with("/v1/metrics?") => {
             metrics_endpoint(state, path)
         }
@@ -512,7 +536,29 @@ fn models_endpoint(state: &Arc<ServerState>) -> Response {
 
 fn submit_graph(state: &Arc<ServerState>, req: &Request, body: &Json) -> Result<String, Response> {
     let graph = gserde::from_json(body).map_err(|e| Response::bad_request(&e.to_string()))?;
-    submit_parsed_graph(state, req, graph, "trace")
+    let profile = wants_profile(state, req, body);
+    submit_parsed_graph(state, req, graph, "trace", profile)
+}
+
+/// Should this request's execution be deep-profiled? Armed explicitly by
+/// the `x-nnscope-profile` header or a top-level `"profile": true` body
+/// key (both fleet-transparent — the coordinator forwards headers and
+/// bodies verbatim), or by the `--profile-sample-n` 1-in-N unsolicited
+/// sampler. Always false with observability off: the profiler rides the
+/// obs plumbing (trace ids, the scheduler's ServiceObs).
+fn wants_profile(state: &Arc<ServerState>, req: &Request, body: &Json) -> bool {
+    if !state.obs.enabled() {
+        return false;
+    }
+    if req
+        .header(crate::obs::PROFILE_HEADER)
+        .is_some_and(|v| v != "0")
+        || body.get("profile").as_bool() == Some(true)
+    {
+        return true;
+    }
+    let n = state.profile_sample_n as u64;
+    n > 0 && state.profile_counter.fetch_add(1, Ordering::Relaxed) % n == 0
 }
 
 /// Open a request trace for an admitted request: reuse the id from the
@@ -539,6 +585,7 @@ fn submit_parsed_graph(
     req: &Request,
     graph: crate::graph::InterventionGraph,
     endpoint: &'static str,
+    profile: bool,
 ) -> Result<String, Response> {
     let Some(service) = state.services.get(&graph.model) else {
         return Err(Response::json(
@@ -581,7 +628,7 @@ fn submit_parsed_graph(
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
     service
-        .submit_prepared_for(id.clone(), prepared, trace, req.header("x-ndif-auth"))
+        .submit_prepared_profiled(id.clone(), prepared, trace, req.header("x-ndif-auth"), profile)
         .map_err(|e| submit_error_response(state, e))?;
     Ok(id)
 }
@@ -653,10 +700,11 @@ fn session_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
         }
     }
     let named = body.get("session").as_str();
+    let profile = wants_profile(state, req, &body);
     if named.is_some() || graphs.iter().any(|g| g.uses_state()) {
-        stateful_session(state, req, graphs, named)
+        stateful_session(state, req, graphs, named, profile)
     } else {
-        stateless_session(state, req, graphs)
+        stateless_session(state, req, graphs, profile)
     }
 }
 
@@ -666,10 +714,11 @@ fn stateless_session(
     state: &Arc<ServerState>,
     req: &Request,
     graphs: Vec<crate::graph::InterventionGraph>,
+    profile: bool,
 ) -> Response {
     let mut ids = Vec::with_capacity(graphs.len());
     for g in graphs {
-        match submit_parsed_graph(state, req, g, "session") {
+        match submit_parsed_graph(state, req, g, "session", profile) {
             Ok(id) => ids.push(id),
             Err(resp) => return resp,
         }
@@ -701,6 +750,7 @@ fn stateful_session(
     req: &Request,
     graphs: Vec<crate::graph::InterventionGraph>,
     named: Option<&str>,
+    profile: bool,
 ) -> Response {
     let Some(model) = graphs.first().map(|g| g.model.clone()) else {
         return Response::bad_request("stateful session has no traces");
@@ -774,13 +824,14 @@ fn stateful_session(
         }
     }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
-    if let Err(e) = service.submit_session_for(
+    if let Err(e) = service.submit_session_profiled(
         id.clone(),
         session,
         persist,
         prepared,
         trace,
         req.header("x-ndif-auth"),
+        profile,
     ) {
         return submit_error_response(state, e);
     }
@@ -875,14 +926,16 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
         m.record_opt(report);
     }
+    let profile = wants_profile(state, req, &body);
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
-    if let Err(e) = service.submit_stream_for(
+    if let Err(e) = service.submit_stream_profiled(
         prepared,
         steps,
         tx,
         state.stream_send_timeout,
         trace,
         req.header("x-ndif-auth"),
+        profile,
     ) {
         return submit_error_response(state, e);
     }
@@ -1140,4 +1193,24 @@ fn debug_requests_endpoint(state: &Arc<ServerState>) -> Response {
         200,
         Json::obj(vec![("requests", Json::Array(state.obs.ring().snapshot()))]).to_string(),
     )
+}
+
+/// `GET /v1/debug/profile/<id>`: the deep profile of a finished profiled
+/// request as Chrome/Perfetto trace-event JSON (load it at ui.perfetto.dev
+/// or chrome://tracing). Profiles live in a bounded most-recent ring
+/// ([`NdifConfig::profile_ring`]); evicted or unknown ids are 404.
+fn debug_profile_endpoint(state: &Arc<ServerState>, id: &str) -> Response {
+    match state.obs.profile().ring.get(id) {
+        Some(j) => Response::json(200, j.to_string()),
+        None => Response::not_found(),
+    }
+}
+
+/// `GET /v1/debug/hotops`: this replica's cumulative per-op self-time
+/// table across every profiled request since boot. The coordinator's
+/// `/v1/fleet/hotops` merges these across replicas, so the full op table
+/// is returned (op kinds are few); `share` is the fraction of total
+/// profiled self-time.
+fn debug_hotops_endpoint(state: &Arc<ServerState>) -> Response {
+    Response::json(200, state.obs.profile().hotops.to_json(64).to_string())
 }

@@ -114,6 +114,12 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
     if let Some(n) = j.get("trace_ring").as_usize() {
         cfg.trace_ring = n;
     }
+    if let Some(n) = j.get("profile_ring").as_usize() {
+        cfg.profile_ring = n;
+    }
+    if let Some(n) = j.get("profile_sample_n").as_usize() {
+        cfg.profile_sample_n = n;
+    }
     if let Some(d) = j.get("data_dir").as_str() {
         cfg.data_dir = Some(d.into());
     }
@@ -207,9 +213,17 @@ mod tests {
         let cfg = from_json_text(r#"{"models": ["m"]}"#).unwrap();
         assert!(cfg.obs, "observability is on by default");
         assert_eq!(cfg.trace_ring, 256);
-        let cfg = from_json_text(r#"{"models": ["m"], "obs": false, "trace_ring": 16}"#).unwrap();
+        assert_eq!(cfg.profile_ring, 64);
+        assert_eq!(cfg.profile_sample_n, 0, "unsolicited profiling off by default");
+        let cfg = from_json_text(
+            r#"{"models": ["m"], "obs": false, "trace_ring": 16,
+                "profile_ring": 4, "profile_sample_n": 100}"#,
+        )
+        .unwrap();
         assert!(!cfg.obs);
         assert_eq!(cfg.trace_ring, 16);
+        assert_eq!(cfg.profile_ring, 4);
+        assert_eq!(cfg.profile_sample_n, 100);
     }
 
     #[test]

@@ -33,21 +33,30 @@ pub struct Tensor {
 
 impl Tensor {
     /// Construct from raw data; panics if the element count mismatches.
+    ///
+    /// Every construction path funnels through here (or the sized
+    /// variants below), so these are the profiler's allocation-accounting
+    /// sites: when [`crate::obs::profile`] is armed on this thread, the
+    /// buffer's bytes are attributed to the op being recorded. Disarmed,
+    /// the note is a single thread-local check.
     pub fn new(dims: &[usize], data: Vec<f32>) -> Tensor {
         let shape = Shape::new(dims);
         assert_eq!(shape.numel(), data.len(), "shape {dims:?} vs {} elems", data.len());
+        crate::obs::profile::note_alloc(data.len() * 4);
         Tensor { shape, data }
     }
 
     pub fn zeros(dims: &[usize]) -> Tensor {
         let shape = Shape::new(dims);
         let n = shape.numel();
+        crate::obs::profile::note_alloc(n * 4);
         Tensor { shape, data: vec![0.0; n] }
     }
 
     pub fn full(dims: &[usize], v: f32) -> Tensor {
         let shape = Shape::new(dims);
         let n = shape.numel();
+        crate::obs::profile::note_alloc(n * 4);
         Tensor { shape, data: vec![v; n] }
     }
 
@@ -59,6 +68,7 @@ impl Tensor {
     pub fn iota(dims: &[usize]) -> Tensor {
         let shape = Shape::new(dims);
         let n = shape.numel();
+        crate::obs::profile::note_alloc(n * 4);
         Tensor { shape, data: (0..n).map(|i| i as f32).collect() }
     }
 

@@ -221,3 +221,285 @@ fn debug_ring_is_bounded() {
     let timing = timing.expect("obs-enabled server must return timing metadata");
     assert!(timing.get("spans").as_array().is_some_and(|s| !s.is_empty()));
 }
+
+// ---------------------------------------------------------------------------
+// Deep execution profiler
+// ---------------------------------------------------------------------------
+
+fn lens_trace(v: f32) -> Trace {
+    let tokens = Tensor::new(&[1, 16], vec![v; 16]);
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    tr.save(h);
+    tr
+}
+
+/// A request that does NOT opt into profiling must come back with no
+/// `"profile"` key in its result envelope at all — the disarmed path
+/// leaves result metadata exactly as it was before the profiler existed.
+#[test]
+fn disarmed_requests_carry_no_profile_block() {
+    let server = NdifServer::start(NdifConfig::local(&["tiny-sim"])).unwrap();
+    let payload = nnscope::graph::serde::to_json(lens_trace(1.0).graph()).to_string();
+    let (status, body) = http::post(server.addr(), "/v1/trace", payload.as_bytes()).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    let (status, body) =
+        http::get(server.addr(), &format!("/v1/result/{id}?timeout_ms=30000")).unwrap();
+    assert_eq!(status, 200);
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(
+        j.get("profile").is_null(),
+        "unprofiled result must carry no profile block: {j}"
+    );
+    // observability itself is still on — timing metadata is unchanged
+    assert!(!j.get("timing").is_null());
+    // and nothing was pushed into the profile ring
+    let (status, _) = http::get(server.addr(), &format!("/v1/debug/profile/{id}")).unwrap();
+    assert_eq!(status, 404);
+}
+
+/// Header-armed profiling end to end: the result carries the `"profile"`
+/// summary, the replica retains a structurally valid Chrome/Perfetto
+/// trace, and the hot-op table fills.
+#[test]
+fn profiled_trace_returns_summary_and_chrome_trace() {
+    let server = NdifServer::start(NdifConfig::local(&["tiny-sim"])).unwrap();
+    let client = NdifClient::new(server.addr());
+    let (_res, profile, id) = client.execute_profiled(lens_trace(2.0).graph()).unwrap();
+
+    assert!(profile.get("ops").as_i64().unwrap_or(0) > 0, "profile: {profile}");
+    assert!(profile.get("total_self_us").as_i64().is_some());
+    let top = profile.get("top_ops").as_array().unwrap();
+    assert!(!top.is_empty());
+    for o in top {
+        assert!(o.get("op").as_str().is_some());
+        assert!(o.get("count").as_i64().unwrap_or(0) > 0);
+        assert!(o.get("self_ns").as_i64().unwrap_or(-1) >= 0);
+    }
+    // the forward pass was recorded as a phase, and memory accounting ran
+    assert!(
+        profile
+            .get("phases")
+            .as_array()
+            .is_some_and(|ps| ps.iter().any(|p| p.get("name").as_str() == Some("forward"))),
+        "profile phases: {profile}"
+    );
+    assert!(profile.get("alloc_bytes").as_i64().unwrap_or(0) > 0);
+    assert!(profile.get("peak_bytes").as_i64().unwrap_or(0) > 0);
+
+    // the retained Chrome trace loads in Perfetto: complete events only,
+    // with the fields the trace-event format requires
+    let tr = client.profile_trace_events(&id).unwrap();
+    let events = tr.get("traceEvents").as_array().unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert!(e.get("name").as_str().is_some());
+        assert!(matches!(e.get("cat").as_str(), Some("op") | Some("phase")));
+        assert!(e.get("ts").as_i64().unwrap_or(-1) >= 0);
+        assert!(e.get("dur").as_f64().unwrap_or(0.0) > 0.0);
+        assert!(e.get("pid").as_i64().is_some());
+        assert!(e.get("tid").as_i64().is_some());
+    }
+    assert_eq!(tr.get("otherData").get("request").as_str(), Some(id.as_str()));
+
+    // the replica's cumulative hot-op table saw the request
+    let hot = client.hotops().unwrap();
+    assert!(hot.get("total_self_ns").as_i64().unwrap_or(0) > 0, "hotops: {hot}");
+    assert!(!hot.get("hotops").as_array().unwrap().is_empty());
+}
+
+/// The profile ring is bounded and never blocks: 32 concurrent profiled
+/// requests against a 4-entry ring all complete, and at most 4 of their
+/// Chrome traces are retained afterwards.
+#[test]
+fn profile_ring_bounded_and_nonblocking_under_concurrency() {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.profile_ring = 4;
+    let server = NdifServer::start(cfg).unwrap();
+    let addr = server.addr();
+    let ids: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                s.spawn(move || {
+                    let client = NdifClient::new(addr);
+                    let (_r, profile, id) =
+                        client.execute_profiled(lens_trace(i as f32).graph()).unwrap();
+                    assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
+                    id
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(ids.len(), 32, "every profiled request must complete");
+    let retained = ids
+        .iter()
+        .filter(|id| {
+            let (status, _) =
+                http::get(addr, &format!("/v1/debug/profile/{id}")).unwrap();
+            status == 200
+        })
+        .count();
+    assert!(retained <= 4, "profile ring exceeded its bound: {retained} retained");
+    assert!(retained >= 1, "the most recent profiles must be retained");
+}
+
+/// Acceptance: a profiled logit-lens stream's recorded self-times (graph
+/// ops + forward/emit phases) must account for the `exec` span within
+/// 10% — the profile explains where the time went, it doesn't sample it.
+#[test]
+fn profiled_stream_self_times_cover_exec_span() {
+    let server = NdifServer::start(NdifConfig::local(&["tiny-sim"])).unwrap();
+    let mut payload = nnscope::graph::serde::to_json(lens_trace(1.0).graph());
+    payload.set("steps", Json::from(32usize));
+    payload.set("profile", Json::Bool(true));
+    let (status, mut stream) = http::http_request_stream(
+        server.addr(),
+        "POST",
+        "/v1/stream",
+        payload.to_string().as_bytes(),
+        &[("Content-Type", "application/json")],
+        Duration::from_secs(10),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let mut done = None;
+    let mut steps = 0usize;
+    while let Some(line) = stream.next_line().unwrap() {
+        let j = parse(&line).unwrap();
+        match j.get("event").as_str() {
+            Some("step") => steps += 1,
+            Some("done") => {
+                done = Some(j);
+                break;
+            }
+            other => panic!("unexpected stream event {other:?}: {line}"),
+        }
+    }
+    let done = done.expect("stream must end with a done event");
+    assert_eq!(steps, 32);
+    let profile = done.get("profile");
+    assert!(!profile.is_null(), "profiled stream must attach a profile: {done}");
+    assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
+
+    let exec_us = done
+        .get("timing")
+        .get("spans")
+        .as_array()
+        .unwrap()
+        .iter()
+        .find(|s| s.get("name").as_str() == Some("exec"))
+        .expect("stream timing must include an exec span")
+        .get("dur_us")
+        .as_i64()
+        .unwrap();
+    let op_us = profile.get("total_self_us").as_i64().unwrap();
+    let phase_us: i64 = profile
+        .get("phases")
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|p| p.get("total_us").as_i64().unwrap_or(0))
+        .sum();
+    let covered = op_us + phase_us;
+    let ratio = covered as f64 / exec_us.max(1) as f64;
+    assert!(
+        (0.9..=1.1).contains(&ratio),
+        "recorded self-times ({covered}us ops+phases) must be within 10% of the \
+         exec span ({exec_us}us); ratio {ratio:.3}, profile {profile}"
+    );
+}
+
+fn get_text(addr: std::net::SocketAddr, path: &str) -> String {
+    let (status, body) = http::get(addr, path).unwrap();
+    assert_eq!(status, 200, "{path}");
+    String::from_utf8(body).unwrap()
+}
+
+/// Parity: with one replica, the coordinator's
+/// `/v1/fleet/metrics?format=prometheus` must emit latency series
+/// line-identical to the replica's own `/v1/metrics?format=prometheus` —
+/// both render through the same exposition code.
+#[test]
+fn fleet_prometheus_parity_with_replica() {
+    let coord = coordinator(Policy::RoundRobin, Duration::from_millis(50));
+    let r1 = replica(&coord);
+    let client = NdifClient::new(coord.addr());
+    let n = 4u64;
+    for i in 0..n {
+        run_one(&client, i as f32);
+    }
+    let (_, c1, _, _) = r1.metrics("tiny-sim").unwrap();
+    assert_eq!(c1, n);
+    e2e_when_counted(r1.addr(), n);
+
+    let rep = get_text(r1.addr(), "/v1/metrics?format=prometheus");
+    let fleet = get_text(coord.addr(), "/v1/fleet/metrics?format=prometheus");
+    let latency_lines = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("nnscope_latency_seconds"))
+            .map(String::from)
+            .collect()
+    };
+    assert_eq!(
+        latency_lines(&rep),
+        latency_lines(&fleet),
+        "fleet exposition must be line-identical to the lone replica's"
+    );
+    assert!(
+        fleet.lines().any(|l| l == "nnscope_fleet_replicas 1"),
+        "fleet exposition must carry the replica gauge:\n{fleet}"
+    );
+}
+
+/// Fleet hot-op aggregation: a request profiled via the body key (which
+/// survives coordinator forwarding verbatim) lands in the replica's
+/// hot-op table, and `/v1/fleet/hotops` serves the merged view.
+#[test]
+fn fleet_hotops_aggregate_profiled_requests() {
+    let coord = coordinator(Policy::RoundRobin, Duration::from_millis(50));
+    let _r1 = replica(&coord);
+    let mut payload = nnscope::graph::serde::to_json(lens_trace(1.0).graph());
+    payload.set("profile", Json::Bool(true));
+    let (status, body) =
+        http::post(coord.addr(), "/v1/trace", payload.to_string().as_bytes()).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    let (status, body) =
+        http::get(coord.addr(), &format!("/v1/result/{id}?timeout_ms=30000")).unwrap();
+    assert_eq!(status, 200);
+    let j = parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(
+        !j.get("profile").is_null(),
+        "body-armed profiling must survive coordinator forwarding: {j}"
+    );
+
+    // the worker folds the hot-op table just after publishing the result
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let hot = get_json(coord.addr(), "/v1/fleet/hotops");
+        if hot.get("total_self_ns").as_i64().unwrap_or(0) > 0 {
+            assert_eq!(hot.get("replicas").as_i64(), Some(1));
+            let ops = hot.get("hotops").as_array().unwrap().to_vec();
+            assert!(!ops.is_empty());
+            let share: f64 = ops.iter().map(|o| o.get("share").as_f64().unwrap_or(0.0)).sum();
+            assert!((share - 1.0).abs() < 1e-9, "shares must sum to 1: {hot}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "fleet hotops never filled: {hot}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

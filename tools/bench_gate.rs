@@ -89,6 +89,16 @@ fn metrics() -> Vec<Metric> {
             extract: |j| j.get("obs_ratio_on_off").as_f64(),
         },
         Metric {
+            file: "BENCH_profile.json",
+            name: "profile disarmed throughput (rps)",
+            extract: |j| j.get("profile_off_rps").as_f64(),
+        },
+        Metric {
+            file: "BENCH_profile.json",
+            name: "profile armed throughput (rps)",
+            extract: |j| j.get("profiled_rps").as_f64(),
+        },
+        Metric {
             file: "BENCH_faults.json",
             name: "faults goodput_rps (chaos goodput)",
             extract: |j| j.get("goodput_rps").as_f64(),
@@ -115,6 +125,7 @@ fn main() {
         "BENCH_streaming.json",
         "BENCH_graphopt.json",
         "BENCH_obs.json",
+        "BENCH_profile.json",
         "BENCH_faults.json",
     ];
 
