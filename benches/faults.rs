@@ -106,7 +106,8 @@ fn main() {
                     let h = tr.output("layer.0");
                     tr.save(h);
                     let g = tr.into_graph();
-                    if client.execute_with_retry(&g, &policy).is_ok() {
+                    let opts = nnscope::client::ExecuteOptions::new().retry(policy.clone());
+                    if client.run(&g, opts).is_ok() {
                         succeeded.fetch_add(1, Ordering::Relaxed);
                     }
                     done.fetch_add(1, Ordering::Relaxed);

@@ -90,7 +90,14 @@ fn time_stream(
         events += 1;
         true
     };
-    interp::execute_stream_full(graph, runner, steps, optimize, &mut sink).unwrap();
+    let spec = if optimize {
+        nnscope::engine::ExecSpec::trace(graph)
+    } else {
+        nnscope::engine::ExecSpec::raw(graph)
+    };
+    nnscope::engine::Engine::new(runner)
+        .run_streaming(spec.stream(steps), &mut sink)
+        .unwrap();
     assert_eq!(events, steps);
     t0.elapsed().as_secs_f64()
 }

@@ -72,8 +72,10 @@ fn drive(
                 for r in 0..reqs {
                     let tr = lens_trace(&model, &m, (u * reqs + r) as f32);
                     if profiled {
-                        let (_, profile, _) =
-                            client.execute_profiled(tr.graph()).expect("profiled request");
+                        let out = client
+                            .run(tr.graph(), nnscope::client::ExecuteOptions::new().profiled())
+                            .expect("profiled request");
+                        let profile = out.profile.unwrap_or(Json::Null);
                         assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
                     } else {
                         tr.run_remote(&client).expect("request");
@@ -115,9 +117,13 @@ fn main() {
 
     // 2. ops per request, from a real profiled run
     let client = NdifClient::new(server.addr());
-    let (_, profile, _) = client
-        .execute_profiled(lens_trace(model, &manifest, 0.0).graph())
+    let probe = client
+        .run(
+            lens_trace(model, &manifest, 0.0).graph(),
+            nnscope::client::ExecuteOptions::new().profiled(),
+        )
         .expect("profiled probe");
+    let profile = probe.profile.unwrap_or(Json::Null);
     let ops = profile.get("ops").as_i64().unwrap_or(0).max(1) as u64;
 
     // 3. throughputs

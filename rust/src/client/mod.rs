@@ -62,13 +62,13 @@ pub mod retry;
 pub mod scan;
 pub mod session;
 
+pub use remote::{ExecOutcome, ExecuteOptions};
 pub use retry::RetryPolicy;
 pub use session::Session;
 
 use anyhow::Result;
 
 use crate::graph::{GraphResult, InterventionGraph, NodeId, Op, Port};
-use crate::interp;
 use crate::models::ModelRunner;
 use crate::tensor::{Range1, Tensor};
 
@@ -249,7 +249,7 @@ impl Trace {
     /// Per-step emission for streaming generation: the value is computed
     /// and returned at EVERY decode step (in that step's `StepEvent`),
     /// not once per request. Only valid when the trace is executed as a
-    /// stream ([`remote::NdifClient::execute_stream`]).
+    /// stream ([`remote::NdifClient::run_stream`]).
     pub fn step_hook(&mut self, x: NodeRef) -> SavedRef {
         SavedRef(self.graph.push(Op::StepHook { arg: x.0 }))
     }
@@ -265,14 +265,15 @@ impl Trace {
     /// same admission compiler a server would apply ([`crate::graph::opt`]);
     /// the report is available via [`TraceResult::opt_report`].
     pub fn run_local(self, runner: &ModelRunner) -> Result<TraceResult> {
-        let (result, opt_report) = interp::execute_reported(&self.graph, runner, true)?;
-        Ok(TraceResult { result, opt_report })
+        let out = crate::engine::Engine::new(runner)
+            .run(crate::engine::ExecSpec::trace(&self.graph))?;
+        Ok(TraceResult { result: out.result, opt_report: out.report })
     }
 
     /// Execute remotely against an NDIF server.
     pub fn run_remote(self, client: &remote::NdifClient) -> Result<TraceResult> {
-        let (result, opt_report) = client.execute_detailed(&self.graph)?;
-        Ok(TraceResult { result, opt_report })
+        let out = client.run(&self.graph, remote::ExecuteOptions::new().detailed())?;
+        Ok(TraceResult { result: out.result, opt_report: out.report })
     }
 
     /// Execute remotely as a streaming generation: greedy-decode `steps`
@@ -283,7 +284,7 @@ impl Trace {
         client: &remote::NdifClient,
         steps: usize,
     ) -> Result<remote::StreamIter> {
-        client.execute_stream(&self.graph, steps)
+        client.run_stream(&self.graph, steps, remote::ExecuteOptions::new())
     }
 
     /// The underlying graph (for the scheduler / tests / serialization).

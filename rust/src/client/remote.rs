@@ -1,10 +1,11 @@
 //! Remote execution transport: the client side of the NDIF protocol.
 //!
 //! Adding `remote=True` in NNsight sends the experiment to NDIF; here,
-//! [`NdifClient::execute`] serializes the intervention graph, POSTs it,
-//! long-polls the result, and deserializes the saved values. All payload
-//! bytes are charged against a [`NetSim`] link so benchmarks measure the
-//! paper's WAN conditions on loopback hardware.
+//! [`NdifClient::run`] serializes the intervention graph, POSTs it,
+//! long-polls the result, and deserializes the saved values — with one
+//! [`ExecuteOptions`] selecting metadata detail, deep profiling, and
+//! retry. All payload bytes are charged against a [`NetSim`] link so
+//! benchmarks measure the paper's WAN conditions on loopback hardware.
 
 use std::net::SocketAddr;
 use std::time::Duration;
@@ -25,6 +26,75 @@ pub enum Endpoint {
     Single,
     /// An L3 [`crate::coordinator::Coordinator`] fronting many replicas.
     Fleet,
+}
+
+/// Options for one remote execution — the single knob set behind
+/// [`NdifClient::run`] / [`NdifClient::run_session`] /
+/// [`NdifClient::run_stream`], replacing the old
+/// `execute`/`execute_detailed`/`execute_observed`/`execute_profiled`/
+/// `*_with_retry` method matrix.
+#[derive(Default)]
+pub struct ExecuteOptions {
+    detailed: bool,
+    profiled: bool,
+    retry: Option<crate::client::RetryPolicy>,
+}
+
+impl ExecuteOptions {
+    pub fn new() -> ExecuteOptions {
+        ExecuteOptions::default()
+    }
+
+    /// Populate the outcome's metadata: the server's per-request
+    /// optimization report (`"opt"`; `None` when the server ran with
+    /// `--no-opt`) and the request's `"timing"` trace (`None` when the
+    /// server runs without observability).
+    pub fn detailed(mut self) -> ExecuteOptions {
+        self.detailed = true;
+        self
+    }
+
+    /// Arm the deep execution profiler (the `x-nnscope-profile` header,
+    /// honored by replicas directly or through a coordinator). The
+    /// outcome's `profile` carries per-op self-times, phase totals and
+    /// allocation accounting; the full Chrome trace is retained
+    /// server-side under the outcome's `id`
+    /// ([`NdifClient::profile_trace_events`]). The run errors if the
+    /// server executed unprofiled, so callers never silently read an
+    /// empty profile.
+    pub fn profiled(mut self) -> ExecuteOptions {
+        self.profiled = true;
+        self
+    }
+
+    /// Run under a [`crate::client::RetryPolicy`]: replica deaths, 429
+    /// throttles, and load sheds are retried with backoff + jitter
+    /// (honoring `Retry-After`); request faults fail immediately. Safe
+    /// because submission is idempotent from the client's view — each
+    /// attempt is a fresh request id. For streams the policy covers
+    /// opening the stream; a mid-stream death surfaces through the
+    /// iterator ([`is_retryable_stream_err`]) and restarting is the
+    /// caller's loop.
+    pub fn retry(mut self, policy: crate::client::RetryPolicy) -> ExecuteOptions {
+        self.retry = Some(policy);
+        self
+    }
+}
+
+/// Everything a remote execution can return. `result` is always
+/// populated; the metadata blocks mirror what [`ExecuteOptions`] asked
+/// for (and what the server attached).
+pub struct ExecOutcome {
+    /// Saved values, keyed by the ids of the graph as built.
+    pub result: GraphResult,
+    /// Admission-compile report ([`ExecuteOptions::detailed`]).
+    pub report: Option<OptReport>,
+    /// End-to-end `"timing"` trace ([`ExecuteOptions::detailed`]).
+    pub timing: Option<Json>,
+    /// Deep-profiler summary ([`ExecuteOptions::profiled`]).
+    pub profile: Option<Json>,
+    /// Server-side request id (keys retained debug artifacts).
+    pub id: String,
 }
 
 /// Client handle to an NDIF server.
@@ -118,77 +188,36 @@ impl NdifClient {
             .collect())
     }
 
-    /// Execute one intervention graph remotely.
-    pub fn execute(&self, graph: &InterventionGraph) -> Result<GraphResult> {
-        Ok(self.execute_detailed(graph)?.0)
+    /// Execute one intervention graph remotely — the one door for remote
+    /// one-shot execution. `opts` selects everything that used to be a
+    /// separate method: metadata detail ([`ExecuteOptions::detailed`]),
+    /// deep profiling ([`ExecuteOptions::profiled`]), and retry
+    /// ([`ExecuteOptions::retry`]). The trace id is minted here and
+    /// propagated end to end via the `x-nnscope-trace` header; through a
+    /// coordinator the timing metadata also carries routing attempt
+    /// counts.
+    ///
+    /// ```ignore
+    /// let out = client.run(&graph, ExecuteOptions::new().detailed())?;
+    /// println!("{} values, opt: {:?}", out.result.values.len(), out.report);
+    /// ```
+    pub fn run(&self, graph: &InterventionGraph, opts: ExecuteOptions) -> Result<ExecOutcome> {
+        match &opts.retry {
+            Some(p) => p.call(|_| self.run_once(graph, &opts)),
+            None => self.run_once(graph, &opts),
+        }
     }
 
-    /// [`NdifClient::execute`] plus the server's per-request optimization
-    /// report (the `"opt"` metadata of `/v1/result`; `None` when the
-    /// server ran with `--no-opt`). Saved values are always keyed by the
-    /// ids of the graph as built — the server's rewrite is invisible
-    /// except through this report.
-    pub fn execute_detailed(
-        &self,
-        graph: &InterventionGraph,
-    ) -> Result<(GraphResult, Option<OptReport>)> {
-        let (res, report, _) = self.execute_observed(graph)?;
-        Ok((res, report))
-    }
-
-    /// [`NdifClient::execute_detailed`] plus the request's `"timing"`
-    /// metadata: the trace id (minted here, propagated end to end via the
-    /// `x-nnscope-trace` header), per-stage spans stamped by the serving
-    /// replica, and — through a coordinator — routing attempt counts.
-    /// `None` when the server runs without observability.
-    pub fn execute_observed(
-        &self,
-        graph: &InterventionGraph,
-    ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
+    /// One submit + long-poll attempt of [`NdifClient::run`].
+    fn run_once(&self, graph: &InterventionGraph, opts: &ExecuteOptions) -> Result<ExecOutcome> {
         let trace_id = crate::obs::mint_trace_id();
         let payload = gserde::to_json(graph).to_string();
         // upstream: the graph + tokens
         self.link.send(payload.len());
-        let (status, body) = http::http_request(
-            self.addr,
-            "POST",
-            "/v1/trace",
-            payload.as_bytes(),
-            &self.headers_traced(&trace_id),
-        )?;
-        if status != 202 {
-            return Err(anyhow!(
-                "trace submit failed ({status}): {}",
-                String::from_utf8_lossy(&body)
-            ));
-        }
-        let j = parse(std::str::from_utf8(&body)?)?;
-        let id = j
-            .get("id")
-            .as_str()
-            .ok_or_else(|| anyhow!("submit response missing id"))?
-            .to_string();
-        self.fetch_result_observed(&id)
-    }
-
-    /// Execute one graph with the deep execution profiler armed (the
-    /// `x-nnscope-profile` header, honored by replicas directly or through
-    /// a coordinator, which forwards headers verbatim). Returns the saved
-    /// values, the result's `"profile"` metadata block — per-op self-times,
-    /// phase totals, allocation accounting — and the server-side request id
-    /// under which the full Chrome trace is retained
-    /// ([`NdifClient::profile_trace_events`]). Errors if the server ran
-    /// the request unprofiled (observability off), so callers never
-    /// silently read an empty profile.
-    pub fn execute_profiled(
-        &self,
-        graph: &InterventionGraph,
-    ) -> Result<(GraphResult, Json, String)> {
-        let trace_id = crate::obs::mint_trace_id();
-        let payload = gserde::to_json(graph).to_string();
-        self.link.send(payload.len());
         let mut headers = self.headers_traced(&trace_id);
-        headers.push((crate::obs::PROFILE_HEADER, "1"));
+        if opts.profiled {
+            headers.push((crate::obs::PROFILE_HEADER, "1"));
+        }
         let (status, body) =
             http::http_request(self.addr, "POST", "/v1/trace", payload.as_bytes(), &headers)?;
         if status != 202 {
@@ -204,13 +233,68 @@ impl NdifClient {
             .ok_or_else(|| anyhow!("submit response missing id"))?
             .to_string();
         let j = self.poll_result_json(&id)?;
-        let profile = j.get("profile");
-        if profile.is_null() {
-            return Err(anyhow!(
-                "result {id} carries no profile (server observability disabled?)"
-            ));
-        }
-        Ok((gserde::result_from_json(&j)?, profile.clone(), id))
+        Self::outcome_from_json(&j, id, opts)
+    }
+
+    /// Assemble an [`ExecOutcome`] from the raw result envelope.
+    fn outcome_from_json(j: &Json, id: String, opts: &ExecuteOptions) -> Result<ExecOutcome> {
+        let profile = if opts.profiled {
+            let p = j.get("profile");
+            if p.is_null() {
+                return Err(anyhow!(
+                    "result {id} carries no profile (server observability disabled?)"
+                ));
+            }
+            Some(p.clone())
+        } else {
+            None
+        };
+        let (report, timing) = if opts.detailed {
+            let timing = match j.get("timing") {
+                Json::Null => None,
+                t => Some(t.clone()),
+            };
+            (OptReport::from_json(j.get("opt")), timing)
+        } else {
+            (None, None)
+        };
+        Ok(ExecOutcome { result: gserde::result_from_json(j)?, report, timing, profile, id })
+    }
+
+    #[deprecated(note = "use run(graph, ExecuteOptions::new()) and take .result")]
+    #[doc(hidden)]
+    pub fn execute(&self, graph: &InterventionGraph) -> Result<GraphResult> {
+        Ok(self.run(graph, ExecuteOptions::new())?.result)
+    }
+
+    #[deprecated(note = "use run(graph, ExecuteOptions::new().detailed())")]
+    #[doc(hidden)]
+    pub fn execute_detailed(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Option<OptReport>)> {
+        let o = self.run(graph, ExecuteOptions::new().detailed())?;
+        Ok((o.result, o.report))
+    }
+
+    #[deprecated(note = "use run(graph, ExecuteOptions::new().detailed())")]
+    #[doc(hidden)]
+    pub fn execute_observed(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
+        let o = self.run(graph, ExecuteOptions::new().detailed())?;
+        Ok((o.result, o.report, o.timing))
+    }
+
+    #[deprecated(note = "use run(graph, ExecuteOptions::new().profiled())")]
+    #[doc(hidden)]
+    pub fn execute_profiled(
+        &self,
+        graph: &InterventionGraph,
+    ) -> Result<(GraphResult, Json, String)> {
+        let o = self.run(graph, ExecuteOptions::new().profiled())?;
+        Ok((o.result, o.profile.unwrap_or(Json::Null), o.id))
     }
 
     /// Fetch the retained Chrome/Perfetto trace-event JSON of a profiled
@@ -239,30 +323,36 @@ impl NdifClient {
         Ok(parse(std::str::from_utf8(&body)?)?)
     }
 
-    /// Long-poll a result id until completion.
+    /// Long-poll a previously submitted result id until completion.
+    /// `opts` selects metadata exactly as for [`NdifClient::run`] (the
+    /// `retry` field is ignored — the poll already rides the long-poll
+    /// loop).
+    pub fn fetch(&self, id: &str, opts: ExecuteOptions) -> Result<ExecOutcome> {
+        let j = self.poll_result_json(id)?;
+        Self::outcome_from_json(&j, id.to_string(), &opts)
+    }
+
+    #[deprecated(note = "use fetch(id, ExecuteOptions::new()) and take .result")]
+    #[doc(hidden)]
     pub fn fetch_result(&self, id: &str) -> Result<GraphResult> {
-        Ok(self.fetch_result_detailed(id)?.0)
+        Ok(self.fetch(id, ExecuteOptions::new())?.result)
     }
 
-    /// [`NdifClient::fetch_result`] plus the `"opt"` metadata object.
+    #[deprecated(note = "use fetch(id, ExecuteOptions::new().detailed())")]
+    #[doc(hidden)]
     pub fn fetch_result_detailed(&self, id: &str) -> Result<(GraphResult, Option<OptReport>)> {
-        let (res, report, _) = self.fetch_result_observed(id)?;
-        Ok((res, report))
+        let o = self.fetch(id, ExecuteOptions::new().detailed())?;
+        Ok((o.result, o.report))
     }
 
-    /// [`NdifClient::fetch_result_detailed`] plus the `"timing"` metadata
-    /// object (`None` when the server runs without observability).
+    #[deprecated(note = "use fetch(id, ExecuteOptions::new().detailed())")]
+    #[doc(hidden)]
     pub fn fetch_result_observed(
         &self,
         id: &str,
     ) -> Result<(GraphResult, Option<OptReport>, Option<Json>)> {
-        let j = self.poll_result_json(id)?;
-        let report = OptReport::from_json(j.get("opt"));
-        let timing = match j.get("timing") {
-            Json::Null => None,
-            t => Some(t.clone()),
-        };
-        Ok((gserde::result_from_json(&j)?, report, timing))
+        let o = self.fetch(id, ExecuteOptions::new().detailed())?;
+        Ok((o.result, o.report, o.timing))
     }
 
     /// Long-poll `/v1/result/<id>` to completion and return the raw result
@@ -300,20 +390,50 @@ impl NdifClient {
     }
 
     /// Execute a session: multiple traces in order, one request, one
-    /// bundled response (§B.1 "Remote Execution and Session"). Ephemeral
-    /// session state: any cross-trace variables are dropped server-side
-    /// once the response is sent.
-    pub fn execute_session(&self, graphs: &[InterventionGraph]) -> Result<Vec<GraphResult>> {
-        self.execute_session_in(graphs, None)
+    /// bundled response (§B.1 "Remote Execution and Session"). With
+    /// `session: None` state is ephemeral — cross-trace variables are
+    /// dropped server-side once the response is sent. With a named
+    /// session, state created by this bundle survives for follow-up
+    /// bundles under the same id (until [`NdifClient::drop_session`] or
+    /// TTL expiry); a coordinator pins the session to the replica holding
+    /// its state, and if that replica dies mid-session the error carries
+    /// `retryable` ([`is_retryable_session_err`]) — restart the session.
+    ///
+    /// Of `opts`, `retry` re-submits the whole bundle (the correct
+    /// recovery for a replica death mid-session, and only appropriate
+    /// when the bundle does not read state written by *earlier* bundles
+    /// of the same named session); `detailed`/`profiled` have no effect
+    /// on the bundled result shape.
+    pub fn run_session(
+        &self,
+        graphs: &[InterventionGraph],
+        session: Option<&str>,
+        opts: ExecuteOptions,
+    ) -> Result<Vec<GraphResult>> {
+        match &opts.retry {
+            Some(p) => p.call(|_| self.session_once(graphs, session)),
+            None => self.session_once(graphs, session),
+        }
     }
 
-    /// [`NdifClient::execute_session`] against a named persistent session:
-    /// server-side state created by this bundle survives for follow-up
-    /// bundles under the same id (until [`NdifClient::drop_session`] or
-    /// TTL expiry). A coordinator pins the session to the replica holding
-    /// its state; if that replica dies mid-session the error carries
-    /// `retryable` ([`is_retryable_session_err`]) — restart the session.
+    #[deprecated(note = "use run_session(graphs, None, ExecuteOptions::new())")]
+    #[doc(hidden)]
+    pub fn execute_session(&self, graphs: &[InterventionGraph]) -> Result<Vec<GraphResult>> {
+        self.run_session(graphs, None, ExecuteOptions::new())
+    }
+
+    #[deprecated(note = "use run_session(graphs, session, ExecuteOptions::new())")]
+    #[doc(hidden)]
     pub fn execute_session_in(
+        &self,
+        graphs: &[InterventionGraph],
+        session: Option<&str>,
+    ) -> Result<Vec<GraphResult>> {
+        self.run_session(graphs, session, ExecuteOptions::new())
+    }
+
+    /// One bundled submit of [`NdifClient::run_session`].
+    fn session_once(
         &self,
         graphs: &[InterventionGraph],
         session: Option<&str>,
@@ -358,7 +478,31 @@ impl NdifClient {
     /// Works identically against a single server or a coordinator (which
     /// proxies the stream and converts a mid-stream replica death into a
     /// retryable tail error — see [`is_retryable_stream_err`]).
+    ///
+    /// Of `opts`, `retry` covers *opening* the stream (submit rejections,
+    /// throttles); once the iterator is live, a mid-stream death surfaces
+    /// through it and restarting from step 0 is the caller's loop.
+    /// `detailed`/`profiled` have no effect on the event stream.
+    pub fn run_stream(
+        &self,
+        graph: &InterventionGraph,
+        steps: usize,
+        opts: ExecuteOptions,
+    ) -> Result<StreamIter> {
+        match &opts.retry {
+            Some(p) => p.call(|_| self.stream_once(graph, steps)),
+            None => self.stream_once(graph, steps),
+        }
+    }
+
+    #[deprecated(note = "use run_stream(graph, steps, ExecuteOptions::new())")]
+    #[doc(hidden)]
     pub fn execute_stream(&self, graph: &InterventionGraph, steps: usize) -> Result<StreamIter> {
+        self.run_stream(graph, steps, ExecuteOptions::new())
+    }
+
+    /// One stream-open attempt of [`NdifClient::run_stream`].
+    fn stream_once(&self, graph: &InterventionGraph, steps: usize) -> Result<StreamIter> {
         let mut payload = gserde::to_json(graph);
         payload.set("steps", Json::from(steps));
         let payload = payload.to_string();
@@ -423,56 +567,14 @@ impl NdifClient {
         Ok(status == 200)
     }
 
-    // ---- resilient variants (unified retry policy) ------------------------
-
-    /// [`NdifClient::execute`] under a [`crate::client::RetryPolicy`]:
-    /// replica deaths, 429 throttles, and load sheds are retried with
-    /// backoff + jitter (honoring `Retry-After`); request faults fail
-    /// immediately. Safe because trace submission is idempotent from the
-    /// client's view — each attempt is a fresh request id.
+    #[deprecated(note = "use run(graph, ExecuteOptions::new().retry(policy.clone()))")]
+    #[doc(hidden)]
     pub fn execute_with_retry(
         &self,
         graph: &InterventionGraph,
         policy: &crate::client::RetryPolicy,
     ) -> Result<GraphResult> {
-        policy.call(|_| self.execute(graph))
-    }
-
-    /// [`NdifClient::execute_session_in`] under a retry policy. Each
-    /// attempt re-submits the whole bundle, which is the correct recovery
-    /// for a replica death mid-session: the pin is released and the new
-    /// replica rebuilds state from the bundle itself. Only appropriate
-    /// when the bundle is self-contained (does not read state written by
-    /// *earlier* bundles of the same named session).
-    pub fn execute_session_with_retry(
-        &self,
-        graphs: &[InterventionGraph],
-        session: Option<&str>,
-        policy: &crate::client::RetryPolicy,
-    ) -> Result<Vec<GraphResult>> {
-        policy.call(|_| self.execute_session_in(graphs, session))
-    }
-
-    /// Run a streaming generation to completion under a retry policy,
-    /// restarting the stream from step 0 when it dies retryably (replica
-    /// death mid-stream, truncated transport). Returns the events of the
-    /// first attempt that reaches its terminal `Done` — partial events
-    /// from failed attempts are discarded, so the caller sees exactly one
-    /// consistent trajectory.
-    pub fn execute_stream_with_retry(
-        &self,
-        graph: &InterventionGraph,
-        steps: usize,
-        policy: &crate::client::RetryPolicy,
-    ) -> Result<Vec<StreamEvent>> {
-        policy.call(|_| {
-            let iter = self.execute_stream(graph, steps)?;
-            let mut events = Vec::new();
-            for ev in iter {
-                events.push(ev?);
-            }
-            Ok(events)
-        })
+        Ok(self.run(graph, ExecuteOptions::new().retry(policy.clone()))?.result)
     }
 }
 

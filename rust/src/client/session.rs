@@ -21,7 +21,7 @@
 use anyhow::Result;
 
 use crate::graph::InterventionGraph;
-use crate::interp::{self, StateView};
+use crate::interp::StateView;
 use crate::models::ModelRunner;
 
 use super::remote::NdifClient;
@@ -71,21 +71,18 @@ impl Session {
     /// state as of trace start).
     pub fn run_local(self, runner: &ModelRunner) -> Result<Vec<TraceResult>> {
         let mut state = StateView::new();
-        self.graphs
-            .iter()
-            .map(|g| {
-                Ok(TraceResult::from_graph_result(interp::execute_stateful(
-                    g, runner, &mut state,
-                )?))
-            })
-            .collect()
+        Ok(crate::engine::Engine::new(runner)
+            .run_session(&self.graphs, &mut state, true)?
+            .into_iter()
+            .map(TraceResult::from_graph_result)
+            .collect())
     }
 
     /// Execute all traces remotely as one bundled request; state lives on
     /// the server for the whole loop.
     pub fn run_remote(self, client: &NdifClient) -> Result<Vec<TraceResult>> {
         Ok(client
-            .execute_session_in(&self.graphs, self.id.as_deref())?
+            .run_session(&self.graphs, self.id.as_deref(), crate::client::ExecuteOptions::new())?
             .into_iter()
             .map(TraceResult::from_graph_result)
             .collect())

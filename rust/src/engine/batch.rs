@@ -1,0 +1,502 @@
+//! Decode streams and the continuous-batching loop.
+//!
+//! A *stream* is one sequence's decode in progress: its intervention
+//! graph (validated once at admission), its greedy trajectory so far, and
+//! whatever forward state the substrate needs — a sliding `[1, seq]`
+//! context window for [`RunnerStream`] (AOT artifacts), or a per-sequence
+//! [`KvCache`](super::KvCache) for [`KvStream`] (native engine, explicit
+//! prefill/decode split). Both expose the same one-token `step()` so a
+//! scheduler can interleave many of them.
+//!
+//! [`ContinuousBatch`] is that scheduler in miniature: it admits new
+//! streams between steps, issues one decode step per active stream per
+//! tick, and retires finished streams without draining the rest — the
+//! vLLM-style loop. Per-tick stepping may fan out across threads
+//! (streams are independent: separate caches, separate executors, shared
+//! immutable weights); event emission is always in admission order so
+//! batched output is deterministic.
+//!
+//! Interventions stay per-sequence: every step builds a fresh
+//! [`Executor`] over *that stream's* graph and re-enters it against that
+//! step's hidden state, so `step_hook` emission, setters, and
+//! profiler/phase attribution (`profile::set_step`) are scoped to one
+//! request even when eight streams share a tick.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{validate::validate_stream, InterventionGraph};
+use crate::interp::{Executor, StateView, StepOutcome};
+use crate::models::generate::{advance_window, argmax_row, Generation};
+use crate::models::ModelRunner;
+use crate::obs::{phases, profile};
+use crate::tensor::Tensor;
+
+use super::model::{KvCache, NativeModel};
+
+/// One in-flight decode over the fixed-window artifacts: each step runs a
+/// full `[1, seq]` forward through [`ModelRunner`] and slides the window.
+/// This is the stream form of the interpreter's original streaming loop —
+/// `interp::execute_stream` now drives one of these to completion, and
+/// the scheduler steps many of them interleaved.
+pub struct RunnerStream {
+    graph: InterventionGraph,
+    fseq: Vec<String>,
+    ctx: Tensor,
+    seq: usize,
+    vocab: usize,
+    steps: usize,
+    step: usize,
+    gen: Generation,
+}
+
+impl RunnerStream {
+    /// Validate and admit a stream. All checks are paid here, once —
+    /// `step()` re-enters the graph prevalidated.
+    pub fn new(graph: InterventionGraph, runner: &ModelRunner, steps: usize) -> Result<RunnerStream> {
+        let fseq = runner.manifest.forward_sequence();
+        validate_stream(&graph, &fseq)?;
+        if graph.shards > 1 {
+            return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
+        }
+        if graph.batch_group.is_some() {
+            return Err(anyhow!("streaming decode does not merge into co-tenant batches"));
+        }
+        let seq = runner.manifest.seq;
+        if graph.batch != 1 || graph.tokens.len() != seq {
+            return Err(anyhow!(
+                "streaming generation is single-sequence: need [1, {seq}] tokens, got batch {} × {}",
+                graph.batch,
+                graph.tokens.len()
+            ));
+        }
+        let ctx = Tensor::new(&[1, seq], graph.tokens.clone());
+        let vocab = runner.manifest.vocab;
+        Ok(RunnerStream {
+            graph,
+            fseq,
+            ctx,
+            seq,
+            vocab,
+            steps,
+            step: 0,
+            gen: Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() },
+        })
+    }
+
+    /// Decode one token: fresh executor over this stream's graph →
+    /// pre-phase → hooked forward → saved values → greedy window slide.
+    /// Returns `None` once `steps` tokens have been emitted.
+    pub fn step(&mut self, runner: &ModelRunner) -> Result<Option<StepOutcome>> {
+        if self.step >= self.steps {
+            return Ok(None);
+        }
+        let timed = phases::armed();
+        let profiled = profile::armed();
+        // per-step granularity: every op and phase recorded below carries
+        // the decode step index (no-op when the profiler is disarmed)
+        profile::set_step(self.step as i64);
+        let res = (|| {
+            let mut ex = Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?;
+            ex.run_pre()?;
+            let tf = (timed || profiled).then(std::time::Instant::now);
+            let logits = runner.forward(&self.ctx, &mut ex)?;
+            if let Some(t) = tf {
+                if timed {
+                    phases::record("forward", t.elapsed().as_nanos() as u64);
+                }
+                if profiled {
+                    profile::record_phase("forward", t);
+                }
+            }
+            if let Some(e) = ex.take_error() {
+                return Err(e);
+            }
+            let values = ex.into_result()?;
+            let (token, score) = advance_window(&mut self.ctx, &logits, self.seq, self.vocab);
+            Ok(StepOutcome { token, score, values })
+        })();
+        profile::set_step(profile::NO_STEP);
+        let out = res?;
+        self.gen.tokens.push(out.token);
+        self.gen.scores.push(out.score);
+        self.step += 1;
+        Ok(Some(out))
+    }
+
+    /// True once all requested steps have been emitted.
+    pub fn finished(&self) -> bool {
+        self.step >= self.steps
+    }
+
+    /// The greedy trajectory emitted so far.
+    pub fn generation(&self) -> &Generation {
+        &self.gen
+    }
+
+    pub fn into_generation(self) -> Generation {
+        self.gen
+    }
+}
+
+/// One in-flight decode over the native KV-cached engine: step 0 prefills
+/// the whole prompt in a single pass, every later step embeds exactly one
+/// token and attends over the cached prefix — O(1) weight matmuls per
+/// step regardless of how many tokens were generated before.
+///
+/// Every step (prefill included) emits one greedy token and re-enters the
+/// intervention graph; hooks observe `[1, prompt_len, d]` at step 0 and
+/// `[1, 1, d]` afterwards.
+pub struct KvStream {
+    graph: InterventionGraph,
+    fseq: Vec<String>,
+    cache: KvCache,
+    prompt: Vec<usize>,
+    last: usize,
+    steps: usize,
+    step: usize,
+    gen: Generation,
+}
+
+impl KvStream {
+    /// Validate and admit a KV stream. The graph's tokens are the prompt
+    /// (`[1, prompt_len]`, unpadded — the native engine has no fixed
+    /// window); the stream must fit the model context: `prompt_len +
+    /// steps − 1 ≤ seq` (the final generated token is never fed back).
+    pub fn new(graph: InterventionGraph, model: &NativeModel, steps: usize) -> Result<KvStream> {
+        let fseq = model.manifest().forward_sequence();
+        validate_stream(&graph, &fseq)?;
+        if graph.shards > 1 {
+            return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
+        }
+        if graph.batch_group.is_some() {
+            return Err(anyhow!("streaming decode does not merge into co-tenant batches"));
+        }
+        if graph.batch != 1 || graph.tokens.is_empty() {
+            return Err(anyhow!(
+                "streaming generation is single-sequence: need [1, prompt_len] tokens, got batch {} × {}",
+                graph.batch,
+                graph.tokens.len()
+            ));
+        }
+        let vocab = model.manifest().vocab;
+        let mut prompt = Vec::with_capacity(graph.tokens.len());
+        for &t in &graph.tokens {
+            if t < 0.0 || t >= vocab as f32 {
+                bail!("prompt token {t} out of vocab {vocab}");
+            }
+            prompt.push(t as usize);
+        }
+        let seq = model.manifest().seq;
+        if prompt.len() + steps.saturating_sub(1) > seq {
+            bail!(
+                "stream overruns the model context: {} prompt + {steps} steps > {seq} positions",
+                prompt.len()
+            );
+        }
+        Ok(KvStream {
+            graph,
+            fseq,
+            cache: model.kv_cache(),
+            prompt,
+            last: 0,
+            steps,
+            step: 0,
+            gen: Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() },
+        })
+    }
+
+    /// Emit one greedy token. Step 0 is the prefill pass (prompt → cache,
+    /// first token from the last prompt position's logits); later steps
+    /// decode the previously chosen token against the cache.
+    pub fn step(&mut self, model: &NativeModel) -> Result<Option<StepOutcome>> {
+        if self.step >= self.steps {
+            return Ok(None);
+        }
+        let timed = phases::armed();
+        let profiled = profile::armed();
+        profile::set_step(self.step as i64);
+        let res = (|| {
+            let mut ex = Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?;
+            ex.run_pre()?;
+            let tf = (timed || profiled).then(std::time::Instant::now);
+            let phase = if self.step == 0 { "prefill" } else { "decode" };
+            let logits = if self.step == 0 {
+                model.prefill(&self.prompt, &mut self.cache, &mut ex)?
+            } else {
+                model.decode_step(self.last, &mut self.cache, &mut ex)?
+            };
+            if let Some(t) = tf {
+                if timed {
+                    phases::record(phase, t.elapsed().as_nanos() as u64);
+                }
+                if profiled {
+                    profile::record_phase(phase, t);
+                }
+            }
+            if let Some(e) = ex.take_error() {
+                return Err(e);
+            }
+            let values = ex.into_result()?;
+            let data = logits.data();
+            let vocab = model.manifest().vocab;
+            let (token, score) = argmax_row(&data[data.len() - vocab..]);
+            Ok(StepOutcome { token, score, values })
+        })();
+        profile::set_step(profile::NO_STEP);
+        let out = res?;
+        self.last = out.token;
+        self.gen.tokens.push(out.token);
+        self.gen.scores.push(out.score);
+        self.step += 1;
+        Ok(Some(out))
+    }
+
+    pub fn finished(&self) -> bool {
+        self.step >= self.steps
+    }
+
+    /// Cached positions so far (prompt + decoded-and-fed tokens).
+    pub fn cached_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn generation(&self) -> &Generation {
+        &self.gen
+    }
+
+    pub fn into_generation(self) -> Generation {
+        self.gen
+    }
+}
+
+/// The continuous-batching loop: many concurrent streams, one decode step
+/// each per tick, admission between ticks, retirement without draining.
+///
+/// Invariants (the golden-parity suite holds batched output to these):
+///
+/// 1. **Per-stream isolation** — a step only touches its own stream's
+///    state, so a stream's trajectory is bit-identical whether it runs
+///    alone or interleaved with others, parallel or sequential.
+/// 2. **Deterministic emission** — events within a tick are delivered in
+///    admission order, regardless of which thread finished first.
+/// 3. **Atomic ticks** — admission and retirement happen only between
+///    ticks; a mid-batch completion never stalls or reorders the rest.
+///
+/// The first step error poisons the whole batch (`tick` returns it and
+/// drops that tick's events); the server's scheduler does per-stream
+/// error routing itself and uses this type's building blocks instead.
+pub struct ContinuousBatch<S> {
+    pending: Vec<(u64, usize, S)>,
+    active: Vec<(usize, S)>,
+    tick: u64,
+}
+
+impl<S> Default for ContinuousBatch<S> {
+    fn default() -> Self {
+        ContinuousBatch::new()
+    }
+}
+
+impl<S> ContinuousBatch<S> {
+    pub fn new() -> ContinuousBatch<S> {
+        ContinuousBatch { pending: Vec::new(), active: Vec::new(), tick: 0 }
+    }
+
+    /// Admit a stream immediately (joins the next tick).
+    pub fn admit(&mut self, id: usize, stream: S) {
+        self.pending.push((self.tick, id, stream));
+    }
+
+    /// Admit a stream once `tick` ticks have elapsed — staggered arrival,
+    /// the parity suite's mid-batch admission case.
+    pub fn admit_at(&mut self, tick: u64, id: usize, stream: S) {
+        self.pending.push((tick, id, stream));
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// One scheduler tick: admit due streams, step every active stream
+    /// once (across threads when `parallel` — streams share only
+    /// immutable weights), emit this tick's outcomes in admission order,
+    /// retire streams that report completion.
+    pub fn tick(
+        &mut self,
+        parallel: bool,
+        step: impl Fn(&mut S) -> Result<Option<StepOutcome>> + Sync,
+        on_event: &mut dyn FnMut(usize, StepOutcome),
+    ) -> Result<()>
+    where
+        S: Send,
+    {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].0 <= self.tick {
+                let (_, id, s) = self.pending.remove(i);
+                self.active.push((id, s));
+            } else {
+                i += 1;
+            }
+        }
+        self.tick += 1;
+        if self.active.is_empty() {
+            return Ok(());
+        }
+
+        let results: Vec<Result<Option<StepOutcome>>> = if parallel && self.active.len() > 1 {
+            let stepr = &step;
+            let mut slots: Vec<Option<Result<Option<StepOutcome>>>> =
+                (0..self.active.len()).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                for ((_, s), slot) in self.active.iter_mut().zip(slots.iter_mut()) {
+                    scope.spawn(move || *slot = Some(stepr(s)));
+                }
+            });
+            slots.into_iter().map(|r| r.expect("scoped step completed")).collect()
+        } else {
+            self.active.iter_mut().map(|(_, s)| step(s)).collect()
+        };
+
+        // propagate the first error before emitting anything: a tick is
+        // all-or-nothing for observers
+        let mut outs = Vec::with_capacity(results.len());
+        for r in results {
+            outs.push(r?);
+        }
+        let mut keep = Vec::with_capacity(self.active.len());
+        for ((id, s), out) in std::mem::take(&mut self.active).into_iter().zip(outs) {
+            if let Some(o) = out {
+                on_event(id, o);
+                keep.push((id, s));
+            }
+        }
+        self.active = keep;
+        Ok(())
+    }
+
+    /// Tick until every admitted stream has completed.
+    pub fn run(
+        &mut self,
+        parallel: bool,
+        step: impl Fn(&mut S) -> Result<Option<StepOutcome>> + Sync,
+        on_event: &mut dyn FnMut(usize, StepOutcome),
+    ) -> Result<()>
+    where
+        S: Send,
+    {
+        while !self.is_idle() {
+            self.tick(parallel, &step, on_event)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Trace;
+    use crate::runtime::artifacts::Manifest;
+
+    fn model() -> NativeModel {
+        NativeModel::new(Manifest::synthetic("batch-test", 16, 2, 2, 32, 13, 32))
+    }
+
+    fn stream_graph(model: &NativeModel, prompt: &[f32]) -> InterventionGraph {
+        let t = Tensor::new(&[1, prompt.len()], prompt.to_vec());
+        let mut tr = Trace::new(&model.manifest().name, &t);
+        let h = tr.output("layer.0");
+        let m = tr.mean(h);
+        tr.step_hook(m);
+        tr.into_graph()
+    }
+
+    #[test]
+    fn kv_stream_decodes_requested_steps() {
+        let m = model();
+        let g = stream_graph(&m, &[1.0, 5.0, 2.0]);
+        let mut s = KvStream::new(g, &m, 4).unwrap();
+        let mut n = 0;
+        while let Some(out) = s.step(&m).unwrap() {
+            assert!(out.token < m.manifest().vocab);
+            assert!(!out.values.values.is_empty(), "step hook must emit per step");
+            n += 1;
+        }
+        assert_eq!(n, 4);
+        assert!(s.finished());
+        assert_eq!(s.generation().tokens.len(), 4);
+        // prompt + 3 fed tokens cached (the 4th is never fed back)
+        assert_eq!(s.cached_len(), 6);
+    }
+
+    #[test]
+    fn kv_stream_rejects_context_overrun_at_admission() {
+        let m = model();
+        let g = stream_graph(&m, &[1.0, 2.0]);
+        // 2 prompt + 31 fed tokens > 32 positions
+        assert!(KvStream::new(g, &m, 32).is_err());
+    }
+
+    #[test]
+    fn continuous_batch_matches_solo_streams_with_staggered_admission() {
+        let m = model();
+        let prompts: Vec<Vec<f32>> = vec![
+            vec![1.0, 5.0, 2.0],
+            vec![7.0, 3.0],
+            vec![2.0, 2.0, 9.0, 4.0],
+        ];
+        let steps = [5usize, 2, 4]; // mid-batch completion: stream 1 retires first
+        // oracle: each stream alone
+        let mut solo = Vec::new();
+        for (p, &st) in prompts.iter().zip(&steps) {
+            let mut s = KvStream::new(stream_graph(&m, p), &m, st).unwrap();
+            while s.step(&m).unwrap().is_some() {}
+            solo.push(s.into_generation());
+        }
+        // batched, staggered admission, parallel stepping
+        let mut batch = ContinuousBatch::new();
+        for (i, (p, &st)) in prompts.iter().zip(&steps).enumerate() {
+            let s = KvStream::new(stream_graph(&m, p), &m, st).unwrap();
+            batch.admit_at(i as u64, i, s);
+        }
+        let mut got: Vec<Vec<(usize, f32)>> = vec![Vec::new(); prompts.len()];
+        batch
+            .run(true, |s: &mut KvStream| s.step(&m), &mut |id, out| {
+                got[id].push((out.token, out.score));
+            })
+            .unwrap();
+        for (i, g) in got.iter().enumerate() {
+            let tokens: Vec<usize> = g.iter().map(|e| e.0).collect();
+            let scores: Vec<f32> = g.iter().map(|e| e.1).collect();
+            assert_eq!(tokens, solo[i].tokens, "stream {i} tokens diverged under batching");
+            assert_eq!(scores, solo[i].scores, "stream {i} scores diverged under batching");
+        }
+    }
+
+    #[test]
+    fn batch_admits_and_retires_without_draining() {
+        let m = model();
+        let mut batch = ContinuousBatch::new();
+        batch.admit(0, KvStream::new(stream_graph(&m, &[1.0]), &m, 1).unwrap());
+        batch.admit_at(1, 1, KvStream::new(stream_graph(&m, &[2.0]), &m, 3).unwrap());
+        let mut order = Vec::new();
+        batch
+            .run(false, |s: &mut KvStream| s.step(&m), &mut |id, out| {
+                order.push((id, out.token));
+            })
+            .unwrap();
+        // stream 0 emits once and retires while stream 1 keeps going
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0].0, 0);
+        assert!(order[1..].iter().all(|e| e.0 == 1));
+        assert!(batch.is_idle());
+    }
+}

@@ -1,0 +1,213 @@
+//! The unified execution engine: one door for every way a graph can run.
+//!
+//! Before this module the crate had three parallel execution paths —
+//! one-shot traces (`interp::execute*`), stateful sessions
+//! (`interp::execute_stateful*`), and streaming decode
+//! (`interp::execute_stream*`) — each with its own entry-point matrix
+//! (optimizer toggle × report × state view). [`Engine::run`] collapses
+//! them: an [`ExecSpec`] says *what* to run (graph, optimizer on/off,
+//! session state, streaming steps) and a single [`ExecOutcome`] carries
+//! everything any caller needs (saved values, uncommitted state updates,
+//! the optimizer report, the greedy trajectory). The server, the
+//! scheduler worker, and the tests all go through this door; the old
+//! `interp` names survive only as thin deprecated shims.
+//!
+//! The module also houses the decode substrate the scheduler batches
+//! over:
+//!
+//! - [`NativeModel`]/[`KvCache`] ([`model`]): a host-resident forward
+//!   with an explicit prefill/decode split and per-sequence KV blocks, so
+//!   a decode step attends over cached keys instead of re-running the
+//!   full window — O(1) weight matmuls per step in generated length.
+//! - [`RunnerStream`]/[`KvStream`]/[`ContinuousBatch`] ([`batch`]): one
+//!   in-flight decode per sequence plus the vLLM-style loop that
+//!   interleaves single-token steps from many concurrent streams,
+//!   admitting between steps and retiring mid-batch.
+//!
+//! ```text
+//! ExecSpec lifecycle
+//!   ExecSpec::trace(g)            one-shot, optimized      ┐
+//!   ExecSpec::raw(g)              as-given (--no-opt,      │ Engine::run
+//!                                 admission-compiled)      │    │
+//!     .with_state(view)           session state in scope   ┘    ▼
+//!     .stream(steps)              greedy decode, per-step   ExecOutcome
+//!                                 graph re-entry (use
+//!                                 run_streaming for a sink)
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{opt::OptReport, GraphResult, InterventionGraph};
+use crate::interp::{self, StateView, StepOutcome};
+use crate::models::generate::Generation;
+use crate::models::ModelRunner;
+use crate::tensor::Tensor;
+
+pub mod batch;
+pub mod model;
+
+pub use batch::{ContinuousBatch, KvStream, RunnerStream};
+pub use model::{KvCache, NativeModel};
+
+/// What to execute: one graph plus the execution-mode knobs that used to
+/// be spread across ten `interp::execute_*` signatures.
+pub struct ExecSpec<'g> {
+    graph: &'g InterventionGraph,
+    steps: Option<usize>,
+    optimize: bool,
+    state: StateView,
+}
+
+impl<'g> ExecSpec<'g> {
+    /// Run through the admission compiler (DCE, folding, CSE, fusion) —
+    /// the default for user-submitted graphs.
+    pub fn trace(graph: &'g InterventionGraph) -> ExecSpec<'g> {
+        ExecSpec { graph, steps: None, optimize: true, state: StateView::new() }
+    }
+
+    /// Run the graph exactly as given — the `--no-opt` escape hatch, the
+    /// scheduler's path for graphs already compiled at admission, and the
+    /// oracle side of the optimizer-parity tests.
+    pub fn raw(graph: &'g InterventionGraph) -> ExecSpec<'g> {
+        ExecSpec { graph, steps: None, optimize: false, state: StateView::new() }
+    }
+
+    /// Resolve `LoadState` ops against `state`; collected store updates
+    /// come back in [`ExecOutcome::state_updates`] (uncommitted — the
+    /// session layer owns the commit).
+    pub fn with_state(mut self, state: StateView) -> ExecSpec<'g> {
+        self.state = state;
+        self
+    }
+
+    /// Greedy-decode `steps` tokens, re-entering the graph at every step.
+    pub fn stream(mut self, steps: usize) -> ExecSpec<'g> {
+        self.steps = Some(steps);
+        self
+    }
+}
+
+/// Everything a run can produce. Fields are `None`/empty when the spec
+/// didn't ask for them.
+pub struct ExecOutcome {
+    /// Saved values, keyed by the ids of the graph as submitted. Empty
+    /// for streaming runs — per-step values flow through the sink.
+    pub result: GraphResult,
+    /// Store updates a session layer should commit on success.
+    pub state_updates: BTreeMap<String, Tensor>,
+    /// Admission-compiler report (`None` when the spec was raw).
+    pub report: Option<OptReport>,
+    /// Greedy trajectory (`Some` only for streaming runs).
+    pub generation: Option<Generation>,
+}
+
+/// The unified execution door: binds a loaded model to [`ExecSpec`]s.
+pub struct Engine<'r> {
+    runner: &'r ModelRunner,
+}
+
+impl<'r> Engine<'r> {
+    pub fn new(runner: &'r ModelRunner) -> Engine<'r> {
+        Engine { runner }
+    }
+
+    /// Execute one spec. Streaming specs decode to completion (every
+    /// step's sink is accepted); use [`Engine::run_streaming`] to consume
+    /// per-step outcomes or stop early.
+    pub fn run(&self, spec: ExecSpec) -> Result<ExecOutcome> {
+        if spec.steps.is_some() {
+            return self.run_streaming(spec, &mut |_, _| true);
+        }
+        let (result, state_updates, report) =
+            interp::execute_full(spec.graph, self.runner, spec.state, spec.optimize)?;
+        Ok(ExecOutcome { result, state_updates, report, generation: None })
+    }
+
+    /// Execute a streaming spec, delivering each [`StepOutcome`] to
+    /// `sink` as the step completes; `sink` returns `false` to stop
+    /// decoding early (a gone consumer).
+    pub fn run_streaming(
+        &self,
+        spec: ExecSpec,
+        sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+    ) -> Result<ExecOutcome> {
+        let steps = spec
+            .steps
+            .ok_or_else(|| anyhow!("streaming run requires ExecSpec::stream(steps)"))?;
+        if !spec.state.is_empty() {
+            return Err(anyhow!(
+                "streaming decode does not take session state (validation rule 8)"
+            ));
+        }
+        let (gen, report) =
+            interp::execute_stream_opt(spec.graph, self.runner, steps, spec.optimize, sink)?;
+        Ok(ExecOutcome {
+            result: GraphResult { values: BTreeMap::new() },
+            state_updates: BTreeMap::new(),
+            report,
+            generation: Some(gen),
+        })
+    }
+
+    /// Execute an ordered trace bundle against shared session state,
+    /// committing each trace's store updates before the next runs. On
+    /// error the failing trace's updates are discarded and `state` keeps
+    /// every earlier trace's commits (the session stays resumable).
+    pub fn run_session(
+        &self,
+        graphs: &[InterventionGraph],
+        state: &mut StateView,
+        optimize: bool,
+    ) -> Result<Vec<GraphResult>> {
+        let mut results = Vec::with_capacity(graphs.len());
+        for (i, g) in graphs.iter().enumerate() {
+            let r = interp::execute_stateful_inner(g, self.runner, state, optimize)
+                .map_err(|e| anyhow!("session trace {i}: {e}"))?;
+            results.push(r);
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Trace;
+
+    #[test]
+    fn spec_builders_set_modes() {
+        let g = InterventionGraph::new("m");
+        let s = ExecSpec::trace(&g);
+        assert!(s.optimize && s.steps.is_none() && s.state.is_empty());
+        let s = ExecSpec::raw(&g).stream(7);
+        assert!(!s.optimize);
+        assert_eq!(s.steps, Some(7));
+        let mut view = StateView::new();
+        view.insert("k".into(), Tensor::new(&[1], vec![0.0]));
+        let s = ExecSpec::trace(&g).with_state(view);
+        assert_eq!(s.state.len(), 1);
+    }
+
+    #[test]
+    fn native_engine_streams_through_the_same_graph_contract() {
+        // the native KV substrate accepts the same client-built graphs as
+        // the artifact path — no artifacts needed
+        let m = NativeModel::new(crate::runtime::artifacts::Manifest::synthetic(
+            "door-test", 16, 2, 2, 32, 13, 32,
+        ));
+        let t = Tensor::new(&[1, 3], vec![1.0, 5.0, 2.0]);
+        let mut tr = Trace::new("door-test", &t);
+        let h = tr.output("layer.1");
+        let mean = tr.mean(h);
+        let hook = tr.step_hook(mean);
+        let mut s = KvStream::new(tr.into_graph(), &m, 3).unwrap();
+        let mut steps = 0;
+        while let Some(out) = s.step(&m).unwrap() {
+            assert!(out.values.get(hook.0).is_some(), "step {steps} missing hooked value");
+            steps += 1;
+        }
+        assert_eq!(steps, 3);
+    }
+}

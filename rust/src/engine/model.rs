@@ -1,0 +1,387 @@
+//! The native decode substrate: a pure-host transformer forward with an
+//! append-only per-sequence KV cache.
+//!
+//! `NativeModel` runs the same OPT-style decoder math as the AOT
+//! artifacts (`python/compile/model.py`) directly on the host kernels —
+//! no PJRT, no artifact files — which is what lets the decode engine
+//! split prefill from decode: the artifacts are shape-specialized to a
+//! full `[batch, seq]` window, but a host forward can process exactly the
+//! new positions and attend over cached K/V rows ([`KvCache`]).
+//!
+//! Every matmul goes through [`PackedMat::matmul_bias`] and attention
+//! through [`attn_causal_rows`]/`attn_mix_row`, both of which compute
+//! per-row results independent of how many rows are in flight. That is
+//! the bit-parity contract of the engine: **prefill(n) ≡ prefill(k) +
+//! (n−k) decode steps**, bit for bit, so the continuous-batching parity
+//! suite can hold batched decode to a sequential oracle with
+//! `assert_eq!` instead of tolerances.
+//!
+//! Intervention hook points match the artifact forward sequence —
+//! `embed`, `layer.<i>`, `lm_head` — and fire per forward call with the
+//! activation shaped `[1, rows, d]`: `rows = prompt_len` during prefill,
+//! `rows = 1` during decode. A setter's effect on a position is baked
+//! into the K/V rows of **later** layers at the step that computes that
+//! position (each position is computed exactly once under a KV cache,
+//! unlike the sliding-window path which recomputes the whole window every
+//! step).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::{weights::ModelWeights, Hooks};
+use crate::runtime::artifacts::Manifest;
+use crate::tensor::ops::{attn_causal_rows, gelu_rows, layernorm_rows, PackedMat};
+use crate::tensor::Tensor;
+
+/// Layernorm epsilon of the native forward (free choice: parity is
+/// native-vs-native, the AOT path never mixes with this one).
+const LN_EPS: f32 = 1e-5;
+
+/// Append-only per-sequence K/V rows, one block pair per layer. Rows are
+/// packed `[len, d]` with head `h` in columns `h·dh..(h+1)·dh`, matching
+/// the attention kernels. Capacity is the model's position-embedding
+/// table (`manifest.seq`): a sequence cannot decode past the positions
+/// the model was trained to embed.
+pub struct KvCache {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+    cap: usize,
+    d: usize,
+}
+
+impl KvCache {
+    fn new(layers: usize, d: usize, cap: usize) -> KvCache {
+        KvCache {
+            k: vec![Vec::new(); layers],
+            v: vec![Vec::new(); layers],
+            len: 0,
+            cap,
+            d,
+        }
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this sequence can ever hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Approximate resident bytes (f32 K+V rows across all layers).
+    pub fn bytes(&self) -> usize {
+        self.k.len() * self.len * self.d * 4 * 2
+    }
+
+    fn append_layer(&mut self, layer: usize, krows: &[f32], vrows: &[f32]) {
+        self.k[layer].extend_from_slice(krows);
+        self.v[layer].extend_from_slice(vrows);
+    }
+
+    fn layer(&self, layer: usize) -> (&[f32], &[f32]) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    fn advance(&mut self, rows: usize) {
+        self.len += rows;
+    }
+}
+
+struct LayerWeights {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: PackedMat,
+    wk: PackedMat,
+    wv: PackedMat,
+    wo: PackedMat,
+    bo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: PackedMat,
+    b1: Vec<f32>,
+    w2: PackedMat,
+    b2: Vec<f32>,
+}
+
+/// A host-resident decoder with weights pre-packed for row-deterministic
+/// matmuls. Shared immutably across streams (`&NativeModel` is `Sync`);
+/// all per-sequence state lives in the caller's [`KvCache`].
+pub struct NativeModel {
+    manifest: Manifest,
+    wte: Vec<f32>,
+    wpe: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    wout: PackedMat,
+}
+
+impl NativeModel {
+    /// Build from deterministically generated weights (the same
+    /// name-seeded contract the artifact runner uses).
+    pub fn new(manifest: Manifest) -> NativeModel {
+        let w = ModelWeights::generate(&manifest);
+        NativeModel::from_weights(manifest, &w).expect("generated weights match manifest")
+    }
+
+    /// Build from explicit weights (e.g. loaded from `weights.bin`).
+    pub fn from_weights(manifest: Manifest, w: &ModelWeights) -> Result<NativeModel> {
+        let module = |key: &str| -> Result<&Vec<Tensor>> {
+            w.modules
+                .get(key)
+                .ok_or_else(|| anyhow!("weights missing module '{key}'"))
+        };
+        let vec1 = |t: &Tensor| t.data().to_vec();
+        let embed = module("embed")?;
+        if embed.len() != 2 {
+            bail!("embed expects [wte, wpe], got {} tensors", embed.len());
+        }
+        let mut layers = Vec::with_capacity(manifest.n_layers);
+        for i in 0..manifest.n_layers {
+            let p = module(&format!("layer.{i}"))?;
+            if p.len() != 13 {
+                bail!("layer.{i} expects 13 params, got {}", p.len());
+            }
+            layers.push(LayerWeights {
+                ln1_g: vec1(&p[0]),
+                ln1_b: vec1(&p[1]),
+                wq: PackedMat::from_tensor(&p[2]),
+                wk: PackedMat::from_tensor(&p[3]),
+                wv: PackedMat::from_tensor(&p[4]),
+                wo: PackedMat::from_tensor(&p[5]),
+                bo: vec1(&p[6]),
+                ln2_g: vec1(&p[7]),
+                ln2_b: vec1(&p[8]),
+                w1: PackedMat::from_tensor(&p[9]),
+                b1: vec1(&p[10]),
+                w2: PackedMat::from_tensor(&p[11]),
+                b2: vec1(&p[12]),
+            });
+        }
+        let head = module("lm_head")?;
+        if head.len() != 3 {
+            bail!("lm_head expects [lnf_g, lnf_b, wout], got {} tensors", head.len());
+        }
+        Ok(NativeModel {
+            wte: vec1(&embed[0]),
+            wpe: vec1(&embed[1]),
+            layers,
+            lnf_g: vec1(&head[0]),
+            lnf_b: vec1(&head[1]),
+            wout: PackedMat::from_tensor(&head[2]),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// A fresh, empty per-sequence cache.
+    pub fn kv_cache(&self) -> KvCache {
+        KvCache::new(self.manifest.n_layers, self.manifest.d_model, self.manifest.seq)
+    }
+
+    /// Prefill: run the whole prompt through the model in one pass,
+    /// populating `cache` with one K/V row per layer per position.
+    /// Returns `[1, prompt_len, vocab]` logits.
+    pub fn prefill(
+        &self,
+        tokens: &[usize],
+        cache: &mut KvCache,
+        hooks: &mut dyn Hooks,
+    ) -> Result<Tensor> {
+        if !cache.is_empty() {
+            bail!("prefill requires an empty cache (len {})", cache.len());
+        }
+        if tokens.is_empty() {
+            bail!("prefill with an empty prompt");
+        }
+        self.forward_rows(tokens, cache, hooks)
+    }
+
+    /// One decode step: embed the single new token at the next position,
+    /// attend over the cached prefix, append its K/V rows. O(cache len)
+    /// attention + O(1) weight matmuls — never a function of how many
+    /// tokens were generated before. Returns `[1, 1, vocab]` logits.
+    pub fn decode_step(
+        &self,
+        token: usize,
+        cache: &mut KvCache,
+        hooks: &mut dyn Hooks,
+    ) -> Result<Tensor> {
+        if cache.is_empty() {
+            bail!("decode_step before prefill");
+        }
+        self.forward_rows(&[token], cache, hooks)
+    }
+
+    /// The shared forward over `rows = tokens.len()` new positions
+    /// starting at `cache.len()`. Prefill and decode are the same code —
+    /// the phase split is purely how many rows the caller sends.
+    fn forward_rows(
+        &self,
+        tokens: &[usize],
+        cache: &mut KvCache,
+        hooks: &mut dyn Hooks,
+    ) -> Result<Tensor> {
+        let (d, heads, vocab) =
+            (self.manifest.d_model, self.manifest.n_heads, self.manifest.vocab);
+        let n = tokens.len();
+        let base = cache.len();
+        if base + n > cache.capacity() {
+            bail!(
+                "decode overruns the model context: {} cached + {n} new > {}",
+                base,
+                cache.capacity()
+            );
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t >= vocab) {
+            bail!("token {t} out of vocab {vocab}");
+        }
+
+        // embed: wte[token] + wpe[position]
+        let mut x = vec![0.0f32; n * d];
+        for (r, &t) in tokens.iter().enumerate() {
+            let row = &mut x[r * d..(r + 1) * d];
+            row.copy_from_slice(&self.wte[t * d..(t + 1) * d]);
+            let pos = base + r;
+            for (o, &p) in row.iter_mut().zip(&self.wpe[pos * d..(pos + 1) * d]) {
+                *o += p;
+            }
+        }
+        apply_hook(hooks, "embed", &mut x, n, d)?;
+
+        let mut xn = vec![0.0f32; n * d];
+        let mut q = vec![0.0f32; n * d];
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        let mut o = vec![0.0f32; n * d];
+        let mut a = vec![0.0f32; n * d];
+        for (l, lw) in self.layers.iter().enumerate() {
+            // attention block over the cached prefix + these rows
+            layernorm_rows(&x, &lw.ln1_g, &lw.ln1_b, LN_EPS, &mut xn);
+            lw.wq.matmul_bias(&xn, None, &mut q);
+            lw.wk.matmul_bias(&xn, None, &mut k);
+            lw.wv.matmul_bias(&xn, None, &mut v);
+            cache.append_layer(l, &k, &v);
+            let (kc, vc) = cache.layer(l);
+            attn_causal_rows(&q, kc, vc, n, base, heads, &mut o);
+            lw.wo.matmul_bias(&o, Some(&lw.bo), &mut a);
+            for (h, &av) in x.iter_mut().zip(&a) {
+                *h += av;
+            }
+            // MLP block
+            layernorm_rows(&x, &lw.ln2_g, &lw.ln2_b, LN_EPS, &mut xn);
+            let mut m = vec![0.0f32; n * lw.b1.len()];
+            lw.w1.matmul_bias(&xn, Some(&lw.b1), &mut m);
+            gelu_rows(&mut m);
+            lw.w2.matmul_bias(&m, Some(&lw.b2), &mut a);
+            for (h, &mv) in x.iter_mut().zip(&a) {
+                *h += mv;
+            }
+            apply_hook(hooks, &format!("layer.{l}"), &mut x, n, d)?;
+        }
+        cache.advance(n);
+
+        layernorm_rows(&x, &self.lnf_g, &self.lnf_b, LN_EPS, &mut xn);
+        let mut logits = vec![0.0f32; n * vocab];
+        self.wout.matmul_bias(&xn, None, &mut logits);
+        apply_hook(hooks, "lm_head", &mut logits, n, vocab)?;
+        Ok(Tensor::new(&[1, n, vocab], logits))
+    }
+}
+
+/// Fire one intervention hook point with the activation as `[1, rows, d]`,
+/// writing any setter mutation back into the raw buffer. Same contract as
+/// the artifact runner: the hook may rewrite values but not reshape.
+fn apply_hook(
+    hooks: &mut dyn Hooks,
+    point: &str,
+    buf: &mut Vec<f32>,
+    rows: usize,
+    d: usize,
+) -> Result<()> {
+    if !hooks.wants(point) {
+        return Ok(());
+    }
+    let mut t = Tensor::new(&[1, rows, d], std::mem::take(buf));
+    hooks.on_output(point, &mut t);
+    if t.dims() != [1, rows, d] {
+        bail!("intervention at {point} changed activation shape to {:?}", t.dims());
+    }
+    *buf = t.into_data();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::NoHooks;
+
+    fn model() -> NativeModel {
+        NativeModel::new(Manifest::synthetic("kv-test", 16, 2, 2, 32, 11, 24))
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_full_recompute_bitwise() {
+        let m = model();
+        let prompt = [1usize, 4, 2, 7];
+        // path A: prefill 4, then decode 3 more greedily
+        let mut cache = m.kv_cache();
+        let mut logits = m.prefill(&prompt, &mut cache, &mut NoHooks).unwrap();
+        let mut toks: Vec<usize> = prompt.to_vec();
+        for _ in 0..3 {
+            let vocab = m.manifest().vocab;
+            let data = logits.data();
+            let row = &data[data.len() - vocab..];
+            let (t, _) = crate::models::generate::argmax_row(row);
+            toks.push(t);
+            logits = m.decode_step(t, &mut cache, &mut NoHooks).unwrap();
+        }
+        // path B: a fresh prefill over the full extended sequence must
+        // reproduce the last-row logits of every decode step bit-for-bit
+        let mut cache_b = m.kv_cache();
+        let full = m.prefill(&toks, &mut cache_b, &mut NoHooks).unwrap();
+        let vocab = m.manifest().vocab;
+        let last_a = &logits.data()[..vocab];
+        let last_b = &full.data()[(toks.len() - 1) * vocab..];
+        assert_eq!(last_a, last_b, "KV decode diverged from full recompute");
+    }
+
+    #[test]
+    fn cache_len_tracks_positions_and_overflow_errors() {
+        let m = model();
+        let mut cache = m.kv_cache();
+        assert_eq!(cache.capacity(), 24);
+        m.prefill(&[1, 2, 3], &mut cache, &mut NoHooks).unwrap();
+        assert_eq!(cache.len(), 3);
+        m.decode_step(5, &mut cache, &mut NoHooks).unwrap();
+        assert_eq!(cache.len(), 4);
+        for _ in 0..20 {
+            let _ = m.decode_step(1, &mut cache, &mut NoHooks);
+        }
+        let err = m.decode_step(1, &mut cache, &mut NoHooks).unwrap_err();
+        assert!(err.to_string().contains("context"), "got: {err}");
+    }
+
+    #[test]
+    fn decode_before_prefill_rejected() {
+        let m = model();
+        let mut cache = m.kv_cache();
+        assert!(m.decode_step(0, &mut cache, &mut NoHooks).is_err());
+    }
+
+    #[test]
+    fn out_of_vocab_token_rejected() {
+        let m = model();
+        let mut cache = m.kv_cache();
+        assert!(m.prefill(&[999], &mut cache, &mut NoHooks).is_err());
+    }
+}

@@ -1,14 +1,15 @@
 //! The intervention-graph interpreter: interleaves graph execution with
 //! the model's forward pass.
 //!
-//! Execution is preceded by a compile stage: the top-level drivers
-//! ([`execute`], [`execute_with_view`], [`execute_stream`], and the
-//! session paths) run the submitted graph through
+//! Execution is preceded by a compile stage: the drivers behind
+//! [`crate::engine::Engine`] (with [`execute`], [`execute_stateful`], and
+//! [`execute_stream`] as conveniences) run the submitted graph through
 //! [`crate::graph::opt`] — DCE, constant folding, CSE, fusion — and
 //! re-key the results back into the submitted node ids, so callers never
-//! observe the rewrite. The `*_raw` variants execute a graph exactly as
-//! given; the server uses them for graphs already compiled at admission
-//! (and for the `--no-opt` escape hatch).
+//! observe the rewrite. `ExecSpec::raw` (the crate-internal `*_raw`
+//! drivers) executes a graph exactly as given; the server uses that for
+//! graphs already compiled at admission (and for the `--no-opt` escape
+//! hatch).
 //!
 //! Scheduling follows §B.1 of the paper: the graph is partitioned into
 //! sub-graphs keyed by the *latest* module activation they (transitively)
@@ -40,7 +41,7 @@ use crate::graph::{
     validate::{validate_stream, validate_with_state},
     GraphResult, InterventionGraph, NodeId, Op, Port,
 };
-use crate::models::generate::{advance_window, Generation};
+use crate::models::generate::Generation;
 use crate::models::{Hooks, ModelRunner};
 use crate::tensor::{logit_diff, Tensor};
 
@@ -126,8 +127,9 @@ impl<'g> Executor<'g> {
 
     /// Build without re-validating (the caller has already run the
     /// applicable rule set — per-request for traces, once per stream for
-    /// the step-hook form).
-    fn prevalidated(
+    /// the step-hook form). The decode engine re-enters here once per
+    /// decode step, paying validation once per stream at admission.
+    pub(crate) fn prevalidated(
         graph: &'g InterventionGraph,
         forward_sequence: &[String],
         state: StateView,
@@ -528,6 +530,12 @@ impl<'g> Executor<'g> {
     pub fn had_error(&self) -> Option<&anyhow::Error> {
         self.error.as_ref()
     }
+
+    /// Take a runtime error captured inside a hook, if any (hooks cannot
+    /// return `Result`, so failures are parked on the executor).
+    pub(crate) fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
+    }
 }
 
 impl Hooks for Executor<'_> {
@@ -597,15 +605,15 @@ fn op_kind(op: &Op) -> &'static str {
 /// Execute a standalone graph against a loaded model: pre-phase → hooked
 /// forward (sharded if requested) → backward/post-phase → saved values.
 /// The graph is run through the admission compiler ([`crate::graph::opt`])
-/// first; use [`execute_reported`] with `optimize = false` for the
-/// uncompiled path (the `--no-opt` escape hatch, and the oracle side of
-/// the optimizer-parity property tests).
+/// first. This is convenience sugar over the unified engine door —
+/// [`crate::engine::Engine::run`] with [`crate::engine::ExecSpec`] exposes
+/// the optimizer toggle, session state, and streaming.
 pub fn execute(graph: &InterventionGraph, runner: &ModelRunner) -> Result<GraphResult> {
     Ok(execute_full(graph, runner, StateView::new(), true)?.0)
 }
 
-/// [`execute`] with the optimizer toggle exposed; also returns the
-/// per-request optimization report (`None` when `optimize` is false).
+#[deprecated(note = "use engine::Engine::run(ExecSpec::trace(..)) — `.report` on the outcome")]
+#[doc(hidden)]
 pub fn execute_reported(
     graph: &InterventionGraph,
     runner: &ModelRunner,
@@ -617,17 +625,30 @@ pub fn execute_reported(
 
 /// Execute a graph inside a session: loads resolve against `state`, and on
 /// success the collected store updates are committed back into `state`
-/// (the post-phase commit). On error `state` is left untouched.
+/// (the post-phase commit). On error `state` is left untouched. Sugar over
+/// [`crate::engine::Engine::run_session`] for a single graph.
 pub fn execute_stateful(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state: &mut StateView,
 ) -> Result<GraphResult> {
-    execute_stateful_opt(graph, runner, state, true)
+    execute_stateful_inner(graph, runner, state, true)
 }
 
-/// [`execute_stateful`] with the optimizer toggle exposed.
+#[deprecated(note = "use engine::Engine::run_session")]
+#[doc(hidden)]
 pub fn execute_stateful_opt(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    state: &mut StateView,
+    optimize: bool,
+) -> Result<GraphResult> {
+    execute_stateful_inner(graph, runner, state, optimize)
+}
+
+/// The session-step driver: snapshot the loaded keys, execute, commit
+/// updates on success.
+pub(crate) fn execute_stateful_inner(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state: &mut StateView,
@@ -650,11 +671,8 @@ pub fn execute_stateful_opt(
     Ok(result)
 }
 
-/// Run one graph against `state_in`, returning saved values and
-/// uncommitted state updates. Optimizes by default; scheduler workers
-/// executing graphs already compiled at admission call
-/// [`execute_view_raw`] instead and remap via the job's
-/// [`crate::graph::opt::Prepared`].
+#[deprecated(note = "use engine::Engine::run(ExecSpec::trace(..).with_state(..))")]
+#[doc(hidden)]
 pub fn execute_with_view(
     graph: &InterventionGraph,
     runner: &ModelRunner,
@@ -666,8 +684,9 @@ pub fn execute_with_view(
 
 /// Core optimizing driver: validate the submitted graph, run it through
 /// the compiler pipeline (unless `optimize` is false), execute, and re-key
-/// the saved values back into the submitted graph's node ids.
-pub fn execute_full(
+/// the saved values back into the submitted graph's node ids. In-crate
+/// only — external callers go through [`crate::engine::Engine`].
+pub(crate) fn execute_full(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state_in: StateView,
@@ -691,8 +710,8 @@ pub fn execute_full(
 /// Execute a graph exactly as given — no optimization passes, no id
 /// remapping. This is the executor the scheduler workers use for graphs
 /// the server already compiled at admission, and the oracle the parity
-/// tests compare against.
-pub fn execute_view_raw(
+/// tests compare against (via `ExecSpec::raw`).
+pub(crate) fn execute_view_raw(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     state_in: StateView,
@@ -800,12 +819,24 @@ pub fn execute_stream(
     steps: usize,
     sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
 ) -> Result<Generation> {
-    Ok(execute_stream_full(graph, runner, steps, true, sink)?.0)
+    Ok(execute_stream_opt(graph, runner, steps, true, sink)?.0)
+}
+
+#[deprecated(note = "use engine::Engine::run_streaming(ExecSpec::trace(..).stream(steps), sink)")]
+#[doc(hidden)]
+pub fn execute_stream_full(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    steps: usize,
+    optimize: bool,
+    sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+) -> Result<(Generation, Option<OptReport>)> {
+    execute_stream_opt(graph, runner, steps, optimize, sink)
 }
 
 /// [`execute_stream`] with the optimizer toggle exposed; also returns the
 /// per-request optimization report (`None` when `optimize` is false).
-pub fn execute_stream_full(
+pub(crate) fn execute_stream_opt(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     steps: usize,
@@ -828,63 +859,25 @@ pub fn execute_stream_full(
 }
 
 /// Streaming decode of a graph exactly as given — no optimization, no id
-/// remapping (the scheduler's path for streams compiled at admission).
-pub fn execute_stream_raw(
+/// remapping (the path for streams compiled at admission). Drives one
+/// [`crate::engine::RunnerStream`] to completion; the continuous-batching
+/// scheduler steps many such streams interleaved instead.
+pub(crate) fn execute_stream_raw(
     graph: &InterventionGraph,
     runner: &ModelRunner,
     steps: usize,
     sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
 ) -> Result<Generation> {
-    let fseq = runner.manifest.forward_sequence();
-    validate_stream(graph, &fseq)?;
-    if graph.shards > 1 {
-        return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
-    }
-    if graph.batch_group.is_some() {
-        return Err(anyhow!("streaming decode does not merge into co-tenant batches"));
-    }
-    let seq = runner.manifest.seq;
-    if graph.batch != 1 || graph.tokens.len() != seq {
-        return Err(anyhow!(
-            "streaming generation is single-sequence: need [1, {seq}] tokens, got batch {} × {}",
-            graph.batch,
-            graph.tokens.len()
-        ));
-    }
-    let vocab = runner.manifest.vocab;
-    let mut ctx = Tensor::new(&[1, seq], graph.tokens.clone());
-    let mut out = Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() };
-    let timed = crate::obs::phases::armed();
-    let profiled = crate::obs::profile::armed();
-    for step in 0..steps {
-        // per-step granularity: every op and phase recorded below carries
-        // the decode step index (no-op when the profiler is disarmed)
-        crate::obs::profile::set_step(step as i64);
-        let mut ex = Executor::prevalidated(graph, &fseq, StateView::new())?;
-        ex.run_pre()?;
-        let tf = (timed || profiled).then(std::time::Instant::now);
-        let logits = runner.forward(&ctx, &mut ex)?;
-        if let Some(t) = tf {
-            if timed {
-                crate::obs::phases::record("forward", t.elapsed().as_nanos() as u64);
-            }
-            if profiled {
-                crate::obs::profile::record_phase("forward", t);
-            }
-        }
-        if let Some(e) = ex.error.take() {
-            return Err(e);
-        }
-        let values = ex.into_result()?;
-        let (token, score) = advance_window(&mut ctx, &logits, seq, vocab);
-        out.tokens.push(token);
-        out.scores.push(score);
-        if !sink(step, StepOutcome { token, score, values }) {
+    let mut stream = crate::engine::RunnerStream::new(graph.clone(), runner, steps)?;
+    let mut step = 0usize;
+    while let Some(out) = stream.step(runner)? {
+        let more = sink(step, out);
+        step += 1;
+        if !more {
             break;
         }
     }
-    crate::obs::profile::set_step(crate::obs::profile::NO_STEP);
-    Ok(out)
+    Ok(stream.into_generation())
 }
 
 #[cfg(test)]

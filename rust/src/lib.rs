@@ -19,6 +19,11 @@
 //!   interleaves their graphs with shared model execution (sequential and
 //!   batch-grouped parallel co-tenancy), and returns only saved values
 //!   ([`server`], [`scheduler`]);
+//! * a **unified execution engine** ([`engine`]): one `Engine::run(ExecSpec)`
+//!   door for traces, sessions, and streaming, plus a vLLM-style decode
+//!   substrate — per-sequence KV cache, explicit prefill/decode split, and
+//!   a continuous-batching loop interleaving single-token steps from many
+//!   concurrent streams;
 //! * the **L3 fleet coordinator** (§3.3, Fig. 4): a deployment registry
 //!   with heartbeat-derived health states, pluggable routing policies
 //!   (round-robin, least-loaded, latency-aware) with bounded-retry
@@ -56,6 +61,7 @@ pub mod netsim;
 pub mod obs;
 pub mod graph;
 pub mod interp;
+pub mod engine;
 pub mod client;
 pub mod runtime;
 pub mod models;

@@ -357,7 +357,8 @@ fn profile_cmd(args: &Args) -> Result<()> {
         let h = tr.output(&format!("layer.{l}"));
         tr.save(h);
     }
-    let (_, profile, id) = client.execute_profiled(tr.graph())?;
+    let out = client.run(tr.graph(), nnscope::client::ExecuteOptions::new().profiled())?;
+    let (profile, id) = (out.profile.unwrap_or(nnscope::json::Json::Null), out.id);
     println!("request {id} profiled: {} ops recorded", profile.get("ops").as_i64().unwrap_or(0));
     let mut table = Table::new(&format!("top ops by self-time ({model})")).header(vec![
         "op", "count", "self (us)", "alloc (bytes)",

@@ -3,9 +3,10 @@
 //! The exported modules are shape-specialized to `[batch, seq]`; decoding
 //! slides the window: each step runs a full forward, takes the argmax of
 //! the last position, shifts the context left by one and appends the new
-//! token. This is O(steps × forward) — fine for the serving benchmarks and
-//! demos (a KV-cache would need seq-incremental artifacts, listed as
-//! future work in DESIGN.md).
+//! token. This is O(steps × forward) — the compatibility path for the
+//! AOT artifacts. The native decode engine (`crate::engine`) replaces it
+//! with a per-sequence KV cache and O(1)-per-step decode; both paths share
+//! [`argmax_row`] so greedy tie-breaking is identical.
 //!
 //! Generation composes with interventions: pass any [`Hooks`] and it is
 //! applied at every decode step — steering generation, the paper's
@@ -26,6 +27,19 @@ pub struct Generation {
     pub scores: Vec<f32>,
 }
 
+/// Greedy pick over one logits row: first-max argmax plus its logit. The
+/// single tie-breaking rule for every decode path — sliding-window and
+/// KV-cached engines must agree bit-for-bit on the chosen token.
+pub fn argmax_row(row: &[f32]) -> (usize, f32) {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    (best, row[best])
+}
+
 /// One greedy decode step over the sliding window: pick the argmax of the
 /// last position of `[1, seq, vocab]` logits, shift the `[1, seq]` context
 /// left by one, and append the chosen token. Returns `(token, logit)`.
@@ -34,14 +48,7 @@ pub struct Generation {
 pub fn advance_window(ctx: &mut Tensor, logits: &Tensor, seq: usize, vocab: usize) -> (usize, f32) {
     // argmax straight off the last-position row — no slice/reshape
     // materialization per step
-    let row = &logits.data()[(seq - 1) * vocab..seq * vocab];
-    let mut best = 0usize;
-    for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    let score = row[best];
+    let (best, score) = argmax_row(&logits.data()[(seq - 1) * vocab..seq * vocab]);
     let cd = ctx.data_mut();
     cd.copy_within(1..seq, 0);
     cd[seq - 1] = best as f32;

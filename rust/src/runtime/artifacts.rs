@@ -187,6 +187,101 @@ impl Manifest {
         })
     }
 
+    /// Build an artifact-free manifest for the native decode engine: the
+    /// same module/argument schemas `python/compile/aot.py` exports (so
+    /// [`crate::models::ModelWeights::generate`] works unchanged), but with
+    /// no HLO files behind them — `engine::NativeModel` runs the forward on
+    /// the host kernels, so tests and benches need no `make artifacts`.
+    pub fn synthetic(
+        name: &str,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        vocab: usize,
+        seq: usize,
+    ) -> Manifest {
+        assert!(d_model % n_heads == 0, "d_model must divide into heads");
+        let d = d_model as i64;
+        let input = |nm: &str, shape: Vec<i64>| ArgSpec {
+            kind: ArgKind::Input,
+            name: nm.to_string(),
+            shape,
+        };
+        let param = |nm: &str, shape: Vec<i64>| ArgSpec {
+            kind: ArgKind::Param,
+            name: nm.to_string(),
+            shape,
+        };
+        let spec = |nm: &str, args: Vec<ArgSpec>| ModuleSpec {
+            name: nm.to_string(),
+            files: BTreeMap::new(),
+            args,
+            outputs: 1,
+        };
+        let embed = spec(
+            "embed",
+            vec![
+                input("tokens", vec![-1, seq as i64]),
+                param("wte", vec![vocab as i64, d]),
+                param("wpe", vec![seq as i64, d]),
+            ],
+        );
+        let layer = spec(
+            "layer",
+            vec![
+                input("x", vec![-1, seq as i64, d]),
+                param("ln1_g", vec![d]),
+                param("ln1_b", vec![d]),
+                param("wq", vec![d, d]),
+                param("wk", vec![d, d]),
+                param("wv", vec![d, d]),
+                param("wo", vec![d, d]),
+                param("bo", vec![d]),
+                param("ln2_g", vec![d]),
+                param("ln2_b", vec![d]),
+                param("w1", vec![d, d_ff as i64]),
+                param("b1", vec![d_ff as i64]),
+                param("w2", vec![d_ff as i64, d]),
+                param("b2", vec![d]),
+            ],
+        );
+        let lm_head = spec(
+            "lm_head",
+            vec![
+                input("x", vec![-1, seq as i64, d]),
+                param("lnf_g", vec![d]),
+                param("lnf_b", vec![d]),
+                param("wout", vec![d, vocab as i64]),
+            ],
+        );
+        let per_module = |s: &ModuleSpec| -> usize {
+            s.params().map(|p| p.shape.iter().product::<i64>() as usize).sum()
+        };
+        let param_count =
+            per_module(&embed) + n_layers * per_module(&layer) + per_module(&lm_head);
+        let mut modules = BTreeMap::new();
+        modules.insert("embed".to_string(), embed);
+        modules.insert("layer".to_string(), layer);
+        modules.insert("lm_head".to_string(), lm_head);
+        Manifest {
+            name: name.to_string(),
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            vocab,
+            seq,
+            batches: vec![1],
+            grad: false,
+            tp: Vec::new(),
+            simulates: "native".to_string(),
+            param_count,
+            modules,
+            dir: PathBuf::new(),
+        }
+    }
+
     pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
         self.modules
             .get(name)

@@ -10,11 +10,19 @@
 //!   compatible queued requests are merged into a single forward pass,
 //!   each intervention graph operating on its own batch-group row slice
 //!   with isolation guaranteed by the executor (and verified by tests).
+//!
+//! Streaming decodes are *continuously batched* (vLLM-style): the worker
+//! advances every in-flight stream by one token per tick, admits new
+//! work between ticks, and retires finished streams without draining
+//! the rest. All submissions go through three unified entry points
+//! ([`ModelService::submit_trace`] / [`ModelService::submit_session`] /
+//! [`ModelService::submit_stream`]) taking one [`SubmitOpts`].
 
 pub mod cotenancy;
 pub mod queue;
 
 pub use cotenancy::{execute_merged, CoTenancy};
 pub use queue::{
-    LoadSnapshot, ModelService, ServiceMetrics, StreamChunk, TenantCapExceeded, TenantDepths,
+    LoadSnapshot, ModelService, ServiceMetrics, StreamChunk, SubmitOpts, TenantCapExceeded,
+    TenantDepths,
 };

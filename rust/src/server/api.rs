@@ -627,8 +627,12 @@ fn submit_parsed_graph(
     }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
+    let opts = crate::scheduler::SubmitOpts::new()
+        .traced(trace)
+        .tenant(req.header("x-ndif-auth"))
+        .profiled(profile);
     service
-        .submit_prepared_profiled(id.clone(), prepared, trace, req.header("x-ndif-auth"), profile)
+        .submit_trace(id.clone(), prepared, opts)
         .map_err(|e| submit_error_response(state, e))?;
     Ok(id)
 }
@@ -824,15 +828,11 @@ fn stateful_session(
         }
     }
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
-    if let Err(e) = service.submit_session_profiled(
-        id.clone(),
-        session,
-        persist,
-        prepared,
-        trace,
-        req.header("x-ndif-auth"),
-        profile,
-    ) {
+    let opts = crate::scheduler::SubmitOpts::new()
+        .traced(trace)
+        .tenant(req.header("x-ndif-auth"))
+        .profiled(profile);
+    if let Err(e) = service.submit_session(id.clone(), session, persist, prepared, opts) {
         return submit_error_response(state, e);
     }
     match state.store.wait_outcome(&id, Duration::from_secs(300)) {
@@ -928,15 +928,11 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     }
     let profile = wants_profile(state, req, &body);
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
-    if let Err(e) = service.submit_stream_profiled(
-        prepared,
-        steps,
-        tx,
-        state.stream_send_timeout,
-        trace,
-        req.header("x-ndif-auth"),
-        profile,
-    ) {
+    let opts = crate::scheduler::SubmitOpts::new()
+        .traced(trace)
+        .tenant(req.header("x-ndif-auth"))
+        .profiled(profile);
+    if let Err(e) = service.submit_stream(prepared, steps, tx, state.stream_send_timeout, opts) {
         return submit_error_response(state, e);
     }
     // the chunked source runs on the HTTP worker serving this connection:

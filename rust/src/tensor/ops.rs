@@ -722,6 +722,167 @@ pub fn logit_diff(logits: &Tensor, target: usize, foil: usize) -> Tensor {
 }
 
 // ---------------------------------------------------------------------------
+// Decode-engine kernels: packed matmul, incremental attention, layernorm
+// ---------------------------------------------------------------------------
+
+/// A weight matrix packed once into transposed `[n, k]` layout for the
+/// decode engine. Unlike [`Tensor::matmul`] — which picks the axpy or the
+/// blocked kernel by product size — `PackedMat::matmul_bias` computes every
+/// output row with the same [`dot`]-based reduction regardless of how many
+/// rows are in flight. Per-row results therefore depend only on the row's
+/// contents, so an n-position prefill and n single-row decode steps produce
+/// bit-identical activations — the invariant the KV-cache parity suite
+/// leans on.
+pub struct PackedMat {
+    bt: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedMat {
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedMat {
+        assert_eq!(b.len(), k * n, "pack: {k}x{n} from {} elems", b.len());
+        PackedMat { bt: pack_transposed(b, k, n), k, n }
+    }
+
+    /// Pack a 2-D weight tensor.
+    pub fn from_tensor(t: &Tensor) -> PackedMat {
+        assert_eq!(t.rank(), 2, "PackedMat expects a 2-D weight");
+        PackedMat::pack(t.data(), t.dims()[0], t.dims()[1])
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `out[r, j] = dot(a[r, :], b[:, j]) (+ bias[j])` for every row of `a`.
+    /// Sequential by design: decode rows are tiny and determinism across
+    /// call shapes matters more than intra-call parallelism (cross-sequence
+    /// parallelism comes from stepping streams concurrently).
+    pub fn matmul_bias(&self, a: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+        let rows = a.len() / self.k;
+        assert_eq!(a.len(), rows * self.k, "lhs not a multiple of k={}", self.k);
+        assert_eq!(out.len(), rows * self.n, "out shape mismatch");
+        if let Some(bias) = bias {
+            assert_eq!(bias.len(), self.n, "bias length mismatch");
+        }
+        for r in 0..rows {
+            let arow = &a[r * self.k..(r + 1) * self.k];
+            let orow = &mut out[r * self.n..(r + 1) * self.n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, &self.bt[j * self.k..(j + 1) * self.k]);
+            }
+            if let Some(bias) = bias {
+                for (o, &bv) in orow.iter_mut().zip(bias) {
+                    *o += bv;
+                }
+            }
+        }
+    }
+}
+
+/// One position of multi-head attention against a cached K/V prefix: `q`
+/// is the packed `[d]` query row (head `h` occupies columns
+/// `h·dh .. (h+1)·dh`), `kc`/`vc` are row-major `[t, d]` cache prefixes,
+/// and the mixed output (pre out-projection) lands in `out`. Scores are
+/// scaled by `1/sqrt(dh)` and softmaxed over the `t` cached positions —
+/// O(t·d) per step instead of the O(t²·d) a full-window recompute pays.
+/// `scratch` is the caller-owned score buffer (resized to `t`).
+pub fn attn_mix_row(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t: usize,
+    n_heads: usize,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let d = q.len();
+    assert_eq!(out.len(), d);
+    assert!(t > 0, "attention over an empty prefix");
+    assert!(kc.len() >= t * d && vc.len() >= t * d, "cache shorter than t={t}");
+    assert_eq!(d % n_heads, 0, "d={d} not divisible by {n_heads} heads");
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    scratch.resize(t, 0.0);
+    out.fill(0.0);
+    for h in 0..n_heads {
+        let c0 = h * dh;
+        let qh = &q[c0..c0 + dh];
+        for (j, s) in scratch.iter_mut().enumerate() {
+            *s = dot(qh, &kc[j * d + c0..j * d + c0 + dh]) * scale;
+        }
+        softmax_rows(scratch, t);
+        let oh = &mut out[c0..c0 + dh];
+        for (j, &w) in scratch.iter().enumerate() {
+            let vrow = &vc[j * d + c0..j * d + c0 + dh];
+            for (o, &v) in oh.iter_mut().zip(vrow) {
+                *o += w * v;
+            }
+        }
+    }
+}
+
+/// Causal self-attention for `rows` freshly cached positions: row `r`
+/// (absolute position `base + r`) attends over cache rows `0..=base+r`.
+/// Implemented as a loop over [`attn_mix_row`], so a multi-row prefill is
+/// bit-identical to replaying the same positions one decode step at a
+/// time — prefill/decode is a phase split, not a numerics fork.
+pub fn attn_causal_rows(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    rows: usize,
+    base: usize,
+    n_heads: usize,
+    out: &mut [f32],
+) {
+    assert!(rows > 0, "causal attention over zero rows");
+    let d = q.len() / rows;
+    assert_eq!(q.len(), rows * d);
+    assert_eq!(out.len(), rows * d);
+    let mut scratch = Vec::new();
+    for r in 0..rows {
+        attn_mix_row(
+            &q[r * d..(r + 1) * d],
+            kc,
+            vc,
+            base + r + 1,
+            n_heads,
+            &mut out[r * d..(r + 1) * d],
+            &mut scratch,
+        );
+    }
+}
+
+/// Row-wise layernorm with gain/bias over `[rows, d]` (d = `g.len()`).
+/// Sequential reductions, so results never depend on pool size.
+pub fn layernorm_rows(x: &[f32], g: &[f32], b: &[f32], eps: f32, out: &mut [f32]) {
+    let d = g.len();
+    assert_eq!(b.len(), d);
+    assert_eq!(x.len() % d, 0, "rows not a multiple of d={d}");
+    assert_eq!(out.len(), x.len());
+    for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for ((o, &v), (&gv, &bv)) in orow.iter_mut().zip(row).zip(g.iter().zip(b)) {
+            *o = (v - mean) * inv * gv + bv;
+        }
+    }
+}
+
+/// In-place tanh-approximation GELU over a raw slice — the decode engine's
+/// MLP activation, sharing the exact formula with [`Tensor::gelu_inplace`].
+pub fn gelu_rows(xs: &mut [f32]) {
+    gelu_slice(xs);
+}
+
+// ---------------------------------------------------------------------------
 // Naive oracles
 // ---------------------------------------------------------------------------
 
@@ -1227,5 +1388,124 @@ mod tests {
         let mut got = t.clone();
         got.scale_inplace(2.5);
         assert_eq!(got, t.scale(2.5));
+    }
+
+    #[test]
+    fn packed_matmul_matches_oracle_and_is_row_deterministic() {
+        let mut rng = crate::util::Prng::new(19);
+        let a = Tensor::from_randn(&[6, 40], &mut rng, 1.0);
+        let b = Tensor::from_randn(&[40, 24], &mut rng, 1.0);
+        let p = PackedMat::from_tensor(&b);
+        let mut all = vec![0.0f32; 6 * 24];
+        p.matmul_bias(a.data(), None, &mut all);
+        let want = naive::matmul(&a, &b);
+        let got = Tensor::new(&[6, 24], all.clone());
+        assert!(got.allclose(&want, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // row determinism: one row at a time is bit-identical to the batch
+        for r in 0..6 {
+            let mut row = vec![0.0f32; 24];
+            p.matmul_bias(&a.data()[r * 40..(r + 1) * 40], None, &mut row);
+            assert_eq!(&all[r * 24..(r + 1) * 24], &row[..], "row {r} diverged");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_bias_adds_bias() {
+        let b = Tensor::iota(&[2, 3]);
+        let p = PackedMat::from_tensor(&b);
+        let mut out = vec![0.0f32; 3];
+        p.matmul_bias(&[1.0, 1.0], Some(&[10.0, 20.0, 30.0]), &mut out);
+        assert_eq!(out, vec![13.0, 25.0, 37.0]);
+    }
+
+    /// Naive full causal attention: per-row score matrix, softmax, mix.
+    fn naive_causal_attn(q: &[f32], k: &[f32], v: &[f32], rows: usize, n_heads: usize) -> Vec<f32> {
+        let d = q.len() / rows;
+        let dh = d / n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut out = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            for h in 0..n_heads {
+                let c0 = h * dh;
+                let mut scores: Vec<f32> = (0..=r)
+                    .map(|j| {
+                        (0..dh)
+                            .map(|x| q[r * d + c0 + x] * k[j * d + c0 + x])
+                            .sum::<f32>()
+                            * scale
+                    })
+                    .collect();
+                let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut sum = 0.0;
+                for s in scores.iter_mut() {
+                    *s = (*s - m).exp();
+                    sum += *s;
+                }
+                for (j, s) in scores.iter().enumerate() {
+                    let w = s / sum;
+                    for x in 0..dh {
+                        out[r * d + c0 + x] += w * v[j * d + c0 + x];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn causal_attention_matches_naive_oracle() {
+        let mut rng = crate::util::Prng::new(23);
+        let (rows, heads, d) = (9, 4, 32);
+        let q = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let k = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let v = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let mut got = vec![0.0f32; rows * d];
+        attn_causal_rows(q.data(), k.data(), v.data(), rows, 0, heads, &mut got);
+        let want = naive_causal_attn(q.data(), k.data(), v.data(), rows, heads);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn prefill_bit_identical_to_decode_replay() {
+        // the KV-cache invariant: attending row-by-row over a growing
+        // prefix reproduces the multi-row prefill bit for bit
+        let mut rng = crate::util::Prng::new(29);
+        let (rows, heads, d) = (7, 2, 16);
+        let q = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let k = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let v = Tensor::from_randn(&[rows, d], &mut rng, 1.0);
+        let mut prefill = vec![0.0f32; rows * d];
+        attn_causal_rows(q.data(), k.data(), v.data(), rows, 0, heads, &mut prefill);
+        let mut scratch = Vec::new();
+        for r in 0..rows {
+            let mut step = vec![0.0f32; d];
+            attn_mix_row(
+                &q.data()[r * d..(r + 1) * d],
+                k.data(),
+                v.data(),
+                r + 1,
+                heads,
+                &mut step,
+                &mut scratch,
+            );
+            assert_eq!(&prefill[r * d..(r + 1) * d], &step[..], "position {r} diverged");
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_normalizes() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, -2.0, 0.0, 2.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 8];
+        layernorm_rows(&x, &g, &b, 1e-5, &mut out);
+        for row in out.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
     }
 }

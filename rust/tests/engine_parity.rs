@@ -1,0 +1,241 @@
+//! Golden parity suite for the continuous-batching decode engine.
+//!
+//! The engine's bit-parity contract (see `engine::model`): every matmul
+//! and attention mix is computed per row with an identical reduction
+//! order regardless of how many rows or streams are in flight. These
+//! tests hold that contract with `assert_eq!` — no tolerances:
+//!
+//! * batched continuous decode ≡ sequential solo decode, for 1, 2 and 8
+//!   concurrent sequences, under staggered admission and mid-batch
+//!   completion, parallel and sequential stepping alike;
+//! * per-sequence KV-cached decode ≡ full-prefix recompute;
+//! * setter interventions stay scoped to their own sequence inside a
+//!   batch, and per-step hook values are unchanged by batching.
+//!
+//! Everything here runs on `engine::NativeModel` over a synthetic
+//! manifest — no artifacts, no server.
+
+use nnscope::client::Trace;
+use nnscope::engine::{ContinuousBatch, KvStream, NativeModel};
+use nnscope::graph::{GraphResult, InterventionGraph};
+use nnscope::models::generate::{argmax_row, Generation};
+use nnscope::models::NoHooks;
+use nnscope::runtime::artifacts::Manifest;
+use nnscope::tensor::Tensor;
+
+fn model() -> NativeModel {
+    NativeModel::new(Manifest::synthetic("parity-test", 32, 3, 4, 64, 29, 48))
+}
+
+/// A stream graph with a per-step hook on the last layer's mean — every
+/// step must emit it, batched or not.
+fn hooked_graph(m: &NativeModel, prompt: &[f32]) -> InterventionGraph {
+    let t = Tensor::new(&[1, prompt.len()], prompt.to_vec());
+    let mut tr = Trace::new(&m.manifest().name, &t);
+    let h = tr.output("layer.2");
+    let mean = tr.mean(h);
+    tr.step_hook(mean);
+    tr.into_graph()
+}
+
+/// A stream graph that additionally *steers*: layer.0's output is scaled,
+/// which changes every downstream activation and (generically) the
+/// trajectory.
+fn steered_graph(m: &NativeModel, prompt: &[f32], factor: f32) -> InterventionGraph {
+    let t = Tensor::new(&[1, prompt.len()], prompt.to_vec());
+    let mut tr = Trace::new(&m.manifest().name, &t);
+    let h = tr.output("layer.0");
+    let z = tr.scale(h, factor);
+    tr.set_output("layer.0", z);
+    let l = tr.output("layer.2");
+    let mean = tr.mean(l);
+    tr.step_hook(mean);
+    tr.into_graph()
+}
+
+fn prompts(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..=(i % 4) + 1).map(|j| ((i * 7 + j * 3) % 29) as f32).collect())
+        .collect()
+}
+
+/// Solo oracle: run one stream to completion, collecting the full
+/// trajectory and every step's hook values.
+fn solo(
+    m: &NativeModel,
+    graph: InterventionGraph,
+    steps: usize,
+) -> (Generation, Vec<GraphResult>) {
+    let mut s = KvStream::new(graph, m, steps).unwrap();
+    let mut values = Vec::new();
+    while let Some(out) = s.step(m).unwrap() {
+        values.push(out.values);
+    }
+    (s.into_generation(), values)
+}
+
+/// Batched run: staggered admission (stream i joins at tick i/2),
+/// mid-batch retirement (steps differ per stream), events collected per
+/// stream id.
+fn batched(
+    m: &NativeModel,
+    graphs: Vec<InterventionGraph>,
+    steps: &[usize],
+    parallel: bool,
+) -> Vec<(Vec<usize>, Vec<f32>, Vec<GraphResult>)> {
+    let mut batch = ContinuousBatch::new();
+    for (i, g) in graphs.into_iter().enumerate() {
+        batch.admit_at((i / 2) as u64, i, KvStream::new(g, m, steps[i]).unwrap());
+    }
+    let mut got: Vec<(Vec<usize>, Vec<f32>, Vec<GraphResult>)> =
+        (0..steps.len()).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+    batch
+        .run(parallel, |s: &mut KvStream| s.step(m), &mut |id, out| {
+            got[id].0.push(out.token);
+            got[id].1.push(out.score);
+            got[id].2.push(out.values);
+        })
+        .unwrap();
+    got
+}
+
+fn assert_stream_parity(
+    i: usize,
+    oracle: &(Generation, Vec<GraphResult>),
+    got: &(Vec<usize>, Vec<f32>, Vec<GraphResult>),
+) {
+    assert_eq!(got.0, oracle.0.tokens, "stream {i}: tokens diverged under batching");
+    assert_eq!(got.1, oracle.0.scores, "stream {i}: scores diverged under batching");
+    assert_eq!(got.2.len(), oracle.1.len(), "stream {i}: step count diverged");
+    for (step, (a, b)) in got.2.iter().zip(&oracle.1).enumerate() {
+        assert_eq!(
+            a.values, b.values,
+            "stream {i} step {step}: hook values diverged under batching"
+        );
+    }
+}
+
+/// The tentpole acceptance case: batched continuous decode is
+/// bit-identical to sequential for 1, 2 and 8 concurrent sequences, with
+/// staggered admission and mid-batch completion, under both sequential
+/// and parallel per-tick stepping.
+#[test]
+fn batched_decode_bit_identical_to_sequential_for_1_2_8_streams() {
+    let m = model();
+    for n in [1usize, 2, 8] {
+        let ps = prompts(n);
+        // steps differ per stream so short ones retire mid-batch
+        let steps: Vec<usize> = (0..n).map(|i| 2 + (i * 3) % 7).collect();
+        let oracles: Vec<_> = ps
+            .iter()
+            .zip(&steps)
+            .map(|(p, &st)| solo(&m, hooked_graph(&m, p), st))
+            .collect();
+        for parallel in [false, true] {
+            let got = batched(
+                &m,
+                ps.iter().map(|p| hooked_graph(&m, p)).collect(),
+                &steps,
+                parallel,
+            );
+            for (i, (o, g)) in oracles.iter().zip(&got).enumerate() {
+                assert_stream_parity(i, o, g);
+            }
+        }
+    }
+}
+
+/// A stream finishing mid-batch must not perturb survivors: the long
+/// stream's trajectory is identical whether it shared ticks with a
+/// short-lived neighbour or ran alone.
+#[test]
+fn mid_batch_retirement_leaves_survivors_bit_identical() {
+    let m = model();
+    let long_prompt = [3.0, 11.0, 5.0];
+    let (long_solo, long_vals) = solo(&m, hooked_graph(&m, &long_prompt), 9);
+    let got = batched(
+        &m,
+        vec![hooked_graph(&m, &[8.0, 2.0]), hooked_graph(&m, &long_prompt)],
+        &[2, 9],
+        true,
+    );
+    assert_eq!(got[0].0.len(), 2, "short stream must emit exactly its 2 steps");
+    assert_stream_parity(1, &(long_solo, long_vals), &got[1]);
+}
+
+/// Setter interventions are per-sequence: a steered stream batched with a
+/// plain one leaves the plain one untouched, and the steered one matches
+/// its own solo oracle. The steering itself must be doing something —
+/// the two trajectories differ.
+#[test]
+fn setter_effects_stay_scoped_to_their_own_sequence() {
+    let m = model();
+    let prompt = [1.0, 6.0, 4.0, 2.0];
+    let steps = 6;
+    let plain_oracle = solo(&m, hooked_graph(&m, &prompt), steps);
+    let steered_oracle = solo(&m, steered_graph(&m, &prompt, 0.0), steps);
+    let steering_observable = steered_oracle
+        .1
+        .iter()
+        .zip(&plain_oracle.1)
+        .any(|(a, b)| a.values != b.values);
+    assert!(steering_observable, "zeroing layer.0 must change downstream hook values");
+
+    let got = batched(
+        &m,
+        vec![steered_graph(&m, &prompt, 0.0), hooked_graph(&m, &prompt)],
+        &[steps, steps],
+        true,
+    );
+    assert_stream_parity(0, &steered_oracle, &got[0]);
+    assert_stream_parity(1, &plain_oracle, &got[1]);
+}
+
+/// KV-cached decode against a full-prefix recompute oracle: after every
+/// decode step, a fresh prefill over the whole extended token sequence
+/// must produce the same greedy choice bit-for-bit. This is the property
+/// that makes the O(1)-per-step cache admissible at all.
+#[test]
+fn kv_cached_trajectory_matches_full_recompute_oracle() {
+    let m = model();
+    let prompt_f = [2.0, 9.0, 1.0];
+    let steps = 8;
+    let mut s = KvStream::new(hooked_graph(&m, &prompt_f), &m, steps).unwrap();
+    let mut kv_traj = Vec::new();
+    while let Some(out) = s.step(&m).unwrap() {
+        kv_traj.push((out.token, out.score));
+    }
+
+    // oracle: no cache reuse — re-prefill the full prefix from scratch at
+    // every step (quadratic, which is exactly why the engine doesn't)
+    let vocab = m.manifest().vocab;
+    let mut toks: Vec<usize> = prompt_f.iter().map(|&t| t as usize).collect();
+    let mut oracle_traj = Vec::new();
+    for _ in 0..steps {
+        let mut cache = m.kv_cache();
+        let logits = m.prefill(&toks, &mut cache, &mut NoHooks).unwrap();
+        let data = logits.data();
+        let (t, sc) = argmax_row(&data[data.len() - vocab..]);
+        oracle_traj.push((t, sc));
+        toks.push(t);
+    }
+    assert_eq!(kv_traj, oracle_traj, "KV-cached decode diverged from full recompute");
+}
+
+/// Per-decode-step cached state grows by exactly one position per step
+/// and never re-runs earlier positions — the O(1) work-per-step shape,
+/// asserted structurally (the wall-clock version lives in
+/// `benches/decode.rs`).
+#[test]
+fn cache_grows_one_position_per_step() {
+    let m = model();
+    let prompt = [4.0, 4.0, 7.0, 1.0, 0.0];
+    let mut s = KvStream::new(hooked_graph(&m, &prompt), &m, 5).unwrap();
+    s.step(&m).unwrap(); // prefill
+    assert_eq!(s.cached_len(), prompt.len());
+    for i in 1..5 {
+        s.step(&m).unwrap();
+        assert_eq!(s.cached_len(), prompt.len() + i, "step {i} must append exactly one row");
+    }
+    assert!(s.finished());
+}

@@ -366,7 +366,7 @@ fn client_retry_rides_out_throttling_end_to_end() {
         tr.save(h);
         let g = tr.into_graph();
         client
-            .execute_with_retry(&g, &policy)
+            .run(&g, nnscope::client::ExecuteOptions::new().retry(policy.clone()))
             .expect("retry policy must ride out 429s");
     }
     assert!(

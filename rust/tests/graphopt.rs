@@ -11,6 +11,7 @@
 //! report, and `optimize: false` restores the uncompiled path.
 
 use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::engine::{Engine, ExecSpec};
 use nnscope::graph::{opt, InterventionGraph};
 use nnscope::interp;
 use nnscope::models::{artifacts_dir, ModelRunner};
@@ -93,15 +94,17 @@ fn optimized_traces_are_bit_identical_to_raw() {
     let mut optimizer_did_something = false;
     for case in 0..30 {
         let g = random_graph(&mut rng, m.seq, m.vocab, m.n_layers);
-        let raw = interp::execute_reported(&g, &r, false);
-        let opt = interp::execute_reported(&g, &r, true);
+        let eng = Engine::new(&r);
+        let raw = eng.run(ExecSpec::raw(&g));
+        let opt = eng.run(ExecSpec::trace(&g));
         match (raw, opt) {
-            (Ok((raw, _)), Ok((opt, report))) => {
-                let report = report.expect("optimized path must report");
+            (Ok(raw), Ok(opt)) => {
+                let report = opt.report.expect("optimized path must report");
                 assert_eq!(report.nodes_before, g.nodes.len(), "case {case}");
                 if report.nodes_after < report.nodes_before {
                     optimizer_did_something = true;
                 }
+                let (raw, opt) = (raw.result, opt.result);
                 assert_eq!(
                     raw.values.keys().collect::<Vec<_>>(),
                     opt.values.keys().collect::<Vec<_>>(),
@@ -157,17 +160,18 @@ fn optimized_streams_are_bit_identical_to_raw() {
             raw_events.push((step, out.token, out.values.values.clone()));
             true
         };
-        let (raw_gen, raw_report) =
-            interp::execute_stream_full(&g, &r, steps, false, &mut raw_sink).unwrap();
-        assert!(raw_report.is_none());
+        let eng = Engine::new(&r);
+        let raw_out = eng.run_streaming(ExecSpec::raw(&g).stream(steps), &mut raw_sink).unwrap();
+        let raw_gen = raw_out.generation.expect("streaming run yields a generation");
+        assert!(raw_out.report.is_none());
         let mut opt_events = Vec::new();
         let mut opt_sink = |step: usize, out: interp::StepOutcome| {
             opt_events.push((step, out.token, out.values.values.clone()));
             true
         };
-        let (opt_gen, opt_report) =
-            interp::execute_stream_full(&g, &r, steps, true, &mut opt_sink).unwrap();
-        let report = opt_report.expect("optimized stream must report");
+        let opt_out = eng.run_streaming(ExecSpec::trace(&g).stream(steps), &mut opt_sink).unwrap();
+        let opt_gen = opt_out.generation.expect("streaming run yields a generation");
+        let report = opt_out.report.expect("optimized stream must report");
         assert!(report.nodes_after < report.nodes_before, "case {case}");
         assert_eq!(raw_gen.tokens, opt_gen.tokens, "case {case}");
         assert_eq!(raw_gen.scores, opt_gen.scores, "case {case}");
@@ -203,10 +207,7 @@ fn optimized_sessions_are_bit_identical_to_raw() {
     let graphs = build();
     let run = |optimize: bool| {
         let mut state = interp::StateView::new();
-        let mut results = Vec::new();
-        for g in &graphs {
-            results.push(interp::execute_stateful_opt(g, &r, &mut state, optimize).unwrap());
-        }
+        let results = Engine::new(&r).run_session(&graphs, &mut state, optimize).unwrap();
         (results, state)
     };
     let (raw_res, raw_state) = run(false);
@@ -396,7 +397,11 @@ fn session_endpoint_compiles_stateful_bundles() {
     let a = t1.from_state("acc");
     t1.save(a);
     let results = client
-        .execute_session(&[t0.into_graph(), t1.into_graph()])
+        .run_session(
+            &[t0.into_graph(), t1.into_graph()],
+            None,
+            nnscope::client::ExecuteOptions::new(),
+        )
         .unwrap();
     assert_eq!(results[1].values.values().next().unwrap().item(), 6.0);
 
@@ -407,7 +412,7 @@ fn session_endpoint_compiles_stateful_bundles() {
     let m = bad.sum(empty);
     bad.save_to_state("x", m);
     let err = client
-        .execute_session(&[bad.into_graph()])
+        .run_session(&[bad.into_graph()], None, nnscope::client::ExecuteOptions::new())
         .unwrap_err()
         .to_string();
     assert!(err.contains("400"), "{err}");
@@ -427,9 +432,10 @@ fn dead_grad_skips_backward_but_saved_values_agree() {
     let m = tr.mean(h);
     tr.save(m);
     let g = tr.graph().clone();
-    let (raw, _) = interp::execute_reported(&g, &r, false).unwrap();
-    let (opt, report) = interp::execute_reported(&g, &r, true).unwrap();
-    let report = report.unwrap();
+    let eng = Engine::new(&r);
+    let raw = eng.run(ExecSpec::raw(&g)).unwrap().result;
+    let opt_out = eng.run(ExecSpec::trace(&g)).unwrap();
+    let (opt, report) = (opt_out.result, opt_out.report.unwrap());
     assert!(report.dce_removed >= 1);
     assert!(!g.grad_points().is_empty());
     assert_eq!(raw.values, opt.values);

@@ -217,8 +217,10 @@ fn debug_ring_is_bounded() {
     let mut tr = Trace::new("tiny-sim", &tokens);
     let h = tr.output("layer.0");
     tr.save(h);
-    let (_, _, timing) = client.execute_observed(tr.graph()).unwrap();
-    let timing = timing.expect("obs-enabled server must return timing metadata");
+    let out = client
+        .run(tr.graph(), nnscope::client::ExecuteOptions::new().detailed())
+        .unwrap();
+    let timing = out.timing.expect("obs-enabled server must return timing metadata");
     assert!(timing.get("spans").as_array().is_some_and(|s| !s.is_empty()));
 }
 
@@ -271,7 +273,10 @@ fn disarmed_requests_carry_no_profile_block() {
 fn profiled_trace_returns_summary_and_chrome_trace() {
     let server = NdifServer::start(NdifConfig::local(&["tiny-sim"])).unwrap();
     let client = NdifClient::new(server.addr());
-    let (_res, profile, id) = client.execute_profiled(lens_trace(2.0).graph()).unwrap();
+    let out = client
+        .run(lens_trace(2.0).graph(), nnscope::client::ExecuteOptions::new().profiled())
+        .unwrap();
+    let (profile, id) = (out.profile.expect("profiled run carries a profile"), out.id);
 
     assert!(profile.get("ops").as_i64().unwrap_or(0) > 0, "profile: {profile}");
     assert!(profile.get("total_self_us").as_i64().is_some());
@@ -329,10 +334,16 @@ fn profile_ring_bounded_and_nonblocking_under_concurrency() {
             .map(|i| {
                 s.spawn(move || {
                     let client = NdifClient::new(addr);
-                    let (_r, profile, id) =
-                        client.execute_profiled(lens_trace(i as f32).graph()).unwrap();
-                    assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
-                    id
+                    let out = client
+                        .run(
+                            lens_trace(i as f32).graph(),
+                            nnscope::client::ExecuteOptions::new().profiled(),
+                        )
+                        .unwrap();
+                    assert!(
+                        out.profile.as_ref().is_some_and(|p| p.get("ops").as_i64().unwrap_or(0) > 0)
+                    );
+                    out.id
                 })
             })
             .collect();

@@ -200,8 +200,63 @@ fn server_side_error_is_reported_per_request() {
     tr.save(h);
     let mut g = tr.into_graph();
     g.batch = 2; // corrupt
-    let err = client.execute(&g).unwrap_err().to_string();
+    let err = client
+        .run(&g, nnscope::client::ExecuteOptions::new())
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("remote execution failed"), "{err}");
+}
+
+/// The deprecated pre-`ExecuteOptions` client surface still works through
+/// its shims. This test is deliberately the only in-repo caller of the old
+/// names; everything else goes through [`NdifClient::run`] and friends.
+#[test]
+#[allow(deprecated)]
+fn deprecated_execute_shims_still_work() {
+    let Ok(server) = NdifServer::start(NdifConfig::local(&["tiny-sim"])) else {
+        return; // no artifacts in this environment
+    };
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], vec![1.0; 16]);
+
+    let mk = || {
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        tr.save(h);
+        tr.into_graph()
+    };
+
+    let r = client.execute(&mk()).unwrap();
+    assert_eq!(r.values.len(), 1);
+    let (r, _report) = client.execute_detailed(&mk()).unwrap();
+    assert_eq!(r.values.len(), 1);
+    let (r, _report, _timing) = client.execute_observed(&mk()).unwrap();
+    assert_eq!(r.values.len(), 1);
+    let (r, profile, _id) = client.execute_profiled(&mk()).unwrap();
+    assert_eq!(r.values.len(), 1);
+    assert!(profile.get("ops").as_i64().unwrap_or(0) > 0);
+    let r = client
+        .execute_with_retry(&mk(), &nnscope::client::RetryPolicy::none())
+        .unwrap();
+    assert_eq!(r.values.len(), 1);
+
+    // fetch_result re-reads a completed request by id
+    let id = client
+        .run(&mk(), nnscope::client::ExecuteOptions::new())
+        .unwrap()
+        .id;
+    let r = client.fetch_result(&id).unwrap();
+    assert_eq!(r.values.len(), 1);
+
+    let rs = client.execute_session(&[mk(), mk()]).unwrap();
+    assert_eq!(rs.len(), 2);
+
+    let events: Vec<_> = client
+        .execute_stream(&mk(), 2)
+        .unwrap()
+        .collect::<Result<Vec<_>, _>>()
+        .unwrap();
+    assert!(events.len() >= 2, "{} stream events", events.len());
 }
 
 #[test]

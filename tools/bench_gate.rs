@@ -99,6 +99,26 @@ fn metrics() -> Vec<Metric> {
             extract: |j| j.get("profiled_rps").as_f64(),
         },
         Metric {
+            file: "BENCH_decode.json",
+            name: "decode kv_step_speedup (cached step vs recompute)",
+            extract: |j| j.get("kv_step_speedup").as_f64(),
+        },
+        Metric {
+            file: "BENCH_decode.json",
+            name: "decode step_flatness (early/late per-step cost)",
+            extract: |j| j.get("step_flatness").as_f64(),
+        },
+        Metric {
+            file: "BENCH_decode.json",
+            name: "decode batch_speedup_8x (batched vs back-to-back)",
+            extract: |j| j.get("batch_speedup_8x").as_f64(),
+        },
+        Metric {
+            file: "BENCH_decode.json",
+            name: "decode tokens_per_s_8 (aggregate batched)",
+            extract: |j| j.get("tokens_per_s_8").as_f64(),
+        },
+        Metric {
             file: "BENCH_faults.json",
             name: "faults goodput_rps (chaos goodput)",
             extract: |j| j.get("goodput_rps").as_f64(),
@@ -126,6 +146,7 @@ fn main() {
         "BENCH_graphopt.json",
         "BENCH_obs.json",
         "BENCH_profile.json",
+        "BENCH_decode.json",
         "BENCH_faults.json",
     ];
 
