@@ -1,0 +1,211 @@
+//! AOT plan-cache payoff: cold vs hot admission, planned vs per-node
+//! allocation execution, and the cache hit rate under a repeated-shape
+//! co-tenant burst.
+//!
+//! Three measurements, matching how the server actually amortizes the
+//! plan layer:
+//!
+//! * **admission latency** — cold admission runs validate → parametric
+//!   compile (DCE, folding, CSE, fusion) → schedule → arena plan → bind;
+//!   hot admission is a structural-key lookup plus the constant rebind.
+//!   The acceptance bar is hot strictly faster than cold.
+//! * **execution throughput** — a warm planned engine (cache hit, arena
+//!   slots) against the legacy per-request pipeline (validate + optimize
+//!   + per-node allocation) on the same admission-heavy graph.
+//! * **hit rate** — a burst of structurally identical submissions with
+//!   fresh payloads, the shape a co-tenant dashboard fleet produces;
+//!   every submission after the first per shape must hit.
+//!
+//! Emits `BENCH_plancache.json` (gated by `tools/bench_gate.rs` against
+//! `benches/baselines/`).
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use nnscope::client::Trace;
+use nnscope::engine::{Engine, ExecSpec};
+use nnscope::graph::plan::{self, PlanMode};
+use nnscope::graph::plan_cache::PlanCache;
+use nnscope::graph::InterventionGraph;
+use nnscope::json::Json;
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::tensor::Tensor;
+use nnscope::util::stats::Summary;
+use nnscope::util::table::Table;
+
+/// An admission-heavy probe: per-layer duplicate reads (CSE), a folded
+/// const projection chain, speculative dead reads (DCE), and fusable
+/// scale→softmax lenses — the compiler does real work on every cold
+/// admission of this graph.
+/// `seed` varies only the token payload (bind-time data); `factor` is a
+/// structural scale factor, so distinct factors are distinct plan-cache
+/// shapes.
+fn probe_graph(runner: &ModelRunner, seed: usize, factor: f32) -> InterventionGraph {
+    let m = &runner.manifest;
+    let tokens = Tensor::new(
+        &[1, m.seq],
+        (0..m.seq).map(|i| ((i * 7 + seed) % m.vocab) as f32).collect(),
+    );
+    let mut tr = Trace::new(&m.name, &tokens);
+    let d = m.d_model;
+    let mut chain = tr.constant(&Tensor::new(
+        &[d, d],
+        (0..d * d).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect(),
+    ));
+    for k in 0..4 {
+        let w = tr.constant(&Tensor::new(
+            &[d, d],
+            (0..d * d).map(|i| (((i + k) % 11) as f32 - 5.0) * 0.01).collect(),
+        ));
+        chain = tr.matmul(chain, w);
+    }
+    for layer in 0..m.n_layers {
+        let point = format!("layer.{layer}");
+        let h = tr.output(&point);
+        let h_dup = tr.output(&point); // duplicate read: CSE
+        let _speculative = tr.output(&point); // dead read: DCE
+        let flat = tr.reshape(h, &[m.seq, d]);
+        let lensed = tr.matmul(flat, chain);
+        let sc = tr.scale(lensed, factor);
+        let sm = tr.softmax(sc); // Softmax-of-Scale: fused
+        let mn = tr.mean(sm);
+        tr.save(mn);
+        let mn2 = tr.mean(h_dup);
+        tr.save(mn2);
+    }
+    tr.into_graph()
+}
+
+fn main() {
+    let quick = common::quick();
+    let model = "tiny-sim";
+    let runner = ModelRunner::load(&artifacts_dir(), model).unwrap();
+    let fseq = runner.manifest.forward_sequence();
+    let graph = probe_graph(&runner, 3, 1.7);
+
+    // ---- measurement 1: cold vs hot admission latency ---------------------
+    common::section(&format!("AOT plans — cold vs hot admission ({model})"));
+    let batch = if quick { 20 } else { 100 };
+    let reps = if quick { 5 } else { 15 };
+    let key = plan::structural_key(&graph, PlanMode::Trace, true);
+
+    let cold_once = || {
+        nnscope::graph::validate::validate(&graph, &fseq).unwrap();
+        let p = Arc::new(plan::compile(&graph, &fseq, PlanMode::Trace, true).unwrap());
+        p.bind(&graph).unwrap()
+    };
+    let warm_cache = Arc::new(PlanCache::new(16));
+    warm_cache.insert(model, key, Arc::new(plan::compile(&graph, &fseq, PlanMode::Trace, true).unwrap()));
+    let hot_once = || {
+        let k = plan::structural_key(&graph, PlanMode::Trace, true);
+        let p = warm_cache.get(model, k).expect("warm cache must hit");
+        p.bind(&graph).unwrap()
+    };
+
+    let time_batch = |f: &dyn Fn() -> nnscope::graph::opt::Prepared| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..batch {
+            let prepared = f();
+            assert!(!prepared.graph.nodes.is_empty());
+        }
+        t0.elapsed().as_secs_f64() / batch as f64
+    };
+    let _ = (time_batch(&cold_once), time_batch(&hot_once)); // warmup
+    let mut cold = Vec::with_capacity(reps);
+    let mut hot = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        cold.push(time_batch(&cold_once));
+        hot.push(time_batch(&hot_once));
+    }
+    let cold_s = Summary::of(&cold).median;
+    let hot_s = Summary::of(&hot).median;
+    let admission_speedup_hot = cold_s / hot_s.max(1e-12);
+
+    let mut table = Table::new("admission: cold compile vs cache hit").header(vec![
+        "path", "median per admission (s)",
+    ]);
+    table.row(vec!["cold (validate+opt+plan+bind)".to_string(), format!("{cold_s:.7}")]);
+    table.row(vec!["hot (lookup+rebind)".to_string(), format!("{hot_s:.7}")]);
+    table.print();
+    common::shape_note(&format!(
+        "{} nodes: hot admission {admission_speedup_hot:.1}x faster \
+         (acceptance bar: strictly faster)",
+        graph.nodes.len()
+    ));
+    assert!(
+        hot_s < cold_s,
+        "hot admission ({hot_s:.7}s) must beat cold ({cold_s:.7}s)"
+    );
+
+    // ---- measurement 2: planned vs per-node-alloc execution ---------------
+    common::section("AOT plans — planned vs legacy per-request execution");
+    let exec_reps = if quick { 8 } else { 30 };
+    let cache = Arc::new(PlanCache::new(16));
+    let planned_eng = Engine::with_plans(&runner, Arc::clone(&cache));
+    let plain_eng = Engine::new(&runner);
+    planned_eng.run(ExecSpec::trace(&graph)).unwrap(); // warm the cache
+    let time_exec = |eng: &Engine| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..exec_reps {
+            let out = eng.run(ExecSpec::trace(&graph)).unwrap();
+            assert!(!out.result.values.is_empty());
+        }
+        t0.elapsed().as_secs_f64() / exec_reps as f64
+    };
+    let _ = (time_exec(&plain_eng), time_exec(&planned_eng)); // warmup
+    let plain_s = time_exec(&plain_eng);
+    let planned_s = time_exec(&planned_eng);
+    let planned_exec_ratio = plain_s / planned_s.max(1e-12);
+    let mut table = Table::new("request wall: legacy vs planned").header(vec![
+        "path", "wall per request (s)",
+    ]);
+    table.row(vec!["legacy (validate+opt each request)".to_string(), format!("{plain_s:.6}")]);
+    table.row(vec!["planned (warm cache)".to_string(), format!("{planned_s:.6}")]);
+    table.print();
+    common::shape_note(&format!(
+        "planned/legacy request throughput ratio {planned_exec_ratio:.2}x"
+    ));
+
+    // ---- measurement 3: hit rate under a repeated-shape burst -------------
+    common::section("AOT plans — repeated-shape co-tenant burst hit rate");
+    let shapes = 4usize;
+    let rounds = if quick { 8 } else { 32 };
+    let burst_cache = Arc::new(PlanCache::new(64));
+    let burst_eng = Engine::with_plans(&runner, Arc::clone(&burst_cache));
+    for round in 0..rounds {
+        for shape in 0..shapes {
+            // same structure per shape, fresh payload per round — the
+            // dashboard-fleet shape
+            let g = probe_graph(&runner, shape * 1000 + round, 1.0 + shape as f32 * 0.25);
+            let out = burst_eng.run(ExecSpec::trace(&g)).unwrap();
+            assert!(!out.result.values.is_empty());
+        }
+    }
+    let s = burst_cache.stats();
+    let plan_hit_rate = s.hits as f64 / (s.hits + s.misses).max(1) as f64;
+    common::shape_note(&format!(
+        "{} submissions, {} hits / {} misses → hit rate {plan_hit_rate:.3}",
+        shapes * rounds,
+        s.hits,
+        s.misses
+    ));
+    assert_eq!(s.misses, shapes as u64, "each shape compiles exactly once");
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("plancache")),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::from(model)),
+        ("graph_nodes", Json::from(graph.nodes.len())),
+        ("admission_cold_s", Json::from(cold_s)),
+        ("admission_hot_s", Json::from(hot_s)),
+        ("admission_speedup_hot", Json::from(admission_speedup_hot)),
+        ("exec_wall_legacy_s", Json::from(plain_s)),
+        ("exec_wall_planned_s", Json::from(planned_s)),
+        ("planned_exec_ratio", Json::from(planned_exec_ratio)),
+        ("plan_hit_rate", Json::from(plan_hit_rate)),
+    ]);
+    std::fs::write("BENCH_plancache.json", json.pretty()).expect("write BENCH_plancache.json");
+    println!("\nwrote BENCH_plancache.json");
+}

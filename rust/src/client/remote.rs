@@ -170,6 +170,19 @@ impl NdifClient {
         Ok(parse(std::str::from_utf8(&body)?)?)
     }
 
+    /// Server metrics snapshot from `/v1/metrics` — per-model queue and
+    /// latency counters plus the `_plan` AOT plan-cache gauges (hits,
+    /// misses, evictions, arena slots). Single-server endpoint; against a
+    /// coordinator use `/v1/fleet/metrics` (see [`NdifClient::fleet_status`]
+    /// for topology).
+    pub fn metrics(&self) -> Result<Json> {
+        let (status, body) = http::get(self.addr, "/v1/metrics")?;
+        if status != 200 {
+            return Err(anyhow!("metrics endpoint returned {status}"));
+        }
+        Ok(parse(std::str::from_utf8(&body)?)?)
+    }
+
     /// Fetch hosted model metadata — the NDIF "setup" step measured by
     /// Fig. 6a (no weights move; this is why NDIF setup time is flat).
     pub fn models(&self) -> Result<Vec<String>> {

@@ -618,6 +618,8 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
         failed: i64,
         merged_batches: i64,
         queue_depth: i64,
+        plan_hits: i64,
+        plan_misses: i64,
         latency: Vec<crate::obs::HistSnapshot>,
     }
     let mut agg: BTreeMap<String, ModelAgg> = BTreeMap::new();
@@ -644,6 +646,8 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
                 failed: 0,
                 merged_batches: 0,
                 queue_depth: 0,
+                plan_hits: 0,
+                plan_misses: 0,
                 latency: vec![crate::obs::HistSnapshot::default(); KINDS.len()],
             });
             e.enqueued += m.get("enqueued").as_i64().unwrap_or(0);
@@ -651,6 +655,10 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
             e.failed += m.get("failed").as_i64().unwrap_or(0);
             e.merged_batches += m.get("merged_batches").as_i64().unwrap_or(0);
             e.queue_depth += m.get("queue_depth").as_i64().unwrap_or(0);
+            // AOT plan-cache admission outcomes (absent pre-plan replicas
+            // contribute zero)
+            e.plan_hits += m.get("plan").get("hits").as_i64().unwrap_or(0);
+            e.plan_misses += m.get("plan").get("misses").as_i64().unwrap_or(0);
             for (slot, kind) in e.latency.iter_mut().zip(KINDS.iter()) {
                 if let Some(h) = crate::obs::HistSnapshot::from_json(m.get("latency").get(kind)) {
                     slot.merge(&h);
@@ -680,6 +688,13 @@ fn fleet_metrics_endpoint(state: &Arc<CoordState>, path: &str) -> Response {
                 ("failed", Json::from(a.failed)),
                 ("merged_batches", Json::from(a.merged_batches)),
                 ("queue_depth", Json::from(a.queue_depth)),
+                (
+                    "plan",
+                    Json::obj(vec![
+                        ("hits", Json::from(a.plan_hits)),
+                        ("misses", Json::from(a.plan_misses)),
+                    ]),
+                ),
                 (
                     "latency",
                     Json::obj(

@@ -22,9 +22,11 @@
 //! profiler/phase attribution (`profile::set_step`) are scoped to one
 //! request even when eight streams share a tick.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
-use crate::graph::{validate::validate_stream, InterventionGraph};
+use crate::graph::{plan::ExecPlan, validate::validate_stream, InterventionGraph};
 use crate::interp::{Executor, StateView, StepOutcome};
 use crate::models::generate::{advance_window, argmax_row, Generation};
 use crate::models::ModelRunner;
@@ -47,14 +49,32 @@ pub struct RunnerStream {
     steps: usize,
     step: usize,
     gen: Generation,
+    /// AOT plan the graph was bound from: every step's executor is built
+    /// from its precomputed schedule and arena instead of rederiving them.
+    plan: Option<Arc<ExecPlan>>,
 }
 
 impl RunnerStream {
     /// Validate and admit a stream. All checks are paid here, once —
     /// `step()` re-enters the graph prevalidated.
     pub fn new(graph: InterventionGraph, runner: &ModelRunner, steps: usize) -> Result<RunnerStream> {
+        RunnerStream::with_plan(graph, runner, steps, None)
+    }
+
+    /// Admit a plan-bound stream: the stream-rule validation already
+    /// happened when the plan's structure first compiled, so only the
+    /// cheap geometry guards run here; each decode step then executes on
+    /// a planned executor. With `plan` unset this is exactly [`Self::new`].
+    pub(crate) fn with_plan(
+        graph: InterventionGraph,
+        runner: &ModelRunner,
+        steps: usize,
+        plan: Option<Arc<ExecPlan>>,
+    ) -> Result<RunnerStream> {
         let fseq = runner.manifest.forward_sequence();
-        validate_stream(&graph, &fseq)?;
+        if plan.is_none() {
+            validate_stream(&graph, &fseq)?;
+        }
         if graph.shards > 1 {
             return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
         }
@@ -80,6 +100,7 @@ impl RunnerStream {
             steps,
             step: 0,
             gen: Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() },
+            plan,
         })
     }
 
@@ -96,7 +117,10 @@ impl RunnerStream {
         // the decode step index (no-op when the profiler is disarmed)
         profile::set_step(self.step as i64);
         let res = (|| {
-            let mut ex = Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?;
+            let mut ex = match &self.plan {
+                Some(p) => Executor::planned(&self.graph, &self.fseq, StateView::new(), p),
+                None => Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?,
+            };
             ex.run_pre()?;
             let tf = (timed || profiled).then(std::time::Instant::now);
             let logits = runner.forward(&self.ctx, &mut ex)?;
@@ -155,6 +179,8 @@ pub struct KvStream {
     steps: usize,
     step: usize,
     gen: Generation,
+    /// AOT plan the graph was bound from (see [`RunnerStream::plan`]).
+    plan: Option<Arc<ExecPlan>>,
 }
 
 impl KvStream {
@@ -163,8 +189,22 @@ impl KvStream {
     /// window); the stream must fit the model context: `prompt_len +
     /// steps − 1 ≤ seq` (the final generated token is never fed back).
     pub fn new(graph: InterventionGraph, model: &NativeModel, steps: usize) -> Result<KvStream> {
+        KvStream::with_plan(graph, model, steps, None)
+    }
+
+    /// Admit a plan-bound KV stream: stream-rule validation is skipped on
+    /// a plan hit (the structure already passed it at compile time); the
+    /// geometry/vocab guards below are payload-dependent and always run.
+    pub(crate) fn with_plan(
+        graph: InterventionGraph,
+        model: &NativeModel,
+        steps: usize,
+        plan: Option<Arc<ExecPlan>>,
+    ) -> Result<KvStream> {
         let fseq = model.manifest().forward_sequence();
-        validate_stream(&graph, &fseq)?;
+        if plan.is_none() {
+            validate_stream(&graph, &fseq)?;
+        }
         if graph.shards > 1 {
             return Err(anyhow!("streaming decode is unsharded (shards = {})", graph.shards));
         }
@@ -202,6 +242,7 @@ impl KvStream {
             steps,
             step: 0,
             gen: Generation { tokens: Vec::with_capacity(steps), scores: Vec::new() },
+            plan,
         })
     }
 
@@ -216,7 +257,10 @@ impl KvStream {
         let profiled = profile::armed();
         profile::set_step(self.step as i64);
         let res = (|| {
-            let mut ex = Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?;
+            let mut ex = match &self.plan {
+                Some(p) => Executor::planned(&self.graph, &self.fseq, StateView::new(), p),
+                None => Executor::prevalidated(&self.graph, &self.fseq, StateView::new())?,
+            };
             ex.run_pre()?;
             let tf = (timed || profiled).then(std::time::Instant::now);
             let phase = if self.step == 0 { "prefill" } else { "decode" };

@@ -36,10 +36,17 @@
 //! ```
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::graph::{opt::OptReport, GraphResult, InterventionGraph};
+use crate::graph::{
+    opt::{OptReport, Prepared},
+    plan::{self, PlanMode},
+    plan_cache::PlanCache,
+    validate::{validate_stream, validate_with_state},
+    GraphResult, InterventionGraph,
+};
 use crate::interp::{self, StateView, StepOutcome};
 use crate::models::generate::Generation;
 use crate::models::ModelRunner;
@@ -104,13 +111,58 @@ pub struct ExecOutcome {
 }
 
 /// The unified execution door: binds a loaded model to [`ExecSpec`]s.
+/// With [`Engine::with_plans`] every run goes through the AOT plan cache:
+/// a structural hit skips validation, the optimization pipeline, and
+/// scheduling prep, paying only the constant rebind.
 pub struct Engine<'r> {
     runner: &'r ModelRunner,
+    plans: Option<Arc<PlanCache>>,
 }
 
 impl<'r> Engine<'r> {
     pub fn new(runner: &'r ModelRunner) -> Engine<'r> {
-        Engine { runner }
+        Engine { runner, plans: None }
+    }
+
+    /// An engine whose runs are admitted through `plans` (the shared AOT
+    /// plan cache). Session-mode graphs still revalidate per run — state-
+    /// key availability is per-request state, not structure — but reuse
+    /// the cached template/schedule/arena like everything else.
+    pub fn with_plans(runner: &'r ModelRunner, plans: Arc<PlanCache>) -> Engine<'r> {
+        Engine { runner, plans: Some(plans) }
+    }
+
+    /// Look up or compile the plan for `graph` and bind it. `validated`
+    /// says whether the caller already validated this submission; on a
+    /// cache miss an unvalidated graph is validated before compiling, so
+    /// cold admission rejects exactly what the pre-plan path rejected.
+    fn prepared_for(
+        &self,
+        graph: &InterventionGraph,
+        mode: PlanMode,
+        optimize: bool,
+        cache: &PlanCache,
+        validated: bool,
+    ) -> Result<Prepared> {
+        let fseq = self.runner.manifest.forward_sequence();
+        let key = plan::structural_key(graph, mode, optimize);
+        let plan = match cache.get(&graph.model, key) {
+            Some(p) => p,
+            None => {
+                if !validated {
+                    match mode {
+                        PlanMode::Stream => validate_stream(graph, &fseq)?,
+                        _ => {
+                            validate_with_state(graph, &fseq, &Default::default())?;
+                        }
+                    }
+                }
+                let p = Arc::new(plan::compile(graph, &fseq, mode, optimize)?);
+                cache.insert(&graph.model, key, Arc::clone(&p));
+                p
+            }
+        };
+        plan.bind(graph)
     }
 
     /// Execute one spec. Streaming specs decode to completion (every
@@ -119,6 +171,29 @@ impl<'r> Engine<'r> {
     pub fn run(&self, spec: ExecSpec) -> Result<ExecOutcome> {
         if spec.steps.is_some() {
             return self.run_streaming(spec, &mut |_, _| true);
+        }
+        if let Some(cache) = self.plans.clone() {
+            let uses_state = spec.graph.uses_state() || !spec.state.is_empty();
+            let mode = if uses_state { PlanMode::Session } else { PlanMode::Trace };
+            // session runs always revalidate (key availability is not
+            // structural); trace hits skip validation entirely
+            let validated = if uses_state {
+                let keys = spec.state.keys().cloned().collect();
+                validate_with_state(spec.graph, &self.runner.manifest.forward_sequence(), &keys)?;
+                true
+            } else {
+                false
+            };
+            let prepared =
+                self.prepared_for(spec.graph, mode, spec.optimize, &cache, validated)?;
+            let (res, state_updates) =
+                interp::execute_view_prepared(&prepared, self.runner, spec.state)?;
+            return Ok(ExecOutcome {
+                result: prepared.remap_values(res),
+                state_updates,
+                report: prepared.report,
+                generation: None,
+            });
         }
         let (result, state_updates, report) =
             interp::execute_full(spec.graph, self.runner, spec.state, spec.optimize)?;
@@ -140,6 +215,23 @@ impl<'r> Engine<'r> {
             return Err(anyhow!(
                 "streaming decode does not take session state (validation rule 8)"
             ));
+        }
+        if let Some(cache) = self.plans.clone() {
+            let prepared =
+                self.prepared_for(spec.graph, PlanMode::Stream, spec.optimize, &cache, false)?;
+            let report = prepared.report;
+            let mut wrapped = |step: usize, mut out: StepOutcome| {
+                out.values = prepared.remap_values(out.values);
+                sink(step, out)
+            };
+            let gen =
+                interp::execute_stream_prepared(&prepared, self.runner, steps, &mut wrapped)?;
+            return Ok(ExecOutcome {
+                result: GraphResult { values: BTreeMap::new() },
+                state_updates: BTreeMap::new(),
+                report,
+                generation: Some(gen),
+            });
         }
         let (gen, report) =
             interp::execute_stream_opt(spec.graph, self.runner, steps, spec.optimize, sink)?;
@@ -163,11 +255,43 @@ impl<'r> Engine<'r> {
     ) -> Result<Vec<GraphResult>> {
         let mut results = Vec::with_capacity(graphs.len());
         for (i, g) in graphs.iter().enumerate() {
-            let r = interp::execute_stateful_inner(g, self.runner, state, optimize)
-                .map_err(|e| anyhow!("session trace {i}: {e}"))?;
+            let r = match self.plans.clone() {
+                Some(cache) => self
+                    .session_step_planned(g, state, optimize, &cache)
+                    .map_err(|e| anyhow!("session trace {i}: {e}"))?,
+                None => interp::execute_stateful_inner(g, self.runner, state, optimize)
+                    .map_err(|e| anyhow!("session trace {i}: {e}"))?,
+            };
             results.push(r);
         }
         Ok(results)
+    }
+
+    /// One session trace through the plan cache: snapshot the loaded keys,
+    /// revalidate against them (always — key availability is per-request
+    /// state), bind the cached or freshly compiled plan, execute, commit
+    /// updates on success.
+    fn session_step_planned(
+        &self,
+        g: &InterventionGraph,
+        state: &mut StateView,
+        optimize: bool,
+        cache: &PlanCache,
+    ) -> Result<GraphResult> {
+        let mut view = StateView::new();
+        for key in g.state_loads() {
+            if let Some(t) = state.get(&key) {
+                view.insert(key, t.clone());
+            }
+        }
+        let keys = view.keys().cloned().collect();
+        validate_with_state(g, &self.runner.manifest.forward_sequence(), &keys)?;
+        let prepared = self.prepared_for(g, PlanMode::Session, optimize, cache, true)?;
+        let (res, updates) = interp::execute_view_prepared(&prepared, self.runner, view)?;
+        for (k, v) in updates {
+            state.insert(k, v);
+        }
+        Ok(prepared.remap_values(res))
     }
 }
 

@@ -33,6 +33,8 @@
 
 pub mod node;
 pub mod opt;
+pub mod plan;
+pub mod plan_cache;
 pub mod serde;
 pub mod validate;
 

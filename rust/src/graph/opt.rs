@@ -163,12 +163,17 @@ pub struct Prepared {
     pub save_remap: Option<BTreeMap<NodeId, NodeId>>,
     /// Optimization report (`None` when the graph was not rewritten).
     pub report: Option<OptReport>,
+    /// The AOT plan this graph was bound from, when admission went
+    /// through the plan cache ([`super::plan`]): carries the precomputed
+    /// schedule and arena assignment so the executor skips scheduling
+    /// prep and allocates values into planned slots.
+    pub plan: Option<std::sync::Arc<super::plan::ExecPlan>>,
 }
 
 impl Prepared {
     /// Wrap a graph for unoptimized execution.
     pub fn raw(graph: InterventionGraph) -> Prepared {
-        Prepared { graph, save_remap: None, report: None }
+        Prepared { graph, save_remap: None, report: None, plan: None }
     }
 
     /// Re-key executed values back into submitted-graph ids (identity for
@@ -207,6 +212,7 @@ pub fn prepare(
         graph: o.graph,
         save_remap: Some(o.save_remap),
         report: Some(o.report),
+        plan: None,
     })
 }
 
@@ -218,6 +224,50 @@ pub fn prepare(
 /// mid-forward-pass. A graph that would execute cleanly never fails to
 /// optimize.
 pub fn optimize(g: &InterventionGraph, forward_sequence: &[String]) -> Result<Optimized> {
+    let rw = rewrite(g, forward_sequence, true)?;
+    let mut save_remap = BTreeMap::new();
+    for node in &g.nodes {
+        if matches!(node.op, Op::Save { .. } | Op::StepHook { .. }) {
+            save_remap.insert(node.id, rw.new_id[node.id]);
+        }
+    }
+    let graph = InterventionGraph {
+        model: g.model.clone(),
+        tokens: g.tokens.clone(),
+        batch: g.batch,
+        nodes: rw.nodes,
+        targets: g.targets.clone(),
+        batch_group: g.batch_group,
+        shards: g.shards,
+    };
+    Ok(Optimized { graph, save_remap, report: rw.report })
+}
+
+/// The raw output of the pass pipeline before graph assembly: compacted
+/// nodes, the `submitted id → compacted id` table (`usize::MAX` for
+/// eliminated nodes), and the per-pass report. Shared by [`optimize`]
+/// (payload-keyed CSE) and the AOT plan compiler
+/// ([`super::plan::compile`], structure-only CSE).
+pub(crate) struct Rewritten {
+    /// Compacted, renumbered nodes.
+    pub(crate) nodes: Vec<Node>,
+    /// `submitted id → compacted id`; `usize::MAX` for eliminated nodes.
+    pub(crate) new_id: Vec<usize>,
+    /// What each pass did.
+    pub(crate) report: OptReport,
+}
+
+/// Run all four passes (DCE → fold → DCE → CSE → fuse) and renumber.
+/// `payload_consts` controls whether CSE may merge `Const` nodes by
+/// payload: admission optimization says yes; the plan compiler says no,
+/// so the rewritten *structure* stays a pure function of the submitted
+/// structure (two payload-variants of one shape must produce identical
+/// templates).
+pub(crate) fn rewrite(
+    g: &InterventionGraph,
+    forward_sequence: &[String],
+    payload_consts: bool,
+) -> Result<Rewritten> {
     let n = g.nodes.len();
     let mut report = OptReport { nodes_before: n, ..OptReport::default() };
 
@@ -239,7 +289,7 @@ pub fn optimize(g: &InterventionGraph, forward_sequence: &[String]) -> Result<Op
     report.dce_removed += dce(&ops, &mut alive);
 
     // Pass 3: CSE (redirects consumers onto representatives).
-    report.cse_merged = cse(&mut ops, &mut alive, &points);
+    report.cse_merged = cse(&mut ops, &mut alive, &points, payload_consts);
 
     // Pass 4: fusion of single-use kernel patterns.
     report.fused = fuse(&mut ops, &mut alive);
@@ -260,24 +310,7 @@ pub fn optimize(g: &InterventionGraph, forward_sequence: &[String]) -> Result<Op
         nodes.push(Node { id: nodes.len(), op });
     }
     report.nodes_after = nodes.len();
-
-    let mut save_remap = BTreeMap::new();
-    for node in &g.nodes {
-        if matches!(node.op, Op::Save { .. } | Op::StepHook { .. }) {
-            save_remap.insert(node.id, new_id[node.id]);
-        }
-    }
-
-    let graph = InterventionGraph {
-        model: g.model.clone(),
-        tokens: g.tokens.clone(),
-        batch: g.batch,
-        nodes,
-        targets: g.targets.clone(),
-        batch_group: g.batch_group,
-        shards: g.shards,
-    };
-    Ok(Optimized { graph, save_remap, report })
+    Ok(Rewritten { nodes, new_id, report })
 }
 
 // ---------------------------------------------------------------------------
@@ -532,7 +565,10 @@ fn fold(ops: &mut [Op], alive: &[bool]) -> Result<usize> {
 /// Structural hash-cons key for CSE candidates; `None` for ops that must
 /// not merge (effects, `Grad` barriers). Getter keys use the normalized
 /// forward point so `input`-of-layer-k and `output`-of-layer-(k-1) merge.
-fn cse_key(op: &Op, point: Option<usize>) -> Option<String> {
+/// With `payload_consts` unset, `Const` nodes never key (the plan
+/// compiler's parametric mode: merging by payload would make the
+/// rewritten structure payload-dependent).
+fn cse_key(op: &Op, point: Option<usize>, payload_consts: bool) -> Option<String> {
     let mut k = String::new();
     let deps = op.deps();
     match op {
@@ -542,6 +578,7 @@ fn cse_key(op: &Op, point: Option<usize>) -> Option<String> {
         | Op::StepHook { .. }
         | Op::StoreState { .. }
         | Op::Grad { .. } => return None,
+        Op::Const { .. } if !payload_consts => return None,
         Op::Getter { .. } => {
             write!(k, "get@{}", point.expect("getter point normalized")).unwrap();
             return Some(k);
@@ -596,7 +633,7 @@ fn cse_key(op: &Op, point: Option<usize>) -> Option<String> {
 /// are redirected to the first (or, for getters, the latest
 /// non-interfering) representative, and the duplicate dies. Returns the
 /// number of merged nodes.
-fn cse(ops: &mut [Op], alive: &mut [bool], points: &[Option<usize>]) -> usize {
+fn cse(ops: &mut [Op], alive: &mut [bool], points: &[Option<usize>], payload_consts: bool) -> usize {
     let n = ops.len();
     // setters by normalized point, for the getter interference rule:
     // a getter must not merge across a setter writing its point, because
@@ -616,7 +653,7 @@ fn cse(ops: &mut [Op], alive: &mut [bool], points: &[Option<usize>]) -> usize {
         }
         // route this node's edges through earlier merges first
         ops[i].map_deps(|d| target[d]);
-        let Some(key) = cse_key(&ops[i], points[i]) else {
+        let Some(key) = cse_key(&ops[i], points[i], payload_consts) else {
             continue;
         };
         match repr.get(&key).copied() {

@@ -1,0 +1,838 @@
+//! Ahead-of-time execution plans for intervention graphs.
+//!
+//! The paper's decoupling claim — the intervention graph separates
+//! experimental design from model runtime — is what makes ahead-of-time
+//! compilation of *hot graph shapes* possible: a dashboard or logit-lens
+//! sweep submits the same graph shape thousands of times with different
+//! constant payloads, and everything the admission compiler and executor
+//! derive from the graph except those payloads (validation verdict,
+//! optimization decisions, per-hook schedule, value lifetimes) is a pure
+//! function of the graph's *structure*. This module captures that
+//! derivation once as an [`ExecPlan`]:
+//!
+//! - [`structural_key`] hashes a graph's structure, masking constant
+//!   payloads (a `Const`'s `data` values) while keeping everything that
+//!   changes execution shape: op kinds, dependency wiring, module points,
+//!   slice ranges, scale factors, `Const` dims (and element count),
+//!   batch/shard/token geometry, and the execution mode. Two submissions
+//!   that differ only in constant payloads collide; any structural
+//!   difference diverges.
+//! - [`compile`] runs the PR 5 pipeline in *parametric* form — identical
+//!   passes, but CSE never merges `Const` nodes by payload — producing a
+//!   template graph whose constants are holes, plus the recipe
+//!   ([`ExecPlan::bind`]) to re-evaluate each hole from a freshly
+//!   submitted graph. Binding is payload-only: validate, optimize, and
+//!   scheduling prep are all skipped on a plan-cache hit.
+//! - [`plan_memory`] assigns every interpreter value an arena slot by
+//!   last use (the §B.1 freed-at-zero-listeners rule, simulated ahead of
+//!   time), so a planned executor reuses slots in place — a chain of
+//!   fused kernels runs in O(live values) slots instead of O(nodes).
+//!
+//! Plans are cached per model by [`super::plan_cache::PlanCache`]; the
+//! invalidation contract (model swap, optimizer-flag change) is
+//! documented there and in `docs/ARCHITECTURE.md`.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::opt::{self, OptReport, Prepared};
+use super::{InterventionGraph, Node, NodeId, Op, Port};
+use crate::tensor::Tensor;
+
+/// Which execution mode a plan was compiled for. The mode participates in
+/// the structural key because the three admission paths validate against
+/// different rule sets (`StepHook` is stream-only, `LoadState`/`StoreState`
+/// are session-only), so a hit must never cross modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// One-shot trace (`POST /v1/trace`).
+    Trace,
+    /// Streaming generation (`POST /v1/stream`).
+    Stream,
+    /// A trace inside a stateful session (`POST /v1/session`).
+    Session,
+}
+
+impl PlanMode {
+    fn tag(self) -> u64 {
+        match self {
+            PlanMode::Trace => 0,
+            PlanMode::Stream => 1,
+            PlanMode::Session => 2,
+        }
+    }
+}
+
+/// The executor's node ordering, computed once per plan: pre-phase nodes,
+/// per-hook sub-graphs keyed by forward-sequence position (§B.1), and
+/// post-phase nodes. Mirrors exactly what `interp::Executor` derives at
+/// construction — the executor itself delegates here, so the two can
+/// never drift.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOrder {
+    /// Nodes with no model dependencies, run before the forward pass.
+    pub pre: Vec<NodeId>,
+    /// `fwd[k]` = nodes to run at the hook of forward position `k`.
+    pub fwd: Vec<Vec<NodeId>>,
+    /// Nodes depending on gradients, run after the backward pass.
+    pub post: Vec<NodeId>,
+}
+
+/// Compute the pre/fwd/post schedule for `graph` against a model's
+/// forward sequence (§B.1: each sub-graph keyed by the *latest* module
+/// activation it transitively depends on; setters pinned to the hook of
+/// the module they write). Errors exactly when executor construction
+/// would: unknown modules, input-of-the-first-module getters.
+pub fn execution_order(
+    graph: &InterventionGraph,
+    forward_sequence: &[String],
+) -> Result<ExecOrder> {
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Phase {
+        Pre,
+        Fwd(usize),
+        Post,
+    }
+
+    let order: HashMap<&str, usize> = forward_sequence
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (m.as_str(), i))
+        .collect();
+    let point_of = |module: &str, port: Port| -> Result<usize> {
+        let k = *order
+            .get(module)
+            .ok_or_else(|| anyhow!("unknown module {module}"))?;
+        match port {
+            Port::Output => Ok(k),
+            Port::Input => {
+                if k == 0 {
+                    Err(anyhow!("module {module} has no observable input (it is first)"))
+                } else {
+                    Ok(k - 1)
+                }
+            }
+        }
+    };
+
+    let n = graph.nodes.len();
+    let mut phase = vec![Phase::Pre; n];
+    for node in &graph.nodes {
+        let mut p = match &node.op {
+            Op::Getter { module, port } => Phase::Fwd(point_of(module, *port)?),
+            Op::Grad { .. } => Phase::Post,
+            _ => Phase::Pre,
+        };
+        for d in node.op.deps() {
+            p = match (p, phase[d]) {
+                (Phase::Post, _) | (_, Phase::Post) => Phase::Post,
+                (Phase::Fwd(a), Phase::Fwd(b)) => Phase::Fwd(a.max(b)),
+                (Phase::Fwd(a), Phase::Pre) | (Phase::Pre, Phase::Fwd(a)) => Phase::Fwd(a),
+                (Phase::Pre, Phase::Pre) => Phase::Pre,
+            };
+        }
+        // setters run at the hook of the module they write
+        if let Op::Setter { module, port, .. } = &node.op {
+            p = Phase::Fwd(point_of(module, *port)?);
+        }
+        phase[node.id] = p;
+    }
+
+    let mut out = ExecOrder {
+        pre: Vec::new(),
+        fwd: vec![Vec::new(); forward_sequence.len()],
+        post: Vec::new(),
+    };
+    for node in &graph.nodes {
+        match phase[node.id] {
+            Phase::Pre => out.pre.push(node.id),
+            Phase::Fwd(k) => out.fwd[k].push(node.id),
+            Phase::Post => out.post.push(node.id),
+        }
+    }
+    Ok(out)
+}
+
+/// Per-node lock flags: `Save`/`StepHook` lock their dependency's value
+/// for return to the user (LockProtocol), exempting it from the
+/// freed-at-zero-listeners rule.
+pub fn locked_flags(graph: &InterventionGraph) -> Vec<bool> {
+    let mut locked = vec![false; graph.nodes.len()];
+    for node in &graph.nodes {
+        if let Op::Save { arg } | Op::StepHook { arg } = node.op {
+            locked[arg] = true;
+        }
+    }
+    locked
+}
+
+/// A liveness-derived arena assignment: which slot each node's value
+/// occupies, and how many slots the arena needs in total.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryPlan {
+    /// `slot_of[id]` = the arena slot node `id`'s value lives in; `None`
+    /// for values that are never materialized (dead on arrival: no
+    /// listeners and not locked).
+    pub slot_of: Vec<Option<usize>>,
+    /// Arena size; always ≤ the node count, and equal to the executor's
+    /// peak simultaneously-held value count for this graph.
+    pub n_slots: usize,
+}
+
+/// Simulate the executor's §B.1 memory discipline over the planned node
+/// order and assign each value the lowest slot that is free at its birth.
+/// Within one node, dependency slots are released *before* the node's own
+/// value is placed — a single-listener chain (the shape the fusion pass
+/// produces) therefore reuses one slot in place down the whole chain.
+///
+/// The simulation mirrors the interpreter exactly: each dependency edge
+/// consumes one listener claim (a node listed twice decrements twice), a
+/// value is freed when its claims reach zero unless a `Save`/`StepHook`
+/// locked it, and a node whose value nothing will ever read (zero
+/// listeners, unlocked) is never allocated at all.
+pub fn plan_memory(graph: &InterventionGraph, order: &ExecOrder, locked: &[bool]) -> MemoryPlan {
+    let n = graph.nodes.len();
+    let init = graph.listener_counts();
+    let mut listeners = init.clone();
+    let mut slot_of: Vec<Option<usize>> = vec![None; n];
+    let mut resident = vec![false; n];
+    let mut free: BTreeSet<usize> = BTreeSet::new();
+    let mut n_slots = 0usize;
+
+    // Linear execution order: pre-phase, each hook in forward order, then
+    // the post phase (gradient values are injected before the remaining
+    // post nodes run — same order as `Executor::run_post`).
+    let mut linear: Vec<NodeId> = Vec::with_capacity(n);
+    linear.extend(order.pre.iter().copied());
+    for hook in &order.fwd {
+        linear.extend(hook.iter().copied());
+    }
+    linear.extend(
+        order
+            .post
+            .iter()
+            .copied()
+            .filter(|&id| matches!(graph.nodes[id].op, Op::Grad { .. })),
+    );
+    linear.extend(
+        order
+            .post
+            .iter()
+            .copied()
+            .filter(|&id| !matches!(graph.nodes[id].op, Op::Grad { .. })),
+    );
+
+    for &id in &linear {
+        // release dependency claims first (the executor's take_dep runs
+        // before its put), so this node may inherit a dep's slot in place
+        for d in graph.nodes[id].op.deps() {
+            listeners[d] = listeners[d].saturating_sub(1);
+            if listeners[d] == 0 && !locked[d] && resident[d] {
+                resident[d] = false;
+                free.insert(slot_of[d].expect("resident value has a slot"));
+            }
+        }
+        // dead-on-arrival values are never placed (mirrors `put`)
+        if init[id] > 0 || locked[id] {
+            let s = free.pop_first().unwrap_or_else(|| {
+                let s = n_slots;
+                n_slots += 1;
+                s
+            });
+            slot_of[id] = Some(s);
+            resident[id] = true;
+        }
+    }
+    MemoryPlan { slot_of, n_slots }
+}
+
+/// 64-bit FNV-1a accumulator for the structural key.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        for b in s.bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn f32bits(&mut self, v: f32) {
+        self.u64(v.to_bits() as u64);
+    }
+}
+
+/// Hash everything about `graph` that determines the outcome of
+/// validation, optimization, scheduling, and memory planning — and
+/// nothing that doesn't.
+///
+/// Masked (rebound per submission by [`ExecPlan::bind`]): `Const`
+/// payload values, the token payload, target *values*, and the saved-id
+/// space (normalized by construction: the save-remap is itself a pure
+/// function of structure).
+///
+/// Hashed: the mode and optimizer flag, batch/shard geometry, token
+/// count, batch-group placement, target presence and length, and per
+/// node the op kind, every dependency edge, module points, slice ranges,
+/// reshape dims, scale/fill factors (bit-exact: a factor is part of the
+/// *computation*, not a payload), `Const` dims **and element count** (so
+/// a malformed `data.len() != prod(dims)` graph hashes consistently and
+/// both cold and hot admission reject it identically), and state keys.
+///
+/// The model name is deliberately *not* hashed — it is the cache's outer
+/// key, so model-swap invalidation can evict by name.
+pub fn structural_key(graph: &InterventionGraph, mode: PlanMode, optimize: bool) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(mode.tag());
+    h.u64(optimize as u64);
+    h.usize(graph.batch);
+    h.usize(graph.shards);
+    h.usize(graph.tokens.len());
+    match graph.batch_group {
+        None => h.u64(0),
+        Some((off, rows)) => {
+            h.u64(1);
+            h.usize(off);
+            h.usize(rows);
+        }
+    }
+    match &graph.targets {
+        None => h.u64(0),
+        Some(t) => {
+            h.u64(1);
+            h.usize(t.len());
+        }
+    }
+    h.usize(graph.nodes.len());
+    for node in &graph.nodes {
+        h.str(node.op.tag());
+        let deps = node.op.deps();
+        h.usize(deps.len());
+        for d in deps {
+            h.usize(d);
+        }
+        match &node.op {
+            Op::Getter { module, port } | Op::Setter { module, port, .. } => {
+                h.str(module);
+                h.u64(matches!(port, Port::Output) as u64);
+            }
+            Op::Grad { module } => h.str(module),
+            Op::Const { dims, data } => {
+                h.usize(dims.len());
+                for &d in dims {
+                    h.usize(d);
+                }
+                h.usize(data.len()); // payload masked, shape kept
+            }
+            Op::Slice { ranges, .. } | Op::Assign { ranges, .. } => {
+                h.str(&format!("{ranges:?}"));
+            }
+            Op::Fill { ranges, value, .. } => {
+                h.str(&format!("{ranges:?}"));
+                h.f32bits(*value);
+            }
+            Op::Scale { factor, .. }
+            | Op::FusedScaleAdd { factor, .. }
+            | Op::FusedScaleSoftmax { factor, .. } => h.f32bits(*factor),
+            Op::Reshape { dims, .. } => {
+                h.usize(dims.len());
+                for &d in dims {
+                    h.usize(d);
+                }
+            }
+            Op::MeanAxis { axis, .. } => h.usize(*axis),
+            Op::LogitDiff { target, foil, .. } => {
+                h.usize(*target);
+                h.usize(*foil);
+            }
+            Op::LoadState { key } | Op::StoreState { key, .. } => h.str(key),
+            Op::Add { .. }
+            | Op::Sub { .. }
+            | Op::Mul { .. }
+            | Op::Matmul { .. }
+            | Op::Gelu { .. }
+            | Op::Softmax { .. }
+            | Op::Argmax { .. }
+            | Op::Mean { .. }
+            | Op::Sum { .. }
+            | Op::Transpose { .. }
+            | Op::Save { .. }
+            | Op::StepHook { .. }
+            | Op::FusedMatmulGelu { .. } => {}
+        }
+    }
+    h.0
+}
+
+/// A compiled, reusable execution plan for one graph structure: the
+/// optimized template with constant holes, the rebind recipe, the
+/// executor schedule, and the arena assignment. Immutable once built —
+/// cache hits share it behind an `Arc` and bind per submission.
+#[derive(Debug)]
+pub struct ExecPlan {
+    /// The optimized (or raw, under `--no-opt`) graph whose constant
+    /// payloads get re-stamped at bind time.
+    template: InterventionGraph,
+    /// `submitted id → template id` for every `Save`/`StepHook` node
+    /// (`None` when compiled without optimization).
+    save_remap: Option<BTreeMap<NodeId, NodeId>>,
+    /// What the parametric pipeline did (`None` without optimization).
+    report: Option<OptReport>,
+    /// Pre/per-hook/post schedule of the template.
+    order: ExecOrder,
+    /// Lock flags of the template (Save/StepHook args).
+    locked: Vec<bool>,
+    /// Liveness-derived arena assignment for the template.
+    memory: Arc<MemoryPlan>,
+    /// `(template const id, submitted source id)` pairs: each template
+    /// `Const` re-evaluates from the submitted graph's subtree at bind.
+    consts: Vec<(NodeId, NodeId)>,
+    /// Ascending submitted-graph node ids to evaluate at bind time (the
+    /// transitive constant closure; all pure with `Const` leaves).
+    fold_nodes: Vec<NodeId>,
+    /// Node count a bindable submission must have.
+    n_submitted: usize,
+    /// The structural key this plan was compiled under.
+    key: u64,
+    /// The execution mode this plan was compiled for.
+    mode: PlanMode,
+}
+
+impl ExecPlan {
+    /// The structural key this plan was compiled under.
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// The execution mode this plan was compiled for.
+    pub fn mode(&self) -> PlanMode {
+        self.mode
+    }
+
+    /// The optimization report of the parametric compile (`None` when the
+    /// plan wraps a raw graph).
+    pub fn report(&self) -> Option<OptReport> {
+        self.report
+    }
+
+    /// The template's executor schedule.
+    pub fn order(&self) -> &ExecOrder {
+        &self.order
+    }
+
+    /// The template's lock flags.
+    pub fn locked(&self) -> &[bool] {
+        &self.locked
+    }
+
+    /// The template's arena assignment.
+    pub fn memory(&self) -> &Arc<MemoryPlan> {
+        &self.memory
+    }
+
+    /// The template graph (constants hold the payloads of the compile-time
+    /// submission until [`ExecPlan::bind`] re-stamps them).
+    pub fn template(&self) -> &InterventionGraph {
+        &self.template
+    }
+
+    /// Arena slot count of the planned executor.
+    pub fn slots(&self) -> usize {
+        self.memory.n_slots
+    }
+
+    /// How many template values actually get materialized (nodes with an
+    /// arena slot) — the numerator of the slots-per-value gauge.
+    pub fn planned_values(&self) -> usize {
+        self.memory.slot_of.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Rebind this plan against a freshly submitted graph with the same
+    /// structure: re-evaluate the constant closure with the submission's
+    /// payloads, stamp the template's constant holes, and carry over the
+    /// request payloads (tokens, targets, batch group). This is the whole
+    /// cost of a plan-cache hit — validation, optimization passes, and
+    /// scheduling prep are all skipped.
+    ///
+    /// The caller guarantees the submission's structural key matches the
+    /// plan's; shape guards here are defense in depth, not a contract.
+    pub fn bind(self: &Arc<Self>, graph: &InterventionGraph) -> Result<Prepared> {
+        if graph.nodes.len() != self.n_submitted {
+            return Err(anyhow!(
+                "plan bind: graph has {} nodes, plan expects {}",
+                graph.nodes.len(),
+                self.n_submitted
+            ));
+        }
+        if graph.model != self.template.model {
+            return Err(anyhow!(
+                "plan bind: graph targets model '{}', plan was compiled for '{}'",
+                graph.model,
+                self.template.model
+            ));
+        }
+        // Evaluate the constant closure bottom-up with the submission's
+        // payloads. Every failure condition of `eval_pure` is shape-
+        // dependent, and shapes are structural — so a structure that
+        // compiled cleanly binds cleanly.
+        let mut val: HashMap<NodeId, Tensor> = HashMap::with_capacity(self.fold_nodes.len());
+        for &i in &self.fold_nodes {
+            let v = opt::eval_pure(&graph.nodes[i].op, &|d: NodeId| {
+                val.get(&d).expect("fold closure is dep-closed").clone()
+            })?;
+            val.insert(i, v);
+        }
+        let mut bound = self.template.clone();
+        for &(t, s) in &self.consts {
+            let v = val
+                .get(&s)
+                .ok_or_else(|| anyhow!("plan bind: missing value for source node {s}"))?;
+            match &mut bound.nodes[t].op {
+                Op::Const { dims, data } => {
+                    if v.dims() != &dims[..] {
+                        return Err(anyhow!(
+                            "plan bind: node {t} shape {:?} != template {:?}",
+                            v.dims(),
+                            dims
+                        ));
+                    }
+                    *data = v.data().to_vec();
+                }
+                other => {
+                    return Err(anyhow!(
+                        "plan bind: template node {t} is '{}', expected const",
+                        other.tag()
+                    ))
+                }
+            }
+        }
+        bound.tokens = graph.tokens.clone();
+        bound.batch = graph.batch;
+        bound.targets = graph.targets.clone();
+        bound.batch_group = graph.batch_group;
+        bound.shards = graph.shards;
+        Ok(Prepared {
+            graph: bound,
+            save_remap: self.save_remap.clone(),
+            report: self.report,
+            plan: Some(Arc::clone(self)),
+        })
+    }
+}
+
+/// Compile a structural plan for `graph`: run the admission pipeline in
+/// parametric form (when `optimize` is set), derive the schedule, lock
+/// flags, and arena assignment of the resulting template, and record the
+/// constant-rebind recipe. Errors are admission errors (unknown modules,
+/// failing constant subtrees) — exactly the set `opt::prepare` reports,
+/// so a plan-compiling admission path rejects the same graphs the
+/// pre-plan path did.
+pub fn compile(
+    graph: &InterventionGraph,
+    forward_sequence: &[String],
+    mode: PlanMode,
+    optimize: bool,
+) -> Result<ExecPlan> {
+    let n = graph.nodes.len();
+    let key = structural_key(graph, mode, optimize);
+
+    // Which template constants rebind from which submitted nodes. With
+    // optimization the pipeline rewrites folded nodes to `Const` *in
+    // place* (index preserved before compaction), so the submitted source
+    // of template node `new_id[i]` is always `i`; without optimization
+    // every submitted `Const` maps to itself.
+    let mut consts: Vec<(NodeId, NodeId)> = Vec::new();
+    let (template_nodes, save_remap, report) = if optimize {
+        let rw = opt::rewrite(graph, forward_sequence, false)?;
+        let mut save_remap = BTreeMap::new();
+        for node in &graph.nodes {
+            if matches!(node.op, Op::Save { .. } | Op::StepHook { .. }) {
+                save_remap.insert(node.id, rw.new_id[node.id]);
+            }
+        }
+        for (i, &ni) in rw.new_id.iter().enumerate() {
+            if ni != usize::MAX && matches!(rw.nodes[ni].op, Op::Const { .. }) {
+                consts.push((ni, i));
+            }
+        }
+        (rw.nodes, Some(save_remap), Some(rw.report))
+    } else {
+        for node in &graph.nodes {
+            if matches!(node.op, Op::Const { .. }) {
+                consts.push((node.id, node.id));
+            }
+        }
+        (graph.nodes.clone(), None, None)
+    };
+
+    // Transitive dependency closure (in the submitted graph) of every
+    // constant source: the nodes bind must re-evaluate, ascending so
+    // dependencies always precede their consumers.
+    let mut need = vec![false; n];
+    let mut stack: Vec<NodeId> = consts.iter().map(|&(_, s)| s).collect();
+    while let Some(i) = stack.pop() {
+        if need[i] {
+            continue;
+        }
+        need[i] = true;
+        for d in graph.nodes[i].op.deps() {
+            stack.push(d);
+        }
+    }
+    let fold_nodes: Vec<NodeId> = (0..n).filter(|&i| need[i]).collect();
+
+    let template = InterventionGraph {
+        model: graph.model.clone(),
+        tokens: graph.tokens.clone(),
+        batch: graph.batch,
+        nodes: template_nodes,
+        targets: graph.targets.clone(),
+        batch_group: graph.batch_group,
+        shards: graph.shards,
+    };
+    let order = execution_order(&template, forward_sequence)?;
+    let locked = locked_flags(&template);
+    let memory = Arc::new(plan_memory(&template, &order, &locked));
+    Ok(ExecPlan {
+        template,
+        save_remap,
+        report,
+        order,
+        locked,
+        memory,
+        consts,
+        fold_nodes,
+        n_submitted: n,
+        key,
+        mode,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::graph::GraphResult;
+    use crate::interp::Executor;
+    use crate::models::Hooks;
+    use crate::tensor::Tensor;
+
+    fn fseq() -> Vec<String> {
+        vec!["embed".into(), "layer.0".into(), "layer.1".into(), "lm_head".into()]
+    }
+
+    fn acts(batch: usize) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("embed".to_string(), Tensor::iota(&[batch, 4]));
+        m.insert("layer.0".to_string(), Tensor::iota(&[batch, 4]).scale(2.0));
+        m.insert("layer.1".to_string(), Tensor::iota(&[batch, 4]).scale(3.0));
+        m.insert("lm_head".to_string(), Tensor::iota(&[batch, 4]).scale(4.0));
+        m
+    }
+
+    fn drive(ex: &mut Executor, acts: &mut BTreeMap<String, Tensor>) {
+        for point in fseq() {
+            if let Some(t) = acts.get_mut(&point) {
+                if ex.wants(&point) {
+                    ex.on_output(&point, t);
+                }
+            }
+        }
+    }
+
+    /// A representative graph: getter math, a const subtree that folds,
+    /// fusion fodder, and two saves.
+    fn sample(payload: f32) -> InterventionGraph {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let c = g.push(Op::Const { dims: vec![1, 4], data: vec![payload; 4] });
+        let cs = g.push(Op::Scale { arg: c, factor: 2.0 });
+        let sum = g.push(Op::Add { a: h, b: cs });
+        let sc = g.push(Op::Scale { arg: sum, factor: 0.5 });
+        let sm = g.push(Op::Softmax { arg: sc });
+        g.push(Op::Save { arg: sm });
+        let m = g.push(Op::Mean { arg: h });
+        g.push(Op::Save { arg: m });
+        g
+    }
+
+    fn run_raw(g: &InterventionGraph) -> GraphResult {
+        let mut ex = Executor::new(g, &fseq()).unwrap();
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        ex.into_result().unwrap()
+    }
+
+    fn run_planned(plan: &Arc<ExecPlan>, g: &InterventionGraph) -> GraphResult {
+        let p = plan.bind(g).unwrap();
+        let mut ex = Executor::planned(&p.graph, &fseq(), crate::interp::StateView::new(), plan);
+        ex.run_pre().unwrap();
+        let mut a = acts(1);
+        drive(&mut ex, &mut a);
+        p.remap_values(ex.into_result().unwrap())
+    }
+
+    #[test]
+    fn same_structure_different_payload_collides() {
+        let a = sample(1.0);
+        let b = sample(42.5);
+        assert_eq!(
+            structural_key(&a, PlanMode::Trace, true),
+            structural_key(&b, PlanMode::Trace, true)
+        );
+    }
+
+    #[test]
+    fn structural_differences_diverge() {
+        let base = sample(1.0);
+        let k = structural_key(&base, PlanMode::Trace, true);
+        // different const DIMS is structural
+        let mut g = sample(1.0);
+        if let Op::Const { dims, data } = &mut g.nodes[1].op {
+            *dims = vec![4];
+            data.truncate(4);
+        }
+        assert_ne!(structural_key(&g, PlanMode::Trace, true), k);
+        // different scale factor is structural
+        let mut g = sample(1.0);
+        if let Op::Scale { factor, .. } = &mut g.nodes[2].op {
+            *factor = 3.0;
+        }
+        assert_ne!(structural_key(&g, PlanMode::Trace, true), k);
+        // an extra node is structural
+        let mut g = sample(1.0);
+        let last = g.nodes.len() - 1;
+        g.push(Op::Save { arg: last });
+        assert_ne!(structural_key(&g, PlanMode::Trace, true), k);
+        // mode and optimizer flag partition the key space
+        assert_ne!(structural_key(&base, PlanMode::Stream, true), k);
+        assert_ne!(structural_key(&base, PlanMode::Trace, false), k);
+    }
+
+    #[test]
+    fn memory_plan_no_overlap_and_reuse() {
+        let g = sample(1.0);
+        let order = execution_order(&g, &fseq()).unwrap();
+        let locked = locked_flags(&g);
+        let plan = plan_memory(&g, &order, &locked);
+        // no two simultaneously-live nodes share a slot: re-simulate
+        // liveness independently and check residency per slot
+        let init = g.listener_counts();
+        let mut listeners = init.clone();
+        let mut owner: Vec<Option<NodeId>> = vec![None; plan.n_slots];
+        let mut linear: Vec<NodeId> = Vec::new();
+        linear.extend(&order.pre);
+        for f in &order.fwd {
+            linear.extend(f);
+        }
+        linear.extend(order.post.iter().copied());
+        for &id in &linear {
+            for d in g.nodes[id].op.deps() {
+                listeners[d] = listeners[d].saturating_sub(1);
+                if listeners[d] == 0 && !locked[d] {
+                    if let Some(s) = plan.slot_of[d] {
+                        if owner[s] == Some(d) {
+                            owner[s] = None;
+                        }
+                    }
+                }
+            }
+            if init[id] > 0 || locked[id] {
+                let s = plan.slot_of[id].expect("live node has a slot");
+                assert!(owner[s].is_none(), "slot {s} still owned by {:?}", owner[s]);
+                owner[s] = Some(id);
+            }
+        }
+        // slots are genuinely reused: fewer slots than placed values
+        let placed = plan.slot_of.iter().filter(|s| s.is_some()).count();
+        assert!(plan.n_slots < placed, "{} slots for {placed} values", plan.n_slots);
+    }
+
+    #[test]
+    fn compile_bind_matches_raw_interpreter() {
+        let compiled_from = sample(1.0);
+        let plan = Arc::new(compile(&compiled_from, &fseq(), PlanMode::Trace, true).unwrap());
+        // bind against a DIFFERENT payload than the plan was compiled from
+        let fresh = sample(-3.25);
+        let planned = run_planned(&plan, &fresh);
+        let raw = run_raw(&fresh);
+        assert_eq!(planned.values, raw.values);
+        // and the cache-compile submission itself
+        let planned0 = run_planned(&plan, &compiled_from);
+        let raw0 = run_raw(&compiled_from);
+        assert_eq!(planned0.values, raw0.values);
+    }
+
+    #[test]
+    fn unoptimized_plan_binds_and_matches() {
+        let g = sample(7.0);
+        let plan = Arc::new(compile(&g, &fseq(), PlanMode::Trace, false).unwrap());
+        assert!(plan.report().is_none());
+        let fresh = sample(0.125);
+        let planned = run_planned(&plan, &fresh);
+        assert_eq!(planned.values, run_raw(&fresh).values);
+    }
+
+    #[test]
+    fn compile_fails_on_failing_const_subtree() {
+        // mean of an empty const slice fails at plan compile — the same
+        // admission error `opt::prepare` reports
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let c = g.push(Op::Const { dims: vec![4], data: vec![1.0; 4] });
+        let e = g.push(Op::Slice { arg: c, ranges: vec![crate::tensor::Range1::new(2, 2)] });
+        let m = g.push(Op::Mean { arg: e });
+        g.push(Op::Save { arg: m });
+        let err = compile(&g, &fseq(), PlanMode::Trace, true).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn execution_order_matches_phase_rules() {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        g.targets = Some(vec![1.0]);
+        let c = g.push(Op::Const { dims: vec![1], data: vec![2.0] });
+        let h = g.push(Op::Getter { module: "layer.1".into(), port: Port::Input });
+        let m = g.push(Op::Mul { a: h, b: c });
+        g.push(Op::Setter { module: "layer.1".into(), port: Port::Output, arg: m });
+        let gr = g.push(Op::Grad { module: "layer.0".into() });
+        let s = g.push(Op::Scale { arg: gr, factor: -1.0 });
+        g.push(Op::Save { arg: s });
+        let order = execution_order(&g, &fseq()).unwrap();
+        assert_eq!(order.pre, vec![c]);
+        // getter at layer.1 INPUT = layer.0 output (position 1); the mul
+        // joins it there; the setter is pinned to layer.1 (position 2)
+        assert_eq!(order.fwd[1], vec![h, m]);
+        assert_eq!(order.fwd[2], vec![3]);
+        assert_eq!(order.post, vec![gr, s, 6]);
+    }
+
+    #[test]
+    fn bind_rejects_structural_mismatch() {
+        let plan = Arc::new(compile(&sample(1.0), &fseq(), PlanMode::Trace, true).unwrap());
+        let mut other = sample(1.0);
+        other.nodes.pop();
+        assert!(plan.bind(&other).is_err());
+        let mut wrong_model = sample(1.0);
+        wrong_model.model = "other-model".into();
+        assert!(plan.bind(&wrong_model).is_err());
+    }
+}

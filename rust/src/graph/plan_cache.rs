@@ -1,0 +1,245 @@
+//! Bounded LRU cache of compiled execution plans, keyed by
+//! `(model, structural hash)`.
+//!
+//! A hit returns the shared [`ExecPlan`] so admission skips validation,
+//! the optimization pipeline, and scheduling prep entirely, paying only
+//! [`ExecPlan::bind`] (constant re-evaluation + payload stamping). The
+//! cache is the fabric's memory of hot graph shapes — dashboards and
+//! sweeps that submit one structure thousands of times compile it once.
+//!
+//! # Invalidation contract
+//!
+//! Staleness is handled by **keying and explicit eviction**, never by
+//! TTL luck:
+//!
+//! - The structural key folds in the execution mode and the optimizer
+//!   flag, so a `--no-opt` (or config-file) change can never hit a plan
+//!   compiled under different passes — the key simply differs.
+//! - The model name is the *outer* key (deliberately not hashed), so a
+//!   reloaded/swapped model is evicted by name via
+//!   [`PlanCache::invalidate_model`]; a stale plan for a reloaded model
+//!   must never execute.
+//! - Failed compiles are never inserted, so an invalid structure fails
+//!   identically on every resubmission (both-fail parity).
+//! - Capacity pressure evicts the least-recently-used entry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::plan::ExecPlan;
+
+/// Cache key: model name plus the structural hash (which already encodes
+/// the mode and optimizer flag).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    model: String,
+    key: u64,
+}
+
+struct Slot {
+    plan: Arc<ExecPlan>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<PlanKey, Slot>,
+    tick: u64,
+}
+
+/// Point-in-time cache statistics (the `/v1/metrics` `_plan` object).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanCacheStats {
+    /// Lookups that found a plan.
+    pub hits: u64,
+    /// Lookups that found nothing (a compile follows).
+    pub misses: u64,
+    /// Entries evicted by capacity pressure (LRU).
+    pub evictions: u64,
+    /// Entries evicted by model invalidation.
+    pub invalidations: u64,
+    /// Entries currently cached.
+    pub size: usize,
+    /// Capacity bound.
+    pub capacity: usize,
+    /// Sum of arena slots across cached plans (planner gauge).
+    pub slots_planned: u64,
+    /// Sum of materialized values across cached plans; with
+    /// `slots_planned` this shows the in-place reuse ratio.
+    pub values_planned: u64,
+}
+
+/// A bounded, thread-safe LRU plan cache shared across admission paths.
+pub struct PlanCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `cap` plans (minimum 1).
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a plan for `(model, key)`, bumping hit/miss counters and
+    /// recency on hit.
+    pub fn get(&self, model: &str, key: u64) -> Option<Arc<ExecPlan>> {
+        let mut inner = self.inner.lock().expect("plan cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let k = PlanKey { model: model.to_string(), key };
+        match inner.map.get_mut(&k) {
+            Some(slot) => {
+                slot.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&slot.plan))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly compiled plan, evicting the least-recently-used
+    /// entry when at capacity. Inserting over an existing key replaces it
+    /// (no eviction counted).
+    pub fn insert(&self, model: &str, key: u64, plan: Arc<ExecPlan>) {
+        let mut inner = self.inner.lock().expect("plan cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let k = PlanKey { model: model.to_string(), key };
+        if !inner.map.contains_key(&k) && inner.map.len() >= self.cap {
+            if let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert(k, Slot { plan, last_used: tick });
+    }
+
+    /// Drop every plan compiled for `model` (keyed eviction on model
+    /// swap/reload — a stale plan for a reloaded model must never
+    /// execute). Returns how many entries were removed.
+    pub fn invalidate_model(&self, model: &str) -> usize {
+        let mut inner = self.inner.lock().expect("plan cache lock");
+        let before = inner.map.len();
+        inner.map.retain(|k, _| k.model != model);
+        let removed = before - inner.map.len();
+        self.invalidations.fetch_add(removed as u64, Ordering::Relaxed);
+        removed
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache lock").map.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the counters and per-plan gauges.
+    pub fn stats(&self) -> PlanCacheStats {
+        let inner = self.inner.lock().expect("plan cache lock");
+        let mut slots = 0u64;
+        let mut values = 0u64;
+        for s in inner.map.values() {
+            slots += s.plan.slots() as u64;
+            values += s.plan.planned_values() as u64;
+        }
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            size: inner.map.len(),
+            capacity: self.cap,
+            slots_planned: slots,
+            values_planned: values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::{compile, structural_key, PlanMode};
+    use super::*;
+    use crate::graph::{InterventionGraph, Op, Port};
+
+    fn fseq() -> Vec<String> {
+        vec!["embed".into(), "layer.0".into(), "layer.1".into(), "lm_head".into()]
+    }
+
+    fn graph(factor: f32) -> InterventionGraph {
+        let mut g = InterventionGraph::new("m");
+        g.batch = 1;
+        let h = g.push(Op::Getter { module: "layer.0".into(), port: Port::Output });
+        let s = g.push(Op::Scale { arg: h, factor });
+        g.push(Op::Save { arg: s });
+        g
+    }
+
+    fn plan_for(g: &InterventionGraph) -> Arc<super::super::plan::ExecPlan> {
+        Arc::new(compile(g, &fseq(), PlanMode::Trace, true).unwrap())
+    }
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let cache = PlanCache::new(2);
+        let g1 = graph(1.0);
+        let g2 = graph(2.0);
+        let g3 = graph(3.0);
+        let (k1, k2, k3) = (
+            structural_key(&g1, PlanMode::Trace, true),
+            structural_key(&g2, PlanMode::Trace, true),
+            structural_key(&g3, PlanMode::Trace, true),
+        );
+        assert!(cache.get("m", k1).is_none());
+        cache.insert("m", k1, plan_for(&g1));
+        cache.insert("m", k2, plan_for(&g2));
+        assert!(cache.get("m", k1).is_some()); // k1 now most recent
+        cache.insert("m", k3, plan_for(&g3)); // evicts k2 (LRU)
+        assert!(cache.get("m", k2).is_none());
+        assert!(cache.get("m", k1).is_some());
+        assert!(cache.get("m", k3).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.size, 2);
+        assert_eq!(s.capacity, 2);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.misses, 2);
+        assert!(s.slots_planned > 0 && s.values_planned >= s.slots_planned);
+    }
+
+    #[test]
+    fn invalidate_model_is_keyed_not_global() {
+        let cache = PlanCache::new(8);
+        let g = graph(1.0);
+        let k = structural_key(&g, PlanMode::Trace, true);
+        cache.insert("m", k, plan_for(&g));
+        cache.insert("other", k, plan_for(&g));
+        assert_eq!(cache.invalidate_model("m"), 1);
+        assert!(cache.get("m", k).is_none());
+        assert!(cache.get("other", k).is_some());
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+}

@@ -33,13 +33,15 @@
 //! become visible to later traces.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::graph::{
-    opt::{self, OptReport},
+    opt::{self, OptReport, Prepared},
+    plan::{self, ExecPlan, MemoryPlan},
     validate::{validate_stream, validate_with_state},
-    GraphResult, InterventionGraph, NodeId, Op, Port,
+    GraphResult, InterventionGraph, NodeId, Op,
 };
 use crate::models::generate::Generation;
 use crate::models::{Hooks, ModelRunner};
@@ -49,17 +51,6 @@ use crate::tensor::{logit_diff, Tensor};
 /// they were when the trace started. Also the type state updates commit
 /// back into.
 pub type StateView = HashMap<String, Tensor>;
-
-/// Execution phase of a node.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Phase {
-    /// Before the forward pass (no model dependencies).
-    Pre,
-    /// At the hook of forward-sequence position `k`.
-    Fwd(usize),
-    /// After the backward pass (depends on a Grad node).
-    Post,
-}
 
 /// Interprets one intervention graph against one model run.
 ///
@@ -76,7 +67,12 @@ pub struct Executor<'g> {
     point_index: HashMap<String, usize>,
     pre: Vec<NodeId>,
     post: Vec<NodeId>,
+    /// Value storage. Unplanned executors index this by node id (one cell
+    /// per node); planned executors index through `mem`'s arena slots
+    /// (one cell per slot, reused in place across last-use boundaries).
     values: Vec<Option<Tensor>>,
+    /// AOT arena assignment; `None` for per-node storage.
+    mem: Option<Arc<MemoryPlan>>,
     listeners: Vec<usize>,
     locked: Vec<bool>,
     saved: BTreeMap<NodeId, Tensor>,
@@ -134,82 +130,60 @@ impl<'g> Executor<'g> {
         forward_sequence: &[String],
         state: StateView,
     ) -> Result<Executor<'g>> {
-        let order: HashMap<&str, usize> = forward_sequence
+        // scheduling prep is shared with the AOT plan compiler (which
+        // runs the same derivation once and caches it)
+        let order = plan::execution_order(graph, forward_sequence)?;
+        let locked = plan::locked_flags(graph);
+        let n = graph.nodes.len();
+        Ok(Executor::assemble(graph, forward_sequence, state, order, locked, n, None))
+    }
+
+    /// Build from a compiled [`ExecPlan`]: no validation, no scheduling
+    /// prep — the schedule, lock flags, and arena assignment were all
+    /// derived once at plan compile and are cloned (or shared) from the
+    /// plan. `graph` must be the plan's bound template
+    /// ([`ExecPlan::bind`] output), which structurally matches it by
+    /// construction.
+    pub(crate) fn planned(
+        graph: &'g InterventionGraph,
+        forward_sequence: &[String],
+        state: StateView,
+        exec_plan: &ExecPlan,
+    ) -> Executor<'g> {
+        debug_assert_eq!(graph.nodes.len(), exec_plan.template().nodes.len());
+        let order = exec_plan.order().clone();
+        let locked = exec_plan.locked().to_vec();
+        let mem = Arc::clone(exec_plan.memory());
+        let slots = mem.n_slots;
+        Executor::assemble(graph, forward_sequence, state, order, locked, slots, Some(mem))
+    }
+
+    /// Shared tail of the constructors: wire the schedule into per-hook
+    /// lists and size the value storage (`cells` = node count for
+    /// per-node storage, arena slot count for planned storage).
+    fn assemble(
+        graph: &'g InterventionGraph,
+        forward_sequence: &[String],
+        state: StateView,
+        order: plan::ExecOrder,
+        locked: Vec<bool>,
+        cells: usize,
+        mem: Option<Arc<MemoryPlan>>,
+    ) -> Executor<'g> {
+        let point_index: HashMap<String, usize> = forward_sequence
             .iter()
             .enumerate()
-            .map(|(i, m)| (m.as_str(), i))
+            .map(|(i, m)| (m.clone(), i))
             .collect();
-
-        // normalize Input ports: input of module k = output of module k-1
-        let point_of = |module: &str, port: Port| -> Result<usize> {
-            let k = *order
-                .get(module)
-                .ok_or_else(|| anyhow!("unknown module {module}"))?;
-            match port {
-                Port::Output => Ok(k),
-                Port::Input => {
-                    if k == 0 {
-                        Err(anyhow!("module {module} has no observable input (it is first)"))
-                    } else {
-                        Ok(k - 1)
-                    }
-                }
-            }
-        };
-
-        let n = graph.nodes.len();
-        let mut phase = vec![Phase::Pre; n];
-        for node in &graph.nodes {
-            let mut p = match &node.op {
-                Op::Getter { module, port } => Phase::Fwd(point_of(module, *port)?),
-                Op::Grad { .. } => Phase::Post,
-                _ => Phase::Pre,
-            };
-            for d in node.op.deps() {
-                p = match (p, phase[d]) {
-                    (Phase::Post, _) | (_, Phase::Post) => Phase::Post,
-                    (Phase::Fwd(a), Phase::Fwd(b)) => Phase::Fwd(a.max(b)),
-                    (Phase::Fwd(a), Phase::Pre) | (Phase::Pre, Phase::Fwd(a)) => Phase::Fwd(a),
-                    (Phase::Pre, Phase::Pre) => Phase::Pre,
-                };
-            }
-            // setters run at the hook of the module they write
-            if let Op::Setter { module, port, .. } = &node.op {
-                let k = point_of(module, *port)?;
-                p = Phase::Fwd(k);
-            }
-            phase[node.id] = p;
-        }
-
-        let mut schedule: Vec<Vec<NodeId>> = vec![Vec::new(); forward_sequence.len()];
-        let mut pre = Vec::new();
-        let mut post = Vec::new();
-        for node in &graph.nodes {
-            match phase[node.id] {
-                Phase::Pre => pre.push(node.id),
-                Phase::Fwd(k) => schedule[k].push(node.id),
-                Phase::Post => post.push(node.id),
-            }
-        }
-        let point_index: HashMap<String, usize> =
-            order.into_iter().map(|(m, k)| (m.to_string(), k)).collect();
-
-        // Save locks its dependency's value (StepHook is a per-step Save).
-        let mut locked = vec![false; n];
-        for node in &graph.nodes {
-            if let Op::Save { arg } | Op::StepHook { arg } = node.op {
-                locked[arg] = true;
-            }
-        }
-
         let (row_offset, rows) = graph.batch_group.unwrap_or((0, graph.batch.max(1)));
-        Ok(Executor {
+        Executor {
             graph,
-            schedule,
+            schedule: order.fwd,
             point_index,
-            pre,
-            post,
-            values: vec![None; n],
+            pre: order.pre,
+            post: order.post,
+            values: vec![None; cells],
+            mem,
             listeners: graph.listener_counts(),
             locked,
             saved: BTreeMap::new(),
@@ -220,7 +194,18 @@ impl<'g> Executor<'g> {
             live: 0,
             peak_live: 0,
             error: None,
-        })
+        }
+    }
+
+    /// The storage cell index of node `id`: the id itself for per-node
+    /// storage, the planned arena slot otherwise (`None` = this value is
+    /// never materialized).
+    #[inline]
+    fn cell(&self, id: NodeId) -> Option<usize> {
+        match &self.mem {
+            None => Some(id),
+            Some(m) => m.slot_of[id],
+        }
     }
 
     /// High-water mark of simultaneously-live unlocked values.
@@ -228,31 +213,50 @@ impl<'g> Executor<'g> {
         self.peak_live
     }
 
+    /// Number of value storage cells: the node count for per-node
+    /// storage, the planned arena's slot count when built from a plan.
+    pub fn cells(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Does this executor store values in a planned arena?
+    pub fn is_planned(&self) -> bool {
+        self.mem.is_some()
+    }
+
     /// Consume one listener's claim on a node's value. The last unlocked
     /// listener *moves* the tensor out instead of cloning it, so a chain
     /// of ops never copies the hidden state it is transforming.
     fn take_dep(&mut self, id: NodeId) -> Result<Tensor> {
-        if self.values[id].is_none() {
+        let Some(cell) = self.cell(id).filter(|&c| self.values[c].is_some()) else {
             return Err(anyhow!("node {id} value not available (freed or not computed)"));
-        }
+        };
         self.listeners[id] = self.listeners[id].saturating_sub(1);
         if self.listeners[id] == 0 && !self.locked[id] {
             self.live = self.live.saturating_sub(1);
-            let t = self.values[id].take().expect("presence checked above");
+            let t = self.values[cell].take().expect("presence checked above");
             crate::obs::profile::value_dead(t.numel() * 4);
             Ok(t)
         } else {
-            Ok(self.values[id].as_ref().expect("presence checked above").clone())
+            Ok(self.values[cell].as_ref().expect("presence checked above").clone())
         }
     }
 
     fn put(&mut self, id: NodeId, v: Tensor) {
         // a node with no listeners that isn't locked is dead on arrival
+        // (the memory planner assigns such nodes no slot at all)
         if self.listeners[id] == 0 && !self.locked[id] {
             return;
         }
+        let Some(cell) = self.cell(id) else {
+            return;
+        };
         crate::obs::profile::value_live(v.numel() * 4);
-        self.values[id] = Some(v);
+        debug_assert!(
+            self.values[cell].is_none(),
+            "arena slot {cell} still occupied when node {id} is born"
+        );
+        self.values[cell] = Some(v);
         self.live += 1;
         self.peak_live = self.peak_live.max(self.live);
     }
@@ -429,8 +433,9 @@ impl<'g> Executor<'g> {
                 return Ok(());
             }
             Op::Save { arg } | Op::StepHook { arg } => {
-                let v = self.values[*arg]
-                    .as_ref()
+                let v = self
+                    .cell(*arg)
+                    .and_then(|c| self.values[c].as_ref())
                     .ok_or_else(|| anyhow!("save of unavailable node {arg}"))?
                     .clone();
                 self.listeners[*arg] = self.listeners[*arg].saturating_sub(1);
@@ -717,7 +722,38 @@ pub(crate) fn execute_view_raw(
     state_in: StateView,
 ) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
     let fseq = runner.manifest.forward_sequence();
-    let mut ex = Executor::with_state(graph, &fseq, state_in)?;
+    let ex = Executor::with_state(graph, &fseq, state_in)?;
+    drive_to_outcome(graph, runner, ex)
+}
+
+/// Execute a [`Prepared`] trace. Plan-bound graphs run on a planned
+/// executor — validation and scheduling prep are skipped, values live in
+/// the plan's arena slots; everything else is the shared driver, so the
+/// memory gauges and profiler attribution are identical to the raw path.
+/// Results come back in *template* ids; callers re-key through
+/// [`Prepared::remap_values`] as usual.
+pub(crate) fn execute_view_prepared(
+    prepared: &Prepared,
+    runner: &ModelRunner,
+    state_in: StateView,
+) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
+    match &prepared.plan {
+        None => execute_view_raw(&prepared.graph, runner, state_in),
+        Some(p) => {
+            let fseq = runner.manifest.forward_sequence();
+            let ex = Executor::planned(&prepared.graph, &fseq, state_in, p);
+            drive_to_outcome(&prepared.graph, runner, ex)
+        }
+    }
+}
+
+/// The driver body shared by raw and planned execution: pre-phase →
+/// hooked forward (sharded if requested) → backward/post-phase → outcome.
+fn drive_to_outcome(
+    graph: &InterventionGraph,
+    runner: &ModelRunner,
+    mut ex: Executor,
+) -> Result<(GraphResult, BTreeMap<String, Tensor>)> {
     ex.run_pre()?;
 
     let seq = runner.manifest.seq;
@@ -880,9 +916,37 @@ pub(crate) fn execute_stream_raw(
     Ok(stream.into_generation())
 }
 
+/// Streaming decode of a [`Prepared`] graph: plan-bound graphs skip the
+/// per-stream validation and run every decode step on a planned executor
+/// (the arena is reused across steps' executor rebuilds). Step values
+/// come back in template ids, exactly like [`execute_stream_raw`].
+pub(crate) fn execute_stream_prepared(
+    prepared: &Prepared,
+    runner: &ModelRunner,
+    steps: usize,
+    sink: &mut dyn FnMut(usize, StepOutcome) -> bool,
+) -> Result<Generation> {
+    let mut stream = crate::engine::RunnerStream::with_plan(
+        prepared.graph.clone(),
+        runner,
+        steps,
+        prepared.plan.clone(),
+    )?;
+    let mut step = 0usize;
+    while let Some(out) = stream.step(runner)? {
+        let more = sink(step, out);
+        step += 1;
+        if !more {
+            break;
+        }
+    }
+    Ok(stream.into_generation())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Port;
     use crate::tensor::Range1;
 
     fn fseq() -> Vec<String> {

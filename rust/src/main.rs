@@ -34,6 +34,9 @@ const USAGE: &str = "usage: nnscope <serve|coordinate|models|survey|trace|profil
               [--heartbeat-ms 250] [--link-latency 0.0]
               [--stream-buffer 32] [--stream-send-timeout-s 10]
               [--no-opt]   (disable the admission graph compiler)
+              [--no-plan-cache]   (disable AOT plan caching: full validate
+                                   + optimize on every admission)
+              [--plan-cache-cap 256]   (cached plans per replica, LRU)
               [--no-obs]   (disable latency histograms + request tracing)
               [--trace-ring 256]   (GET /v1/debug/requests retention)
               [--profile-ring 64]  (GET /v1/debug/profile/<id> retention)
@@ -95,6 +98,7 @@ fn serve(args: &Args) -> Result<()> {
         if args.flag("no-opt") {
             cfg.optimize = false;
         }
+        apply_plan_cache_flags(args, &mut cfg)?;
         if args.flag("no-obs") {
             cfg.obs = false;
         }
@@ -136,6 +140,8 @@ fn serve(args: &Args) -> Result<()> {
             args.u64_or("stream-send-timeout-s", 10).max(1),
         ),
         optimize: !args.flag("no-opt"),
+        plan_cache: true,
+        plan_cache_cap: 256,
         obs: !args.flag("no-obs"),
         trace_ring: args.usize_or("trace-ring", 256),
         profile_ring: args.usize_or("profile-ring", 64),
@@ -145,6 +151,7 @@ fn serve(args: &Args) -> Result<()> {
         tenant_queue_cap: usize::MAX,
         shed: nnscope::server::admission::ShedPolicy::disabled(),
     };
+    apply_plan_cache_flags(args, &mut cfg)?;
     apply_fault_tolerance_flags(args, &mut cfg)?;
     println!("preloading {models:?} …");
     let server = NdifServer::start(cfg)?;
@@ -152,6 +159,21 @@ fn serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Apply the AOT plan-cache CLI flags (shared by the config-file path,
+/// where they override the file, and the flag-only path).
+fn apply_plan_cache_flags(args: &Args, cfg: &mut NdifConfig) -> Result<()> {
+    if args.flag("no-plan-cache") {
+        cfg.plan_cache = false;
+    }
+    if let Some(n) = args.get("plan-cache-cap") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --plan-cache-cap '{n}'"))?;
+        cfg.plan_cache_cap = n.max(1);
+    }
+    Ok(())
 }
 
 /// Apply the profiler CLI flags on top of a config file (the flag-only

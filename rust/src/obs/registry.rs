@@ -37,6 +37,10 @@ pub struct ModelObs {
     pub opt_folded: AtomicU64,
     pub opt_cse: AtomicU64,
     pub opt_fused: AtomicU64,
+    /// Admissions served by a cached AOT plan (validate + opt skipped).
+    pub plan_hits: AtomicU64,
+    /// Admissions that compiled (and cached) a fresh AOT plan.
+    pub plan_misses: AtomicU64,
 }
 
 impl ModelObs {
@@ -47,6 +51,27 @@ impl ModelObs {
         self.opt_folded.fetch_add(r.folded as u64, Relaxed);
         self.opt_cse.fetch_add(r.cse_merged as u64, Relaxed);
         self.opt_fused.fetch_add(r.fused as u64, Relaxed);
+    }
+
+    /// Count one plan-cache admission outcome. On a hit the request skips
+    /// validation and the optimizer entirely, so `opt_requests` stays flat
+    /// — the pair of counters is the observable proof that cached
+    /// admission does less work.
+    pub fn record_plan(&self, hit: bool) {
+        if hit {
+            self.plan_hits.fetch_add(1, Relaxed);
+        } else {
+            self.plan_misses.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// The `"plan"` per-model metrics object (admission plan-cache
+    /// outcomes as seen by this model's endpoints).
+    pub fn plan_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::from(self.plan_hits.load(Relaxed) as i64)),
+            ("misses", Json::from(self.plan_misses.load(Relaxed) as i64)),
+        ])
     }
 
     /// The `"latency"` + `"opt"` halves of one model's metrics entry.

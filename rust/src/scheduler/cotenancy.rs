@@ -9,8 +9,9 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::graph::opt::Prepared;
 use crate::graph::{GraphResult, InterventionGraph};
-use crate::interp::Executor;
+use crate::interp::{Executor, StateView};
 use crate::models::{Hooks, ModelRunner};
 use crate::tensor::Tensor;
 
@@ -104,18 +105,35 @@ pub fn execute_merged(
     graphs: &[InterventionGraph],
     runner: &ModelRunner,
 ) -> Result<Vec<Result<GraphResult>>> {
-    let refs: Vec<&InterventionGraph> = graphs.iter().collect();
+    let preps: Vec<Prepared> = graphs.iter().cloned().map(Prepared::raw).collect();
+    let refs: Vec<&Prepared> = preps.iter().collect();
+    execute_merged_prepared(&refs, runner)
+}
+
+/// Plan-aware merge: like [`execute_merged`] but each co-tenant runs its
+/// own [`Prepared`] admission output — graphs that came through the plan
+/// cache get arena-planned executors ([`Executor::planned`]); raw graphs
+/// fall back to per-node allocation. Results are keyed by *template* ids;
+/// the caller re-keys with [`Prepared::remap_values`]. Batch-group
+/// patching happens here, after plan bind: the plan's schedule and arena
+/// are row-count independent, so a standalone-compiled plan stays valid
+/// when its graph is pinned to a slice of a merged forward pass.
+pub fn execute_merged_prepared(
+    jobs: &[&Prepared],
+    runner: &ModelRunner,
+) -> Result<Vec<Result<GraphResult>>> {
+    let refs: Vec<&InterventionGraph> = jobs.iter().map(|p| &p.graph).collect();
     if !mergeable(&refs, runner) {
         return Err(anyhow!("graphs are not mergeable into one forward pass"));
     }
     let seq = runner.manifest.seq;
 
     // combined tokens + per-graph row offsets
-    let total_rows: usize = graphs.iter().map(|g| g.batch).sum();
+    let total_rows: usize = refs.iter().map(|g| g.batch).sum();
     let mut tokens = Vec::with_capacity(total_rows * seq);
-    let mut offsets = Vec::with_capacity(graphs.len());
+    let mut offsets = Vec::with_capacity(jobs.len());
     let mut off = 0usize;
-    for g in graphs {
+    for g in &refs {
         if g.tokens.len() != g.batch * seq {
             return Err(anyhow!("graph token length mismatch"));
         }
@@ -128,13 +146,16 @@ pub fn execute_merged(
 
     // per-graph executors pinned to their row slices
     let fseq = runner.manifest.forward_sequence();
-    let mut patched: Vec<InterventionGraph> = graphs.to_vec();
+    let mut patched: Vec<InterventionGraph> = refs.iter().map(|&g| g.clone()).collect();
     for (g, &off) in patched.iter_mut().zip(&offsets) {
         g.batch_group = Some((off, g.batch));
     }
     let mut executors: Vec<Executor> = Vec::with_capacity(patched.len());
-    for g in &patched {
-        let mut ex = Executor::new(g, &fseq)?;
+    for (g, p) in patched.iter().zip(jobs) {
+        let mut ex = match &p.plan {
+            Some(plan) => Executor::planned(g, &fseq, StateView::new(), plan),
+            None => Executor::new(g, &fseq)?,
+        };
         ex.run_pre()?;
         executors.push(ex);
     }

@@ -21,7 +21,7 @@
 pub mod cotenancy;
 pub mod queue;
 
-pub use cotenancy::{execute_merged, CoTenancy};
+pub use cotenancy::{execute_merged, execute_merged_prepared, CoTenancy};
 pub use queue::{
     LoadSnapshot, ModelService, ServiceMetrics, StreamChunk, SubmitOpts, TenantCapExceeded,
     TenantDepths,

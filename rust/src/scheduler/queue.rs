@@ -31,7 +31,7 @@ use crate::server::state::SessionStateStore;
 use crate::server::store::ObjectStore;
 use crate::util::failpoint::{self, FailAction};
 
-use super::cotenancy::{execute_merged, mergeable, plan_merge_chunks, CoTenancy};
+use super::cotenancy::{execute_merged_prepared, mergeable, plan_merge_chunks, CoTenancy};
 
 /// Submission rejected because the tenant is at its queue-depth cap.
 /// Surfaced to the HTTP front as a 429 (the tenant's backpressure, not the
@@ -713,7 +713,12 @@ impl ModelService {
         Self::note_dequeue(&mut job.trace, obs);
         let t0 = Instant::now();
         let admitted = job.trace.as_ref().map(|t| t.t0).unwrap_or(t0);
-        match crate::engine::RunnerStream::new(job.prepared.graph.clone(), runner, job.steps) {
+        match crate::engine::RunnerStream::with_plan(
+            job.prepared.graph.clone(),
+            runner,
+            job.steps,
+            job.prepared.plan.clone(),
+        ) {
             Ok(stream) => Some(ActiveStream {
                 stream,
                 prepared: job.prepared,
@@ -980,7 +985,7 @@ impl ModelService {
             }
         };
         let res =
-            interp::execute_stream_raw(&prepared.graph, runner, job.steps, &mut on_step);
+            interp::execute_stream_prepared(prepared, runner, job.steps, &mut on_step);
         let ph = if obs.is_some() { Self::fold_phases(&phases::take()) } else { Vec::new() };
         let prof = crate::obs::profile::take();
         let exec_d = t0.elapsed();
@@ -1091,7 +1096,7 @@ impl ModelService {
                 let view = session_state
                     .snapshot(&job.session)
                     .ok_or_else(|| format!("session '{}' expired mid-run", job.session))?;
-                let (res, updates) = interp::execute_view_raw(&g.graph, runner, view)
+                let (res, updates) = interp::execute_view_prepared(g, runner, view)
                     .map_err(|e| format!("session trace {i}: {e}"))?;
                 let res = g.remap_values(res);
                 session_state
@@ -1179,13 +1184,13 @@ impl ModelService {
         if can_merge {
             // graphs were individually compiled at admission, so duplicate
             // work WITHIN each co-tenant graph is already hash-consed; the
-            // merge shares the forward pass across them
-            let owned: Vec<InterventionGraph> =
-                batch.iter().map(|j| j.prepared.graph.clone()).collect();
+            // merge shares the forward pass across them (plan-carrying
+            // jobs keep their arena-planned executors inside the merge)
+            let preps: Vec<&Prepared> = batch.iter().map(|j| &j.prepared).collect();
             if obs.is_some() {
                 phases::arm();
             }
-            match execute_merged(&owned, runner) {
+            match execute_merged_prepared(&preps, runner) {
                 Ok(results) => {
                     metrics.merged_batches.fetch_add(1, Ordering::Relaxed);
                     let ph = if obs.is_some() {
@@ -1226,8 +1231,9 @@ impl ModelService {
                     }
                 }
                 let te = std::time::Instant::now();
-                let res = interp::execute_view_raw(&job.prepared.graph, runner, StateView::new())
-                    .map(|(r, _)| job.prepared.remap_values(r));
+                let res =
+                    interp::execute_view_prepared(&job.prepared, runner, StateView::new())
+                        .map(|(r, _)| job.prepared.remap_values(r));
                 let ph = if obs.is_some() {
                     Self::fold_phases(&phases::take())
                 } else {

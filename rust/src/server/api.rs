@@ -11,6 +11,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::graph::plan::{self, PlanMode};
+use crate::graph::plan_cache::PlanCache;
 use crate::graph::serde as gserde;
 use crate::json::{parse, Json};
 use crate::models::ModelRunner;
@@ -66,6 +68,15 @@ pub struct NdifConfig {
     /// config file) is the escape hatch for debugging and for measuring
     /// the optimizer itself (`benches/graphopt.rs`).
     pub optimize: bool,
+    /// Cache compiled AOT execution plans (`graph::plan`) keyed by
+    /// (model, structural hash): repeated-shape submissions skip
+    /// validation, the optimizer, and scheduling prep, rebinding only
+    /// constant payloads. On by default; `--no-plan-cache` (or
+    /// `"plan_cache": false` in a config file) disables it — every
+    /// request then takes the full validate + optimize path.
+    pub plan_cache: bool,
+    /// Plan-cache capacity in plans (LRU-evicted beyond it).
+    pub plan_cache_cap: usize,
     /// Observability (latency histograms, request tracing, debug ring).
     /// On by default; `NNSCOPE_OBS=off` forces it off regardless
     /// (`benches/obs.rs` gates the instrumented-vs-off overhead).
@@ -113,6 +124,8 @@ impl NdifConfig {
             stream_buffer: 32,
             stream_send_timeout: Duration::from_secs(10),
             optimize: true,
+            plan_cache: true,
+            plan_cache_cap: 256,
             obs: true,
             trace_ring: 256,
             profile_ring: 64,
@@ -149,6 +162,9 @@ struct ServerState {
     stream_send_timeout: Duration,
     /// Admission-compiler toggle (see [`NdifConfig::optimize`]).
     optimize: bool,
+    /// AOT plan cache (`None` = `--no-plan-cache`: full validate +
+    /// optimize on every admission).
+    plans: Option<Arc<PlanCache>>,
     /// Observability hub: per-model/per-endpoint histograms, opt-pass
     /// counters, and the finished-request debug ring.
     obs: Arc<crate::obs::Obs>,
@@ -267,6 +283,7 @@ impl NdifServer {
             stream_buffer: cfg.stream_buffer.max(1),
             stream_send_timeout: cfg.stream_send_timeout,
             optimize: cfg.optimize,
+            plans: cfg.plan_cache.then(|| Arc::new(PlanCache::new(cfg.plan_cache_cap))),
             obs,
             profile_sample_n: cfg.profile_sample_n,
             profile_counter: AtomicU64::new(0),
@@ -378,6 +395,20 @@ impl NdifServer {
                 s.metrics.merged_batches.load(Ordering::Relaxed),
             )
         })
+    }
+
+    /// Drop every cached AOT plan compiled for `model` — the invalidation
+    /// contract for a model reload/swap: a stale plan compiled against
+    /// the old weights' manifest must never execute against the new ones.
+    /// Keyed eviction, not TTL: returns how many plans were dropped.
+    /// (Model hot-swap itself is not implemented yet; the path that will
+    /// do it MUST call this first.)
+    pub fn invalidate_plans(&self, model: &str) -> usize {
+        self.state
+            .plans
+            .as_ref()
+            .map(|c| c.invalidate_model(model))
+            .unwrap_or(0)
     }
 
     /// Graceful shutdown: stop heartbeating, say goodbye to the
@@ -607,24 +638,74 @@ fn submit_parsed_graph(
     }
     let model = graph.model.clone();
     let mut trace = open_trace(state, req, endpoint, &model);
-    // early validation against the manifest so bad graphs fail at submit
     let fseq = service.runner.manifest.forward_sequence();
-    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
-        crate::graph::validate::validate(&graph, &fseq)
-    }) {
-        return Err(Response::bad_request(&e.to_string()));
-    }
-    // admission compile (between validation and execution): DCE, constant
-    // folding, CSE, fusion. A folding failure — e.g. `mean` over an empty
-    // constant subtree — is a guaranteed execution failure, so it is a
-    // clean 400 here rather than a mid-forward 500.
-    let prepared = crate::obs::timed(&mut trace, "opt", || {
-        crate::graph::opt::prepare(graph, &fseq, state.optimize)
-    })
-    .map_err(|e| Response::bad_request(&e.to_string()))?;
-    if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
-        m.record_opt(report);
-    }
+    let prepared = match &state.plans {
+        // plan-cache admission: a structural hit skips validation AND the
+        // optimizer (their verdicts are structural — see `graph::plan`),
+        // paying only the constant rebind; a miss takes the full path
+        // once and caches the compiled plan for every same-shape follow-up
+        Some(cache) => {
+            let key = plan::structural_key(&graph, PlanMode::Trace, state.optimize);
+            match cache.get(&model, key) {
+                Some(p) => {
+                    if let Some(m) = state.obs.model(&model) {
+                        m.record_plan(true);
+                    }
+                    crate::obs::timed(&mut trace, "plan_bind", || p.bind(&graph))
+                        .map_err(|e| Response::bad_request(&e.to_string()))?
+                }
+                None => {
+                    if let Some(m) = state.obs.model(&model) {
+                        m.record_plan(false);
+                    }
+                    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+                        crate::graph::validate::validate(&graph, &fseq)
+                    }) {
+                        return Err(Response::bad_request(&e.to_string()));
+                    }
+                    // parametric admission compile: same pipeline as the
+                    // legacy path, but constants stay structural so the
+                    // plan is reusable. A folding failure — e.g. `mean`
+                    // over an empty constant subtree — is a guaranteed
+                    // execution failure, so it is a clean 400 here, and
+                    // the failed compile is never cached (both-fail
+                    // parity: resubmitting the bad graph fails again).
+                    let p = crate::obs::timed(&mut trace, "opt", || {
+                        plan::compile(&graph, &fseq, PlanMode::Trace, state.optimize).map(Arc::new)
+                    })
+                    .map_err(|e| Response::bad_request(&e.to_string()))?;
+                    cache.insert(&model, key, Arc::clone(&p));
+                    if let (Some(report), Some(m)) = (p.report(), state.obs.model(&model)) {
+                        m.record_opt(&report);
+                    }
+                    crate::obs::timed(&mut trace, "plan_bind", || p.bind(&graph))
+                        .map_err(|e| Response::bad_request(&e.to_string()))?
+                }
+            }
+        }
+        None => {
+            // early validation against the manifest so bad graphs fail at
+            // submit
+            if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+                crate::graph::validate::validate(&graph, &fseq)
+            }) {
+                return Err(Response::bad_request(&e.to_string()));
+            }
+            // admission compile (between validation and execution): DCE,
+            // constant folding, CSE, fusion. A folding failure — e.g.
+            // `mean` over an empty constant subtree — is a guaranteed
+            // execution failure, so it is a clean 400 here rather than a
+            // mid-forward 500.
+            let prepared = crate::obs::timed(&mut trace, "opt", || {
+                crate::graph::opt::prepare(graph, &fseq, state.optimize)
+            })
+            .map_err(|e| Response::bad_request(&e.to_string()))?;
+            if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
+                m.record_opt(report);
+            }
+            prepared
+        }
+    };
     let id = format!("r-{}", state.next_id.fetch_add(1, Ordering::Relaxed));
     state.store.put_pending(&id);
     let opts = crate::scheduler::SubmitOpts::new()
@@ -802,16 +883,54 @@ fn stateful_session(
         return Response::bad_request(&e.to_string());
     }
     // admission compile per trace (state ops are roots, so the compiler
-    // never folds across LoadState or drops a StoreState)
+    // never folds across LoadState or drops a StoreState). With the plan
+    // cache on, each trace gets-or-compiles a Session-mode plan: the
+    // bundle is still validated as a whole above on EVERY request —
+    // state-key availability is per-request state, not structure — but
+    // cache hits skip the optimizer passes and scheduling prep.
     let prepared = {
         let optimize = state.optimize;
+        let plans = state.plans.as_deref();
+        let obs_model = state.obs.model(&model).cloned();
         let r = crate::obs::timed(&mut trace, "opt", || {
             let mut acc = Vec::with_capacity(graphs.len());
             for (i, g) in graphs.into_iter().enumerate() {
-                match crate::graph::opt::prepare(g, &fseq, optimize) {
-                    Ok(p) => acc.push(p),
-                    Err(e) => return Err(format!("session trace {i}: {e}")),
-                }
+                let p = match plans {
+                    Some(cache) => {
+                        let key = plan::structural_key(&g, PlanMode::Session, optimize);
+                        let plan = match cache.get(&model, key) {
+                            Some(p) => {
+                                if let Some(m) = &obs_model {
+                                    m.record_plan(true);
+                                }
+                                p
+                            }
+                            None => match plan::compile(&g, &fseq, PlanMode::Session, optimize) {
+                                Ok(p) => {
+                                    let p = Arc::new(p);
+                                    cache.insert(&model, key, Arc::clone(&p));
+                                    if let Some(m) = &obs_model {
+                                        m.record_plan(false);
+                                        if let Some(report) = p.report() {
+                                            m.record_opt(&report);
+                                        }
+                                    }
+                                    p
+                                }
+                                Err(e) => return Err(format!("session trace {i}: {e}")),
+                            },
+                        };
+                        match plan.bind(&g) {
+                            Ok(p) => p,
+                            Err(e) => return Err(format!("session trace {i}: {e}")),
+                        }
+                    }
+                    None => match crate::graph::opt::prepare(g, &fseq, optimize) {
+                        Ok(p) => p,
+                        Err(e) => return Err(format!("session trace {i}: {e}")),
+                    },
+                };
+                acc.push(p);
             }
             Ok(acc)
         });
@@ -820,10 +939,12 @@ fn stateful_session(
             Err(e) => return Response::bad_request(&e),
         }
     };
-    if let Some(m) = state.obs.model(&model) {
-        for p in &prepared {
-            if let Some(report) = p.report.as_ref() {
-                m.record_opt(report);
+    if state.plans.is_none() {
+        if let Some(m) = state.obs.model(&model) {
+            for p in &prepared {
+                if let Some(report) = p.report.as_ref() {
+                    m.record_opt(report);
+                }
             }
         }
     }
@@ -845,6 +966,29 @@ fn stateful_session(
 /// Upper bound on one streaming request's decode length (a runaway-loop
 /// backstop, far above any interactive use).
 const MAX_STREAM_STEPS: usize = 100_000;
+
+/// Fail fast at submit on constraints the decode loop would otherwise
+/// only hit mid-stream. All three inputs are hashed into the structural
+/// plan key, so a plan-cache hit implies the guard passed when the plan
+/// was first compiled.
+fn stream_shape_guard(graph: &crate::graph::InterventionGraph, seq: usize) -> Option<Response> {
+    if graph.batch != 1 {
+        return Some(Response::bad_request(&format!(
+            "streaming generation is single-sequence, got batch {}",
+            graph.batch
+        )));
+    }
+    if graph.tokens.len() != seq {
+        return Some(Response::bad_request(&format!(
+            "streaming prompt must be [1, {seq}] tokens, got {}",
+            graph.tokens.len()
+        )));
+    }
+    if graph.shards > 1 {
+        return Some(Response::bad_request("streaming decode is unsharded"));
+    }
+    None
+}
 
 /// Streaming generation with per-step interventions (`POST /v1/stream`).
 ///
@@ -892,40 +1036,78 @@ fn stream_endpoint(state: &Arc<ServerState>, req: &Request) -> Response {
     }
     let mut trace = open_trace(state, req, "stream", &model);
     let fseq = service.runner.manifest.forward_sequence();
-    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
-        crate::graph::validate::validate_stream(&graph, &fseq)
-    }) {
-        return Response::bad_request(&e.to_string());
-    }
-    // fail fast at submit on constraints the decode loop would otherwise
-    // only hit mid-stream
-    if graph.batch != 1 {
-        return Response::bad_request(&format!(
-            "streaming generation is single-sequence, got batch {}",
-            graph.batch
-        ));
-    }
     let seq = service.runner.manifest.seq;
-    if graph.tokens.len() != seq {
-        return Response::bad_request(&format!(
-            "streaming prompt must be [1, {seq}] tokens, got {}",
-            graph.tokens.len()
-        ));
-    }
-    if graph.shards > 1 {
-        return Response::bad_request("streaming decode is unsharded");
-    }
-    // admission compile, once per stream: folded constants and eliminated
-    // dead getters are paid once per request, not once per decode step
-    let prepared = match crate::obs::timed(&mut trace, "opt", || {
-        crate::graph::opt::prepare(graph, &fseq, state.optimize)
-    }) {
-        Ok(p) => p,
-        Err(e) => return Response::bad_request(&e.to_string()),
+    let prepared = match &state.plans {
+        // plan-cache admission (Stream mode keys are disjoint from Trace
+        // keys — the rule sets differ): a structural hit skips stream
+        // validation, the shape guards (batch, prompt length, and shards
+        // are all part of the key), and the optimizer
+        Some(cache) => {
+            let key = plan::structural_key(&graph, PlanMode::Stream, state.optimize);
+            match cache.get(&model, key) {
+                Some(p) => {
+                    if let Some(m) = state.obs.model(&model) {
+                        m.record_plan(true);
+                    }
+                    match crate::obs::timed(&mut trace, "plan_bind", || p.bind(&graph)) {
+                        Ok(p) => p,
+                        Err(e) => return Response::bad_request(&e.to_string()),
+                    }
+                }
+                None => {
+                    if let Some(m) = state.obs.model(&model) {
+                        m.record_plan(false);
+                    }
+                    if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+                        crate::graph::validate::validate_stream(&graph, &fseq)
+                    }) {
+                        return Response::bad_request(&e.to_string());
+                    }
+                    if let Some(resp) = stream_shape_guard(&graph, seq) {
+                        return resp;
+                    }
+                    let p = match crate::obs::timed(&mut trace, "opt", || {
+                        plan::compile(&graph, &fseq, PlanMode::Stream, state.optimize)
+                            .map(Arc::new)
+                    }) {
+                        Ok(p) => p,
+                        Err(e) => return Response::bad_request(&e.to_string()),
+                    };
+                    cache.insert(&model, key, Arc::clone(&p));
+                    if let (Some(report), Some(m)) = (p.report(), state.obs.model(&model)) {
+                        m.record_opt(&report);
+                    }
+                    match crate::obs::timed(&mut trace, "plan_bind", || p.bind(&graph)) {
+                        Ok(p) => p,
+                        Err(e) => return Response::bad_request(&e.to_string()),
+                    }
+                }
+            }
+        }
+        None => {
+            if let Err(e) = crate::obs::timed(&mut trace, "validate", || {
+                crate::graph::validate::validate_stream(&graph, &fseq)
+            }) {
+                return Response::bad_request(&e.to_string());
+            }
+            if let Some(resp) = stream_shape_guard(&graph, seq) {
+                return resp;
+            }
+            // admission compile, once per stream: folded constants and
+            // eliminated dead getters are paid once per request, not once
+            // per decode step
+            let prepared = match crate::obs::timed(&mut trace, "opt", || {
+                crate::graph::opt::prepare(graph, &fseq, state.optimize)
+            }) {
+                Ok(p) => p,
+                Err(e) => return Response::bad_request(&e.to_string()),
+            };
+            if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
+                m.record_opt(report);
+            }
+            prepared
+        }
     };
-    if let (Some(report), Some(m)) = (prepared.report.as_ref(), state.obs.model(&model)) {
-        m.record_opt(report);
-    }
     let profile = wants_profile(state, req, &body);
     let (tx, rx) = sync_channel::<StreamChunk>(state.stream_buffer);
     let opts = crate::scheduler::SubmitOpts::new()
@@ -1121,6 +1303,21 @@ fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
             "nnscope_journal_truncated_bytes".to_string(),
             state.faults.journal_truncated_bytes.load(Ordering::Relaxed) as f64,
         ));
+        if let Some(cache) = &state.plans {
+            let s = cache.stats();
+            for (k, v) in [
+                ("nnscope_plan_size", s.size as f64),
+                ("nnscope_plan_capacity", s.capacity as f64),
+                ("nnscope_plan_hits_total", s.hits as f64),
+                ("nnscope_plan_misses_total", s.misses as f64),
+                ("nnscope_plan_evictions_total", s.evictions as f64),
+                ("nnscope_plan_invalidations_total", s.invalidations as f64),
+                ("nnscope_plan_slots_planned", s.slots_planned as f64),
+                ("nnscope_plan_values_planned", s.values_planned as f64),
+            ] {
+                extra.push((k.to_string(), v));
+            }
+        }
         return Response::bytes(
             200,
             "text/plain; version=0.0.4",
@@ -1142,6 +1339,7 @@ fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
             let (latency, opt) = m.to_json();
             fields.push(("latency", latency));
             fields.push(("opt", opt));
+            fields.push(("plan", m.plan_json()));
         }
         per_model.insert(name.clone(), Json::obj(fields));
     }
@@ -1174,10 +1372,34 @@ fn metrics_endpoint(state: &Arc<ServerState>, path: &str) -> Response {
             ),
         ]),
     );
+    // AOT plan-cache gauges: `enabled` is always present (so consumers
+    // can tell --no-plan-cache from a cold cache); the counters only with
+    // a live cache
+    let plan_obj = match &state.plans {
+        Some(cache) => {
+            let s = cache.stats();
+            Json::obj(vec![
+                ("enabled", Json::Bool(true)),
+                ("size", Json::from(s.size as i64)),
+                ("capacity", Json::from(s.capacity as i64)),
+                ("hits", Json::from(s.hits as i64)),
+                ("misses", Json::from(s.misses as i64)),
+                ("evictions", Json::from(s.evictions as i64)),
+                ("invalidations", Json::from(s.invalidations as i64)),
+                ("slots_planned", Json::from(s.slots_planned as i64)),
+                ("values_planned", Json::from(s.values_planned as i64)),
+            ])
+        }
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+    };
+    per_model.insert("_plan".to_string(), plan_obj);
     per_model.insert("_endpoints".to_string(), state.obs.endpoints_json());
     per_model.insert(
         "_obs".to_string(),
-        Json::obj(vec![("enabled", Json::Bool(state.obs.enabled()))]),
+        Json::obj(vec![
+            ("enabled", Json::Bool(state.obs.enabled())),
+            ("plan_cache", Json::Bool(state.plans.is_some())),
+        ]),
     );
     Response::json(200, Json::Object(per_model).to_string())
 }

@@ -108,6 +108,12 @@ fn from_json(j: &Json) -> Result<NdifConfig> {
     if let Some(o) = j.get("optimize").as_bool() {
         cfg.optimize = o;
     }
+    if let Some(p) = j.get("plan_cache").as_bool() {
+        cfg.plan_cache = p;
+    }
+    if let Some(n) = j.get("plan_cache_cap").as_usize() {
+        cfg.plan_cache_cap = n.max(1);
+    }
     if let Some(o) = j.get("obs").as_bool() {
         cfg.obs = o;
     }
@@ -206,6 +212,22 @@ mod tests {
         assert!(!cfg.optimize);
         let cfg = from_json_text(r#"{"models": ["m"], "optimize": true}"#).unwrap();
         assert!(cfg.optimize);
+    }
+
+    #[test]
+    fn plan_cache_knobs_parse() {
+        let cfg = from_json_text(r#"{"models": ["m"]}"#).unwrap();
+        assert!(cfg.plan_cache, "the plan cache is on by default");
+        assert_eq!(cfg.plan_cache_cap, 256);
+        let cfg = from_json_text(
+            r#"{"models": ["m"], "plan_cache": false, "plan_cache_cap": 16}"#,
+        )
+        .unwrap();
+        assert!(!cfg.plan_cache);
+        assert_eq!(cfg.plan_cache_cap, 16);
+        // a zero cap clamps to 1 rather than disabling by accident
+        let cfg = from_json_text(r#"{"models": ["m"], "plan_cache_cap": 0}"#).unwrap();
+        assert_eq!(cfg.plan_cache_cap, 1);
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! AOT-plan golden parity suite.
+//!
+//! The plan layer's contract is that executing through a compiled
+//! [`ExecPlan`] — cold or served from the structural cache — is
+//! **bit-identical** to the raw interpreter, across every execution
+//! shape the server admits: one-shot traces, streaming decode, stateful
+//! session bundles, and co-tenant merged forward passes. A cache *hit*
+//! additionally skips validation and the optimizer entirely, which is
+//! observable (and asserted here) through the admission counters:
+//! `plan.hits` rises while `opt.requests` stays flat. Invalid graphs
+//! must fail identically whether the plan layer is on, off, or warm —
+//! failures are never cached, so a bad graph is rejected afresh every
+//! time with the same message.
+
+use std::sync::Arc;
+
+use nnscope::client::{remote::NdifClient, Trace};
+use nnscope::engine::{Engine, ExecSpec};
+use nnscope::graph::opt::Prepared;
+use nnscope::graph::plan::{self, PlanMode};
+use nnscope::graph::plan_cache::PlanCache;
+use nnscope::graph::InterventionGraph;
+use nnscope::interp::{self, StateView};
+use nnscope::models::{artifacts_dir, ModelRunner};
+use nnscope::scheduler::{execute_merged, execute_merged_prepared};
+use nnscope::server::{NdifConfig, NdifServer};
+use nnscope::tensor::{Range1, Tensor};
+use nnscope::util::Prng;
+
+fn runner() -> ModelRunner {
+    ModelRunner::load(&artifacts_dir(), "tiny-sim").unwrap()
+}
+
+fn start_server(plan_cache: bool) -> NdifServer {
+    let mut cfg = NdifConfig::local(&["tiny-sim"]);
+    cfg.plan_cache = plan_cache;
+    NdifServer::start(cfg).unwrap()
+}
+
+/// A randomized trace exercising every planner concern: duplicate
+/// getters (CSE → template remap), const subtrees (folding → payload
+/// rebind), dead chains (DCE + never-materialized arena entries),
+/// fusable chains (single-listener slot reuse), setters, and grads
+/// (post-phase scheduling).
+fn random_graph(rng: &mut Prng, seq: usize, vocab: usize, n_layers: usize) -> InterventionGraph {
+    let tokens = Tensor::new(&[1, seq], (0..seq).map(|_| rng.range(0, vocab) as f32).collect());
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let layer = rng.range(0, n_layers);
+    let point = format!("layer.{layer}");
+    let h = tr.output(&point);
+    let h_dup = tr.output(&point);
+    let c = tr.constant(&Tensor::new(&[4, 4], (0..16).map(|i| (i as f32).cos()).collect()));
+    let cs = tr.softmax(c);
+    if rng.below(2) == 0 {
+        tr.save(cs);
+    }
+    let _dead = tr.output(&format!("layer.{}", rng.range(0, n_layers)));
+    let mut cur = h;
+    for _ in 0..rng.range(0, 4) {
+        cur = match rng.range(0, 4) {
+            0 => {
+                let sc = tr.scale(h_dup, 0.25 + rng.uniform_f32());
+                tr.add(cur, sc)
+            }
+            1 => tr.gelu(cur),
+            2 => tr.fill(cur, &[Range1::one(0), Range1::one(seq - 1)], rng.uniform_f32()),
+            _ => tr.scale(cur, 0.5 + rng.uniform_f32()),
+        };
+    }
+    if rng.below(3) == 0 {
+        tr.set_output(&point, cur);
+    }
+    if rng.below(3) == 0 {
+        tr.targets(&[1.0]);
+        let g = tr.grad(&format!("layer.{}", rng.range(0, n_layers)));
+        let ng = tr.scale(g, -1.0);
+        tr.save(ng);
+    }
+    let later = tr.output(&format!("layer.{}", rng.range(layer, n_layers)));
+    let m = tr.mean(later);
+    tr.save(m);
+    tr.save(cur);
+    tr.into_graph()
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level golden parity: planned (cold and hot) vs raw interpreter
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_traces_match_raw_interpreter_cold_and_hot() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let cache = Arc::new(PlanCache::new(64));
+    let planned = Engine::with_plans(&r, Arc::clone(&cache));
+    let plain = Engine::new(&r);
+    let mut rng = Prng::new(0x9_1A7);
+    let mut ok_cases = 0;
+    for case in 0..25 {
+        let g = random_graph(&mut rng, m.seq, m.vocab, m.n_layers);
+        let raw = plain.run(ExecSpec::raw(&g));
+        let cold = planned.run(ExecSpec::trace(&g));
+        let hot = planned.run(ExecSpec::trace(&g));
+        match (raw, cold, hot) {
+            (Ok(raw), Ok(cold), Ok(hot)) => {
+                ok_cases += 1;
+                assert_eq!(
+                    raw.result.values, cold.result.values,
+                    "case {case}: cold plan diverged from raw interpreter"
+                );
+                assert_eq!(
+                    cold.result.values, hot.result.values,
+                    "case {case}: cache hit diverged from cold plan"
+                );
+                assert!(!raw.result.values.is_empty(), "case {case}: vacuous");
+            }
+            (Err(_), Err(_), Err(_)) => {} // parity on failure is parity too
+            (raw, cold, hot) => panic!(
+                "case {case}: raw {:?} / cold {:?} / hot {:?} disagree on success",
+                raw.map(|_| ()),
+                cold.map(|_| ()),
+                hot.map(|_| ())
+            ),
+        }
+    }
+    assert!(ok_cases >= 10, "workload almost never executed: {ok_cases}");
+    let s = cache.stats();
+    assert!(s.hits >= ok_cases, "every second run must hit: {s:?}");
+}
+
+#[test]
+fn planned_streams_match_raw_cold_and_hot() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let cache = Arc::new(PlanCache::new(16));
+    let planned = Engine::with_plans(&r, Arc::clone(&cache));
+    let plain = Engine::new(&r);
+    let mut rng = Prng::new(0x57_00AB);
+    for case in 0..4 {
+        let tokens = Tensor::new(
+            &[1, m.seq],
+            (0..m.seq).map(|_| rng.range(0, m.vocab) as f32).collect(),
+        );
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        let c = tr.constant(&Tensor::new(&[4], vec![0.5, -1.0, 2.0, 0.25]));
+        let cs = tr.softmax(c);
+        let cm = tr.mean(cs);
+        tr.step_hook(cm);
+        let sc = tr.scale(h, 2.0);
+        let sm = tr.softmax(sc);
+        let mn = tr.mean(sm);
+        tr.step_hook(mn);
+        let _dead = tr.output("layer.1");
+        let g = tr.into_graph();
+
+        let steps = 3;
+        let collect = |eng: &Engine, optimize: bool| {
+            let mut events = Vec::new();
+            let mut sink = |step: usize, out: interp::StepOutcome| {
+                events.push((step, out.token, out.values.values.clone()));
+                true
+            };
+            let spec =
+                if optimize { ExecSpec::trace(&g) } else { ExecSpec::raw(&g) }.stream(steps);
+            let gen = eng.run_streaming(spec, &mut sink).unwrap().generation.unwrap();
+            (events, gen.tokens, gen.scores)
+        };
+        let raw = collect(&plain, false);
+        let cold = collect(&planned, true);
+        let hot = collect(&planned, true);
+        assert_eq!(raw, cold, "case {case}: cold planned stream diverged from raw");
+        assert_eq!(cold, hot, "case {case}: hot planned stream diverged from cold");
+    }
+    assert!(cache.stats().hits >= 4, "{:?}", cache.stats());
+}
+
+#[test]
+fn planned_sessions_match_raw_cold_and_hot() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let tokens = Tensor::new(&[1, m.seq], vec![1.0; m.seq]);
+    let build = || {
+        let mut t0 = Trace::new("tiny-sim", &tokens);
+        let h = t0.output("layer.0");
+        let flat = t0.mean_axis(h, 0);
+        t0.save_to_state("acc", flat);
+        let mut t1 = Trace::new("tiny-sim", &tokens);
+        let a = t1.from_state("acc");
+        let a2 = t1.from_state("acc");
+        let sc = t1.scale(a2, 0.5);
+        let upd = t1.add(a, sc);
+        t1.save_to_state("acc", upd);
+        t1.save(upd);
+        let mut t2 = Trace::new("tiny-sim", &tokens);
+        let a = t2.from_state("acc");
+        let mn = t2.mean(a);
+        t2.save(mn);
+        vec![t0.into_graph(), t1.into_graph(), t2.into_graph()]
+    };
+    let graphs = build();
+    let cache = Arc::new(PlanCache::new(16));
+    let planned = Engine::with_plans(&r, Arc::clone(&cache));
+    let run = |eng: &Engine, optimize: bool| {
+        let mut state = StateView::new();
+        let results = eng.run_session(&graphs, &mut state, optimize).unwrap();
+        (results, state)
+    };
+    let (raw_res, raw_state) = run(&Engine::new(&r), false);
+    let (cold_res, cold_state) = run(&planned, true);
+    let (hot_res, hot_state) = run(&planned, true);
+    for (i, (raw, cold)) in raw_res.iter().zip(&cold_res).enumerate() {
+        assert_eq!(raw.values, cold.values, "trace {i}: cold planned session diverged");
+    }
+    for (i, (cold, hot)) in cold_res.iter().zip(&hot_res).enumerate() {
+        assert_eq!(cold.values, hot.values, "trace {i}: hot planned session diverged");
+    }
+    assert!(!raw_res[1].values.is_empty() && !raw_res[2].values.is_empty());
+    assert_eq!(raw_state.len(), cold_state.len());
+    for (k, v) in &raw_state {
+        assert_eq!(v, &cold_state[k], "state key {k} diverged under the cold plan");
+        assert_eq!(v, &hot_state[k], "state key {k} diverged under the cache hit");
+    }
+    let s = cache.stats();
+    assert!(s.hits >= 3, "second bundle pass must hit per trace: {s:?}");
+}
+
+#[test]
+fn planned_cotenant_merge_matches_raw_merge() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let fseq = m.forward_sequence();
+    let mut rng = Prng::new(0xC0_7E4A);
+    for case in 0..5 {
+        let mut graphs = Vec::new();
+        for _ in 0..2 {
+            let tokens = Tensor::new(
+                &[1, m.seq],
+                (0..m.seq).map(|_| rng.range(0, m.vocab) as f32).collect(),
+            );
+            let mut tr = Trace::new("tiny-sim", &tokens);
+            for _ in 0..3 {
+                let h = tr.output("layer.0");
+                let sc = tr.scale(h, 2.0);
+                let sm = tr.softmax(sc);
+                let mn = tr.mean(sm);
+                tr.save(mn);
+            }
+            graphs.push(tr.into_graph());
+        }
+        let raw_merged = execute_merged(&graphs, &r).unwrap();
+        // the planned side: each co-tenant admitted standalone through the
+        // plan compiler, then merged — the batch-group patch happens after
+        // bind, exactly as the scheduler does it
+        let preps: Vec<Prepared> = graphs
+            .iter()
+            .map(|g| {
+                let p = Arc::new(plan::compile(g, &fseq, PlanMode::Trace, true).unwrap());
+                p.bind(g).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Prepared> = preps.iter().collect();
+        let plan_merged = execute_merged_prepared(&refs, &r).unwrap();
+        for (i, (p, (raw, planned))) in
+            preps.iter().zip(raw_merged.iter().zip(plan_merged)).enumerate()
+        {
+            let raw = raw.as_ref().unwrap();
+            let remapped = p.remap_values(planned.unwrap());
+            assert_eq!(
+                raw.values, remapped.values,
+                "case {case} graph {i}: planned merge diverged from raw merge"
+            );
+            assert!(!raw.values.is_empty());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-level admission behavior
+// ---------------------------------------------------------------------------
+
+fn probe_trace(tokens: &Tensor) -> (Trace, nnscope::client::SavedRef) {
+    let mut tr = Trace::new("tiny-sim", tokens);
+    let h = tr.output("layer.0");
+    let h2 = tr.output("layer.0");
+    let sc = tr.scale(h2, 2.0);
+    let sm = tr.softmax(sc);
+    let mn = tr.mean(sm);
+    let s = tr.save(mn);
+    let mn2 = tr.mean(h);
+    tr.save(mn2);
+    let _dead = tr.gelu(h);
+    (tr, s)
+}
+
+/// The acceptance-criteria assertion: a cache hit must skip validation
+/// and the optimizer entirely. `opt.requests` counts admissions that ran
+/// the compiler, `plan.hits`/`plan.misses` count cache outcomes — after
+/// two structurally identical submissions the compiler must have run
+/// exactly once.
+#[test]
+fn cache_hit_skips_validate_and_opt_counters() {
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let tokens_a = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+    let tokens_b = Tensor::new(&[1, 16], (0..16).map(|i| (i % 5) as f32).collect());
+
+    let (tr, _) = probe_trace(&tokens_a);
+    tr.run_remote(&client).unwrap();
+    let m = client.metrics().unwrap();
+    let tm = m.get("tiny-sim");
+    assert_eq!(tm.get("plan").get("misses").as_i64(), Some(1));
+    assert_eq!(tm.get("plan").get("hits").as_i64(), Some(0));
+    assert_eq!(tm.get("opt").get("requests").as_i64(), Some(1));
+
+    // same structure, different tokens: must hit, and the optimizer must
+    // NOT run again
+    let (tr, _) = probe_trace(&tokens_b);
+    tr.run_remote(&client).unwrap();
+    let m = client.metrics().unwrap();
+    let tm = m.get("tiny-sim");
+    assert_eq!(tm.get("plan").get("hits").as_i64(), Some(1), "{m}");
+    assert_eq!(tm.get("plan").get("misses").as_i64(), Some(1), "{m}");
+    assert_eq!(
+        tm.get("opt").get("requests").as_i64(),
+        Some(1),
+        "opt must stay flat on a plan-cache hit: {m}"
+    );
+
+    // the global _plan gauges agree with the per-model counters
+    let p = m.get("_plan");
+    assert_eq!(p.get("enabled").as_bool(), Some(true));
+    assert_eq!(p.get("hits").as_i64(), Some(1));
+    assert_eq!(p.get("misses").as_i64(), Some(1));
+    assert_eq!(p.get("size").as_i64(), Some(1));
+    assert!(p.get("slots_planned").as_i64().unwrap_or(0) >= 1);
+}
+
+#[test]
+fn no_plan_cache_flag_restores_legacy_admission_with_identical_values() {
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let (tr, s) = probe_trace(&tokens);
+    let planned_value = tr.run_remote(&client).unwrap().get(s).clone();
+    drop(server);
+
+    let server = start_server(false);
+    let client = NdifClient::new(server.addr());
+    let (tr, s2) = probe_trace(&tokens);
+    let res = tr.run_remote(&client).unwrap();
+    assert_eq!(
+        &planned_value,
+        res.get(s2),
+        "values must not depend on the plan cache"
+    );
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("_plan").get("enabled").as_bool(), Some(false));
+    assert_eq!(m.get("_obs").get("plan_cache").as_bool(), Some(false));
+    // with the cache off the legacy path still counts the optimizer
+    assert_eq!(m.get("tiny-sim").get("opt").get("requests").as_i64(), Some(1));
+}
+
+#[test]
+fn invalid_graphs_fail_identically_cold_warm_and_unplanned() {
+    let bad = |client: &NdifClient| {
+        let tokens = Tensor::new(&[1, 16], vec![0.0; 16]);
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let c = tr.constant(&Tensor::new(&[4], vec![1.0; 4]));
+        let empty = tr.slice(c, &[Range1::new(2, 2)]);
+        let m = tr.mean(empty);
+        tr.save(m);
+        tr.run_remote(client).unwrap_err().to_string()
+    };
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let cold = bad(&client);
+    // failures are never cached: resubmitting must reject again, with the
+    // same admission 400 — not execute a half-built plan
+    let warm = bad(&client);
+    assert!(cold.contains("400"), "{cold}");
+    assert!(cold.contains("empty"), "{cold}");
+    assert_eq!(cold, warm, "a failed compile must not change behavior when resubmitted");
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("_plan").get("size").as_i64(), Some(0), "failures must not be cached");
+    drop(server);
+
+    let server = start_server(false);
+    let unplanned = bad(&NdifClient::new(server.addr()));
+    assert_eq!(cold, unplanned, "rejection must not depend on the plan layer");
+}
+
+#[test]
+fn stream_and_session_endpoints_hit_the_plan_cache() {
+    use nnscope::client::remote::StreamEvent;
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 5) as f32).collect());
+
+    let build_stream = || {
+        let mut tr = Trace::new("tiny-sim", &tokens);
+        let h = tr.output("layer.0");
+        let sc = tr.scale(h, 3.0);
+        let sm = tr.softmax(sc);
+        let mn = tr.mean(sm);
+        tr.step_hook(mn);
+        tr
+    };
+    let collect = || {
+        let mut steps = Vec::new();
+        for ev in build_stream().run_stream(&client, 3).unwrap() {
+            match ev.unwrap() {
+                StreamEvent::Step { step, token, values, .. } => {
+                    steps.push((step, token, values.values))
+                }
+                StreamEvent::Done { tokens, .. } => assert_eq!(tokens.len(), 3),
+            }
+        }
+        steps
+    };
+    let cold = collect();
+    let hot = collect();
+    assert_eq!(cold, hot, "streamed values must not depend on plan-cache temperature");
+
+    let run_session = || {
+        let mut t0 = Trace::new("tiny-sim", &tokens);
+        let c = t0.constant(&Tensor::scalar(2.0));
+        let c2 = t0.constant(&Tensor::scalar(3.0));
+        let folded = t0.mul(c, c2);
+        t0.save_to_state("acc", folded);
+        let mut t1 = Trace::new("tiny-sim", &tokens);
+        let a = t1.from_state("acc");
+        t1.save(a);
+        client
+            .run_session(
+                &[t0.into_graph(), t1.into_graph()],
+                None,
+                nnscope::client::ExecuteOptions::new(),
+            )
+            .unwrap()
+    };
+    let cold = run_session();
+    let hot = run_session();
+    assert_eq!(cold[1].values, hot[1].values);
+    assert_eq!(cold[1].values.values().next().unwrap().item(), 6.0);
+
+    let m = client.metrics().unwrap();
+    let p = m.get("tiny-sim").get("plan");
+    // stream hit once, both session traces hit once each
+    assert_eq!(p.get("hits").as_i64(), Some(3), "{m}");
+    assert_eq!(p.get("misses").as_i64(), Some(3), "{m}");
+}
+
+// ---------------------------------------------------------------------------
+// Invalidation regressions: model swap and config change are keyed, not TTL
+// ---------------------------------------------------------------------------
+
+/// A stale plan for a reloaded model must never execute: the reload path
+/// calls [`NdifServer::invalidate_plans`], which evicts that model's
+/// plans by key while other tenants' plans survive.
+#[test]
+fn model_swap_invalidates_cached_plans() {
+    let server = start_server(true);
+    let client = NdifClient::new(server.addr());
+    let tokens = Tensor::new(&[1, 16], (0..16).map(|i| (i % 7) as f32).collect());
+
+    let (tr, _) = probe_trace(&tokens);
+    tr.run_remote(&client).unwrap();
+    assert_eq!(client.metrics().unwrap().get("_plan").get("size").as_i64(), Some(1));
+
+    let evicted = server.invalidate_plans("tiny-sim");
+    assert_eq!(evicted, 1, "the cached plan must be evicted on model swap");
+    assert_eq!(server.invalidate_plans("tiny-sim"), 0, "idempotent");
+
+    // next structurally identical submission recompiles — a miss, and the
+    // optimizer runs again
+    let (tr, _) = probe_trace(&tokens);
+    tr.run_remote(&client).unwrap();
+    let m = client.metrics().unwrap();
+    let tm = m.get("tiny-sim");
+    assert_eq!(tm.get("plan").get("hits").as_i64(), Some(0), "{m}");
+    assert_eq!(tm.get("plan").get("misses").as_i64(), Some(2), "{m}");
+    assert_eq!(tm.get("opt").get("requests").as_i64(), Some(2), "{m}");
+    assert!(m.get("_plan").get("invalidations").as_i64().unwrap_or(0) >= 1);
+}
+
+/// The optimizer flag is part of the structural key: a `--no-opt` config
+/// change can never be served a stale optimized plan (keyed miss, not a
+/// TTL race).
+#[test]
+fn optimize_flag_is_part_of_the_plan_key() {
+    let r = runner();
+    let m = r.manifest.clone();
+    let tokens = Tensor::new(&[1, m.seq], (0..m.seq).map(|i| (i % 3) as f32).collect());
+    let mut tr = Trace::new("tiny-sim", &tokens);
+    let h = tr.output("layer.0");
+    let h2 = tr.output("layer.0");
+    let sc = tr.scale(h2, 2.0);
+    let mn = tr.mean(sc);
+    tr.save(mn);
+    let mn2 = tr.mean(h);
+    tr.save(mn2);
+    let g = tr.into_graph();
+
+    assert_ne!(
+        plan::structural_key(&g, PlanMode::Trace, true),
+        plan::structural_key(&g, PlanMode::Trace, false),
+        "optimize flag must partition the key space"
+    );
+    // and mode partitions it too: the three admission paths validate
+    // different rule sets, so their plans must never cross
+    assert_ne!(
+        plan::structural_key(&g, PlanMode::Trace, true),
+        plan::structural_key(&g, PlanMode::Stream, true),
+    );
+
+    let cache = Arc::new(PlanCache::new(8));
+    let eng = Engine::with_plans(&r, Arc::clone(&cache));
+    let opt_out = eng.run(ExecSpec::trace(&g)).unwrap();
+    let raw_out = eng.run(ExecSpec::raw(&g)).unwrap();
+    let s = cache.stats();
+    assert_eq!(s.misses, 2, "config change must compile a fresh plan: {s:?}");
+    assert_eq!(s.hits, 0, "{s:?}");
+    assert_eq!(
+        opt_out.result.values, raw_out.result.values,
+        "values must not depend on which plan ran"
+    );
+    assert!(opt_out.report.is_some() && raw_out.report.is_none());
+}

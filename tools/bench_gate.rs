@@ -84,6 +84,16 @@ fn metrics() -> Vec<Metric> {
             extract: |j| j.get("cotenant_speedup_opt").as_f64(),
         },
         Metric {
+            file: "BENCH_plancache.json",
+            name: "plancache admission_speedup_hot (cold/hot admission)",
+            extract: |j| j.get("admission_speedup_hot").as_f64(),
+        },
+        Metric {
+            file: "BENCH_plancache.json",
+            name: "plancache planned_exec_ratio (legacy/planned request wall)",
+            extract: |j| j.get("planned_exec_ratio").as_f64(),
+        },
+        Metric {
             file: "BENCH_obs.json",
             name: "obs on/off throughput ratio",
             extract: |j| j.get("obs_ratio_on_off").as_f64(),
@@ -144,6 +154,7 @@ fn main() {
         "BENCH_sessions.json",
         "BENCH_streaming.json",
         "BENCH_graphopt.json",
+        "BENCH_plancache.json",
         "BENCH_obs.json",
         "BENCH_profile.json",
         "BENCH_decode.json",
